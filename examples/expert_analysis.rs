@@ -1,0 +1,70 @@
+//! Fig. 3 + Fig. 10 driver: expert significance heatmaps (general vs
+//! arithmetic calibration) and PMQ bit-allocation visualization.
+//!
+//!   cargo run --release --example expert_analysis [-- --alloc]
+
+use anyhow::Result;
+use mc_moe::config::{artifacts_dir, ModelConfig};
+use mc_moe::data::{calibration_set, Split};
+use mc_moe::moe::{MoeModel, WeightFile};
+use mc_moe::pmq::allocate::{Allocator, PmqHyper};
+use mc_moe::pmq::{calibrate, Workbench, WorkbenchConfig};
+use mc_moe::util::cli::Args;
+
+fn heat(v: f64, max: f64) -> char {
+    let ramp = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    let idx = ((v / max.max(1e-9)) * 9.0).round().clamp(0.0, 9.0) as usize;
+    ramp[idx]
+}
+
+fn print_heatmap(title: &str, data: &[Vec<f64>]) {
+    let max = data.iter().flatten().cloned().fold(0.0, f64::max);
+    println!("\n{title} (rows=layers, cols=experts, max={max:.3})");
+    for (l, row) in data.iter().enumerate() {
+        let cells: String = row.iter().map(|&v| heat(v, max)).collect();
+        let vals: Vec<String> = row.iter().map(|v| format!("{v:.2}")).collect();
+        println!("  L{l:02} |{cells}|  {}", vals.join(" "));
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let dir = artifacts_dir();
+    let cfg = ModelConfig::load(&dir.join("config.json"))?;
+    let wf = WeightFile::load(&dir.join("weights.mcwt"))?;
+    let fp = MoeModel::load_f32(&cfg, &wf)?;
+
+    // Fig. 3: general-split significance
+    let wb = Workbench::build(fp.clone(), WorkbenchConfig::default())?;
+    let to64 = |v: &Vec<Vec<f32>>| -> Vec<Vec<f64>> {
+        v.iter().map(|r| r.iter().map(|&x| x as f64).collect()).collect()
+    };
+    print_heatmap("Fig.3a — expert-drop output F-norm (C4-analogue calib)",
+                  &to64(&wb.sig.drop_fnorm));
+    print_heatmap("Fig.3b — activation weights w_i", &wb.sig.weight);
+    print_heatmap("Fig.3c — activation frequencies phi_i", &wb.sig.phi);
+
+    // Fig. 3 bottom: task-specific (MATH-analogue) calibration
+    let arith = calibration_set(31, 4, cfg.max_seq, Split::Arith);
+    let cal_a = calibrate(&fp, &arith);
+    print_heatmap("Fig.3d — frequencies on ARITH split (task-specific)",
+                  &cal_a.phi());
+
+    if args.flag("alloc") || true {
+        // Fig. 10: allocations across budgets
+        println!("\nFig.10 — PMQ allocation (digit = bits assigned)");
+        for &b in &[3 * cfg.n_experts / 2, 2 * cfg.n_experts,
+                    5 * cfg.n_experts / 2] {
+            let (_, alloc) = wb.compress(Allocator::Pmq, b, PmqHyper::default())?;
+            println!("avg {:.2} bits:", alloc.avg_bits());
+            for (l, row) in alloc.bits.iter().enumerate() {
+                let s: String = row.iter().map(|b| b.to_string()).collect();
+                println!("  L{l:02} {s}");
+            }
+        }
+    }
+    // persist the raw numbers for plotting
+    std::fs::write("expert_analysis.json", wb.sig.to_json().to_string())?;
+    println!("\nwrote expert_analysis.json");
+    Ok(())
+}

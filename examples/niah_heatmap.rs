@@ -1,0 +1,54 @@
+//! Fig. 9 driver: Needle-in-a-Haystack retrieval heatmap across
+//! (context length × needle depth) for FP32 vs MC-compressed models.
+//!
+//!   cargo run --release --example niah_heatmap [-- --samples 20]
+
+use anyhow::Result;
+use mc_moe::config::{artifacts_dir, ModelConfig};
+use mc_moe::eval::eval_niah_grid;
+use mc_moe::moe::{MoeModel, WeightFile};
+use mc_moe::pmq::allocate::{Allocator, PmqHyper};
+use mc_moe::pmq::{Workbench, WorkbenchConfig};
+use mc_moe::util::cli::Args;
+
+fn print_grid(name: &str, lengths: &[usize], depths: &[f64], g: &[Vec<f64>]) {
+    println!("\nFig.9 — NIAH accuracy, {name} (green=1.0)");
+    print!("{:>6}", "len\\d");
+    for d in depths {
+        print!("{d:>6.1}");
+    }
+    println!();
+    for (i, row) in g.iter().enumerate() {
+        print!("{:>6}", lengths[i]);
+        for v in row {
+            print!("{:>6.2}", v);
+        }
+        println!();
+    }
+    let avg: f64 = g.iter().flatten().sum::<f64>() / (g.len() * g[0].len()) as f64;
+    println!("  mean retrieval: {:.1}%", avg * 100.0);
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let samples = args.usize_or("samples", 15)?;
+    let dir = artifacts_dir();
+    let cfg = ModelConfig::load(&dir.join("config.json"))?;
+    let wf = WeightFile::load(&dir.join("weights.mcwt"))?;
+    let fp = MoeModel::load_f32(&cfg, &wf)?;
+
+    let lengths: Vec<usize> = vec![64, 128, 192, cfg.max_seq];
+    let depths = vec![0.1, 0.3, 0.5, 0.7, 0.9];
+
+    let g = eval_niah_grid(&fp, &lengths, &depths, samples, 4242, None);
+    print_grid("FP32", &lengths, &depths, &g);
+
+    let wb = Workbench::build(fp, WorkbenchConfig { fast_eps: true, ..Default::default() })?;
+    for &b in &[2 * cfg.n_experts, 5 * cfg.n_experts / 2] {
+        let (m, alloc) = wb.compress(Allocator::Pmq, b, PmqHyper::default())?;
+        let g = eval_niah_grid(&m, &lengths, &depths, samples, 4242, None);
+        print_grid(&format!("PMQ {:.2}-bit", alloc.avg_bits()),
+                   &lengths, &depths, &g);
+    }
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Quickstart: compress the trained MoE model with MC (PMQ + ODP) and
+//! compare it against FP32 on the benchmark suite.
+//!
+//!   make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use mc_moe::config::{artifacts_dir, ModelConfig};
+use mc_moe::coordinator::memmodel;
+use mc_moe::eval::eval_suite;
+use mc_moe::moe::{MoeModel, WeightFile};
+use mc_moe::odp;
+use mc_moe::pmq::allocate::{Allocator, PmqHyper};
+use mc_moe::pmq::{Workbench, WorkbenchConfig};
+
+fn main() -> Result<()> {
+    let dir = artifacts_dir();
+    let cfg = ModelConfig::load(&dir.join("config.json"))?;
+    let wf = WeightFile::load(&dir.join("weights.mcwt"))?;
+    let fp = MoeModel::load_f32(&cfg, &wf)?;
+    println!("loaded {} ({:.1}M params, {:.1} MB fp32)",
+             cfg.name, cfg.param_count() as f64 / 1e6,
+             memmodel::loading_bytes(&fp) as f64 / 1e6);
+
+    // 1. build the PMQ workbench: one calibration pass + GPTQ zoo
+    println!("\n[1/3] calibrating + quantizing (GPTQ at 1/2/3 bits)...");
+    let wb = Workbench::build(fp, WorkbenchConfig::default())?;
+
+    // 2. solve the Eq.-4 integer program at a 2.5-bit average budget
+    println!("[2/3] solving bit allocation (PMQ, avg 2.5 bits)...");
+    let total = 5 * cfg.n_experts / 2;
+    let (mc_model, alloc) = wb.compress(Allocator::Pmq, total, PmqHyper::default())?;
+    println!("  allocation histogram 1/2/3-bit: {:?}", alloc.histogram());
+    println!("  {:.1} MB -> {:.1} MB ({:.1}% of FP32)",
+             memmodel::loading_bytes(&wb.fp) as f64 / 1e6,
+             memmodel::loading_bytes(&mc_model) as f64 / 1e6,
+             100.0 * memmodel::loading_bytes(&mc_model) as f64
+                 / memmodel::loading_bytes(&wb.fp) as f64);
+
+    // 3. evaluate FP vs MC (+ODP) on the 8-task suite
+    println!("[3/3] evaluating...");
+    let odp_policy = odp::odp_default(&wb.cal);
+    let fp_r = eval_suite(&wb.fp, 40, 0, 4242, None);
+    let mc_r = eval_suite(&mc_model, 40, 0, 4242, None);
+    let mco_r = eval_suite(&mc_model, 40, 0, 4242, Some(&odp_policy));
+    println!("\n{:12} {:>8} {:>8} {:>10}", "task", "FP32", "MC", "MC+ODP");
+    for i in 0..8 {
+        println!("{:12} {:>7.1}% {:>7.1}% {:>9.1}%",
+                 fp_r.rows[i].0, fp_r.rows[i].2 * 100.0,
+                 mc_r.rows[i].2 * 100.0, mco_r.rows[i].2 * 100.0);
+    }
+    println!("{:12} {:>7.2}% {:>7.2}% {:>9.2}%", "AVERAGE",
+             fp_r.average * 100.0, mc_r.average * 100.0, mco_r.average * 100.0);
+    println!("\nODP pruned {:.1}% of expert compute",
+             mco_r.stats.compression_ratio() * 100.0);
+    Ok(())
+}

@@ -1,0 +1,107 @@
+//! End-to-end serving driver (EXPERIMENTS.md §E2E): load the trained
+//! model, compress it with MC, spawn the continuous-batching server,
+//! replay a synthetic request trace, and report latency/throughput —
+//! FP32 engine vs MC engine vs MC+ODP.
+//!
+//!   cargo run --release --example serve_moe [-- --requests 24 --batch 4]
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+use mc_moe::config::{artifacts_dir, ModelConfig};
+use mc_moe::coordinator::{memmodel, DecodeOdp, Server};
+use mc_moe::data::{calibration_set, task_sequence, Split};
+use mc_moe::moe::{MoeModel, WeightFile};
+use mc_moe::pmq::allocate::{Allocator, PmqHyper};
+use mc_moe::pmq::{Workbench, WorkbenchConfig};
+use mc_moe::util::cli::Args;
+use mc_moe::util::rng::Rng;
+use mc_moe::util::stats::percentile;
+
+struct TraceResult {
+    name: String,
+    wall_s: f64,
+    tok_s: f64,
+    ttft_p50_ms: f64,
+    ttft_p95_ms: f64,
+    prune_pct: f64,
+    load_mb: f64,
+}
+
+fn run_trace(name: &str, model: Arc<MoeModel>, odp: Option<DecodeOdp>,
+             n_req: usize, batch: usize, max_new: usize) -> TraceResult {
+    let load_mb = memmodel::loading_bytes(&model) as f64 / 1e6;
+    let server = Server::spawn(model, odp, batch);
+    let mut rng = Rng::new(2024);
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..n_req)
+        .map(|_| {
+            // request = a task prompt (stop at SEP) like a real workload
+            let task = rng.below(8);
+            let mut prompt = task_sequence(&mut rng, task);
+            let sep = prompt.iter().position(|&t| t == 3).unwrap();
+            prompt.truncate(sep + 1);
+            server.submit(prompt, max_new)
+        })
+        .collect();
+    let mut ttfts = Vec::new();
+    for rx in rxs {
+        let done = rx.recv().expect("completion");
+        ttfts.push(done.ttft_ns as f32 / 1e6);
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let tokens = server.metrics.tokens_generated.load(Ordering::Relaxed) as f64;
+    let out = TraceResult {
+        name: name.to_string(),
+        wall_s: wall,
+        tok_s: tokens / wall,
+        ttft_p50_ms: percentile(&ttfts, 50.0) as f64,
+        ttft_p95_ms: percentile(&ttfts, 95.0) as f64,
+        prune_pct: server.metrics.prune_ratio() * 100.0,
+        load_mb,
+    };
+    server.shutdown();
+    out
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let n_req = args.usize_or("requests", 24)?;
+    let batch = args.usize_or("batch", 4)?;
+    let max_new = args.usize_or("max-new", 24)?;
+
+    let dir = artifacts_dir();
+    let cfg = ModelConfig::load(&dir.join("config.json"))?;
+    let wf = WeightFile::load(&dir.join("weights.mcwt"))?;
+    let fp = MoeModel::load_f32(&cfg, &wf)?;
+
+    eprintln!("compressing (PMQ 2.5-bit avg)...");
+    let wb = Workbench::build(fp, WorkbenchConfig {
+        fast_eps: true, ..Default::default()
+    })?;
+    let (mc, alloc) = wb.compress(Allocator::Pmq, 5 * cfg.n_experts / 2,
+                                  PmqHyper::default())?;
+    let seqs = calibration_set(17, 4, cfg.max_seq, Split::General);
+    let odp = DecodeOdp::calibrate(&wb.fp, &seqs, wb.cal.mu_median(), 0.02);
+
+    eprintln!("replaying trace: {n_req} requests, batch {batch}, {max_new} new tokens each\n");
+    let results = vec![
+        run_trace("FP32", Arc::new(wb.fp.clone()), None, n_req, batch, max_new),
+        run_trace(&format!("MC {:.2}b", alloc.avg_bits()),
+                  Arc::new(mc.clone()), None, n_req, batch, max_new),
+        run_trace(&format!("MC {:.2}b+ODP", alloc.avg_bits()),
+                  Arc::new(mc), Some(odp), n_req, batch, max_new),
+    ];
+    println!("{:<14} {:>9} {:>9} {:>11} {:>11} {:>8} {:>9}",
+             "engine", "wall s", "tok/s", "ttft p50ms", "ttft p95ms",
+             "prune%", "load MB");
+    let base = results[0].tok_s;
+    for r in &results {
+        println!("{:<14} {:>9.2} {:>9.1} {:>11.2} {:>11.2} {:>8.1} {:>9.1}  ({:.2}x)",
+                 r.name, r.wall_s, r.tok_s, r.ttft_p50_ms, r.ttft_p95_ms,
+                 r.prune_pct, r.load_mb, r.tok_s / base);
+    }
+    Ok(())
+}

@@ -1,0 +1,253 @@
+"""AOT export: lower the L2 model (+L1 kernels) to HLO text artifacts.
+
+Runs once at build time (`make artifacts`); the rust runtime loads the
+HLO text via PJRT and python never appears on the request path.
+
+Interchange is HLO *text*, not serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids that xla_extension 0.5.1
+rejects; the text parser reassigns ids (see /opt/xla-example/README.md).
+
+Emitted artifacts (per DESIGN.md §3):
+    config.json           model + tokenizer + packing configuration
+    weights.mcwt          trained f32 weights (MCWT format)
+    train_log.json        build-time loss curve (EXPERIMENTS.md §E2E)
+    golden.mcwt           fixed-input logits/probs/importance for rust parity tests
+    manifest.json         artifact -> ordered input/output specs
+    model_fwd.hlo.txt     tokens[S] -> logits[S,V]       (full fwd, kernels inlined)
+    gate.hlo.txt          x[T,D], wg[D,E] -> probs[T,E]
+    expert_ffn_f32.hlo.txt  x[T,D], w1,w3,w2 -> y[T,D]
+    expert_ffn_q2/q3.hlo.txt  x[T,D], (qw,s,z)x3 -> y[T,D]
+    expert_ffn_b1.hlo.txt     x[T,D], (packed,scale)x3 -> y[T,D]
+    attention.hlo.txt     x[S,D], mask[S], wq..wo -> (y[S,D], A[H,S,S])
+    token_importance.hlo.txt  x[S,D], A[H,S,S] -> I[S]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import config as cfg_mod
+from . import mcwt, train
+from .config import GROUP_SIZE, VALS_PER_WORD, ModelConfig
+from .kernels import ref
+from .kernels.attention import attention as attention_k
+from .kernels.binary_matmul import binary_matmul
+from .kernels.moe_ffn import moe_ffn
+from .kernels.quant_matmul import quant_matmul
+from .kernels.token_importance import token_importance
+from .model import forward_seq, gate_probs, param_names
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _dtype_name(d) -> str:
+    return {jnp.float32: "f32", jnp.int32: "i32", jnp.uint32: "u32"}[d]
+
+
+class Exporter:
+    def __init__(self, cfg: ModelConfig, out_dir: str):
+        self.cfg = cfg
+        self.out_dir = out_dir
+        self.manifest: dict[str, dict] = {}
+
+    def export(self, name: str, fn, inputs: list[tuple[str, list[int], object]],
+               outputs: list[tuple[str, list[int]]]):
+        specs = [_spec(shape, dt) for _, shape, dt in inputs]
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        self.manifest[name] = {
+            "inputs": [{"name": n, "shape": s, "dtype": _dtype_name(dt)}
+                       for n, s, dt in inputs],
+            "outputs": [{"name": n, "shape": s} for n, s in outputs],
+        }
+        print(f"  exported {name}: {len(text)} chars, "
+              f"{len(inputs)} inputs", flush=True)
+
+
+def packed_shapes(k: int, n: int, bits: int):
+    """(qweight, scales, zeros) shapes for a [K, N] matrix at `bits`."""
+    if bits == 1:
+        return ((k + 31) // 32, n), (n,), None
+    vpw = VALS_PER_WORD[bits]
+    kw = (k + vpw - 1) // vpw
+    return (kw, n), (k // GROUP_SIZE, n), (k // GROUP_SIZE, n)
+
+
+def export_all(cfg: ModelConfig, params: dict, out_dir: str):
+    ex = Exporter(cfg, out_dir)
+    d, f, e, h = cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.n_heads
+    s, t, v = cfg.max_seq, cfg.prefill_tile, cfg.vocab_size
+
+    # --- full forward (fast scoring path). Params are trailing args in
+    # canonical sorted-name order so rust can feed them positionally.
+    names = param_names(cfg)
+
+    def model_fwd(tokens, *flat):
+        p = dict(zip(names, flat))
+        logits, _ = forward_seq(p, cfg, tokens, use_kernels=True)
+        return (logits,)
+
+    ex.export(
+        "model_fwd", model_fwd,
+        [("tokens", [s], jnp.int32)] +
+        [(n, list(params[n].shape), jnp.float32) for n in names],
+        [("logits", [s, v])],
+    )
+
+    # --- router gate
+    ex.export(
+        "gate", lambda x, wg: (gate_probs(x, wg),),
+        [("x", [t, d], jnp.float32), ("wg", [d, e], jnp.float32)],
+        [("probs", [t, e])],
+    )
+
+    # --- expert FFN, fp32 (pallas moe_ffn kernel)
+    ex.export(
+        "expert_ffn_f32", lambda x, w1, w3, w2: (moe_ffn(x, w1, w3, w2),),
+        [("x", [t, d], jnp.float32), ("w1", [d, f], jnp.float32),
+         ("w3", [d, f], jnp.float32), ("w2", [f, d], jnp.float32)],
+        [("y", [t, d])],
+    )
+
+    # --- expert FFN, quantized 2/3-bit (fused unpack->dequant->matmul)
+    for bits in (2, 3):
+        q1, s1, z1 = packed_shapes(d, f, bits)
+        q2, s2, z2 = packed_shapes(f, d, bits)
+
+        def qffn(x, qw1, sc1, zp1, qw3, sc3, zp3, qw2, sc2, zp2, _b=bits):
+            h1 = quant_matmul(x, qw1, sc1, zp1, _b)
+            h3 = quant_matmul(x, qw3, sc3, zp3, _b)
+            g = h1 / (1.0 + jnp.exp(-h1)) * h3
+            return (quant_matmul(g, qw2, sc2, zp2, _b),)
+
+        ex.export(
+            f"expert_ffn_q{bits}", qffn,
+            [("x", [t, d], jnp.float32),
+             ("qw1", list(q1), jnp.uint32), ("s1", list(s1), jnp.float32),
+             ("z1", list(z1), jnp.float32),
+             ("qw3", list(q1), jnp.uint32), ("s3", list(s1), jnp.float32),
+             ("z3", list(z1), jnp.float32),
+             ("qw2", list(q2), jnp.uint32), ("s2", list(s2), jnp.float32),
+             ("z2", list(z2), jnp.float32)],
+            [("y", [t, d])],
+        )
+
+    # --- expert FFN, binary (Eq. 10)
+    p1, sb1, _ = packed_shapes(d, f, 1)
+    p2, sb2, _ = packed_shapes(f, d, 1)
+
+    def bffn(x, pk1, sc1, pk3, sc3, pk2, sc2):
+        h1 = binary_matmul(x, pk1, sc1)
+        h3 = binary_matmul(x, pk3, sc3)
+        g = h1 / (1.0 + jnp.exp(-h1)) * h3
+        return (binary_matmul(g, pk2, sc2),)
+
+    ex.export(
+        "expert_ffn_b1", bffn,
+        [("x", [t, d], jnp.float32),
+         ("p1", list(p1), jnp.uint32), ("s1", list(sb1), jnp.float32),
+         ("p3", list(p1), jnp.uint32), ("s3", list(sb1), jnp.float32),
+         ("p2", list(p2), jnp.uint32), ("s2", list(sb2), jnp.float32)],
+        [("y", [t, d])],
+    )
+
+    # --- attention block (also emits A for token importance)
+    def attn_fn(x, mask, wq, wk, wv, wo):
+        y, a = attention_k(x, wq, wk, wv, wo, h, mask)
+        return (y, a)
+
+    ex.export(
+        "attention", attn_fn,
+        [("x", [s, d], jnp.float32), ("mask", [s], jnp.int32)] +
+        [(n, [d, d], jnp.float32) for n in ("wq", "wk", "wv", "wo")],
+        [("y", [s, d]), ("a", [h, s, s])],
+    )
+
+    # --- token importance (paper Eq. 6)
+    ex.export(
+        "token_importance", lambda x, a: (token_importance(x, a),),
+        [("x", [s, d], jnp.float32), ("a", [h, s, s], jnp.float32)],
+        [("importance", [s])],
+    )
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as fo:
+        json.dump({"config": cfg.name, "param_order": names,
+                   "artifacts": ex.manifest}, fo, indent=2)
+
+
+def write_golden(cfg: ModelConfig, params: dict, out_dir: str):
+    """Fixed-input reference outputs for rust parity tests."""
+    rng = np.random.default_rng(12345)
+    toks = rng.integers(1, cfg.vocab_size, size=cfg.max_seq).astype(np.int32)
+    logits, aux = forward_seq(
+        {k: jnp.asarray(v) for k, v in params.items()}, cfg,
+        jnp.asarray(toks), collect_aux=True)
+    mcwt.write(os.path.join(out_dir, "golden.mcwt"), {
+        "tokens": toks.astype(np.float32),
+        "logits": np.asarray(logits),
+        "probs_l0": np.asarray(aux["probs"][0]),
+        "importance_l0": np.asarray(aux["importance"][0]),
+        "attn_l0": np.asarray(aux["attn"][0]),
+    })
+    print(f"  golden: logits[0,:4]={np.asarray(logits)[0, :4]}", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="tiny", choices=list(cfg_mod.CONFIGS))
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--out", default=None,
+                    help="compat: path to model_fwd stamp (Makefile)")
+    ap.add_argument("--force-train", action="store_true")
+    ap.add_argument("--skip-hlo", action="store_true")
+    args = ap.parse_args()
+
+    cfg = cfg_mod.get(args.config)
+    out_dir = args.out_dir
+    if args.out:  # Makefile passes artifacts/model.hlo.txt-style path
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    wpath = os.path.join(out_dir, "weights.mcwt")
+    lpath = os.path.join(out_dir, "train_log.json")
+    if args.force_train or not os.path.exists(wpath):
+        print(f"training {cfg.name} ({cfg.param_count()/1e6:.1f}M params, "
+              f"{cfg.train_steps} steps)...", flush=True)
+        params, _ = train.train_and_save(cfg, wpath, lpath)
+        params = {k: np.asarray(v) for k, v in params.items()}
+    else:
+        print(f"weights exist, skipping training: {wpath}", flush=True)
+        params = mcwt.read(wpath)
+
+    with open(os.path.join(out_dir, "config.json"), "w") as f:
+        f.write(cfg.to_json())
+
+    write_golden(cfg, params, out_dir)
+
+    if not args.skip_hlo:
+        print("exporting HLO artifacts...", flush=True)
+        export_all(cfg, params, out_dir)
+    print("aot: done", flush=True)
+
+
+if __name__ == "__main__":
+    main()

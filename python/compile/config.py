@@ -1,0 +1,125 @@
+"""Canonical model / tokenizer / packing configuration.
+
+This file is the single source of truth shared (by value, via
+``artifacts/config.json``) between the python build path (L1 kernels,
+L2 model, trainer, AOT export) and the rust runtime (L3).  The rust side
+re-implements the same constants in ``rust/src/config.rs``; the pytest
+suite and ``cargo test`` both assert against ``config.json`` so drift is
+caught at build time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from dataclasses import dataclass
+
+# ---------------------------------------------------------------------------
+# Tokenizer spec (fixed 256-symbol vocabulary, shared with rust/src/data)
+# ---------------------------------------------------------------------------
+
+VOCAB_SIZE = 256
+
+PAD, BOS, EOS, SEP, QRY = 0, 1, 2, 3, 4
+# 8 task-tag tokens identify which grammar generated a sequence.
+TASK_BASE = 5            # tasks 0..7 -> tokens 5..12
+NUM_BASE = 16            # number tokens 0..63  -> 16..79
+NUM_COUNT = 64
+SYM_BASE = 80            # symbol alphabet a0..a63 -> 80..143
+SYM_COUNT = 64
+TXT_BASE = 144           # zipfian "text" word tokens -> 144..255
+TXT_COUNT = 112
+
+TASK_NAMES = [
+    "copy",       # analogue of PIQA        : surface fidelity
+    "reverse",    # analogue of ARC-e       : simple transform
+    "sortsym",    # analogue of ARC-c       : harder transform
+    "modadd",     # analogue of MathQA      : arithmetic
+    "recall",     # analogue of BoolQ       : key-value retrieval
+    "majority",   # analogue of HellaSwag   : aggregate statistics
+    "counting",   # analogue of Winogrande  : counting/binding
+    "induction",  # analogue of MMLU        : in-context induction
+]
+
+# ---------------------------------------------------------------------------
+# Quantized-weight packing spec (must match rust/src/quant/pack.rs)
+# ---------------------------------------------------------------------------
+
+GROUP_SIZE = 64  # quantization group along the K (input) dimension
+
+# values packed per little-endian u32 word, by bit-width
+VALS_PER_WORD = {2: 16, 3: 10, 4: 8}
+# 1-bit weights: 32 rows per word, column-major bit packing + per-column scale
+
+
+@dataclass
+class ModelConfig:
+    """Mixtral-style decoder-only MoE transformer configuration."""
+
+    name: str = "tiny"
+    vocab_size: int = VOCAB_SIZE
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 256          # per-expert hidden dim (SwiGLU)
+    n_experts: int = 8
+    top_k: int = 2
+    max_seq: int = 256
+    # serving tile sizes baked into the AOT component executables
+    prefill_tile: int = 128  # token-batch tile for expert/gate executables
+    # training hyper-parameters (build-time only)
+    train_steps: int = 600
+    train_batch: int = 16
+    train_seq: int = 128
+    lr: float = 3e-3
+    seed: int = 0
+
+    @property
+    def head_dim(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, f, e, v, s = self.d_model, self.d_ff, self.n_experts, self.vocab_size, self.max_seq
+        emb = v * d + s * d
+        per_layer = 4 * d * d + 2 * d + d * e + e * 3 * d * f
+        return emb + self.n_layers * per_layer + d + d * v
+
+    def expert_param_count(self) -> int:
+        return self.n_layers * self.n_experts * 3 * self.d_model * self.d_ff
+
+    def to_json(self) -> str:
+        return json.dumps(dataclasses.asdict(self), indent=2)
+
+    @staticmethod
+    def from_json(text: str) -> "ModelConfig":
+        return ModelConfig(**json.loads(text))
+
+
+def tiny() -> ModelConfig:
+    """Default build config: trains in ~2 min on CPU, ~3.5M params."""
+    return ModelConfig()
+
+
+def small() -> ModelConfig:
+    """Mid-size config for ablations (~14M params)."""
+    return ModelConfig(
+        name="small", d_model=192, n_layers=6, n_heads=6, d_ff=384,
+        train_steps=1600, train_batch=24,
+    )
+
+
+def e2e() -> ModelConfig:
+    """~100M-param config for the end-to-end example (EXPERIMENTS.md §E2E)."""
+    return ModelConfig(
+        name="e2e", d_model=512, n_layers=8, n_heads=8, d_ff=1024,
+        max_seq=512, train_seq=256, train_batch=8, train_steps=300,
+        lr=1e-3,
+    )
+
+
+CONFIGS = {"tiny": tiny, "small": small, "e2e": e2e}
+
+
+def get(name: str) -> ModelConfig:
+    return CONFIGS[name]()

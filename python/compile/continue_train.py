@@ -1,0 +1,78 @@
+"""Continue training from existing weights (build-time utility).
+
+Usage: python -m compile.continue_train [--steps 1500] [--lr 1.5e-3]
+Loads artifacts/weights.mcwt, trains further on the same corpus
+distribution, saves back, and refreshes golden.mcwt + HLO artifacts.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import config as cfg_mod
+from . import datagen, mcwt
+from .aot import export_all, write_golden
+from .train import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="tiny")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=1500)
+    ap.add_argument("--lr", type=float, default=1.5e-3)
+    ap.add_argument("--seed", type=int, default=42)
+    args = ap.parse_args()
+
+    cfg = cfg_mod.get(args.config)
+    wpath = os.path.join(args.out_dir, "weights.mcwt")
+    params = {k: jnp.asarray(v) for k, v in mcwt.read(wpath).items()}
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(p) for k, p in params.items()}
+    grad_fn, adam = make_train_step(cfg)
+    rng = np.random.default_rng(args.seed)
+    text = datagen.TextChannel()
+    t0 = time.time()
+    log = []
+    step = 0
+    for x, y in datagen.batches(rng, text, args.steps, cfg.train_batch,
+                                cfg.train_seq):
+        step += 1
+        cos = 0.5 * (1 + np.cos(np.pi * step / args.steps))
+        lr = args.lr * (0.1 + 0.9 * cos)
+        loss, grads = grad_fn(params, jnp.asarray(x), jnp.asarray(y))
+        params, m, v = adam(params, grads, m, v, step, lr)
+        if step % 50 == 0 or step == 1:
+            entry = {"step": step, "loss": float(loss),
+                     "elapsed_s": round(time.time() - t0, 1)}
+            log.append(entry)
+            print(f"  +step {step:5d}  loss {entry['loss']:.4f}  "
+                  f"{entry['elapsed_s']:7.1f}s", flush=True)
+
+    np_params = {k: np.asarray(p) for k, p in params.items()}
+    mcwt.write(wpath, np_params)
+    lpath = os.path.join(args.out_dir, "train_log.json")
+    try:
+        prev = json.load(open(lpath))
+    except Exception:
+        prev = {"log": []}
+    prev.setdefault("continued", []).append(
+        {"steps": args.steps, "lr": args.lr, "log": log})
+    prev["final_loss"] = log[-1]["loss"] if log else prev.get("final_loss")
+    json.dump(prev, open(lpath, "w"), indent=2)
+
+    print("refreshing golden + HLO artifacts...", flush=True)
+    write_golden(cfg, np_params, args.out_dir)
+    export_all(cfg, np_params, args.out_dir)
+    print("continue_train: done", flush=True)
+
+
+if __name__ == "__main__":
+    main()

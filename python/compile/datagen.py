@@ -1,0 +1,178 @@
+"""Synthetic corpus generator (build-time twin of ``rust/src/data``).
+
+The corpus substitutes for C4/WikiText2/MATH (see DESIGN.md §2): a
+mixture of 8 procedural task grammars over a 256-token vocabulary plus a
+Zipfian Markov "text" channel.  The *general* split mixes all channels
+(C4 analogue); the *arith* split is modadd-only (MATH analogue); the
+*text* split is the Markov channel alone (WikiText2-PPL analogue).
+
+Formats are identical to the rust generators so that a model trained
+here is evaluated on-distribution by the rust harness.  RNG streams need
+not match across languages — only the grammar does.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from .config import (
+    BOS, EOS, NUM_BASE, NUM_COUNT, PAD, QRY, SEP, SYM_BASE, SYM_COUNT,
+    TASK_BASE, TASK_NAMES, TXT_BASE, TXT_COUNT,
+)
+
+
+def _num(v: int) -> int:
+    assert 0 <= v < NUM_COUNT
+    return NUM_BASE + v
+
+
+def _sym(v: int) -> int:
+    assert 0 <= v < SYM_COUNT
+    return SYM_BASE + v
+
+
+# ---------------------------------------------------------------------------
+# Task grammars.  Each returns (prompt_tokens, answer_tokens); training
+# sequences are  [BOS, task_tag] + prompt + [SEP] + answer + [EOS].
+# ---------------------------------------------------------------------------
+
+def gen_copy(rng: np.random.Generator, n: int = 8):
+    seq = [_sym(int(s)) for s in rng.integers(0, 16, size=n)]
+    return seq, list(seq)
+
+
+def gen_reverse(rng: np.random.Generator, n: int = 8):
+    seq = [_sym(int(s)) for s in rng.integers(0, 16, size=n)]
+    return seq, seq[::-1]
+
+
+def gen_sortsym(rng: np.random.Generator, n: int = 8):
+    vals = [int(s) for s in rng.integers(0, 16, size=n)]
+    return [_sym(v) for v in vals], [_sym(v) for v in sorted(vals)]
+
+
+def gen_modadd(rng: np.random.Generator, n: int = 0):
+    a, b = int(rng.integers(0, NUM_COUNT)), int(rng.integers(0, NUM_COUNT))
+    return [_num(a), _num(b)], [_num((a + b) % NUM_COUNT)]
+
+
+def gen_recall(rng: np.random.Generator, n: int = 4):
+    keys = rng.permutation(32)[:n]
+    vals = rng.integers(32, 64, size=n)
+    prompt = []
+    for k, v in zip(keys, vals):
+        prompt += [_sym(int(k)), _sym(int(v))]
+    q = int(rng.integers(0, n))
+    prompt += [QRY, _sym(int(keys[q]))]
+    return prompt, [_sym(int(vals[q]))]
+
+
+def gen_majority(rng: np.random.Generator, n: int = 9):
+    choices = rng.permutation(8)[:2]
+    k = int(rng.integers(n // 2 + 1, n))  # strict majority count
+    seq = [int(choices[0])] * k + [int(choices[1])] * (n - k)
+    rng.shuffle(seq)
+    return [_sym(s) for s in seq], [_sym(int(choices[0]))]
+
+
+def gen_counting(rng: np.random.Generator, n: int = 10):
+    target = int(rng.integers(0, 8))
+    seq = [int(s) for s in rng.integers(0, 8, size=n)]
+    cnt = seq.count(target)
+    return [_sym(target), QRY] + [_sym(s) for s in seq], [_num(cnt)]
+
+
+def gen_induction(rng: np.random.Generator, n: int = 6):
+    # pattern: a b  ... filler ...  a -> b   (classic induction head probe)
+    a, b = (int(x) for x in rng.permutation(16)[:2])
+    filler = [_sym(int(s) + 16) for s in rng.integers(0, 16, size=n)]
+    return [_sym(a), _sym(b)] + filler + [_sym(a)], [_sym(b)]
+
+
+TASK_GENS = [gen_copy, gen_reverse, gen_sortsym, gen_modadd,
+             gen_recall, gen_majority, gen_counting, gen_induction]
+assert len(TASK_GENS) == len(TASK_NAMES)
+
+
+def task_sequence(rng: np.random.Generator, task_id: int) -> list[int]:
+    prompt, answer = TASK_GENS[task_id](rng)
+    return [BOS, TASK_BASE + task_id] + prompt + [SEP] + answer + [EOS]
+
+
+# ---------------------------------------------------------------------------
+# Zipfian Markov "text" channel (WikiText2 analogue)
+# ---------------------------------------------------------------------------
+
+class TextChannel:
+    """Order-1 Markov chain over TXT tokens with Zipf-distributed rows.
+
+    A fixed seed builds the transition table, so python (training) and
+    rust (eval) sample from the *same* language.  The table construction
+    must match ``rust/src/data/text.rs`` exactly: row i's successor
+    ranks are a deterministic permutation from an LCG, with Zipf(1.2)
+    probabilities over 12 successors.
+    """
+
+    FANOUT = 12
+    ZIPF_S = 1.2
+    LCG_MUL = 6364136223846793005
+    LCG_INC = 1442695040888963407
+
+    def __init__(self, table_seed: int = 0xC0FFEE):
+        probs = 1.0 / np.arange(1, self.FANOUT + 1) ** self.ZIPF_S
+        self.probs = probs / probs.sum()
+        self.succ = np.zeros((TXT_COUNT, self.FANOUT), dtype=np.int64)
+        state = np.uint64(table_seed)
+        for i in range(TXT_COUNT):
+            # deterministic successor permutation via LCG Fisher-Yates
+            perm = list(range(TXT_COUNT))
+            for j in range(TXT_COUNT - 1, 0, -1):
+                state = np.uint64(
+                    (int(state) * self.LCG_MUL + self.LCG_INC) % (1 << 64))
+                k = int(state >> np.uint64(33)) % (j + 1)
+                perm[j], perm[k] = perm[k], perm[j]
+            self.succ[i] = perm[: self.FANOUT]
+
+    def sample(self, rng: np.random.Generator, n: int) -> list[int]:
+        cur = int(rng.integers(0, TXT_COUNT))
+        out = []
+        for _ in range(n):
+            out.append(TXT_BASE + cur)
+            cur = int(self.succ[cur, rng.choice(self.FANOUT, p=self.probs)])
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Corpus assembly
+# ---------------------------------------------------------------------------
+
+def pack_stream(rng: np.random.Generator, text: TextChannel, n_tokens: int,
+                split: str = "general") -> np.ndarray:
+    """Emit a contiguous token stream of >= n_tokens for LM training.
+
+    split: "general" (70% tasks uniformly + 30% text), "arith"
+    (modadd-only), "text" (Markov channel only).
+    """
+    out: list[int] = []
+    while len(out) < n_tokens:
+        if split == "text":
+            out += [BOS] + text.sample(rng, 48) + [EOS]
+        elif split == "arith":
+            out += task_sequence(rng, 3)
+        elif split == "general":
+            if rng.random() < 0.3:
+                out += [BOS] + text.sample(rng, 48) + [EOS]
+            else:
+                out += task_sequence(rng, int(rng.integers(0, 8)))
+        else:
+            raise ValueError(split)
+    return np.array(out[:n_tokens], dtype=np.int32)
+
+
+def batches(rng: np.random.Generator, text: TextChannel, steps: int,
+            batch: int, seq: int, split: str = "general"):
+    """Yield (x, y) next-token training batches of shape [batch, seq]."""
+    for _ in range(steps):
+        stream = pack_stream(rng, text, batch * (seq + 1), split)
+        arr = stream.reshape(batch, seq + 1)
+        yield arr[:, :-1], arr[:, 1:]

@@ -1,0 +1,70 @@
+"""L1 Pallas kernel: causal multi-head attention.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid iterates over
+heads; each invocation holds one head's Q/K/V tile in VMEM, runs the
+QKᵀ matmul on the MXU, a numerically-stable softmax on the VPU, and the
+AV matmul back on the MXU.  At the sequence lengths this repo serves
+(<= 512) a whole head fits in one VMEM tile, so no K/V streaming loop is
+needed; ``roofline.py`` accounts for both regimes.
+
+interpret=True everywhere — the CPU PJRT plugin cannot execute Mosaic
+custom-calls (see /opt/xla-example/README.md), and interpret-lowered
+kernels become plain HLO that the rust runtime runs as-is.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _attn_head_kernel(q_ref, k_ref, v_ref, mask_ref, y_ref, a_ref, *, scale):
+    q = q_ref[0]            # [S, hd]
+    k = k_ref[0]
+    v = v_ref[0]
+    s = q.shape[0]
+    scores = jnp.dot(q, k.T) * scale                       # MXU
+    causal = jnp.tril(jnp.ones((s, s), dtype=jnp.bool_))
+    valid = causal & (mask_ref[...] > 0)[None, :]
+    scores = jnp.where(valid, scores, -1e30)
+    m = jnp.max(scores, axis=-1, keepdims=True)            # stable softmax
+    e = jnp.exp(scores - m)
+    a = e / jnp.sum(e, axis=-1, keepdims=True)
+    a_ref[0] = a
+    y_ref[0] = jnp.dot(a, v)                               # MXU
+
+
+def attention(x, wq, wk, wv, wo, n_heads: int, mask=None):
+    """Pallas twin of ref.attention_ref -> (y[S,D], A[H,S,S])."""
+    s, d = x.shape
+    hd = d // n_heads
+    if mask is None:
+        mask = jnp.ones((s,), dtype=jnp.int32)
+    q = (x @ wq).reshape(s, n_heads, hd).transpose(1, 0, 2)
+    k = (x @ wk).reshape(s, n_heads, hd).transpose(1, 0, 2)
+    v = (x @ wv).reshape(s, n_heads, hd).transpose(1, 0, 2)
+    kern = functools.partial(_attn_head_kernel, scale=1.0 / (hd ** 0.5))
+    y_h, a = pl.pallas_call(
+        kern,
+        grid=(n_heads,),
+        in_specs=[
+            pl.BlockSpec((1, s, hd), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, s, hd), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, s, hd), lambda h: (h, 0, 0)),
+            pl.BlockSpec((s,), lambda h: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, s, hd), lambda h: (h, 0, 0)),
+            pl.BlockSpec((1, s, s), lambda h: (h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_heads, s, hd), x.dtype),
+            jax.ShapeDtypeStruct((n_heads, s, s), x.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, mask.astype(jnp.int32))
+    y = y_h.transpose(1, 0, 2).reshape(s, d)
+    return y @ wo, a

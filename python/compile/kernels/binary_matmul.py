@@ -1,0 +1,53 @@
+"""L1 Pallas kernel: 1-bit (binarized) matmul, paper Eqs. 7-10.
+
+Weights are sign-binarized with the bit-change transform
+(btilde = (sign(w)+1)/2) and packed 32 rows per u32 word; a per-column
+scale s_n reconstructs w = (2*btilde - 1) * s_n.
+
+TPU note (DESIGN.md §Hardware-Adaptation): the paper's Eq. 10 add/sub
+formulation is an XNOR/popcount trick aimed at scalar ALUs.  On TPU the
+MXU only consumes dense tiles, so the profitable schedule is: unpack
+bits on the VPU -> map {0,1} to {-1,+1} -> one MXU dot -> one broadcast
+column-scale multiply.  That preserves Eq. 10's arithmetic exactly
+(x @ ((2b-1) s) == s * (Σ_{b=1} x − Σ_{b=0} x)) while keeping the MXU
+fed; the unpacked tile lives only in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _binary_matmul_kernel(x_ref, p_ref, s_ref, y_ref, *, k):
+    p = p_ref[...]                                     # [K_words, BN] u32
+    fields = [((p >> jnp.uint32(i)) & jnp.uint32(1)).astype(jnp.float32)
+              for i in range(32)]                      # VPU unpack
+    b = jnp.stack(fields, axis=1).reshape(p.shape[0] * 32, -1)[:k]
+    w = 2.0 * b - 1.0                                  # {0,1} -> {-1,+1}
+    acc = jnp.dot(x_ref[...], w)                       # MXU
+    y_ref[...] = acc * s_ref[...][None, :]             # per-column scale
+
+
+def binary_matmul(x, packed, scales, block_n: int = 128):
+    """Pallas twin of ref.binary_matmul_ref; x[M,K] -> y[M,N]."""
+    m, k = x.shape
+    k_words, n = packed.shape
+    bn = min(block_n, n)
+    assert n % bn == 0, (n, bn)
+    kern = functools.partial(_binary_matmul_kernel, k=k)
+    return pl.pallas_call(
+        kern,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((m, k), lambda j: (0, 0)),
+            pl.BlockSpec((k_words, bn), lambda j: (0, j)),
+            pl.BlockSpec((bn,), lambda j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, packed, scales)

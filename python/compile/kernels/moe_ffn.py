@@ -1,0 +1,46 @@
+"""L1 Pallas kernel: SwiGLU expert FFN  y = (silu(x@w1) * (x@w3)) @ w2.
+
+TPU mapping: grid over token tiles of BM rows; per invocation the three
+weight matrices are resident in VMEM (they are the per-expert weights —
+at serving shapes D*F*3*4B ≈ 384 KiB for the tiny config, within the
+~16 MiB VMEM budget; roofline.py checks this per config) and the token
+tile streams through.  Both matmuls hit the MXU; the silu/mul gate runs
+on the VPU between them, fused in one kernel so the [BM, F] intermediate
+never round-trips to HBM — this is the fusion the paper gets from its
+CUDA kernels and the core of the L2 fusion story.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _moe_ffn_kernel(x_ref, w1_ref, w3_ref, w2_ref, y_ref):
+    x = x_ref[...]
+    h1 = jnp.dot(x, w1_ref[...])              # MXU
+    h3 = jnp.dot(x, w3_ref[...])              # MXU
+    g = h1 / (1.0 + jnp.exp(-h1)) * h3        # VPU: silu * up
+    y_ref[...] = jnp.dot(g, w2_ref[...])      # MXU
+
+
+def moe_ffn(x, w1, w3, w2, block_m: int = 128):
+    """Pallas twin of ref.moe_ffn_ref; x[M, D] -> y[M, D]."""
+    m, d = x.shape
+    f = w1.shape[1]
+    bm = min(block_m, m)
+    assert m % bm == 0, (m, bm)
+    return pl.pallas_call(
+        _moe_ffn_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, d), lambda i: (i, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((d, f), lambda i: (0, 0)),
+            pl.BlockSpec((f, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, d), x.dtype),
+        interpret=True,
+    )(x, w1, w3, w2)

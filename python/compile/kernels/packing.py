@@ -1,0 +1,109 @@
+"""Quantized-weight bit-packing (canonical spec; rust twin: quant/pack.rs).
+
+Layouts (all little-endian u32 words):
+
+* b-bit (b in {2,3,4}), weight matrix W[K, N] quantized group-wise along
+  K with GROUP_SIZE rows per group:
+    - qweight: u32[K_words, N], K_words = ceil(K / VPW[b]); word w of
+      column n holds rows r = w*VPW + i in bit-field [i*b, i*b + b).
+      (3-bit packs 10 values in the low 30 bits; top 2 bits are zero.)
+    - scales, zeros: f32[K/GROUP, N]; dequant  w = (q - z) * s.
+* 1-bit: bit-change transform (paper Eq. 9): btilde = (sign(w)+1)/2,
+  packed 32 rows per word (bit i of word w = row w*32+i), plus
+  per-column scale s_n (XNOR-Net per-filter analogue; see DESIGN.md —
+  the paper's scalar-per-matrix s is available via ``scalar_scale``).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from ..config import GROUP_SIZE, VALS_PER_WORD
+
+
+def quantize_groupwise(w: np.ndarray, bits: int, group: int = GROUP_SIZE):
+    """Asymmetric min/max group-wise quantization (the non-GPTQ baseline).
+
+    Returns (q[K,N] int32 in [0, 2^bits-1], scales[K/g,N], zeros[K/g,N]).
+    """
+    k, n = w.shape
+    assert k % group == 0, (k, group)
+    g = k // group
+    wg = w.reshape(g, group, n)
+    lo = wg.min(axis=1)                      # [g, n]
+    hi = wg.max(axis=1)
+    qmax = float(2**bits - 1)
+    scales = np.maximum((hi - lo) / qmax, 1e-8).astype(np.float32)
+    zeros = (-lo / scales).astype(np.float32)  # float zero-point
+    q = np.clip(np.round(wg / scales[:, None, :] + zeros[:, None, :]),
+                0, qmax).astype(np.int32)
+    return q.reshape(k, n), scales, zeros
+
+
+def dequantize_groupwise(q: np.ndarray, scales: np.ndarray,
+                         zeros: np.ndarray, group: int = GROUP_SIZE):
+    k, n = q.shape
+    g = k // group
+    qg = q.reshape(g, group, n).astype(np.float32)
+    return ((qg - zeros[:, None, :]) * scales[:, None, :]).reshape(k, n)
+
+
+def pack_bits(q: np.ndarray, bits: int) -> np.ndarray:
+    """Pack int levels q[K,N] into u32[K_words, N] per the layout above."""
+    vpw = VALS_PER_WORD[bits]
+    k, n = q.shape
+    k_words = (k + vpw - 1) // vpw
+    padded = np.zeros((k_words * vpw, n), dtype=np.uint32)
+    padded[:k] = q.astype(np.uint32)
+    padded = padded.reshape(k_words, vpw, n)
+    out = np.zeros((k_words, n), dtype=np.uint32)
+    for i in range(vpw):
+        out |= padded[:, i, :] << np.uint32(i * bits)
+    return out
+
+
+def unpack_bits(packed: np.ndarray, bits: int, k: int) -> np.ndarray:
+    """Inverse of pack_bits -> int32[K, N]."""
+    vpw = VALS_PER_WORD[bits]
+    k_words, n = packed.shape
+    mask = np.uint32(2**bits - 1)
+    out = np.zeros((k_words, vpw, n), dtype=np.int32)
+    for i in range(vpw):
+        out[:, i, :] = ((packed >> np.uint32(i * bits)) & mask).astype(np.int32)
+    return out.reshape(k_words * vpw, n)[:k]
+
+
+# ---------------------------------------------------------------------------
+# 1-bit
+# ---------------------------------------------------------------------------
+
+def binarize(w: np.ndarray, scalar_scale: bool = False):
+    """Sign-binarize with the bit-change transform (paper Eqs. 7-9).
+
+    Returns (btilde_packed u32[ceil(K/32), N], scales f32[N]).
+    """
+    k, n = w.shape
+    sign = np.where(w >= 0, 1.0, -1.0).astype(np.float32)
+    if scalar_scale:
+        s = np.full(n, np.abs(w).sum() / (k * n), dtype=np.float32)
+    else:
+        s = np.abs(w).mean(axis=0).astype(np.float32)  # per output column
+    btilde = ((sign + 1) / 2).astype(np.uint32)        # {0,1}
+    k_words = (k + 31) // 32
+    padded = np.zeros((k_words * 32, n), dtype=np.uint32)
+    padded[:k] = btilde
+    padded = padded.reshape(k_words, 32, n)
+    packed = np.zeros((k_words, n), dtype=np.uint32)
+    for i in range(32):
+        packed |= padded[:, i, :] << np.uint32(i)
+    return packed, s
+
+
+def debinarize(packed: np.ndarray, scales: np.ndarray, k: int) -> np.ndarray:
+    """Reconstruct f32 weights: w = (2*btilde - 1) * s_n."""
+    k_words, n = packed.shape
+    bits = np.zeros((k_words, 32, n), dtype=np.float32)
+    for i in range(32):
+        bits[:, i, :] = ((packed >> np.uint32(i)) & np.uint32(1)).astype(np.float32)
+    b = bits.reshape(k_words * 32, n)[:k]
+    return (2.0 * b - 1.0) * scales[None, :]

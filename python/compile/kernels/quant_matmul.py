@@ -1,0 +1,59 @@
+"""L1 Pallas kernel: fused unpack -> dequantize -> matmul for 2/3/4-bit
+group-wise quantized weights (packing spec: kernels/packing.py).
+
+TPU mapping (the HQQ-CUDA-kernel analogue, DESIGN.md §Hardware-
+Adaptation): the grid tiles the output columns N.  Each invocation
+streams one packed-weight column tile (u32 words — 16x/10x/8x smaller
+than f32) HBM->VMEM, unpacks with vectorized shift/mask on the VPU,
+applies the per-group scale/zero broadcast, and feeds the dequantized
+tile straight to the MXU dot.  The f32 weight tile exists only in VMEM
+scratch — never materialized in HBM, which is where the memory saving
+comes from.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..config import GROUP_SIZE, VALS_PER_WORD
+
+
+def _quant_matmul_kernel(x_ref, qw_ref, s_ref, z_ref, y_ref, *, bits, k):
+    vpw = VALS_PER_WORD[bits]
+    mask = jnp.uint32(2**bits - 1)
+    qw = qw_ref[...]                                   # [K_words, BN] u32
+    fields = [((qw >> jnp.uint32(i * bits)) & mask).astype(jnp.float32)
+              for i in range(vpw)]                     # VPU shift/mask
+    q = jnp.stack(fields, axis=1).reshape(qw.shape[0] * vpw, -1)[:k]
+    g = k // GROUP_SIZE
+    qg = q.reshape(g, GROUP_SIZE, -1)
+    w = (qg - z_ref[...][:, None, :]) * s_ref[...][:, None, :]
+    w = w.reshape(k, -1)                               # VMEM-only f32 tile
+    y_ref[...] = jnp.dot(x_ref[...], w)                # MXU
+
+
+def quant_matmul(x, qweight, scales, zeros, bits: int, block_n: int = 128):
+    """Pallas twin of ref.quant_matmul_ref; x[M,K] @ deq(qw)[K,N] -> [M,N]."""
+    m, k = x.shape
+    k_words, n = qweight.shape
+    g = k // GROUP_SIZE
+    bn = min(block_n, n)
+    assert n % bn == 0, (n, bn)
+    kern = functools.partial(_quant_matmul_kernel, bits=bits, k=k)
+    return pl.pallas_call(
+        kern,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((m, k), lambda j: (0, 0)),
+            pl.BlockSpec((k_words, bn), lambda j: (0, j)),
+            pl.BlockSpec((g, bn), lambda j: (0, j)),
+            pl.BlockSpec((g, bn), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((m, bn), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, qweight, scales, zeros)

@@ -1,0 +1,105 @@
+"""Pure-jnp oracle implementations for every Pallas kernel.
+
+These are the correctness ground truth: pytest asserts each Pallas
+kernel (interpret=True) against its ref counterpart across shape/dtype
+sweeps (hypothesis), and the L2 model can be built entirely from refs
+(``use_kernels=False``) — the two paths must produce identical logits.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..config import GROUP_SIZE, VALS_PER_WORD
+
+
+def silu(x):
+    return x / (1.0 + jnp.exp(-x))
+
+
+def rmsnorm_ref(x, weight, eps: float = 1e-5):
+    """RMSNorm over the last dim."""
+    ms = jnp.mean(x * x, axis=-1, keepdims=True)
+    return x * (1.0 / jnp.sqrt(ms + eps)) * weight
+
+
+def attention_ref(x, wq, wk, wv, wo, n_heads: int, mask=None):
+    """Causal multi-head attention on a single sequence x[S, D].
+
+    Returns (y[S, D], A[H, S, S]) — A is the post-softmax attention map,
+    consumed by token-importance (paper Eq. 6 / Fig. 4).
+    """
+    s, d = x.shape
+    hd = d // n_heads
+    q = (x @ wq).reshape(s, n_heads, hd).transpose(1, 0, 2)
+    k = (x @ wk).reshape(s, n_heads, hd).transpose(1, 0, 2)
+    v = (x @ wv).reshape(s, n_heads, hd).transpose(1, 0, 2)
+    scores = jnp.einsum("hqd,hkd->hqk", q, k) / jnp.sqrt(float(hd))
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    if mask is not None:  # key-validity mask [S]
+        causal = causal & mask[None, :]
+    scores = jnp.where(causal[None], scores, -1e30)
+    a = jax.nn.softmax(scores, axis=-1)
+    y = jnp.einsum("hqk,hkd->hqd", a, v).transpose(1, 0, 2).reshape(s, d)
+    return y @ wo, a
+
+
+def moe_ffn_ref(x, w1, w3, w2):
+    """SwiGLU expert FFN: (silu(x@w1) * (x@w3)) @ w2."""
+    h = silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def unpack_ref(qweight, bits: int, k: int):
+    """jnp twin of packing.unpack_bits -> int32[K, N]."""
+    vpw = VALS_PER_WORD[bits]
+    mask = jnp.uint32(2**bits - 1)
+    fields = [((qweight >> jnp.uint32(i * bits)) & mask).astype(jnp.int32)
+              for i in range(vpw)]
+    full = jnp.stack(fields, axis=1).reshape(qweight.shape[0] * vpw, -1)
+    return full[:k]
+
+
+def dequant_ref(qweight, scales, zeros, bits: int, k: int):
+    """Unpack + group-wise dequantize -> f32[K, N]."""
+    q = unpack_ref(qweight, bits, k).astype(jnp.float32)
+    g = k // GROUP_SIZE
+    qg = q.reshape(g, GROUP_SIZE, -1)
+    w = (qg - zeros[:, None, :]) * scales[:, None, :]
+    return w.reshape(k, -1)
+
+
+def quant_matmul_ref(x, qweight, scales, zeros, bits: int):
+    """y = x @ dequant(qweight)  for 2/3/4-bit packed weights."""
+    k = x.shape[-1]
+    return x @ dequant_ref(qweight, scales, zeros, bits, k)
+
+
+def debinarize_ref(packed, scales, k: int):
+    """jnp twin of packing.debinarize: w = (2*btilde - 1) * s_n."""
+    fields = [((packed >> jnp.uint32(i)) & jnp.uint32(1)).astype(jnp.float32)
+              for i in range(32)]
+    b = jnp.stack(fields, axis=1).reshape(packed.shape[0] * 32, -1)[:k]
+    return (2.0 * b - 1.0) * scales[None, :]
+
+
+def binary_matmul_ref(x, packed, scales, k: int):
+    """Paper Eq. 10: s * (sum_{b=1} x_j - sum_{b=0} x_j), vectorized."""
+    return x @ debinarize_ref(packed, scales, k)
+
+
+def token_importance_ref(x, a):
+    """Paper Eq. 6:  I_j = ||t_j||_1 * mean_{i >= j} A[i, j].
+
+    x: [S, D] token hidden states; a: [H, S, S] post-softmax attention.
+    The attention-received column mean is averaged over heads.
+    """
+    s = x.shape[0]
+    amean = a.mean(axis=0)                      # [S(query), S(key)]
+    qi = jnp.arange(s)[:, None]                 # query index
+    kj = jnp.arange(s)[None, :]                 # key index
+    future = (qi >= kj).astype(amean.dtype)
+    col = (amean * future).sum(axis=0)          # sum over queries i >= j
+    denom = jnp.maximum(s - jnp.arange(s), 1).astype(amean.dtype)
+    return jnp.sum(jnp.abs(x), axis=-1) * (col / denom)

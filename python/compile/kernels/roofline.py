@@ -1,0 +1,144 @@
+"""L1 performance model: VMEM footprint + MXU utilization estimates.
+
+Pallas runs interpret=True on this CPU image, so kernel wall-clock is
+meaningless; what we *can* verify at build time is the TPU resource
+model implied by each kernel's BlockSpecs (DESIGN.md §Hardware-
+Adaptation):
+
+  * VMEM footprint per grid invocation must fit the ~16 MiB budget,
+  * MXU utilization estimate = useful MACs / (MXU-shaped tile MACs),
+    i.e. how well the tile dims align to the 128x128 systolic array,
+  * HBM traffic per kernel (the quantity PMQ compresses).
+
+`python -m compile.kernels.roofline` prints the table for a config and
+is recorded in EXPERIMENTS.md §Perf; pytest guards the VMEM budget.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from ..config import GROUP_SIZE, VALS_PER_WORD, ModelConfig
+
+VMEM_BYTES = 16 * 1024 * 1024  # per-core VMEM budget (v4/v5-class)
+MXU = 128                      # systolic array edge
+
+
+def _pad(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def mxu_utilization(m: int, k: int, n: int) -> float:
+    """Useful MACs / MACs of the MXU-padded tile."""
+    useful = m * k * n
+    padded = _pad(m, 8) * _pad(k, MXU) * _pad(n, MXU)
+    return useful / padded
+
+
+@dataclass
+class KernelEstimate:
+    name: str
+    vmem_bytes: int
+    mxu_util: float
+    hbm_bytes: int
+    flops: int
+
+    def row(self) -> list[str]:
+        return [
+            self.name,
+            f"{self.vmem_bytes / 1024:.1f} KiB",
+            f"{self.mxu_util * 100:.1f}%",
+            f"{self.hbm_bytes / 1024:.1f} KiB",
+            f"{self.flops / 1e6:.2f} MF",
+        ]
+
+
+def attention_estimate(cfg: ModelConfig, seq: int | None = None) -> KernelEstimate:
+    s = seq or cfg.max_seq
+    hd = cfg.head_dim
+    # per grid step (one head): q,k,v tiles + scores + out
+    vmem = (3 * s * hd + s * s + s * hd) * 4
+    flops = 2 * s * s * hd * 2  # QK^T and AV
+    hbm = (3 * s * hd + s * s + s * hd) * 4
+    return KernelEstimate("attention(head)", vmem,
+                          mxu_utilization(s, hd, s), hbm, flops)
+
+
+def moe_ffn_estimate(cfg: ModelConfig, block_m: int | None = None) -> KernelEstimate:
+    bm = block_m or cfg.prefill_tile
+    d, f = cfg.d_model, cfg.d_ff
+    vmem = (bm * d + 3 * d * f + bm * f + bm * d) * 4
+    flops = 2 * bm * d * f * 3
+    hbm = (bm * d + 3 * d * f + bm * d) * 4
+    return KernelEstimate(f"moe_ffn(bm={bm})", vmem,
+                          mxu_utilization(bm, d, f), hbm, flops)
+
+
+def quant_matmul_estimate(cfg: ModelConfig, bits: int,
+                          block_n: int = 128) -> KernelEstimate:
+    m, k = cfg.prefill_tile, cfg.d_model
+    n = min(block_n, cfg.d_ff)
+    vpw = VALS_PER_WORD[bits]
+    kw = -(-k // vpw)
+    g = k // GROUP_SIZE
+    # packed words + scales/zeros + x tile + dequantized w tile (scratch)
+    vmem = (kw * n + 2 * g * n + m * k + k * n + m * n) * 4
+    flops = 2 * m * k * n
+    hbm = (kw * n + 2 * g * n + m * k + m * n) * 4  # w never re-written
+    return KernelEstimate(f"quant_matmul(b={bits})", vmem,
+                          mxu_utilization(m, k, n), hbm, flops)
+
+
+def binary_matmul_estimate(cfg: ModelConfig, block_n: int = 128) -> KernelEstimate:
+    m, k = cfg.prefill_tile, cfg.d_model
+    n = min(block_n, cfg.d_ff)
+    kw = -(-k // 32)
+    vmem = (kw * n + n + m * k + k * n + m * n) * 4
+    flops = 2 * m * k * n
+    hbm = (kw * n + n + m * k + m * n) * 4
+    return KernelEstimate("binary_matmul", vmem,
+                          mxu_utilization(m, k, n), hbm, flops)
+
+
+def all_estimates(cfg: ModelConfig) -> list[KernelEstimate]:
+    return [
+        attention_estimate(cfg),
+        moe_ffn_estimate(cfg),
+        quant_matmul_estimate(cfg, 2),
+        quant_matmul_estimate(cfg, 3),
+        binary_matmul_estimate(cfg),
+    ]
+
+
+def hbm_compression_ratio(cfg: ModelConfig, bits: int) -> float:
+    """Weight-traffic ratio vs f32 for the expert matmuls (the L1-level
+    quantity the paper's memory saving comes from)."""
+    f32 = quant_matmul_estimate(cfg, 2)  # shapes only; recompute below
+    d, f = cfg.d_model, cfg.d_ff
+    dense_w = d * f * 4
+    vpw = VALS_PER_WORD[bits]
+    packed_w = (-(-d // vpw)) * f * 4 + 2 * (d // GROUP_SIZE) * f * 4
+    _ = f32
+    return packed_w / dense_w
+
+
+def main() -> None:
+    from ..config import CONFIGS
+    import sys
+
+    name = sys.argv[1] if len(sys.argv) > 1 else "tiny"
+    cfg = CONFIGS[name]()
+    print(f"L1 roofline estimates — config {cfg.name} "
+          f"(VMEM budget {VMEM_BYTES >> 20} MiB, MXU {MXU}x{MXU})")
+    print(f"{'kernel':24} {'VMEM':>12} {'MXU util':>9} {'HBM/call':>12} {'FLOPs':>10}")
+    for e in all_estimates(cfg):
+        r = e.row()
+        print(f"{r[0]:24} {r[1]:>12} {r[2]:>9} {r[3]:>12} {r[4]:>10}")
+        assert e.vmem_bytes < VMEM_BYTES, f"{e.name} exceeds VMEM budget"
+    for bits in (2, 3):
+        print(f"expert-weight HBM traffic at {bits}-bit: "
+              f"{hbm_compression_ratio(cfg, bits) * 100:.1f}% of f32")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""L1 Pallas kernel: ODP token-importance metric (paper Eq. 6).
+
+    I_j = ||t_j||_1 * mean_{i >= j} A[i, j]
+
+x[S, D] are token hidden states entering the MoE layer; A[H, S, S] is
+the post-softmax attention of the same block (averaged over heads).
+Single-invocation kernel: at serving sequence lengths the whole A-mean
+fits in VMEM; the column masked-sum and the L1 norm are VPU reductions.
+Appendix A.9's cost analysis (n² + n + mn + n log n FLOPs) applies.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _token_importance_kernel(x_ref, a_ref, i_ref):
+    x = x_ref[...]                           # [S, D]
+    a = a_ref[...]                           # [H, S, S]
+    s = x.shape[0]
+    amean = jnp.mean(a, axis=0)              # [S, S], head-averaged
+    qi = jax.lax.broadcasted_iota(jnp.int32, (s, s), 0)
+    kj = jax.lax.broadcasted_iota(jnp.int32, (s, s), 1)
+    future = (qi >= kj).astype(amean.dtype)
+    col = jnp.sum(amean * future, axis=0)    # Σ_{i>=j} A[i,j]
+    denom = jnp.maximum(s - jax.lax.iota(jnp.int32, s), 1).astype(amean.dtype)
+    l1 = jnp.sum(jnp.abs(x), axis=-1)        # ||t_j||_1
+    i_ref[...] = l1 * (col / denom)
+
+
+def token_importance(x, a):
+    """Pallas twin of ref.token_importance_ref -> I[S]."""
+    s, _ = x.shape
+    return pl.pallas_call(
+        _token_importance_kernel,
+        out_shape=jax.ShapeDtypeStruct((s,), x.dtype),
+        interpret=True,
+    )(x, a)

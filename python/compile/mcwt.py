@@ -1,0 +1,61 @@
+"""MCWT weight interchange format (rust twin: rust/src/moe/weights.rs).
+
+Layout (little-endian):
+    bytes 0..4   magic b"MCWT"
+    bytes 4..8   u32 version (1)
+    bytes 8..12  u32 header length H
+    bytes 12..12+H  JSON header: {"tensors": {name: {"dtype": "f32",
+                    "shape": [...], "offset": int, "nbytes": int}}}
+    then the raw tensor payload, 64-byte aligned per tensor.
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+MAGIC = b"MCWT"
+VERSION = 1
+ALIGN = 64
+
+
+def write(path: str, tensors: dict[str, np.ndarray]) -> None:
+    entries: dict[str, dict] = {}
+    offset = 0
+    blobs: list[tuple[int, bytes]] = []
+    for name in sorted(tensors):
+        arr = np.ascontiguousarray(tensors[name], dtype=np.float32)
+        pad = (-offset) % ALIGN
+        offset += pad
+        raw = arr.tobytes()
+        entries[name] = {"dtype": "f32", "shape": list(arr.shape),
+                         "offset": offset, "nbytes": len(raw)}
+        blobs.append((offset, raw))
+        offset += len(raw)
+    header = json.dumps({"tensors": entries}).encode()
+    with open(path, "wb") as f:
+        f.write(MAGIC)
+        f.write(np.uint32(VERSION).tobytes())
+        f.write(np.uint32(len(header)).tobytes())
+        f.write(header)
+        base = f.tell()
+        for off, raw in blobs:
+            f.seek(base + off)
+            f.write(raw)
+
+
+def read(path: str) -> dict[str, np.ndarray]:
+    with open(path, "rb") as f:
+        assert f.read(4) == MAGIC, "bad magic"
+        version = np.frombuffer(f.read(4), np.uint32)[0]
+        assert version == VERSION, version
+        hlen = int(np.frombuffer(f.read(4), np.uint32)[0])
+        header = json.loads(f.read(hlen))
+        base = f.tell()
+        out = {}
+        for name, meta in header["tensors"].items():
+            f.seek(base + meta["offset"])
+            raw = f.read(meta["nbytes"])
+            out[name] = np.frombuffer(raw, np.float32).reshape(meta["shape"]).copy()
+    return out

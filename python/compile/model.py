@@ -1,0 +1,223 @@
+"""L2: Mixtral-style MoE transformer in JAX (build-time only).
+
+Two interchangeable compute paths produce bit-identical math:
+  * ``use_kernels=True``  — calls the L1 Pallas kernels (interpret=True),
+    used for the AOT artifacts so the kernels lower into the shipped HLO.
+  * ``use_kernels=False`` — pure-jnp refs, used for fast jitted training.
+
+Parameter naming matches the MCWT tensor names consumed by
+``rust/src/moe/weights.rs`` (see DESIGN.md §3).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .kernels import ref
+from .kernels.attention import attention as attention_k
+from .kernels.moe_ffn import moe_ffn as moe_ffn_k
+from .kernels.token_importance import token_importance as token_importance_k
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def param_names(cfg: ModelConfig) -> list[str]:
+    """Canonical (sorted) tensor-name order used for flat artifact I/O."""
+    names = ["tok_emb", "pos_emb", "final_norm", "lm_head"]
+    for i in range(cfg.n_layers):
+        names += [f"layers.{i}.attn_norm", f"layers.{i}.ffn_norm",
+                  f"layers.{i}.gate"]
+        names += [f"layers.{i}.attn.{m}" for m in ("wq", "wk", "wv", "wo")]
+        for e in range(cfg.n_experts):
+            names += [f"layers.{i}.experts.{e}.{m}" for m in ("w1", "w3", "w2")]
+    return sorted(names)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict[str, jax.Array]:
+    d, f, e, v, s = cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.vocab_size, cfg.max_seq
+
+    def dense(key, shape):
+        fan_in = shape[0]
+        return jax.random.normal(key, shape, jnp.float32) * (fan_in ** -0.5)
+
+    keys = iter(jax.random.split(key, 16 + cfg.n_layers * (8 + 3 * e)))
+    p: dict[str, jax.Array] = {
+        "tok_emb": jax.random.normal(next(keys), (v, d)) * 0.02,
+        "pos_emb": jax.random.normal(next(keys), (s, d)) * 0.02,
+        "final_norm": jnp.ones((d,)),
+        "lm_head": dense(next(keys), (d, v)),
+    }
+    for i in range(cfg.n_layers):
+        p[f"layers.{i}.attn_norm"] = jnp.ones((d,))
+        p[f"layers.{i}.ffn_norm"] = jnp.ones((d,))
+        p[f"layers.{i}.gate"] = dense(next(keys), (d, e))
+        for m in ("wq", "wk", "wv", "wo"):
+            p[f"layers.{i}.attn.{m}"] = dense(next(keys), (d, d))
+        for ex in range(cfg.n_experts):
+            for m, shape in (("w1", (d, f)), ("w3", (d, f)), ("w2", (f, d))):
+                p[f"layers.{i}.experts.{ex}.{m}"] = dense(next(keys), shape)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Forward
+# ---------------------------------------------------------------------------
+
+def gate_probs(x, wg):
+    """Router: softmax(x @ Wg) -> [S, E] (paper Eq. 1's G(t))."""
+    return jax.nn.softmax(x @ wg, axis=-1)
+
+
+def manual_top_k(probs, k):
+    """argmax-based top-k, identical to jax.lax.top_k (ties -> lower
+    index) but lowering to reduce/scatter ops that the pinned
+    xla_extension 0.5.1 HLO-text parser accepts — jax >= 0.7 lowers
+    lax.top_k to a `topk(..., largest=true)` custom instruction the old
+    parser rejects (see DESIGN.md §3 interchange notes)."""
+    s = probs.shape[0]
+    vals, idxs = [], []
+    p = probs
+    for _ in range(k):
+        idx = jnp.argmax(p, axis=-1)
+        val = jnp.take_along_axis(p, idx[:, None], axis=-1)[:, 0]
+        vals.append(val)
+        idxs.append(idx)
+        p = p.at[jnp.arange(s), idx].set(-jnp.inf)
+    return jnp.stack(vals, axis=-1), jnp.stack(idxs, axis=-1)
+
+
+def moe_layer(x, layer_params, cfg: ModelConfig, use_kernels: bool):
+    """Top-k routed MoE FFN (dense-mixing formulation, exact for top-k).
+
+    Returns (y, probs[S, E]) so calibration can record routing stats.
+    """
+    probs = gate_probs(x, layer_params["gate"])
+    topv, topi = manual_top_k(probs, cfg.top_k)               # [S, k]
+    topv = topv / jnp.sum(topv, axis=-1, keepdims=True)        # renormalize
+    weights = jnp.zeros_like(probs).at[
+        jnp.arange(x.shape[0])[:, None], topi].set(topv)       # [S, E]
+    ffn = moe_ffn_k if use_kernels else ref.moe_ffn_ref
+    y = jnp.zeros_like(x)
+    for e in range(cfg.n_experts):
+        ex = layer_params["experts"][e]
+        y = y + weights[:, e:e + 1] * ffn(x, ex["w1"], ex["w3"], ex["w2"])
+    # switch-transformer balance term: E * <frac_selected, mean_prob>
+    sel_frac = jnp.mean((weights > 0).astype(jnp.float32), axis=0)   # [E]
+    balance = cfg.n_experts * jnp.dot(sel_frac, jnp.mean(probs, axis=0))
+    return y, probs, balance
+
+
+def _layer_view(p: dict[str, jax.Array], i: int, cfg: ModelConfig):
+    lp = {
+        "attn_norm": p[f"layers.{i}.attn_norm"],
+        "ffn_norm": p[f"layers.{i}.ffn_norm"],
+        "gate": p[f"layers.{i}.gate"],
+        "attn": {m: p[f"layers.{i}.attn.{m}"] for m in ("wq", "wk", "wv", "wo")},
+        "experts": [
+            {m: p[f"layers.{i}.experts.{e}.{m}"] for m in ("w1", "w3", "w2")}
+            for e in range(cfg.n_experts)
+        ],
+    }
+    return lp
+
+
+def forward_seq(params, cfg: ModelConfig, tokens, mask=None,
+                use_kernels: bool = False, collect_aux: bool = False):
+    """Single-sequence forward: tokens[S] int32 -> logits[S, V].
+
+    With collect_aux, also returns per-layer routing probs, attention
+    maps, and Eq.-6 token importances (the ODP inputs).
+    """
+    s = tokens.shape[0]
+    x = params["tok_emb"][tokens] + params["pos_emb"][:s]
+    attn = attention_k if use_kernels else ref.attention_ref
+    timp = token_importance_k if use_kernels else ref.token_importance_ref
+    aux = {"probs": [], "attn": [], "importance": []} if collect_aux else None
+    balance = 0.0
+    for i in range(cfg.n_layers):
+        lp = _layer_view(params, i, cfg)
+        h = ref.rmsnorm_ref(x, lp["attn_norm"])
+        a_out, a_map = attn(h, lp["attn"]["wq"], lp["attn"]["wk"],
+                            lp["attn"]["wv"], lp["attn"]["wo"],
+                            cfg.n_heads, mask)
+        x = x + a_out
+        h = ref.rmsnorm_ref(x, lp["ffn_norm"])
+        if collect_aux:
+            aux["attn"].append(a_map)
+            aux["importance"].append(timp(h, a_map))
+        y, probs, bal = moe_layer(h, lp, cfg, use_kernels)
+        balance = balance + bal / cfg.n_layers
+        if collect_aux:
+            aux["probs"].append(probs)
+        x = x + y
+    x = ref.rmsnorm_ref(x, params["final_norm"])
+    logits = x @ params["lm_head"]
+    if collect_aux:
+        return logits, aux
+    return logits, balance
+
+
+def forward(params, cfg: ModelConfig, tokens, use_kernels: bool = False):
+    """Batched forward: tokens[B, S] -> logits[B, S, V]."""
+    logits, _ = jax.vmap(
+        lambda t: forward_seq(params, cfg, t, use_kernels=use_kernels)
+    )(tokens)
+    return logits
+
+
+def train_forward(params, cfg: ModelConfig, tokens):
+    """Batched training forward: tokens[B, S] -> (logits[B, S, V], balance).
+
+    Mathematically identical to vmap(forward_seq) (asserted by
+    test_model.test_train_forward_matches_seq) but structured for CPU
+    XLA: attention is one [B,H,S,S] einsum and the MoE runs on the
+    flattened [B*S, D] token matrix, so every matmul is large.
+    """
+    b, s = tokens.shape
+    d, e, nh = cfg.d_model, cfg.n_experts, cfg.n_heads
+    hd = d // nh
+    x = params["tok_emb"][tokens] + params["pos_emb"][None, :s]
+    causal = jnp.tril(jnp.ones((s, s), dtype=bool))
+    balance = 0.0
+    for i in range(cfg.n_layers):
+        lp = _layer_view(params, i, cfg)
+        h = ref.rmsnorm_ref(x, lp["attn_norm"])
+        q = (h @ lp["attn"]["wq"]).reshape(b, s, nh, hd)
+        k = (h @ lp["attn"]["wk"]).reshape(b, s, nh, hd)
+        v = (h @ lp["attn"]["wv"]).reshape(b, s, nh, hd)
+        scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(hd))
+        scores = jnp.where(causal[None, None], scores, -1e30)
+        a = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(b, s, d)
+        x = x + o @ lp["attn"]["wo"]
+        h = ref.rmsnorm_ref(x, lp["ffn_norm"]).reshape(b * s, d)
+        probs = gate_probs(h, lp["gate"])                       # [BS, E]
+        topv, topi = manual_top_k(probs, cfg.top_k)
+        topv = topv / jnp.sum(topv, axis=-1, keepdims=True)
+        weights = jnp.zeros_like(probs).at[
+            jnp.arange(b * s)[:, None], topi].set(topv)
+        y = jnp.zeros_like(h)
+        for ex in range(e):
+            exp = lp["experts"][ex]
+            y = y + weights[:, ex:ex + 1] * ref.moe_ffn_ref(
+                h, exp["w1"], exp["w3"], exp["w2"])
+        sel_frac = jnp.mean((weights > 0).astype(jnp.float32), axis=0)
+        balance = balance + e * jnp.dot(
+            sel_frac, jnp.mean(probs, axis=0)) / cfg.n_layers
+        x = x + y.reshape(b, s, d)
+    x = ref.rmsnorm_ref(x, params["final_norm"])
+    return x @ params["lm_head"], balance
+
+
+def loss_fn(params, cfg: ModelConfig, x, y, aux_coef: float = 1e-2):
+    """Next-token cross-entropy + switch balance auxiliary loss."""
+    logits, balance = train_forward(params, cfg, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, y[..., None], axis=-1)[..., 0]
+    keep = (y != 0).astype(jnp.float32)
+    ce = jnp.sum(nll * keep) / jnp.maximum(jnp.sum(keep), 1.0)
+    return ce + aux_coef * jnp.mean(balance)

@@ -1,0 +1,89 @@
+"""Build-time trainer for the synthetic MoE LM (runs once via `make
+artifacts`; python is never on the request path).
+
+Hand-rolled Adam (no optax dependency in this image).  The trained
+weights freeze the "pre-trained MoE-LLM" that MC then compresses
+training-free, exactly as the paper operates on a frozen Mixtral.
+A load-balancing auxiliary loss (Shazeer-style) keeps all experts
+alive while still leaving the natural utilization imbalance that
+PMQ's significance analysis exploits (verified by Fig-3 bench).
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import datagen, mcwt
+from .config import ModelConfig
+from .model import forward, init_params, loss_fn
+
+
+def make_train_step(cfg: ModelConfig):
+    def train_loss(params, x, y):
+        return loss_fn(params, cfg, x, y)
+
+    grad_fn = jax.jit(jax.value_and_grad(train_loss))
+
+    @jax.jit
+    def adam_update(params, grads, m, v, step, lr):
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        new_p, new_m, new_v = {}, {}, {}
+        for k in params:
+            g = grads[k]
+            new_m[k] = b1 * m[k] + (1 - b1) * g
+            new_v[k] = b2 * v[k] + (1 - b2) * g * g
+            mhat = new_m[k] / (1 - b1 ** step)
+            vhat = new_v[k] / (1 - b2 ** step)
+            new_p[k] = params[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+        return new_p, new_m, new_v
+
+    return grad_fn, adam_update
+
+
+def train(cfg: ModelConfig, log_every: int = 25,
+          progress: bool = True) -> tuple[dict, list[dict]]:
+    """Train the MoE LM on the synthetic general split; returns
+    (params, loss_log)."""
+    key = jax.random.PRNGKey(cfg.seed)
+    params = init_params(cfg, key)
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(v_) for k, v_ in params.items()}
+    grad_fn, adam_update = make_train_step(cfg)
+
+    rng = np.random.default_rng(cfg.seed + 1)
+    text = datagen.TextChannel()
+    log: list[dict] = []
+    t0 = time.time()
+    step = 0
+    for x, y in datagen.batches(rng, text, cfg.train_steps,
+                                cfg.train_batch, cfg.train_seq):
+        step += 1
+        # cosine LR decay with short warmup
+        warm = min(step / 50.0, 1.0)
+        cos = 0.5 * (1 + np.cos(np.pi * step / cfg.train_steps))
+        lr = cfg.lr * warm * (0.1 + 0.9 * cos)
+        loss, grads = grad_fn(params, jnp.asarray(x), jnp.asarray(y))
+        params, m, v = adam_update(params, grads, m, v, step, lr)
+        if step % log_every == 0 or step == 1:
+            entry = {"step": step, "loss": float(loss), "lr": float(lr),
+                     "elapsed_s": round(time.time() - t0, 1)}
+            log.append(entry)
+            if progress:
+                print(f"  step {step:5d}  loss {entry['loss']:.4f}  "
+                      f"lr {lr:.2e}  {entry['elapsed_s']:7.1f}s", flush=True)
+    return params, log
+
+
+def train_and_save(cfg: ModelConfig, weights_path: str, log_path: str):
+    params, log = train(cfg)
+    mcwt.write(weights_path, {k: np.asarray(p) for k, p in params.items()})
+    with open(log_path, "w") as f:
+        json.dump({"config": cfg.name, "steps": cfg.train_steps,
+                   "final_loss": log[-1]["loss"] if log else None,
+                   "log": log}, f, indent=2)
+    return params, log

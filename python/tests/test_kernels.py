@@ -1,0 +1,190 @@
+"""L1 Pallas kernels vs pure-jnp oracle (the CORE correctness signal)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.config import GROUP_SIZE
+from compile.kernels import packing, ref
+from compile.kernels.attention import attention
+from compile.kernels.binary_matmul import binary_matmul
+from compile.kernels.moe_ffn import moe_ffn
+from compile.kernels.quant_matmul import quant_matmul
+from compile.kernels.token_importance import token_importance
+
+
+def rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,d,h", [(16, 32, 4), (64, 64, 8), (32, 48, 3)])
+def test_attention_matches_ref(s, d, h):
+    rng = np.random.default_rng(0)
+    x = rand(rng, s, d)
+    ws = [rand(rng, d, d) for _ in range(4)]
+    y_k, a_k = attention(x, *ws, n_heads=h)
+    y_r, a_r = ref.attention_ref(x, *ws, n_heads=h)
+    np.testing.assert_allclose(y_k, y_r, rtol=2e-4, atol=2e-5)
+    np.testing.assert_allclose(a_k, a_r, rtol=2e-4, atol=2e-6)
+
+
+def test_attention_rows_sum_to_one():
+    rng = np.random.default_rng(1)
+    x = rand(rng, 24, 32)
+    ws = [rand(rng, 32, 32) for _ in range(4)]
+    _, a = attention(x, *ws, n_heads=4)
+    np.testing.assert_allclose(np.asarray(a).sum(-1), 1.0, rtol=1e-5)
+
+
+def test_attention_causal():
+    """Future keys must receive zero attention."""
+    rng = np.random.default_rng(2)
+    x = rand(rng, 16, 32)
+    ws = [rand(rng, 32, 32) for _ in range(4)]
+    _, a = attention(x, *ws, n_heads=4)
+    a = np.asarray(a)
+    upper = np.triu(np.ones((16, 16), dtype=bool), k=1)
+    assert np.all(a[:, upper] == 0)
+
+
+def test_attention_key_mask():
+    """Masked-out keys get zero attention from all queries."""
+    rng = np.random.default_rng(3)
+    x = rand(rng, 16, 32)
+    ws = [rand(rng, 32, 32) for _ in range(4)]
+    mask = jnp.asarray([1] * 12 + [0] * 4, dtype=jnp.int32)
+    _, a = attention(x, *ws, n_heads=4, mask=mask)
+    assert np.all(np.asarray(a)[:, :, 12:][:, :12, :] == 0)
+
+
+# ---------------------------------------------------------------------------
+# moe_ffn
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,d,f", [(8, 32, 64), (128, 64, 128), (256, 48, 96)])
+def test_moe_ffn_matches_ref(m, d, f):
+    rng = np.random.default_rng(4)
+    x, w1, w3, w2 = rand(rng, m, d), rand(rng, d, f), rand(rng, d, f), rand(rng, f, d)
+    np.testing.assert_allclose(
+        moe_ffn(x, w1, w3, w2, block_m=min(64, m)),
+        ref.moe_ffn_ref(x, w1, w3, w2), rtol=3e-4, atol=3e-5)
+
+
+def test_moe_ffn_multi_tile_equals_single_tile():
+    rng = np.random.default_rng(5)
+    x, w1, w3, w2 = rand(rng, 128, 32), rand(rng, 32, 64), rand(rng, 32, 64), rand(rng, 64, 32)
+    np.testing.assert_allclose(
+        moe_ffn(x, w1, w3, w2, block_m=32),
+        moe_ffn(x, w1, w3, w2, block_m=128), rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# quant_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+@pytest.mark.parametrize("m,k,n", [(4, 64, 32), (16, 128, 128), (8, 192, 64)])
+def test_quant_matmul_matches_ref(bits, m, k, n):
+    rng = np.random.default_rng(6)
+    x = rand(rng, m, k)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    q, s, z = packing.quantize_groupwise(w, bits)
+    qw = jnp.asarray(packing.pack_bits(q, bits))
+    s, z = jnp.asarray(s), jnp.asarray(z)
+    y_k = quant_matmul(x, qw, s, z, bits, block_n=min(32, n))
+    y_r = ref.quant_matmul_ref(x, qw, s, z, bits)
+    np.testing.assert_allclose(y_k, y_r, rtol=2e-4, atol=2e-4)
+
+
+def test_quant_matmul_vs_dense_dequant():
+    """Kernel output == x @ (numpy-dequantized W): the end-to-end contract."""
+    rng = np.random.default_rng(7)
+    k, n, bits = 128, 64, 3
+    x = rand(rng, 8, k)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    q, s, z = packing.quantize_groupwise(w, bits)
+    wq = packing.dequantize_groupwise(q, s, z)
+    y = quant_matmul(x, jnp.asarray(packing.pack_bits(q, bits)),
+                     jnp.asarray(s), jnp.asarray(z), bits, block_n=64)
+    np.testing.assert_allclose(y, np.asarray(x) @ wq, rtol=2e-4, atol=2e-4)
+
+
+@given(st.sampled_from([2, 3, 4]), st.integers(1, 4), st.integers(1, 3),
+       st.integers(0, 10**6))
+@settings(max_examples=15, deadline=None)
+def test_quant_matmul_hypothesis(bits, kg, nt, seed):
+    k, n = kg * GROUP_SIZE, nt * 16
+    rng = np.random.default_rng(seed)
+    x = rand(rng, 3, k)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    q, s, z = packing.quantize_groupwise(w, bits)
+    qw = jnp.asarray(packing.pack_bits(q, bits))
+    y_k = quant_matmul(x, qw, jnp.asarray(s), jnp.asarray(z), bits, block_n=16)
+    y_r = ref.quant_matmul_ref(x, qw, jnp.asarray(s), jnp.asarray(z), bits)
+    np.testing.assert_allclose(y_k, y_r, rtol=3e-4, atol=3e-4)
+
+
+# ---------------------------------------------------------------------------
+# binary_matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(4, 64, 32), (16, 128, 64), (8, 96, 16)])
+def test_binary_matmul_matches_ref(m, k, n):
+    rng = np.random.default_rng(8)
+    x = rand(rng, m, k)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    packed, s = packing.binarize(w)
+    y_k = binary_matmul(x, jnp.asarray(packed), jnp.asarray(s), block_n=16)
+    y_r = ref.binary_matmul_ref(x, jnp.asarray(packed), jnp.asarray(s), k)
+    np.testing.assert_allclose(y_k, y_r, rtol=2e-4, atol=2e-4)
+
+
+def test_binary_matmul_eq10_identity():
+    """x @ ((2b-1)*s) == s*(sum_{b=1} x - sum_{b=0} x) — paper Eq. 10."""
+    rng = np.random.default_rng(9)
+    k, n = 64, 8
+    x = rng.normal(size=(2, k)).astype(np.float32)
+    w = rng.normal(size=(k, n)).astype(np.float32)
+    packed, s = packing.binarize(w)
+    btilde = (packing.debinarize(packed, np.ones(n, np.float32), k) + 1) / 2
+    manual = np.zeros((2, n), np.float32)
+    for i in range(n):
+        on = btilde[:, i] == 1
+        manual[:, i] = s[i] * (x[:, on].sum(-1) - x[:, ~on].sum(-1))
+    y = binary_matmul(jnp.asarray(x), jnp.asarray(packed), jnp.asarray(s),
+                      block_n=8)
+    np.testing.assert_allclose(y, manual, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# token_importance
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("s,d,h", [(16, 32, 2), (64, 48, 4)])
+def test_token_importance_matches_ref(s, d, h):
+    rng = np.random.default_rng(10)
+    x = rand(rng, s, d)
+    logits = rng.normal(size=(h, s, s)).astype(np.float32)
+    a = jnp.asarray(np.exp(logits) / np.exp(logits).sum(-1, keepdims=True))
+    np.testing.assert_allclose(token_importance(x, a),
+                               ref.token_importance_ref(x, a),
+                               rtol=2e-4, atol=2e-5)
+
+
+def test_token_importance_scales_with_magnitude():
+    """Doubling a token's hidden state doubles its importance (Eq. 6)."""
+    rng = np.random.default_rng(11)
+    x = np.abs(rng.normal(size=(8, 16))).astype(np.float32)
+    a = np.full((1, 8, 8), 1.0 / 8, np.float32)
+    base = np.asarray(token_importance(jnp.asarray(x), jnp.asarray(a)))
+    x2 = x.copy()
+    x2[3] *= 2
+    double = np.asarray(token_importance(jnp.asarray(x2), jnp.asarray(a)))
+    np.testing.assert_allclose(double[3], 2 * base[3], rtol=1e-5)

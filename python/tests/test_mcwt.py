@@ -1,0 +1,56 @@
+"""MCWT format roundtrip + layout guarantees."""
+
+import numpy as np
+import pytest
+
+from compile import mcwt
+
+
+def test_roundtrip(tmp_path):
+    tensors = {
+        "a": np.arange(12, dtype=np.float32).reshape(3, 4),
+        "b.c.d": np.array([1.5, -2.5], dtype=np.float32),
+        "scalar3d": np.zeros((2, 2, 2), dtype=np.float32),
+    }
+    path = str(tmp_path / "w.mcwt")
+    mcwt.write(path, tensors)
+    out = mcwt.read(path)
+    assert set(out) == set(tensors)
+    for k in tensors:
+        np.testing.assert_array_equal(out[k], tensors[k])
+        assert out[k].shape == tensors[k].shape
+
+
+def test_alignment(tmp_path):
+    """Every tensor payload starts at a 64-byte-aligned offset."""
+    import json
+    tensors = {f"t{i}": np.ones(7, dtype=np.float32) for i in range(5)}
+    path = str(tmp_path / "w.mcwt")
+    mcwt.write(path, tensors)
+    raw = open(path, "rb").read()
+    hlen = int(np.frombuffer(raw[8:12], np.uint32)[0])
+    header = json.loads(raw[12:12 + hlen])
+    for meta in header["tensors"].values():
+        assert meta["offset"] % 64 == 0
+
+
+def test_magic_and_version(tmp_path):
+    path = str(tmp_path / "w.mcwt")
+    mcwt.write(path, {"x": np.zeros(1, np.float32)})
+    raw = open(path, "rb").read()
+    assert raw[:4] == b"MCWT"
+    assert int(np.frombuffer(raw[4:8], np.uint32)[0]) == 1
+
+
+def test_rejects_bad_magic(tmp_path):
+    path = str(tmp_path / "bad.mcwt")
+    open(path, "wb").write(b"XXXX" + b"\x00" * 16)
+    with pytest.raises(AssertionError):
+        mcwt.read(path)
+
+
+def test_non_contiguous_input(tmp_path):
+    arr = np.arange(24, dtype=np.float32).reshape(4, 6)[:, ::2]
+    path = str(tmp_path / "w.mcwt")
+    mcwt.write(path, {"x": arr})
+    np.testing.assert_array_equal(mcwt.read(path)["x"], arr)

@@ -1,0 +1,109 @@
+"""L2 model tests: kernel path == ref path, training sanity, shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import datagen
+from compile.config import ModelConfig
+from compile.model import forward_seq, init_params, loss_fn, param_names
+
+
+@pytest.fixture(scope="module")
+def tiny_cfg():
+    return ModelConfig(name="test", d_model=32, n_layers=2, n_heads=2,
+                       d_ff=64, n_experts=4, max_seq=32, train_seq=16)
+
+
+@pytest.fixture(scope="module")
+def params(tiny_cfg):
+    return init_params(tiny_cfg, jax.random.PRNGKey(0))
+
+
+def test_param_names_cover_params(tiny_cfg, params):
+    assert sorted(params.keys()) == param_names(tiny_cfg)
+
+
+def test_param_count_matches(tiny_cfg, params):
+    total = sum(int(np.prod(p.shape)) for p in params.values())
+    assert total == tiny_cfg.param_count()
+
+
+def test_kernel_and_ref_paths_match(tiny_cfg, params):
+    toks = jnp.asarray(np.arange(32) % 250 + 1, dtype=jnp.int32)
+    lk, _ = forward_seq(params, tiny_cfg, toks, use_kernels=True)
+    lr, _ = forward_seq(params, tiny_cfg, toks, use_kernels=False)
+    np.testing.assert_allclose(lk, lr, rtol=5e-4, atol=5e-5)
+
+
+def test_forward_is_causal(tiny_cfg, params):
+    """Changing a future token must not change past logits."""
+    toks = np.arange(32, dtype=np.int32) % 200 + 1
+    l1, _ = forward_seq(params, tiny_cfg, jnp.asarray(toks))
+    toks2 = toks.copy()
+    toks2[20] = 99
+    l2, _ = forward_seq(params, tiny_cfg, jnp.asarray(toks2))
+    np.testing.assert_allclose(l1[:20], l2[:20], rtol=1e-5, atol=1e-6)
+    assert not np.allclose(l1[20:], l2[20:])
+
+
+def test_collect_aux_shapes(tiny_cfg, params):
+    toks = jnp.asarray(np.arange(32) % 200 + 1, dtype=jnp.int32)
+    logits, aux = forward_seq(params, tiny_cfg, toks, collect_aux=True)
+    assert logits.shape == (32, tiny_cfg.vocab_size)
+    assert len(aux["probs"]) == tiny_cfg.n_layers
+    assert aux["probs"][0].shape == (32, tiny_cfg.n_experts)
+    assert aux["attn"][0].shape == (tiny_cfg.n_heads, 32, 32)
+    assert aux["importance"][0].shape == (32,)
+    # router probs are a distribution
+    np.testing.assert_allclose(np.asarray(aux["probs"][0]).sum(-1), 1.0,
+                               rtol=1e-5)
+
+
+def test_loss_decreases_with_training(tiny_cfg):
+    """A handful of adam steps on one batch must reduce the loss."""
+    from compile.train import make_train_step
+    params = init_params(tiny_cfg, jax.random.PRNGKey(1))
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v = {k: jnp.zeros_like(p) for k, p in params.items()}
+    grad_fn, adam = make_train_step(tiny_cfg)
+    rng = np.random.default_rng(0)
+    text = datagen.TextChannel()
+    x, y = next(datagen.batches(rng, text, 1, 8, 16))
+    x, y = jnp.asarray(x), jnp.asarray(y)
+    l0, g = grad_fn(params, x, y)
+    for step in range(1, 21):
+        loss, g = grad_fn(params, x, y)
+        params, m, v = adam(params, g, m, v, step, 1e-2)
+    l1, _ = grad_fn(params, x, y)
+    assert float(l1) < float(l0) * 0.8, (float(l0), float(l1))
+
+
+def test_datagen_task_sequences_well_formed():
+    rng = np.random.default_rng(2)
+    for task in range(8):
+        for _ in range(20):
+            seq = datagen.task_sequence(rng, task)
+            assert seq[0] == 1 and seq[-1] == 2  # BOS..EOS
+            assert 3 in seq[2:-1]                # SEP present
+            assert all(0 <= t < 256 for t in seq)
+
+
+def test_text_channel_deterministic_table():
+    t1 = datagen.TextChannel()
+    t2 = datagen.TextChannel()
+    np.testing.assert_array_equal(t1.succ, t2.succ)
+    assert t1.succ.shape == (112, 12)
+    assert np.all(t1.succ < 112)
+
+
+def test_train_forward_matches_seq(tiny_cfg, params):
+    """Batched training forward == per-sequence forward (same math)."""
+    from compile.model import train_forward
+    toks = np.stack([np.arange(32) % 200 + 1,
+                     (np.arange(32) * 7) % 199 + 1]).astype(np.int32)
+    lt, _ = train_forward(params, tiny_cfg, jnp.asarray(toks))
+    for i in range(2):
+        ls, _ = forward_seq(params, tiny_cfg, jnp.asarray(toks[i]))
+        np.testing.assert_allclose(lt[i], ls, rtol=2e-3, atol=2e-4)

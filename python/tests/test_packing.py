@@ -1,0 +1,92 @@
+"""Packing spec tests: the canonical layout both languages must honor."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from compile.config import GROUP_SIZE, VALS_PER_WORD
+from compile.kernels import packing
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+@pytest.mark.parametrize("k,n", [(64, 8), (128, 16), (256, 3), (130, 5)])
+def test_pack_unpack_roundtrip(bits, k, n):
+    rng = np.random.default_rng(0)
+    q = rng.integers(0, 2**bits, size=(k, n)).astype(np.int32)
+    packed = packing.pack_bits(q, bits)
+    assert packed.dtype == np.uint32
+    vpw = VALS_PER_WORD[bits]
+    assert packed.shape == ((k + vpw - 1) // vpw, n)
+    out = packing.unpack_bits(packed, bits, k)
+    np.testing.assert_array_equal(out, q)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_three_bit_top_bits_zero(bits):
+    """3-bit packs 10 fields into 30 bits; stray high bits must be zero."""
+    rng = np.random.default_rng(1)
+    q = rng.integers(0, 2**bits, size=(40, 4)).astype(np.int32)
+    packed = packing.pack_bits(q, bits)
+    if bits == 3:
+        assert np.all(packed >> np.uint32(30) == 0)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4])
+def test_groupwise_quant_bounds(bits):
+    """Group-wise min/max quantization error <= scale/2 per element."""
+    rng = np.random.default_rng(2)
+    w = rng.normal(size=(128, 32)).astype(np.float32)
+    q, s, z = packing.quantize_groupwise(w, bits)
+    wq = packing.dequantize_groupwise(q, s, z)
+    g = 128 // GROUP_SIZE
+    err = np.abs(w - wq).reshape(g, GROUP_SIZE, 32).max(axis=1)
+    assert np.all(err <= s * 0.5 + 1e-6)
+
+
+def test_quant_extremes_hit_range():
+    rng = np.random.default_rng(3)
+    w = rng.normal(size=(64, 8)).astype(np.float32)
+    q, _, _ = packing.quantize_groupwise(w, 2)
+    assert q.min() == 0 and q.max() == 3
+
+
+@given(st.integers(1, 4), st.integers(1, 6), st.sampled_from([2, 3, 4]),
+       st.integers(0, 2**32 - 1))
+@settings(max_examples=25, deadline=None)
+def test_pack_roundtrip_hypothesis(kw, n, bits, seed):
+    k = kw * VALS_PER_WORD[bits]
+    rng = np.random.default_rng(seed)
+    q = rng.integers(0, 2**bits, size=(k, n)).astype(np.int32)
+    np.testing.assert_array_equal(
+        packing.unpack_bits(packing.pack_bits(q, bits), bits, k), q)
+
+
+def test_binarize_roundtrip_signs():
+    rng = np.random.default_rng(4)
+    w = rng.normal(size=(96, 16)).astype(np.float32)
+    packed, s = packing.binarize(w)
+    wr = packing.debinarize(packed, s, 96)
+    # reconstructed signs match original signs (w==0 -> +1)
+    np.testing.assert_array_equal(np.sign(wr), np.where(w >= 0, 1.0, -1.0))
+    # per-column scale is the column mean |w|
+    np.testing.assert_allclose(s, np.abs(w).mean(axis=0), rtol=1e-6)
+
+
+def test_binarize_scalar_scale_matches_paper():
+    """Paper Eq. 10: s = ||W||_1 / (d*m), one scalar per matrix."""
+    rng = np.random.default_rng(5)
+    w = rng.normal(size=(64, 8)).astype(np.float32)
+    _, s = packing.binarize(w, scalar_scale=True)
+    expected = np.abs(w).sum() / (64 * 8)
+    np.testing.assert_allclose(s, np.full(8, expected), rtol=1e-6)
+
+
+def test_binarize_non_multiple_of_32_rows():
+    rng = np.random.default_rng(6)
+    w = rng.normal(size=(50, 4)).astype(np.float32)
+    packed, s = packing.binarize(w)
+    assert packed.shape == (2, 4)
+    wr = packing.debinarize(packed, s, 50)
+    assert wr.shape == (50, 4)
+    np.testing.assert_array_equal(np.sign(wr), np.where(w >= 0, 1.0, -1.0))

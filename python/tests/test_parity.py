@@ -1,0 +1,37 @@
+"""Cross-language contracts: values the rust side pins must match the
+python generators (the other direction is pinned in rust unit tests)."""
+
+import numpy as np
+
+from compile.datagen import TextChannel
+from compile.kernels import packing
+
+
+def test_text_channel_fingerprints():
+    """rust/src/data/text.rs pins these exact values."""
+    t = TextChannel()
+    assert list(t.succ[0][:12]) == [75, 67, 94, 40, 74, 101, 63, 7, 77, 78, 55, 53]
+    assert [int(t.succ[i].sum()) for i in range(4)] == [784, 580, 678, 947]
+
+
+def test_lcg_first_output():
+    """rust/src/util/rng.rs pins lcg_next(0xC0FFEE)."""
+    v = (0xC0FFEE * 6364136223846793005 + 1442695040888963407) % 2**64
+    assert v == 0xF4690D0475D19025
+
+
+def test_packing_golden_vector():
+    """rust/src/quant/pack.rs pins this 2-bit packing."""
+    q = np.array([[1, 2], [3, 0], [2, 1], [0, 3]], dtype=np.int32)
+    packed = packing.pack_bits(q, 2)
+    assert packed.tolist() == [[0x2D, 0xD2]]
+
+
+def test_task_token_ranges_match_rust_constants():
+    from compile import config as c
+    # rust/src/config.rs constants
+    assert (c.PAD, c.BOS, c.EOS, c.SEP, c.QRY) == (0, 1, 2, 3, 4)
+    assert (c.TASK_BASE, c.NUM_BASE, c.SYM_BASE, c.TXT_BASE) == (5, 16, 80, 144)
+    assert (c.NUM_COUNT, c.SYM_COUNT, c.TXT_COUNT) == (64, 64, 112)
+    assert c.GROUP_SIZE == 64
+    assert c.VALS_PER_WORD == {2: 16, 3: 10, 4: 8}

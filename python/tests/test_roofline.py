@@ -1,0 +1,43 @@
+"""L1 resource-model guards: every kernel fits VMEM at every config."""
+
+import pytest
+
+from compile.config import CONFIGS
+from compile.kernels.roofline import (
+    VMEM_BYTES, all_estimates, hbm_compression_ratio, mxu_utilization,
+)
+
+
+@pytest.mark.parametrize("name", list(CONFIGS))
+def test_kernels_fit_vmem(name):
+    cfg = CONFIGS[name]()
+    for e in all_estimates(cfg):
+        assert e.vmem_bytes < VMEM_BYTES, f"{name}/{e.name}: {e.vmem_bytes}"
+
+
+def test_mxu_utilization_bounds():
+    assert mxu_utilization(128, 128, 128) == 1.0
+    assert 0.0 < mxu_utilization(1, 128, 128) < 0.2
+    # padding both dims compounds
+    assert mxu_utilization(8, 100, 100) < mxu_utilization(8, 128, 128)
+
+
+@pytest.mark.parametrize("bits,expect_max", [(2, 0.20), (3, 0.25)])
+def test_hbm_compression(bits, expect_max):
+    """Packed expert weights must cut HBM traffic to <= ~bits/16 + params."""
+    cfg = CONFIGS["tiny"]()
+    ratio = hbm_compression_ratio(cfg, bits)
+    assert ratio < expect_max, ratio
+    assert ratio > bits / 32  # can't beat information content
+
+
+def test_quant_kernels_higher_arithmetic_intensity():
+    """The fused dequant kernel reads less HBM per FLOP than dense f32
+    (the entire point of the HQQ-analogue kernel)."""
+    from compile.kernels.roofline import moe_ffn_estimate, quant_matmul_estimate
+    cfg = CONFIGS["tiny"]()
+    q = quant_matmul_estimate(cfg, 2)
+    ai_q = q.flops / q.hbm_bytes
+    dense = moe_ffn_estimate(cfg)
+    ai_d = dense.flops / dense.hbm_bytes / 3  # 3 matmuls in the ffn
+    assert ai_q > ai_d

@@ -1,0 +1,136 @@
+//! Hot-path micro-benchmarks (EXPERIMENTS.md §Perf): packed dequant
+//! matmul vs dense f32, binary matmul, decode step latency, PJRT
+//! full-forward vs native, and batcher throughput.
+//!
+//!   cargo bench --bench hotpath
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use mc_moe::config::{artifacts_dir, ModelConfig};
+use mc_moe::coordinator::{DecodeSession, Server};
+use mc_moe::moe::{MoeModel, WeightFile};
+use mc_moe::quant::{binary::binarize, linear::quantize_groupwise, qmatmul};
+use mc_moe::tensor::Mat;
+use mc_moe::util::bench::{bench_for, Table};
+use mc_moe::util::rng::Rng;
+
+fn matmul_suite() {
+    let mut t = Table::new(
+        "hotpath — matmul variants (128x256 weight, M activation rows)",
+        &["variant", "M=1 us", "M=16 us", "M=128 us", "GB read (w)"],
+    );
+    let mut rng = Rng::new(0);
+    let k = 128usize;
+    let n = 256usize;
+    let w = Mat::randn(&mut rng, k, n, 1.0);
+    let q2 = quantize_groupwise(&w, 2);
+    let q3 = quantize_groupwise(&w, 3);
+    let b1 = binarize(&w, false);
+    for (name, f, bytes) in [
+        (
+            "dense f32",
+            Box::new(|x: &Mat| x.matmul(&w)) as Box<dyn Fn(&Mat) -> Mat>,
+            (k * n * 4) as f64,
+        ),
+        (
+            "packed 2-bit",
+            Box::new(|x: &Mat| qmatmul::packed_matmul(x, &q2)),
+            (q2.qweight.len() * 4 + q2.scales.len() * 8) as f64,
+        ),
+        (
+            "packed 3-bit",
+            Box::new(|x: &Mat| qmatmul::packed_matmul(x, &q3)),
+            (q3.qweight.len() * 4 + q3.scales.len() * 8) as f64,
+        ),
+        (
+            "binary 1-bit",
+            Box::new(|x: &Mat| qmatmul::binary_matmul(x, &b1)),
+            (b1.packed.len() * 4 + b1.scales.len() * 4) as f64,
+        ),
+    ] {
+        let mut cells = vec![name.to_string()];
+        for m in [1usize, 16, 128] {
+            let mut rng = Rng::new(m as u64);
+            let x = Mat::randn(&mut rng, m, k, 1.0);
+            let r = bench_for(name, 200, || {
+                std::hint::black_box(f(&x));
+            });
+            cells.push(format!("{:.1}", r.timings.mean_ns() / 1e3));
+        }
+        cells.push(format!("{:.5}", bytes / 1e9));
+        t.row(cells);
+    }
+    t.print();
+}
+
+fn engine_suite() {
+    let dir = artifacts_dir();
+    let Ok(cfg) = ModelConfig::load(&dir.join("config.json")) else {
+        eprintln!("skipping engine suite: artifacts not built");
+        return;
+    };
+    let wf = WeightFile::load(&dir.join("weights.mcwt")).unwrap();
+    let fp = Arc::new(MoeModel::load_f32(&cfg, &wf).unwrap());
+
+    let mut t = Table::new("hotpath — engine paths", &["path", "ms/unit", "unit"]);
+
+    // full-seq native scoring
+    let toks: Vec<u32> = (0..cfg.max_seq as u32).map(|i| i % 200 + 1).collect();
+    let r = bench_for("native score", 1500, || {
+        std::hint::black_box(fp.score(&toks));
+    });
+    t.row(vec!["native full-seq score".into(),
+               format!("{:.2}", r.mean_ms()), format!("seq{}", cfg.max_seq)]);
+
+    // decode step
+    let mut sess = DecodeSession::new(fp.clone(), None);
+    sess.prefill(&toks[..64]);
+    let mut i = 0u32;
+    let r = bench_for("decode step", 1000, || {
+        if sess.remaining() == 0 {
+            sess = DecodeSession::new(fp.clone(), None);
+            sess.prefill(&toks[..64]);
+        }
+        i += 1;
+        std::hint::black_box(sess.step(i % 200 + 1));
+    });
+    t.row(vec!["decode step (KV)".into(), format!("{:.3}", r.mean_ms()),
+               "token".into()]);
+
+    // PJRT full-forward
+    if dir.join("model_fwd.hlo.txt").exists() {
+        let mut pm = mc_moe::runtime::PjrtModel::load(&dir).unwrap();
+        let r = bench_for("pjrt score", 2000, || {
+            std::hint::black_box(pm.score(&toks).unwrap());
+        });
+        t.row(vec!["PJRT model_fwd score".into(), format!("{:.2}", r.mean_ms()),
+                   format!("seq{}", cfg.max_seq)]);
+    }
+
+    // batched serving throughput
+    let t0 = Instant::now();
+    let server = Server::spawn(fp.clone(), None, 4);
+    let mut rng = Rng::new(3);
+    let rxs: Vec<_> = (0..8)
+        .map(|_| {
+            let prompt: Vec<u32> = (0..32).map(|_| rng.below(200) as u32 + 1).collect();
+            server.submit(prompt, 16)
+        })
+        .collect();
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    let tokens = server.metrics.tokens_generated
+        .load(std::sync::atomic::Ordering::Relaxed) as f64;
+    t.row(vec!["batched serving".into(),
+               format!("{:.1}", tokens / t0.elapsed().as_secs_f64()),
+               "tok/s (b=4)".into()]);
+    server.shutdown();
+    t.print();
+}
+
+fn main() {
+    matmul_suite();
+    engine_suite();
+}

@@ -1,0 +1,696 @@
+//! Regenerates every table and figure of the paper's evaluation on the
+//! synthetic-substrate MoE model (DESIGN.md §5 experiment index).
+//!
+//!   cargo bench --bench paper_tables            # full run
+//!   MC_FAST=1 cargo bench --bench paper_tables  # reduced samples
+//!   MC_ONLY=tab2,fig6 cargo bench ...           # subset
+//!
+//! Absolute numbers differ from the paper (substrate: 3.5M-param
+//! synthetic MoE vs Mixtral 8x7b); the *shapes* — method orderings,
+//! crossovers, trade-off curves — are the reproduction target and are
+//! recorded against the paper in EXPERIMENTS.md.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Instant;
+
+use mc_moe::config::{artifacts_dir, ModelConfig};
+use mc_moe::coordinator::{memmodel, DecodeOdp, Server};
+use mc_moe::data::{calibration_set, Split};
+use mc_moe::eval::{eval_cot_chain, eval_niah_grid, eval_suite, perplexity};
+use mc_moe::moe::model::{OdpPolicy, TokenMetric};
+use mc_moe::moe::{MoeModel, WeightFile};
+use mc_moe::odp;
+use mc_moe::pmq::allocate::{Allocator, PmqHyper};
+use mc_moe::pmq::zoo::QuantBackend;
+use mc_moe::pmq::{calibrate, Workbench, WorkbenchConfig};
+use mc_moe::util::bench::Table;
+
+struct Ctx {
+    wb: Workbench,
+    fast: bool,
+    /// per-layer total-bit budgets swept (n..3n-ish, paper 1.57-2.54 avg)
+    budgets: Vec<usize>,
+    eval_samples: usize,
+    ppl_seqs: usize,
+}
+
+impl Ctx {
+    fn seq_len(&self) -> usize {
+        self.wb.fp.cfg.max_seq
+    }
+
+    fn ppl_of(&self, m: &MoeModel, odp: Option<&OdpPolicy>) -> f64 {
+        perplexity(m, Split::Text, 9000, self.ppl_seqs, self.seq_len(), odp).ppl
+    }
+
+    fn label(&self, total: usize) -> String {
+        format!("{:.2}", total as f64 / self.wb.fp.cfg.n_experts as f64)
+    }
+}
+
+fn load_ctx() -> Ctx {
+    let dir = artifacts_dir();
+    let cfg = ModelConfig::load(&dir.join("config.json"))
+        .expect("run `make artifacts` first");
+    let wf = WeightFile::load(&dir.join("weights.mcwt")).unwrap();
+    let fp = MoeModel::load_f32(&cfg, &wf).unwrap();
+    let fast = std::env::var("MC_FAST").is_ok();
+    let n = cfg.n_experts;
+    eprintln!("[setup] building workbench (calibration, GPTQ zoo, probes)...");
+    let t0 = Instant::now();
+    let wb = Workbench::build(
+        fp,
+        WorkbenchConfig {
+            calib_seqs: if fast { 4 } else { 8 },
+            probe_seqs: if fast { 1 } else { 2 },
+            fast_eps: false,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    eprintln!("[setup] workbench ready in {:.1}s", t0.elapsed().as_secs_f64());
+    let budgets: Vec<usize> = if fast {
+        vec![n * 3 / 2, 2 * n, n * 5 / 2]
+    } else {
+        // n..=3n in steps of 1: avg 1.5 .. 2.5 plus extremes
+        (n * 3 / 2..=n * 5 / 2).collect()
+    };
+    Ctx {
+        wb,
+        fast,
+        budgets,
+        eval_samples: if fast { 15 } else { 40 },
+        ppl_seqs: if fast { 2 } else { 4 },
+    }
+}
+
+fn want(section: &str) -> bool {
+    match std::env::var("MC_ONLY") {
+        Ok(only) => only.split(',').any(|s| s.trim() == section),
+        Err(_) => true,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 3: expert significance heatmaps, general vs task-specific calib
+// ---------------------------------------------------------------------------
+fn fig3(ctx: &Ctx) {
+    let mut t = Table::new(
+        "Fig.3 — expert significance (general split): phi / weight / drop-Fnorm",
+        &["layer", "phi (per expert)", "weight", "dropF"],
+    );
+    for l in 0..ctx.wb.fp.cfg.n_layers {
+        let fmt = |v: &[f64]| {
+            v.iter().map(|x| format!("{x:.2}")).collect::<Vec<_>>().join(" ")
+        };
+        let fmt32 = |v: &[f32]| {
+            v.iter().map(|x| format!("{x:.2}")).collect::<Vec<_>>().join(" ")
+        };
+        t.row(vec![
+            l.to_string(),
+            fmt(&ctx.wb.sig.phi[l]),
+            fmt(&ctx.wb.sig.weight[l]),
+            fmt32(&ctx.wb.sig.drop_fnorm[l]),
+        ]);
+    }
+    t.print();
+
+    // task-specific (MATH-analogue) calibration: sparser activation
+    let arith = calibration_set(31, if ctx.fast { 2 } else { 4 },
+                                ctx.seq_len(), Split::Arith);
+    let cal_a = calibrate(&ctx.wb.fp, &arith);
+    let gini = |phi: &Vec<Vec<f64>>| -> f64 {
+        // mean over layers of max/mean expert frequency (imbalance)
+        let mut acc = 0.0;
+        for row in phi {
+            let mx = row.iter().cloned().fold(0.0, f64::max);
+            let mean: f64 = row.iter().sum::<f64>() / row.len() as f64;
+            acc += mx / mean.max(1e-9);
+        }
+        acc / phi.len() as f64
+    };
+    let g_gen = gini(&ctx.wb.sig.phi);
+    let g_arith = gini(&cal_a.phi());
+    println!(
+        "\nFig.3 bottom: activation imbalance (max/mean phi) general={g_gen:.2} \
+         arith={g_arith:.2} -> task-specific is {} concentrated (paper: sparser)",
+        if g_arith > g_gen { "MORE" } else { "not more" }
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 5 / Fig. 6: PPL vs avg bits for allocation strategies
+// ---------------------------------------------------------------------------
+fn fig5(ctx: &Ctx) {
+    let mut t = Table::new(
+        "Fig.5 — random allocation vs PMQ (PPL, lower=better)",
+        &["avg bits", "random(min..max over seeds)", "PMQ"],
+    );
+    let seeds = if ctx.fast { 3 } else { 8 };
+    for &b in &ctx.budgets {
+        let mut rand_ppl = Vec::new();
+        for s in 0..seeds {
+            let (m, _) = ctx.wb
+                .compress(Allocator::Random(s as u64 + 1), b, PmqHyper::default())
+                .unwrap();
+            rand_ppl.push(ctx.ppl_of(&m, None));
+        }
+        let (m, _) = ctx.wb.compress(Allocator::Pmq, b, PmqHyper::default()).unwrap();
+        let pmq = ctx.ppl_of(&m, None);
+        let lo = rand_ppl.iter().cloned().fold(f64::INFINITY, f64::min);
+        let hi = rand_ppl.iter().cloned().fold(0.0, f64::max);
+        t.row(vec![ctx.label(b), format!("{lo:.2}..{hi:.2}"), format!("{pmq:.2}")]);
+    }
+    t.print();
+}
+
+fn fig6(ctx: &Ctx) {
+    let mut t = Table::new(
+        "Fig.6 — allocation metric ablation (PPL, lower=better)",
+        &["avg bits", "weight", "freq", "hessian", "fnorm", "PMQ"],
+    );
+    for &b in &ctx.budgets {
+        let mut cells = vec![ctx.label(b)];
+        for strat in [
+            Allocator::Weight,
+            Allocator::Frequency,
+            Allocator::Hessian,
+            Allocator::FNorm,
+            Allocator::Pmq,
+        ] {
+            let (m, _) = ctx.wb.compress(strat, b, PmqHyper::default()).unwrap();
+            cells.push(format!("{:.2}", ctx.ppl_of(&m, None)));
+        }
+        t.row(cells);
+    }
+    t.print();
+}
+
+// ---------------------------------------------------------------------------
+// Tab. 2 / Tab. 5: zero-shot benchmark suite across methods/budgets
+// ---------------------------------------------------------------------------
+fn tab2(ctx: &Ctx) {
+    let fp_suite = eval_suite(&ctx.wb.fp, ctx.eval_samples, 0, 4242, None);
+    let mut t = Table::new(
+        "Tab.2 — zero-shot suite (accuracy %, 4-way MC; chance=25)",
+        &["method", "bits", "copy", "rev", "sort", "arith", "recall",
+          "major", "count", "induc", "Avg"],
+    );
+    let mut row = |name: &str, bits: String, r: &mc_moe::eval::SuiteReport| {
+        let mut cells = vec![name.to_string(), bits];
+        for (_, _, acc) in &r.rows {
+            cells.push(format!("{:.1}", acc * 100.0));
+        }
+        cells.push(format!("{:.2}", r.average * 100.0));
+        t.row(cells);
+    };
+    row("FP32", "32".into(), &fp_suite);
+    let n = ctx.wb.fp.cfg.n_experts;
+    for bits in [3usize, 2] {
+        let m = ctx.wb.compress_uniform(bits).unwrap();
+        let r = eval_suite(&m, ctx.eval_samples, 0, 4242, None);
+        row("Uni", format!("{bits}.00"), &r);
+    }
+    let budgets = if ctx.fast {
+        vec![2 * n, n * 5 / 2]
+    } else {
+        vec![n * 3 / 2, 7 * n / 4, 2 * n, 9 * n / 4, n * 5 / 2]
+    };
+    for strat in [Allocator::Bsp, Allocator::Hessian, Allocator::Pmq] {
+        for &b in &budgets {
+            let (m, alloc) = ctx.wb.compress(strat, b, PmqHyper::default()).unwrap();
+            let r = eval_suite(&m, ctx.eval_samples, 0, 4242, None);
+            row(&format!("{strat:?}").split('(').next().unwrap().to_string(),
+                format!("{:.2}", alloc.avg_bits()), &r);
+        }
+    }
+    t.print();
+}
+
+// ---------------------------------------------------------------------------
+// Tab. 3 / Tab. 6: few-shot (MMLU-analogue = induction task, 5-shot)
+// ---------------------------------------------------------------------------
+fn tab3(ctx: &Ctx) {
+    let mut t = Table::new(
+        "Tab.3 — few-shot (induction 5-shot accuracy %)",
+        &["method", "bits", "acc"],
+    );
+    let n = ctx.wb.fp.cfg.n_experts;
+    let samples = ctx.eval_samples;
+    let (fp_acc, _) = mc_moe::eval::eval_task(&ctx.wb.fp, 7, samples, 5, 77, None);
+    t.row(vec!["FP32".into(), "32".into(), format!("{:.1}", fp_acc * 100.0)]);
+    let m = ctx.wb.compress_uniform(2).unwrap();
+    let (acc, _) = mc_moe::eval::eval_task(&m, 7, samples, 5, 77, None);
+    t.row(vec!["Uni".into(), "2.00".into(), format!("{:.1}", acc * 100.0)]);
+    for strat in [Allocator::Bsp, Allocator::Hessian, Allocator::Pmq] {
+        for &b in &[n * 3 / 2, 2 * n, n * 5 / 2] {
+            let (m, alloc) = ctx.wb.compress(strat, b, PmqHyper::default()).unwrap();
+            let (acc, _) = mc_moe::eval::eval_task(&m, 7, samples, 5, 77, None);
+            t.row(vec![format!("{strat:?}"), format!("{:.2}", alloc.avg_bits()),
+                       format!("{:.1}", acc * 100.0)]);
+        }
+    }
+    t.print();
+}
+
+// ---------------------------------------------------------------------------
+// Tab. 7: PPL across methods/budgets (WikiText2 analogue)
+// ---------------------------------------------------------------------------
+fn tab7(ctx: &Ctx) {
+    let mut t = Table::new(
+        "Tab.7 — text-split PPL (lower=better)",
+        &["method", "bits", "PPL"],
+    );
+    t.row(vec!["FP32".into(), "32".into(),
+               format!("{:.2}", ctx.ppl_of(&ctx.wb.fp, None))]);
+    let m = ctx.wb.compress_uniform(2).unwrap();
+    t.row(vec!["Uni".into(), "2.00".into(), format!("{:.2}", ctx.ppl_of(&m, None))]);
+    for strat in [Allocator::Bsp, Allocator::Hessian, Allocator::Pmq] {
+        for &b in &ctx.budgets {
+            let (m, alloc) = ctx.wb.compress(strat, b, PmqHyper::default()).unwrap();
+            t.row(vec![format!("{strat:?}"), format!("{:.2}", alloc.avg_bits()),
+                       format!("{:.2}", ctx.ppl_of(&m, None))]);
+        }
+    }
+    t.print();
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 7 / Fig. 8: token protection and token-drop sweeps on the
+// 2.0-avg-bit PMQ model
+// ---------------------------------------------------------------------------
+fn odp_ppl(ctx: &Ctx, m: &MoeModel, odp: Option<&OdpPolicy>)
+    -> mc_moe::eval::PplReport {
+    // general split: task answers make pruning damage visible
+    perplexity(m, Split::General, 9000, ctx.ppl_seqs, ctx.seq_len(), odp)
+}
+
+fn fig7_fig8(ctx: &Ctx) {
+    let n = ctx.wb.fp.cfg.n_experts;
+    let (m, _) = ctx.wb.compress(Allocator::Pmq, 2 * n, PmqHyper::default()).unwrap();
+    let mu = ctx.wb.cal.mu_median();
+
+    let mut t = Table::new(
+        "Fig.7 — protected-token ratio sweep (2.0-bit PMQ model)",
+        &["protect %", "PPL", "CR %"],
+    );
+    // star row: weight-only pruning
+    let wo = OdpPolicy::WeightOnly { mu: mu.clone() };
+    let r = odp_ppl(ctx, &m, Some(&wo));
+    t.row(vec!["weight-only".into(), format!("{:.2}", r.ppl),
+               format!("{:.1}", r.stats.compression_ratio() * 100.0)]);
+    for prot in [0.0f32, 0.02, 0.04, 0.08, 0.12, 0.16] {
+        let p = OdpPolicy::Protected { mu: mu.clone(), protect_ratio: prot };
+        let r = odp_ppl(ctx, &m, Some(&p));
+        t.row(vec![format!("{:.0}", prot * 100.0), format!("{:.2}", r.ppl),
+                   format!("{:.1}", r.stats.compression_ratio() * 100.0)]);
+    }
+    t.print();
+
+    let mut t = Table::new(
+        "Fig.8 — drop ALL experts of least-significant tokens",
+        &["drop %", "PPL", "CR %"],
+    );
+    for drop in [0.0f32, 0.02, 0.04, 0.08, 0.12, 0.16] {
+        let p = OdpPolicy::ProtectedDropAll {
+            mu: mu.clone(),
+            protect_ratio: 0.02,
+            drop_ratio: drop,
+        };
+        let r = odp_ppl(ctx, &m, Some(&p));
+        t.row(vec![format!("{:.0}", drop * 100.0), format!("{:.2}", r.ppl),
+                   format!("{:.1}", r.stats.compression_ratio() * 100.0)]);
+    }
+    t.print();
+}
+
+// ---------------------------------------------------------------------------
+// Tab. 4: PMQ/ODP ablation — accuracy, memory, activated params, speedup
+// ---------------------------------------------------------------------------
+fn tab4(ctx: &Ctx) {
+    let mut t = Table::new(
+        "Tab.4 — PMQ x ODP ablation",
+        &["config", "bits", "LM-Eval %", "Params GB", "ActParams MB/tok",
+          "CR %", "decode tok/s", "speedup"],
+    );
+    let n = ctx.wb.fp.cfg.n_experts;
+    let samples = ctx.eval_samples;
+    // measured decode throughput via the KV-cache path
+    let measure_tps = |m: &MoeModel, odp: Option<DecodeOdp>| -> f64 {
+        let model = Arc::new(m.clone());
+        let mut sess = mc_moe::coordinator::DecodeSession::new(model, odp);
+        let t0 = Instant::now();
+        let steps = if ctx.fast { 48 } else { 128 };
+        for i in 0..steps {
+            sess.step((i % 200 + 1) as u32);
+        }
+        steps as f64 / t0.elapsed().as_secs_f64()
+    };
+    let fp_tps = measure_tps(&ctx.wb.fp, None);
+    let mut push = |name: &str, m: &MoeModel, odp: Option<&OdpPolicy>,
+                    decode_odp: Option<DecodeOdp>, avg_bits: f64| {
+        let r = eval_suite(m, samples, 0, 4242, odp);
+        let keep = 1.0 - r.stats.compression_ratio();
+        let tps = measure_tps(m, decode_odp);
+        t.row(vec![
+            name.into(),
+            format!("{avg_bits:.2}"),
+            format!("{:.2}", r.average * 100.0),
+            format!("{:.4}", memmodel::gb(memmodel::loading_bytes(m))),
+            format!("{:.3}",
+                    memmodel::activated_bytes_per_token(m, keep) / (1 << 20) as f64),
+            format!("{:.1}", r.stats.compression_ratio() * 100.0),
+            format!("{tps:.1}"),
+            format!("{:.2}x", tps / fp_tps),
+        ]);
+    };
+    push("FP32", &ctx.wb.fp, None, None, 32.0);
+    let uni = ctx.wb.compress_uniform(2).unwrap();
+    push("Uni-2bit", &uni, None, None, 2.0);
+    let mu = ctx.wb.cal.mu_median();
+    for &b in &[2 * n, n * 5 / 2] {
+        let (m, alloc) = ctx.wb.compress(Allocator::Pmq, b, PmqHyper::default()).unwrap();
+        push("PMQ", &m, None, None, alloc.avg_bits());
+        let policy = odp::odp(&ctx.wb.cal, 0.02);
+        let d = DecodeOdp { mu: mu.clone(), l1_threshold: None };
+        push("PMQ+ODP", &m, Some(&policy), Some(d), alloc.avg_bits());
+    }
+    t.print();
+}
+
+// ---------------------------------------------------------------------------
+// Tab. 8: quantizer backend swap (GPTQ vs LWC/OmniQuant-style vs RTN)
+// ---------------------------------------------------------------------------
+fn tab8(ctx: &Ctx) {
+    let mut t = Table::new(
+        "Tab.8 — PMQ with different quantization backends",
+        &["backend", "bits", "LM-Eval %", "PPL"],
+    );
+    let n = ctx.wb.fp.cfg.n_experts;
+    for backend in [QuantBackend::Gptq, QuantBackend::Lwc, QuantBackend::Rtn] {
+        let wb = Workbench::build(
+            ctx.wb.fp.clone(),
+            WorkbenchConfig {
+                calib_seqs: if ctx.fast { 4 } else { 8 },
+                probe_seqs: 1,
+                fast_eps: true, // recon-proxy keeps backend comparison cheap
+                backend,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for &b in &[2 * n, n * 5 / 2] {
+            let (m, alloc) = wb.compress(Allocator::Pmq, b, PmqHyper::default()).unwrap();
+            let r = eval_suite(&m, ctx.eval_samples, 0, 4242, None);
+            t.row(vec![format!("{backend:?}"), format!("{:.2}", alloc.avg_bits()),
+                       format!("{:.2}", r.average * 100.0),
+                       format!("{:.2}", ctx.ppl_of(&m, None))]);
+        }
+    }
+    t.print();
+}
+
+// ---------------------------------------------------------------------------
+// Tab. 9: challenging benchmarks (CoT chains + NIAH)
+// ---------------------------------------------------------------------------
+fn tab9(ctx: &Ctx) {
+    let mut t = Table::new(
+        "Tab.9 — challenging tasks",
+        &["method", "bits", "CoT-x3 %", "NIAH %"],
+    );
+    let n = ctx.wb.fp.cfg.n_experts;
+    let chains = if ctx.fast { 15 } else { 40 };
+    let niah_n = if ctx.fast { 8 } else { 20 };
+    let niah_avg = |m: &MoeModel, odp: Option<&OdpPolicy>| -> f64 {
+        let g = eval_niah_grid(m, &[96, 192], &[0.25, 0.75], niah_n, 4242, odp);
+        g.iter().flatten().sum::<f64>() / 4.0
+    };
+    let mut push = |name: &str, bits: String, m: &MoeModel, odp: Option<&OdpPolicy>| {
+        t.row(vec![name.into(), bits,
+                   format!("{:.1}", eval_cot_chain(m, 3, chains, 4242, odp) * 100.0),
+                   format!("{:.1}", niah_avg(m, odp) * 100.0)]);
+    };
+    push("FP32", "32".into(), &ctx.wb.fp, None);
+    let uni = ctx.wb.compress_uniform(2).unwrap();
+    push("Uni", "2.00".into(), &uni, None);
+    for strat in [Allocator::Bsp, Allocator::Hessian, Allocator::Pmq] {
+        let (m, alloc) = ctx.wb.compress(strat, n * 5 / 2, PmqHyper::default()).unwrap();
+        push(&format!("{strat:?}"), format!("{:.2}", alloc.avg_bits()), &m, None);
+    }
+    let (m, alloc) = ctx.wb.compress(Allocator::Pmq, n * 5 / 2, PmqHyper::default()).unwrap();
+    let policy = odp::odp(&ctx.wb.cal, 0.02);
+    push("PMQ+ODP", format!("{:.2}", alloc.avg_bits()), &m, Some(&policy));
+    t.print();
+}
+
+// ---------------------------------------------------------------------------
+// Tab. 10: alpha/beta hyper-parameter ablation (gamma=2)
+// ---------------------------------------------------------------------------
+fn tab10(ctx: &Ctx) {
+    let mut t = Table::new(
+        "Tab.10 — Eq.4 alpha/beta ablation (PPL at 2.0 avg bits, gamma=2)",
+        &["alpha", "beta=1", "beta=1.5", "beta=2"],
+    );
+    let n = ctx.wb.fp.cfg.n_experts;
+    for alpha in [1.0, 1.5, 2.0] {
+        let mut cells = vec![format!("{alpha}")];
+        for beta in [1.0, 1.5, 2.0] {
+            let hyper = PmqHyper { alpha, beta, gamma: 2.0 };
+            let (m, _) = ctx.wb.compress(Allocator::Pmq, 2 * n, hyper).unwrap();
+            cells.push(format!("{:.2}", ctx.ppl_of(&m, None)));
+        }
+        t.row(cells);
+    }
+    t.print();
+}
+
+// ---------------------------------------------------------------------------
+// Tab. 11: token-dependent pruning metric comparison
+// ---------------------------------------------------------------------------
+fn tab11(ctx: &Ctx) {
+    let n = ctx.wb.fp.cfg.n_experts;
+    let (m, _) = ctx.wb.compress(Allocator::Pmq, 2 * n, PmqHyper::default()).unwrap();
+    let mut t = Table::new(
+        "Tab.11 — token-dependent pruning metrics (2.0-bit PMQ model)",
+        &["method", "CR %", "PPL", "LM-Eval %"],
+    );
+    let mut push = |name: &str, policy: &OdpPolicy| {
+        let r = odp_ppl(ctx, &m, Some(policy));
+        let s = eval_suite(&m, ctx.eval_samples, 0, 4242, Some(policy));
+        t.row(vec![name.into(),
+                   format!("{:.1}", r.stats.compression_ratio() * 100.0),
+                   format!("{:.2}", r.ppl),
+                   format!("{:.2}", s.average * 100.0)]);
+    };
+    push("kurtosis", &odp::token_metric(TokenMetric::Kurtosis, 0.3));
+    push("variance", &odp::token_metric(TokenMetric::Variance, 0.3));
+    push("mean|t|", &odp::token_metric(TokenMetric::MeanAbs, 0.3));
+    push("ODP", &odp::odp(&ctx.wb.cal, 0.02));
+    t.print();
+}
+
+// ---------------------------------------------------------------------------
+// Tab. 12: pruning threshold ablation
+// ---------------------------------------------------------------------------
+fn tab12(ctx: &Ctx) {
+    let n = ctx.wb.fp.cfg.n_experts;
+    let (m, _) = ctx.wb.compress(Allocator::Pmq, 2 * n, PmqHyper::default()).unwrap();
+    let mut t = Table::new(
+        "Tab.12 — threshold mu ablation",
+        &["mu", "PPL", "pruned %"],
+    );
+    let nl = ctx.wb.fp.cfg.n_layers;
+    for mu in [0.4f32, 0.5, 0.6, 0.7] {
+        let p = odp::manual_threshold(nl, mu, None);
+        let r = odp_ppl(ctx, &m, Some(&p));
+        t.row(vec![format!("{mu}"), format!("{:.2}", r.ppl),
+                   format!("{:.1}", r.stats.compression_ratio() * 100.0)]);
+    }
+    let median = odp::weight_only(&ctx.wb.cal);
+    let r = odp_ppl(ctx, &m, Some(&median));
+    t.row(vec!["median".into(), format!("{:.2}", r.ppl),
+               format!("{:.1}", r.stats.compression_ratio() * 100.0)]);
+    let full = odp::odp(&ctx.wb.cal, 0.02);
+    let r = odp_ppl(ctx, &m, Some(&full));
+    t.row(vec!["ODP(median+prot)".into(), format!("{:.2}", r.ppl),
+               format!("{:.1}", r.stats.compression_ratio() * 100.0)]);
+    t.print();
+}
+
+// ---------------------------------------------------------------------------
+// Tab. 13: end-to-end latency grid (measured, native engine)
+// ---------------------------------------------------------------------------
+fn tab13(ctx: &Ctx) {
+    let n = ctx.wb.fp.cfg.n_experts;
+    let (mc, _) = ctx.wb.compress(Allocator::Pmq, n * 5 / 2, PmqHyper::default()).unwrap();
+    let mu = ctx.wb.cal.mu_median();
+    let mut t = Table::new(
+        "Tab.13 — per-token decode latency (s), FP32 vs MC, [batch, prefill]",
+        &["config", "[1,64]", "[1,128]", "[2,128]", "[4,128]"],
+    );
+    let cases = [(1usize, 64usize), (1, 128), (2, 128), (4, 128)];
+    let mut measure = |name: &str, model: &MoeModel, odp: Option<DecodeOdp>| {
+        let model = Arc::new(model.clone());
+        let mut cells = vec![name.to_string()];
+        for &(batch, prefill) in &cases {
+            let server = Server::spawn(model.clone(), odp.clone(), batch);
+            let decode = if ctx.fast { 16 } else { 32 };
+            let mut rng = mc_moe::util::rng::Rng::new(7);
+            let t0 = Instant::now();
+            let rxs: Vec<_> = (0..batch)
+                .map(|_| {
+                    let prompt: Vec<u32> =
+                        (0..prefill).map(|_| rng.below(200) as u32 + 1).collect();
+                    server.submit(prompt, decode)
+                })
+                .collect();
+            for rx in rxs {
+                let _ = rx.recv();
+            }
+            let total_tokens = server
+                .metrics
+                .tokens_generated
+                .load(Ordering::Relaxed) as f64;
+            cells.push(format!("{:.4}", t0.elapsed().as_secs_f64() / total_tokens));
+            server.shutdown();
+        }
+        t.row(cells);
+    };
+    measure("FP32", &ctx.wb.fp, None);
+    measure("MC-2.5bit", &mc, None);
+    measure("MC+ODP", &mc, Some(DecodeOdp { mu, l1_threshold: None }));
+    t.print();
+}
+
+// ---------------------------------------------------------------------------
+// Tab. 14: platform comparison (memory model + bandwidth estimates)
+// ---------------------------------------------------------------------------
+fn tab14(ctx: &Ctx) {
+    let n = ctx.wb.fp.cfg.n_experts;
+    let (mc, _) = ctx.wb.compress(Allocator::Pmq, n * 5 / 2, PmqHyper::default()).unwrap();
+    let mut t = Table::new(
+        "Tab.14 — platform feasibility (memory model, Mixtral-8x7b-scale extrapolation)",
+        &["model", "platform", "load GB", "peak GB", "fits",
+          "est tok/s (bw-bound)"],
+    );
+    // extrapolate our measured compression ratio to Mixtral-8x7b sizes
+    let ratio = memmodel::loading_bytes(&mc) as f64
+        / memmodel::loading_bytes(&ctx.wb.fp) as f64;
+    let mixtral_fp32_gb = 96.8; // paper Tab. 14 loading memory
+    for (name, gb) in [("Mixtral-8x7b FP16", mixtral_fp32_gb),
+                       ("Mixtral-8x7b MC", mixtral_fp32_gb * ratio)] {
+        for p in &memmodel::PLATFORMS[..2] {
+            let fits = gb * 1.25 < p.mem_bytes as f64 / (1u64 << 30) as f64;
+            // bandwidth-bound: activated share ~ 27% of total for 8x7b
+            let act_gb = gb * 0.27;
+            let tps = p.bw_bytes_per_s / (act_gb * (1u64 << 30) as f64);
+            t.row(vec![name.into(), p.name.into(), format!("{gb:.1}"),
+                       format!("{:.1}", gb * 1.25),
+                       if fits { "yes".into() } else { "OOM".into() },
+                       if fits { format!("{tps:.0}") } else { "-".into() }]);
+        }
+    }
+    println!("(measured compression ratio on this substrate: {:.1}% of FP32)",
+             ratio * 100.0);
+    t.print();
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 9: NIAH heatmap; Fig. 10: allocation visualization; Fig. 1 frontier
+// ---------------------------------------------------------------------------
+fn fig9(ctx: &Ctx) {
+    let n = ctx.wb.fp.cfg.n_experts;
+    let (m, _) = ctx.wb.compress(Allocator::Pmq, n * 5 / 2, PmqHyper::default()).unwrap();
+    let lengths = [64usize, 128, 192, 256];
+    let depths = [0.1, 0.3, 0.5, 0.7, 0.9];
+    let samples = if ctx.fast { 6 } else { 15 };
+    for (name, model) in [("FP32", &ctx.wb.fp), ("PMQ-2.5bit", &m)] {
+        let g = eval_niah_grid(model, &lengths, &depths, samples, 4242, None);
+        println!("\nFig.9 — NIAH retrieval accuracy, {name} (rows=ctx len, cols=depth)");
+        print!("{:>6}", "len");
+        for d in depths {
+            print!("{d:>6.1}");
+        }
+        println!();
+        for (i, row) in g.iter().enumerate() {
+            print!("{:>6}", lengths[i]);
+            for v in row {
+                print!("{:>6.2}", v);
+            }
+            println!();
+        }
+    }
+}
+
+fn fig10(ctx: &Ctx) {
+    println!("\nFig.10 — PMQ bit allocation across budgets (rows=layer, cols=expert)");
+    let n = ctx.wb.fp.cfg.n_experts;
+    for &b in &[3 * n / 2, 2 * n, 5 * n / 2] {
+        let (_, alloc) = ctx.wb.compress(Allocator::Pmq, b, PmqHyper::default()).unwrap();
+        println!("avg {:.2} bits:", alloc.avg_bits());
+        for row in &alloc.bits {
+            let s: String = row.iter().map(|b| b.to_string()).collect();
+            println!("  {s}");
+        }
+    }
+}
+
+fn fig1(ctx: &Ctx) {
+    let mut t = Table::new(
+        "Fig.1 — accuracy vs activated-parameter frontier",
+        &["model", "act MB/tok", "LM-Eval %"],
+    );
+    let n = ctx.wb.fp.cfg.n_experts;
+    let samples = ctx.eval_samples;
+    let fp = eval_suite(&ctx.wb.fp, samples, 0, 4242, None);
+    t.row(vec!["FP32 MoE".into(),
+               format!("{:.3}", memmodel::activated_bytes_per_token(&ctx.wb.fp, 1.0)
+                       / (1 << 20) as f64),
+               format!("{:.2}", fp.average * 100.0)]);
+    for &b in &[3 * n / 2, 2 * n, 5 * n / 2] {
+        let (m, alloc) = ctx.wb.compress(Allocator::Pmq, b, PmqHyper::default()).unwrap();
+        let policy = odp::odp(&ctx.wb.cal, 0.02);
+        let r = eval_suite(&m, samples, 0, 4242, Some(&policy));
+        let keep = 1.0 - r.stats.compression_ratio();
+        t.row(vec![format!("MC {:.2}b+ODP", alloc.avg_bits()),
+                   format!("{:.3}",
+                           memmodel::activated_bytes_per_token(&m, keep)
+                           / (1 << 20) as f64),
+                   format!("{:.2}", r.average * 100.0)]);
+    }
+    t.print();
+}
+
+fn main() {
+    let t0 = Instant::now();
+    let ctx = load_ctx();
+    let sections: Vec<(&str, fn(&Ctx))> = vec![
+        ("fig3", fig3),
+        ("fig5", fig5),
+        ("fig6", fig6),
+        ("tab2", tab2),
+        ("tab3", tab3),
+        ("tab7", tab7),
+        ("fig7", fig7_fig8),
+        ("tab4", tab4),
+        ("tab8", tab8),
+        ("tab9", tab9),
+        ("tab10", tab10),
+        ("tab11", tab11),
+        ("tab12", tab12),
+        ("tab13", tab13),
+        ("tab14", tab14),
+        ("fig9", fig9),
+        ("fig10", fig10),
+        ("fig1", fig1),
+    ];
+    for (name, f) in sections {
+        if want(name) {
+            let t = Instant::now();
+            f(&ctx);
+            eprintln!("[{name}] {:.1}s", t.elapsed().as_secs_f64());
+        }
+    }
+    eprintln!("\n[paper_tables] total {:.1}s", t0.elapsed().as_secs_f64());
+}

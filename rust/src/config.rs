@@ -1,0 +1,171 @@
+//! Model / tokenizer / packing configuration (rust twin of
+//! `python/compile/config.py`; loaded from `artifacts/config.json`).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+// --- tokenizer spec ---------------------------------------------------------
+pub const VOCAB_SIZE: usize = 256;
+pub const PAD: u32 = 0;
+pub const BOS: u32 = 1;
+pub const EOS: u32 = 2;
+pub const SEP: u32 = 3;
+pub const QRY: u32 = 4;
+pub const TASK_BASE: u32 = 5;
+pub const NUM_BASE: u32 = 16;
+pub const NUM_COUNT: u32 = 64;
+pub const SYM_BASE: u32 = 80;
+pub const SYM_COUNT: u32 = 64;
+pub const TXT_BASE: u32 = 144;
+pub const TXT_COUNT: u32 = 112;
+
+pub const TASK_NAMES: [&str; 8] = [
+    "copy", "reverse", "sortsym", "modadd", "recall", "majority",
+    "counting", "induction",
+];
+
+/// LM-Eval-analogue display names (which paper benchmark each task
+/// substitutes for; see DESIGN.md §2).
+pub const TASK_ANALOGUE: [&str; 8] = [
+    "PIQA", "ARC-e", "ARC-c", "MathQA", "BoolQ", "HellaS.", "Wino.", "MMLU",
+];
+
+// --- packing spec ------------------------------------------------------------
+pub const GROUP_SIZE: usize = 64;
+
+pub fn vals_per_word(bits: usize) -> usize {
+    match bits {
+        2 => 16,
+        3 => 10,
+        4 => 8,
+        _ => panic!("unsupported bit-width {bits}"),
+    }
+}
+
+// --- model config ------------------------------------------------------------
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub vocab_size: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub max_seq: usize,
+    pub prefill_tile: usize,
+}
+
+impl ModelConfig {
+    pub fn head_dim(&self) -> usize {
+        assert_eq!(self.d_model % self.n_heads, 0);
+        self.d_model / self.n_heads
+    }
+
+    pub fn from_json(json: &Json) -> Result<ModelConfig> {
+        Ok(ModelConfig {
+            name: json.get("name")?.as_str()?.to_string(),
+            vocab_size: json.get("vocab_size")?.as_usize()?,
+            d_model: json.get("d_model")?.as_usize()?,
+            n_layers: json.get("n_layers")?.as_usize()?,
+            n_heads: json.get("n_heads")?.as_usize()?,
+            d_ff: json.get("d_ff")?.as_usize()?,
+            n_experts: json.get("n_experts")?.as_usize()?,
+            top_k: json.get("top_k")?.as_usize()?,
+            max_seq: json.get("max_seq")?.as_usize()?,
+            prefill_tile: json.get("prefill_tile")?.as_usize()?,
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<ModelConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+
+    /// Test-scale config mirroring python's test fixture.
+    pub fn test_tiny() -> ModelConfig {
+        ModelConfig {
+            name: "test".into(),
+            vocab_size: VOCAB_SIZE,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 64,
+            n_experts: 4,
+            top_k: 2,
+            max_seq: 64,
+            prefill_tile: 32,
+        }
+    }
+
+    /// Total parameter count (must equal python's param_count()).
+    pub fn param_count(&self) -> usize {
+        let (d, f, e, v, s) =
+            (self.d_model, self.d_ff, self.n_experts, self.vocab_size, self.max_seq);
+        let emb = v * d + s * d;
+        let per_layer = 4 * d * d + 2 * d + d * e + e * 3 * d * f;
+        emb + self.n_layers * per_layer + d + d * v
+    }
+
+    pub fn expert_param_count(&self) -> usize {
+        self.n_layers * self.n_experts * 3 * self.d_model * self.d_ff
+    }
+
+    /// Parameters outside the experts (attention, norms, gate, embeddings).
+    pub fn non_expert_param_count(&self) -> usize {
+        self.param_count() - self.expert_param_count()
+    }
+}
+
+/// Default artifacts directory (overridable via MC_MOE_ARTIFACTS).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("MC_MOE_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_config_json() {
+        let text = r#"{
+            "name": "tiny", "vocab_size": 256, "d_model": 128,
+            "n_layers": 4, "n_heads": 4, "d_ff": 256, "n_experts": 8,
+            "top_k": 2, "max_seq": 256, "prefill_tile": 128,
+            "train_steps": 600, "train_batch": 16, "train_seq": 128,
+            "lr": 0.003, "seed": 0
+        }"#;
+        let cfg = ModelConfig::from_json(&Json::parse(text).unwrap()).unwrap();
+        assert_eq!(cfg.d_model, 128);
+        assert_eq!(cfg.head_dim(), 32);
+        // matches python: config.tiny().param_count()
+        assert_eq!(cfg.param_count(), 3_511_424);
+    }
+
+    #[test]
+    fn param_count_formula() {
+        let cfg = ModelConfig::test_tiny();
+        // emb: 256*32 + 64*32; per layer: 4*32*32+2*32+32*4+4*3*32*64;
+        // head: 32 + 32*256
+        let expected = (256 * 32 + 64 * 32)
+            + 2 * (4 * 32 * 32 + 2 * 32 + 32 * 4 + 4 * 3 * 32 * 64)
+            + 32
+            + 32 * 256;
+        assert_eq!(cfg.param_count(), expected);
+        assert_eq!(cfg.expert_param_count(), 2 * 4 * 3 * 32 * 64);
+    }
+
+    #[test]
+    fn vals_per_word_spec() {
+        assert_eq!(vals_per_word(2), 16);
+        assert_eq!(vals_per_word(3), 10);
+        assert_eq!(vals_per_word(4), 8);
+    }
+}

@@ -1,0 +1,239 @@
+//! Continuous batcher: admits queued requests into a bounded set of
+//! active decode sessions and round-robins single-token steps —
+//! vLLM-style iteration-level scheduling, sized for the CPU testbed.
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::config::EOS;
+use crate::moe::model::MoeModel;
+use crate::util::stats::argmax;
+
+use super::decode::{DecodeOdp, DecodeSession};
+use super::metrics::Metrics;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    /// greedy if None, else top-1 of logits/temperature sampling seed
+    pub temperature: Option<(f32, u64)>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub ttft_ns: u64,
+    pub total_ns: u64,
+}
+
+struct Active {
+    req: Request,
+    session: DecodeSession,
+    generated: Vec<u32>,
+    started: Instant,
+    first_token_ns: Option<u64>,
+    rng_state: u64,
+}
+
+pub struct Batcher {
+    model: Arc<MoeModel>,
+    odp: Option<DecodeOdp>,
+    pub max_batch: usize,
+    queue: VecDeque<Request>,
+    active: Vec<Active>,
+    pub done: Vec<Completion>,
+}
+
+impl Batcher {
+    pub fn new(model: Arc<MoeModel>, odp: Option<DecodeOdp>,
+               max_batch: usize) -> Batcher {
+        Batcher {
+            model,
+            odp,
+            max_batch,
+            queue: VecDeque::new(),
+            active: Vec::new(),
+            done: Vec::new(),
+        }
+    }
+
+    pub fn submit(&mut self, req: Request) {
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len() + self.active.len()
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Admit + advance every active session by one token.
+    /// Returns completions retired this step.
+    pub fn step(&mut self, metrics: &Metrics) -> Vec<Completion> {
+        // admission (continuous batching: fill free slots every step)
+        while self.active.len() < self.max_batch {
+            let Some(req) = self.queue.pop_front() else { break };
+            Metrics::inc(&metrics.requests_admitted, 1);
+            let mut session =
+                DecodeSession::new(self.model.clone(), self.odp.clone());
+            let started = Instant::now();
+            // prefill the prompt minus its last token; the final prompt
+            // token is the first decode step below
+            let (head, tail) = req.prompt.split_at(req.prompt.len() - 1);
+            if !head.is_empty() {
+                session.prefill(head);
+            }
+            let seed = req.temperature.map(|(_, s)| s).unwrap_or(1);
+            self.active.push(Active {
+                rng_state: seed,
+                req: Request { prompt: tail.to_vec(), ..req },
+                session,
+                generated: Vec::new(),
+                started,
+                first_token_ns: None,
+            });
+        }
+
+        // one decode step per active sequence
+        let mut retired = Vec::new();
+        let mut i = 0;
+        while i < self.active.len() {
+            let a = &mut self.active[i];
+            let input = *a.generated.last().unwrap_or(&a.req.prompt[0]);
+            let t0 = Instant::now();
+            let logits = a.session.step(input);
+            let step_ns = t0.elapsed().as_nanos() as u64;
+            metrics.record_tpot(step_ns);
+            let next = match a.req.temperature {
+                None => argmax(&logits) as u32,
+                Some((temp, _)) => {
+                    // Gumbel-max sampling with a per-request LCG
+                    a.rng_state = crate::util::rng::lcg_next(a.rng_state);
+                    let mut rng = crate::util::rng::Rng::new(a.rng_state);
+                    let scaled: Vec<f32> = logits.iter().map(|l| l / temp).collect();
+                    let noisy: Vec<f32> = scaled
+                        .iter()
+                        .map(|&l| l - (-(rng.f64().max(1e-12).ln())).ln() as f32)
+                        .collect();
+                    argmax(&noisy) as u32
+                }
+            };
+            if a.first_token_ns.is_none() {
+                let ns = a.started.elapsed().as_nanos() as u64;
+                a.first_token_ns = Some(ns);
+                metrics.record_ttft(ns);
+            }
+            a.generated.push(next);
+            Metrics::inc(&metrics.tokens_generated, 1);
+            let finished = a.generated.len() >= a.req.max_new_tokens
+                || next == EOS
+                || a.session.remaining() == 0;
+            if finished {
+                let a = self.active.swap_remove(i);
+                Metrics::inc(&metrics.requests_completed, 1);
+                Metrics::inc(&metrics.expert_calls,
+                             a.session.stats.expert_calls as u64);
+                Metrics::inc(&metrics.experts_pruned,
+                             a.session.stats.dropped_secondary as u64);
+                retired.push(Completion {
+                    id: a.req.id,
+                    tokens: a.generated,
+                    ttft_ns: a.first_token_ns.unwrap_or(0),
+                    total_ns: a.started.elapsed().as_nanos() as u64,
+                });
+            } else {
+                i += 1;
+            }
+        }
+        self.done.extend(retired.clone());
+        retired
+    }
+
+    /// Drive to completion; returns all completions.
+    pub fn run_to_completion(&mut self, metrics: &Metrics) -> Vec<Completion> {
+        let mut all = Vec::new();
+        while self.pending() > 0 {
+            all.extend(self.step(metrics));
+        }
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::moe::model::tests::random_model;
+
+    fn engine() -> Arc<MoeModel> {
+        Arc::new(random_model(&ModelConfig::test_tiny(), 0))
+    }
+
+    fn req(id: u64, n: usize) -> Request {
+        Request {
+            id,
+            prompt: vec![1, 5, 80 + id as u32 % 8, 3],
+            max_new_tokens: n,
+            temperature: None,
+        }
+    }
+
+    #[test]
+    fn completes_all_requests() {
+        let metrics = Metrics::new();
+        let mut b = Batcher::new(engine(), None, 2);
+        for i in 0..5 {
+            b.submit(req(i, 4));
+        }
+        let done = b.run_to_completion(&metrics);
+        assert_eq!(done.len(), 5);
+        for c in &done {
+            assert!(!c.tokens.is_empty() && c.tokens.len() <= 4);
+            assert!(c.ttft_ns > 0);
+        }
+        assert_eq!(metrics.requests_completed.load(
+            std::sync::atomic::Ordering::Relaxed), 5);
+    }
+
+    #[test]
+    fn respects_max_batch() {
+        let metrics = Metrics::new();
+        let mut b = Batcher::new(engine(), None, 2);
+        for i in 0..6 {
+            b.submit(req(i, 8));
+        }
+        b.step(&metrics);
+        assert_eq!(b.occupancy(), 2);
+    }
+
+    #[test]
+    fn greedy_is_deterministic() {
+        let m1 = Metrics::new();
+        let mut b1 = Batcher::new(engine(), None, 1);
+        b1.submit(req(0, 6));
+        let d1 = b1.run_to_completion(&m1);
+        let m2 = Metrics::new();
+        let mut b2 = Batcher::new(engine(), None, 1);
+        b2.submit(req(0, 6));
+        let d2 = b2.run_to_completion(&m2);
+        assert_eq!(d1[0].tokens, d2[0].tokens);
+    }
+
+    #[test]
+    fn sampling_differs_from_greedy() {
+        let metrics = Metrics::new();
+        let mut b = Batcher::new(engine(), None, 2);
+        b.submit(Request { temperature: Some((5.0, 7)), ..req(0, 8) });
+        b.submit(req(1, 8));
+        let done = b.run_to_completion(&metrics);
+        let a = done.iter().find(|c| c.id == 0).unwrap();
+        let g = done.iter().find(|c| c.id == 1).unwrap();
+        assert_ne!(a.tokens, g.tokens);
+    }
+}

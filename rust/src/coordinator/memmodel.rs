@@ -1,0 +1,126 @@
+//! Device memory model + bandwidth-bound throughput estimator.
+//!
+//! The paper's Tab. 4/14 report loading memory, peak memory and token
+//! throughput on A100/3090 GPUs. Those quantities are arithmetic over
+//! tensor sizes and bit-widths — identical math here, applied to our
+//! models, plus measured CPU wall-clock for the ratios (Tab. 13).
+
+use crate::moe::model::MoeModel;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Platform {
+    pub name: &'static str,
+    pub mem_bytes: u64,
+    /// HBM/DDR bandwidth (bytes/s) — decode is bandwidth-bound
+    pub bw_bytes_per_s: f64,
+}
+
+pub const PLATFORMS: [Platform; 3] = [
+    Platform { name: "A100-80G", mem_bytes: 80 << 30, bw_bytes_per_s: 2.0e12 },
+    Platform { name: "RTX3090-24G", mem_bytes: 24 << 30, bw_bytes_per_s: 0.936e12 },
+    Platform { name: "CPU-host", mem_bytes: 16 << 30, bw_bytes_per_s: 40.0e9 },
+];
+
+/// Weights-only loading memory (paper "Loading Memory" / "Params").
+pub fn loading_bytes(model: &MoeModel) -> u64 {
+    model.storage_bytes() as u64
+}
+
+/// Peak serving memory: weights + KV cache + activation workspace.
+pub fn peak_bytes(model: &MoeModel, batch: usize, seq: usize) -> u64 {
+    let cfg = &model.cfg;
+    let kv = 2 * batch * seq * cfg.d_model * cfg.n_layers * 4;
+    // activation workspace: hidden + logits + attention scores per seq
+    let act = batch
+        * (seq * cfg.d_model * 4 + seq * cfg.vocab_size
+           + cfg.n_heads * seq * seq)
+        * 4;
+    loading_bytes(model) + (kv + act) as u64
+}
+
+/// Average *activated* parameter bytes per token (paper "Act Params"):
+/// attention + gate + embeddings + top-k expert shares, scaled by the
+/// measured ODP keep-ratio.
+pub fn activated_bytes_per_token(model: &MoeModel, keep_ratio: f64) -> f64 {
+    let cfg = &model.cfg;
+    let mut non_expert = (model.tok_emb.cols       // one embedding row
+        + model.pos_emb.cols
+        + model.lm_head.data.len()
+        + model.final_norm.len()) as f64
+        * 4.0;
+    let mut expert_bytes_mean = 0.0f64;
+    for l in &model.layers {
+        non_expert += (l.attn_norm.len() + l.ffn_norm.len() + l.gate.data.len()) as f64 * 4.0;
+        non_expert += (l.wq.storage_bytes()
+            + l.wk.storage_bytes()
+            + l.wv.storage_bytes()
+            + l.wo.storage_bytes()) as f64;
+        let mean_expert: f64 = l
+            .experts
+            .iter()
+            .map(|e| e.storage_bytes() as f64)
+            .sum::<f64>()
+            / l.experts.len() as f64;
+        expert_bytes_mean += mean_expert * cfg.top_k as f64 * keep_ratio;
+    }
+    non_expert + expert_bytes_mean
+}
+
+/// Bandwidth-bound decode throughput estimate: every generated token
+/// must stream its activated weights once.
+pub fn tokens_per_sec_estimate(model: &MoeModel, platform: &Platform,
+                               keep_ratio: f64) -> f64 {
+    platform.bw_bytes_per_s / activated_bytes_per_token(model, keep_ratio)
+}
+
+/// Does the model fit on the platform (with headroom fraction)?
+pub fn fits(model: &MoeModel, platform: &Platform, batch: usize,
+            seq: usize) -> bool {
+    peak_bytes(model, batch, seq) <= (platform.mem_bytes as f64 * 0.95) as u64
+}
+
+pub fn gb(bytes: u64) -> f64 {
+    bytes as f64 / (1u64 << 30) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::moe::model::tests::random_model;
+
+    #[test]
+    fn peak_exceeds_loading() {
+        let cfg = ModelConfig::test_tiny();
+        let m = random_model(&cfg, 0);
+        assert!(peak_bytes(&m, 4, 64) > loading_bytes(&m));
+    }
+
+    #[test]
+    fn activated_less_than_total() {
+        let cfg = ModelConfig::test_tiny();
+        let m = random_model(&cfg, 1);
+        let act = activated_bytes_per_token(&m, 1.0);
+        assert!(act < loading_bytes(&m) as f64);
+        // pruning reduces activated bytes
+        assert!(activated_bytes_per_token(&m, 0.85) < act);
+    }
+
+    #[test]
+    fn throughput_scales_with_bandwidth() {
+        let cfg = ModelConfig::test_tiny();
+        let m = random_model(&cfg, 2);
+        let a = tokens_per_sec_estimate(&m, &PLATFORMS[0], 1.0);
+        let c = tokens_per_sec_estimate(&m, &PLATFORMS[2], 1.0);
+        assert!(a > c * 10.0);
+    }
+
+    #[test]
+    fn fits_logic() {
+        let cfg = ModelConfig::test_tiny();
+        let m = random_model(&cfg, 3);
+        assert!(fits(&m, &PLATFORMS[0], 1, 64));
+        let tiny_dev = Platform { name: "tiny", mem_bytes: 1 << 18, bw_bytes_per_s: 1e9 };
+        assert!(!fits(&m, &tiny_dev, 1, 64));
+    }
+}

@@ -1,0 +1,97 @@
+//! Serving metrics: counters + latency records, printable as a
+//! prometheus-style text block or JSON.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_admitted: AtomicU64,
+    pub requests_completed: AtomicU64,
+    pub tokens_generated: AtomicU64,
+    pub expert_calls: AtomicU64,
+    pub experts_pruned: AtomicU64,
+    /// time-to-first-token samples (ns)
+    pub ttft_ns: Mutex<Vec<u64>>,
+    /// per-token decode latencies (ns)
+    pub tpot_ns: Mutex<Vec<u64>>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn inc(counter: &AtomicU64, by: u64) {
+        counter.fetch_add(by, Ordering::Relaxed);
+    }
+
+    pub fn record_ttft(&self, ns: u64) {
+        self.ttft_ns.lock().unwrap().push(ns);
+    }
+
+    pub fn record_tpot(&self, ns: u64) {
+        self.tpot_ns.lock().unwrap().push(ns);
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        let tpot = self.tpot_ns.lock().unwrap();
+        if tpot.is_empty() {
+            return 0.0;
+        }
+        let mean_ns = tpot.iter().sum::<u64>() as f64 / tpot.len() as f64;
+        1e9 / mean_ns
+    }
+
+    pub fn prune_ratio(&self) -> f64 {
+        let calls = self.expert_calls.load(Ordering::Relaxed);
+        let pruned = self.experts_pruned.load(Ordering::Relaxed);
+        if calls + pruned == 0 {
+            return 0.0;
+        }
+        pruned as f64 / (calls + pruned) as f64
+    }
+
+    pub fn render_text(&self) -> String {
+        let ttft = self.ttft_ns.lock().unwrap();
+        let ttft_ms = if ttft.is_empty() {
+            0.0
+        } else {
+            ttft.iter().sum::<u64>() as f64 / ttft.len() as f64 / 1e6
+        };
+        format!(
+            "mc_requests_admitted {}\nmc_requests_completed {}\n\
+             mc_tokens_generated {}\nmc_tokens_per_sec {:.2}\n\
+             mc_expert_calls {}\nmc_experts_pruned {}\n\
+             mc_prune_ratio {:.4}\nmc_ttft_ms_mean {:.3}\n",
+            self.requests_admitted.load(Ordering::Relaxed),
+            self.requests_completed.load(Ordering::Relaxed),
+            self.tokens_generated.load(Ordering::Relaxed),
+            self.tokens_per_sec(),
+            self.expert_calls.load(Ordering::Relaxed),
+            self.experts_pruned.load(Ordering::Relaxed),
+            self.prune_ratio(),
+            ttft_ms,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_render() {
+        let m = Metrics::new();
+        Metrics::inc(&m.requests_admitted, 2);
+        Metrics::inc(&m.expert_calls, 90);
+        Metrics::inc(&m.experts_pruned, 10);
+        m.record_ttft(2_000_000);
+        m.record_tpot(1_000_000);
+        assert!((m.prune_ratio() - 0.1).abs() < 1e-9);
+        assert!((m.tokens_per_sec() - 1000.0).abs() < 1e-6);
+        let text = m.render_text();
+        assert!(text.contains("mc_requests_admitted 2"));
+        assert!(text.contains("mc_prune_ratio 0.1000"));
+    }
+}

@@ -1,0 +1,20 @@
+//! L3 serving coordinator: the runtime system around the compressed
+//! model — KV-cache decode, continuous batching, a threaded request
+//! server, the device memory model (Tab. 4/13/14), and metrics.
+//!
+//! Rust owns the event loop and process topology; python exists only
+//! at build time (DESIGN.md §3).
+
+pub mod batcher;
+pub mod decode;
+pub mod engine;
+pub mod memmodel;
+pub mod metrics;
+pub mod server;
+
+pub use batcher::{Batcher, Request};
+pub use decode::{DecodeOdp, DecodeSession};
+pub use engine::McEngine;
+pub use memmodel::{Platform, PLATFORMS};
+pub use metrics::Metrics;
+pub use server::Server;

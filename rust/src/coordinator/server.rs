@@ -1,0 +1,130 @@
+//! Threaded request server: a worker thread owns the batcher and
+//! drives continuous batching; clients submit requests over an mpsc
+//! channel and receive completions on per-request channels. (The
+//! offline image has no tokio; std threads + channels own the event
+//! loop, which at 1 core is the honest architecture anyway.)
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+
+use crate::moe::model::MoeModel;
+
+use super::batcher::{Batcher, Completion, Request};
+use super::decode::DecodeOdp;
+use super::metrics::Metrics;
+
+enum Msg {
+    Submit(Request, Sender<Completion>),
+    Shutdown,
+}
+
+pub struct Server {
+    tx: Sender<Msg>,
+    worker: Option<JoinHandle<()>>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Server {
+    pub fn spawn(model: Arc<MoeModel>, odp: Option<DecodeOdp>,
+                 max_batch: usize) -> Server {
+        let metrics = Arc::new(Metrics::new());
+        let m2 = metrics.clone();
+        let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
+        let worker = std::thread::spawn(move || {
+            let mut batcher = Batcher::new(model, odp, max_batch);
+            let mut reply: BTreeMap<u64, Sender<Completion>> = BTreeMap::new();
+            let mut shutdown = false;
+            loop {
+                // drain the mailbox (block only when idle)
+                if batcher.pending() == 0 {
+                    match rx.recv() {
+                        Ok(Msg::Submit(req, ch)) => {
+                            reply.insert(req.id, ch);
+                            batcher.submit(req);
+                        }
+                        Ok(Msg::Shutdown) | Err(_) => break,
+                    }
+                }
+                while let Ok(msg) = rx.try_recv() {
+                    match msg {
+                        Msg::Submit(req, ch) => {
+                            reply.insert(req.id, ch);
+                            batcher.submit(req);
+                        }
+                        Msg::Shutdown => shutdown = true,
+                    }
+                }
+                for done in batcher.step(&m2) {
+                    if let Some(ch) = reply.remove(&done.id) {
+                        let _ = ch.send(done);
+                    }
+                }
+                if shutdown && batcher.pending() == 0 {
+                    break;
+                }
+            }
+        });
+        Server { tx, worker: Some(worker), next_id: AtomicU64::new(1), metrics }
+    }
+
+    /// Submit a prompt; returns a receiver for the completion.
+    pub fn submit(&self, prompt: Vec<u32>, max_new_tokens: usize)
+                  -> Receiver<Completion> {
+        let (tx, rx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request { id, prompt, max_new_tokens, temperature: None };
+        let _ = self.tx.send(Msg::Submit(req, tx));
+        rx
+    }
+
+    pub fn shutdown(mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::moe::model::tests::random_model;
+
+    #[test]
+    fn serves_concurrent_requests() {
+        let model = Arc::new(random_model(&ModelConfig::test_tiny(), 0));
+        let server = Server::spawn(model, None, 4);
+        let rxs: Vec<_> = (0..6)
+            .map(|i| server.submit(vec![1, 5, 80 + i, 3], 5))
+            .collect();
+        for rx in rxs {
+            let done = rx.recv_timeout(std::time::Duration::from_secs(30))
+                .expect("completion");
+            assert!(!done.tokens.is_empty());
+        }
+        assert_eq!(
+            server.metrics.requests_completed.load(Ordering::Relaxed), 6);
+        server.shutdown();
+    }
+
+    #[test]
+    fn shutdown_without_requests() {
+        let model = Arc::new(random_model(&ModelConfig::test_tiny(), 1));
+        let server = Server::spawn(model, None, 2);
+        server.shutdown();
+    }
+}

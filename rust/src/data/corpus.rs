@@ -1,0 +1,114 @@
+//! Corpus assembly: contiguous token streams per split (twin of
+//! `datagen.pack_stream`). Splits:
+//!   * General — 70% task grammars uniformly + 30% Markov text (C4 analogue;
+//!     the PMQ calibration set)
+//!   * Arith   — modadd-only (MATH analogue; Fig. 3's task-specific calib)
+//!   * Text    — Markov channel only (WikiText2-PPL analogue)
+
+use crate::config::{BOS, EOS};
+use crate::util::rng::Rng;
+
+use super::tasks::task_sequence;
+use super::text::TextChannel;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Split {
+    General,
+    Arith,
+    Text,
+}
+
+impl Split {
+    pub fn parse(s: &str) -> Option<Split> {
+        match s {
+            "general" => Some(Split::General),
+            "arith" => Some(Split::Arith),
+            "text" => Some(Split::Text),
+            _ => None,
+        }
+    }
+}
+
+/// Emit a contiguous stream of exactly `n_tokens` tokens.
+pub fn pack_stream(rng: &mut Rng, text: &TextChannel, n_tokens: usize,
+                   split: Split) -> Vec<u32> {
+    let mut out = Vec::with_capacity(n_tokens + 64);
+    while out.len() < n_tokens {
+        match split {
+            Split::Text => {
+                out.push(BOS);
+                out.extend(text.sample(rng, 48));
+                out.push(EOS);
+            }
+            Split::Arith => out.extend(task_sequence(rng, 3)),
+            Split::General => {
+                if rng.f64() < 0.3 {
+                    out.push(BOS);
+                    out.extend(text.sample(rng, 48));
+                    out.push(EOS);
+                } else {
+                    let task = rng.below(8);
+                    out.extend(task_sequence(rng, task));
+                }
+            }
+        }
+    }
+    out.truncate(n_tokens);
+    out
+}
+
+/// Fixed-length calibration sequences (the paper's "128 sets of random
+/// sequences, each 2048 tokens long" becomes n_seqs x seq_len here).
+pub fn calibration_set(seed: u64, n_seqs: usize, seq_len: usize,
+                       split: Split) -> Vec<Vec<u32>> {
+    let mut rng = Rng::new(seed);
+    let text = TextChannel::new();
+    (0..n_seqs)
+        .map(|_| pack_stream(&mut rng, &text, seq_len, split))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_exact_length() {
+        let mut rng = Rng::new(0);
+        let text = TextChannel::new();
+        for split in [Split::General, Split::Arith, Split::Text] {
+            let s = pack_stream(&mut rng, &text, 1000, split);
+            assert_eq!(s.len(), 1000);
+            assert!(s.iter().all(|&t| t < 256));
+        }
+    }
+
+    #[test]
+    fn arith_split_is_modadd_only() {
+        let mut rng = Rng::new(1);
+        let text = TextChannel::new();
+        let s = pack_stream(&mut rng, &text, 500, Split::Arith);
+        // every BOS is followed by the modadd task tag (5 + 3)
+        for (i, &t) in s.iter().enumerate() {
+            if t == BOS && i + 1 < s.len() {
+                assert_eq!(s[i + 1], 8);
+            }
+        }
+    }
+
+    #[test]
+    fn calibration_set_deterministic() {
+        let a = calibration_set(7, 4, 128, Split::General);
+        let b = calibration_set(7, 4, 128, Split::General);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 4);
+        assert_eq!(a[0].len(), 128);
+    }
+
+    #[test]
+    fn splits_differ() {
+        let a = calibration_set(7, 2, 256, Split::General);
+        let b = calibration_set(7, 2, 256, Split::Text);
+        assert_ne!(a, b);
+    }
+}

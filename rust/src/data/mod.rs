@@ -1,0 +1,14 @@
+//! Synthetic corpus substrate (rust twin of `python/compile/datagen.py`).
+//!
+//! The model is *trained* on the python generators and *evaluated* on
+//! these; the grammars match exactly (the Markov text table matches bit
+//! for bit), so the rust harness scores the model on-distribution.
+
+pub mod corpus;
+pub mod niah;
+pub mod tasks;
+pub mod text;
+
+pub use corpus::{calibration_set, pack_stream, Split};
+pub use tasks::{eval_sample, task_sequence, EvalSample};
+pub use text::TextChannel;

@@ -1,0 +1,96 @@
+//! Needle-in-a-haystack generator (paper Fig. 9 / Tab. 9 "NIAH").
+//!
+//! A key-value "needle" (recall-task format) is planted at a controlled
+//! depth inside a long Markov-text distractor context; the query asks
+//! for the value at the end. Scored as 4-way multiple choice over
+//! plausible values, like the paper's retrieval-accuracy heatmap.
+
+use crate::config::{BOS, QRY, SEP, SYM_BASE, TASK_BASE};
+use crate::util::rng::Rng;
+
+use super::tasks::EvalSample;
+use super::text::TextChannel;
+
+/// Build one NIAH sample with total context length `ctx_len` and the
+/// needle planted at `depth` in [0, 1].
+pub fn niah_sample(rng: &mut Rng, text: &TextChannel, ctx_len: usize,
+                   depth: f64) -> EvalSample {
+    assert!(ctx_len >= 16, "context too short for a needle");
+    let key = rng.below(32) as u32;
+    let value = 32 + rng.below(32) as u32;
+    let needle = [SYM_BASE + key, SYM_BASE + value];
+
+    // [BOS, recall-tag] distractor..needle..distractor [QRY key SEP]
+    let overhead = 2 + needle.len() + 3;
+    let hay_len = ctx_len.saturating_sub(overhead);
+    let pos = ((hay_len as f64) * depth).round() as usize;
+    let mut prompt = vec![BOS, TASK_BASE + 4];
+    prompt.extend(text.sample(rng, pos));
+    prompt.extend(needle);
+    prompt.extend(text.sample(rng, hay_len - pos));
+    prompt.push(QRY);
+    prompt.push(SYM_BASE + key);
+    prompt.push(SEP);
+
+    // 4 value choices: gold + 3 distinct distractors
+    let mut choices = vec![vec![SYM_BASE + value]];
+    while choices.len() < 4 {
+        let alt = 32 + rng.below(32) as u32;
+        let cand = vec![SYM_BASE + alt];
+        if !choices.contains(&cand) {
+            choices.push(cand);
+        }
+    }
+    let mut order: Vec<usize> = (0..4).collect();
+    rng.shuffle(&mut order);
+    let gold = order.iter().position(|&i| i == 0).unwrap();
+    EvalSample {
+        task: 4,
+        prompt,
+        choices: order.into_iter().map(|i| choices[i].clone()).collect(),
+        gold,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn needle_present_at_depth() {
+        let text = TextChannel::new();
+        let mut rng = Rng::new(0);
+        for &depth in &[0.0, 0.5, 1.0] {
+            let s = niah_sample(&mut rng, &text, 128, depth);
+            assert_eq!(s.prompt.len(), 128);
+            // key appears twice: needle + query
+            let key = s.prompt[s.prompt.len() - 2];
+            let occurrences =
+                s.prompt.iter().filter(|&&t| t == key).count();
+            assert!(occurrences >= 2, "needle key missing");
+        }
+    }
+
+    #[test]
+    fn gold_value_follows_key_in_context() {
+        let text = TextChannel::new();
+        let mut rng = Rng::new(1);
+        let s = niah_sample(&mut rng, &text, 96, 0.4);
+        let key = s.prompt[s.prompt.len() - 2];
+        let gold_val = s.choices[s.gold][0];
+        let pos = s.prompt.iter().position(|&t| t == key).unwrap();
+        assert_eq!(s.prompt[pos + 1], gold_val);
+    }
+
+    #[test]
+    fn distractors_distinct() {
+        let text = TextChannel::new();
+        let mut rng = Rng::new(2);
+        let s = niah_sample(&mut rng, &text, 64, 0.9);
+        for i in 0..4 {
+            for j in 0..i {
+                assert_ne!(s.choices[i], s.choices[j]);
+            }
+        }
+    }
+}

@@ -1,0 +1,345 @@
+//! The 8 task grammars (rust twin of `datagen.py`) plus the eval-form
+//! generators that turn each grammar into an LM-Eval-style multiple-
+//! choice sample (prompt + 4 choice continuations, exactly one gold).
+//!
+//! Task -> paper-benchmark analogue mapping lives in
+//! `config::TASK_ANALOGUE` (DESIGN.md §2).
+
+use crate::config::{BOS, EOS, NUM_BASE, NUM_COUNT, QRY, SEP, SYM_BASE, TASK_BASE};
+use crate::util::rng::Rng;
+
+fn num(v: u32) -> u32 {
+    debug_assert!(v < NUM_COUNT);
+    NUM_BASE + v
+}
+
+fn sym(v: u32) -> u32 {
+    debug_assert!(v < 64);
+    SYM_BASE + v
+}
+
+/// (prompt, answer) in raw tokens, formats identical to datagen.py.
+pub fn gen_task(rng: &mut Rng, task: usize) -> (Vec<u32>, Vec<u32>) {
+    match task {
+        0 => gen_copy(rng),
+        1 => gen_reverse(rng),
+        2 => gen_sortsym(rng),
+        3 => gen_modadd(rng),
+        4 => gen_recall(rng),
+        5 => gen_majority(rng),
+        6 => gen_counting(rng),
+        7 => gen_induction(rng),
+        _ => panic!("unknown task {task}"),
+    }
+}
+
+fn gen_copy(rng: &mut Rng) -> (Vec<u32>, Vec<u32>) {
+    let seq: Vec<u32> = (0..8).map(|_| sym(rng.below(16) as u32)).collect();
+    (seq.clone(), seq)
+}
+
+fn gen_reverse(rng: &mut Rng) -> (Vec<u32>, Vec<u32>) {
+    let seq: Vec<u32> = (0..8).map(|_| sym(rng.below(16) as u32)).collect();
+    let mut rev = seq.clone();
+    rev.reverse();
+    (seq, rev)
+}
+
+fn gen_sortsym(rng: &mut Rng) -> (Vec<u32>, Vec<u32>) {
+    let vals: Vec<u32> = (0..8).map(|_| rng.below(16) as u32).collect();
+    let mut sorted = vals.clone();
+    sorted.sort_unstable();
+    (
+        vals.into_iter().map(sym).collect(),
+        sorted.into_iter().map(sym).collect(),
+    )
+}
+
+fn gen_modadd(rng: &mut Rng) -> (Vec<u32>, Vec<u32>) {
+    let a = rng.below(NUM_COUNT as usize) as u32;
+    let b = rng.below(NUM_COUNT as usize) as u32;
+    (vec![num(a), num(b)], vec![num((a + b) % NUM_COUNT)])
+}
+
+fn gen_recall(rng: &mut Rng) -> (Vec<u32>, Vec<u32>) {
+    let n = 4;
+    let keys = rng.choose_distinct(32, n);
+    let vals: Vec<u32> = (0..n).map(|_| 32 + rng.below(32) as u32).collect();
+    let mut prompt = Vec::new();
+    for (k, v) in keys.iter().zip(&vals) {
+        prompt.push(sym(*k as u32));
+        prompt.push(sym(*v));
+    }
+    let q = rng.below(n);
+    prompt.push(QRY);
+    prompt.push(sym(keys[q] as u32));
+    (prompt, vec![sym(vals[q])])
+}
+
+fn gen_majority(rng: &mut Rng) -> (Vec<u32>, Vec<u32>) {
+    let n = 9;
+    let choices = rng.choose_distinct(8, 2);
+    let k = rng.range(n / 2 + 1, n);
+    let mut seq: Vec<u32> = Vec::with_capacity(n);
+    for _ in 0..k {
+        seq.push(choices[0] as u32);
+    }
+    for _ in 0..n - k {
+        seq.push(choices[1] as u32);
+    }
+    rng.shuffle(&mut seq);
+    (
+        seq.into_iter().map(sym).collect(),
+        vec![sym(choices[0] as u32)],
+    )
+}
+
+fn gen_counting(rng: &mut Rng) -> (Vec<u32>, Vec<u32>) {
+    let n = 10;
+    let target = rng.below(8) as u32;
+    let seq: Vec<u32> = (0..n).map(|_| rng.below(8) as u32).collect();
+    let cnt = seq.iter().filter(|&&s| s == target).count() as u32;
+    let mut prompt = vec![sym(target), QRY];
+    prompt.extend(seq.into_iter().map(sym));
+    (prompt, vec![num(cnt)])
+}
+
+fn gen_induction(rng: &mut Rng) -> (Vec<u32>, Vec<u32>) {
+    let ab = rng.choose_distinct(16, 2);
+    let (a, b) = (ab[0] as u32, ab[1] as u32);
+    let mut prompt = vec![sym(a), sym(b)];
+    for _ in 0..6 {
+        prompt.push(sym(16 + rng.below(16) as u32));
+    }
+    prompt.push(sym(a));
+    (prompt, vec![sym(b)])
+}
+
+/// Full training-format sequence: [BOS, tag] prompt [SEP] answer [EOS].
+pub fn task_sequence(rng: &mut Rng, task: usize) -> Vec<u32> {
+    let (prompt, answer) = gen_task(rng, task);
+    let mut seq = vec![BOS, TASK_BASE + task as u32];
+    seq.extend(prompt);
+    seq.push(SEP);
+    seq.extend(answer);
+    seq.push(EOS);
+    seq
+}
+
+// ---------------------------------------------------------------------------
+// Multiple-choice eval form
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct EvalSample {
+    pub task: usize,
+    /// context fed to the model: [BOS, tag] prompt [SEP]
+    pub prompt: Vec<u32>,
+    /// candidate continuations; `gold` indexes the correct one
+    pub choices: Vec<Vec<u32>>,
+    pub gold: usize,
+}
+
+/// Perturb one random position of a symbol sequence (stay in-alphabet).
+fn perturb(rng: &mut Rng, seq: &[u32]) -> Vec<u32> {
+    let mut out = seq.to_vec();
+    if out.is_empty() {
+        return out;
+    }
+    let i = rng.below(out.len());
+    let old = out[i];
+    loop {
+        let cand = SYM_BASE + rng.below(16) as u32;
+        if cand != old {
+            out[i] = cand;
+            break;
+        }
+    }
+    out
+}
+
+fn dedup_push(choices: &mut Vec<Vec<u32>>, cand: Vec<u32>) -> bool {
+    if choices.iter().any(|c| *c == cand) {
+        return false;
+    }
+    choices.push(cand);
+    true
+}
+
+/// Build a 4-way multiple-choice sample for `task`.
+pub fn eval_sample(rng: &mut Rng, task: usize) -> EvalSample {
+    let (prompt_raw, answer) = gen_task(rng, task);
+    let mut prompt = vec![BOS, TASK_BASE + task as u32];
+    prompt.extend(&prompt_raw);
+    prompt.push(SEP);
+
+    let mut choices = vec![answer.clone()];
+    let mut guard = 0;
+    while choices.len() < 4 && guard < 200 {
+        guard += 1;
+        let cand: Vec<u32> = match task {
+            // sequence tasks: perturbations / wrong transforms
+            0 | 1 | 2 => match choices.len() {
+                1 => {
+                    // a structurally-plausible wrong transform
+                    let mut alt = answer.clone();
+                    alt.reverse();
+                    if alt == answer { perturb(rng, &answer) } else { alt }
+                }
+                _ => perturb(rng, &answer),
+            },
+            // numeric tasks: off-by-one and random numbers
+            3 | 6 => {
+                let correct = answer[0] - NUM_BASE;
+                let alt = match choices.len() {
+                    1 => (correct + 1) % NUM_COUNT,
+                    2 => (correct + NUM_COUNT - 1) % NUM_COUNT,
+                    _ => rng.below(NUM_COUNT as usize) as u32,
+                };
+                vec![num(alt)]
+            }
+            // recall: other values present in the context
+            4 => {
+                let in_ctx: Vec<u32> = prompt_raw
+                    .iter()
+                    .copied()
+                    .filter(|&t| (SYM_BASE + 32..SYM_BASE + 64).contains(&t))
+                    .collect();
+                let pick = in_ctx[rng.below(in_ctx.len())];
+                vec![pick]
+            }
+            // majority/induction: other symbols from the context
+            5 | 7 => {
+                let in_ctx: Vec<u32> = prompt_raw
+                    .iter()
+                    .copied()
+                    .filter(|&t| t >= SYM_BASE)
+                    .collect();
+                let pick = in_ctx[rng.below(in_ctx.len())];
+                vec![pick]
+            }
+            _ => unreachable!(),
+        };
+        dedup_push(&mut choices, cand);
+    }
+    // pad with random symbols if the context had too few distinct values
+    while choices.len() < 4 {
+        dedup_push(&mut choices, vec![sym(rng.below(64) as u32)]);
+    }
+    // shuffle, track gold
+    let mut order: Vec<usize> = (0..4).collect();
+    rng.shuffle(&mut order);
+    let gold = order.iter().position(|&i| i == 0).unwrap();
+    let choices = order.into_iter().map(|i| choices[i].clone()).collect();
+    EvalSample { task, prompt, choices, gold }
+}
+
+/// k-shot sample: k solved examples of the same task prepended.
+pub fn fewshot_sample(rng: &mut Rng, task: usize, shots: usize) -> EvalSample {
+    let mut ctx = Vec::new();
+    for _ in 0..shots {
+        ctx.extend(task_sequence(rng, task));
+    }
+    let mut s = eval_sample(rng, task);
+    ctx.extend(&s.prompt);
+    s.prompt = ctx;
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::TASK_NAMES;
+
+    #[test]
+    fn sequences_well_formed() {
+        let mut rng = Rng::new(0);
+        for task in 0..8 {
+            for _ in 0..50 {
+                let seq = task_sequence(&mut rng, task);
+                assert_eq!(seq[0], BOS);
+                assert_eq!(seq[1], TASK_BASE + task as u32);
+                assert_eq!(*seq.last().unwrap(), EOS);
+                assert!(seq.contains(&SEP));
+                assert!(seq.iter().all(|&t| t < 256));
+            }
+        }
+    }
+
+    #[test]
+    fn answers_correct_by_construction() {
+        let mut rng = Rng::new(1);
+        // modadd: check arithmetic
+        for _ in 0..100 {
+            let (p, a) = gen_task(&mut rng, 3);
+            let (x, y) = (p[0] - NUM_BASE, p[1] - NUM_BASE);
+            assert_eq!(a[0] - NUM_BASE, (x + y) % NUM_COUNT);
+        }
+        // reverse: check reversal
+        for _ in 0..20 {
+            let (p, a) = gen_task(&mut rng, 1);
+            let mut r = p.clone();
+            r.reverse();
+            assert_eq!(a, r);
+        }
+        // counting: recount
+        for _ in 0..50 {
+            let (p, a) = gen_task(&mut rng, 6);
+            let target = p[0];
+            let cnt = p[2..].iter().filter(|&&t| t == target).count() as u32;
+            assert_eq!(a[0], num(cnt));
+        }
+        // majority: recount
+        for _ in 0..50 {
+            let (p, a) = gen_task(&mut rng, 5);
+            let m = a[0];
+            let cm = p.iter().filter(|&&t| t == m).count();
+            for &t in &p {
+                if t != m {
+                    assert!(p.iter().filter(|&&u| u == t).count() < cm);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn eval_samples_have_unique_gold() {
+        let mut rng = Rng::new(2);
+        for task in 0..8 {
+            for _ in 0..50 {
+                let s = eval_sample(&mut rng, task);
+                assert_eq!(s.choices.len(), 4, "task {}", TASK_NAMES[task]);
+                // gold choice is distinct from all distractors
+                for (i, c) in s.choices.iter().enumerate() {
+                    if i != s.gold {
+                        assert_ne!(*c, s.choices[s.gold]);
+                    }
+                }
+                assert!(s.prompt.ends_with(&[SEP]));
+            }
+        }
+    }
+
+    #[test]
+    fn recall_distractors_from_context() {
+        let mut rng = Rng::new(3);
+        for _ in 0..30 {
+            let s = eval_sample(&mut rng, 4);
+            for c in &s.choices {
+                assert_eq!(c.len(), 1);
+            }
+        }
+    }
+
+    #[test]
+    fn fewshot_prepends_examples() {
+        let mut rng = Rng::new(4);
+        let zero = eval_sample(&mut rng, 3);
+        let five = fewshot_sample(&mut rng, 3, 5);
+        assert!(five.prompt.len() > zero.prompt.len() + 5 * 4);
+        // prompt still ends with SEP for the live question
+        assert!(five.prompt.ends_with(&[SEP]));
+        // contains 5 EOS from the solved examples
+        assert_eq!(five.prompt.iter().filter(|&&t| t == EOS).count(), 5);
+    }
+}

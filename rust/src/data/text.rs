@@ -1,0 +1,142 @@
+//! Zipfian order-1 Markov "text" channel (WikiText2/C4 analogue).
+//!
+//! The successor table must match `datagen.TextChannel` bit for bit:
+//! both sides build it with the same LCG-driven Fisher-Yates at the
+//! same fixed seed, so rust evaluates perplexity on exactly the
+//! language the python trainer sampled.
+
+use crate::config::{TXT_BASE, TXT_COUNT};
+use crate::util::rng::{lcg_next, Rng};
+
+pub const FANOUT: usize = 12;
+pub const ZIPF_S: f64 = 1.2;
+pub const TABLE_SEED: u64 = 0xC0FFEE;
+
+#[derive(Debug, Clone)]
+pub struct TextChannel {
+    /// succ[i] = the FANOUT candidate successors of word i
+    pub succ: Vec<[u16; FANOUT]>,
+    /// Zipf(1.2) probabilities over successor ranks
+    pub probs: [f64; FANOUT],
+}
+
+impl Default for TextChannel {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl TextChannel {
+    pub fn new() -> TextChannel {
+        let mut probs = [0.0; FANOUT];
+        let mut total = 0.0;
+        for (r, p) in probs.iter_mut().enumerate() {
+            *p = 1.0 / ((r + 1) as f64).powf(ZIPF_S);
+            total += *p;
+        }
+        for p in probs.iter_mut() {
+            *p /= total;
+        }
+        let n = TXT_COUNT as usize;
+        let mut succ = Vec::with_capacity(n);
+        let mut state = TABLE_SEED;
+        for _ in 0..n {
+            // LCG Fisher-Yates, identical to datagen.TextChannel
+            let mut perm: Vec<u16> = (0..n as u16).collect();
+            for j in (1..n).rev() {
+                state = lcg_next(state);
+                let k = ((state >> 33) % (j as u64 + 1)) as usize;
+                perm.swap(j, k);
+            }
+            let mut row = [0u16; FANOUT];
+            row.copy_from_slice(&perm[..FANOUT]);
+            succ.push(row);
+        }
+        TextChannel { succ, probs }
+    }
+
+    /// Sample `n` text tokens (already offset by TXT_BASE).
+    pub fn sample(&self, rng: &mut Rng, n: usize) -> Vec<u32> {
+        let mut cur = rng.below(TXT_COUNT as usize);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            out.push(TXT_BASE + cur as u32);
+            let rank = rng.weighted(&self.probs);
+            cur = self.succ[cur][rank] as usize;
+        }
+        out
+    }
+
+    /// Transition probability P(next | cur) for analytic entropy tests.
+    pub fn transition_prob(&self, cur: usize, next: usize) -> f64 {
+        for (rank, &s) in self.succ[cur].iter().enumerate() {
+            if s as usize == next {
+                return self.probs[rank];
+            }
+        }
+        0.0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_shape_and_range() {
+        let t = TextChannel::new();
+        assert_eq!(t.succ.len(), TXT_COUNT as usize);
+        for row in &t.succ {
+            for &s in row {
+                assert!((s as u32) < TXT_COUNT);
+            }
+            // successors within a row are distinct (permutation prefix)
+            let mut v: Vec<u16> = row.to_vec();
+            v.sort_unstable();
+            v.dedup();
+            assert_eq!(v.len(), FANOUT);
+        }
+    }
+
+    #[test]
+    fn deterministic_table() {
+        let a = TextChannel::new();
+        let b = TextChannel::new();
+        assert_eq!(a.succ, b.succ);
+    }
+
+    #[test]
+    fn golden_rows_match_python() {
+        // Captured from datagen.TextChannel() — the cross-language
+        // contract. If either side's table construction changes, this
+        // breaks (and so does the model/eval distribution match).
+        let t = TextChannel::new();
+        assert_eq!(
+            t.succ[0],
+            [75, 67, 94, 40, 74, 101, 63, 7, 77, 78, 55, 53]
+        );
+        let sums: Vec<u64> = (0..4)
+            .map(|i| t.succ[i].iter().map(|&v| v as u64).sum())
+            .collect();
+        assert_eq!(sums, vec![784, 580, 678, 947]);
+    }
+
+    #[test]
+    fn samples_in_txt_range() {
+        let t = TextChannel::new();
+        let mut rng = Rng::new(9);
+        for tok in t.sample(&mut rng, 500) {
+            assert!((TXT_BASE..TXT_BASE + TXT_COUNT).contains(&tok));
+        }
+    }
+
+    #[test]
+    fn zipf_probs_normalized_and_decreasing() {
+        let t = TextChannel::new();
+        let sum: f64 = t.probs.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        for w in t.probs.windows(2) {
+            assert!(w[0] > w[1]);
+        }
+    }
+}

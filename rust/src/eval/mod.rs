@@ -1,0 +1,9 @@
+//! Evaluation harness (EleutherAI-LM-Harness analogue, DESIGN.md §2):
+//! perplexity, the 8-task zero/few-shot multiple-choice suite, NIAH
+//! long-context retrieval, and the CoT-chain stress test.
+
+pub mod ppl;
+pub mod suite;
+
+pub use ppl::{perplexity, PplReport};
+pub use suite::{eval_cot_chain, eval_niah_grid, eval_suite, eval_task, SuiteReport};

@@ -1,0 +1,219 @@
+//! Multiple-choice benchmark suite: 8 tasks scored LM-Eval-style
+//! (length-normalized choice log-likelihood, argmax), zero-shot (Tab.
+//! 2/5/8), few-shot (Tab. 3/6), NIAH grid (Fig. 9), and the CoT chain
+//! (GSM8K-analogue, Tab. 9).
+
+use crate::config::{TASK_ANALOGUE, TASK_NAMES};
+use crate::data::niah::niah_sample;
+use crate::data::tasks::{eval_sample, fewshot_sample, EvalSample};
+use crate::data::TextChannel;
+use crate::moe::model::{ForwardOpts, MoeModel, NullSink, OdpPolicy, RunStats};
+use crate::tensor::log_softmax;
+use crate::util::rng::Rng;
+use crate::util::stats::argmax;
+
+/// Score one multiple-choice sample; returns (correct, stats).
+pub fn score_sample(model: &MoeModel, sample: &EvalSample,
+                    odp: Option<&OdpPolicy>) -> (bool, RunStats) {
+    let single_token = sample.choices.iter().all(|c| c.len() == 1);
+    let mut stats = RunStats::new(model.cfg.n_layers, model.cfg.n_experts);
+    let pick = if single_token {
+        // one forward: compare choice-token logprobs at the last position
+        let opts = ForwardOpts { odp, ..Default::default() };
+        let out = model.forward(&sample.prompt, &opts, &mut NullSink);
+        stats.merge(&out.stats);
+        let lp = log_softmax(out.logits.row(sample.prompt.len() - 1));
+        let scores: Vec<f32> = sample
+            .choices
+            .iter()
+            .map(|c| lp[c[0] as usize])
+            .collect();
+        argmax(&scores)
+    } else {
+        // teacher-force each continuation, length-normalized
+        let mut scores = Vec::with_capacity(sample.choices.len());
+        for choice in &sample.choices {
+            let mut toks = sample.prompt.clone();
+            toks.extend(choice);
+            let opts = ForwardOpts { odp, ..Default::default() };
+            let out = model.forward(&toks, &opts, &mut NullSink);
+            stats.merge(&out.stats);
+            let lp = MoeModel::continuation_logprob(
+                &out.logits, &toks, sample.prompt.len());
+            scores.push(lp / choice.len() as f32);
+        }
+        argmax(&scores)
+    };
+    (pick == sample.gold, stats)
+}
+
+/// Accuracy of one task over `n_samples` (zero-shot if shots == 0).
+pub fn eval_task(model: &MoeModel, task: usize, n_samples: usize,
+                 shots: usize, seed: u64, odp: Option<&OdpPolicy>) -> (f64, RunStats) {
+    let mut rng = Rng::new(seed ^ (task as u64) << 8);
+    let mut correct = 0usize;
+    let mut stats = RunStats::new(model.cfg.n_layers, model.cfg.n_experts);
+    for _ in 0..n_samples {
+        let sample = if shots == 0 {
+            eval_sample(&mut rng, task)
+        } else {
+            fewshot_sample(&mut rng, task, shots)
+        };
+        let (ok, s) = score_sample(model, &sample, odp);
+        correct += ok as usize;
+        stats.merge(&s);
+    }
+    (correct as f64 / n_samples as f64, stats)
+}
+
+#[derive(Debug, Clone)]
+pub struct SuiteReport {
+    /// (task name, paper-benchmark analogue, accuracy)
+    pub rows: Vec<(String, String, f64)>,
+    pub average: f64,
+    pub stats: RunStats,
+}
+
+/// Full 8-task suite (the paper's Tab.-2 row for one model).
+pub fn eval_suite(model: &MoeModel, n_samples: usize, shots: usize,
+                  seed: u64, odp: Option<&OdpPolicy>) -> SuiteReport {
+    let mut rows = Vec::with_capacity(8);
+    let mut stats = RunStats::new(model.cfg.n_layers, model.cfg.n_experts);
+    let mut total = 0.0;
+    for task in 0..8 {
+        let (acc, s) = eval_task(model, task, n_samples, shots, seed, odp);
+        stats.merge(&s);
+        total += acc;
+        rows.push((
+            TASK_NAMES[task].to_string(),
+            TASK_ANALOGUE[task].to_string(),
+            acc,
+        ));
+    }
+    SuiteReport { rows, average: total / 8.0, stats }
+}
+
+/// NIAH retrieval accuracy over a (context length × depth) grid (Fig. 9).
+pub fn eval_niah_grid(model: &MoeModel, lengths: &[usize], depths: &[f64],
+                      n_samples: usize, seed: u64,
+                      odp: Option<&OdpPolicy>) -> Vec<Vec<f64>> {
+    let text = TextChannel::new();
+    let mut grid = Vec::with_capacity(lengths.len());
+    for &len in lengths {
+        let mut row = Vec::with_capacity(depths.len());
+        for &depth in depths {
+            let mut rng = Rng::new(seed ^ (len as u64) << 16
+                ^ ((depth * 1000.0) as u64));
+            let mut correct = 0usize;
+            for _ in 0..n_samples {
+                let s = niah_sample(&mut rng, &text, len, depth);
+                let (ok, _) = score_sample(model, &s, odp);
+                correct += ok as usize;
+            }
+            row.push(correct as f64 / n_samples as f64);
+        }
+        grid.push(row);
+    }
+    grid
+}
+
+/// CoT chain (GSM8K analogue, Tab. 9): `steps` sequential modadd
+/// queries where each answer feeds the next; a chain scores only if
+/// every step is answered correctly, so single-step degradation
+/// compounds exactly like multi-step reasoning under quantization.
+pub fn eval_cot_chain(model: &MoeModel, steps: usize, n_chains: usize,
+                      seed: u64, odp: Option<&OdpPolicy>) -> f64 {
+    use crate::config::{BOS, NUM_BASE, NUM_COUNT, SEP, TASK_BASE};
+    let mut rng = Rng::new(seed);
+    let mut correct_chains = 0usize;
+    for _ in 0..n_chains {
+        let mut acc = rng.below(NUM_COUNT as usize) as u32;
+        let mut all_ok = true;
+        for _ in 0..steps {
+            let b = rng.below(NUM_COUNT as usize) as u32;
+            let want = (acc + b) % NUM_COUNT;
+            let prompt = vec![BOS, TASK_BASE + 3, NUM_BASE + acc, NUM_BASE + b, SEP];
+            let opts = ForwardOpts { odp, ..Default::default() };
+            let out = model.forward(&prompt, &opts, &mut NullSink);
+            let lp = log_softmax(out.logits.row(prompt.len() - 1));
+            // argmax over the full number range (harder than 4-way MC)
+            let pred = (0..NUM_COUNT)
+                .max_by(|&a, &b| {
+                    lp[(NUM_BASE + a) as usize]
+                        .partial_cmp(&lp[(NUM_BASE + b) as usize])
+                        .unwrap()
+                })
+                .unwrap();
+            if pred != want {
+                all_ok = false;
+                break;
+            }
+            acc = want; // teacher-forced chain: feed the correct value
+        }
+        correct_chains += all_ok as usize;
+    }
+    correct_chains as f64 / n_chains as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::moe::model::tests::random_model;
+
+    #[test]
+    fn random_model_near_chance() {
+        let cfg = ModelConfig::test_tiny();
+        let model = random_model(&cfg, 0);
+        let report = eval_suite(&model, 10, 0, 42, None);
+        assert_eq!(report.rows.len(), 8);
+        // untrained: accuracy should hover near 25% (4-way chance)
+        assert!(
+            (0.05..0.6).contains(&report.average),
+            "avg {}",
+            report.average
+        );
+    }
+
+    #[test]
+    fn suite_deterministic() {
+        let cfg = ModelConfig::test_tiny();
+        let model = random_model(&cfg, 1);
+        let a = eval_suite(&model, 5, 0, 7, None);
+        let b = eval_suite(&model, 5, 0, 7, None);
+        assert_eq!(a.rows, b.rows);
+    }
+
+    #[test]
+    fn fewshot_prompts_run() {
+        let cfg = ModelConfig::test_tiny();
+        let model = random_model(&cfg, 2);
+        let (acc, _) = eval_task(&model, 3, 5, 2, 9, None);
+        assert!((0.0..=1.0).contains(&acc));
+    }
+
+    #[test]
+    fn niah_grid_shape() {
+        let cfg = ModelConfig::test_tiny();
+        let model = random_model(&cfg, 3);
+        let grid = eval_niah_grid(&model, &[32, 48], &[0.0, 0.5, 1.0], 3, 11, None);
+        assert_eq!(grid.len(), 2);
+        assert_eq!(grid[0].len(), 3);
+        for row in &grid {
+            for &v in row {
+                assert!((0.0..=1.0).contains(&v));
+            }
+        }
+    }
+
+    #[test]
+    fn cot_chain_bounds() {
+        let cfg = ModelConfig::test_tiny();
+        let model = random_model(&cfg, 4);
+        let acc1 = eval_cot_chain(&model, 1, 10, 13, None);
+        let acc4 = eval_cot_chain(&model, 4, 10, 13, None);
+        assert!((0.0..=1.0).contains(&acc1));
+        // longer chains cannot be easier
+        assert!(acc4 <= acc1 + 1e-9);
+    }
+}

@@ -1,0 +1,19 @@
+//! MC-MoE: Mixture Compressor for Mixture-of-Experts LLMs (ICLR 2025).
+//!
+//! Training-free mixture compression: PMQ (pre-loading mixed-precision
+//! quantization via integer-programmed expert bit allocation) + ODP
+//! (online dynamic pruning with significance-aware token protection),
+//! implemented as a three-layer rust + JAX + Pallas stack. See
+//! DESIGN.md for the architecture and experiment index.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod moe;
+pub mod odp;
+pub mod pmq;
+pub mod quant;
+pub mod runtime;
+pub mod tensor;
+pub mod util;

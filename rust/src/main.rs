@@ -1,0 +1,262 @@
+//! mc-moe CLI: compress, evaluate, analyze, and serve MC-compressed
+//! MoE models.
+//!
+//! Subcommands:
+//!   info                         model/artifact status
+//!   compress  [--avg-bits 2.5] [--strategy pmq] [--eval]
+//!   eval      [--mode suite|ppl|fewshot|niah|cot] [--odp] [--avg-bits ...]
+//!   serve     [--requests 16] [--batch 4] [--odp]
+//!   generate  [--task 3] [--max-new 16]
+//!   expert-analysis [--out file.json]     (Fig. 3 / Fig. 10 data)
+
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+use mc_moe::config::{artifacts_dir, ModelConfig, TASK_NAMES};
+use mc_moe::coordinator::{memmodel, Server};
+use mc_moe::data::{calibration_set, Split};
+use mc_moe::eval::{eval_cot_chain, eval_niah_grid, eval_suite, perplexity};
+use mc_moe::moe::{MoeModel, WeightFile};
+use mc_moe::pmq::allocate::{Allocator, PmqHyper};
+use mc_moe::pmq::{Workbench, WorkbenchConfig};
+use mc_moe::util::cli::Args;
+
+fn load_fp(dir: &Path) -> Result<MoeModel> {
+    let cfg = ModelConfig::load(&dir.join("config.json"))
+        .context("run `make artifacts` first")?;
+    let wf = WeightFile::load(&dir.join("weights.mcwt"))?;
+    MoeModel::load_f32(&cfg, &wf)
+}
+
+fn parse_strategy(s: &str) -> Result<Allocator> {
+    Ok(match s {
+        "pmq" => Allocator::Pmq,
+        "fnorm" => Allocator::FNorm,
+        "frequency" | "freq" => Allocator::Frequency,
+        "weight" => Allocator::Weight,
+        "hessian" => Allocator::Hessian,
+        "bsp" => Allocator::Bsp,
+        "random" => Allocator::Random(0),
+        other => bail!("unknown strategy {other:?}"),
+    })
+}
+
+fn build_workbench(fp: MoeModel, fast: bool) -> Result<Workbench> {
+    let cfg = WorkbenchConfig {
+        calib_seqs: if fast { 4 } else { 8 },
+        probe_seqs: if fast { 1 } else { 2 },
+        fast_eps: fast,
+        ..Default::default()
+    };
+    Workbench::build(fp, cfg)
+}
+
+fn cmd_info(dir: &Path) -> Result<()> {
+    let cfg = ModelConfig::load(&dir.join("config.json"))?;
+    println!("config: {} ({} params, {} expert params)",
+             cfg.name, cfg.param_count(), cfg.expert_param_count());
+    println!("layers={} experts={} d_model={} d_ff={} top_k={}",
+             cfg.n_layers, cfg.n_experts, cfg.d_model, cfg.d_ff, cfg.top_k);
+    for name in ["weights.mcwt", "model_fwd.hlo.txt", "manifest.json"] {
+        println!("  {:22} {}", name,
+                 if dir.join(name).exists() { "present" } else { "MISSING" });
+    }
+    Ok(())
+}
+
+fn cmd_compress(dir: &Path, args: &Args) -> Result<()> {
+    let fp = load_fp(dir)?;
+    let n = fp.cfg.n_experts;
+    let avg = args.f64_or("avg-bits", 2.5)?;
+    let total = (avg * n as f64).round() as usize;
+    let strategy = parse_strategy(&args.get_or("strategy", "pmq"))?;
+    eprintln!("building workbench (calibration + GPTQ zoo + probes)...");
+    let wb = build_workbench(fp, args.flag("fast"))?;
+    let (model, alloc) = wb.compress(strategy, total, PmqHyper::default())?;
+    println!("strategy={} nominal-avg={:.2}b storage-true={:.2}b",
+             alloc.strategy, alloc.avg_bits(), model.expert_avg_bits());
+    println!("histogram 1/2/3-bit: {:?}", alloc.histogram());
+    for (l, row) in alloc.bits.iter().enumerate() {
+        println!("  layer {l:2}: {row:?}");
+    }
+    println!("size: fp={:.3}GB -> mc={:.3}GB ({:.1}% compressed)",
+             memmodel::gb(memmodel::loading_bytes(&wb.fp)),
+             memmodel::gb(memmodel::loading_bytes(&model)),
+             100.0 * (1.0 - memmodel::loading_bytes(&model) as f64
+                      / memmodel::loading_bytes(&wb.fp) as f64));
+    if let Some(save) = args.get("save") {
+        mc_moe::moe::qz::save(Path::new(save), &model)?;
+        println!("saved compressed model to {save} ({:.3} MB)",
+                 std::fs::metadata(save)?.len() as f64 / 1e6);
+    }
+    if args.flag("eval") {
+        let r = eval_suite(&model, 30, 0, 4242, None);
+        for (name, analogue, acc) in &r.rows {
+            println!("  {name:10} ({analogue:8}): {:.1}%", acc * 100.0);
+        }
+        println!("  average: {:.2}%", r.average * 100.0);
+    }
+    Ok(())
+}
+
+fn cmd_eval(dir: &Path, args: &Args) -> Result<()> {
+    if let Some(path) = args.get("load") {
+        // evaluate a saved MCQZ model directly (no recalibration)
+        let model = mc_moe::moe::qz::load(Path::new(path))?;
+        println!("loaded {} ({:.2} expert bits)", path, model.expert_avg_bits());
+        let samples = args.usize_or("samples", 50)?;
+        let r = eval_suite(&model, samples, 0, 4242, None);
+        for (name, analogue, acc) in &r.rows {
+            println!("{name:10} ({analogue:8}): {:.1}%", acc * 100.0);
+        }
+        println!("average: {:.2}%", r.average * 100.0);
+        return Ok(());
+    }
+    let fp = load_fp(dir)?;
+    let n = fp.cfg.n_experts;
+    let n_layers = fp.cfg.n_layers;
+    let (model, policy) = if let Some(avg) = args.get("avg-bits") {
+        let avg: f64 = avg.parse()?;
+        let total = (avg * n as f64).round() as usize;
+        let strategy = parse_strategy(&args.get_or("strategy", "pmq"))?;
+        let wb = build_workbench(fp, args.flag("fast"))?;
+        let (m, _) = wb.compress(strategy, total, PmqHyper::default())?;
+        let policy = args.flag("odp").then(|| wb.odp_policy(0.02));
+        (m, policy)
+    } else {
+        let policy = args.flag("odp").then(|| {
+            let seqs = calibration_set(17, 4, fp.cfg.max_seq.min(256),
+                                       Split::General);
+            let cal = mc_moe::pmq::calibrate(&fp, &seqs);
+            mc_moe::odp::odp_default(&cal)
+        });
+        (fp, policy)
+    };
+    let _ = n_layers;
+    match args.get_or("mode", "suite").as_str() {
+        "suite" => {
+            let samples = args.usize_or("samples", 50)?;
+            let r = eval_suite(&model, samples, 0, 4242, policy.as_ref());
+            for (name, analogue, acc) in &r.rows {
+                println!("{name:10} ({analogue:8}): {:.1}%", acc * 100.0);
+            }
+            println!("average: {:.2}%  CR: {:.1}%", r.average * 100.0,
+                     r.stats.compression_ratio() * 100.0);
+        }
+        "fewshot" => {
+            let samples = args.usize_or("samples", 30)?;
+            let shots = args.usize_or("shots", 5)?;
+            let (acc, _) = mc_moe::eval::eval_task(&model, 7, samples, shots,
+                                                   4242, policy.as_ref());
+            println!("induction (MMLU-analogue) {shots}-shot: {:.2}%", acc * 100.0);
+        }
+        "ppl" => {
+            let r = perplexity(&model, Split::Text, 4242, 8, model.cfg.max_seq,
+                               policy.as_ref());
+            println!("PPL(text): {:.3}  tokens={}  CR={:.1}%", r.ppl, r.tokens,
+                     r.stats.compression_ratio() * 100.0);
+        }
+        "niah" => {
+            let grid = eval_niah_grid(&model, &[64, 128, 192, 256],
+                                      &[0.1, 0.5, 0.9], 20, 4242, policy.as_ref());
+            println!("NIAH accuracy (rows=len 64..256, cols=depth .1/.5/.9):");
+            for row in grid {
+                println!("  {:?}", row.iter().map(|v| format!("{:.2}", v))
+                         .collect::<Vec<_>>());
+            }
+        }
+        "cot" => {
+            for steps in [1, 2, 4] {
+                let acc = eval_cot_chain(&model, steps, 40, 4242, policy.as_ref());
+                println!("CoT chain x{steps}: {:.1}%", acc * 100.0);
+            }
+        }
+        other => bail!("unknown mode {other:?}"),
+    }
+    Ok(())
+}
+
+fn cmd_serve(dir: &Path, args: &Args) -> Result<()> {
+    let fp = load_fp(dir)?;
+    let odp = args.flag("odp").then(|| {
+        let seqs = calibration_set(17, 4, fp.cfg.max_seq.min(256), Split::General);
+        let cal = mc_moe::pmq::calibrate(&fp, &seqs);
+        mc_moe::coordinator::DecodeOdp::calibrate(
+            &fp, &seqs, cal.mu_median(), 0.02)
+    });
+    let n_req = args.usize_or("requests", 16)?;
+    let batch = args.usize_or("batch", 4)?;
+    let max_new = args.usize_or("max-new", 24)?;
+    let server = Server::spawn(Arc::new(fp), odp, batch);
+    let mut rng = mc_moe::util::rng::Rng::new(99);
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n_req)
+        .map(|_| {
+            let task = rng.below(8);
+            let mut prompt = mc_moe::data::task_sequence(&mut rng, task);
+            prompt.truncate(prompt.len() - 2); // stop at SEP
+            server.submit(prompt, max_new)
+        })
+        .collect();
+    for rx in rxs {
+        let _ = rx.recv();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!("{}", server.metrics.render_text());
+    println!("wall: {dt:.2}s  throughput: {:.1} tok/s",
+             server.metrics.tokens_generated.load(
+                 std::sync::atomic::Ordering::Relaxed) as f64 / dt);
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_generate(dir: &Path, args: &Args) -> Result<()> {
+    let fp = load_fp(dir)?;
+    let engine = mc_moe::coordinator::McEngine::new(fp, None, None);
+    let task = args.usize_or("task", 3)?;
+    let mut rng = mc_moe::util::rng::Rng::new(args.usize_or("seed", 5)? as u64);
+    let seq = mc_moe::data::task_sequence(&mut rng, task);
+    let sep = seq.iter().position(|&t| t == 3).unwrap();
+    let prompt = &seq[..=sep];
+    let gold = &seq[sep + 1..seq.len() - 1];
+    let out = engine.generate(prompt, args.usize_or("max-new", 16)?)?;
+    println!("task     : {}", TASK_NAMES[task]);
+    println!("prompt   : {prompt:?}");
+    println!("generated: {out:?}");
+    println!("gold     : {gold:?}");
+    Ok(())
+}
+
+fn cmd_expert_analysis(dir: &Path, args: &Args) -> Result<()> {
+    let fp = load_fp(dir)?;
+    let wb = build_workbench(fp, args.flag("fast"))?;
+    let json = wb.sig.to_json().to_string();
+    let out = args.get_or("out", "expert_analysis.json");
+    std::fs::write(&out, &json)?;
+    println!("wrote {out} ({} bytes)", json.len());
+    // also print per-layer summary
+    for l in 0..wb.fp.cfg.n_layers {
+        let phi: Vec<String> =
+            wb.sig.phi[l].iter().map(|v| format!("{v:.2}")).collect();
+        println!("layer {l}: phi = {phi:?}");
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let dir = artifacts_dir();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("info") => cmd_info(&dir),
+        Some("compress") => cmd_compress(&dir, &args),
+        Some("eval") => cmd_eval(&dir, &args),
+        Some("serve") => cmd_serve(&dir, &args),
+        Some("generate") => cmd_generate(&dir, &args),
+        Some("expert-analysis") => cmd_expert_analysis(&dir, &args),
+        _ => {
+            eprintln!("usage: mc-moe <info|compress|eval|serve|generate|expert-analysis> [options]");
+            std::process::exit(2);
+        }
+    }
+}

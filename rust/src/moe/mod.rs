@@ -1,0 +1,9 @@
+//! The MoE-LLM substrate: weight loading (MCWT) and the native f32 /
+//! quantized forward engine that PMQ calibrates against and ODP prunes.
+
+pub mod model;
+pub mod qz;
+pub mod weights;
+
+pub use model::{ForwardOpts, ForwardOut, MoeModel, RunStats};
+pub use weights::{Tensor, WeightFile};

@@ -1,0 +1,793 @@
+//! Native MoE transformer engine (rust twin of `python/compile/model.py`).
+//!
+//! One engine serves every representation: experts are `QTensor`s, so
+//! the same forward runs the FP32 reference, RTN/GPTQ-quantized, and
+//! binary models. ODP (paper Sec. 3.3) is applied inline during routing;
+//! calibration sinks observe expert inputs for GPTQ Hessians and
+//! significance statistics (Sec. 3.2.1).
+//!
+//! Numerical parity with the JAX model is asserted against
+//! `artifacts/golden.mcwt` in `tests/golden_parity.rs`.
+
+use anyhow::Result;
+
+use crate::config::ModelConfig;
+use crate::quant::QTensor;
+use crate::tensor::{add_inplace, log_softmax, rmsnorm, softmax_rows, Mat};
+use crate::util::stats::{kurtosis, mean, top_k_indices, variance};
+
+use super::weights::WeightFile;
+
+pub const RMS_EPS: f32 = 1e-5;
+const NEG_INF: f32 = -1e30;
+
+// ---------------------------------------------------------------------------
+// Weights
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone)]
+pub struct Expert {
+    pub w1: QTensor,
+    pub w3: QTensor,
+    pub w2: QTensor,
+}
+
+impl Expert {
+    /// SwiGLU FFN on a token batch x[T, D] -> y[T, D].
+    pub fn forward(&self, x: &Mat) -> Mat {
+        let g = self.gated_hidden(x);
+        self.w2.matmul(&g)
+    }
+
+    /// silu(x@w1) * (x@w3) — exposed so calibration can capture the
+    /// w2-input Hessian.
+    pub fn gated_hidden(&self, x: &Mat) -> Mat {
+        let mut h1 = self.w1.matmul(x);
+        let h3 = self.w3.matmul(x);
+        for (a, &b) in h1.data.iter_mut().zip(&h3.data) {
+            *a = crate::tensor::silu(*a) * b;
+        }
+        h1
+    }
+
+    pub fn storage_bytes(&self) -> usize {
+        self.w1.storage_bytes() + self.w3.storage_bytes() + self.w2.storage_bytes()
+    }
+
+    pub fn param_count(&self) -> usize {
+        let (k1, n1) = self.w1.shape();
+        let (k3, n3) = self.w3.shape();
+        let (k2, n2) = self.w2.shape();
+        k1 * n1 + k3 * n3 + k2 * n2
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub attn_norm: Vec<f32>,
+    pub ffn_norm: Vec<f32>,
+    pub gate: Mat,
+    pub wq: QTensor,
+    pub wk: QTensor,
+    pub wv: QTensor,
+    pub wo: QTensor,
+    pub experts: Vec<Expert>,
+}
+
+#[derive(Debug, Clone)]
+pub struct MoeModel {
+    pub cfg: ModelConfig,
+    pub tok_emb: Mat,
+    pub pos_emb: Mat,
+    pub final_norm: Vec<f32>,
+    pub lm_head: Mat,
+    pub layers: Vec<Layer>,
+}
+
+impl MoeModel {
+    /// Load the FP32 model from an MCWT weight file.
+    pub fn load_f32(cfg: &ModelConfig, wf: &WeightFile) -> Result<MoeModel> {
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let mut experts = Vec::with_capacity(cfg.n_experts);
+            for e in 0..cfg.n_experts {
+                let p = |m: &str| format!("layers.{i}.experts.{e}.{m}");
+                experts.push(Expert {
+                    w1: QTensor::F32(wf.mat(&p("w1"))?),
+                    w3: QTensor::F32(wf.mat(&p("w3"))?),
+                    w2: QTensor::F32(wf.mat(&p("w2"))?),
+                });
+            }
+            layers.push(Layer {
+                attn_norm: wf.vec1(&format!("layers.{i}.attn_norm"))?,
+                ffn_norm: wf.vec1(&format!("layers.{i}.ffn_norm"))?,
+                gate: wf.mat(&format!("layers.{i}.gate"))?,
+                wq: QTensor::F32(wf.mat(&format!("layers.{i}.attn.wq"))?),
+                wk: QTensor::F32(wf.mat(&format!("layers.{i}.attn.wk"))?),
+                wv: QTensor::F32(wf.mat(&format!("layers.{i}.attn.wv"))?),
+                wo: QTensor::F32(wf.mat(&format!("layers.{i}.attn.wo"))?),
+                experts,
+            });
+        }
+        Ok(MoeModel {
+            cfg: cfg.clone(),
+            tok_emb: wf.mat("tok_emb")?,
+            pos_emb: wf.mat("pos_emb")?,
+            final_norm: wf.vec1("final_norm")?,
+            lm_head: wf.mat("lm_head")?,
+            layers,
+        })
+    }
+
+    /// Total weight storage in bytes (the paper's "Params" column).
+    pub fn storage_bytes(&self) -> usize {
+        let mut total = (self.tok_emb.data.len()
+            + self.pos_emb.data.len()
+            + self.final_norm.len()
+            + self.lm_head.data.len())
+            * 4;
+        for l in &self.layers {
+            total += (l.attn_norm.len() + l.ffn_norm.len() + l.gate.data.len()) * 4;
+            total += l.wq.storage_bytes()
+                + l.wk.storage_bytes()
+                + l.wv.storage_bytes()
+                + l.wo.storage_bytes();
+            for e in &l.experts {
+                total += e.storage_bytes();
+            }
+        }
+        total
+    }
+
+    /// Average bits per *expert* weight (the paper's "Bits" axis).
+    pub fn expert_avg_bits(&self) -> f64 {
+        let mut bits = 0.0;
+        let mut elems = 0.0;
+        for l in &self.layers {
+            for e in &l.experts {
+                for t in [&e.w1, &e.w3, &e.w2] {
+                    let (k, n) = t.shape();
+                    bits += t.storage_bytes() as f64 * 8.0;
+                    elems += (k * n) as f64;
+                }
+            }
+        }
+        bits / elems
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ODP policy (paper Sec. 3.3; calibrated by `odp::calibrate`)
+// ---------------------------------------------------------------------------
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TokenMetric {
+    /// paper Eq. 6: ||t||_1 * attention-received column mean
+    Eq6Importance,
+    /// Tab. 11 baselines over the token hidden state
+    Kurtosis,
+    Variance,
+    MeanAbs,
+}
+
+#[derive(Debug, Clone)]
+pub enum OdpPolicy {
+    /// no dynamic pruning
+    None,
+    /// Lu et al. 2024: drop the secondary expert when w1/w0 < mu[layer]
+    WeightOnly { mu: Vec<f32> },
+    /// ODP: weight pruning + protect the top `protect_ratio` tokens by
+    /// Eq.-6 importance (their experts are never pruned)
+    Protected { mu: Vec<f32>, protect_ratio: f32 },
+    /// Fig. 8 mode: Protected + additionally mask *all* experts of the
+    /// bottom `drop_ratio` tokens
+    ProtectedDropAll { mu: Vec<f32>, protect_ratio: f32, drop_ratio: f32 },
+    /// Tab. 11 baselines: prune the secondary expert of the bottom
+    /// `prune_frac` tokens ranked by `metric`
+    TokenMetric { metric: TokenMetric, prune_frac: f32 },
+}
+
+impl OdpPolicy {
+    fn needs_importance(&self) -> bool {
+        matches!(
+            self,
+            OdpPolicy::Protected { .. }
+                | OdpPolicy::ProtectedDropAll { .. }
+                | OdpPolicy::TokenMetric { metric: TokenMetric::Eq6Importance, .. }
+        )
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forward options / outputs
+// ---------------------------------------------------------------------------
+
+/// Observer for calibration passes (GPTQ Hessians, significance).
+pub trait CalibSink {
+    /// Rows of the post-norm hidden state routed to (layer, expert),
+    /// plus the gated hidden (input of w2).
+    fn expert_batch(&mut self, _layer: usize, _expert: usize, _x: &Mat, _gated: &Mat) {}
+    /// Full router distribution for one layer ([S, E]) and the selected
+    /// (renormalized) top-k weights per token.
+    fn routing(&mut self, _layer: usize, _probs: &Mat, _topk: &[Vec<(usize, f32)>]) {}
+    /// Attention inputs of one layer (for quantizing wq/wk/wv).
+    fn attn_batch(&mut self, _layer: usize, _x: &Mat) {}
+    /// Concatenated head outputs (input of wo).
+    fn attn_out_batch(&mut self, _layer: usize, _x: &Mat) {}
+    /// Post-ffn-norm hidden states (input of the gate and experts).
+    fn moe_input(&mut self, _layer: usize, _x: &Mat) {}
+}
+
+/// No-op sink.
+pub struct NullSink;
+impl CalibSink for NullSink {}
+
+#[derive(Default)]
+pub struct ForwardOpts<'a> {
+    pub odp: Option<&'a OdpPolicy>,
+    /// exclude this (layer, expert) from routing entirely (drop-F-norm)
+    pub mask_expert: Option<(usize, usize)>,
+    /// substitute this expert at (layer, expert) (PMQ's eps_{i,j} probe)
+    pub override_expert: Option<(usize, usize, &'a Expert)>,
+    pub collect_probs: bool,
+    pub collect_importance: bool,
+    pub collect_ratio_samples: bool,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct RunStats {
+    /// expert invocations actually executed
+    pub expert_calls: usize,
+    /// S * top_k summed over layers (the no-pruning count)
+    pub expert_possible: usize,
+    pub dropped_secondary: usize,
+    pub dropped_all: usize,
+    /// per [layer][expert] activation counts (significance phi)
+    pub activation_counts: Vec<Vec<u64>>,
+    /// per [layer][expert] summed renormalized routing weights (w_i)
+    pub weight_sums: Vec<Vec<f64>>,
+    pub tokens_seen: usize,
+}
+
+impl RunStats {
+    pub fn new(n_layers: usize, n_experts: usize) -> RunStats {
+        RunStats {
+            activation_counts: vec![vec![0; n_experts]; n_layers],
+            weight_sums: vec![vec![0.0; n_experts]; n_layers],
+            ..Default::default()
+        }
+    }
+
+    pub fn merge(&mut self, other: &RunStats) {
+        self.expert_calls += other.expert_calls;
+        self.expert_possible += other.expert_possible;
+        self.dropped_secondary += other.dropped_secondary;
+        self.dropped_all += other.dropped_all;
+        self.tokens_seen += other.tokens_seen;
+        for (a, b) in self.activation_counts.iter_mut().zip(&other.activation_counts) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        }
+        for (a, b) in self.weight_sums.iter_mut().zip(&other.weight_sums) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        }
+    }
+
+    /// Fraction of expert compute saved by pruning (paper's "CR").
+    pub fn compression_ratio(&self) -> f64 {
+        if self.expert_possible == 0 {
+            return 0.0;
+        }
+        (self.dropped_secondary + self.dropped_all) as f64 / self.expert_possible as f64
+    }
+}
+
+pub struct ForwardOut {
+    pub logits: Mat,
+    pub stats: RunStats,
+    pub probs: Vec<Mat>,
+    pub importance: Vec<Vec<f32>>,
+    pub ratio_samples: Vec<Vec<f32>>,
+}
+
+// ---------------------------------------------------------------------------
+// Forward
+// ---------------------------------------------------------------------------
+
+impl MoeModel {
+    /// Full-sequence scoring forward. `tokens` length <= cfg.max_seq.
+    pub fn forward(&self, tokens: &[u32], opts: &ForwardOpts,
+                   sink: &mut dyn CalibSink) -> ForwardOut {
+        let s = tokens.len();
+        let (d, nh) = (self.cfg.d_model, self.cfg.n_heads);
+        let hd = d / nh;
+        assert!(s <= self.cfg.max_seq, "sequence too long: {s}");
+
+        let mut x = Mat::zeros(s, d);
+        for (t, &tok) in tokens.iter().enumerate() {
+            let emb = self.tok_emb.row(tok as usize);
+            let pos = self.pos_emb.row(t);
+            for c in 0..d {
+                x.data[t * d + c] = emb[c] + pos[c];
+            }
+        }
+
+        let mut stats = RunStats::new(self.cfg.n_layers, self.cfg.n_experts);
+        let mut out = ForwardOut {
+            logits: Mat::zeros(0, 0),
+            stats: RunStats::new(self.cfg.n_layers, self.cfg.n_experts),
+            probs: Vec::new(),
+            importance: Vec::new(),
+            ratio_samples: Vec::new(),
+        };
+        stats.tokens_seen = s;
+
+        for (li, layer) in self.layers.iter().enumerate() {
+            // ---- attention ----
+            let h = rmsnorm(&x, &layer.attn_norm, RMS_EPS);
+            sink.attn_batch(li, &h);
+            let q = layer.wq.matmul(&h);
+            let k = layer.wk.matmul(&h);
+            let v = layer.wv.matmul(&h);
+            // head-averaged attention map, accumulated for Eq. 6
+            let mut a_mean = Mat::zeros(s, s);
+            let mut attn_out = Mat::zeros(s, d);
+            let scale = 1.0 / (hd as f32).sqrt();
+            // transposed K per head so the score loop vectorizes over j
+            // (EXPERIMENTS.md §Perf: ikj axpy instead of per-pair dots)
+            let mut kht = vec![0.0f32; hd * s];
+            for head in 0..nh {
+                let c0 = head * hd;
+                for j in 0..s {
+                    let krow = &k.row(j)[c0..c0 + hd];
+                    for (d, &kv) in krow.iter().enumerate() {
+                        kht[d * s + j] = kv;
+                    }
+                }
+                let mut scores = Mat::zeros(s, s);
+                for i in 0..s {
+                    let qrow = &q.row(i)[c0..c0 + hd];
+                    let srow = &mut scores.data[i * s..i * s + s];
+                    for (d, &qv) in qrow.iter().enumerate() {
+                        let kr = &kht[d * s..d * s + i + 1];
+                        for (sv, &kv) in srow[..=i].iter_mut().zip(kr) {
+                            *sv += qv * kv;
+                        }
+                    }
+                    for sv in srow[..=i].iter_mut() {
+                        *sv *= scale;
+                    }
+                    for sv in srow[i + 1..].iter_mut() {
+                        *sv = NEG_INF;
+                    }
+                }
+                softmax_rows(&mut scores);
+                for (am, sc) in a_mean.data.iter_mut().zip(&scores.data) {
+                    *am += sc / nh as f32;
+                }
+                // attn_out[:, c0..c0+hd] = scores @ v[:, c0..c0+hd]
+                for i in 0..s {
+                    for j in 0..=i {
+                        let a = scores.data[i * s + j];
+                        if a == 0.0 {
+                            continue;
+                        }
+                        let vrow = &v.row(j)[c0..c0 + hd];
+                        let orow = &mut attn_out.data[i * d + c0..i * d + c0 + hd];
+                        for (o, &vv) in orow.iter_mut().zip(vrow) {
+                            *o += a * vv;
+                        }
+                    }
+                }
+            }
+            sink.attn_out_batch(li, &attn_out);
+            let attn_proj = layer.wo.matmul(&attn_out);
+            add_inplace(&mut x, &attn_proj);
+
+            // ---- MoE FFN ----
+            let h = rmsnorm(&x, &layer.ffn_norm, RMS_EPS);
+            sink.moe_input(li, &h);
+
+            // router
+            let mut probs = h.matmul(&layer.gate);
+            softmax_rows(&mut probs);
+
+            // token metric for ODP
+            let odp = opts.odp.unwrap_or(&OdpPolicy::None);
+            let needs_imp = odp.needs_importance() || opts.collect_importance;
+            let importance: Vec<f32> = if needs_imp {
+                eq6_importance(&h, &a_mean)
+            } else {
+                Vec::new()
+            };
+            let metric_vals: Vec<f32> = match odp {
+                OdpPolicy::TokenMetric { metric, .. } => match metric {
+                    TokenMetric::Eq6Importance => importance.clone(),
+                    TokenMetric::Kurtosis => {
+                        (0..s).map(|t| kurtosis(h.row(t))).collect()
+                    }
+                    TokenMetric::Variance => {
+                        (0..s).map(|t| variance(h.row(t))).collect()
+                    }
+                    TokenMetric::MeanAbs => (0..s)
+                        .map(|t| mean(&h.row(t).iter().map(|v| v.abs()).collect::<Vec<_>>()))
+                        .collect(),
+                },
+                _ => Vec::new(),
+            };
+
+            // protected / dropped token sets
+            let protected = match odp {
+                OdpPolicy::Protected { protect_ratio, .. }
+                | OdpPolicy::ProtectedDropAll { protect_ratio, .. } => {
+                    let n_prot = ((s as f32) * protect_ratio).ceil() as usize;
+                    let mut mask = vec![false; s];
+                    for idx in top_k_indices(&importance, n_prot.min(s)) {
+                        mask[idx] = true;
+                    }
+                    mask
+                }
+                _ => vec![false; s],
+            };
+            let drop_all = match odp {
+                OdpPolicy::ProtectedDropAll { drop_ratio, .. } => {
+                    let n_drop = ((s as f32) * drop_ratio).floor() as usize;
+                    let neg: Vec<f32> = importance.iter().map(|v| -v).collect();
+                    let mut mask = vec![false; s];
+                    for idx in top_k_indices(&neg, n_drop.min(s)) {
+                        if !protected[idx] {
+                            mask[idx] = true;
+                        }
+                    }
+                    mask
+                }
+                _ => vec![false; s],
+            };
+            let metric_pruned = match odp {
+                OdpPolicy::TokenMetric { prune_frac, .. } => {
+                    let n_prune = ((s as f32) * prune_frac).round() as usize;
+                    let neg: Vec<f32> = metric_vals.iter().map(|v| -v).collect();
+                    let mut mask = vec![false; s];
+                    for idx in top_k_indices(&neg, n_prune.min(s)) {
+                        mask[idx] = true;
+                    }
+                    mask
+                }
+                _ => vec![false; s],
+            };
+
+            // per-token top-k selection (+ ODP decisions)
+            let mut topk: Vec<Vec<(usize, f32)>> = Vec::with_capacity(s);
+            let mut ratio_samples = Vec::new();
+            stats.expert_possible += s * self.cfg.top_k;
+            for t in 0..s {
+                let row = probs.row(t);
+                let mut sel = select_top_k(row, self.cfg.top_k, |e| {
+                    opts.mask_expert != Some((li, e))
+                });
+                // renormalize
+                let sum: f32 = sel.iter().map(|&(_, w)| w).sum();
+                for se in sel.iter_mut() {
+                    se.1 /= sum;
+                }
+                for &(e, w) in &sel {
+                    stats.activation_counts[li][e] += 1;
+                    stats.weight_sums[li][e] += w as f64;
+                }
+                let ratio = if sel.len() >= 2 { sel[1].1 / sel[0].1 } else { 0.0 };
+                if opts.collect_ratio_samples {
+                    ratio_samples.push(ratio);
+                }
+                // ODP decision
+                if drop_all[t] {
+                    stats.dropped_all += sel.len();
+                    sel.clear();
+                } else {
+                    let prune_secondary = match odp {
+                        OdpPolicy::None => false,
+                        OdpPolicy::WeightOnly { mu } => ratio < mu[li],
+                        OdpPolicy::Protected { mu, .. }
+                        | OdpPolicy::ProtectedDropAll { mu, .. } => {
+                            !protected[t] && ratio < mu[li]
+                        }
+                        OdpPolicy::TokenMetric { .. } => metric_pruned[t],
+                    };
+                    if prune_secondary && sel.len() >= 2 {
+                        sel.truncate(1);
+                        sel[0].1 = 1.0;
+                        stats.dropped_secondary += 1;
+                    }
+                }
+                stats.expert_calls += sel.len();
+                topk.push(sel);
+            }
+            sink.routing(li, &probs, &topk);
+
+            // gather tokens per expert, run expert FFN batched, scatter
+            let mut y = Mat::zeros(s, d);
+            for e in 0..self.cfg.n_experts {
+                let rows: Vec<(usize, f32)> = (0..s)
+                    .flat_map(|t| {
+                        topk[t].iter().filter(|&&(ex, _)| ex == e).map(move |&(_, w)| (t, w))
+                    })
+                    .collect();
+                if rows.is_empty() {
+                    continue;
+                }
+                let mut xe = Mat::zeros(rows.len(), d);
+                for (ri, &(t, _)) in rows.iter().enumerate() {
+                    xe.row_mut(ri).copy_from_slice(h.row(t));
+                }
+                let expert: &Expert = match opts.override_expert {
+                    Some((l, ex, repl)) if l == li && ex == e => repl,
+                    _ => &layer.experts[e],
+                };
+                let gated = expert.gated_hidden(&xe);
+                sink.expert_batch(li, e, &xe, &gated);
+                let ye = expert.w2.matmul(&gated);
+                for (ri, &(t, w)) in rows.iter().enumerate() {
+                    let yrow = ye.row(ri);
+                    let orow = &mut y.data[t * d..(t + 1) * d];
+                    for (o, &v) in orow.iter_mut().zip(yrow) {
+                        *o += w * v;
+                    }
+                }
+            }
+            add_inplace(&mut x, &y);
+
+            if opts.collect_probs {
+                out.probs.push(probs);
+            }
+            if opts.collect_importance {
+                out.importance.push(importance);
+            }
+            if opts.collect_ratio_samples {
+                out.ratio_samples.push(ratio_samples);
+            }
+        }
+
+        let xf = rmsnorm(&x, &self.final_norm, RMS_EPS);
+        out.logits = xf.matmul(&self.lm_head);
+        out.stats = stats;
+        out
+    }
+
+    /// Convenience: plain scoring logits, no ODP, no collection.
+    pub fn score(&self, tokens: &[u32]) -> Mat {
+        self.forward(tokens, &ForwardOpts::default(), &mut NullSink).logits
+    }
+
+    /// Sum of next-token log-likelihoods of `targets` given the logits
+    /// computed at positions [start-1 .. start-1+len).
+    pub fn continuation_logprob(logits: &Mat, tokens: &[u32], start: usize) -> f32 {
+        let mut total = 0.0;
+        for (i, &tok) in tokens.iter().enumerate().skip(start) {
+            let lp = log_softmax(logits.row(i - 1));
+            total += lp[tok as usize];
+        }
+        total
+    }
+}
+
+/// Eq. 6: I_j = ||t_j||_1 * mean_{i >= j} A[i, j] (head-averaged A).
+pub fn eq6_importance(h: &Mat, a_mean: &Mat) -> Vec<f32> {
+    let s = h.rows;
+    let mut out = vec![0.0f32; s];
+    for j in 0..s {
+        let mut col = 0.0;
+        for i in j..s {
+            col += a_mean.data[i * s + j];
+        }
+        let denom = (s - j).max(1) as f32;
+        let l1: f32 = h.row(j).iter().map(|v| v.abs()).sum();
+        out[j] = l1 * (col / denom);
+    }
+    out
+}
+
+/// Top-k expert selection over a router row, honoring an eligibility
+/// filter; ties break toward the lower index (matches jax.lax.top_k).
+pub fn select_top_k(row: &[f32], k: usize, eligible: impl Fn(usize) -> bool)
+                    -> Vec<(usize, f32)> {
+    let mut sel: Vec<(usize, f32)> = Vec::with_capacity(k + 1);
+    for (e, &w) in row.iter().enumerate() {
+        if !eligible(e) {
+            continue;
+        }
+        sel.push((e, w));
+        sel.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        sel.truncate(k);
+    }
+    sel
+}
+
+#[cfg(test)]
+pub mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Randomly-initialized model for unit tests across modules.
+    pub fn random_model(cfg: &ModelConfig, seed: u64) -> MoeModel {
+        let mut rng = Rng::new(seed);
+        let d = cfg.d_model;
+        let mk = |rng: &mut Rng, r: usize, c: usize| {
+            QTensor::F32(Mat::randn(rng, r, c, (r as f32).powf(-0.5)))
+        };
+        let layers = (0..cfg.n_layers)
+            .map(|_| Layer {
+                attn_norm: vec![1.0; d],
+                ffn_norm: vec![1.0; d],
+                gate: Mat::randn(&mut rng, d, cfg.n_experts, (d as f32).powf(-0.5)),
+                wq: mk(&mut rng, d, d),
+                wk: mk(&mut rng, d, d),
+                wv: mk(&mut rng, d, d),
+                wo: mk(&mut rng, d, d),
+                experts: (0..cfg.n_experts)
+                    .map(|_| Expert {
+                        w1: mk(&mut rng, d, cfg.d_ff),
+                        w3: mk(&mut rng, d, cfg.d_ff),
+                        w2: mk(&mut rng, cfg.d_ff, d),
+                    })
+                    .collect(),
+            })
+            .collect();
+        MoeModel {
+            cfg: cfg.clone(),
+            tok_emb: Mat::randn(&mut rng, cfg.vocab_size, d, 0.02),
+            pos_emb: Mat::randn(&mut rng, cfg.max_seq, d, 0.02),
+            final_norm: vec![1.0; d],
+            lm_head: Mat::randn(&mut rng, d, cfg.vocab_size, (d as f32).powf(-0.5)),
+            layers,
+        }
+    }
+
+    fn toks(n: usize) -> Vec<u32> {
+        (0..n).map(|i| ((i * 37) % 200 + 1) as u32).collect()
+    }
+
+    #[test]
+    fn forward_shapes_and_stats() {
+        let cfg = ModelConfig::test_tiny();
+        let m = random_model(&cfg, 0);
+        let out = m.forward(&toks(24), &ForwardOpts::default(), &mut NullSink);
+        assert_eq!((out.logits.rows, out.logits.cols), (24, cfg.vocab_size));
+        assert_eq!(out.stats.expert_possible, 24 * 2 * cfg.n_layers);
+        assert_eq!(out.stats.expert_calls, out.stats.expert_possible);
+        assert_eq!(out.stats.compression_ratio(), 0.0);
+    }
+
+    #[test]
+    fn forward_is_causal() {
+        let cfg = ModelConfig::test_tiny();
+        let m = random_model(&cfg, 1);
+        let t1 = toks(20);
+        let mut t2 = t1.clone();
+        t2[15] = 42;
+        let l1 = m.score(&t1);
+        let l2 = m.score(&t2);
+        for i in 0..15 {
+            for c in 0..cfg.vocab_size {
+                assert!((l1.at(i, c) - l2.at(i, c)).abs() < 1e-5);
+            }
+        }
+        // position 15 onward must differ
+        assert!((0..cfg.vocab_size).any(|c| (l1.at(15, c) - l2.at(15, c)).abs() > 1e-6));
+    }
+
+    #[test]
+    fn select_top_k_ties_prefer_lower_index() {
+        let sel = select_top_k(&[0.25, 0.25, 0.4, 0.1], 2, |_| true);
+        assert_eq!(sel[0].0, 2);
+        assert_eq!(sel[1].0, 0); // tie 0 vs 1 -> lower index
+    }
+
+    #[test]
+    fn mask_expert_reroutes() {
+        let cfg = ModelConfig::test_tiny();
+        let m = random_model(&cfg, 2);
+        let opts = ForwardOpts {
+            mask_expert: Some((0, 1)),
+            ..Default::default()
+        };
+        let out = m.forward(&toks(16), &opts, &mut NullSink);
+        assert_eq!(out.stats.activation_counts[0][1], 0);
+        // all tokens still get top_k experts
+        assert_eq!(out.stats.expert_calls, out.stats.expert_possible);
+        // other layers unaffected
+        assert!(out.stats.activation_counts[1].iter().sum::<u64>() > 0);
+    }
+
+    #[test]
+    fn weight_only_pruning_reduces_calls() {
+        let cfg = ModelConfig::test_tiny();
+        let m = random_model(&cfg, 3);
+        let policy = OdpPolicy::WeightOnly { mu: vec![2.0; cfg.n_layers] };
+        let opts = ForwardOpts { odp: Some(&policy), ..Default::default() };
+        let out = m.forward(&toks(32), &opts, &mut NullSink);
+        // mu=2.0 > any ratio -> every secondary pruned
+        assert_eq!(out.stats.dropped_secondary, 32 * cfg.n_layers);
+        assert!((out.stats.compression_ratio() - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn protection_spares_tokens() {
+        let cfg = ModelConfig::test_tiny();
+        let m = random_model(&cfg, 4);
+        let all = OdpPolicy::WeightOnly { mu: vec![2.0; cfg.n_layers] };
+        let prot = OdpPolicy::Protected { mu: vec![2.0; cfg.n_layers], protect_ratio: 0.25 };
+        let o1 = m.forward(&toks(32), &ForwardOpts { odp: Some(&all), ..Default::default() }, &mut NullSink);
+        let o2 = m.forward(&toks(32), &ForwardOpts { odp: Some(&prot), ..Default::default() }, &mut NullSink);
+        let spared = (32.0 * 0.25f32).ceil() as usize * cfg.n_layers;
+        assert_eq!(o1.stats.dropped_secondary - o2.stats.dropped_secondary, spared);
+    }
+
+    #[test]
+    fn drop_all_masks_experts() {
+        let cfg = ModelConfig::test_tiny();
+        let m = random_model(&cfg, 5);
+        let policy = OdpPolicy::ProtectedDropAll {
+            mu: vec![0.0; cfg.n_layers],
+            protect_ratio: 0.0,
+            drop_ratio: 0.5,
+        };
+        let out = m.forward(&toks(32), &ForwardOpts { odp: Some(&policy), ..Default::default() }, &mut NullSink);
+        assert_eq!(out.stats.dropped_all, 16 * 2 * cfg.n_layers);
+    }
+
+    #[test]
+    fn override_expert_changes_output() {
+        let cfg = ModelConfig::test_tiny();
+        let m = random_model(&cfg, 6);
+        let mut rng = Rng::new(99);
+        let repl = Expert {
+            w1: QTensor::F32(Mat::randn(&mut rng, cfg.d_model, cfg.d_ff, 0.1)),
+            w3: QTensor::F32(Mat::randn(&mut rng, cfg.d_model, cfg.d_ff, 0.1)),
+            w2: QTensor::F32(Mat::randn(&mut rng, cfg.d_ff, cfg.d_model, 0.1)),
+        };
+        let base = m.score(&toks(16));
+        let opts = ForwardOpts {
+            override_expert: Some((0, 0, &repl)),
+            ..Default::default()
+        };
+        let swapped = m.forward(&toks(16), &opts, &mut NullSink).logits;
+        assert!(base.sub(&swapped).fro_norm() > 1e-3);
+    }
+
+    #[test]
+    fn importance_collection() {
+        let cfg = ModelConfig::test_tiny();
+        let m = random_model(&cfg, 7);
+        let opts = ForwardOpts {
+            collect_importance: true,
+            collect_probs: true,
+            ..Default::default()
+        };
+        let out = m.forward(&toks(16), &opts, &mut NullSink);
+        assert_eq!(out.importance.len(), cfg.n_layers);
+        assert_eq!(out.importance[0].len(), 16);
+        assert!(out.importance[0].iter().all(|v| *v >= 0.0));
+        assert_eq!(out.probs[0].rows, 16);
+        for t in 0..16 {
+            let s: f32 = out.probs[0].row(t).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn routing_sink_sees_all_layers() {
+        struct Counter(Vec<usize>);
+        impl CalibSink for Counter {
+            fn routing(&mut self, layer: usize, _p: &Mat, _t: &[Vec<(usize, f32)>]) {
+                self.0[layer] += 1;
+            }
+        }
+        let cfg = ModelConfig::test_tiny();
+        let m = random_model(&cfg, 8);
+        let mut sink = Counter(vec![0; cfg.n_layers]);
+        m.forward(&toks(8), &ForwardOpts::default(), &mut sink);
+        assert!(sink.0.iter().all(|&c| c == 1));
+    }
+}

@@ -1,0 +1,358 @@
+//! MCQZ — compressed-model serialization.
+//!
+//! Saves an MC-compressed `MoeModel` (mixed f32 / packed / binary
+//! tensors) so deployment loads the quantized weights directly instead
+//! of re-running calibration + GPTQ — the paper's "pre-loading" story.
+//!
+//! Layout (little-endian): magic "MCQZ", u32 version, u32 header len,
+//! JSON header describing every tensor (kind, dims, bits, group,
+//! section offsets), then the raw payload 64-byte aligned per section.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::quant::{BinaryTensor, PackedTensor, QTensor};
+use crate::tensor::Mat;
+use crate::util::json::{num, obj, s, Json};
+
+use super::model::{Expert, Layer, MoeModel};
+
+const MAGIC: &[u8; 4] = b"MCQZ";
+const VERSION: u32 = 1;
+const ALIGN: usize = 64;
+
+struct Writer {
+    payload: Vec<u8>,
+    entries: BTreeMap<String, Json>,
+}
+
+impl Writer {
+    fn new() -> Writer {
+        Writer { payload: Vec::new(), entries: BTreeMap::new() }
+    }
+
+    fn align(&mut self) -> usize {
+        let pad = (ALIGN - self.payload.len() % ALIGN) % ALIGN;
+        self.payload.extend(std::iter::repeat_n(0u8, pad));
+        self.payload.len()
+    }
+
+    fn put_f32(&mut self, data: &[f32]) -> usize {
+        let off = self.align();
+        for v in data {
+            self.payload.extend_from_slice(&v.to_le_bytes());
+        }
+        off
+    }
+
+    fn put_u32(&mut self, data: &[u32]) -> usize {
+        let off = self.align();
+        for v in data {
+            self.payload.extend_from_slice(&v.to_le_bytes());
+        }
+        off
+    }
+
+    fn add_qtensor(&mut self, name: &str, t: &QTensor) {
+        let entry = match t {
+            QTensor::F32(m) => {
+                let off = self.put_f32(&m.data);
+                obj(vec![
+                    ("kind", s("f32")),
+                    ("rows", num(m.rows as f64)),
+                    ("cols", num(m.cols as f64)),
+                    ("off", num(off as f64)),
+                ])
+            }
+            QTensor::Packed(p) => {
+                let qw = self.put_u32(&p.qweight);
+                let sc = self.put_f32(&p.scales);
+                let zp = self.put_f32(&p.zeros);
+                obj(vec![
+                    ("kind", s("packed")),
+                    ("bits", num(p.bits as f64)),
+                    ("k", num(p.k as f64)),
+                    ("n", num(p.n as f64)),
+                    ("group", num(p.group as f64)),
+                    ("qw_off", num(qw as f64)),
+                    ("qw_len", num(p.qweight.len() as f64)),
+                    ("sc_off", num(sc as f64)),
+                    ("sc_len", num(p.scales.len() as f64)),
+                    ("zp_off", num(zp as f64)),
+                ])
+            }
+            QTensor::Binary(b) => {
+                let pk = self.put_u32(&b.packed);
+                let sc = self.put_f32(&b.scales);
+                obj(vec![
+                    ("kind", s("binary")),
+                    ("k", num(b.k as f64)),
+                    ("n", num(b.n as f64)),
+                    ("pk_off", num(pk as f64)),
+                    ("pk_len", num(b.packed.len() as f64)),
+                    ("sc_off", num(sc as f64)),
+                ])
+            }
+        };
+        self.entries.insert(name.to_string(), entry);
+    }
+
+    fn add_vec(&mut self, name: &str, data: &[f32]) {
+        let off = self.put_f32(data);
+        self.entries.insert(
+            name.to_string(),
+            obj(vec![
+                ("kind", s("vec")),
+                ("len", num(data.len() as f64)),
+                ("off", num(off as f64)),
+            ]),
+        );
+    }
+
+    fn add_mat(&mut self, name: &str, m: &Mat) {
+        self.add_qtensor(name, &QTensor::F32(m.clone()));
+    }
+}
+
+/// Serialize a (possibly quantized) model to MCQZ.
+pub fn save(path: &Path, model: &MoeModel) -> Result<()> {
+    let mut w = Writer::new();
+    w.add_mat("tok_emb", &model.tok_emb);
+    w.add_mat("pos_emb", &model.pos_emb);
+    w.add_mat("lm_head", &model.lm_head);
+    w.add_vec("final_norm", &model.final_norm);
+    for (i, layer) in model.layers.iter().enumerate() {
+        let p = |m: &str| format!("layers.{i}.{m}");
+        w.add_vec(&p("attn_norm"), &layer.attn_norm);
+        w.add_vec(&p("ffn_norm"), &layer.ffn_norm);
+        w.add_mat(&p("gate"), &layer.gate);
+        w.add_qtensor(&p("attn.wq"), &layer.wq);
+        w.add_qtensor(&p("attn.wk"), &layer.wk);
+        w.add_qtensor(&p("attn.wv"), &layer.wv);
+        w.add_qtensor(&p("attn.wo"), &layer.wo);
+        for (e, ex) in layer.experts.iter().enumerate() {
+            w.add_qtensor(&format!("layers.{i}.experts.{e}.w1"), &ex.w1);
+            w.add_qtensor(&format!("layers.{i}.experts.{e}.w3"), &ex.w3);
+            w.add_qtensor(&format!("layers.{i}.experts.{e}.w2"), &ex.w2);
+        }
+    }
+    let header = obj(vec![
+        ("config", Json::parse(&config_json(&model.cfg))?),
+        ("tensors", Json::Obj(w.entries.clone())),
+    ])
+    .to_string();
+    let mut out = Vec::with_capacity(12 + header.len() + w.payload.len());
+    out.extend_from_slice(MAGIC);
+    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    out.extend_from_slice(&w.payload);
+    std::fs::write(path, out).with_context(|| format!("writing {path:?}"))?;
+    Ok(())
+}
+
+fn config_json(cfg: &ModelConfig) -> String {
+    obj(vec![
+        ("name", s(&cfg.name)),
+        ("vocab_size", num(cfg.vocab_size as f64)),
+        ("d_model", num(cfg.d_model as f64)),
+        ("n_layers", num(cfg.n_layers as f64)),
+        ("n_heads", num(cfg.n_heads as f64)),
+        ("d_ff", num(cfg.d_ff as f64)),
+        ("n_experts", num(cfg.n_experts as f64)),
+        ("top_k", num(cfg.top_k as f64)),
+        ("max_seq", num(cfg.max_seq as f64)),
+        ("prefill_tile", num(cfg.prefill_tile as f64)),
+    ])
+    .to_string()
+}
+
+struct Reader<'a> {
+    payload: &'a [u8],
+}
+
+impl<'a> Reader<'a> {
+    fn f32s(&self, off: usize, len: usize) -> Result<Vec<f32>> {
+        let end = off + len * 4;
+        if end > self.payload.len() {
+            bail!("f32 section out of bounds");
+        }
+        Ok(self.payload[off..end]
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn u32s(&self, off: usize, len: usize) -> Result<Vec<u32>> {
+        let end = off + len * 4;
+        if end > self.payload.len() {
+            bail!("u32 section out of bounds");
+        }
+        Ok(self.payload[off..end]
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    fn qtensor(&self, e: &Json) -> Result<QTensor> {
+        match e.get("kind")?.as_str()? {
+            "f32" => {
+                let rows = e.get("rows")?.as_usize()?;
+                let cols = e.get("cols")?.as_usize()?;
+                let data = self.f32s(e.get("off")?.as_usize()?, rows * cols)?;
+                Ok(QTensor::F32(Mat::from_vec(rows, cols, data)))
+            }
+            "packed" => {
+                let k = e.get("k")?.as_usize()?;
+                let n = e.get("n")?.as_usize()?;
+                let sc_len = e.get("sc_len")?.as_usize()?;
+                Ok(QTensor::Packed(PackedTensor {
+                    bits: e.get("bits")?.as_usize()?,
+                    k,
+                    n,
+                    group: e.get("group")?.as_usize()?,
+                    qweight: self.u32s(e.get("qw_off")?.as_usize()?,
+                                       e.get("qw_len")?.as_usize()?)?,
+                    scales: self.f32s(e.get("sc_off")?.as_usize()?, sc_len)?,
+                    zeros: self.f32s(e.get("zp_off")?.as_usize()?, sc_len)?,
+                }))
+            }
+            "binary" => {
+                let n = e.get("n")?.as_usize()?;
+                Ok(QTensor::Binary(BinaryTensor {
+                    k: e.get("k")?.as_usize()?,
+                    n,
+                    packed: self.u32s(e.get("pk_off")?.as_usize()?,
+                                      e.get("pk_len")?.as_usize()?)?,
+                    scales: self.f32s(e.get("sc_off")?.as_usize()?, n)?,
+                }))
+            }
+            other => bail!("unknown tensor kind {other:?}"),
+        }
+    }
+
+    fn vec1(&self, e: &Json) -> Result<Vec<f32>> {
+        self.f32s(e.get("off")?.as_usize()?, e.get("len")?.as_usize()?)
+    }
+
+    fn mat(&self, e: &Json) -> Result<Mat> {
+        match self.qtensor(e)? {
+            QTensor::F32(m) => Ok(m),
+            _ => bail!("expected f32 matrix"),
+        }
+    }
+}
+
+/// Load an MCQZ compressed model.
+pub fn load(path: &Path) -> Result<MoeModel> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    if bytes.len() < 12 || &bytes[0..4] != MAGIC {
+        bail!("bad MCQZ magic");
+    }
+    let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+    if version != VERSION {
+        bail!("unsupported MCQZ version {version}");
+    }
+    let hlen = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    let header = Json::parse(std::str::from_utf8(&bytes[12..12 + hlen])?)?;
+    let cfg = ModelConfig::from_json(header.get("config")?)?;
+    let tensors = header.get("tensors")?;
+    let r = Reader { payload: &bytes[12 + hlen..] };
+
+    let get = |name: &str| -> Result<&Json> { tensors.get(name) };
+    let mut layers = Vec::with_capacity(cfg.n_layers);
+    for i in 0..cfg.n_layers {
+        let p = |m: &str| format!("layers.{i}.{m}");
+        let mut experts = Vec::with_capacity(cfg.n_experts);
+        for e in 0..cfg.n_experts {
+            experts.push(Expert {
+                w1: r.qtensor(get(&format!("layers.{i}.experts.{e}.w1"))?)?,
+                w3: r.qtensor(get(&format!("layers.{i}.experts.{e}.w3"))?)?,
+                w2: r.qtensor(get(&format!("layers.{i}.experts.{e}.w2"))?)?,
+            });
+        }
+        layers.push(Layer {
+            attn_norm: r.vec1(get(&p("attn_norm"))?)?,
+            ffn_norm: r.vec1(get(&p("ffn_norm"))?)?,
+            gate: r.mat(get(&p("gate"))?)?,
+            wq: r.qtensor(get(&p("attn.wq"))?)?,
+            wk: r.qtensor(get(&p("attn.wk"))?)?,
+            wv: r.qtensor(get(&p("attn.wv"))?)?,
+            wo: r.qtensor(get(&p("attn.wo"))?)?,
+            experts,
+        });
+    }
+    Ok(MoeModel {
+        cfg,
+        tok_emb: r.mat(get("tok_emb")?)?,
+        pos_emb: r.mat(get("pos_emb")?)?,
+        final_norm: r.vec1(get("final_norm")?)?,
+        lm_head: r.mat(get("lm_head")?)?,
+        layers,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::model::tests::random_model;
+    use crate::quant::quantize_rtn;
+
+    fn mixed_model() -> MoeModel {
+        let cfg = ModelConfig::test_tiny();
+        let mut m = random_model(&cfg, 0);
+        // mix representations: expert 0 -> 2-bit, 1 -> 3-bit, 2 -> 1-bit
+        for layer in m.layers.iter_mut() {
+            for (e, bits) in [(0usize, 2usize), (1, 3), (2, 1)] {
+                let ex = &mut layer.experts[e];
+                ex.w1 = quantize_rtn(&ex.w1.dequantize(), bits);
+                ex.w3 = quantize_rtn(&ex.w3.dequantize(), bits);
+                ex.w2 = quantize_rtn(&ex.w2.dequantize(), bits);
+            }
+            layer.wq = quantize_rtn(&layer.wq.dequantize(), 4);
+        }
+        m
+    }
+
+    #[test]
+    fn roundtrip_preserves_outputs_exactly() {
+        let m = mixed_model();
+        let path = std::env::temp_dir().join("mcqz_roundtrip.mcqz");
+        save(&path, &m).unwrap();
+        let loaded = load(&path).unwrap();
+        assert_eq!(loaded.cfg, m.cfg);
+        assert_eq!(loaded.storage_bytes(), m.storage_bytes());
+        let toks: Vec<u32> = (1..25).collect();
+        let a = m.score(&toks);
+        let b = loaded.score(&toks);
+        assert_eq!(a.data, b.data, "bit-exact reload required");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn file_smaller_than_f32_model() {
+        let m = mixed_model();
+        let fp = random_model(&ModelConfig::test_tiny(), 0);
+        let p1 = std::env::temp_dir().join("mcqz_mixed.mcqz");
+        let p2 = std::env::temp_dir().join("mcqz_fp.mcqz");
+        save(&p1, &m).unwrap();
+        save(&p2, &fp).unwrap();
+        let s1 = std::fs::metadata(&p1).unwrap().len();
+        let s2 = std::fs::metadata(&p2).unwrap().len();
+        assert!(s1 < s2, "{s1} !< {s2}");
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
+    }
+
+    #[test]
+    fn rejects_corrupt() {
+        assert!(load(Path::new("/nonexistent.mcqz")).is_err());
+        let path = std::env::temp_dir().join("mcqz_bad.mcqz");
+        std::fs::write(&path, b"NOPE0000000000").unwrap();
+        assert!(load(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,214 @@
+//! MCWT weight-file reader (format spec: python/compile/mcwt.py).
+//!
+//! Little-endian: magic "MCWT", u32 version, u32 header length, JSON
+//! header {tensors: {name: {dtype, shape, offset, nbytes}}}, then raw
+//! f32 payload 64-byte aligned per tensor.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Mat;
+use crate::util::json::Json;
+
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    /// View as a 2-D matrix (errors on other ranks).
+    pub fn as_mat(&self) -> Result<Mat> {
+        if self.shape.len() != 2 {
+            bail!("tensor rank {} != 2", self.shape.len());
+        }
+        Ok(Mat::from_vec(self.shape[0], self.shape[1], self.data.clone()))
+    }
+
+    pub fn as_vec1(&self) -> Result<Vec<f32>> {
+        if self.shape.len() != 1 {
+            bail!("tensor rank {} != 1", self.shape.len());
+        }
+        Ok(self.data.clone())
+    }
+}
+
+#[derive(Debug)]
+pub struct WeightFile {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl WeightFile {
+    pub fn load(path: &Path) -> Result<WeightFile> {
+        let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&bytes)
+    }
+
+    pub fn parse(bytes: &[u8]) -> Result<WeightFile> {
+        if bytes.len() < 12 || &bytes[0..4] != b"MCWT" {
+            bail!("bad MCWT magic");
+        }
+        let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
+        if version != 1 {
+            bail!("unsupported MCWT version {version}");
+        }
+        let hlen = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+        if bytes.len() < 12 + hlen {
+            bail!("truncated MCWT header");
+        }
+        let header = Json::parse(std::str::from_utf8(&bytes[12..12 + hlen])?)?;
+        let base = 12 + hlen;
+        let mut tensors = BTreeMap::new();
+        for (name, meta) in header.get("tensors")?.as_obj()? {
+            let dtype = meta.get("dtype")?.as_str()?;
+            if dtype != "f32" {
+                bail!("tensor {name}: unsupported dtype {dtype}");
+            }
+            let shape: Vec<usize> = meta
+                .get("shape")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?;
+            let offset = meta.get("offset")?.as_usize()?;
+            let nbytes = meta.get("nbytes")?.as_usize()?;
+            let numel: usize = shape.iter().product();
+            if numel * 4 != nbytes {
+                bail!("tensor {name}: shape/nbytes mismatch");
+            }
+            let start = base + offset;
+            if bytes.len() < start + nbytes {
+                bail!("tensor {name}: payload out of bounds");
+            }
+            let mut data = Vec::with_capacity(numel);
+            for c in bytes[start..start + nbytes].chunks_exact(4) {
+                data.push(f32::from_le_bytes(c.try_into().unwrap()));
+            }
+            tensors.insert(name.clone(), Tensor { shape, data });
+        }
+        Ok(WeightFile { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("missing tensor {name:?}"))
+    }
+
+    pub fn mat(&self, name: &str) -> Result<Mat> {
+        self.get(name)?.as_mat().with_context(|| name.to_string())
+    }
+
+    pub fn vec1(&self, name: &str) -> Result<Vec<f32>> {
+        self.get(name)?.as_vec1().with_context(|| name.to_string())
+    }
+}
+
+/// Write an MCWT file (used by tests and the quantized-model cache).
+pub fn write_mcwt(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()> {
+    use crate::util::json::{num, obj, Json};
+    const ALIGN: usize = 64;
+    let mut entries = BTreeMap::new();
+    let mut offset = 0usize;
+    let mut spans = Vec::new();
+    for (name, t) in tensors {
+        offset += (ALIGN - offset % ALIGN) % ALIGN;
+        let nbytes = t.numel() * 4;
+        entries.insert(
+            name.clone(),
+            obj(vec![
+                ("dtype", Json::Str("f32".into())),
+                (
+                    "shape",
+                    Json::Arr(t.shape.iter().map(|&s| num(s as f64)).collect()),
+                ),
+                ("offset", num(offset as f64)),
+                ("nbytes", num(nbytes as f64)),
+            ]),
+        );
+        spans.push((offset, t));
+        offset += nbytes;
+    }
+    let header = Json::Obj(
+        [("tensors".to_string(), Json::Obj(entries))].into_iter().collect(),
+    )
+    .to_string();
+    let mut out = Vec::new();
+    out.extend_from_slice(b"MCWT");
+    out.extend_from_slice(&1u32.to_le_bytes());
+    out.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    out.extend_from_slice(header.as_bytes());
+    let base = out.len();
+    out.resize(base + offset, 0);
+    for (off, t) in spans {
+        let mut pos = base + off;
+        for &v in &t.data {
+            out[pos..pos + 4].copy_from_slice(&v.to_le_bytes());
+            pos += 4;
+        }
+    }
+    std::fs::write(path, out)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> BTreeMap<String, Tensor> {
+        let mut m = BTreeMap::new();
+        m.insert(
+            "a".to_string(),
+            Tensor { shape: vec![2, 3], data: vec![1., 2., 3., 4., 5., 6.] },
+        );
+        m.insert(
+            "b.vec".to_string(),
+            Tensor { shape: vec![4], data: vec![0.5, -0.5, 1.5, -1.5] },
+        );
+        m
+    }
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("mcwt_test_roundtrip.mcwt");
+        write_mcwt(&dir, &sample()).unwrap();
+        let wf = WeightFile::load(&dir).unwrap();
+        assert_eq!(wf.get("a").unwrap().shape, vec![2, 3]);
+        assert_eq!(wf.get("a").unwrap().data, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(wf.vec1("b.vec").unwrap(), vec![0.5, -0.5, 1.5, -1.5]);
+        let m = wf.mat("a").unwrap();
+        assert_eq!((m.rows, m.cols), (2, 3));
+        std::fs::remove_file(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(WeightFile::parse(b"XXXX\x01\x00\x00\x00\x00\x00\x00\x00").is_err());
+        assert!(WeightFile::parse(b"MC").is_err());
+    }
+
+    #[test]
+    fn rejects_truncated_payload() {
+        let dir = std::env::temp_dir().join("mcwt_test_trunc.mcwt");
+        write_mcwt(&dir, &sample()).unwrap();
+        let mut bytes = std::fs::read(&dir).unwrap();
+        bytes.truncate(bytes.len() - 8);
+        assert!(WeightFile::parse(&bytes).is_err());
+        std::fs::remove_file(&dir).ok();
+    }
+
+    #[test]
+    fn rank_guards() {
+        let t = Tensor { shape: vec![2, 3], data: vec![0.0; 6] };
+        assert!(t.as_vec1().is_err());
+        assert!(t.as_mat().is_ok());
+        let v = Tensor { shape: vec![6], data: vec![0.0; 6] };
+        assert!(v.as_mat().is_err());
+    }
+}

@@ -1,0 +1,178 @@
+//! ODP — Online Dynamic Pruning (paper Sec. 3.3).
+//!
+//! The pruning *decisions* execute inside the engine's routing loop
+//! (`moe::model`, enum `OdpPolicy`); this module owns policy
+//! construction and calibration:
+//!   * the per-layer threshold μ = median of w1/w0 over calibration
+//!     data (Eq. 5, following Lu et al. 2024),
+//!   * the significance-aware token-protection configuration (Sec.
+//!     3.3.2, default 2% — Fig. 7's sweet spot),
+//!   * the Tab.-11 token-statistic baselines and Tab.-12 manual
+//!     thresholds.
+
+use crate::moe::model::{OdpPolicy, TokenMetric};
+use crate::pmq::calibrate::Calibration;
+
+/// Paper default: protect the top 2% of tokens by Eq.-6 importance.
+pub const DEFAULT_PROTECT_RATIO: f32 = 0.02;
+
+/// Weight-only dynamic pruning (Lu et al. 2024): μ = per-layer median.
+pub fn weight_only(cal: &Calibration) -> OdpPolicy {
+    OdpPolicy::WeightOnly { mu: cal.mu_median() }
+}
+
+/// The paper's ODP: median threshold + token protection.
+pub fn odp(cal: &Calibration, protect_ratio: f32) -> OdpPolicy {
+    OdpPolicy::Protected { mu: cal.mu_median(), protect_ratio }
+}
+
+/// ODP with the paper default 2% protection.
+pub fn odp_default(cal: &Calibration) -> OdpPolicy {
+    odp(cal, DEFAULT_PROTECT_RATIO)
+}
+
+/// Fig.-8 mode: ODP + drop all experts of the bottom `drop_ratio`
+/// tokens.
+pub fn odp_drop_all(cal: &Calibration, protect_ratio: f32,
+                    drop_ratio: f32) -> OdpPolicy {
+    OdpPolicy::ProtectedDropAll {
+        mu: cal.mu_median(),
+        protect_ratio,
+        drop_ratio,
+    }
+}
+
+/// Tab.-12 manual threshold ablation: a single μ for all layers.
+pub fn manual_threshold(n_layers: usize, mu: f32,
+                        protect_ratio: Option<f32>) -> OdpPolicy {
+    let mu = vec![mu; n_layers];
+    match protect_ratio {
+        Some(p) => OdpPolicy::Protected { mu, protect_ratio: p },
+        None => OdpPolicy::WeightOnly { mu },
+    }
+}
+
+/// Tab.-11 baselines: prune the secondary expert of the bottom
+/// `prune_frac` tokens ranked by a token statistic.
+pub fn token_metric(metric: TokenMetric, prune_frac: f32) -> OdpPolicy {
+    OdpPolicy::TokenMetric { metric, prune_frac }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::data::{calibration_set, Split};
+    use crate::moe::model::tests::random_model;
+    use crate::moe::model::{ForwardOpts, NullSink};
+    use crate::pmq::calibrate::calibrate;
+
+    fn setup() -> (ModelConfig, crate::moe::MoeModel, Calibration) {
+        let cfg = ModelConfig::test_tiny();
+        let model = random_model(&cfg, 0);
+        let seqs = calibration_set(11, 3, 32, Split::General);
+        let cal = calibrate(&model, &seqs);
+        (cfg, model, cal)
+    }
+
+    #[test]
+    fn median_threshold_prunes_about_half() {
+        // μ = median of ratio distribution => ~50% of tokens pruned
+        // (on-distribution), i.e. CR ≈ 25% of expert compute with k=2
+        let (_cfg, model, cal) = setup();
+        let policy = weight_only(&cal);
+        let seqs = calibration_set(12, 3, 32, Split::General);
+        let mut pruned = 0usize;
+        let mut possible = 0usize;
+        for s in &seqs {
+            let out = model.forward(
+                s,
+                &ForwardOpts { odp: Some(&policy), ..Default::default() },
+                &mut NullSink,
+            );
+            pruned += out.stats.dropped_secondary;
+            possible += out.stats.expert_possible / 2; // per-token count
+        }
+        let frac = pruned as f64 / possible as f64;
+        assert!((0.3..0.7).contains(&frac), "pruned fraction {frac}");
+    }
+
+    #[test]
+    fn protection_reduces_pruning_monotonically() {
+        let (_cfg, model, cal) = setup();
+        let seqs = calibration_set(13, 2, 32, Split::General);
+        let mut last = usize::MAX;
+        for ratio in [0.0f32, 0.1, 0.3, 0.6] {
+            let policy = odp(&cal, ratio);
+            let mut pruned = 0;
+            for s in &seqs {
+                let out = model.forward(
+                    s,
+                    &ForwardOpts { odp: Some(&policy), ..Default::default() },
+                    &mut NullSink,
+                );
+                pruned += out.stats.dropped_secondary;
+            }
+            assert!(pruned <= last, "ratio {ratio}: {pruned} > {last}");
+            last = pruned;
+        }
+    }
+
+    #[test]
+    fn higher_threshold_prunes_more() {
+        // Tab. 12's monotonicity: larger μ => more pruned params
+        let (cfg, model, cal) = setup();
+        let seqs = calibration_set(14, 2, 32, Split::General);
+        let mut last = 0usize;
+        for mu in [0.2f32, 0.5, 0.9] {
+            let policy = manual_threshold(cfg.n_layers, mu, None);
+            let mut pruned = 0;
+            for s in &seqs {
+                let out = model.forward(
+                    s,
+                    &ForwardOpts { odp: Some(&policy), ..Default::default() },
+                    &mut NullSink,
+                );
+                pruned += out.stats.dropped_secondary;
+            }
+            assert!(pruned >= last, "mu {mu}: {pruned} < {last}");
+            last = pruned;
+        }
+        let _ = cal;
+    }
+
+    #[test]
+    fn token_metric_prunes_requested_fraction() {
+        let (cfg, model, _cal) = setup();
+        let policy = token_metric(TokenMetric::Variance, 0.3);
+        let toks: Vec<u32> = (1..41).collect();
+        let out = model.forward(
+            &toks,
+            &ForwardOpts { odp: Some(&policy), ..Default::default() },
+            &mut NullSink,
+        );
+        let expect = (40.0f32 * 0.3).round() as usize * cfg.n_layers;
+        assert_eq!(out.stats.dropped_secondary, expect);
+    }
+
+    #[test]
+    fn all_metrics_run() {
+        let (_cfg, model, _cal) = setup();
+        let toks: Vec<u32> = (1..33).collect();
+        for metric in [
+            TokenMetric::Eq6Importance,
+            TokenMetric::Kurtosis,
+            TokenMetric::Variance,
+            TokenMetric::MeanAbs,
+        ] {
+            let policy = token_metric(metric, 0.3);
+            let out = model.forward(
+                &toks,
+                &ForwardOpts { odp: Some(&policy), ..Default::default() },
+                &mut NullSink,
+            );
+            assert!(out.logits.data.iter().all(|v| v.is_finite()));
+            assert!(out.stats.dropped_secondary > 0);
+        }
+    }
+}

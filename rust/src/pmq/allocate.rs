@@ -1,0 +1,384 @@
+//! Bit-width allocation strategies: PMQ (the paper's Eq.-4 IP) and all
+//! the comparison baselines from Figs. 5-6 / Tabs. 2-3:
+//!   uniform, random (Fig. 5), routing-weight-only, frequency-only,
+//!   drop-F-norm, Hessian/HAWQ-v2 (Dong et al. 2020), and BSP
+//!   (Li et al. 2024, layer-granular).
+
+use crate::config::ModelConfig;
+use crate::util::rng::Rng;
+
+use super::calibrate::Calibration;
+use super::significance::Significance;
+use super::solver::{eq4_costs, solve_layer, IpProblem};
+
+/// Per-[layer][expert] bit-widths (1..=3, or 16 = FP passthrough).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Allocation {
+    pub bits: Vec<Vec<usize>>,
+    pub strategy: String,
+}
+
+impl Allocation {
+    pub fn uniform(cfg: &ModelConfig, bits: usize) -> Allocation {
+        Allocation {
+            bits: vec![vec![bits; cfg.n_experts]; cfg.n_layers],
+            strategy: format!("uniform{bits}"),
+        }
+    }
+
+    /// Average expert bit-width (the paper's headline "Bits" before the
+    /// +0.05 attention overhead).
+    pub fn avg_bits(&self) -> f64 {
+        let total: usize = self.bits.iter().flatten().sum();
+        let count: usize = self.bits.iter().map(|l| l.len()).sum();
+        total as f64 / count as f64
+    }
+
+    /// Histogram of assigned widths (Fig. 10 visualization data).
+    pub fn histogram(&self) -> [usize; 3] {
+        let mut h = [0usize; 3];
+        for &b in self.bits.iter().flatten() {
+            if (1..=3).contains(&b) {
+                h[b - 1] += 1;
+            }
+        }
+        h
+    }
+}
+
+/// Allocation strategies (paper Figs. 5-6 nomenclature).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Allocator {
+    /// the paper's PMQ: Eq.-4 IP over phi^alpha * w^beta * eps^gamma
+    Pmq,
+    /// drop-F-norm as the only importance signal
+    FNorm,
+    /// activation frequency only
+    Frequency,
+    /// routing-weight mass only
+    Weight,
+    /// HAWQ-v2: Hessian-trace-weighted quantization loss
+    Hessian,
+    /// random allocation at matched budget (Fig. 5)
+    Random(u64),
+    /// BSP (Li et al. 2024): layer-granular, top-q layers high-bit
+    Bsp,
+}
+
+/// Hyper-parameters of the Eq.-4 objective (Tab. 10 ablates alpha/beta).
+#[derive(Debug, Clone, Copy)]
+pub struct PmqHyper {
+    pub alpha: f64,
+    pub beta: f64,
+    pub gamma: f64,
+}
+
+impl Default for PmqHyper {
+    fn default() -> Self {
+        // paper Appendix A.6: alpha=1, beta=1, gamma=2 is the default
+        PmqHyper { alpha: 1.0, beta: 1.0, gamma: 2.0 }
+    }
+}
+
+/// Inputs shared by every allocator.
+pub struct AllocInputs<'a> {
+    pub cfg: &'a ModelConfig,
+    pub sig: &'a Significance,
+    pub cal: &'a Calibration,
+    /// mean Hessian diagonal per [layer][expert] (HAWQ trace estimate)
+    pub hessian_trace: Vec<Vec<f64>>,
+}
+
+impl<'a> AllocInputs<'a> {
+    pub fn new(cfg: &'a ModelConfig, sig: &'a Significance,
+               cal: &'a Calibration) -> AllocInputs<'a> {
+        let hessian_trace = cal
+            .hessians
+            .experts
+            .iter()
+            .map(|layer| {
+                layer
+                    .iter()
+                    .map(|(hin, hmid)| 0.5 * (hin.diag_mean() + hmid.diag_mean()))
+                    .collect()
+            })
+            .collect();
+        AllocInputs { cfg, sig, cal, hessian_trace }
+    }
+}
+
+/// Allocate `total_bits` per layer (n..=3n) with the chosen strategy.
+pub fn allocate(inputs: &AllocInputs, strategy: Allocator, total_bits: usize,
+                hyper: PmqHyper) -> Allocation {
+    let cfg = inputs.cfg;
+    let n = cfg.n_experts;
+    assert!((n..=3 * n).contains(&total_bits), "infeasible budget");
+    // the paper's >=1@3-bit / >=1@2-bit constraint can be infeasible at
+    // very low budgets (e.g. B < n+3); relax it there, as the paper's
+    // own 1.57-bit setting implies
+    let solve = |cost: Vec<[f64; 3]>| -> Vec<usize> {
+        let strict = IpProblem { cost: cost.clone(), total_bits, enforce_minimums: true };
+        solve_layer(&strict).unwrap_or_else(|| {
+            let relaxed = IpProblem { cost, total_bits, enforce_minimums: false };
+            solve_layer(&relaxed).expect("budget within [n, 3n]")
+        })
+    };
+    let mut bits = Vec::with_capacity(cfg.n_layers);
+    match strategy {
+        Allocator::Pmq => {
+            for l in 0..cfg.n_layers {
+                let cost = eq4_costs(
+                    &inputs.sig.phi[l],
+                    &inputs.sig.weight[l],
+                    &inputs.sig.eps[l],
+                    hyper.alpha,
+                    hyper.beta,
+                    hyper.gamma,
+                );
+                bits.push(solve(cost));
+            }
+        }
+        Allocator::FNorm => {
+            for l in 0..cfg.n_layers {
+                let scores: Vec<f64> = inputs.sig.drop_fnorm[l]
+                    .iter()
+                    .map(|&v| v as f64)
+                    .collect();
+                bits.push(rank_allocate(&scores, total_bits));
+            }
+        }
+        Allocator::Frequency => {
+            for l in 0..cfg.n_layers {
+                bits.push(rank_allocate(&inputs.sig.phi[l], total_bits));
+            }
+        }
+        Allocator::Weight => {
+            for l in 0..cfg.n_layers {
+                bits.push(rank_allocate(&inputs.sig.weight[l], total_bits));
+            }
+        }
+        Allocator::Hessian => {
+            // HAWQ-v2 objective: trace(H)/n * ||W - Q(W, j)||^2, solved
+            // with the same IP machinery but no phi/w weighting.
+            for l in 0..cfg.n_layers {
+                let cost: Vec<[f64; 3]> = (0..n)
+                    .map(|e| {
+                        let tr = inputs.hessian_trace[l][e].max(1e-12);
+                        let eps = inputs.sig.eps[l][e];
+                        [
+                            tr * (eps[0] as f64).powi(2),
+                            tr * (eps[1] as f64).powi(2),
+                            tr * (eps[2] as f64).powi(2),
+                        ]
+                    })
+                    .collect();
+                bits.push(solve(cost));
+            }
+        }
+        Allocator::Random(seed) => {
+            let mut rng = Rng::new(seed);
+            for _ in 0..cfg.n_layers {
+                bits.push(random_allocation(&mut rng, n, total_bits));
+            }
+        }
+        Allocator::Bsp => {
+            // Block Score Predictor: rank layers by total drop-F-norm,
+            // top 25% of MoE layers keep high bits (3), the rest get the
+            // budget-matching low width. Layer-granular by design.
+            let mut layer_scores: Vec<(usize, f64)> = inputs
+                .sig
+                .drop_fnorm
+                .iter()
+                .enumerate()
+                .map(|(l, row)| (l, row.iter().map(|&v| v as f64).sum()))
+                .collect();
+            layer_scores.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let n_high = (cfg.n_layers as f64 * 0.25).ceil() as usize;
+            let high_set: Vec<usize> =
+                layer_scores[..n_high].iter().map(|&(l, _)| l).collect();
+            // choose the low width so the model-average matches budget:
+            // avg = (n_high*3 + n_low*low) / L  => low = ...
+            let l_total = cfg.n_layers;
+            let want_total = total_bits * l_total; // bits*experts summed
+            let high_bits = 3 * n * n_high;
+            let low_layers = l_total - n_high;
+            let low = if low_layers == 0 {
+                3
+            } else {
+                ((want_total - high_bits) as f64 / (low_layers * n) as f64)
+                    .round()
+                    .clamp(1.0, 3.0) as usize
+            };
+            for l in 0..l_total {
+                if high_set.contains(&l) {
+                    bits.push(vec![3; n]);
+                } else {
+                    bits.push(vec![low; n]);
+                }
+            }
+        }
+    }
+    Allocation {
+        bits,
+        strategy: format!("{strategy:?}@B{total_bits}"),
+    }
+}
+
+/// Rank-based allocation for single-score baselines: high scores get 3
+/// bits, low scores get 1, the middle 2, meeting the exact budget.
+fn rank_allocate(scores: &[f64], total_bits: usize) -> Vec<usize> {
+    let n = scores.len();
+    let mut idx: Vec<usize> = (0..n).collect();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap());
+    // start everyone at 2, then promote the top / demote the bottom
+    let mut bits = vec![2usize; n];
+    let mut delta = total_bits as i64 - 2 * n as i64;
+    let mut top = 0usize;
+    let mut bottom = n;
+    while delta > 0 && top < n {
+        bits[idx[top]] = 3;
+        top += 1;
+        delta -= 1;
+    }
+    while delta < 0 && bottom > top {
+        bottom -= 1;
+        bits[idx[bottom]] = 1;
+        delta += 1;
+    }
+    debug_assert_eq!(bits.iter().sum::<usize>(), total_bits);
+    bits
+}
+
+/// Random composition of n widths in {1,2,3} summing to total.
+fn random_allocation(rng: &mut Rng, n: usize, total: usize) -> Vec<usize> {
+    loop {
+        let mut bits: Vec<usize> = (0..n).map(|_| 1 + rng.below(3)).collect();
+        // repair toward the target by random adjustments
+        for _ in 0..200 {
+            let sum: usize = bits.iter().sum();
+            if sum == total {
+                return bits;
+            }
+            let i = rng.below(n);
+            if sum < total && bits[i] < 3 {
+                bits[i] += 1;
+            } else if sum > total && bits[i] > 1 {
+                bits[i] -= 1;
+            }
+        }
+        let sum: usize = bits.iter().sum();
+        if sum == total {
+            return bits;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::data::{calibration_set, Split};
+    use crate::moe::model::tests::random_model;
+    use crate::pmq::calibrate::calibrate;
+    use crate::pmq::significance::Significance;
+    use crate::pmq::zoo::{ExpertZoo, QuantBackend};
+
+    fn setup() -> (ModelConfig, Calibration, Significance) {
+        let cfg = ModelConfig::test_tiny();
+        let model = random_model(&cfg, 0);
+        let seqs = calibration_set(6, 2, 24, Split::General);
+        let cal = calibrate(&model, &seqs);
+        let zoo = ExpertZoo::build(&model, &cal.hessians, QuantBackend::Rtn).unwrap();
+        let sig = Significance::from_recon_err(&cal, &zoo);
+        (cfg, cal, sig)
+    }
+
+    #[test]
+    fn all_strategies_meet_budget() {
+        let (cfg, cal, sig) = setup();
+        let inputs = AllocInputs::new(&cfg, &sig, &cal);
+        let n = cfg.n_experts;
+        for strat in [
+            Allocator::Pmq,
+            Allocator::FNorm,
+            Allocator::Frequency,
+            Allocator::Weight,
+            Allocator::Hessian,
+            Allocator::Random(7),
+        ] {
+            for total in [n + 1, 2 * n, 5 * n / 2] {
+                let a = allocate(&inputs, strat, total, PmqHyper::default());
+                for (l, row) in a.bits.iter().enumerate() {
+                    assert_eq!(
+                        row.iter().sum::<usize>(),
+                        total,
+                        "{strat:?} layer {l}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bsp_meets_budget_on_average() {
+        let (cfg, cal, sig) = setup();
+        let inputs = AllocInputs::new(&cfg, &sig, &cal);
+        let a = allocate(&inputs, Allocator::Bsp, 5 * cfg.n_experts / 2,
+                         PmqHyper::default());
+        // layer-granular: every expert in a layer shares a width
+        for row in &a.bits {
+            assert!(row.iter().all(|&b| b == row[0]));
+        }
+        let avg = a.avg_bits();
+        assert!((2.0..=3.0).contains(&avg), "{avg}");
+    }
+
+    #[test]
+    fn pmq_favors_significant_experts() {
+        let (cfg, cal, mut sig) = setup();
+        // make expert 0 of layer 0 maximally significant & fragile
+        sig.phi[0][0] = 1.0;
+        sig.weight[0][0] = 1.0;
+        sig.eps[0][0] = [50.0, 25.0, 10.0];
+        sig.phi[0][1] = 1e-6;
+        sig.weight[0][1] = 1e-6;
+        sig.eps[0][1] = [1e-6, 1e-6, 1e-6];
+        let inputs = AllocInputs::new(&cfg, &sig, &cal);
+        let a = allocate(&inputs, Allocator::Pmq, 2 * cfg.n_experts,
+                         PmqHyper::default());
+        assert_eq!(a.bits[0][0], 3, "{:?}", a.bits[0]);
+        assert_eq!(a.bits[0][1], 1, "{:?}", a.bits[0]);
+    }
+
+    #[test]
+    fn random_allocations_differ_by_seed() {
+        let (cfg, cal, sig) = setup();
+        let inputs = AllocInputs::new(&cfg, &sig, &cal);
+        let a = allocate(&inputs, Allocator::Random(1), 2 * cfg.n_experts,
+                         PmqHyper::default());
+        let b = allocate(&inputs, Allocator::Random(2), 2 * cfg.n_experts,
+                         PmqHyper::default());
+        assert_ne!(a.bits, b.bits);
+    }
+
+    #[test]
+    fn rank_allocate_extremes() {
+        let scores = vec![5.0, 4.0, 3.0, 2.0];
+        assert_eq!(rank_allocate(&scores, 12), vec![3, 3, 3, 3]);
+        assert_eq!(rank_allocate(&scores, 4), vec![1, 1, 1, 1]);
+        let b = rank_allocate(&scores, 8);
+        assert_eq!(b.iter().sum::<usize>(), 8);
+        assert!(b[0] >= b[3]);
+    }
+
+    #[test]
+    fn histogram_and_avg() {
+        let cfg = ModelConfig::test_tiny();
+        let mut a = Allocation::uniform(&cfg, 2);
+        a.bits[0][0] = 3;
+        a.bits[0][1] = 1;
+        assert_eq!(a.avg_bits(), 2.0);
+        let h = a.histogram();
+        assert_eq!(h, [1, cfg.n_layers * cfg.n_experts - 2, 1]);
+    }
+}

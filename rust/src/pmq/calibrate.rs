@@ -1,0 +1,222 @@
+//! Calibration pass: one forward over the calibration set collecting
+//! everything PMQ and ODP need (paper: "128 sets of random sequences"
+//! from C4 — here the synthetic general split, see DESIGN.md §2):
+//!   * routing statistics  -> significance factors phi_i, w_i
+//!   * GPTQ Hessians       -> per-expert (and attention) quantizers
+//!   * base logits         -> drop-F-norm / eps_{i,j} references
+//!   * w1/w0 ratio samples -> ODP's per-layer median threshold mu
+
+use std::collections::BTreeMap;
+
+use crate::config::ModelConfig;
+use crate::moe::model::{CalibSink, ForwardOpts, MoeModel, RunStats};
+use crate::quant::gptq::Hessian;
+use crate::tensor::Mat;
+
+/// Hessians for every quantizable linear in the model.
+pub struct HessianStore {
+    /// [layer][expert] -> (input Hessian for w1/w3, mid Hessian for w2)
+    pub experts: Vec<Vec<(Hessian, Hessian)>>,
+    /// [layer] -> Hessian over attention inputs (wq/wk/wv)
+    pub attn_in: Vec<Hessian>,
+    /// [layer] -> Hessian over head outputs (wo)
+    pub attn_out: Vec<Hessian>,
+    /// [layer] -> Hessian over MoE inputs (gate)
+    pub gate_in: Vec<Hessian>,
+}
+
+impl HessianStore {
+    fn new(cfg: &ModelConfig) -> HessianStore {
+        HessianStore {
+            experts: (0..cfg.n_layers)
+                .map(|_| {
+                    (0..cfg.n_experts)
+                        .map(|_| (Hessian::new(cfg.d_model), Hessian::new(cfg.d_ff)))
+                        .collect()
+                })
+                .collect(),
+            attn_in: (0..cfg.n_layers).map(|_| Hessian::new(cfg.d_model)).collect(),
+            attn_out: (0..cfg.n_layers).map(|_| Hessian::new(cfg.d_model)).collect(),
+            gate_in: (0..cfg.n_layers).map(|_| Hessian::new(cfg.d_model)).collect(),
+        }
+    }
+}
+
+struct Collector<'a> {
+    hessians: &'a mut HessianStore,
+}
+
+impl CalibSink for Collector<'_> {
+    fn expert_batch(&mut self, layer: usize, expert: usize, x: &Mat, gated: &Mat) {
+        let (hin, hmid) = &mut self.hessians.experts[layer][expert];
+        hin.update(x);
+        hmid.update(gated);
+    }
+
+    fn attn_batch(&mut self, layer: usize, x: &Mat) {
+        self.hessians.attn_in[layer].update(x);
+    }
+
+    fn attn_out_batch(&mut self, layer: usize, x: &Mat) {
+        self.hessians.attn_out[layer].update(x);
+    }
+
+    fn moe_input(&mut self, layer: usize, x: &Mat) {
+        self.hessians.gate_in[layer].update(x);
+    }
+}
+
+pub struct Calibration {
+    pub stats: RunStats,
+    pub hessians: HessianStore,
+    /// FP logits per calibration sequence (Eq.-3 reference output)
+    pub base_logits: Vec<Mat>,
+    /// per-layer w1/w0 ratio samples (ODP mu calibration)
+    pub ratio_samples: Vec<Vec<f32>>,
+    /// number of (seq) samples
+    pub n_seqs: usize,
+}
+
+/// Run the calibration pass over `seqs` on the FP model.
+pub fn calibrate(model: &MoeModel, seqs: &[Vec<u32>]) -> Calibration {
+    let cfg = &model.cfg;
+    let mut hessians = HessianStore::new(cfg);
+    let mut stats = RunStats::new(cfg.n_layers, cfg.n_experts);
+    let mut base_logits = Vec::with_capacity(seqs.len());
+    let mut ratio_samples = vec![Vec::new(); cfg.n_layers];
+    for seq in seqs {
+        let mut sink = Collector { hessians: &mut hessians };
+        let opts = ForwardOpts {
+            collect_ratio_samples: true,
+            ..Default::default()
+        };
+        let out = model.forward(seq, &opts, &mut sink);
+        stats.merge(&out.stats);
+        for (l, rs) in out.ratio_samples.into_iter().enumerate() {
+            ratio_samples[l].extend(rs);
+        }
+        base_logits.push(out.logits);
+    }
+    Calibration {
+        stats,
+        hessians,
+        base_logits,
+        ratio_samples,
+        n_seqs: seqs.len(),
+    }
+}
+
+impl Calibration {
+    /// phi_i: activation frequency of each expert (paper Sec. 3.2.1).
+    pub fn phi(&self) -> Vec<Vec<f64>> {
+        let n = self.stats.tokens_seen.max(1) as f64;
+        self.stats
+            .activation_counts
+            .iter()
+            .map(|layer| layer.iter().map(|&c| c as f64 / n).collect())
+            .collect()
+    }
+
+    /// w_i: mean routing weight mass of each expert.
+    pub fn weight(&self) -> Vec<Vec<f64>> {
+        let n = self.stats.tokens_seen.max(1) as f64;
+        self.stats
+            .weight_sums
+            .iter()
+            .map(|layer| layer.iter().map(|&w| w / n).collect())
+            .collect()
+    }
+
+    /// Per-layer median of w1/w0 (the paper's default ODP threshold).
+    pub fn mu_median(&self) -> Vec<f32> {
+        self.ratio_samples
+            .iter()
+            .map(|rs| crate::util::stats::median(rs))
+            .collect()
+    }
+
+    /// Summary for serialization / the expert-analysis example.
+    pub fn summary_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{arr, num, Json};
+        let to_arr2 = |v: &Vec<Vec<f64>>| {
+            arr(v.iter().map(|row| arr(row.iter().map(|&x| num(x)))))
+        };
+        let mut m = BTreeMap::new();
+        m.insert("phi".to_string(), to_arr2(&self.phi()));
+        m.insert("weight".to_string(), to_arr2(&self.weight()));
+        m.insert(
+            "mu_median".to_string(),
+            arr(self.mu_median().iter().map(|&x| num(x as f64))),
+        );
+        m.insert("tokens".to_string(), num(self.stats.tokens_seen as f64));
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::data::{calibration_set, Split};
+    use crate::moe::model::tests::random_model;
+
+    fn tiny() -> (ModelConfig, MoeModel, Vec<Vec<u32>>) {
+        let cfg = ModelConfig::test_tiny();
+        let model = random_model(&cfg, 0);
+        let seqs = calibration_set(1, 3, 32, Split::General);
+        (cfg, model, seqs)
+    }
+
+    #[test]
+    fn phi_sums_to_top_k() {
+        let (cfg, model, seqs) = tiny();
+        let cal = calibrate(&model, &seqs);
+        for layer_phi in cal.phi() {
+            let sum: f64 = layer_phi.iter().sum();
+            assert!((sum - cfg.top_k as f64).abs() < 1e-9, "{sum}");
+        }
+    }
+
+    #[test]
+    fn weight_sums_to_one_per_token() {
+        let (_, model, seqs) = tiny();
+        let cal = calibrate(&model, &seqs);
+        for layer_w in cal.weight() {
+            let sum: f64 = layer_w.iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6, "{sum}");
+        }
+    }
+
+    #[test]
+    fn hessians_populated_for_activated_experts() {
+        let (cfg, model, seqs) = tiny();
+        let cal = calibrate(&model, &seqs);
+        for l in 0..cfg.n_layers {
+            for e in 0..cfg.n_experts {
+                let activated = cal.stats.activation_counts[l][e] > 0;
+                let (hin, _) = &cal.hessians.experts[l][e];
+                assert_eq!(hin.n_samples > 0, activated, "layer {l} expert {e}");
+            }
+            assert!(cal.hessians.attn_in[l].n_samples > 0);
+            assert!(cal.hessians.attn_out[l].n_samples > 0);
+            assert!(cal.hessians.gate_in[l].n_samples > 0);
+        }
+    }
+
+    #[test]
+    fn mu_median_in_unit_interval() {
+        let (_, model, seqs) = tiny();
+        let cal = calibrate(&model, &seqs);
+        for mu in cal.mu_median() {
+            assert!((0.0..=1.0).contains(&mu), "mu {mu}");
+        }
+    }
+
+    #[test]
+    fn base_logits_per_sequence() {
+        let (_, model, seqs) = tiny();
+        let cal = calibrate(&model, &seqs);
+        assert_eq!(cal.base_logits.len(), 3);
+        assert_eq!(cal.base_logits[0].rows, 32);
+    }
+}

@@ -1,0 +1,21 @@
+//! PMQ — Pre-loading Mixed-Precision Quantization (paper Sec. 3.2).
+//!
+//! Pipeline: calibrate (one forward pass collecting routing stats +
+//! GPTQ Hessians) -> build the quantized-expert zoo (every expert at
+//! 1/2/3 bits via GPTQ) -> probe significance (drop-F-norm, eps_{i,j})
+//! -> solve the Eq.-4 integer program per layer -> assemble the
+//! compressed model.
+
+pub mod allocate;
+pub mod calibrate;
+pub mod pipeline;
+pub mod significance;
+pub mod solver;
+pub mod zoo;
+
+pub use allocate::{Allocation, Allocator};
+pub use calibrate::{calibrate, Calibration};
+pub use pipeline::{Workbench, WorkbenchConfig};
+pub use significance::{probe_significance, Significance};
+pub use solver::{solve_layer, IpProblem};
+pub use zoo::{assemble, ExpertZoo};

@@ -1,0 +1,159 @@
+//! End-to-end PMQ workbench: build calibration + zoo + significance
+//! once, then assemble compressed models for any (strategy, budget)
+//! pair — the shape every sweep bench (Figs. 5-6, Tabs. 2-8) drives.
+
+use anyhow::Result;
+
+use crate::data::{calibration_set, Split};
+use crate::moe::model::MoeModel;
+use crate::moe::model::OdpPolicy;
+
+use super::allocate::{allocate, AllocInputs, Allocation, Allocator, PmqHyper};
+use super::calibrate::{calibrate, Calibration};
+use super::significance::{probe_significance, Significance};
+use super::zoo::{assemble, ExpertZoo, QuantBackend};
+
+#[derive(Debug, Clone)]
+pub struct WorkbenchConfig {
+    /// calibration sequences (paper: 128 x 2048 tokens of C4)
+    pub calib_seqs: usize,
+    pub calib_len: usize,
+    pub calib_seed: u64,
+    pub calib_split: Split,
+    /// probe subset used for drop-F-norm / eps output probes
+    pub probe_seqs: usize,
+    pub backend: QuantBackend,
+    /// bit-width for attention/gate weights (paper: 4)
+    pub attn_bits: usize,
+    /// use zoo reconstruction errors instead of output probes
+    /// (faster; ablated in fig6 bench as "recon-proxy")
+    pub fast_eps: bool,
+}
+
+impl Default for WorkbenchConfig {
+    fn default() -> Self {
+        WorkbenchConfig {
+            calib_seqs: 8,
+            calib_len: 256,
+            calib_seed: 17,
+            calib_split: Split::General,
+            probe_seqs: 2,
+            backend: QuantBackend::Gptq,
+            attn_bits: 4,
+            fast_eps: false,
+        }
+    }
+}
+
+/// Everything computed once per FP model.
+pub struct Workbench {
+    pub fp: MoeModel,
+    pub cal: Calibration,
+    pub zoo: ExpertZoo,
+    pub sig: Significance,
+    pub cfg: WorkbenchConfig,
+}
+
+impl Workbench {
+    pub fn build(fp: MoeModel, cfg: WorkbenchConfig) -> Result<Workbench> {
+        let seqs = calibration_set(cfg.calib_seed, cfg.calib_seqs,
+                                   cfg.calib_len.min(fp.cfg.max_seq),
+                                   cfg.calib_split);
+        let cal = calibrate(&fp, &seqs);
+        let zoo = ExpertZoo::build(&fp, &cal.hessians, cfg.backend)?;
+        let sig = if cfg.fast_eps {
+            Significance::from_recon_err(&cal, &zoo)
+        } else {
+            let n = cfg.probe_seqs.min(seqs.len());
+            probe_significance(&fp, &zoo, &cal, &seqs[..n], &cal.base_logits[..n])
+        };
+        Ok(Workbench { fp, cal, zoo, sig, cfg })
+    }
+
+    /// Allocate a bit budget with `strategy` and assemble the model.
+    pub fn compress(&self, strategy: Allocator, total_bits: usize,
+                    hyper: PmqHyper) -> Result<(MoeModel, Allocation)> {
+        let inputs = AllocInputs::new(&self.fp.cfg, &self.sig, &self.cal);
+        let alloc = allocate(&inputs, strategy, total_bits, hyper);
+        let model = assemble(&self.fp, &self.zoo, &alloc, &self.cal.hessians,
+                             self.cfg.attn_bits)?;
+        Ok((model, alloc))
+    }
+
+    /// Uniform-width baseline ("Uni" rows of Tab. 2).
+    pub fn compress_uniform(&self, bits: usize) -> Result<MoeModel> {
+        let alloc = Allocation::uniform(&self.fp.cfg, bits);
+        assemble(&self.fp, &self.zoo, &alloc, &self.cal.hessians,
+                 self.cfg.attn_bits)
+    }
+
+    /// The paper's default ODP policy calibrated on this workbench.
+    pub fn odp_policy(&self, protect_ratio: f32) -> OdpPolicy {
+        crate::odp::odp(&self.cal, protect_ratio)
+    }
+
+    /// Reported bit label, matching the paper's "Bits" column
+    /// convention: the nominal expert average (e.g. 20/8 = 2.5); the
+    /// exact storage-true value (incl. quantizer params + 4-bit
+    /// attention) is available as `model.expert_avg_bits()`.
+    pub fn bits_label(&self, alloc: &Allocation) -> f64 {
+        alloc.avg_bits()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::moe::model::tests::random_model;
+
+    fn bench_cfg() -> WorkbenchConfig {
+        WorkbenchConfig {
+            calib_seqs: 2,
+            calib_len: 32,
+            probe_seqs: 1,
+            fast_eps: true,
+            backend: QuantBackend::Rtn,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn workbench_end_to_end() {
+        let cfg = ModelConfig::test_tiny();
+        let fp = random_model(&cfg, 0);
+        let wb = Workbench::build(fp, bench_cfg()).unwrap();
+        let n = cfg.n_experts;
+        let (model, alloc) = wb
+            .compress(Allocator::Pmq, 2 * n, PmqHyper::default())
+            .unwrap();
+        assert_eq!(alloc.avg_bits(), 2.0);
+        let toks: Vec<u32> = (1..33).collect();
+        assert!(model.score(&toks).data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn different_budgets_different_sizes() {
+        let cfg = ModelConfig::test_tiny();
+        let fp = random_model(&cfg, 1);
+        let wb = Workbench::build(fp, bench_cfg()).unwrap();
+        let n = cfg.n_experts;
+        let (m_low, _) = wb.compress(Allocator::Pmq, n + 2, PmqHyper::default()).unwrap();
+        let (m_high, _) = wb.compress(Allocator::Pmq, 3 * n - 2, PmqHyper::default()).unwrap();
+        assert!(m_low.storage_bytes() < m_high.storage_bytes());
+    }
+
+    #[test]
+    fn odp_policy_from_workbench() {
+        let cfg = ModelConfig::test_tiny();
+        let fp = random_model(&cfg, 2);
+        let wb = Workbench::build(fp, bench_cfg()).unwrap();
+        match wb.odp_policy(0.02) {
+            OdpPolicy::Protected { mu, protect_ratio } => {
+                assert_eq!(mu.len(), cfg.n_layers);
+                assert!((protect_ratio - 0.02).abs() < 1e-6);
+            }
+            other => panic!("unexpected policy {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,189 @@
+//! Expert-significance probes (paper Sec. 3.2.1 / Eq. 3 / Fig. 3):
+//!   * drop-F-norm: ‖F(θ) − F(θ \ e_i)‖_F — output change when expert
+//!     e_i is removed from routing entirely (Fig. 3's red channel and
+//!     the "F-norm" allocation baseline).
+//!   * ε_{i,j}: ‖F(θ) − F(θ[e_i → Q(e_i, j)])‖_F — output change when
+//!     only e_i is quantized to j bits (the Eq.-4 objective term).
+//!
+//! Probes run over a (small) probe subset of the calibration sequences;
+//! both norms are averaged per token for scale stability.
+
+use crate::moe::model::{ForwardOpts, MoeModel, NullSink};
+use crate::tensor::Mat;
+
+use super::calibrate::Calibration;
+use super::zoo::ExpertZoo;
+
+#[derive(Debug, Clone)]
+pub struct Significance {
+    /// activation frequency per [layer][expert]
+    pub phi: Vec<Vec<f64>>,
+    /// routing-weight mass per [layer][expert]
+    pub weight: Vec<Vec<f64>>,
+    /// expert-drop output F-norm per [layer][expert]
+    pub drop_fnorm: Vec<Vec<f32>>,
+    /// Eq.-3 quantization output error per [layer][expert][bits-1]
+    pub eps: Vec<Vec<[f32; 3]>>,
+}
+
+fn output_delta(model: &MoeModel, seqs: &[Vec<u32>], base: &[Mat],
+                opts: &ForwardOpts) -> f32 {
+    let mut acc = 0.0f64;
+    let mut toks = 0usize;
+    for (seq, base_logits) in seqs.iter().zip(base) {
+        let out = model.forward(seq, opts, &mut NullSink);
+        acc += base_logits.sub(&out.logits).fro_norm() as f64;
+        toks += seq.len();
+    }
+    (acc / toks.max(1) as f64) as f32
+}
+
+/// Run all probes. `probe_seqs` should be a small subset of the
+/// calibration set (each expert×bit pair costs one forward per seq).
+pub fn probe_significance(model: &MoeModel, zoo: &ExpertZoo,
+                          cal: &Calibration, probe_seqs: &[Vec<u32>],
+                          probe_base: &[Mat]) -> Significance {
+    let cfg = &model.cfg;
+    let mut drop_fnorm = vec![vec![0.0f32; cfg.n_experts]; cfg.n_layers];
+    let mut eps = vec![vec![[0.0f32; 3]; cfg.n_experts]; cfg.n_layers];
+    for l in 0..cfg.n_layers {
+        for e in 0..cfg.n_experts {
+            let opts = ForwardOpts {
+                mask_expert: Some((l, e)),
+                ..Default::default()
+            };
+            drop_fnorm[l][e] = output_delta(model, probe_seqs, probe_base, &opts);
+            for bits in 1..=3usize {
+                let repl = zoo.get(l, e, bits);
+                let opts = ForwardOpts {
+                    override_expert: Some((l, e, repl)),
+                    ..Default::default()
+                };
+                eps[l][e][bits - 1] =
+                    output_delta(model, probe_seqs, probe_base, &opts);
+            }
+        }
+    }
+    Significance {
+        phi: cal.phi(),
+        weight: cal.weight(),
+        drop_fnorm,
+        eps,
+    }
+}
+
+impl Significance {
+    /// Cheap proxy variant used by tests / fast paths: eps from the
+    /// zoo's weight-space reconstruction errors instead of output
+    /// probes (ablated in bench fig6).
+    pub fn from_recon_err(cal: &Calibration, zoo: &ExpertZoo) -> Significance {
+        let drop_fnorm = zoo
+            .recon_err
+            .iter()
+            .map(|layer| layer.iter().map(|e| e[0]).collect())
+            .collect();
+        Significance {
+            phi: cal.phi(),
+            weight: cal.weight(),
+            drop_fnorm,
+            eps: zoo.recon_err.clone(),
+        }
+    }
+
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{arr, num, Json};
+        use std::collections::BTreeMap;
+        let f64s = |v: &Vec<Vec<f64>>| {
+            arr(v.iter().map(|r| arr(r.iter().map(|&x| num(x)))))
+        };
+        let f32s = |v: &Vec<Vec<f32>>| {
+            arr(v.iter().map(|r| arr(r.iter().map(|&x| num(x as f64)))))
+        };
+        let mut m = BTreeMap::new();
+        m.insert("phi".into(), f64s(&self.phi));
+        m.insert("weight".into(), f64s(&self.weight));
+        m.insert("drop_fnorm".into(), f32s(&self.drop_fnorm));
+        m.insert(
+            "eps".into(),
+            arr(self.eps.iter().map(|layer| {
+                arr(layer.iter().map(|e| arr(e.iter().map(|&x| num(x as f64)))))
+            })),
+        );
+        Json::Obj(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::data::{calibration_set, Split};
+    use crate::moe::model::tests::random_model;
+    use crate::pmq::calibrate::calibrate;
+    use crate::pmq::zoo::{ExpertZoo, QuantBackend};
+
+    #[test]
+    fn eps_decreases_with_bits_and_drop_dominates() {
+        let cfg = ModelConfig::test_tiny();
+        let model = random_model(&cfg, 0);
+        let seqs = calibration_set(3, 2, 24, Split::General);
+        let cal = calibrate(&model, &seqs);
+        let zoo = ExpertZoo::build(&model, &cal.hessians, QuantBackend::Gptq).unwrap();
+        let sig = probe_significance(&model, &zoo, &cal, &seqs, &cal.base_logits);
+        let mut monotone_pairs = 0;
+        let mut total_pairs = 0;
+        for l in 0..cfg.n_layers {
+            for e in 0..cfg.n_experts {
+                let [e1, e2, e3] = sig.eps[l][e];
+                total_pairs += 2;
+                monotone_pairs += (e1 >= e2) as usize + (e2 >= e3) as usize;
+                // quantizing cannot hurt more than dropping the expert
+                // outright (up to probe noise)
+                if sig.drop_fnorm[l][e] > 1e-6 {
+                    assert!(
+                        e3 <= sig.drop_fnorm[l][e] * 1.5,
+                        "l{l} e{e}: eps3 {e3} vs drop {}",
+                        sig.drop_fnorm[l][e]
+                    );
+                }
+            }
+        }
+        // eps ordering holds for the overwhelming majority of experts
+        assert!(
+            monotone_pairs as f64 >= 0.75 * total_pairs as f64,
+            "{monotone_pairs}/{total_pairs}"
+        );
+    }
+
+    #[test]
+    fn unactivated_experts_have_zero_drop_norm() {
+        let cfg = ModelConfig::test_tiny();
+        let model = random_model(&cfg, 1);
+        let seqs = calibration_set(4, 2, 24, Split::General);
+        let cal = calibrate(&model, &seqs);
+        let zoo = ExpertZoo::build(&model, &cal.hessians, QuantBackend::Rtn).unwrap();
+        let sig = probe_significance(&model, &zoo, &cal, &seqs, &cal.base_logits);
+        for l in 0..cfg.n_layers {
+            for e in 0..cfg.n_experts {
+                if cal.stats.activation_counts[l][e] == 0 {
+                    // an expert never routed to cannot change the output
+                    // when quantized (dropping may reroute, so only eps)
+                    assert!(sig.eps[l][e][0] < 1e-6);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn recon_err_proxy_available() {
+        let cfg = ModelConfig::test_tiny();
+        let model = random_model(&cfg, 2);
+        let seqs = calibration_set(5, 2, 16, Split::General);
+        let cal = calibrate(&model, &seqs);
+        let zoo = ExpertZoo::build(&model, &cal.hessians, QuantBackend::Rtn).unwrap();
+        let sig = Significance::from_recon_err(&cal, &zoo);
+        assert_eq!(sig.eps.len(), cfg.n_layers);
+        let j = sig.to_json().to_string();
+        assert!(j.contains("drop_fnorm"));
+    }
+}

@@ -1,0 +1,226 @@
+//! Quantized-expert zoo: every expert pre-quantized at 1/2/3 bits with
+//! GPTQ (+ optionally the LWC backend), so allocation strategies just
+//! pick entries, and the eps_{i,j} probes and the final assembly share
+//! one set of quantizations — exactly how the paper runs one GPTQ pass
+//! per configuration.
+
+use anyhow::Result;
+
+use crate::moe::model::{Expert, MoeModel};
+use crate::quant::gptq::gptq_quantize;
+use crate::quant::{quantize_rtn, QTensor};
+
+use super::calibrate::HessianStore;
+use super::Allocation;
+
+/// Which quantizer backs the zoo (paper Tab. 8's backend swap).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum QuantBackend {
+    Gptq,
+    /// OmniQuant-style clipped RTN (quant::lwc)
+    Lwc,
+    /// plain round-to-nearest (ablation)
+    Rtn,
+}
+
+pub struct ExpertZoo {
+    /// [layer][expert][bits-1] for bits in {1,2,3}
+    pub entries: Vec<Vec<[Expert; 3]>>,
+    /// GPTQ reconstruction F-norm per [layer][expert][bits-1]
+    pub recon_err: Vec<Vec<[f32; 3]>>,
+}
+
+impl ExpertZoo {
+    pub fn get(&self, layer: usize, expert: usize, bits: usize) -> &Expert {
+        &self.entries[layer][expert][bits - 1]
+    }
+
+    /// Build the zoo from the FP model + calibration Hessians.
+    pub fn build(model: &MoeModel, hess: &HessianStore,
+                 backend: QuantBackend) -> Result<ExpertZoo> {
+        let cfg = &model.cfg;
+        let mut entries = Vec::with_capacity(cfg.n_layers);
+        let mut recon = Vec::with_capacity(cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            let mut layer_entries = Vec::with_capacity(cfg.n_experts);
+            let mut layer_recon = Vec::with_capacity(cfg.n_experts);
+            for e in 0..cfg.n_experts {
+                let fp = &model.layers[l].experts[e];
+                let (hin, hmid) = &hess.experts[l][e];
+                let mut by_bits: Vec<Expert> = Vec::with_capacity(3);
+                let mut errs = [0.0f32; 3];
+                for bits in 1..=3usize {
+                    let quant_one = |w: &QTensor, h| -> Result<(QTensor, f32)> {
+                        let dense = w.dequantize();
+                        match backend {
+                            QuantBackend::Gptq => {
+                                let r = gptq_quantize(&dense, h, bits)?;
+                                Ok((r.tensor, r.recon_err))
+                            }
+                            QuantBackend::Lwc => {
+                                let t = if bits == 1 {
+                                    quantize_rtn(&dense, 1)
+                                } else {
+                                    QTensor::Packed(crate::quant::lwc::quantize_lwc(
+                                        &dense, bits,
+                                    ))
+                                };
+                                let err = dense.sub(&t.dequantize()).fro_norm();
+                                Ok((t, err))
+                            }
+                            QuantBackend::Rtn => {
+                                let t = quantize_rtn(&dense, bits);
+                                let err = dense.sub(&t.dequantize()).fro_norm();
+                                Ok((t, err))
+                            }
+                        }
+                    };
+                    let (w1, e1) = quant_one(&fp.w1, hin)?;
+                    let (w3, e3) = quant_one(&fp.w3, hin)?;
+                    let (w2, e2) = quant_one(&fp.w2, hmid)?;
+                    errs[bits - 1] = (e1 * e1 + e3 * e3 + e2 * e2).sqrt();
+                    by_bits.push(Expert { w1, w3, w2 });
+                }
+                let arr: [Expert; 3] = by_bits.try_into().map_err(|_| {
+                    anyhow::anyhow!("zoo entry build failed")
+                })?;
+                layer_entries.push(arr);
+                layer_recon.push(errs);
+            }
+            entries.push(layer_entries);
+            recon.push(layer_recon);
+        }
+        Ok(ExpertZoo { entries, recon_err: recon })
+    }
+}
+
+/// Assemble the compressed model: experts from the zoo per `alloc`,
+/// attention + gate quantized to `attn_bits` (paper: 4-bit; 16 keeps FP).
+pub fn assemble(model: &MoeModel, zoo: &ExpertZoo, alloc: &Allocation,
+                hess: &HessianStore, attn_bits: usize) -> Result<MoeModel> {
+    let cfg = &model.cfg;
+    let mut out = model.clone();
+    for l in 0..cfg.n_layers {
+        for e in 0..cfg.n_experts {
+            let bits = alloc.bits[l][e];
+            out.layers[l].experts[e] = if bits == 16 {
+                model.layers[l].experts[e].clone()
+            } else {
+                zoo.get(l, e, bits).clone()
+            };
+        }
+        if attn_bits < 16 {
+            let layer = &mut out.layers[l];
+            for (w, h) in [
+                (&mut layer.wq, &hess.attn_in[l]),
+                (&mut layer.wk, &hess.attn_in[l]),
+                (&mut layer.wv, &hess.attn_in[l]),
+                (&mut layer.wo, &hess.attn_out[l]),
+            ] {
+                let dense = w.dequantize();
+                *w = gptq_quantize(&dense, h, attn_bits)?.tensor;
+            }
+            // the gate is [D, E] — E < GROUP_SIZE columns, keep rows
+            // grouped along D like every other matrix. Its size is
+            // negligible (paper quantizes it to 4-bit; D=128 rows
+            // satisfy the group constraint).
+            if layer.gate.rows % crate::config::GROUP_SIZE == 0 {
+                let g = gptq_quantize(&layer.gate, &hess.gate_in[l], attn_bits)?;
+                layer.gate = g.tensor.dequantize();
+            }
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::data::{calibration_set, Split};
+    use crate::moe::model::tests::random_model;
+    use crate::pmq::calibrate::calibrate;
+
+    fn setup() -> (ModelConfig, MoeModel, ExpertZoo, super::super::calibrate::Calibration) {
+        let cfg = ModelConfig::test_tiny();
+        let model = random_model(&cfg, 0);
+        let seqs = calibration_set(2, 2, 32, Split::General);
+        let cal = calibrate(&model, &seqs);
+        let zoo = ExpertZoo::build(&model, &cal.hessians, QuantBackend::Gptq).unwrap();
+        (cfg, model, zoo, cal)
+    }
+
+    #[test]
+    fn zoo_has_all_entries_with_monotone_error() {
+        let (cfg, _, zoo, _) = setup();
+        assert_eq!(zoo.entries.len(), cfg.n_layers);
+        for l in 0..cfg.n_layers {
+            for e in 0..cfg.n_experts {
+                let errs = zoo.recon_err[l][e];
+                // more bits -> lower (or equal) reconstruction error
+                assert!(errs[0] >= errs[1] && errs[1] >= errs[2],
+                        "layer {l} expert {e}: {errs:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn zoo_bits_per_weight() {
+        let (_, _, zoo, _) = setup();
+        let e2 = &zoo.entries[0][0][1]; // 2-bit
+        // test_tiny has K=32 < GROUP_SIZE, so quantizer-param overhead
+        // is large (2 f32 per 32 elems = 2 extra bits); real configs
+        // amortize to ~+1 bit.
+        let bpw = e2.w1.bits_per_weight();
+        assert!((2.0..4.5).contains(&bpw), "{bpw}");
+        let e1 = &zoo.entries[0][0][0]; // 1-bit
+        let bpw1 = e1.w1.bits_per_weight();
+        assert!((1.0..=2.0).contains(&bpw1), "{bpw1}");
+    }
+
+    #[test]
+    fn assemble_respects_allocation() {
+        let (cfg, model, zoo, cal) = setup();
+        let alloc = Allocation::uniform(&cfg, 2);
+        let q = assemble(&model, &zoo, &alloc, &cal.hessians, 4).unwrap();
+        let avg = q.expert_avg_bits();
+        // 2-bit + group-param overhead (large at test_tiny's K=32)
+        assert!((2.5..4.5).contains(&avg), "{avg}");
+        // test_tiny is embedding-dominated; check expert shrinkage, not
+        // whole-model ratio (real configs are expert-dominated)
+        assert!(q.storage_bytes() < model.storage_bytes());
+        let fp_expert: usize = model.layers.iter()
+            .flat_map(|l| &l.experts).map(|e| e.storage_bytes()).sum();
+        let q_expert: usize = q.layers.iter()
+            .flat_map(|l| &l.experts).map(|e| e.storage_bytes()).sum();
+        assert!(q_expert * 3 < fp_expert, "{q_expert} vs {fp_expert}");
+    }
+
+    #[test]
+    fn assembled_model_still_functions() {
+        let (_, model, zoo, cal) = setup();
+        let alloc = Allocation::uniform(&model.cfg, 2);
+        let q = assemble(&model, &zoo, &alloc, &cal.hessians, 4).unwrap();
+        let toks: Vec<u32> = (1..33).collect();
+        let logits = q.score(&toks);
+        assert!(logits.data.iter().all(|v| v.is_finite()));
+        // quantized output differs from FP but not absurdly
+        let fp = model.score(&toks);
+        let rel = fp.sub(&logits).fro_norm() / fp.fro_norm();
+        assert!(rel > 1e-4 && rel < 1.0, "rel {rel}");
+    }
+
+    #[test]
+    fn mixed_allocation_sizes_between_uniforms() {
+        let (cfg, model, zoo, cal) = setup();
+        let a1 = Allocation::uniform(&cfg, 1);
+        let a3 = Allocation::uniform(&cfg, 3);
+        let mut mixed = Allocation::uniform(&cfg, 2);
+        mixed.bits[0][0] = 3;
+        mixed.bits[0][1] = 1;
+        let s1 = assemble(&model, &zoo, &a1, &cal.hessians, 4).unwrap().storage_bytes();
+        let s2 = assemble(&model, &zoo, &mixed, &cal.hessians, 4).unwrap().storage_bytes();
+        let s3 = assemble(&model, &zoo, &a3, &cal.hessians, 4).unwrap().storage_bytes();
+        assert!(s1 < s2 && s2 < s3);
+    }
+}

@@ -1,0 +1,159 @@
+//! 1-bit binarization with the bit-change transform (paper Eqs. 7-10,
+//! Appendix A.2): btilde = (sign(w)+1)/2 packed 32 rows per u32 word,
+//! reconstruction w = (2*btilde - 1) * s.
+//!
+//! Scale: per output column s_c = mean |w[:, c]| (XNOR-Net per-filter
+//! analogue; DESIGN.md) or the paper's literal scalar
+//! s = ||W||_1/(d*m) via `scalar_scale = true`.
+
+use crate::tensor::Mat;
+
+#[derive(Debug, Clone)]
+pub struct BinaryTensor {
+    pub k: usize,
+    pub n: usize,
+    /// [k_words, n] row-major; bit i of word w = row w*32+i
+    pub packed: Vec<u32>,
+    /// per-column scale [n]
+    pub scales: Vec<f32>,
+}
+
+impl BinaryTensor {
+    pub fn k_words(&self) -> usize {
+        self.k.div_ceil(32)
+    }
+
+    /// Sign bit of element (r, c): true => +1.
+    #[inline]
+    pub fn bit(&self, r: usize, c: usize) -> bool {
+        (self.packed[(r / 32) * self.n + c] >> (r % 32)) & 1 == 1
+    }
+
+    #[inline]
+    pub fn weight(&self, r: usize, c: usize) -> f32 {
+        if self.bit(r, c) {
+            self.scales[c]
+        } else {
+            -self.scales[c]
+        }
+    }
+
+    pub fn dequantize(&self) -> Mat {
+        let mut m = Mat::zeros(self.k, self.n);
+        for r in 0..self.k {
+            for c in 0..self.n {
+                m.data[r * self.n + c] = self.weight(r, c);
+            }
+        }
+        m
+    }
+}
+
+/// Binarize a dense [K, N] matrix.
+pub fn binarize(w: &Mat, scalar_scale: bool) -> BinaryTensor {
+    let (k, n) = (w.rows, w.cols);
+    let mut scales = vec![0.0f32; n];
+    if scalar_scale {
+        let s = w.data.iter().map(|v| v.abs()).sum::<f32>() / (k * n) as f32;
+        scales.fill(s);
+    } else {
+        for c in 0..n {
+            let mut acc = 0.0;
+            for r in 0..k {
+                acc += w.at(r, c).abs();
+            }
+            scales[c] = acc / k as f32;
+        }
+    }
+    let k_words = k.div_ceil(32);
+    let mut packed = vec![0u32; k_words * n];
+    for r in 0..k {
+        for c in 0..n {
+            if w.at(r, c) >= 0.0 {
+                packed[(r / 32) * n + c] |= 1 << (r % 32);
+            }
+        }
+    }
+    BinaryTensor { k, n, packed, scales }
+}
+
+/// Binarize a single row given fixed column scales (used inside the
+/// GPTQ column loop so binarization benefits from error compensation).
+pub fn binarize_row(row: &[f32], scales: &[f32], out: &mut [f32]) {
+    for (c, (&v, &s)) in row.iter().zip(scales).enumerate() {
+        out[c] = if v >= 0.0 { s } else { -s };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn signs_preserved() {
+        let mut rng = Rng::new(0);
+        let w = Mat::randn(&mut rng, 96, 16, 1.0);
+        let b = binarize(&w, false);
+        let wr = b.dequantize();
+        for r in 0..96 {
+            for c in 0..16 {
+                let want = if w.at(r, c) >= 0.0 { 1.0 } else { -1.0 };
+                assert_eq!(wr.at(r, c).signum(), want);
+            }
+        }
+    }
+
+    #[test]
+    fn column_scale_is_mean_abs() {
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(&mut rng, 64, 8, 2.0);
+        let b = binarize(&w, false);
+        for c in 0..8 {
+            let mean: f32 = (0..64).map(|r| w.at(r, c).abs()).sum::<f32>() / 64.0;
+            assert!((b.scales[c] - mean).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn scalar_scale_matches_paper_formula() {
+        let mut rng = Rng::new(2);
+        let w = Mat::randn(&mut rng, 64, 8, 1.0);
+        let b = binarize(&w, true);
+        let expected = w.data.iter().map(|v| v.abs()).sum::<f32>() / (64.0 * 8.0);
+        for &s in &b.scales {
+            assert!((s - expected).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn non_multiple_of_32_rows() {
+        let mut rng = Rng::new(3);
+        let w = Mat::randn(&mut rng, 50, 4, 1.0);
+        let b = binarize(&w, false);
+        assert_eq!(b.k_words(), 2);
+        let wr = b.dequantize();
+        assert_eq!(wr.rows, 50);
+        for r in 0..50 {
+            for c in 0..4 {
+                assert_eq!(wr.at(r, c) >= 0.0, w.at(r, c) >= 0.0);
+            }
+        }
+    }
+
+    #[test]
+    fn binarization_is_best_scaled_sign_approx() {
+        // per-column mean |w| minimizes ||w - s*sign(w)||^2 over s
+        let mut rng = Rng::new(4);
+        let w = Mat::randn(&mut rng, 128, 4, 1.0);
+        let b = binarize(&w, false);
+        let base = w.sub(&b.dequantize()).fro_norm();
+        for &delta in &[0.9f32, 1.1] {
+            let mut b2 = b.clone();
+            for s in b2.scales.iter_mut() {
+                *s *= delta;
+            }
+            assert!(w.sub(&b2.dequantize()).fro_norm() >= base);
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! Group-wise asymmetric min/max quantizer (round-to-nearest baseline,
+//! and the quantizer-parameter machinery GPTQ reuses).
+
+use crate::config::GROUP_SIZE;
+use crate::tensor::Mat;
+
+use super::pack::{pack_levels, PackedTensor};
+
+/// Per-group quantizer parameters for one group row of a [K, N] matrix.
+#[derive(Debug, Clone)]
+pub struct GroupParams {
+    pub scales: Vec<f32>, // [n]
+    pub zeros: Vec<f32>,  // [n]
+}
+
+/// Effective group length for a K-row matrix: min(GROUP_SIZE, K),
+/// which must divide K.
+pub fn effective_group(k: usize) -> usize {
+    let g = GROUP_SIZE.min(k);
+    assert_eq!(k % g, 0, "K={k} not divisible by group {g}");
+    g
+}
+
+/// Compute asymmetric min/max params for rows [r0, r0+group) of w.
+pub fn group_params(w: &Mat, r0: usize, group: usize, bits: usize) -> GroupParams {
+    let qmax = ((1usize << bits) - 1) as f32;
+    let n = w.cols;
+    let mut lo = vec![f32::INFINITY; n];
+    let mut hi = vec![f32::NEG_INFINITY; n];
+    for r in r0..(r0 + group).min(w.rows) {
+        for c in 0..n {
+            let v = w.at(r, c);
+            lo[c] = lo[c].min(v);
+            hi[c] = hi[c].max(v);
+        }
+    }
+    let mut scales = vec![0.0; n];
+    let mut zeros = vec![0.0; n];
+    for c in 0..n {
+        scales[c] = ((hi[c] - lo[c]) / qmax).max(1e-8);
+        zeros[c] = -lo[c] / scales[c];
+    }
+    GroupParams { scales, zeros }
+}
+
+/// Quantize one scalar with the given scale/zero at `bits`.
+#[inline]
+pub fn quantize_value(v: f32, scale: f32, zero: f32, bits: usize) -> u32 {
+    let qmax = ((1usize << bits) - 1) as f32;
+    (v / scale + zero).round().clamp(0.0, qmax) as u32
+}
+
+#[inline]
+pub fn dequantize_value(q: u32, scale: f32, zero: f32) -> f32 {
+    (q as f32 - zero) * scale
+}
+
+/// Full-matrix round-to-nearest group-wise quantization.
+pub fn quantize_groupwise(w: &Mat, bits: usize) -> PackedTensor {
+    let (k, n) = (w.rows, w.cols);
+    let group = effective_group(k);
+    let groups = k / group;
+    let mut q = vec![0u32; k * n];
+    let mut scales = vec![0.0f32; groups * n];
+    let mut zeros = vec![0.0f32; groups * n];
+    for g in 0..groups {
+        let p = group_params(w, g * group, group, bits);
+        scales[g * n..(g + 1) * n].copy_from_slice(&p.scales);
+        zeros[g * n..(g + 1) * n].copy_from_slice(&p.zeros);
+        for r in g * group..(g + 1) * group {
+            for c in 0..n {
+                q[r * n + c] = quantize_value(w.at(r, c), p.scales[c], p.zeros[c], bits);
+            }
+        }
+    }
+    PackedTensor { bits, k, n, group, qweight: pack_levels(&q, k, n, bits), scales, zeros }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn quant_error_bounded_by_half_scale() {
+        let mut rng = Rng::new(0);
+        let w = Mat::randn(&mut rng, 128, 16, 1.0);
+        for &bits in &[2usize, 3, 4] {
+            let t = quantize_groupwise(&w, bits);
+            let wq = t.dequantize();
+            for r in 0..w.rows {
+                let g = r / GROUP_SIZE;
+                for c in 0..w.cols {
+                    let err = (w.at(r, c) - wq.at(r, c)).abs();
+                    let s = t.scales[g * w.cols + c];
+                    assert!(err <= 0.5 * s + 1e-6, "bits={bits} err={err} s={s}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn higher_bits_lower_error() {
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(&mut rng, 256, 32, 1.0);
+        let errs: Vec<f32> = [2usize, 3, 4]
+            .iter()
+            .map(|&b| w.sub(&quantize_groupwise(&w, b).dequantize()).fro_norm())
+            .collect();
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn extremes_reachable() {
+        let mut rng = Rng::new(2);
+        let w = Mat::randn(&mut rng, 64, 4, 1.0);
+        let t = quantize_groupwise(&w, 2);
+        let levels = super::super::pack::unpack_levels(&t.qweight, 64, 4, 2);
+        assert_eq!(*levels.iter().min().unwrap(), 0);
+        assert_eq!(*levels.iter().max().unwrap(), 3);
+    }
+
+    #[test]
+    fn bits_per_weight_accounting() {
+        let mut rng = Rng::new(3);
+        let w = Mat::randn(&mut rng, 256, 64, 1.0);
+        let t = super::super::QTensor::Packed(quantize_groupwise(&w, 2));
+        // 2 bits + (scale+zero f32 per 64 elems) = 2 + 64/64 = 3 bits
+        assert!((t.bits_per_weight() - 3.0).abs() < 0.01, "{}", t.bits_per_weight());
+    }
+}

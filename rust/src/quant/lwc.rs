@@ -1,0 +1,125 @@
+//! OmniQuant-style clipped quantization (paper Appendix A.3 / Tab. 8).
+//!
+//! OmniQuant's Learnable Weight Clipping trains clip factors by
+//! gradient descent; at this scale a dense grid search over the clip
+//! factor per (group, column) finds the same optimum directly (the
+//! objective is 1-D and piecewise smooth). The searched params can
+//! back any quantizer; `quantize_lwc` runs plain RTN with them, and
+//! `pmq::quantize` can pass them into the GPTQ loop.
+
+use crate::tensor::Mat;
+
+use super::linear::{dequantize_value, effective_group, quantize_value, GroupParams};
+use super::pack::{pack_levels, PackedTensor};
+
+/// Clip grid: fractions of the full min/max range to keep.
+pub const CLIP_GRID: [f32; 8] = [1.0, 0.95, 0.9, 0.85, 0.8, 0.75, 0.7, 0.65];
+
+/// Search the best clip factor per column for rows [r0, r0+GROUP).
+pub fn clipped_group_params(w: &Mat, r0: usize, group: usize,
+                            bits: usize) -> GroupParams {
+    let qmax = ((1usize << bits) - 1) as f32;
+    let n = w.cols;
+    let r1 = (r0 + group).min(w.rows);
+    let mut scales = vec![0.0f32; n];
+    let mut zeros = vec![0.0f32; n];
+    for c in 0..n {
+        let col: Vec<f32> = (r0..r1).map(|r| w.at(r, c)).collect();
+        let (lo0, hi0) = col
+            .iter()
+            .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &v| {
+                (l.min(v), h.max(v))
+            });
+        let mut best = (f32::INFINITY, 1e-8f32, 0.0f32);
+        for &clip in &CLIP_GRID {
+            let (lo, hi) = (lo0 * clip, hi0 * clip);
+            let scale = ((hi - lo) / qmax).max(1e-8);
+            let zero = -lo / scale;
+            let mut mse = 0.0;
+            for &v in &col {
+                let q = quantize_value(v, scale, zero, bits);
+                let d = v - dequantize_value(q, scale, zero);
+                mse += d * d;
+            }
+            if mse < best.0 {
+                best = (mse, scale, zero);
+            }
+        }
+        scales[c] = best.1;
+        zeros[c] = best.2;
+    }
+    GroupParams { scales, zeros }
+}
+
+/// Full-matrix clipped RTN quantization.
+pub fn quantize_lwc(w: &Mat, bits: usize) -> PackedTensor {
+    let (k, n) = (w.rows, w.cols);
+    let group = effective_group(k);
+    let groups = k / group;
+    let mut q = vec![0u32; k * n];
+    let mut scales = vec![0.0f32; groups * n];
+    let mut zeros = vec![0.0f32; groups * n];
+    for g in 0..groups {
+        let p = clipped_group_params(w, g * group, group, bits);
+        scales[g * n..(g + 1) * n].copy_from_slice(&p.scales);
+        zeros[g * n..(g + 1) * n].copy_from_slice(&p.zeros);
+        for r in g * group..(g + 1) * group {
+            for c in 0..n {
+                q[r * n + c] = quantize_value(w.at(r, c), p.scales[c], p.zeros[c], bits);
+            }
+        }
+    }
+    PackedTensor { bits, k, n, group, qweight: pack_levels(&q, k, n, bits), scales, zeros }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::linear::quantize_groupwise;
+    use crate::util::rng::Rng;
+
+    /// Heavy-tailed weights are where clipping wins: one outlier blows
+    /// up the min/max scale and RTN wastes levels on it.
+    fn heavy_tailed(rng: &mut Rng, k: usize, n: usize) -> Mat {
+        let mut w = Mat::randn(rng, k, n, 0.5);
+        for c in 0..n {
+            let r = rng.below(k);
+            let v = w.at(r, c) + 8.0 * if rng.f32() > 0.5 { 1.0 } else { -1.0 };
+            w.set(r, c, v);
+        }
+        w
+    }
+
+    #[test]
+    fn lwc_no_worse_than_rtn_mse() {
+        let mut rng = Rng::new(0);
+        let w = heavy_tailed(&mut rng, 128, 16);
+        for &bits in &[2usize, 3] {
+            let lwc = quantize_lwc(&w, bits).dequantize();
+            let rtn = quantize_groupwise(&w, bits).dequantize();
+            let e_lwc = w.sub(&lwc).fro_norm();
+            let e_rtn = w.sub(&rtn).fro_norm();
+            assert!(e_lwc <= e_rtn + 1e-5, "bits={bits} {e_lwc} vs {e_rtn}");
+        }
+    }
+
+    #[test]
+    fn lwc_strictly_better_on_outliers_2bit() {
+        let mut rng = Rng::new(1);
+        let w = heavy_tailed(&mut rng, 256, 8);
+        let e_lwc = w.sub(&quantize_lwc(&w, 2).dequantize()).fro_norm();
+        let e_rtn = w.sub(&quantize_groupwise(&w, 2).dequantize()).fro_norm();
+        assert!(e_lwc < e_rtn, "{e_lwc} !< {e_rtn}");
+    }
+
+    #[test]
+    fn gaussian_weights_prefer_mild_clipping() {
+        // with pure gaussians the chosen clip should rarely be extreme
+        let mut rng = Rng::new(2);
+        let w = Mat::randn(&mut rng, 64, 8, 1.0);
+        let p = clipped_group_params(&w, 0, 64, 3);
+        for c in 0..8 {
+            assert!(p.scales[c] > 0.0 && p.zeros[c].is_finite());
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Quantization substrate: packing, group-wise linear quantization,
+//! GPTQ (Hessian error compensation), 1-bit binarization (paper
+//! Eqs. 7-10), the packed dequant-matmul hot path, and an
+//! OmniQuant-style clipped quantizer (Tab. 8's backend swap).
+
+pub mod binary;
+pub mod gptq;
+pub mod linear;
+pub mod lwc;
+pub mod pack;
+pub mod qmatmul;
+
+use crate::tensor::Mat;
+
+pub use binary::BinaryTensor;
+pub use pack::PackedTensor;
+
+/// A weight matrix in any representation the engine can matmul with.
+#[derive(Debug, Clone)]
+pub enum QTensor {
+    F32(Mat),
+    /// 2/3/4-bit group-wise packed
+    Packed(PackedTensor),
+    /// 1-bit sign + per-column scale
+    Binary(BinaryTensor),
+}
+
+impl QTensor {
+    pub fn shape(&self) -> (usize, usize) {
+        match self {
+            QTensor::F32(m) => (m.rows, m.cols),
+            QTensor::Packed(p) => (p.k, p.n),
+            QTensor::Binary(b) => (b.k, b.n),
+        }
+    }
+
+    /// Effective storage bits per weight element (incl. quantizer params),
+    /// the quantity the paper's "Bits" column reports.
+    pub fn bits_per_weight(&self) -> f64 {
+        let (k, n) = self.shape();
+        let elems = (k * n) as f64;
+        (self.storage_bytes() as f64) * 8.0 / elems
+    }
+
+    /// Bytes needed to store this tensor (packed words + scales/zeros).
+    pub fn storage_bytes(&self) -> usize {
+        match self {
+            QTensor::F32(m) => m.data.len() * 4,
+            QTensor::Packed(p) => {
+                p.qweight.len() * 4 + p.scales.len() * 4 + p.zeros.len() * 4
+            }
+            QTensor::Binary(b) => b.packed.len() * 4 + b.scales.len() * 4,
+        }
+    }
+
+    /// Dense reconstruction (tests / reconstruction-error measurement).
+    pub fn dequantize(&self) -> Mat {
+        match self {
+            QTensor::F32(m) => m.clone(),
+            QTensor::Packed(p) => p.dequantize(),
+            QTensor::Binary(b) => b.dequantize(),
+        }
+    }
+
+    /// y = x @ W via the representation-specific hot path.
+    pub fn matmul(&self, x: &Mat) -> Mat {
+        match self {
+            QTensor::F32(m) => x.matmul(m),
+            QTensor::Packed(p) => qmatmul::packed_matmul(x, p),
+            QTensor::Binary(b) => qmatmul::binary_matmul(x, b),
+        }
+    }
+}
+
+/// Quantize a dense matrix to `bits` (1..=4, 16 = keep f32) with plain
+/// round-to-nearest (the non-GPTQ baseline).
+pub fn quantize_rtn(w: &Mat, bits: usize) -> QTensor {
+    match bits {
+        16 => QTensor::F32(w.clone()),
+        1 => QTensor::Binary(binary::binarize(w, false)),
+        2..=4 => QTensor::Packed(linear::quantize_groupwise(w, bits)),
+        _ => panic!("unsupported bit-width {bits}"),
+    }
+}

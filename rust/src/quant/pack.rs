@@ -1,0 +1,157 @@
+//! Bit-packing (rust twin of `python/compile/kernels/packing.py`).
+//!
+//! Layout contract (little-endian u32 words, checked cross-language by
+//! the golden-packing test in python/tests/test_parity.py):
+//!   qweight[w, n] holds rows r = w*VPW + i of column n in bit-field
+//!   [i*bits, (i+1)*bits); 3-bit packs 10 fields in the low 30 bits.
+
+use crate::config::vals_per_word;
+use crate::tensor::Mat;
+
+/// 2/3/4-bit group-wise packed tensor for a logical [K, N] weight.
+#[derive(Debug, Clone)]
+pub struct PackedTensor {
+    pub bits: usize,
+    pub k: usize,
+    pub n: usize,
+    /// quantization group length along K (min(GROUP_SIZE, K))
+    pub group: usize,
+    /// [k_words, n] row-major
+    pub qweight: Vec<u32>,
+    /// [k/GROUP_SIZE, n] row-major
+    pub scales: Vec<f32>,
+    /// [k/GROUP_SIZE, n] row-major (float zero-points)
+    pub zeros: Vec<f32>,
+}
+
+impl PackedTensor {
+    pub fn k_words(&self) -> usize {
+        let vpw = vals_per_word(self.bits);
+        self.k.div_ceil(vpw)
+    }
+
+    pub fn groups(&self) -> usize {
+        self.k / self.group
+    }
+
+    /// Integer level of element (r, c).
+    #[inline]
+    pub fn level(&self, r: usize, c: usize) -> u32 {
+        let vpw = vals_per_word(self.bits);
+        let word = self.qweight[(r / vpw) * self.n + c];
+        let field = (r % vpw) * self.bits;
+        (word >> field) & ((1u32 << self.bits) - 1)
+    }
+
+    /// Dequantized element (r, c).
+    #[inline]
+    pub fn weight(&self, r: usize, c: usize) -> f32 {
+        let g = r / self.group;
+        let q = self.level(r, c) as f32;
+        (q - self.zeros[g * self.n + c]) * self.scales[g * self.n + c]
+    }
+
+    pub fn dequantize(&self) -> Mat {
+        let mut m = Mat::zeros(self.k, self.n);
+        for r in 0..self.k {
+            for c in 0..self.n {
+                m.data[r * self.n + c] = self.weight(r, c);
+            }
+        }
+        m
+    }
+}
+
+/// Pack integer levels q[K, N] (row-major) into the word layout.
+pub fn pack_levels(q: &[u32], k: usize, n: usize, bits: usize) -> Vec<u32> {
+    assert_eq!(q.len(), k * n);
+    let vpw = vals_per_word(bits);
+    let k_words = k.div_ceil(vpw);
+    let mut out = vec![0u32; k_words * n];
+    for r in 0..k {
+        let word = r / vpw;
+        let field = (r % vpw) * bits;
+        for c in 0..n {
+            debug_assert!(q[r * n + c] < (1 << bits));
+            out[word * n + c] |= q[r * n + c] << field;
+        }
+    }
+    out
+}
+
+/// Unpack the word layout back to integer levels [K, N].
+pub fn unpack_levels(packed: &[u32], k: usize, n: usize, bits: usize) -> Vec<u32> {
+    let vpw = vals_per_word(bits);
+    let mask = (1u32 << bits) - 1;
+    let mut out = vec![0u32; k * n];
+    for r in 0..k {
+        let word = r / vpw;
+        let field = (r % vpw) * bits;
+        for c in 0..n {
+            out[r * n + c] = (packed[word * n + c] >> field) & mask;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_all_widths() {
+        let mut rng = Rng::new(0);
+        for &bits in &[2usize, 3, 4] {
+            for &(k, n) in &[(64usize, 8usize), (128, 16), (130, 5)] {
+                let q: Vec<u32> = (0..k * n)
+                    .map(|_| rng.below(1 << bits) as u32)
+                    .collect();
+                let packed = pack_levels(&q, k, n, bits);
+                assert_eq!(unpack_levels(&packed, k, n, bits), q);
+            }
+        }
+    }
+
+    #[test]
+    fn three_bit_top_bits_zero() {
+        let mut rng = Rng::new(1);
+        let q: Vec<u32> = (0..40 * 4).map(|_| rng.below(8) as u32).collect();
+        let packed = pack_levels(&q, 40, 4, 3);
+        for w in packed {
+            assert_eq!(w >> 30, 0);
+        }
+    }
+
+    #[test]
+    fn matches_python_golden() {
+        // golden vector produced by packing.pack_bits for
+        // q = [[1,2],[3,0],[2,1],[0,3]] at 2 bits:
+        // col0: 1 | 3<<2 | 2<<4 | 0<<6 = 0b00_10_11_01 = 0x2d
+        // col1: 2 | 0<<2 | 1<<4 | 3<<6 = 0b11_01_00_10 = 0xd2
+        let q = vec![1, 2, 3, 0, 2, 1, 0, 3];
+        let packed = pack_levels(&q, 4, 2, 2);
+        assert_eq!(packed, vec![0x2d, 0xd2]);
+    }
+
+    #[test]
+    fn level_accessor_matches_unpack() {
+        let mut rng = Rng::new(2);
+        let (k, n, bits) = (128usize, 6usize, 3usize);
+        let q: Vec<u32> = (0..k * n).map(|_| rng.below(8) as u32).collect();
+        let t = PackedTensor {
+            bits,
+            k,
+            n,
+            group: crate::config::GROUP_SIZE,
+            qweight: pack_levels(&q, k, n, bits),
+            scales: vec![1.0; (k / crate::config::GROUP_SIZE) * n],
+            zeros: vec![0.0; (k / crate::config::GROUP_SIZE) * n],
+        };
+        for r in 0..k {
+            for c in 0..n {
+                assert_eq!(t.level(r, c), q[r * n + c]);
+            }
+        }
+    }
+}

@@ -1,0 +1,209 @@
+//! Packed dequant-matmul hot paths (the serving-time analogue of the
+//! paper's HQQ CUDA kernels; EXPERIMENTS.md §Perf tracks these).
+//!
+//! Strategy ("ikj" with row-decode): for each input row k, decode the
+//! packed weight row once into a stack buffer, then axpy into all
+//! output rows. The f32 weight row never hits the heap and the decode
+//! cost is amortized across the M activation rows.
+
+use crate::tensor::Mat;
+
+use super::binary::BinaryTensor;
+use super::pack::PackedTensor;
+
+/// y = x @ W for a packed 2/3/4-bit tensor.
+///
+/// Two regimes (EXPERIMENTS.md §Perf):
+///   * small M (decode): group-factored form — per group g,
+///       y_n = Σ_g s_gn · (Σ_{k∈g} x_k·q_kn) − s_gn·z_gn·(Σ_{k∈g} x_k)
+///     so the inner loop is one shift/mask + fma per element (no
+///     per-element scale/zero), and the scale/zero are applied once
+///     per group.
+///   * large M (prefill): decode each weight row once into a stack
+///     buffer and amortize across all activation rows.
+pub fn packed_matmul(x: &Mat, w: &PackedTensor) -> Mat {
+    if x.rows <= 4 {
+        packed_matmul_small_m(x, w)
+    } else {
+        packed_matmul_large_m(x, w)
+    }
+}
+
+fn packed_matmul_small_m(x: &Mat, w: &PackedTensor) -> Mat {
+    let n = w.n;
+    assert_eq!(x.cols, w.k, "inner dim");
+    let vpw = crate::config::vals_per_word(w.bits);
+    let mask = (1u32 << w.bits) - 1;
+    let groups = w.k / w.group;
+    let mut y = Mat::zeros(x.rows, n);
+    let mut acc = vec![0.0f32; n];
+    for m in 0..x.rows {
+        let xrow = x.row(m);
+        let yrow = &mut y.data[m * n..(m + 1) * n];
+        for g in 0..groups {
+            acc.fill(0.0);
+            let mut xsum = 0.0f32;
+            for k in g * w.group..(g + 1) * w.group {
+                let xv = xrow[k];
+                if xv == 0.0 {
+                    continue;
+                }
+                xsum += xv;
+                let word_row = &w.qweight[(k / vpw) * n..(k / vpw + 1) * n];
+                let field = ((k % vpw) * w.bits) as u32;
+                for (a, &word) in acc.iter_mut().zip(word_row) {
+                    // integer level scaled later: one fma per element
+                    *a += xv * ((word >> field) & mask) as f32;
+                }
+            }
+            let srow = &w.scales[g * n..(g + 1) * n];
+            let zrow = &w.zeros[g * n..(g + 1) * n];
+            for c in 0..n {
+                yrow[c] += srow[c] * (acc[c] - zrow[c] * xsum);
+            }
+        }
+    }
+    y
+}
+
+fn packed_matmul_large_m(x: &Mat, w: &PackedTensor) -> Mat {
+    let n = w.n;
+    assert_eq!(x.cols, w.k, "inner dim");
+    let vpw = crate::config::vals_per_word(w.bits);
+    let mask = (1u32 << w.bits) - 1;
+    let mut y = Mat::zeros(x.rows, n);
+    let mut wrow = vec![0.0f32; n];
+    for r in 0..w.k {
+        // decode row r: contiguous word row + per-group scale/zero rows
+        let word_row = &w.qweight[(r / vpw) * n..(r / vpw + 1) * n];
+        let field = ((r % vpw) * w.bits) as u32;
+        let g = r / w.group;
+        let srow = &w.scales[g * n..(g + 1) * n];
+        let zrow = &w.zeros[g * n..(g + 1) * n];
+        for c in 0..n {
+            let q = (word_row[c] >> field) & mask;
+            wrow[c] = (q as f32 - zrow[c]) * srow[c];
+        }
+        // axpy into each activation row
+        for m in 0..x.rows {
+            let xv = x.at(m, r);
+            if xv == 0.0 {
+                continue;
+            }
+            let yrow = &mut y.data[m * n..(m + 1) * n];
+            for (yv, &wv) in yrow.iter_mut().zip(wrow.iter()) {
+                *yv += xv * wv;
+            }
+        }
+    }
+    y
+}
+
+/// y = x @ W for a binary tensor: accumulate signed sums then apply the
+/// per-column scale once (paper Eq. 10 restated; see
+/// kernels/binary_matmul.py for the algebraic identity).
+pub fn binary_matmul(x: &Mat, w: &BinaryTensor) -> Mat {
+    assert_eq!(x.cols, w.k, "inner dim");
+    let n = w.n;
+    let mut acc = Mat::zeros(x.rows, n);
+    // masked-add form: acc_n = Σ_{bit=1} x_k, then
+    // y_n = s_n * (2·acc_n − Σ x) — one fma per element in the hot loop
+    // instead of the sign-select multiply (EXPERIMENTS.md §Perf).
+    let mut xsums = vec![0.0f32; x.rows];
+    for (m, xs) in xsums.iter_mut().enumerate() {
+        *xs = x.row(m).iter().sum();
+    }
+    for r in 0..w.k {
+        let word_row = &w.packed[(r / 32) * n..(r / 32 + 1) * n];
+        let bit = (r % 32) as u32;
+        for m in 0..x.rows {
+            let xv = x.at(m, r);
+            if xv == 0.0 {
+                continue;
+            }
+            let yrow = &mut acc.data[m * n..(m + 1) * n];
+            for (yv, &word) in yrow.iter_mut().zip(word_row) {
+                *yv += xv * ((word >> bit) & 1) as f32;
+            }
+        }
+    }
+    for m in 0..x.rows {
+        let xs = xsums[m];
+        let yrow = &mut acc.data[m * n..(m + 1) * n];
+        for (yv, &s) in yrow.iter_mut().zip(w.scales.iter()) {
+            *yv = s * (2.0 * *yv - xs);
+        }
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::binary::binarize;
+    use crate::quant::linear::quantize_groupwise;
+    use crate::util::rng::Rng;
+
+    fn assert_close(a: &Mat, b: &Mat, tol: f32) {
+        assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert!((x - y).abs() <= tol * (1.0 + x.abs()), "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn packed_matmul_matches_dense_dequant() {
+        let mut rng = Rng::new(0);
+        for &bits in &[2usize, 3, 4] {
+            let w = Mat::randn(&mut rng, 128, 32, 1.0);
+            let t = quantize_groupwise(&w, bits);
+            let x = Mat::randn(&mut rng, 5, 128, 1.0);
+            let fast = packed_matmul(&x, &t);
+            let slow = x.matmul(&t.dequantize());
+            assert_close(&fast, &slow, 1e-4);
+        }
+    }
+
+    #[test]
+    fn binary_matmul_matches_dense_dequant() {
+        let mut rng = Rng::new(1);
+        let w = Mat::randn(&mut rng, 96, 24, 1.0);
+        let b = binarize(&w, false);
+        let x = Mat::randn(&mut rng, 4, 96, 1.0);
+        assert_close(&binary_matmul(&x, &b), &x.matmul(&b.dequantize()), 1e-4);
+    }
+
+    #[test]
+    fn single_row_decode_path() {
+        let mut rng = Rng::new(2);
+        let w = Mat::randn(&mut rng, 64, 16, 1.0);
+        let t = quantize_groupwise(&w, 3);
+        let x = Mat::randn(&mut rng, 1, 64, 1.0);
+        assert_close(&packed_matmul(&x, &t), &x.matmul(&t.dequantize()), 1e-4);
+    }
+}
+
+#[cfg(test)]
+mod perf_path_tests {
+    use super::*;
+    use crate::quant::linear::quantize_groupwise;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn small_and_large_m_paths_agree() {
+        let mut rng = Rng::new(7);
+        for &bits in &[2usize, 3, 4] {
+            let w = Mat::randn(&mut rng, 128, 48, 1.0);
+            let t = quantize_groupwise(&w, bits);
+            for m in [1usize, 3, 4] {
+                let x = Mat::randn(&mut rng, m, 128, 1.0);
+                let small = packed_matmul_small_m(&x, &t);
+                let large = packed_matmul_large_m(&x, &t);
+                for (a, b) in small.data.iter().zip(&large.data) {
+                    assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()),
+                            "bits={bits} m={m}: {a} vs {b}");
+                }
+            }
+        }
+    }
+}

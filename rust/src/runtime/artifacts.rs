@@ -1,0 +1,139 @@
+//! `artifacts/manifest.json` parsing: artifact -> ordered input/output
+//! specs, plus the canonical parameter order for `model_fwd`.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub inputs: Vec<IoSpec>,
+    pub outputs: Vec<IoSpec>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub config_name: String,
+    /// sorted tensor-name order for model_fwd's trailing params
+    pub param_order: Vec<String>,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text)?;
+        let param_order = j
+            .get("param_order")?
+            .as_arr()?
+            .iter()
+            .map(|v| Ok(v.as_str()?.to_string()))
+            .collect::<Result<_>>()?;
+        let mut artifacts = Vec::new();
+        for (name, spec) in j.get("artifacts")?.as_obj()? {
+            let parse_io = |key: &str| -> Result<Vec<IoSpec>> {
+                spec.get(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(|io| {
+                        Ok(IoSpec {
+                            name: io.get("name")?.as_str()?.to_string(),
+                            shape: io
+                                .get("shape")?
+                                .as_arr()?
+                                .iter()
+                                .map(|s| s.as_usize())
+                                .collect::<Result<_>>()?,
+                            dtype: io
+                                .opt("dtype")
+                                .map(|d| d.as_str().map(String::from))
+                                .transpose()?
+                                .unwrap_or_else(|| "f32".into()),
+                        })
+                    })
+                    .collect()
+            };
+            artifacts.push(ArtifactSpec {
+                name: name.clone(),
+                inputs: parse_io("inputs")?,
+                outputs: parse_io("outputs")?,
+            });
+        }
+        Ok(Manifest {
+            config_name: j.get("config")?.as_str()?.to_string(),
+            param_order,
+            artifacts,
+        })
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .with_context(|| format!("artifact {name} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "config": "tiny",
+      "param_order": ["a", "b"],
+      "artifacts": {
+        "gate": {
+          "inputs": [
+            {"name": "x", "shape": [128, 128], "dtype": "f32"},
+            {"name": "wg", "shape": [128, 8], "dtype": "f32"}
+          ],
+          "outputs": [{"name": "probs", "shape": [128, 8]}]
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.config_name, "tiny");
+        assert_eq!(m.param_order, vec!["a", "b"]);
+        let g = m.artifact("gate").unwrap();
+        assert_eq!(g.inputs.len(), 2);
+        assert_eq!(g.inputs[0].shape, vec![128, 128]);
+        assert_eq!(g.outputs[0].name, "probs");
+        assert!(m.artifact("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_built() {
+        let path = crate::config::artifacts_dir().join("manifest.json");
+        if !path.exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&path).unwrap();
+        for name in ["model_fwd", "gate", "expert_ffn_f32", "expert_ffn_q2",
+                     "expert_ffn_q3", "expert_ffn_b1", "attention",
+                     "token_importance"] {
+            assert!(m.artifact(name).is_ok(), "{name} missing");
+        }
+        // model_fwd inputs = tokens + all params
+        let mf = m.artifact("model_fwd").unwrap();
+        assert_eq!(mf.inputs.len(), 1 + m.param_order.len());
+    }
+}

@@ -1,0 +1,90 @@
+//! Full-model PJRT scorer: executes `model_fwd.hlo.txt` (the L2 JAX
+//! forward with L1 Pallas kernels inlined) with weights passed as
+//! runtime arguments in canonical sorted-name order.
+//!
+//! This is the fast whole-sequence scoring path of the serving stack;
+//! the component artifacts (gate / expert_ffn_* / attention) cover the
+//! ODP-dynamic path driven by `coordinator`.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::moe::weights::WeightFile;
+use crate::tensor::Mat;
+
+use super::{lit_f32, lit_i32, mat_from_lit, Runtime};
+
+pub struct PjrtModel {
+    pub rt: Runtime,
+    pub cfg: ModelConfig,
+    /// inputs[0] = tokens (rewritten per call), inputs[1..] = weights
+    /// in manifest.param_order — uploaded once, reused across calls.
+    inputs: Vec<xla::Literal>,
+}
+
+impl PjrtModel {
+    /// Load config + weights + model_fwd artifact from `dir`.
+    pub fn load(dir: &Path) -> Result<PjrtModel> {
+        let cfg = ModelConfig::load(&dir.join("config.json"))?;
+        let wf = WeightFile::load(&dir.join("weights.mcwt"))?;
+        let mut rt = Runtime::cpu(dir)?;
+        rt.load("model_fwd")?;
+        let mut inputs = vec![lit_i32(&vec![0; cfg.max_seq], &[cfg.max_seq])?];
+        for name in rt.manifest.param_order.clone() {
+            let t = wf.get(&name).with_context(|| name.clone())?;
+            inputs.push(lit_f32(&t.data, &t.shape)?);
+        }
+        Ok(PjrtModel { rt, cfg, inputs })
+    }
+
+    /// Score a full sequence; pads to max_seq (the artifact's static
+    /// shape) and returns logits for the original length.
+    ///
+    /// The exported forward is causal, so right-padding is exact for
+    /// the positions we keep.
+    pub fn score(&mut self, tokens: &[u32]) -> Result<Mat> {
+        let s = self.cfg.max_seq;
+        if tokens.len() > s {
+            bail!("sequence longer than max_seq {s}");
+        }
+        let mut padded: Vec<i32> = tokens.iter().map(|&t| t as i32).collect();
+        padded.resize(s, 0);
+        self.inputs[0] = lit_i32(&padded, &[s])?;
+        let outs = self.rt.execute("model_fwd", &self.inputs)?;
+        let logits = mat_from_lit(&outs[0], s, self.cfg.vocab_size)?;
+        Ok(logits.slice_rows(0, tokens.len()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::artifacts_dir;
+    use crate::moe::MoeModel;
+
+    /// The L3-runtime keystone: PJRT execution of the AOT artifact must
+    /// agree with the native rust engine (which itself matches JAX via
+    /// golden_parity).
+    #[test]
+    fn pjrt_matches_native_engine() {
+        let dir = artifacts_dir();
+        if !dir.join("model_fwd.hlo.txt").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let mut pm = PjrtModel::load(&dir).unwrap();
+        let wf = WeightFile::load(&dir.join("weights.mcwt")).unwrap();
+        let native = MoeModel::load_f32(&pm.cfg, &wf).unwrap();
+        let tokens: Vec<u32> = (0..64u32).map(|i| (i * 31) % 200 + 1).collect();
+        let want = native.score(&tokens);
+        let got = pm.score(&tokens).unwrap();
+        assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+        let mut max_rel = 0.0f32;
+        for (g, w) in got.data.iter().zip(&want.data) {
+            max_rel = max_rel.max((g - w).abs() / (1.0 + w.abs()));
+        }
+        assert!(max_rel < 5e-3, "PJRT vs native: max_rel {max_rel}");
+    }
+}

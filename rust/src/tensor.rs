@@ -1,0 +1,256 @@
+//! Dense f32 tensor substrate for the native engine.
+//!
+//! Row-major matrices with the cache-friendly "ikj" matmul (the inner
+//! loop runs contiguously over the output row, which LLVM auto-
+//! vectorizes). This is the baseline the packed-quantized hot path in
+//! `quant::qmatmul` is benchmarked against (EXPERIMENTS.md §Perf).
+
+use std::fmt;
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mat[{}x{}]", self.rows, self.cols)
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(rows * cols, data.len());
+        Mat { rows, cols, data }
+    }
+
+    pub fn randn(rng: &mut Rng, rows: usize, cols: usize, std: f32) -> Mat {
+        let data = (0..rows * cols).map(|_| rng.normal() * std).collect();
+        Mat { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// y = self @ w  (self: [M,K], w: [K,N])
+    pub fn matmul(&self, w: &Mat) -> Mat {
+        let mut y = Mat::zeros(self.rows, w.cols);
+        matmul_into(self, w, &mut y);
+        y
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                t.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        t
+    }
+
+    pub fn fro_norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Mat { rows: self.rows, cols: self.cols, data }
+    }
+
+    pub fn slice_rows(&self, start: usize, end: usize) -> Mat {
+        assert!(start <= end && end <= self.rows);
+        Mat {
+            rows: end - start,
+            cols: self.cols,
+            data: self.data[start * self.cols..end * self.cols].to_vec(),
+        }
+    }
+}
+
+/// y = x @ w, accumulating into a pre-zeroed (or pre-filled) buffer.
+/// "ikj" order: the inner loop is a contiguous axpy over the out row.
+pub fn matmul_into(x: &Mat, w: &Mat, y: &mut Mat) {
+    assert_eq!(x.cols, w.rows, "matmul inner dim");
+    assert_eq!((y.rows, y.cols), (x.rows, w.cols), "matmul out dims");
+    let n = w.cols;
+    for i in 0..x.rows {
+        let xrow = x.row(i);
+        let yrow = &mut y.data[i * n..(i + 1) * n];
+        for (k, &xv) in xrow.iter().enumerate() {
+            if xv == 0.0 {
+                continue; // dense-mixing weights are often sparse
+            }
+            let wrow = &w.data[k * n..(k + 1) * n];
+            for (yv, &wv) in yrow.iter_mut().zip(wrow) {
+                *yv += xv * wv;
+            }
+        }
+    }
+}
+
+/// y[m] += x[m] (elementwise over equal-shaped matrices)
+pub fn add_inplace(y: &mut Mat, x: &Mat) {
+    assert_eq!((y.rows, y.cols), (x.rows, x.cols));
+    for (a, b) in y.data.iter_mut().zip(&x.data) {
+        *a += b;
+    }
+}
+
+/// RMSNorm over the last dim with learned gain, eps matching the jax ref.
+pub fn rmsnorm(x: &Mat, weight: &[f32], eps: f32) -> Mat {
+    assert_eq!(x.cols, weight.len());
+    let mut y = Mat::zeros(x.rows, x.cols);
+    for r in 0..x.rows {
+        let row = x.row(r);
+        let ms = row.iter().map(|v| v * v).sum::<f32>() / x.cols as f32;
+        let inv = 1.0 / (ms + eps).sqrt();
+        for (c, (&v, &w)) in row.iter().zip(weight).enumerate() {
+            y.data[r * x.cols + c] = v * inv * w;
+        }
+    }
+    y
+}
+
+/// Numerically-stable in-place softmax over each row.
+pub fn softmax_rows(x: &mut Mat) {
+    for r in 0..x.rows {
+        let row = x.row_mut(r);
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            sum += *v;
+        }
+        let inv = 1.0 / sum;
+        for v in row.iter_mut() {
+            *v *= inv;
+        }
+    }
+}
+
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// log-softmax of one row (for log-likelihood scoring)
+pub fn log_softmax(row: &[f32]) -> Vec<f32> {
+    let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let lse = m + row.iter().map(|v| (v - m).exp()).sum::<f32>().ln();
+    row.iter().map(|v| v - lse).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_known() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![1.0, 1.0, 1.0, 1.0]);
+        let y = a.matmul(&b);
+        assert_eq!(y.data, vec![3.0, 3.0, 7.0, 7.0]);
+    }
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(0);
+        let a = Mat::randn(&mut rng, 5, 7, 1.0);
+        let mut eye = Mat::zeros(7, 7);
+        for i in 0..7 {
+            eye.set(i, i, 1.0);
+        }
+        let y = a.matmul(&eye);
+        for (x, y) in a.data.iter().zip(&y.data) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(&mut rng, 3, 5, 1.0);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn softmax_rows_normalized() {
+        let mut m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, -5.0, 0.0, 5.0]);
+        softmax_rows(&mut m);
+        for r in 0..2 {
+            let s: f32 = m.row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-6);
+        }
+        // monotone: larger logits -> larger probs
+        assert!(m.at(0, 2) > m.at(0, 1) && m.at(0, 1) > m.at(0, 0));
+    }
+
+    #[test]
+    fn softmax_extreme_logits_stable() {
+        let mut m = Mat::from_vec(1, 3, vec![1e30, -1e30, 0.0]);
+        softmax_rows(&mut m);
+        assert!((m.at(0, 0) - 1.0).abs() < 1e-6);
+        assert!(m.data.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn rmsnorm_unit_rows() {
+        let x = Mat::from_vec(1, 4, vec![2.0, 2.0, 2.0, 2.0]);
+        let y = rmsnorm(&x, &[1.0; 4], 1e-5);
+        for v in &y.data {
+            assert!((v - 1.0).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn log_softmax_sums_to_one() {
+        let l = log_softmax(&[0.5, 1.5, -0.5]);
+        let s: f32 = l.iter().map(|v| v.exp()).sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn fro_norm_known() {
+        let a = Mat::from_vec(1, 2, vec![3.0, 4.0]);
+        assert!((a.fro_norm() - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn slice_rows_content() {
+        let a = Mat::from_vec(3, 2, vec![1., 2., 3., 4., 5., 6.]);
+        let s = a.slice_rows(1, 3);
+        assert_eq!(s.data, vec![3., 4., 5., 6.]);
+    }
+}

@@ -1,0 +1,134 @@
+//! Minimal benchmark harness (criterion is not vendored offline).
+//!
+//! Each `cargo bench` target sets `harness = false` and drives this:
+//! warmup, timed iterations with outlier-robust reporting, and a table
+//! printer whose rows mirror the paper's tables (DESIGN.md §5).
+
+use std::time::Instant;
+
+use super::stats::Timings;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub timings: Timings,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.timings.mean_ns() / 1e6
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        self.timings.p50_ns() / 1e6
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut timings = Timings::default();
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        timings.push(t0.elapsed().as_nanos() as u64);
+    }
+    BenchResult { name: name.to_string(), iters, timings }
+}
+
+/// Run `f` repeatedly until `min_total_ms` elapsed (at least 3 iters),
+/// for benches whose single-iteration cost is unknown up front.
+pub fn bench_for<F: FnMut()>(name: &str, min_total_ms: u64, mut f: F) -> BenchResult {
+    f(); // warmup
+    let mut timings = Timings::default();
+    let start = Instant::now();
+    let mut iters = 0;
+    while iters < 3 || start.elapsed().as_millis() < min_total_ms as u128 {
+        let t0 = Instant::now();
+        f();
+        timings.push(t0.elapsed().as_nanos() as u64);
+        iters += 1;
+        if iters > 10_000 {
+            break;
+        }
+    }
+    BenchResult { name: name.to_string(), iters, timings }
+}
+
+/// Fixed-width table printer for paper-style output.
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, headers: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        println!("\n== {} ==", self.title);
+        let line = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!("{:<w$}  ", c, w = widths[i]));
+            }
+            println!("{}", s.trim_end());
+        };
+        line(&self.headers);
+        println!("{}", "-".repeat(widths.iter().sum::<usize>() + 2 * widths.len()));
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+pub fn fmt_f(v: f64, prec: usize) -> String {
+    format!("{v:.prec$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0;
+        let r = bench("x", 2, 5, || n += 1);
+        assert_eq!(r.iters, 5);
+        assert_eq!(n, 7); // warmup + timed
+        assert_eq!(r.timings.samples_ns.len(), 5);
+    }
+
+    #[test]
+    fn table_arity_enforced() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        assert_eq!(t.rows.len(), 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_bad_row_panics() {
+        let mut t = Table::new("t", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+}

@@ -1,0 +1,112 @@
+//! Tiny CLI argument parser (clap is not vendored offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments; each binary declares its options by querying an `Args`
+//! instance.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut out = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(a) = iter.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(n) => Ok(n),
+                Err(_) => bail!("--{name} expects an integer, got {v:?}"),
+            },
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(n) => Ok(n),
+                Err(_) => bail!("--{name} expects a number, got {v:?}"),
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let a = parse("serve --port 8080 --verbose --mode=fast input.txt");
+        assert_eq!(a.positional, vec!["serve", "input.txt"]);
+        assert_eq!(a.get("port"), Some("8080"));
+        assert_eq!(a.get("mode"), Some("fast"));
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn trailing_flag() {
+        let a = parse("--x 1 --dry-run");
+        assert!(a.flag("dry-run"));
+        assert_eq!(a.get("x"), Some("1"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = parse("--n 12 --r 0.5");
+        assert_eq!(a.usize_or("n", 0).unwrap(), 12);
+        assert_eq!(a.usize_or("m", 7).unwrap(), 7);
+        assert!((a.f64_or("r", 0.0).unwrap() - 0.5).abs() < 1e-12);
+        assert!(parse("--n x").usize_or("n", 0).is_err());
+    }
+}

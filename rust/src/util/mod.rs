@@ -1,0 +1,12 @@
+//! Self-contained utility substrates.
+//!
+//! The build environment is fully offline with only `xla` + `anyhow`
+//! vendored, so the usual ecosystem crates (serde/serde_json, rand,
+//! clap, criterion, rayon) are re-implemented here at the scale this
+//! project needs. Each submodule is unit-tested in place.
+
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod bench;

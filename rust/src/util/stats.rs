@@ -1,0 +1,145 @@
+//! Small statistics helpers used across calibration, ODP and benches.
+
+/// Arithmetic mean; 0.0 for empty input.
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+/// Population variance.
+pub fn variance(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f32>() / xs.len() as f32
+}
+
+/// Excess kurtosis (Fisher); 0 for normal data. Used by the Tab-11
+/// token-metric pruning baselines.
+pub fn kurtosis(xs: &[f32]) -> f32 {
+    let m = mean(xs);
+    let v = variance(xs).max(1e-12);
+    let m4 = xs.iter().map(|x| (x - m).powi(4)).sum::<f32>() / xs.len().max(1) as f32;
+    m4 / (v * v) - 3.0
+}
+
+/// Median by sorting a copy (calibration-time only, not on hot path).
+pub fn median(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+/// p-th percentile (0..=100), linear interpolation.
+pub fn percentile(xs: &[f32], p: f32) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f32;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f32) * (v[hi] - v[lo])
+    }
+}
+
+/// Index of max element (ties -> first).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, x) in xs.iter().enumerate() {
+        if *x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Indices of the k largest elements, descending by value.
+pub fn top_k_indices(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&a, &b| xs[b].partial_cmp(&xs[a]).unwrap());
+    idx.truncate(k);
+    idx
+}
+
+/// Running timing statistics for the bench harness.
+#[derive(Debug, Default, Clone)]
+pub struct Timings {
+    pub samples_ns: Vec<u64>,
+}
+
+impl Timings {
+    pub fn push(&mut self, ns: u64) {
+        self.samples_ns.push(ns);
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.samples_ns.is_empty() {
+            return 0.0;
+        }
+        self.samples_ns.iter().sum::<u64>() as f64 / self.samples_ns.len() as f64
+    }
+
+    pub fn p50_ns(&self) -> f64 {
+        let xs: Vec<f32> = self.samples_ns.iter().map(|&n| n as f32).collect();
+        median(&xs) as f64
+    }
+
+    pub fn min_ns(&self) -> u64 {
+        self.samples_ns.iter().copied().min().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_var() {
+        assert_eq!(mean(&[1.0, 2.0, 3.0]), 2.0);
+        assert!((variance(&[1.0, 2.0, 3.0]) - 2.0 / 3.0).abs() < 1e-6);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn median_odd_even() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn percentile_interp() {
+        let xs = [0.0, 10.0];
+        assert_eq!(percentile(&xs, 0.0), 0.0);
+        assert_eq!(percentile(&xs, 50.0), 5.0);
+        assert_eq!(percentile(&xs, 100.0), 10.0);
+    }
+
+    #[test]
+    fn topk() {
+        assert_eq!(top_k_indices(&[1.0, 5.0, 3.0, 4.0], 2), vec![1, 3]);
+        assert_eq!(argmax(&[1.0, 5.0, 3.0]), 1);
+    }
+
+    #[test]
+    fn kurtosis_uniformish_negative() {
+        // uniform distribution has negative excess kurtosis (-1.2)
+        let xs: Vec<f32> = (0..1000).map(|i| i as f32 / 1000.0).collect();
+        assert!(kurtosis(&xs) < -1.0);
+    }
+}

@@ -1,0 +1,112 @@
+//! Cross-language parity: the rust native engine must reproduce the
+//! JAX model's outputs on the fixed golden input (artifacts/golden.mcwt,
+//! written by python/compile/aot.py at build time).
+//!
+//! These tests are skipped (not failed) when artifacts/ has not been
+//! built, so `cargo test` works pre-`make artifacts`.
+
+use mc_moe::config::{artifacts_dir, ModelConfig};
+use mc_moe::moe::model::{ForwardOpts, NullSink};
+use mc_moe::moe::{MoeModel, WeightFile};
+
+fn load() -> Option<(ModelConfig, MoeModel, WeightFile)> {
+    let dir = artifacts_dir();
+    let cfg = ModelConfig::load(&dir.join("config.json")).ok()?;
+    let wf = WeightFile::load(&dir.join("weights.mcwt")).ok()?;
+    let golden = WeightFile::load(&dir.join("golden.mcwt")).ok()?;
+    let model = MoeModel::load_f32(&cfg, &wf).ok()?;
+    Some((cfg, model, golden))
+}
+
+fn golden_tokens(golden: &WeightFile) -> Vec<u32> {
+    golden
+        .vec1("tokens")
+        .unwrap()
+        .iter()
+        .map(|&f| f as u32)
+        .collect()
+}
+
+#[test]
+fn logits_match_jax() {
+    let Some((_cfg, model, golden)) = load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let tokens = golden_tokens(&golden);
+    let want = golden.mat("logits").unwrap();
+    let got = model.score(&tokens);
+    assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+    let mut max_abs = 0.0f32;
+    let mut max_rel = 0.0f32;
+    for (g, w) in got.data.iter().zip(&want.data) {
+        max_abs = max_abs.max((g - w).abs());
+        max_rel = max_rel.max((g - w).abs() / (1.0 + w.abs()));
+    }
+    assert!(
+        max_rel < 5e-3,
+        "logits diverge from JAX: max_abs={max_abs} max_rel={max_rel}"
+    );
+}
+
+#[test]
+fn router_probs_match_jax() {
+    let Some((_cfg, model, golden)) = load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let tokens = golden_tokens(&golden);
+    let want = golden.mat("probs_l0").unwrap();
+    let opts = ForwardOpts { collect_probs: true, ..Default::default() };
+    let out = model.forward(&tokens, &opts, &mut NullSink);
+    let got = &out.probs[0];
+    let mut max_abs = 0.0f32;
+    for (g, w) in got.data.iter().zip(&want.data) {
+        max_abs = max_abs.max((g - w).abs());
+    }
+    assert!(max_abs < 2e-3, "layer-0 router probs diverge: {max_abs}");
+}
+
+#[test]
+fn token_importance_matches_jax() {
+    let Some((_cfg, model, golden)) = load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let tokens = golden_tokens(&golden);
+    let want = golden.vec1("importance_l0").unwrap();
+    let opts = ForwardOpts { collect_importance: true, ..Default::default() };
+    let out = model.forward(&tokens, &opts, &mut NullSink);
+    let got = &out.importance[0];
+    // importance spans orders of magnitude; compare relatively
+    for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+        let rel = (g - w).abs() / (1e-3 + w.abs());
+        assert!(rel < 2e-2, "importance[{i}]: got {g} want {w}");
+    }
+}
+
+#[test]
+fn trained_model_beats_uniform_ppl() {
+    // sanity: the trained weights actually model the synthetic corpus
+    let Some((cfg, model, _)) = load() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    use mc_moe::data::{pack_stream, Split, TextChannel};
+    use mc_moe::util::rng::Rng;
+    let mut rng = Rng::new(1234);
+    let text = TextChannel::new();
+    let toks = pack_stream(&mut rng, &text, 256, Split::General);
+    let logits = model.score(&toks);
+    let mut nll = 0.0f64;
+    for t in 1..toks.len() {
+        let lp = mc_moe::tensor::log_softmax(logits.row(t - 1));
+        nll -= lp[toks[t] as usize] as f64;
+    }
+    let ppl = (nll / (toks.len() - 1) as f64).exp();
+    let uniform = cfg.vocab_size as f64;
+    assert!(
+        ppl < uniform / 4.0,
+        "trained model PPL {ppl:.1} not << uniform {uniform}"
+    );
+}

@@ -1,0 +1,226 @@
+//! Randomized property tests over the core invariants (proptest is not
+//! vendored offline; seeded sweeps play its role).
+
+use mc_moe::config::ModelConfig;
+use mc_moe::moe::model::{ForwardOpts, NullSink, OdpPolicy};
+use mc_moe::pmq::solver::{solve_brute, solve_layer, IpProblem};
+use mc_moe::quant::linear::quantize_groupwise;
+use mc_moe::quant::pack::{pack_levels, unpack_levels};
+use mc_moe::quant::{quantize_rtn, QTensor};
+use mc_moe::tensor::Mat;
+use mc_moe::util::rng::Rng;
+
+// the random-model helper lives behind cfg(test) in the lib; rebuild a
+// small equivalent here for integration-test use
+fn random_model(cfg: &ModelConfig, seed: u64) -> mc_moe::moe::MoeModel {
+    use mc_moe::moe::model::{Expert, Layer, MoeModel};
+    let mut rng = Rng::new(seed);
+    let d = cfg.d_model;
+    let mk = |rng: &mut Rng, r: usize, c: usize| {
+        QTensor::F32(Mat::randn(rng, r, c, (r as f32).powf(-0.5)))
+    };
+    let layers = (0..cfg.n_layers)
+        .map(|_| Layer {
+            attn_norm: vec![1.0; d],
+            ffn_norm: vec![1.0; d],
+            gate: Mat::randn(&mut rng, d, cfg.n_experts, (d as f32).powf(-0.5)),
+            wq: mk(&mut rng, d, d),
+            wk: mk(&mut rng, d, d),
+            wv: mk(&mut rng, d, d),
+            wo: mk(&mut rng, d, d),
+            experts: (0..cfg.n_experts)
+                .map(|_| Expert {
+                    w1: mk(&mut rng, d, cfg.d_ff),
+                    w3: mk(&mut rng, d, cfg.d_ff),
+                    w2: mk(&mut rng, cfg.d_ff, d),
+                })
+                .collect(),
+        })
+        .collect();
+    MoeModel {
+        cfg: cfg.clone(),
+        tok_emb: Mat::randn(&mut rng, cfg.vocab_size, d, 0.02),
+        pos_emb: Mat::randn(&mut rng, cfg.max_seq, d, 0.02),
+        final_norm: vec![1.0; d],
+        lm_head: Mat::randn(&mut rng, d, cfg.vocab_size, (d as f32).powf(-0.5)),
+        layers,
+    }
+}
+
+#[test]
+fn prop_pack_roundtrip_random_shapes() {
+    let mut rng = Rng::new(100);
+    for trial in 0..60 {
+        let bits = 2 + rng.below(3); // 2..4
+        let k = 1 + rng.below(300);
+        let n = 1 + rng.below(20);
+        let q: Vec<u32> = (0..k * n).map(|_| rng.below(1 << bits) as u32).collect();
+        let packed = pack_levels(&q, k, n, bits);
+        assert_eq!(unpack_levels(&packed, k, n, bits), q, "trial {trial}");
+    }
+}
+
+#[test]
+fn prop_quantization_error_shrinks_with_bits() {
+    let mut rng = Rng::new(101);
+    for trial in 0..10 {
+        let k = 64 * (1 + rng.below(3));
+        let n = 8 + rng.below(24);
+        let std = 0.5 + rng.f32();
+        let w = Mat::randn(&mut rng, k, n, std);
+        let mut last = f32::INFINITY;
+        for bits in [1usize, 2, 3, 4] {
+            let err = w.sub(&quantize_rtn(&w, bits).dequantize()).fro_norm();
+            assert!(err <= last * 1.001, "trial {trial} bits {bits}: {err} > {last}");
+            last = err;
+        }
+    }
+}
+
+#[test]
+fn prop_ip_solver_optimal_vs_brute() {
+    let mut rng = Rng::new(102);
+    for trial in 0..40 {
+        let n = 3 + rng.below(6);
+        let total = n + rng.below(2 * n + 1);
+        let mut cost: Vec<[f64; 3]> = Vec::with_capacity(n);
+        for _ in 0..n {
+            let b = rng.f64() + 0.05;
+            cost.push([
+                b * (1.0 + 3.0 * rng.f64()),
+                b * (0.5 + rng.f64()),
+                b * rng.f64() * 0.5,
+            ]);
+        }
+        let p = IpProblem { cost, total_bits: total, enforce_minimums: rng.f64() < 0.5 };
+        match (solve_layer(&p), solve_brute(&p)) {
+            (Some(bits), Some((_, want))) => {
+                let got: f64 = bits.iter().enumerate()
+                    .map(|(i, &j)| p.cost[i][j - 1]).sum();
+                assert!((got - want).abs() < 1e-9, "trial {trial}");
+            }
+            (None, None) => {}
+            (a, b) => panic!("trial {trial}: dp {a:?} vs brute {b:?}"),
+        }
+    }
+}
+
+#[test]
+fn prop_odp_never_increases_expert_calls() {
+    let cfg = ModelConfig::test_tiny();
+    let model = random_model(&cfg, 103);
+    let mut rng = Rng::new(104);
+    for trial in 0..8 {
+        let toks: Vec<u32> = (0..24).map(|_| rng.below(250) as u32 + 1).collect();
+        let mu = rng.f32();
+        let policy = OdpPolicy::Protected {
+            mu: vec![mu; cfg.n_layers],
+            protect_ratio: rng.f32() * 0.2,
+        };
+        let base = model.forward(&toks, &ForwardOpts::default(), &mut NullSink);
+        let pruned = model.forward(
+            &toks,
+            &ForwardOpts { odp: Some(&policy), ..Default::default() },
+            &mut NullSink,
+        );
+        assert!(pruned.stats.expert_calls <= base.stats.expert_calls,
+                "trial {trial}");
+        assert_eq!(
+            pruned.stats.expert_calls + pruned.stats.dropped_secondary,
+            base.stats.expert_calls,
+            "trial {trial}: accounting"
+        );
+        assert!(pruned.logits.data.iter().all(|v| v.is_finite()));
+    }
+}
+
+#[test]
+fn prop_compression_monotone_in_mu() {
+    let cfg = ModelConfig::test_tiny();
+    let model = random_model(&cfg, 105);
+    let toks: Vec<u32> = (1..33).collect();
+    let mut last = 0.0f64;
+    for i in 0..6 {
+        let mu = i as f32 * 0.2;
+        let policy = OdpPolicy::WeightOnly { mu: vec![mu; cfg.n_layers] };
+        let out = model.forward(
+            &toks,
+            &ForwardOpts { odp: Some(&policy), ..Default::default() },
+            &mut NullSink,
+        );
+        let cr = out.stats.compression_ratio();
+        assert!(cr >= last - 1e-12, "mu {mu}: {cr} < {last}");
+        last = cr;
+    }
+}
+
+#[test]
+fn prop_eval_sample_gold_always_valid() {
+    let mut rng = Rng::new(106);
+    for _ in 0..300 {
+        let task = rng.below(8);
+        let s = mc_moe::data::eval_sample(&mut rng, task);
+        assert!(s.gold < s.choices.len());
+        assert!(!s.choices[s.gold].is_empty());
+        // all choices distinct
+        for i in 0..s.choices.len() {
+            for j in 0..i {
+                assert_ne!(s.choices[i], s.choices[j], "task {task}");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_batcher_completes_under_random_load() {
+    use mc_moe::coordinator::{Batcher, Metrics, Request};
+    use std::sync::Arc;
+    let cfg = ModelConfig::test_tiny();
+    let model = Arc::new(random_model(&cfg, 107));
+    let mut rng = Rng::new(108);
+    for trial in 0..4 {
+        let metrics = Metrics::new();
+        let max_batch = 1 + rng.below(4);
+        let mut b = Batcher::new(model.clone(), None, max_batch);
+        let n = 2 + rng.below(6);
+        for id in 0..n {
+            let plen = 2 + rng.below(8);
+            let prompt: Vec<u32> =
+                (0..plen).map(|_| rng.below(200) as u32 + 4).collect();
+            b.submit(Request {
+                id: id as u64,
+                prompt,
+                max_new_tokens: 1 + rng.below(6),
+                temperature: None,
+            });
+        }
+        let done = b.run_to_completion(&metrics);
+        assert_eq!(done.len(), n, "trial {trial}");
+    }
+}
+
+#[test]
+fn prop_quantized_forward_error_bounded() {
+    // quantized-model logits drift from FP but stay correlated: the
+    // argmax agreement over positions must be far above chance
+    let cfg = ModelConfig::test_tiny();
+    let model = random_model(&cfg, 109);
+    let mut q = model.clone();
+    for layer in q.layers.iter_mut() {
+        for e in layer.experts.iter_mut() {
+            e.w1 = quantize_rtn(&e.w1.dequantize(), 3);
+            e.w3 = quantize_rtn(&e.w3.dequantize(), 3);
+            e.w2 = QTensor::Packed(quantize_groupwise(&e.w2.dequantize(), 3));
+        }
+    }
+    let toks: Vec<u32> = (1..49).collect();
+    let a = model.score(&toks);
+    let b = q.score(&toks);
+    let mut agree = 0;
+    for t in 0..a.rows {
+        let am = mc_moe::util::stats::argmax(a.row(t));
+        let bm = mc_moe::util::stats::argmax(b.row(t));
+        agree += (am == bm) as usize;
+    }
+    assert!(agree * 2 > a.rows, "argmax agreement {agree}/{}", a.rows);
+}

@@ -1,0 +1,146 @@
+//! Integration: the full MC pipeline on the *trained* model —
+//! calibrate -> GPTQ zoo -> PMQ allocation -> assembled model -> eval.
+//! Asserts the paper's qualitative claims hold on this substrate:
+//!   * PMQ @ 2.5 avg bits beats uniform 2-bit on PPL
+//!   * mixed allocation differs from uniform (the IP actually chooses)
+//!   * ODP protection recovers part of weight-only pruning's PPL hit
+//!     at (almost) the same compression ratio
+//!
+//! Skipped when artifacts/ hasn't been built.
+
+use mc_moe::config::{artifacts_dir, ModelConfig};
+use mc_moe::data::Split;
+use mc_moe::eval::perplexity;
+use mc_moe::moe::model::OdpPolicy;
+use mc_moe::moe::{MoeModel, WeightFile};
+use mc_moe::odp;
+use mc_moe::pmq::allocate::{Allocator, PmqHyper};
+use mc_moe::pmq::{Workbench, WorkbenchConfig};
+
+fn workbench() -> Option<Workbench> {
+    let dir = artifacts_dir();
+    let cfg = ModelConfig::load(&dir.join("config.json")).ok()?;
+    let wf = WeightFile::load(&dir.join("weights.mcwt")).ok()?;
+    let fp = MoeModel::load_f32(&cfg, &wf).ok()?;
+    Workbench::build(
+        fp,
+        WorkbenchConfig {
+            calib_seqs: 4,
+            calib_len: 192,
+            probe_seqs: 1,
+            fast_eps: false,
+            ..Default::default()
+        },
+    )
+    .ok()
+}
+
+fn ppl(m: &MoeModel, odp: Option<&OdpPolicy>) -> f64 {
+    perplexity(m, Split::Text, 9100, 2, 192, odp).ppl
+}
+
+#[test]
+fn full_pipeline_reproduces_paper_shapes() {
+    let Some(wb) = workbench() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let n = wb.fp.cfg.n_experts;
+
+    let fp_ppl = ppl(&wb.fp, None);
+
+    // --- uniform 2-bit vs PMQ @ 2.5 avg (paper Tab. 2's headline) ---
+    let uni2 = wb.compress_uniform(2).unwrap();
+    let uni2_ppl = ppl(&uni2, None);
+    let (pmq25, alloc) = wb
+        .compress(Allocator::Pmq, 5 * n / 2, PmqHyper::default())
+        .unwrap();
+    let pmq25_ppl = ppl(&pmq25, None);
+    assert!(fp_ppl < uni2_ppl, "fp {fp_ppl} vs uni2 {uni2_ppl}");
+    assert!(
+        pmq25_ppl < uni2_ppl,
+        "PMQ-2.5b PPL {pmq25_ppl} must beat uniform-2b {uni2_ppl}"
+    );
+    // the IP must actually mix widths (not collapse to uniform)
+    let hist = alloc.histogram();
+    assert!(hist[0] > 0 && hist[2] > 0, "degenerate allocation {hist:?}");
+
+    // --- PMQ @ 2.0 beats uniform 2-bit at the same nominal budget ---
+    let (pmq20, _) = wb.compress(Allocator::Pmq, 2 * n, PmqHyper::default()).unwrap();
+    let pmq20_ppl = ppl(&pmq20, None);
+    assert!(
+        pmq20_ppl < uni2_ppl * 1.02,
+        "PMQ-2.0b {pmq20_ppl} should be <= uniform-2b {uni2_ppl}"
+    );
+
+    // --- ODP: protection recovers weight-only loss (paper Fig. 7) ---
+    let weight_only = odp::weight_only(&wb.cal);
+    let protected = odp::odp(&wb.cal, 0.02);
+    let r_wo = perplexity(&pmq25, Split::Text, 9100, 2, 192, Some(&weight_only));
+    let r_prot = perplexity(&pmq25, Split::Text, 9100, 2, 192, Some(&protected));
+    assert!(
+        r_prot.ppl <= r_wo.ppl * 1.005,
+        "protection must not hurt: {} vs {}",
+        r_prot.ppl,
+        r_wo.ppl
+    );
+    // compression ratio nearly unchanged (2% protection)
+    let cr_wo = r_wo.stats.compression_ratio();
+    let cr_prot = r_prot.stats.compression_ratio();
+    assert!(
+        cr_prot > cr_wo - 0.03,
+        "protection should barely cost compression: {cr_prot} vs {cr_wo}"
+    );
+    assert!(cr_wo > 0.05, "median threshold should prune >5%: {cr_wo}");
+
+    // --- storage accounting: 2.5-bit experts are ~4-12x smaller ---
+    let fp_expert: usize = wb.fp.layers.iter().flat_map(|l| &l.experts)
+        .map(|e| e.storage_bytes()).sum();
+    let mc_expert: usize = pmq25.layers.iter().flat_map(|l| &l.experts)
+        .map(|e| e.storage_bytes()).sum();
+    let ratio = mc_expert as f64 / fp_expert as f64;
+    assert!(
+        (0.08..0.25).contains(&ratio),
+        "expert compression ratio {ratio} out of expected band"
+    );
+}
+
+#[test]
+fn binary_experts_degrade_gracefully() {
+    let Some(wb) = workbench() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    // all-1-bit is the extreme; it must still produce finite PPL and
+    // be strictly worse than 3-bit
+    let uni1 = wb.compress_uniform(1).unwrap();
+    let uni3 = wb.compress_uniform(3).unwrap();
+    let p1 = ppl(&uni1, None);
+    let p3 = ppl(&uni3, None);
+    assert!(p1.is_finite() && p3.is_finite());
+    assert!(p3 < p1, "3-bit {p3} must beat 1-bit {p1}");
+}
+
+#[test]
+fn pmq_not_worse_than_single_metric_baselines() {
+    let Some(wb) = workbench() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let n = wb.fp.cfg.n_experts;
+    let budget = 2 * n; // the regime where metrics differ most
+    let hyper = PmqHyper::default();
+    let pmq = ppl(&wb.compress(Allocator::Pmq, budget, hyper).unwrap().0, None);
+    // PMQ should beat the worst single-metric baseline
+    let baselines: Vec<f64> = [Allocator::Weight, Allocator::Frequency,
+                               Allocator::Random(3)]
+        .iter()
+        .map(|&s| ppl(&wb.compress(s, budget, hyper).unwrap().0, None))
+        .collect();
+    let worst = baselines.iter().cloned().fold(0.0, f64::max);
+    assert!(
+        pmq < worst,
+        "PMQ {pmq} should beat the worst single-metric baseline {worst} \
+         (baselines: {baselines:?})"
+    );
+}
