@@ -1,6 +1,8 @@
 //! Hot-path micro-benchmarks (EXPERIMENTS.md §Perf): packed dequant
-//! matmul vs dense f32, binary matmul, decode step latency, PJRT
-//! full-forward vs native, and batcher throughput.
+//! matmul vs dense f32, binary matmul, decode step latency, serial vs
+//! threaded expert dispatch (emits BENCH_dispatch.json), PJRT
+//! full-forward vs native (with the `pjrt` feature), and batcher
+//! throughput.
 //!
 //!   cargo bench --bench hotpath
 
@@ -9,8 +11,10 @@ use std::time::Instant;
 
 use mc_moe::config::{artifacts_dir, ModelConfig};
 use mc_moe::coordinator::{DecodeSession, Server};
+use mc_moe::moe::exec::dispatch::{dispatch_experts, scatter, DispatchMode};
+use mc_moe::moe::model::Expert;
 use mc_moe::moe::{MoeModel, WeightFile};
-use mc_moe::quant::{binary::binarize, linear::quantize_groupwise, qmatmul};
+use mc_moe::quant::{binary::binarize, linear::quantize_groupwise, qmatmul, QTensor};
 use mc_moe::tensor::Mat;
 use mc_moe::util::bench::{bench_for, Table};
 use mc_moe::util::rng::Rng;
@@ -64,6 +68,70 @@ fn matmul_suite() {
     t.print();
 }
 
+/// Serial vs `std::thread::scope`-threaded expert dispatch at a
+/// serving-representative shape; records the comparison in
+/// BENCH_dispatch.json (ISSUE 1 acceptance: threaded >= 1.5x serial).
+fn dispatch_suite() {
+    let (d, d_ff, n_experts, rows, top_k) = (128usize, 512usize, 8usize, 128usize, 2usize);
+    let mut rng = Rng::new(7);
+    let experts: Vec<Expert> = (0..n_experts)
+        .map(|_| Expert {
+            w1: QTensor::F32(Mat::randn(&mut rng, d, d_ff, 0.05)),
+            w3: QTensor::F32(Mat::randn(&mut rng, d, d_ff, 0.05)),
+            w2: QTensor::F32(Mat::randn(&mut rng, d_ff, d, 0.05)),
+        })
+        .collect();
+    let h = Mat::randn(&mut rng, rows, d, 1.0);
+    // balanced round-robin routing so every expert carries work
+    let topk: Vec<Vec<(usize, f32)>> = (0..rows)
+        .map(|t| {
+            (0..top_k)
+                .map(|j| ((t + j) % n_experts, 1.0 / top_k as f32))
+                .collect()
+        })
+        .collect();
+
+    let r_serial = bench_for("dispatch serial", 1500, || {
+        let b = dispatch_experts(&h, &topk, &experts, None, DispatchMode::Serial);
+        std::hint::black_box(scatter(&b, rows, d));
+    });
+    let r_threaded = bench_for("dispatch threaded", 1500, || {
+        let b = dispatch_experts(&h, &topk, &experts, None, DispatchMode::Threaded);
+        std::hint::black_box(scatter(&b, rows, d));
+    });
+    let serial_us = r_serial.timings.mean_ns() / 1e3;
+    let threaded_us = r_threaded.timings.mean_ns() / 1e3;
+    let speedup = serial_us / threaded_us;
+    let threads = std::thread::available_parallelism()
+        .map(|p| p.get())
+        .unwrap_or(1);
+
+    let mut t = Table::new(
+        "hotpath — expert dispatch (serial vs thread::scope)",
+        &["mode", "us/layer", "speedup"],
+    );
+    t.row(vec!["serial".into(), format!("{serial_us:.1}"), "1.00".into()]);
+    t.row(vec![
+        format!("threaded (x{threads})"),
+        format!("{threaded_us:.1}"),
+        format!("{speedup:.2}"),
+    ]);
+    t.print();
+
+    let json = format!(
+        "{{\n  \"shape\": {{\"d_model\": {d}, \"d_ff\": {d_ff}, \
+         \"n_experts\": {n_experts}, \"rows\": {rows}, \"top_k\": {top_k}}},\n  \
+         \"threads\": {threads},\n  \
+         \"serial_us\": {serial_us:.1},\n  \
+         \"threaded_us\": {threaded_us:.1},\n  \
+         \"speedup\": {speedup:.3}\n}}\n"
+    );
+    match std::fs::write("BENCH_dispatch.json", &json) {
+        Ok(()) => println!("wrote BENCH_dispatch.json (speedup {speedup:.2}x)"),
+        Err(e) => eprintln!("could not write BENCH_dispatch.json: {e}"),
+    }
+}
+
 fn engine_suite() {
     let dir = artifacts_dir();
     let Ok(cfg) = ModelConfig::load(&dir.join("config.json")) else {
@@ -83,6 +151,16 @@ fn engine_suite() {
     t.row(vec!["native full-seq score".into(),
                format!("{:.2}", r.mean_ms()), format!("seq{}", cfg.max_seq)]);
 
+    // single-shot batched prefill (fills the KV cache in one pass);
+    // session allocated once and rewound so only prefill is timed
+    let mut psess = DecodeSession::new(fp.clone(), None);
+    let r = bench_for("batched prefill", 1000, || {
+        psess.reset();
+        std::hint::black_box(psess.prefill(&toks[..64]));
+    });
+    t.row(vec!["batched prefill (KV)".into(), format!("{:.3}", r.mean_ms()),
+               "64 tok".into()]);
+
     // decode step
     let mut sess = DecodeSession::new(fp.clone(), None);
     sess.prefill(&toks[..64]);
@@ -98,8 +176,9 @@ fn engine_suite() {
     t.row(vec!["decode step (KV)".into(), format!("{:.3}", r.mean_ms()),
                "token".into()]);
 
-    // PJRT full-forward
-    if dir.join("model_fwd.hlo.txt").exists() {
+    // PJRT full-forward (stub PjrtModel errors when the feature is off,
+    // so the cfg! guard keeps this branch dead there)
+    if cfg!(feature = "pjrt") && dir.join("model_fwd.hlo.txt").exists() {
         let mut pm = mc_moe::runtime::PjrtModel::load(&dir).unwrap();
         let r = bench_for("pjrt score", 2000, || {
             std::hint::black_box(pm.score(&toks).unwrap());
@@ -108,7 +187,7 @@ fn engine_suite() {
                    format!("seq{}", cfg.max_seq)]);
     }
 
-    // batched serving throughput
+    // batched serving throughput (fused multi-session decode)
     let t0 = Instant::now();
     let server = Server::spawn(fp.clone(), None, 4);
     let mut rng = Rng::new(3);
@@ -132,5 +211,6 @@ fn engine_suite() {
 
 fn main() {
     matmul_suite();
+    dispatch_suite();
     engine_suite();
 }

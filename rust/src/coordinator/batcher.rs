@@ -1,6 +1,10 @@
 //! Continuous batcher: admits queued requests into a bounded set of
-//! active decode sessions and round-robins single-token steps —
-//! vLLM-style iteration-level scheduling, sized for the CPU testbed.
+//! active decode sessions and advances them with a FUSED step —
+//! vLLM-style iteration-level scheduling where every active session
+//! contributes its current token to one batched pass, and each expert
+//! is dispatched at most once per layer per iteration across all
+//! sessions (`decode::step_many`, DESIGN.md §3). Prompt admission uses
+//! the batched single-shot prefill.
 
 use std::collections::VecDeque;
 use std::sync::Arc;
@@ -10,7 +14,7 @@ use crate::config::EOS;
 use crate::moe::model::MoeModel;
 use crate::util::stats::argmax;
 
-use super::decode::{DecodeOdp, DecodeSession};
+use super::decode::{step_many, DecodeOdp, DecodeSession};
 use super::metrics::Metrics;
 
 #[derive(Debug, Clone)]
@@ -73,8 +77,8 @@ impl Batcher {
         self.active.len()
     }
 
-    /// Admit + advance every active session by one token.
-    /// Returns completions retired this step.
+    /// Admit + advance every active session by one token (one fused
+    /// pass). Returns completions retired this step.
     pub fn step(&mut self, metrics: &Metrics) -> Vec<Completion> {
         // admission (continuous batching: fill free slots every step)
         while self.active.len() < self.max_batch {
@@ -83,8 +87,9 @@ impl Batcher {
             let mut session =
                 DecodeSession::new(self.model.clone(), self.odp.clone());
             let started = Instant::now();
-            // prefill the prompt minus its last token; the final prompt
-            // token is the first decode step below
+            // single-shot batched prefill of the prompt minus its last
+            // token; the final prompt token is the first fused decode
+            // step below
             let (head, tail) = req.prompt.split_at(req.prompt.len() - 1);
             if !head.is_empty() {
                 session.prefill(head);
@@ -99,24 +104,40 @@ impl Batcher {
                 first_token_ns: None,
             });
         }
+        if self.active.is_empty() {
+            return Vec::new();
+        }
 
-        // one decode step per active sequence
+        // one fused decode step across every active session
+        let inputs: Vec<u32> = self
+            .active
+            .iter()
+            .map(|a| *a.generated.last().unwrap_or(&a.req.prompt[0]))
+            .collect();
+        let t0 = Instant::now();
+        let logits = {
+            let mut sessions: Vec<&mut DecodeSession> =
+                self.active.iter_mut().map(|a| &mut a.session).collect();
+            step_many(&mut sessions, &inputs)
+        };
+        let step_ns = t0.elapsed().as_nanos() as u64;
+        // the fused pass produced one token per session
+        let per_token_ns = (step_ns / self.active.len() as u64).max(1);
+
+        // sampling + retirement per session (descending index so
+        // swap_remove never disturbs rows not yet processed)
         let mut retired = Vec::new();
-        let mut i = 0;
-        while i < self.active.len() {
+        for i in (0..self.active.len()).rev() {
             let a = &mut self.active[i];
-            let input = *a.generated.last().unwrap_or(&a.req.prompt[0]);
-            let t0 = Instant::now();
-            let logits = a.session.step(input);
-            let step_ns = t0.elapsed().as_nanos() as u64;
-            metrics.record_tpot(step_ns);
+            metrics.record_tpot(per_token_ns);
             let next = match a.req.temperature {
-                None => argmax(&logits) as u32,
+                None => argmax(&logits[i]) as u32,
                 Some((temp, _)) => {
                     // Gumbel-max sampling with a per-request LCG
                     a.rng_state = crate::util::rng::lcg_next(a.rng_state);
                     let mut rng = crate::util::rng::Rng::new(a.rng_state);
-                    let scaled: Vec<f32> = logits.iter().map(|l| l / temp).collect();
+                    let scaled: Vec<f32> =
+                        logits[i].iter().map(|l| l / temp).collect();
                     let noisy: Vec<f32> = scaled
                         .iter()
                         .map(|&l| l - (-(rng.f64().max(1e-12).ln())).ln() as f32)
@@ -140,15 +161,13 @@ impl Batcher {
                 Metrics::inc(&metrics.expert_calls,
                              a.session.stats.expert_calls as u64);
                 Metrics::inc(&metrics.experts_pruned,
-                             a.session.stats.dropped_secondary as u64);
+                             a.session.stats.pruned_total() as u64);
                 retired.push(Completion {
                     id: a.req.id,
                     tokens: a.generated,
                     ttft_ns: a.first_token_ns.unwrap_or(0),
                     total_ns: a.started.elapsed().as_nanos() as u64,
                 });
-            } else {
-                i += 1;
             }
         }
         self.done.extend(retired.clone());
@@ -223,6 +242,28 @@ mod tests {
         b2.submit(req(0, 6));
         let d2 = b2.run_to_completion(&m2);
         assert_eq!(d1[0].tokens, d2[0].tokens);
+    }
+
+    #[test]
+    fn fused_batch_matches_solo_decode() {
+        // batch width must not change any session's greedy tokens
+        let solo: Vec<Vec<u32>> = (0..4u64)
+            .map(|i| {
+                let m = Metrics::new();
+                let mut b = Batcher::new(engine(), None, 1);
+                b.submit(req(i, 6));
+                b.run_to_completion(&m)[0].tokens.clone()
+            })
+            .collect();
+        let m = Metrics::new();
+        let mut b = Batcher::new(engine(), None, 4);
+        for i in 0..4 {
+            b.submit(req(i, 6));
+        }
+        let done = b.run_to_completion(&m);
+        for c in done {
+            assert_eq!(c.tokens, solo[c.id as usize], "request {}", c.id);
+        }
     }
 
     #[test]

@@ -1,4 +1,8 @@
-//! Incremental KV-cache decoding over the (quantized) native engine.
+//! Incremental KV-cache decoding over the (quantized) native engine,
+//! as a thin driver over the shared execution core `moe::exec`
+//! (DESIGN.md §2): the attention kernel, routing/ODP decisions, and
+//! expert dispatch are the same code the scoring forward runs, so the
+//! two paths can no longer drift.
 //!
 //! ODP at decode time (paper Sec. 3.3 applied autoregressively): the
 //! w1/w0 ratio rule is exact; Eq.-6 token protection needs attention
@@ -9,60 +13,24 @@
 //! percentile of training-distribution L1 norms (see
 //! `DecodeOdp::calibrate`); divergence from the paper documented in
 //! DESIGN.md §2.
+//!
+//! `prefill` runs the whole prompt as ONE batched full-sequence pass
+//! that fills the KV cache in a single shot (not S sequential steps);
+//! `step_many` advances several sessions at once, dispatching each
+//! expert at most once per layer across the whole batch (the fused
+//! batcher step, DESIGN.md §3).
 
 use std::sync::Arc;
 
-use crate::moe::model::{select_top_k, MoeModel, RMS_EPS};
-use crate::quant::QTensor;
-use crate::tensor::{rmsnorm, silu, softmax_rows, Mat};
-use crate::util::stats::percentile;
+use crate::moe::exec::{attention, dispatch, router};
+use crate::moe::model::{MoeModel, RunStats, RMS_EPS};
+use crate::tensor::{add_inplace, rmsnorm, Mat};
 
-#[derive(Debug, Clone, Default)]
-pub struct DecodeOdp {
-    /// per-layer ratio threshold (median of w1/w0 on calibration data)
-    pub mu: Vec<f32>,
-    /// per-layer L1-norm protection threshold (None = no protection)
-    pub l1_threshold: Option<Vec<f32>>,
-}
-
-impl DecodeOdp {
-    /// Calibrate L1 thresholds: protect tokens whose post-norm hidden
-    /// L1 exceeds the (1-protect_ratio) percentile per layer.
-    pub fn calibrate(model: &MoeModel, seqs: &[Vec<u32>], mu: Vec<f32>,
-                     protect_ratio: f32) -> DecodeOdp {
-        use crate::moe::model::{CalibSink, ForwardOpts};
-        struct L1Sink(Vec<Vec<f32>>);
-        impl CalibSink for L1Sink {
-            fn moe_input(&mut self, layer: usize, x: &Mat) {
-                for r in 0..x.rows {
-                    self.0[layer].push(x.row(r).iter().map(|v| v.abs()).sum());
-                }
-            }
-        }
-        let mut sink = L1Sink(vec![Vec::new(); model.cfg.n_layers]);
-        for s in seqs {
-            model.forward(s, &ForwardOpts::default(), &mut sink);
-        }
-        let thresholds = sink
-            .0
-            .iter()
-            .map(|l1s| percentile(l1s, 100.0 * (1.0 - protect_ratio)))
-            .collect();
-        DecodeOdp { mu, l1_threshold: Some(thresholds) }
-    }
-}
+pub use crate::moe::exec::router::DecodeOdp;
 
 struct LayerKv {
     k: Mat, // [max_seq, D]
     v: Mat,
-}
-
-#[derive(Debug, Default, Clone)]
-pub struct DecodeStats {
-    pub tokens: usize,
-    pub expert_calls: usize,
-    pub expert_possible: usize,
-    pub dropped_secondary: usize,
 }
 
 pub struct DecodeSession {
@@ -70,7 +38,9 @@ pub struct DecodeSession {
     kv: Vec<LayerKv>,
     pub pos: usize,
     pub odp: Option<DecodeOdp>,
-    pub stats: DecodeStats,
+    /// Same accounting struct as the scoring path (`RunStats`), so
+    /// pruning metrics mean the same thing on both paths.
+    pub stats: RunStats,
 }
 
 impl DecodeSession {
@@ -79,129 +49,186 @@ impl DecodeSession {
         let kv = (0..model.cfg.n_layers)
             .map(|_| LayerKv { k: Mat::zeros(s, d), v: Mat::zeros(s, d) })
             .collect();
-        DecodeSession { model, kv, pos: 0, odp, stats: DecodeStats::default() }
+        let stats = RunStats::new(model.cfg.n_layers, model.cfg.n_experts);
+        DecodeSession { model, kv, pos: 0, odp, stats }
     }
 
     pub fn remaining(&self) -> usize {
         self.model.cfg.max_seq - self.pos
     }
 
-    /// Feed the prompt token-by-token; returns last-position logits.
+    /// Rewind to an empty sequence, keeping the allocated KV buffers
+    /// (stale rows are never read: attention only sees rows < pos).
+    pub fn reset(&mut self) {
+        self.pos = 0;
+        self.stats = RunStats::new(self.model.cfg.n_layers,
+                                   self.model.cfg.n_experts);
+    }
+
+    /// Feed the whole prompt in ONE batched full-sequence pass (fills
+    /// the KV cache in a single shot); returns last-position logits.
     pub fn prefill(&mut self, tokens: &[u32]) -> Vec<f32> {
-        let mut logits = Vec::new();
-        for &t in tokens {
-            logits = self.step(t);
+        if tokens.is_empty() {
+            return Vec::new();
         }
-        logits
+        self.append(tokens)
     }
 
     /// Append one token, return next-token logits.
     pub fn step(&mut self, token: u32) -> Vec<f32> {
+        self.append(&[token])
+    }
+
+    /// Append `tokens` at positions `pos..pos+T` in one batched pass
+    /// and return the logits of the last appended position.
+    fn append(&mut self, tokens: &[u32]) -> Vec<f32> {
         let model = self.model.clone();
         let cfg = &model.cfg;
-        let (d, nh) = (cfg.d_model, cfg.n_heads);
-        let hd = d / nh;
-        let t = self.pos;
-        assert!(t < cfg.max_seq, "KV cache exhausted");
-        self.pos += 1;
-        self.stats.tokens += 1;
+        let d = cfg.d_model;
+        let t_new = tokens.len();
+        let pos0 = self.pos;
+        assert!(t_new >= 1);
+        assert!(pos0 + t_new <= cfg.max_seq, "KV cache exhausted");
+        self.pos += t_new;
+        self.stats.tokens_seen += t_new;
 
-        let mut x = Mat::zeros(1, d);
-        let emb = model.tok_emb.row(token as usize);
-        let pos = model.pos_emb.row(t);
-        for c in 0..d {
-            x.data[c] = emb[c] + pos[c];
-        }
-
+        let mut x = model.embed(tokens, pos0);
         for (li, layer) in model.layers.iter().enumerate() {
-            // attention with KV cache
+            // attention with KV cache (shared kernel, append shape)
             let h = rmsnorm(&x, &layer.attn_norm, RMS_EPS);
             let q = layer.wq.matmul(&h);
-            let krow = layer.wk.matmul(&h);
-            let vrow = layer.wv.matmul(&h);
+            let knew = layer.wk.matmul(&h);
+            let vnew = layer.wv.matmul(&h);
             let cache = &mut self.kv[li];
-            cache.k.row_mut(t).copy_from_slice(krow.row(0));
-            cache.v.row_mut(t).copy_from_slice(vrow.row(0));
-            let mut attn_out = Mat::zeros(1, d);
-            let scale = 1.0 / (hd as f32).sqrt();
-            for head in 0..nh {
-                let c0 = head * hd;
-                let qh = &q.row(0)[c0..c0 + hd];
-                let mut scores = Mat::zeros(1, t + 1);
-                for j in 0..=t {
-                    let kh = &cache.k.row(j)[c0..c0 + hd];
-                    scores.data[j] =
-                        qh.iter().zip(kh).map(|(a, b)| a * b).sum::<f32>() * scale;
-                }
-                softmax_rows(&mut scores);
-                let orow = &mut attn_out.data[c0..c0 + hd];
-                for j in 0..=t {
-                    let a = scores.data[j];
-                    let vh = &cache.v.row(j)[c0..c0 + hd];
-                    for (o, &vv) in orow.iter_mut().zip(vh) {
-                        *o += a * vv;
-                    }
-                }
+            for i in 0..t_new {
+                cache.k.row_mut(pos0 + i).copy_from_slice(knew.row(i));
+                cache.v.row_mut(pos0 + i).copy_from_slice(vnew.row(i));
             }
-            let proj = layer.wo.matmul(&attn_out);
-            for (xa, &p) in x.data.iter_mut().zip(&proj.data) {
-                *xa += p;
-            }
+            let attn = attention::causal_attention(
+                &q, &cache.k, &cache.v, pos0 + t_new, cfg.n_heads, false,
+            );
+            let proj = layer.wo.matmul(&attn.out);
+            add_inplace(&mut x, &proj);
 
-            // MoE with decode-time ODP
+            // MoE with decode-time ODP (shared router + dispatch)
             let h = rmsnorm(&x, &layer.ffn_norm, RMS_EPS);
-            let mut probs = h.matmul(&layer.gate);
-            softmax_rows(&mut probs);
-            let mut sel = select_top_k(probs.row(0), cfg.top_k, |_| true);
-            let sum: f32 = sel.iter().map(|&(_, w)| w).sum();
-            for se in sel.iter_mut() {
-                se.1 /= sum;
-            }
-            self.stats.expert_possible += sel.len();
-            if let Some(odp) = &self.odp {
-                let ratio = if sel.len() >= 2 { sel[1].1 / sel[0].1 } else { 0.0 };
-                let protected = match &odp.l1_threshold {
-                    Some(thr) => {
-                        let l1: f32 = h.row(0).iter().map(|v| v.abs()).sum();
-                        l1 >= thr[li]
-                    }
-                    None => false,
-                };
-                if !protected && sel.len() >= 2 && ratio < odp.mu[li] {
-                    sel.truncate(1);
-                    sel[0].1 = 1.0;
-                    self.stats.dropped_secondary += 1;
-                }
-            }
-            self.stats.expert_calls += sel.len();
-            let mut y = vec![0.0f32; d];
-            for &(e, w) in &sel {
-                let out = expert_forward_row(&layer.experts[e].w1,
-                                             &layer.experts[e].w3,
-                                             &layer.experts[e].w2, &h);
-                for (ya, &o) in y.iter_mut().zip(&out) {
-                    *ya += w * o;
-                }
-            }
-            for (xa, &ya) in x.data.iter_mut().zip(&y) {
-                *xa += ya;
-            }
+            let probs = router::gate_probs(&h, &layer.gate);
+            let topk: Vec<Vec<(usize, f32)>> = (0..t_new)
+                .map(|t| {
+                    router::decode_select(
+                        probs.row(t),
+                        h.row(t),
+                        cfg.top_k,
+                        li,
+                        self.odp.as_ref(),
+                        &mut self.stats,
+                    )
+                })
+                .collect();
+            let batches = dispatch::dispatch_experts(
+                &h,
+                &topk,
+                &layer.experts,
+                None,
+                dispatch::DispatchMode::Auto,
+            );
+            let y = dispatch::scatter(&batches, t_new, d);
+            add_inplace(&mut x, &y);
         }
 
         let xf = rmsnorm(&x, &model.final_norm, RMS_EPS);
-        xf.matmul(&model.lm_head).data
+        // only the last position's logits are the decode output
+        let last = xf.slice_rows(t_new - 1, t_new);
+        last.matmul(&model.lm_head).data
     }
 }
 
-/// Single-row SwiGLU expert FFN (the decode hot path).
-pub fn expert_forward_row(w1: &QTensor, w3: &QTensor, w2: &QTensor,
-                          x: &Mat) -> Vec<f32> {
-    let mut h1 = w1.matmul(x);
-    let h3 = w3.matmul(x);
-    for (a, &b) in h1.data.iter_mut().zip(&h3.data) {
-        *a = silu(*a) * b;
+/// Advance several sessions (sharing one model) by one token each in a
+/// fused pass: attention runs per session over its own KV cache, while
+/// layer projections, routing, and expert dispatch run once over the
+/// whole batch — each expert executes at most once per layer per
+/// iteration, regardless of how many sessions selected it.
+/// Returns next-token logits per session, identical to calling
+/// `step` on each session individually.
+pub fn step_many(sessions: &mut [&mut DecodeSession], tokens: &[u32])
+                 -> Vec<Vec<f32>> {
+    let b = sessions.len();
+    assert_eq!(b, tokens.len(), "one token per session");
+    if b == 0 {
+        return Vec::new();
     }
-    w2.matmul(&h1).data
+    let model = sessions[0].model.clone();
+    for s in sessions.iter() {
+        assert!(Arc::ptr_eq(&s.model, &model), "fused step needs a shared model");
+        assert!(s.pos < model.cfg.max_seq, "KV cache exhausted");
+    }
+    let cfg = &model.cfg;
+    let d = cfg.d_model;
+    // each session's token embeds at that session's own position
+    let positions: Vec<usize> = sessions.iter().map(|s| s.pos).collect();
+    let mut x = Mat::zeros(b, d);
+    for (i, s) in sessions.iter_mut().enumerate() {
+        let emb = model.tok_emb.row(tokens[i] as usize);
+        let pos = model.pos_emb.row(s.pos);
+        for c in 0..d {
+            x.data[i * d + c] = emb[c] + pos[c];
+        }
+        s.pos += 1;
+        s.stats.tokens_seen += 1;
+    }
+
+    for (li, layer) in model.layers.iter().enumerate() {
+        // batched projections; per-session attention over its own cache
+        let h = rmsnorm(&x, &layer.attn_norm, RMS_EPS);
+        let q = layer.wq.matmul(&h);
+        let k = layer.wk.matmul(&h);
+        let v = layer.wv.matmul(&h);
+        let mut attn_out = Mat::zeros(b, d);
+        for (i, sess) in sessions.iter_mut().enumerate() {
+            let t = positions[i];
+            let cache = &mut sess.kv[li];
+            cache.k.row_mut(t).copy_from_slice(k.row(i));
+            cache.v.row_mut(t).copy_from_slice(v.row(i));
+            let qi = q.slice_rows(i, i + 1);
+            let a = attention::causal_attention(
+                &qi, &cache.k, &cache.v, t + 1, cfg.n_heads, false,
+            );
+            attn_out.row_mut(i).copy_from_slice(a.out.row(0));
+        }
+        let proj = layer.wo.matmul(&attn_out);
+        add_inplace(&mut x, &proj);
+
+        // fused MoE: route the whole batch, dispatch each expert once
+        let h = rmsnorm(&x, &layer.ffn_norm, RMS_EPS);
+        let probs = router::gate_probs(&h, &layer.gate);
+        let topk: Vec<Vec<(usize, f32)>> = sessions
+            .iter_mut()
+            .enumerate()
+            .map(|(i, sess)| {
+                router::decode_select(
+                    probs.row(i),
+                    h.row(i),
+                    cfg.top_k,
+                    li,
+                    sess.odp.as_ref(),
+                    &mut sess.stats,
+                )
+            })
+            .collect();
+        let batches = dispatch::dispatch_experts(
+            &h,
+            &topk,
+            &layer.experts,
+            None,
+            dispatch::DispatchMode::Auto,
+        );
+        let y = dispatch::scatter(&batches, b, d);
+        add_inplace(&mut x, &y);
+    }
+
+    let xf = rmsnorm(&x, &model.final_norm, RMS_EPS);
+    let logits = xf.matmul(&model.lm_head);
+    (0..b).map(|i| logits.row(i).to_vec()).collect()
 }
 
 #[cfg(test)]
@@ -234,6 +261,75 @@ mod tests {
     }
 
     #[test]
+    fn batched_prefill_matches_stepwise() {
+        let cfg = ModelConfig::test_tiny();
+        let model = Arc::new(random_model(&cfg, 4));
+        let toks: Vec<u32> = (1..25).collect();
+        for odp in [
+            None,
+            Some(DecodeOdp { mu: vec![0.6; cfg.n_layers], l1_threshold: None }),
+        ] {
+            let mut stepwise = DecodeSession::new(model.clone(), odp.clone());
+            let mut last = Vec::new();
+            for &t in &toks {
+                last = stepwise.step(t);
+            }
+            let mut batched = DecodeSession::new(model.clone(), odp);
+            let got = batched.prefill(&toks);
+            assert_eq!(batched.pos, stepwise.pos);
+            for (g, w) in got.iter().zip(&last) {
+                assert!(
+                    (g - w).abs() < 1e-3 * (1.0 + w.abs()),
+                    "prefill logits diverge: {g} vs {w}"
+                );
+            }
+            // identical pruning decisions token-by-token vs batched
+            assert_eq!(batched.stats.dropped_secondary,
+                       stepwise.stats.dropped_secondary);
+            assert_eq!(batched.stats.expert_calls, stepwise.stats.expert_calls);
+        }
+    }
+
+    #[test]
+    fn step_many_matches_individual_steps() {
+        let cfg = ModelConfig::test_tiny();
+        let model = Arc::new(random_model(&cfg, 5));
+        let prompts: [&[u32]; 3] = [&[1, 5, 80], &[2, 9, 81, 44, 7], &[3]];
+        let next: [u32; 3] = [10, 11, 12];
+        // serial reference
+        let mut serial_logits = Vec::new();
+        for (p, &n) in prompts.iter().zip(&next) {
+            let mut s = DecodeSession::new(model.clone(), None);
+            s.prefill(p);
+            serial_logits.push(s.step(n));
+        }
+        // fused
+        let mut fused: Vec<DecodeSession> = prompts
+            .iter()
+            .map(|p| {
+                let mut s = DecodeSession::new(model.clone(), None);
+                s.prefill(p);
+                s
+            })
+            .collect();
+        let got = {
+            let mut refs: Vec<&mut DecodeSession> = fused.iter_mut().collect();
+            step_many(&mut refs, &next)
+        };
+        for (i, (g, w)) in got.iter().zip(&serial_logits).enumerate() {
+            for (a, b) in g.iter().zip(w) {
+                assert!(
+                    (a - b).abs() < 1e-5 * (1.0 + b.abs()),
+                    "session {i}: fused {a} vs serial {b}"
+                );
+            }
+        }
+        for (s, p) in fused.iter().zip(&prompts) {
+            assert_eq!(s.pos, p.len() + 1);
+        }
+    }
+
+    #[test]
     fn decode_odp_prunes() {
         let cfg = ModelConfig::test_tiny();
         let model = Arc::new(random_model(&cfg, 1));
@@ -246,6 +342,7 @@ mod tests {
         assert_eq!(sess.stats.dropped_secondary, 16 * cfg.n_layers);
         assert_eq!(sess.stats.expert_calls,
                    sess.stats.expert_possible - sess.stats.dropped_secondary);
+        assert_eq!(sess.stats.pruned_total(), sess.stats.dropped_secondary);
     }
 
     #[test]
@@ -262,7 +359,7 @@ mod tests {
         // with 50% protection at an always-prune threshold, roughly
         // half the secondary experts survive
         let frac = sess.stats.dropped_secondary as f64
-            / (sess.stats.tokens * cfg.n_layers) as f64;
+            / (sess.stats.tokens_seen * cfg.n_layers) as f64;
         assert!((0.2..0.8).contains(&frac), "{frac}");
     }
 

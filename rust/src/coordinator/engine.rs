@@ -3,6 +3,7 @@
 //! what `mc-moe serve` and the examples drive.
 
 use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::Result;
 
@@ -38,33 +39,38 @@ impl McEngine {
         let opts = ForwardOpts { odp: self.odp.as_ref(), ..Default::default() };
         let out = self.model.forward(tokens, &opts, &mut NullSink);
         Metrics::inc(&self.metrics.expert_calls, out.stats.expert_calls as u64);
-        Metrics::inc(
-            &self.metrics.experts_pruned,
-            (out.stats.dropped_secondary + out.stats.dropped_all) as u64,
-        );
+        Metrics::inc(&self.metrics.experts_pruned,
+                     out.stats.pruned_total() as u64);
         out.logits
     }
 
-    /// Greedy generation via the KV-cache decode path.
+    /// Greedy generation via the KV-cache decode path. Records TTFT
+    /// (batched prefill + first logits) and per-token decode latency,
+    /// so `tokens_per_sec()` / `mc_ttft_ms_mean` are live on the
+    /// single-request path, not just under the batcher.
     pub fn generate(&self, prompt: &[u32], max_new: usize) -> Result<Vec<u32>> {
         anyhow::ensure!(!prompt.is_empty(), "empty prompt");
         let mut sess =
             DecodeSession::new(self.model.clone(), self.decode_odp.clone());
+        let started = Instant::now();
         let logits = sess.prefill(prompt);
         let mut out = Vec::with_capacity(max_new);
         let mut next = crate::util::stats::argmax(&logits) as u32;
+        self.metrics.record_ttft(started.elapsed().as_nanos() as u64);
         for _ in 0..max_new {
             out.push(next);
             if next == crate::config::EOS || sess.remaining() == 0 {
                 break;
             }
+            let t0 = Instant::now();
             let logits = sess.step(next);
+            self.metrics.record_tpot(t0.elapsed().as_nanos() as u64);
             next = crate::util::stats::argmax(&logits) as u32;
         }
         Metrics::inc(&self.metrics.tokens_generated, out.len() as u64);
         Metrics::inc(&self.metrics.expert_calls, sess.stats.expert_calls as u64);
         Metrics::inc(&self.metrics.experts_pruned,
-                     sess.stats.dropped_secondary as u64);
+                     sess.stats.pruned_total() as u64);
         Ok(out)
     }
 
@@ -98,6 +104,21 @@ mod tests {
         assert!(engine.metrics.tokens_generated.load(
             std::sync::atomic::Ordering::Relaxed) as usize == out.len());
         assert!(engine.summary().contains("model=test"));
+    }
+
+    #[test]
+    fn generate_records_latency_metrics() {
+        // single-request path must feed TTFT/TPOT (not just Batcher)
+        let cfg = ModelConfig::test_tiny();
+        let engine = McEngine::new(random_model(&cfg, 2), None, None);
+        let out = engine.generate(&[1, 5, 80, 3], 6).unwrap();
+        assert_eq!(engine.metrics.ttft_ns.lock().unwrap().len(), 1);
+        if out.len() > 1 {
+            // at least one decode step ran -> TPOT samples exist
+            assert!(!engine.metrics.tpot_ns.lock().unwrap().is_empty());
+            assert!(engine.metrics.tokens_per_sec() > 0.0);
+        }
+        assert!(engine.metrics.render_text().contains("mc_ttft_ms_mean"));
     }
 
     #[test]

@@ -1,6 +1,8 @@
 //! L3 serving coordinator: the runtime system around the compressed
-//! model — KV-cache decode, continuous batching, a threaded request
-//! server, the device memory model (Tab. 4/13/14), and metrics.
+//! model — KV-cache decode (single-shot batched prefill + fused
+//! multi-session stepping over `moe::exec`), continuous batching, a
+//! threaded request server, the device memory model (Tab. 4/13/14),
+//! and metrics.
 //!
 //! Rust owns the event loop and process topology; python exists only
 //! at build time (DESIGN.md §3).
@@ -13,7 +15,7 @@ pub mod metrics;
 pub mod server;
 
 pub use batcher::{Batcher, Request};
-pub use decode::{DecodeOdp, DecodeSession};
+pub use decode::{step_many, DecodeOdp, DecodeSession};
 pub use engine::McEngine;
 pub use memmodel::{Platform, PLATFORMS};
 pub use metrics::Metrics;

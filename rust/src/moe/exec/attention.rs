@@ -1,0 +1,186 @@
+//! Causal multi-head attention, generalized over the two shapes the
+//! engine needs (DESIGN.md §2):
+//!
+//!   * **fresh sequence** — scoring / batched prefill: queries exist
+//!     for every position, keys == queries (`klen == q.rows`), and the
+//!     head-averaged attention map feeding Eq.-6 token importance can
+//!     be materialized;
+//!   * **KV-cache append** — decode: queries exist only for the
+//!     appended suffix while keys/values span the whole cache
+//!     (`klen > q.rows`); the Eq.-6 map is undefined here because it
+//!     needs attention *received from future queries* (decode falls
+//!     back to the L1 factor, see `exec::router`).
+//!
+//! One kernel serves both, so the scoring and decode paths can no
+//! longer drift apart numerically.
+
+use crate::tensor::{softmax_rows, Mat};
+
+pub const NEG_INF: f32 = -1e30;
+
+pub struct AttnOut {
+    /// [T, D] concatenated head outputs (the input of wo).
+    pub out: Mat,
+    /// Head-averaged [S, S] attention map for Eq. 6; only materialized
+    /// on full-sequence calls (`klen == q.rows`) when requested.
+    pub a_mean: Option<Mat>,
+}
+
+/// Causal attention for the `q.rows` newest tokens against keys/values
+/// `0..klen`. Query row `i` sits at global position `klen - q.rows + i`
+/// and attends to keys `0..=klen - q.rows + i`. `k` and `v` must hold
+/// at least `klen` valid rows (decode passes the whole KV-cache
+/// buffer; scoring passes exactly the fresh projections).
+pub fn causal_attention(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    klen: usize,
+    n_heads: usize,
+    want_map: bool,
+) -> AttnOut {
+    let t = q.rows;
+    let d = q.cols;
+    assert!(t >= 1 && klen >= t, "bad attention window: T={t} klen={klen}");
+    assert!(k.rows >= klen && v.rows >= klen, "KV shorter than klen");
+    assert_eq!(d % n_heads, 0);
+    let hd = d / n_heads;
+    let pos0 = klen - t;
+    assert!(!want_map || pos0 == 0, "Eq.-6 map needs the full sequence");
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    let mut out = Mat::zeros(t, d);
+    let mut a_mean = if want_map { Some(Mat::zeros(t, t)) } else { None };
+    // transposed K per head so the score loop vectorizes over j
+    // (EXPERIMENTS.md §Perf: ikj axpy instead of per-pair dots)
+    let mut kht = vec![0.0f32; hd * klen];
+    for head in 0..n_heads {
+        let c0 = head * hd;
+        for j in 0..klen {
+            let krow = &k.row(j)[c0..c0 + hd];
+            for (dd, &kv) in krow.iter().enumerate() {
+                kht[dd * klen + j] = kv;
+            }
+        }
+        let mut scores = Mat::zeros(t, klen);
+        for i in 0..t {
+            let limit = pos0 + i; // last key this query may attend to
+            let qrow = &q.row(i)[c0..c0 + hd];
+            let srow = &mut scores.data[i * klen..(i + 1) * klen];
+            for (dd, &qv) in qrow.iter().enumerate() {
+                let kr = &kht[dd * klen..dd * klen + limit + 1];
+                for (sv, &kv) in srow[..=limit].iter_mut().zip(kr) {
+                    *sv += qv * kv;
+                }
+            }
+            for sv in srow[..=limit].iter_mut() {
+                *sv *= scale;
+            }
+            for sv in srow[limit + 1..].iter_mut() {
+                *sv = NEG_INF;
+            }
+        }
+        softmax_rows(&mut scores);
+        if let Some(am) = a_mean.as_mut() {
+            for (a, sc) in am.data.iter_mut().zip(&scores.data) {
+                *a += sc / n_heads as f32;
+            }
+        }
+        // out[:, c0..c0+hd] += scores @ v[:, c0..c0+hd]
+        for i in 0..t {
+            let limit = pos0 + i;
+            for j in 0..=limit {
+                let a = scores.data[i * klen + j];
+                if a == 0.0 {
+                    continue;
+                }
+                let vrow = &v.row(j)[c0..c0 + hd];
+                let orow = &mut out.data[i * d + c0..i * d + c0 + hd];
+                for (o, &vv) in orow.iter_mut().zip(vrow) {
+                    *o += a * vv;
+                }
+            }
+        }
+    }
+    AttnOut { out, a_mean }
+}
+
+/// Eq. 6: I_j = ||t_j||_1 * mean_{i >= j} A[i, j] (head-averaged A).
+pub fn eq6_importance(h: &Mat, a_mean: &Mat) -> Vec<f32> {
+    let s = h.rows;
+    let mut out = vec![0.0f32; s];
+    for j in 0..s {
+        let mut col = 0.0;
+        for i in j..s {
+            col += a_mean.data[i * s + j];
+        }
+        let denom = (s - j).max(1) as f32;
+        let l1: f32 = h.row(j).iter().map(|v| v.abs()).sum();
+        out[j] = l1 * (col / denom);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn qkv(seed: u64, s: usize, d: usize) -> (Mat, Mat, Mat) {
+        let mut rng = Rng::new(seed);
+        (
+            Mat::randn(&mut rng, s, d, 1.0),
+            Mat::randn(&mut rng, s, d, 1.0),
+            Mat::randn(&mut rng, s, d, 1.0),
+        )
+    }
+
+    #[test]
+    fn incremental_append_matches_full_sequence() {
+        let (s, d, nh) = (9, 8, 2);
+        let (q, k, v) = qkv(0, s, d);
+        let full = causal_attention(&q, &k, &v, s, nh, false);
+        // one-token appends against a growing KV window
+        for i in 0..s {
+            let qi = q.slice_rows(i, i + 1);
+            let inc = causal_attention(&qi, &k, &v, i + 1, nh, false);
+            for (a, b) in inc.out.row(0).iter().zip(full.out.row(i)) {
+                assert!((a - b).abs() < 1e-5, "pos {i}: {a} vs {b}");
+            }
+        }
+        // suffix append (batched prefill continuation)
+        let qs = q.slice_rows(3, s);
+        let suf = causal_attention(&qs, &k, &v, s, nh, false);
+        for i in 3..s {
+            for (a, b) in suf.out.row(i - 3).iter().zip(full.out.row(i)) {
+                assert!((a - b).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn map_is_causal_and_row_stochastic() {
+        let (s, d, nh) = (6, 8, 2);
+        let (q, k, v) = qkv(1, s, d);
+        let out = causal_attention(&q, &k, &v, s, nh, true);
+        let am = out.a_mean.unwrap();
+        for i in 0..s {
+            let row_sum: f32 = am.row(i).iter().sum();
+            assert!((row_sum - 1.0).abs() < 1e-5, "row {i}: {row_sum}");
+            for j in i + 1..s {
+                assert_eq!(am.at(i, j), 0.0, "future leak at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn eq6_importance_nonnegative_and_sized() {
+        let (s, d, nh) = (7, 8, 2);
+        let (q, k, v) = qkv(2, s, d);
+        let h = Mat::randn(&mut Rng::new(3), s, d, 1.0);
+        let am = causal_attention(&q, &k, &v, s, nh, true).a_mean.unwrap();
+        let imp = eq6_importance(&h, &am);
+        assert_eq!(imp.len(), s);
+        assert!(imp.iter().all(|v| *v >= 0.0));
+    }
+}

@@ -1,0 +1,222 @@
+//! Expert dispatch: gather each expert's routed tokens into one batch,
+//! run every active expert's SwiGLU FFN (optionally in parallel), and
+//! scatter the weighted outputs back to token order.
+//!
+//! Threading uses `std::thread::scope` — the crate is deliberately
+//! dependency-free (no rayon), and per-layer expert FFNs are the one
+//! place with enough coarse-grained, disjoint work to pay for thread
+//! spawns (DESIGN.md §4; measured in `benches/hotpath.rs`, recorded in
+//! BENCH_dispatch.json).
+
+use crate::moe::model::Expert;
+use crate::tensor::Mat;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DispatchMode {
+    Serial,
+    Threaded,
+    /// Thread only when the expert work dwarfs spawn cost (and the
+    /// host has more than one core); single-token decode stays serial.
+    Auto,
+}
+
+/// Minimum expert-FFN FLOP volume (~2 ms of scalar work) before Auto
+/// switches to threads; below this, spawn overhead dominates.
+const AUTO_THREAD_MIN_FLOPS: u64 = 8_000_000;
+
+/// One expert's gathered batch: the rows it serves, its inputs, the
+/// gated hidden (kept for `CalibSink::expert_batch`), and its output.
+pub struct ExpertBatch {
+    pub expert: usize,
+    /// (token row in `h`, renormalized routing weight)
+    pub rows: Vec<(usize, f32)>,
+    pub x: Mat,
+    pub gated: Mat,
+    pub y: Mat,
+}
+
+fn run_one(b: &mut ExpertBatch, experts: &[Expert],
+           override_expert: Option<(usize, &Expert)>) {
+    let ex = match override_expert {
+        Some((oe, repl)) if oe == b.expert => repl,
+        _ => &experts[b.expert],
+    };
+    b.gated = ex.gated_hidden(&b.x);
+    b.y = ex.w2.matmul(&b.gated);
+}
+
+/// Gather + execute. `topk[t]` lists `(expert, weight)` selections for
+/// token row `t` of `h`; `override_expert` substitutes one expert
+/// (PMQ's eps_{i,j} probe). Returns per-expert batches in ascending
+/// expert order — combine them with [`scatter`], and feed
+/// `CalibSink::expert_batch` from `x`/`gated` (execution order never
+/// affects the Hessian sums, so calibration is thread-safe).
+pub fn dispatch_experts(
+    h: &Mat,
+    topk: &[Vec<(usize, f32)>],
+    experts: &[Expert],
+    override_expert: Option<(usize, &Expert)>,
+    mode: DispatchMode,
+) -> Vec<ExpertBatch> {
+    let d = h.cols;
+    let mut per_expert: Vec<Vec<(usize, f32)>> = vec![Vec::new(); experts.len()];
+    let mut routed_rows = 0usize;
+    for (t, sel) in topk.iter().enumerate() {
+        for &(e, w) in sel {
+            per_expert[e].push((t, w));
+            routed_rows += 1;
+        }
+    }
+    let mut batches: Vec<ExpertBatch> = Vec::new();
+    for (e, rows) in per_expert.into_iter().enumerate() {
+        if rows.is_empty() {
+            continue;
+        }
+        let mut x = Mat::zeros(rows.len(), d);
+        for (ri, &(t, _)) in rows.iter().enumerate() {
+            x.row_mut(ri).copy_from_slice(h.row(t));
+        }
+        batches.push(ExpertBatch {
+            expert: e,
+            rows,
+            x,
+            gated: Mat::zeros(0, 0),
+            y: Mat::zeros(0, 0),
+        });
+    }
+
+    let threaded = match mode {
+        DispatchMode::Serial => false,
+        DispatchMode::Threaded => batches.len() >= 2,
+        DispatchMode::Auto => {
+            let (_, d_ff) = match experts.first() {
+                Some(ex) => ex.w1.shape(),
+                None => (0, 0),
+            };
+            let flops = routed_rows as u64 * 6 * d as u64 * d_ff as u64;
+            batches.len() >= 2
+                && flops >= AUTO_THREAD_MIN_FLOPS
+                && std::thread::available_parallelism()
+                    .map(|p| p.get())
+                    .unwrap_or(1)
+                    > 1
+        }
+    };
+
+    if threaded {
+        std::thread::scope(|s| {
+            for b in batches.iter_mut() {
+                s.spawn(move || run_one(b, experts, override_expert));
+            }
+        });
+    } else {
+        for b in batches.iter_mut() {
+            run_one(b, experts, override_expert);
+        }
+    }
+    batches
+}
+
+/// Scatter expert outputs back to token order: y[t] += w * y_e[row].
+pub fn scatter(batches: &[ExpertBatch], t_rows: usize, d: usize) -> Mat {
+    let mut y = Mat::zeros(t_rows, d);
+    for b in batches {
+        for (ri, &(t, w)) in b.rows.iter().enumerate() {
+            let yrow = b.y.row(ri);
+            let orow = &mut y.data[t * d..(t + 1) * d];
+            for (o, &v) in orow.iter_mut().zip(yrow) {
+                *o += w * v;
+            }
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::QTensor;
+    use crate::util::rng::Rng;
+
+    fn experts(rng: &mut Rng, n: usize, d: usize, d_ff: usize) -> Vec<Expert> {
+        (0..n)
+            .map(|_| Expert {
+                w1: QTensor::F32(Mat::randn(rng, d, d_ff, 0.1)),
+                w3: QTensor::F32(Mat::randn(rng, d, d_ff, 0.1)),
+                w2: QTensor::F32(Mat::randn(rng, d_ff, d, 0.1)),
+            })
+            .collect()
+    }
+
+    fn round_robin_topk(rows: usize, n_experts: usize, k: usize)
+                        -> Vec<Vec<(usize, f32)>> {
+        (0..rows)
+            .map(|t| {
+                (0..k).map(|j| ((t + j) % n_experts, 1.0 / k as f32)).collect()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn threaded_matches_serial_exactly() {
+        let mut rng = Rng::new(0);
+        let (rows, d, d_ff, ne) = (24, 8, 16, 4);
+        let exps = experts(&mut rng, ne, d, d_ff);
+        let h = Mat::randn(&mut rng, rows, d, 1.0);
+        let topk = round_robin_topk(rows, ne, 2);
+        let bs = dispatch_experts(&h, &topk, &exps, None, DispatchMode::Serial);
+        let bt = dispatch_experts(&h, &topk, &exps, None, DispatchMode::Threaded);
+        let ys = scatter(&bs, rows, d);
+        let yt = scatter(&bt, rows, d);
+        assert_eq!(ys.data, yt.data, "threaded dispatch must be bit-exact");
+    }
+
+    #[test]
+    fn scatter_applies_routing_weights() {
+        let mut rng = Rng::new(1);
+        let (rows, d, d_ff, ne) = (6, 8, 16, 2);
+        let exps = experts(&mut rng, ne, d, d_ff);
+        let h = Mat::randn(&mut rng, rows, d, 1.0);
+        // every token routed to expert 0 with weight 0.5
+        let topk: Vec<Vec<(usize, f32)>> =
+            (0..rows).map(|_| vec![(0usize, 0.5f32)]).collect();
+        let b = dispatch_experts(&h, &topk, &exps, None, DispatchMode::Serial);
+        assert_eq!(b.len(), 1);
+        let y = scatter(&b, rows, d);
+        let full = exps[0].forward(&h);
+        for (a, f) in y.data.iter().zip(&full.data) {
+            assert!((a - 0.5 * f).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn override_expert_substitutes() {
+        let mut rng = Rng::new(2);
+        let (rows, d, d_ff, ne) = (5, 8, 16, 2);
+        let exps = experts(&mut rng, ne, d, d_ff);
+        let repl_v = experts(&mut rng, 1, d, d_ff);
+        let h = Mat::randn(&mut rng, rows, d, 1.0);
+        let topk: Vec<Vec<(usize, f32)>> =
+            (0..rows).map(|_| vec![(1usize, 1.0f32)]).collect();
+        let base = dispatch_experts(&h, &topk, &exps, None, DispatchMode::Serial);
+        let swap = dispatch_experts(&h, &topk, &exps, Some((1, &repl_v[0])),
+                                    DispatchMode::Serial);
+        let yb = scatter(&base, rows, d);
+        let ys = scatter(&swap, rows, d);
+        assert!(yb.sub(&ys).fro_norm() > 1e-3);
+    }
+
+    #[test]
+    fn empty_experts_skipped() {
+        let mut rng = Rng::new(3);
+        let (rows, d, d_ff, ne) = (4, 8, 16, 4);
+        let exps = experts(&mut rng, ne, d, d_ff);
+        let h = Mat::randn(&mut rng, rows, d, 1.0);
+        let topk: Vec<Vec<(usize, f32)>> =
+            (0..rows).map(|_| vec![(2usize, 1.0f32)]).collect();
+        let b = dispatch_experts(&h, &topk, &exps, None, DispatchMode::Auto);
+        assert_eq!(b.len(), 1);
+        assert_eq!(b[0].expert, 2);
+        assert_eq!(b[0].rows.len(), rows);
+    }
+}

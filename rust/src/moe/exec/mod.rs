@@ -1,0 +1,28 @@
+//! The shared layer-execution core (DESIGN.md §2): one attention /
+//! router / dispatch subsystem behind every path through the model —
+//! full-sequence scoring (`MoeModel::forward`), batched prefill and
+//! KV-cache decode (`coordinator::DecodeSession`), and the fused
+//! multi-session batcher step (`coordinator::Batcher`).
+//!
+//! Before this module existed the scoring and decode paths were two
+//! hand-duplicated implementations of the same layer stack with
+//! documented behavioral drift; now both are thin drivers over:
+//!
+//!   * [`attention`] — causal attention generalized over "fresh
+//!     sequence" vs "KV-cache append", owning the Eq.-6 head-averaged
+//!     attention map;
+//!   * [`router`] — top-k selection, every `OdpPolicy` / `DecodeOdp`
+//!     pruning decision, and the shared `RunStats` accounting;
+//!   * [`dispatch`] — expert gather/scatter with optional
+//!     `std::thread::scope`-parallel per-expert FFN execution.
+
+pub mod attention;
+pub mod dispatch;
+pub mod router;
+
+pub use attention::{causal_attention, eq6_importance, AttnOut};
+pub use dispatch::{dispatch_experts, scatter, DispatchMode, ExpertBatch};
+pub use router::{
+    decode_select, gate_probs, score_route, select_top_k, DecodeOdp, RunStats,
+    ScoreRoute,
+};

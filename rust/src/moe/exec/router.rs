@@ -1,0 +1,392 @@
+//! Router: top-k expert selection plus every ODP pruning decision —
+//! scoring-time (`OdpPolicy`, paper Sec. 3.3 with sequence-level Eq.-6
+//! protection) and decode-time (`DecodeOdp`, the autoregressive
+//! approximation) — and the shared `RunStats` accounting both paths
+//! report through, so `Metrics::prune_ratio()` means the same thing
+//! everywhere (DESIGN.md §2).
+
+use crate::moe::model::{MoeModel, OdpPolicy, TokenMetric};
+use crate::tensor::{softmax_rows, Mat};
+use crate::util::stats::{kurtosis, mean, percentile, top_k_indices, variance};
+
+// ---------------------------------------------------------------------------
+// Shared accounting
+// ---------------------------------------------------------------------------
+
+/// Expert-routing statistics shared by the scoring forward, KV-cache
+/// decode, and the fused batcher step. One struct, one meaning: the
+/// serving metrics and the paper's CR are computed identically on
+/// every path.
+#[derive(Debug, Default, Clone)]
+pub struct RunStats {
+    /// expert invocations actually executed
+    pub expert_calls: usize,
+    /// tokens * top_k summed over layers (the no-pruning count)
+    pub expert_possible: usize,
+    pub dropped_secondary: usize,
+    pub dropped_all: usize,
+    /// per [layer][expert] activation counts (significance phi)
+    pub activation_counts: Vec<Vec<u64>>,
+    /// per [layer][expert] summed renormalized routing weights (w_i)
+    pub weight_sums: Vec<Vec<f64>>,
+    pub tokens_seen: usize,
+}
+
+impl RunStats {
+    pub fn new(n_layers: usize, n_experts: usize) -> RunStats {
+        RunStats {
+            activation_counts: vec![vec![0; n_experts]; n_layers],
+            weight_sums: vec![vec![0.0; n_experts]; n_layers],
+            ..Default::default()
+        }
+    }
+
+    pub fn merge(&mut self, other: &RunStats) {
+        self.expert_calls += other.expert_calls;
+        self.expert_possible += other.expert_possible;
+        self.dropped_secondary += other.dropped_secondary;
+        self.dropped_all += other.dropped_all;
+        self.tokens_seen += other.tokens_seen;
+        for (a, b) in self.activation_counts.iter_mut().zip(&other.activation_counts) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        }
+        for (a, b) in self.weight_sums.iter_mut().zip(&other.weight_sums) {
+            for (x, y) in a.iter_mut().zip(b) {
+                *x += y;
+            }
+        }
+    }
+
+    /// Total pruned expert invocations — the numerator every consumer
+    /// (engine, batcher, metrics) must use, on both paths.
+    pub fn pruned_total(&self) -> usize {
+        self.dropped_secondary + self.dropped_all
+    }
+
+    /// Fraction of expert compute saved by pruning (paper's "CR").
+    pub fn compression_ratio(&self) -> f64 {
+        if self.expert_possible == 0 {
+            return 0.0;
+        }
+        self.pruned_total() as f64 / self.expert_possible as f64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Decode-time ODP policy
+// ---------------------------------------------------------------------------
+
+/// ODP at decode time (paper Sec. 3.3 applied autoregressively): the
+/// w1/w0 ratio rule is exact; Eq.-6 token protection needs attention
+/// *received from future queries*, which doesn't exist yet for the
+/// token being decoded, so protection falls back to the L1-norm factor
+/// of Eq. 6 alone (DESIGN.md §2).
+#[derive(Debug, Clone, Default)]
+pub struct DecodeOdp {
+    /// per-layer ratio threshold (median of w1/w0 on calibration data)
+    pub mu: Vec<f32>,
+    /// per-layer L1-norm protection threshold (None = no protection)
+    pub l1_threshold: Option<Vec<f32>>,
+}
+
+impl DecodeOdp {
+    /// Calibrate L1 thresholds: protect tokens whose post-norm hidden
+    /// L1 exceeds the (1-protect_ratio) percentile per layer.
+    pub fn calibrate(
+        model: &MoeModel,
+        seqs: &[Vec<u32>],
+        mu: Vec<f32>,
+        protect_ratio: f32,
+    ) -> DecodeOdp {
+        use crate::moe::model::{CalibSink, ForwardOpts};
+        struct L1Sink(Vec<Vec<f32>>);
+        impl CalibSink for L1Sink {
+            fn moe_input(&mut self, layer: usize, x: &Mat) {
+                for r in 0..x.rows {
+                    self.0[layer].push(x.row(r).iter().map(|v| v.abs()).sum());
+                }
+            }
+        }
+        let mut sink = L1Sink(vec![Vec::new(); model.cfg.n_layers]);
+        for s in seqs {
+            model.forward(s, &ForwardOpts::default(), &mut sink);
+        }
+        let thresholds = sink
+            .0
+            .iter()
+            .map(|l1s| percentile(l1s, 100.0 * (1.0 - protect_ratio)))
+            .collect();
+        DecodeOdp { mu, l1_threshold: Some(thresholds) }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Selection primitives
+// ---------------------------------------------------------------------------
+
+/// Top-k expert selection over a router row, honoring an eligibility
+/// filter; ties break toward the lower index (matches jax.lax.top_k).
+pub fn select_top_k(
+    row: &[f32],
+    k: usize,
+    eligible: impl Fn(usize) -> bool,
+) -> Vec<(usize, f32)> {
+    let mut sel: Vec<(usize, f32)> = Vec::with_capacity(k + 1);
+    for (e, &w) in row.iter().enumerate() {
+        if !eligible(e) {
+            continue;
+        }
+        sel.push((e, w));
+        sel.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+        sel.truncate(k);
+    }
+    sel
+}
+
+/// Router probabilities for a token batch: softmax(h @ gate).
+pub fn gate_probs(h: &Mat, gate: &Mat) -> Mat {
+    let mut probs = h.matmul(gate);
+    softmax_rows(&mut probs);
+    probs
+}
+
+/// Shared per-token selection: top-k (minus an optionally masked
+/// expert), renormalize, record activation/weight/possible counts.
+/// Returns the selection and the w1/w0 ratio the ODP rules consume.
+fn select_and_count(
+    row: &[f32],
+    top_k: usize,
+    li: usize,
+    masked_expert: Option<usize>,
+    stats: &mut RunStats,
+) -> (Vec<(usize, f32)>, f32) {
+    let mut sel = select_top_k(row, top_k, |e| Some(e) != masked_expert);
+    let sum: f32 = sel.iter().map(|&(_, w)| w).sum();
+    for se in sel.iter_mut() {
+        se.1 /= sum;
+    }
+    for &(e, w) in &sel {
+        stats.activation_counts[li][e] += 1;
+        stats.weight_sums[li][e] += w as f64;
+    }
+    stats.expert_possible += top_k;
+    let ratio = if sel.len() >= 2 { sel[1].1 / sel[0].1 } else { 0.0 };
+    (sel, ratio)
+}
+
+/// One decode-time routing decision (used token-wise by `step`,
+/// batched prefill, and the fused multi-session batcher step).
+pub fn decode_select(
+    probs_row: &[f32],
+    h_row: &[f32],
+    top_k: usize,
+    li: usize,
+    odp: Option<&DecodeOdp>,
+    stats: &mut RunStats,
+) -> Vec<(usize, f32)> {
+    let (mut sel, ratio) = select_and_count(probs_row, top_k, li, None, stats);
+    if let Some(odp) = odp {
+        let protected = match &odp.l1_threshold {
+            Some(thr) => {
+                let l1: f32 = h_row.iter().map(|v| v.abs()).sum();
+                l1 >= thr[li]
+            }
+            None => false,
+        };
+        if !protected && sel.len() >= 2 && ratio < odp.mu[li] {
+            sel.truncate(1);
+            sel[0].1 = 1.0;
+            stats.dropped_secondary += 1;
+        }
+    }
+    stats.expert_calls += sel.len();
+    sel
+}
+
+// ---------------------------------------------------------------------------
+// Scoring-path routing (sequence-level ODP)
+// ---------------------------------------------------------------------------
+
+pub struct ScoreRoute {
+    pub probs: Mat,
+    pub topk: Vec<Vec<(usize, f32)>>,
+    pub ratio_samples: Vec<f32>,
+}
+
+/// Full-sequence routing for one layer under the scoring-path ODP
+/// policy: top-k + renormalize, Eq.-6 token protection / drop-all
+/// (`importance` must cover the sequence when the policy needs it),
+/// and the Tab.-11 token-metric baselines.
+#[allow(clippy::too_many_arguments)]
+pub fn score_route(
+    h: &Mat,
+    gate: &Mat,
+    top_k: usize,
+    li: usize,
+    odp: &OdpPolicy,
+    importance: &[f32],
+    masked_expert: Option<usize>,
+    collect_ratio_samples: bool,
+    stats: &mut RunStats,
+) -> ScoreRoute {
+    let s = h.rows;
+    let probs = gate_probs(h, gate);
+
+    let metric_vals: Vec<f32> = match odp {
+        OdpPolicy::TokenMetric { metric, .. } => match metric {
+            TokenMetric::Eq6Importance => importance.to_vec(),
+            TokenMetric::Kurtosis => (0..s).map(|t| kurtosis(h.row(t))).collect(),
+            TokenMetric::Variance => (0..s).map(|t| variance(h.row(t))).collect(),
+            TokenMetric::MeanAbs => (0..s)
+                .map(|t| mean(&h.row(t).iter().map(|v| v.abs()).collect::<Vec<_>>()))
+                .collect(),
+        },
+        _ => Vec::new(),
+    };
+
+    // protected / dropped token sets
+    let protected = match odp {
+        OdpPolicy::Protected { protect_ratio, .. }
+        | OdpPolicy::ProtectedDropAll { protect_ratio, .. } => {
+            let n_prot = ((s as f32) * protect_ratio).ceil() as usize;
+            let mut mask = vec![false; s];
+            for idx in top_k_indices(importance, n_prot.min(s)) {
+                mask[idx] = true;
+            }
+            mask
+        }
+        _ => vec![false; s],
+    };
+    let drop_all = match odp {
+        OdpPolicy::ProtectedDropAll { drop_ratio, .. } => {
+            let n_drop = ((s as f32) * drop_ratio).floor() as usize;
+            let neg: Vec<f32> = importance.iter().map(|v| -v).collect();
+            let mut mask = vec![false; s];
+            for idx in top_k_indices(&neg, n_drop.min(s)) {
+                if !protected[idx] {
+                    mask[idx] = true;
+                }
+            }
+            mask
+        }
+        _ => vec![false; s],
+    };
+    let metric_pruned = match odp {
+        OdpPolicy::TokenMetric { prune_frac, .. } => {
+            let n_prune = ((s as f32) * prune_frac).round() as usize;
+            let neg: Vec<f32> = metric_vals.iter().map(|v| -v).collect();
+            let mut mask = vec![false; s];
+            for idx in top_k_indices(&neg, n_prune.min(s)) {
+                mask[idx] = true;
+            }
+            mask
+        }
+        _ => vec![false; s],
+    };
+
+    let mut topk: Vec<Vec<(usize, f32)>> = Vec::with_capacity(s);
+    let mut ratio_samples = Vec::new();
+    for t in 0..s {
+        let (mut sel, ratio) =
+            select_and_count(probs.row(t), top_k, li, masked_expert, stats);
+        if collect_ratio_samples {
+            ratio_samples.push(ratio);
+        }
+        if drop_all[t] {
+            stats.dropped_all += sel.len();
+            sel.clear();
+        } else {
+            let prune_secondary = match odp {
+                OdpPolicy::None => false,
+                OdpPolicy::WeightOnly { mu } => ratio < mu[li],
+                OdpPolicy::Protected { mu, .. }
+                | OdpPolicy::ProtectedDropAll { mu, .. } => {
+                    !protected[t] && ratio < mu[li]
+                }
+                OdpPolicy::TokenMetric { .. } => metric_pruned[t],
+            };
+            if prune_secondary && sel.len() >= 2 {
+                sel.truncate(1);
+                sel[0].1 = 1.0;
+                stats.dropped_secondary += 1;
+            }
+        }
+        stats.expert_calls += sel.len();
+        topk.push(sel);
+    }
+    ScoreRoute { probs, topk, ratio_samples }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn select_top_k_ties_prefer_lower_index() {
+        let sel = select_top_k(&[0.25, 0.25, 0.4, 0.1], 2, |_| true);
+        assert_eq!(sel[0].0, 2);
+        assert_eq!(sel[1].0, 0); // tie 0 vs 1 -> lower index
+    }
+
+    #[test]
+    fn decode_select_prunes_below_mu() {
+        let mut stats = RunStats::new(1, 4);
+        let odp = DecodeOdp { mu: vec![2.0], l1_threshold: None };
+        let sel = decode_select(&[0.4, 0.3, 0.2, 0.1], &[1.0; 8], 2, 0,
+                                Some(&odp), &mut stats);
+        assert_eq!(sel.len(), 1);
+        assert_eq!(sel[0], (0, 1.0));
+        assert_eq!(stats.dropped_secondary, 1);
+        assert_eq!(stats.expert_calls, 1);
+        assert_eq!(stats.expert_possible, 2);
+        assert_eq!(stats.pruned_total(), 1);
+    }
+
+    #[test]
+    fn decode_select_l1_protection_keeps_both() {
+        let mut stats = RunStats::new(1, 4);
+        let odp = DecodeOdp { mu: vec![2.0], l1_threshold: Some(vec![4.0]) };
+        // L1 of h_row = 8 >= 4 -> protected, secondary survives
+        let sel = decode_select(&[0.4, 0.3, 0.2, 0.1], &[1.0; 8], 2, 0,
+                                Some(&odp), &mut stats);
+        assert_eq!(sel.len(), 2);
+        assert_eq!(stats.dropped_secondary, 0);
+    }
+
+    #[test]
+    fn score_route_counts_match_selection() {
+        let mut rng = Rng::new(0);
+        let (s, d, e) = (12, 8, 4);
+        let h = Mat::randn(&mut rng, s, d, 1.0);
+        let gate = Mat::randn(&mut rng, d, e, 1.0);
+        let mut stats = RunStats::new(1, e);
+        let r = score_route(&h, &gate, 2, 0, &OdpPolicy::None, &[], None,
+                            false, &mut stats);
+        assert_eq!(r.topk.len(), s);
+        assert_eq!(stats.expert_possible, s * 2);
+        assert_eq!(stats.expert_calls, s * 2);
+        for sel in &r.topk {
+            let w: f32 = sel.iter().map(|&(_, w)| w).sum();
+            assert!((w - 1.0).abs() < 1e-5);
+        }
+        // per-expert activations sum to s * top_k
+        let total: u64 = stats.activation_counts[0].iter().sum();
+        assert_eq!(total, (s * 2) as u64);
+    }
+
+    #[test]
+    fn masked_expert_never_selected() {
+        let mut rng = Rng::new(1);
+        let (s, d, e) = (10, 8, 4);
+        let h = Mat::randn(&mut rng, s, d, 1.0);
+        let gate = Mat::randn(&mut rng, d, e, 1.0);
+        let mut stats = RunStats::new(1, e);
+        let r = score_route(&h, &gate, 2, 0, &OdpPolicy::None, &[], Some(1),
+                            false, &mut stats);
+        assert!(r.topk.iter().all(|sel| sel.iter().all(|&(ex, _)| ex != 1)));
+        assert_eq!(stats.activation_counts[0][1], 0);
+    }
+}

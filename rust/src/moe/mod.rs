@@ -1,6 +1,9 @@
-//! The MoE-LLM substrate: weight loading (MCWT) and the native f32 /
-//! quantized forward engine that PMQ calibrates against and ODP prunes.
+//! The MoE-LLM substrate: weight loading (MCWT), the shared
+//! layer-execution core (`exec`: attention / router / dispatch —
+//! DESIGN.md §2), and the native f32 / quantized forward engine that
+//! PMQ calibrates against and ODP prunes.
 
+pub mod exec;
 pub mod model;
 pub mod qz;
 pub mod weights;

@@ -6,20 +6,27 @@
 //! calibration sinks observe expert inputs for GPTQ Hessians and
 //! significance statistics (Sec. 3.2.1).
 //!
-//! Numerical parity with the JAX model is asserted against
-//! `artifacts/golden.mcwt` in `tests/golden_parity.rs`.
+//! The per-layer math lives in the shared execution core `moe::exec`
+//! (attention / router / dispatch — DESIGN.md §2); `forward` is a thin
+//! driver over it, as are the KV-cache decode and fused batcher paths
+//! in `coordinator`. Numerical parity with the JAX model is asserted
+//! against `artifacts/golden.mcwt` in `tests/golden_parity.rs`.
 
 use anyhow::Result;
 
 use crate::config::ModelConfig;
 use crate::quant::QTensor;
-use crate::tensor::{add_inplace, log_softmax, rmsnorm, softmax_rows, Mat};
-use crate::util::stats::{kurtosis, mean, top_k_indices, variance};
+use crate::tensor::{add_inplace, log_softmax, rmsnorm, Mat};
 
+use super::exec::{attention, dispatch, router};
 use super::weights::WeightFile;
 
+// Re-exports: these types moved into the execution core but remain
+// part of this module's public API.
+pub use super::exec::attention::eq6_importance;
+pub use super::exec::router::{select_top_k, RunStats};
+
 pub const RMS_EPS: f32 = 1e-5;
-const NEG_INF: f32 = -1e30;
 
 // ---------------------------------------------------------------------------
 // Weights
@@ -154,6 +161,21 @@ impl MoeModel {
         }
         bits / elems
     }
+
+    /// Token + positional embedding for `tokens` placed at positions
+    /// `pos0..pos0 + tokens.len()` (pos0 > 0 on KV-cache appends).
+    pub(crate) fn embed(&self, tokens: &[u32], pos0: usize) -> Mat {
+        let d = self.cfg.d_model;
+        let mut x = Mat::zeros(tokens.len(), d);
+        for (t, &tok) in tokens.iter().enumerate() {
+            let emb = self.tok_emb.row(tok as usize);
+            let pos = self.pos_emb.row(pos0 + t);
+            for c in 0..d {
+                x.data[t * d + c] = emb[c] + pos[c];
+            }
+        }
+        x
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -234,57 +256,6 @@ pub struct ForwardOpts<'a> {
     pub collect_ratio_samples: bool,
 }
 
-#[derive(Debug, Default, Clone)]
-pub struct RunStats {
-    /// expert invocations actually executed
-    pub expert_calls: usize,
-    /// S * top_k summed over layers (the no-pruning count)
-    pub expert_possible: usize,
-    pub dropped_secondary: usize,
-    pub dropped_all: usize,
-    /// per [layer][expert] activation counts (significance phi)
-    pub activation_counts: Vec<Vec<u64>>,
-    /// per [layer][expert] summed renormalized routing weights (w_i)
-    pub weight_sums: Vec<Vec<f64>>,
-    pub tokens_seen: usize,
-}
-
-impl RunStats {
-    pub fn new(n_layers: usize, n_experts: usize) -> RunStats {
-        RunStats {
-            activation_counts: vec![vec![0; n_experts]; n_layers],
-            weight_sums: vec![vec![0.0; n_experts]; n_layers],
-            ..Default::default()
-        }
-    }
-
-    pub fn merge(&mut self, other: &RunStats) {
-        self.expert_calls += other.expert_calls;
-        self.expert_possible += other.expert_possible;
-        self.dropped_secondary += other.dropped_secondary;
-        self.dropped_all += other.dropped_all;
-        self.tokens_seen += other.tokens_seen;
-        for (a, b) in self.activation_counts.iter_mut().zip(&other.activation_counts) {
-            for (x, y) in a.iter_mut().zip(b) {
-                *x += y;
-            }
-        }
-        for (a, b) in self.weight_sums.iter_mut().zip(&other.weight_sums) {
-            for (x, y) in a.iter_mut().zip(b) {
-                *x += y;
-            }
-        }
-    }
-
-    /// Fraction of expert compute saved by pruning (paper's "CR").
-    pub fn compression_ratio(&self) -> f64 {
-        if self.expert_possible == 0 {
-            return 0.0;
-        }
-        (self.dropped_secondary + self.dropped_all) as f64 / self.expert_possible as f64
-    }
-}
-
 pub struct ForwardOut {
     pub logits: Mat,
     pub stats: RunStats,
@@ -299,31 +270,27 @@ pub struct ForwardOut {
 
 impl MoeModel {
     /// Full-sequence scoring forward. `tokens` length <= cfg.max_seq.
+    ///
+    /// A thin driver over `moe::exec`: per layer it runs the shared
+    /// causal attention (materializing the Eq.-6 map only when the
+    /// policy or the caller needs it), the shared router, and the
+    /// shared expert dispatch (auto-threaded when the batch is large
+    /// enough to pay for it).
     pub fn forward(&self, tokens: &[u32], opts: &ForwardOpts,
                    sink: &mut dyn CalibSink) -> ForwardOut {
         let s = tokens.len();
-        let (d, nh) = (self.cfg.d_model, self.cfg.n_heads);
-        let hd = d / nh;
+        let d = self.cfg.d_model;
         assert!(s <= self.cfg.max_seq, "sequence too long: {s}");
 
-        let mut x = Mat::zeros(s, d);
-        for (t, &tok) in tokens.iter().enumerate() {
-            let emb = self.tok_emb.row(tok as usize);
-            let pos = self.pos_emb.row(t);
-            for c in 0..d {
-                x.data[t * d + c] = emb[c] + pos[c];
-            }
-        }
-
+        let mut x = self.embed(tokens, 0);
         let mut stats = RunStats::new(self.cfg.n_layers, self.cfg.n_experts);
-        let mut out = ForwardOut {
-            logits: Mat::zeros(0, 0),
-            stats: RunStats::new(self.cfg.n_layers, self.cfg.n_experts),
-            probs: Vec::new(),
-            importance: Vec::new(),
-            ratio_samples: Vec::new(),
-        };
         stats.tokens_seen = s;
+        let mut all_probs = Vec::new();
+        let mut all_importance = Vec::new();
+        let mut all_ratio_samples = Vec::new();
+
+        let odp = opts.odp.unwrap_or(&OdpPolicy::None);
+        let needs_imp = odp.needs_importance() || opts.collect_importance;
 
         for (li, layer) in self.layers.iter().enumerate() {
             // ---- attention ----
@@ -332,227 +299,73 @@ impl MoeModel {
             let q = layer.wq.matmul(&h);
             let k = layer.wk.matmul(&h);
             let v = layer.wv.matmul(&h);
-            // head-averaged attention map, accumulated for Eq. 6
-            let mut a_mean = Mat::zeros(s, s);
-            let mut attn_out = Mat::zeros(s, d);
-            let scale = 1.0 / (hd as f32).sqrt();
-            // transposed K per head so the score loop vectorizes over j
-            // (EXPERIMENTS.md §Perf: ikj axpy instead of per-pair dots)
-            let mut kht = vec![0.0f32; hd * s];
-            for head in 0..nh {
-                let c0 = head * hd;
-                for j in 0..s {
-                    let krow = &k.row(j)[c0..c0 + hd];
-                    for (d, &kv) in krow.iter().enumerate() {
-                        kht[d * s + j] = kv;
-                    }
-                }
-                let mut scores = Mat::zeros(s, s);
-                for i in 0..s {
-                    let qrow = &q.row(i)[c0..c0 + hd];
-                    let srow = &mut scores.data[i * s..i * s + s];
-                    for (d, &qv) in qrow.iter().enumerate() {
-                        let kr = &kht[d * s..d * s + i + 1];
-                        for (sv, &kv) in srow[..=i].iter_mut().zip(kr) {
-                            *sv += qv * kv;
-                        }
-                    }
-                    for sv in srow[..=i].iter_mut() {
-                        *sv *= scale;
-                    }
-                    for sv in srow[i + 1..].iter_mut() {
-                        *sv = NEG_INF;
-                    }
-                }
-                softmax_rows(&mut scores);
-                for (am, sc) in a_mean.data.iter_mut().zip(&scores.data) {
-                    *am += sc / nh as f32;
-                }
-                // attn_out[:, c0..c0+hd] = scores @ v[:, c0..c0+hd]
-                for i in 0..s {
-                    for j in 0..=i {
-                        let a = scores.data[i * s + j];
-                        if a == 0.0 {
-                            continue;
-                        }
-                        let vrow = &v.row(j)[c0..c0 + hd];
-                        let orow = &mut attn_out.data[i * d + c0..i * d + c0 + hd];
-                        for (o, &vv) in orow.iter_mut().zip(vrow) {
-                            *o += a * vv;
-                        }
-                    }
-                }
-            }
-            sink.attn_out_batch(li, &attn_out);
-            let attn_proj = layer.wo.matmul(&attn_out);
+            let attn = attention::causal_attention(
+                &q, &k, &v, s, self.cfg.n_heads, needs_imp,
+            );
+            sink.attn_out_batch(li, &attn.out);
+            let attn_proj = layer.wo.matmul(&attn.out);
             add_inplace(&mut x, &attn_proj);
 
             // ---- MoE FFN ----
             let h = rmsnorm(&x, &layer.ffn_norm, RMS_EPS);
             sink.moe_input(li, &h);
+            let importance = match &attn.a_mean {
+                Some(am) => eq6_importance(&h, am),
+                None => Vec::new(),
+            };
+            let masked = opts
+                .mask_expert
+                .filter(|&(l, _)| l == li)
+                .map(|(_, e)| e);
+            let routed = router::score_route(
+                &h,
+                &layer.gate,
+                self.cfg.top_k,
+                li,
+                odp,
+                &importance,
+                masked,
+                opts.collect_ratio_samples,
+                &mut stats,
+            );
+            sink.routing(li, &routed.probs, &routed.topk);
 
-            // router
-            let mut probs = h.matmul(&layer.gate);
-            softmax_rows(&mut probs);
-
-            // token metric for ODP
-            let odp = opts.odp.unwrap_or(&OdpPolicy::None);
-            let needs_imp = odp.needs_importance() || opts.collect_importance;
-            let importance: Vec<f32> = if needs_imp {
-                eq6_importance(&h, &a_mean)
-            } else {
-                Vec::new()
-            };
-            let metric_vals: Vec<f32> = match odp {
-                OdpPolicy::TokenMetric { metric, .. } => match metric {
-                    TokenMetric::Eq6Importance => importance.clone(),
-                    TokenMetric::Kurtosis => {
-                        (0..s).map(|t| kurtosis(h.row(t))).collect()
-                    }
-                    TokenMetric::Variance => {
-                        (0..s).map(|t| variance(h.row(t))).collect()
-                    }
-                    TokenMetric::MeanAbs => (0..s)
-                        .map(|t| mean(&h.row(t).iter().map(|v| v.abs()).collect::<Vec<_>>()))
-                        .collect(),
-                },
-                _ => Vec::new(),
-            };
-
-            // protected / dropped token sets
-            let protected = match odp {
-                OdpPolicy::Protected { protect_ratio, .. }
-                | OdpPolicy::ProtectedDropAll { protect_ratio, .. } => {
-                    let n_prot = ((s as f32) * protect_ratio).ceil() as usize;
-                    let mut mask = vec![false; s];
-                    for idx in top_k_indices(&importance, n_prot.min(s)) {
-                        mask[idx] = true;
-                    }
-                    mask
-                }
-                _ => vec![false; s],
-            };
-            let drop_all = match odp {
-                OdpPolicy::ProtectedDropAll { drop_ratio, .. } => {
-                    let n_drop = ((s as f32) * drop_ratio).floor() as usize;
-                    let neg: Vec<f32> = importance.iter().map(|v| -v).collect();
-                    let mut mask = vec![false; s];
-                    for idx in top_k_indices(&neg, n_drop.min(s)) {
-                        if !protected[idx] {
-                            mask[idx] = true;
-                        }
-                    }
-                    mask
-                }
-                _ => vec![false; s],
-            };
-            let metric_pruned = match odp {
-                OdpPolicy::TokenMetric { prune_frac, .. } => {
-                    let n_prune = ((s as f32) * prune_frac).round() as usize;
-                    let neg: Vec<f32> = metric_vals.iter().map(|v| -v).collect();
-                    let mut mask = vec![false; s];
-                    for idx in top_k_indices(&neg, n_prune.min(s)) {
-                        mask[idx] = true;
-                    }
-                    mask
-                }
-                _ => vec![false; s],
-            };
-
-            // per-token top-k selection (+ ODP decisions)
-            let mut topk: Vec<Vec<(usize, f32)>> = Vec::with_capacity(s);
-            let mut ratio_samples = Vec::new();
-            stats.expert_possible += s * self.cfg.top_k;
-            for t in 0..s {
-                let row = probs.row(t);
-                let mut sel = select_top_k(row, self.cfg.top_k, |e| {
-                    opts.mask_expert != Some((li, e))
-                });
-                // renormalize
-                let sum: f32 = sel.iter().map(|&(_, w)| w).sum();
-                for se in sel.iter_mut() {
-                    se.1 /= sum;
-                }
-                for &(e, w) in &sel {
-                    stats.activation_counts[li][e] += 1;
-                    stats.weight_sums[li][e] += w as f64;
-                }
-                let ratio = if sel.len() >= 2 { sel[1].1 / sel[0].1 } else { 0.0 };
-                if opts.collect_ratio_samples {
-                    ratio_samples.push(ratio);
-                }
-                // ODP decision
-                if drop_all[t] {
-                    stats.dropped_all += sel.len();
-                    sel.clear();
-                } else {
-                    let prune_secondary = match odp {
-                        OdpPolicy::None => false,
-                        OdpPolicy::WeightOnly { mu } => ratio < mu[li],
-                        OdpPolicy::Protected { mu, .. }
-                        | OdpPolicy::ProtectedDropAll { mu, .. } => {
-                            !protected[t] && ratio < mu[li]
-                        }
-                        OdpPolicy::TokenMetric { .. } => metric_pruned[t],
-                    };
-                    if prune_secondary && sel.len() >= 2 {
-                        sel.truncate(1);
-                        sel[0].1 = 1.0;
-                        stats.dropped_secondary += 1;
-                    }
-                }
-                stats.expert_calls += sel.len();
-                topk.push(sel);
+            let ovr = opts
+                .override_expert
+                .filter(|&(l, _, _)| l == li)
+                .map(|(_, e, repl)| (e, repl));
+            let batches = dispatch::dispatch_experts(
+                &h,
+                &routed.topk,
+                &layer.experts,
+                ovr,
+                dispatch::DispatchMode::Auto,
+            );
+            for b in &batches {
+                sink.expert_batch(li, b.expert, &b.x, &b.gated);
             }
-            sink.routing(li, &probs, &topk);
-
-            // gather tokens per expert, run expert FFN batched, scatter
-            let mut y = Mat::zeros(s, d);
-            for e in 0..self.cfg.n_experts {
-                let rows: Vec<(usize, f32)> = (0..s)
-                    .flat_map(|t| {
-                        topk[t].iter().filter(|&&(ex, _)| ex == e).map(move |&(_, w)| (t, w))
-                    })
-                    .collect();
-                if rows.is_empty() {
-                    continue;
-                }
-                let mut xe = Mat::zeros(rows.len(), d);
-                for (ri, &(t, _)) in rows.iter().enumerate() {
-                    xe.row_mut(ri).copy_from_slice(h.row(t));
-                }
-                let expert: &Expert = match opts.override_expert {
-                    Some((l, ex, repl)) if l == li && ex == e => repl,
-                    _ => &layer.experts[e],
-                };
-                let gated = expert.gated_hidden(&xe);
-                sink.expert_batch(li, e, &xe, &gated);
-                let ye = expert.w2.matmul(&gated);
-                for (ri, &(t, w)) in rows.iter().enumerate() {
-                    let yrow = ye.row(ri);
-                    let orow = &mut y.data[t * d..(t + 1) * d];
-                    for (o, &v) in orow.iter_mut().zip(yrow) {
-                        *o += w * v;
-                    }
-                }
-            }
+            let y = dispatch::scatter(&batches, s, d);
             add_inplace(&mut x, &y);
 
             if opts.collect_probs {
-                out.probs.push(probs);
+                all_probs.push(routed.probs);
             }
             if opts.collect_importance {
-                out.importance.push(importance);
+                all_importance.push(importance);
             }
             if opts.collect_ratio_samples {
-                out.ratio_samples.push(ratio_samples);
+                all_ratio_samples.push(routed.ratio_samples);
             }
         }
 
         let xf = rmsnorm(&x, &self.final_norm, RMS_EPS);
-        out.logits = xf.matmul(&self.lm_head);
-        out.stats = stats;
-        out
+        ForwardOut {
+            logits: xf.matmul(&self.lm_head),
+            stats,
+            probs: all_probs,
+            importance: all_importance,
+            ratio_samples: all_ratio_samples,
+        }
     }
 
     /// Convenience: plain scoring logits, no ODP, no collection.
@@ -570,38 +383,6 @@ impl MoeModel {
         }
         total
     }
-}
-
-/// Eq. 6: I_j = ||t_j||_1 * mean_{i >= j} A[i, j] (head-averaged A).
-pub fn eq6_importance(h: &Mat, a_mean: &Mat) -> Vec<f32> {
-    let s = h.rows;
-    let mut out = vec![0.0f32; s];
-    for j in 0..s {
-        let mut col = 0.0;
-        for i in j..s {
-            col += a_mean.data[i * s + j];
-        }
-        let denom = (s - j).max(1) as f32;
-        let l1: f32 = h.row(j).iter().map(|v| v.abs()).sum();
-        out[j] = l1 * (col / denom);
-    }
-    out
-}
-
-/// Top-k expert selection over a router row, honoring an eligibility
-/// filter; ties break toward the lower index (matches jax.lax.top_k).
-pub fn select_top_k(row: &[f32], k: usize, eligible: impl Fn(usize) -> bool)
-                    -> Vec<(usize, f32)> {
-    let mut sel: Vec<(usize, f32)> = Vec::with_capacity(k + 1);
-    for (e, &w) in row.iter().enumerate() {
-        if !eligible(e) {
-            continue;
-        }
-        sel.push((e, w));
-        sel.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
-        sel.truncate(k);
-    }
-    sel
 }
 
 #[cfg(test)]
@@ -675,13 +456,6 @@ pub mod tests {
         }
         // position 15 onward must differ
         assert!((0..cfg.vocab_size).any(|c| (l1.at(15, c) - l2.at(15, c)).abs() > 1e-6));
-    }
-
-    #[test]
-    fn select_top_k_ties_prefer_lower_index() {
-        let sel = select_top_k(&[0.25, 0.25, 0.4, 0.1], 2, |_| true);
-        assert_eq!(sel[0].0, 2);
-        assert_eq!(sel[1].0, 0); // tie 0 vs 1 -> lower index
     }
 
     #[test]

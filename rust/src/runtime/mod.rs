@@ -1,123 +1,51 @@
-//! PJRT runtime: loads the AOT HLO-text artifacts produced by
-//! `python/compile/aot.py` and executes them on the CPU PJRT client —
-//! the request-path never touches python (DESIGN.md §3).
+//! PJRT runtime: executes the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` (DESIGN.md §3).
 //!
-//! Interchange is HLO *text*: jax >= 0.5 serializes protos with 64-bit
-//! instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md).
+//! The XLA-backed pieces (`Runtime`, `components`, the real
+//! `PjrtModel`) require the vendored `xla` bindings crate and are
+//! gated behind the `pjrt` cargo feature; offline images without it
+//! build the default feature set, where `PjrtModel` is a stub whose
+//! constructor errors. `artifacts` (manifest parsing) is pure rust and
+//! always available.
 
 pub mod artifacts;
-pub mod components;
-pub mod pjrt_model;
-
-use std::collections::BTreeMap;
-use std::path::{Path, PathBuf};
-
-use anyhow::{anyhow, Context, Result};
-
-use crate::tensor::Mat;
 
 pub use artifacts::Manifest;
+
+#[cfg(feature = "pjrt")]
+pub mod components;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
+#[cfg(feature = "pjrt")]
+pub mod pjrt_model;
+
+#[cfg(feature = "pjrt")]
+pub use pjrt::{lit_f32, lit_i32, lit_mat, lit_u32, mat_from_lit, Runtime};
+#[cfg(feature = "pjrt")]
 pub use pjrt_model::PjrtModel;
 
-/// A compiled artifact registry over one PJRT client.
-pub struct Runtime {
-    pub client: xla::PjRtClient,
-    pub dir: PathBuf,
-    pub manifest: Manifest,
-    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
-}
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::path::Path;
 
-impl Runtime {
-    /// Create a CPU-PJRT runtime rooted at the artifacts directory.
-    pub fn cpu(dir: &Path) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu()
-            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
-        let manifest = Manifest::load(&dir.join("manifest.json"))?;
-        Ok(Runtime {
-            client,
-            dir: dir.to_path_buf(),
-            manifest,
-            exes: BTreeMap::new(),
-        })
-    }
+    use anyhow::{bail, Result};
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+    use crate::tensor::Mat;
 
-    /// Compile (and cache) one artifact by name.
-    pub fn load(&mut self, name: &str) -> Result<()> {
-        if self.exes.contains_key(name) {
-            return Ok(());
+    /// API-compatible stand-in when the `pjrt` feature is off: loading
+    /// always errors, so callers fall back to the native engine.
+    pub struct PjrtModel;
+
+    impl PjrtModel {
+        pub fn load(_dir: &Path) -> Result<PjrtModel> {
+            bail!("mc-moe was built without the `pjrt` feature");
         }
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path utf8")?,
-        )
-        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-        self.exes.insert(name.to_string(), exe);
-        Ok(())
-    }
 
-    /// Execute a loaded artifact; returns the flattened output tuple.
-    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
-        let exe = self
-            .exes
-            .get(name)
-            .ok_or_else(|| anyhow!("artifact {name} not loaded"))?;
-        let bufs = exe
-            .execute::<xla::Literal>(inputs)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
-        let lit = bufs[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
-        // artifacts are lowered with return_tuple=True
-        lit.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))
-    }
-
-    pub fn is_loaded(&self, name: &str) -> bool {
-        self.exes.contains_key(name)
+        pub fn score(&mut self, _tokens: &[u32]) -> Result<Mat> {
+            bail!("mc-moe was built without the `pjrt` feature");
+        }
     }
 }
 
-// --- Literal <-> native conversions -----------------------------------------
-
-pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
-    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-    xla::Literal::vec1(data)
-        .reshape(&dims)
-        .map_err(|e| anyhow!("reshape f32 literal: {e:?}"))
-}
-
-pub fn lit_mat(m: &Mat) -> Result<xla::Literal> {
-    lit_f32(&m.data, &[m.rows, m.cols])
-}
-
-pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
-    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-    xla::Literal::vec1(data)
-        .reshape(&dims)
-        .map_err(|e| anyhow!("reshape i32 literal: {e:?}"))
-}
-
-pub fn lit_u32(data: &[u32], dims: &[usize]) -> Result<xla::Literal> {
-    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
-    xla::Literal::vec1(data)
-        .reshape(&dims)
-        .map_err(|e| anyhow!("reshape u32 literal: {e:?}"))
-}
-
-/// Read a 2-D f32 literal back into a Mat.
-pub fn mat_from_lit(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
-    let v = lit
-        .to_vec::<f32>()
-        .map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
-    anyhow::ensure!(v.len() == rows * cols, "literal size mismatch");
-    Ok(Mat::from_vec(rows, cols, v))
-}
+#[cfg(not(feature = "pjrt"))]
+pub use stub::PjrtModel;

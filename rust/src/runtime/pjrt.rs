@@ -1,0 +1,120 @@
+//! PJRT client plumbing (compiled only with the `pjrt` feature, which
+//! needs the vendored `xla` bindings crate): loads the AOT HLO-text
+//! artifacts produced by `python/compile/aot.py` and executes them on
+//! the CPU PJRT client — the request-path never touches python
+//! (DESIGN.md §3).
+//!
+//! Interchange is HLO *text*: jax >= 0.5 serializes protos with 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::Mat;
+
+use super::artifacts::Manifest;
+
+/// A compiled artifact registry over one PJRT client.
+pub struct Runtime {
+    pub client: xla::PjRtClient,
+    pub dir: PathBuf,
+    pub manifest: Manifest,
+    exes: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime rooted at the artifacts directory.
+    pub fn cpu(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow!("PjRtClient::cpu: {e:?}"))?;
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        Ok(Runtime {
+            client,
+            dir: dir.to_path_buf(),
+            manifest,
+            exes: BTreeMap::new(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (and cache) one artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.exes.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("artifact path utf8")?,
+        )
+        .map_err(|e| anyhow!("parsing {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
+        self.exes.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute a loaded artifact; returns the flattened output tuple.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("artifact {name} not loaded"))?;
+        let bufs = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
+        let lit = bufs[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetching {name} result: {e:?}"))?;
+        // artifacts are lowered with return_tuple=True
+        lit.to_tuple().map_err(|e| anyhow!("untupling {name}: {e:?}"))
+    }
+
+    pub fn is_loaded(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+}
+
+// --- Literal <-> native conversions -----------------------------------------
+
+pub fn lit_f32(data: &[f32], dims: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape f32 literal: {e:?}"))
+}
+
+pub fn lit_mat(m: &Mat) -> Result<xla::Literal> {
+    lit_f32(&m.data, &[m.rows, m.cols])
+}
+
+pub fn lit_i32(data: &[i32], dims: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape i32 literal: {e:?}"))
+}
+
+pub fn lit_u32(data: &[u32], dims: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape u32 literal: {e:?}"))
+}
+
+/// Read a 2-D f32 literal back into a Mat.
+pub fn mat_from_lit(lit: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
+    let v = lit
+        .to_vec::<f32>()
+        .map_err(|e| anyhow!("literal to_vec: {e:?}"))?;
+    anyhow::ensure!(v.len() == rows * cols, "literal size mismatch");
+    Ok(Mat::from_vec(rows, cols, v))
+}

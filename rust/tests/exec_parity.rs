@@ -1,0 +1,202 @@
+//! Path-equivalence tests over the shared execution core (ISSUE 1):
+//! the scoring forward, single-shot batched prefill, token-by-token
+//! KV decode, and the fused multi-session batcher step must all agree
+//! — logits AND pruning decisions — with ODP on and off.
+
+use std::sync::Arc;
+
+use mc_moe::config::ModelConfig;
+use mc_moe::coordinator::{DecodeOdp, DecodeSession};
+use mc_moe::moe::model::{CalibSink, Expert, ForwardOpts, Layer, MoeModel, OdpPolicy};
+use mc_moe::quant::QTensor;
+use mc_moe::tensor::Mat;
+use mc_moe::util::rng::Rng;
+use mc_moe::util::stats::argmax;
+
+// the random-model helper lives behind cfg(test) in the lib; rebuild a
+// small equivalent here for integration-test use
+fn random_model(cfg: &ModelConfig, seed: u64) -> MoeModel {
+    let mut rng = Rng::new(seed);
+    let d = cfg.d_model;
+    let mk = |rng: &mut Rng, r: usize, c: usize| {
+        QTensor::F32(Mat::randn(rng, r, c, (r as f32).powf(-0.5)))
+    };
+    let layers = (0..cfg.n_layers)
+        .map(|_| Layer {
+            attn_norm: vec![1.0; d],
+            ffn_norm: vec![1.0; d],
+            gate: Mat::randn(&mut rng, d, cfg.n_experts, (d as f32).powf(-0.5)),
+            wq: mk(&mut rng, d, d),
+            wk: mk(&mut rng, d, d),
+            wv: mk(&mut rng, d, d),
+            wo: mk(&mut rng, d, d),
+            experts: (0..cfg.n_experts)
+                .map(|_| Expert {
+                    w1: mk(&mut rng, d, cfg.d_ff),
+                    w3: mk(&mut rng, d, cfg.d_ff),
+                    w2: mk(&mut rng, cfg.d_ff, d),
+                })
+                .collect(),
+        })
+        .collect();
+    MoeModel {
+        cfg: cfg.clone(),
+        tok_emb: Mat::randn(&mut rng, cfg.vocab_size, d, 0.02),
+        pos_emb: Mat::randn(&mut rng, cfg.max_seq, d, 0.02),
+        final_norm: vec![1.0; d],
+        lm_head: Mat::randn(&mut rng, d, cfg.vocab_size, (d as f32).powf(-0.5)),
+        layers,
+    }
+}
+
+fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
+    assert_eq!(a.len(), b.len(), "{what}: length mismatch");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert!(
+            (x - y).abs() < tol * (1.0 + y.abs()),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+/// Batched prefill must reproduce the full-sequence scorer's last-row
+/// logits (the cross-path analogue of `decode_matches_full_forward`).
+#[test]
+fn batched_prefill_matches_scoring_forward() {
+    let cfg = ModelConfig::test_tiny();
+    let model = Arc::new(random_model(&cfg, 10));
+    let toks: Vec<u32> = (0..30).map(|i| (i * 13) % 200 + 1).collect();
+    let full = model.score(&toks);
+    let mut sess = DecodeSession::new(model.clone(), None);
+    let got = sess.prefill(&toks);
+    close(&got, full.row(toks.len() - 1), 1e-3, "prefill vs score");
+    assert_eq!(sess.pos, toks.len());
+}
+
+/// Batched prefill + fused multi-session stepping must reproduce
+/// token-by-token decode, ODP off and on.
+#[test]
+fn fused_pipeline_matches_stepwise_decode() {
+    let cfg = ModelConfig::test_tiny();
+    let model = Arc::new(random_model(&cfg, 11));
+    let prompts: [&[u32]; 3] = [&[1, 5, 80, 3], &[2, 44, 9], &[7, 7, 120, 33, 14]];
+    let n_decode = 4;
+    for odp in [
+        None,
+        Some(DecodeOdp { mu: vec![0.6; cfg.n_layers], l1_threshold: None }),
+    ] {
+        // reference: sequential step() per token, per session
+        let mut want_tokens: Vec<Vec<u32>> = Vec::new();
+        let mut want_logits: Vec<Vec<f32>> = Vec::new();
+        let mut want_pruned = 0usize;
+        for p in &prompts {
+            let mut s = DecodeSession::new(model.clone(), odp.clone());
+            let mut logits = Vec::new();
+            for &t in *p {
+                logits = s.step(t);
+            }
+            let mut toks = Vec::new();
+            for _ in 0..n_decode {
+                let next = argmax(&logits) as u32;
+                toks.push(next);
+                logits = s.step(next);
+            }
+            want_tokens.push(toks);
+            want_logits.push(logits);
+            want_pruned += s.stats.dropped_secondary;
+        }
+
+        // fused: batched prefill, then step_many across all sessions
+        let mut sessions: Vec<DecodeSession> = prompts
+            .iter()
+            .map(|p| {
+                let mut s = DecodeSession::new(model.clone(), odp.clone());
+                s.prefill(&p[..p.len() - 1]);
+                s
+            })
+            .collect();
+        let mut inputs: Vec<u32> = prompts.iter().map(|p| *p.last().unwrap()).collect();
+        let mut got_tokens: Vec<Vec<u32>> = vec![Vec::new(); prompts.len()];
+        let mut logits = Vec::new();
+        for _ in 0..=n_decode {
+            logits = {
+                let mut refs: Vec<&mut DecodeSession> = sessions.iter_mut().collect();
+                mc_moe::coordinator::decode::step_many(&mut refs, &inputs)
+            };
+            inputs = (0..prompts.len())
+                .map(|i| {
+                    let next = argmax(&logits[i]) as u32;
+                    got_tokens[i].push(next);
+                    next
+                })
+                .collect();
+        }
+        for i in 0..prompts.len() {
+            // the last greedy pick follows the final compared logits;
+            // compare the first n_decode tokens and the final logits
+            assert_eq!(&got_tokens[i][..n_decode], &want_tokens[i][..],
+                       "session {i} token stream diverged (odp={})",
+                       odp.is_some());
+            close(&logits[i], &want_logits[i], 1e-4,
+                  &format!("session {i} final logits"));
+        }
+        let got_pruned: usize =
+            sessions.iter().map(|s| s.stats.dropped_secondary).sum();
+        assert_eq!(got_pruned, want_pruned, "pruning drift (odp={})",
+                   odp.is_some());
+    }
+}
+
+/// `OdpPolicy::WeightOnly` scoring and `DecodeOdp` decode implement
+/// the same w1/w0 rule: on the same sequence they must prune the same
+/// per-token counts (hence the same token sets) and agree on totals.
+#[test]
+fn weight_only_scoring_and_decode_prune_same_tokens() {
+    let cfg = ModelConfig::test_tiny();
+    let model = Arc::new(random_model(&cfg, 12));
+    let toks: Vec<u32> = (0..32).map(|i| (i * 29) % 200 + 1).collect();
+    let mu = vec![0.6f32; cfg.n_layers];
+
+    // scoring path: per-token prune count via the routing sink
+    struct PruneSink {
+        per_token: Vec<usize>,
+    }
+    impl CalibSink for PruneSink {
+        fn routing(&mut self, _layer: usize, _probs: &Mat,
+                   topk: &[Vec<(usize, f32)>]) {
+            if self.per_token.is_empty() {
+                self.per_token = vec![0; topk.len()];
+            }
+            for (t, sel) in topk.iter().enumerate() {
+                if sel.len() < 2 {
+                    self.per_token[t] += 1;
+                }
+            }
+        }
+    }
+    let policy = OdpPolicy::WeightOnly { mu: mu.clone() };
+    let mut sink = PruneSink { per_token: Vec::new() };
+    let opts = ForwardOpts { odp: Some(&policy), ..Default::default() };
+    let score_out = model.forward(&toks, &opts, &mut sink);
+    let score_per_token = sink.per_token;
+
+    // decode path: per-token prune count via stepwise stat deltas
+    let odp = DecodeOdp { mu, l1_threshold: None };
+    let mut sess = DecodeSession::new(model.clone(), Some(odp));
+    let mut decode_per_token = Vec::new();
+    let mut last = 0usize;
+    for &t in &toks {
+        sess.step(t);
+        decode_per_token.push(sess.stats.dropped_secondary - last);
+        last = sess.stats.dropped_secondary;
+    }
+
+    assert_eq!(score_per_token, decode_per_token,
+               "scoring and decode pruned different token sets");
+    assert_eq!(score_out.stats.dropped_secondary,
+               sess.stats.dropped_secondary);
+    assert_eq!(score_out.stats.expert_calls, sess.stats.expert_calls);
+    assert_eq!(score_out.stats.expert_possible, sess.stats.expert_possible);
+    // and some pruning actually happened at the median-ish threshold
+    assert!(sess.stats.dropped_secondary > 0);
+}
