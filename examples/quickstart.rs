@@ -5,7 +5,9 @@
 
 use anyhow::Result;
 use mc_moe::config::{artifacts_dir, ModelConfig};
-use mc_moe::coordinator::memmodel;
+use mc_moe::coordinator::{
+    memmodel, GenerateRequest, McEngine, SamplingParams,
+};
 use mc_moe::eval::eval_suite;
 use mc_moe::moe::{MoeModel, WeightFile};
 use mc_moe::odp;
@@ -22,11 +24,11 @@ fn main() -> Result<()> {
              memmodel::loading_bytes(&fp) as f64 / 1e6);
 
     // 1. build the PMQ workbench: one calibration pass + GPTQ zoo
-    println!("\n[1/3] calibrating + quantizing (GPTQ at 1/2/3 bits)...");
+    println!("\n[1/4] calibrating + quantizing (GPTQ at 1/2/3 bits)...");
     let wb = Workbench::build(fp, WorkbenchConfig::default())?;
 
     // 2. solve the Eq.-4 integer program at a 2.5-bit average budget
-    println!("[2/3] solving bit allocation (PMQ, avg 2.5 bits)...");
+    println!("[2/4] solving bit allocation (PMQ, avg 2.5 bits)...");
     let total = 5 * cfg.n_experts / 2;
     let (mc_model, alloc) = wb.compress(Allocator::Pmq, total, PmqHyper::default())?;
     println!("  allocation histogram 1/2/3-bit: {:?}", alloc.histogram());
@@ -37,7 +39,7 @@ fn main() -> Result<()> {
                  / memmodel::loading_bytes(&wb.fp) as f64);
 
     // 3. evaluate FP vs MC (+ODP) on the 8-task suite
-    println!("[3/3] evaluating...");
+    println!("[3/4] evaluating...");
     let odp_policy = odp::odp_default(&wb.cal);
     let fp_r = eval_suite(&wb.fp, 40, 0, 4242, None);
     let mc_r = eval_suite(&mc_model, 40, 0, 4242, None);
@@ -52,5 +54,18 @@ fn main() -> Result<()> {
              fp_r.average * 100.0, mc_r.average * 100.0, mco_r.average * 100.0);
     println!("\nODP pruned {:.1}% of expert compute",
              mco_r.stats.compression_ratio() * 100.0);
+
+    // 4. generate through the unified request API: one GenerateRequest
+    // drives the compressed engine, streaming tokens as they decode
+    println!("\n[4/4] sampled generation on the MC model...");
+    let engine = McEngine::new(mc_model, Some(odp_policy), None);
+    let req = GenerateRequest::greedy(vec![1, 5, 80, 3], 16)
+        .with_sampling(SamplingParams::temperature(0.8, 4242));
+    print!("  tokens:");
+    let done = engine.generate_stream(&req, |t| {
+        print!(" {t}");
+        let _ = std::io::Write::flush(&mut std::io::stdout());
+    })?;
+    println!("\n  finish={:?}  {}", done.finish, engine.summary());
     Ok(())
 }

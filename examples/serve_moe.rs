@@ -1,17 +1,24 @@
 //! End-to-end serving driver (EXPERIMENTS.md §E2E): load the trained
 //! model, compress it with MC, spawn the continuous-batching server,
 //! replay a synthetic request trace, and report latency/throughput —
-//! FP32 engine vs MC engine vs MC+ODP.
+//! FP32 engine vs MC engine vs MC+ODP. Before the trace, one request
+//! is streamed token-by-token (the `RequestHandle` iterator) to show
+//! the per-token event path, with a second request cancelled
+//! mid-decode to show slot reclamation.
 //!
 //!   cargo run --release --example serve_moe [-- --requests 24 --batch 4]
 
+use std::io::Write;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 use mc_moe::config::{artifacts_dir, ModelConfig};
-use mc_moe::coordinator::{memmodel, DecodeOdp, Server};
+use mc_moe::coordinator::{
+    memmodel, DecodeOdp, GenerateRequest, SamplingParams, Server,
+    StopCondition,
+};
 use mc_moe::data::{calibration_set, task_sequence, Split};
 use mc_moe::moe::{MoeModel, WeightFile};
 use mc_moe::pmq::allocate::{Allocator, PmqHyper};
@@ -30,25 +37,59 @@ struct TraceResult {
     load_mb: f64,
 }
 
+fn trace_prompt(rng: &mut Rng) -> Vec<u32> {
+    // request = a task prompt (stop at SEP) like a real workload
+    let task = rng.below(8);
+    let mut prompt = task_sequence(rng, task);
+    let sep = prompt.iter().position(|&t| t == 3).unwrap();
+    prompt.truncate(sep + 1);
+    prompt
+}
+
+/// Stream one sampled request token-by-token, cancel another
+/// mid-decode: the live view of the per-request event channel.
+fn streaming_demo(model: Arc<MoeModel>, max_new: usize) {
+    let server = Server::spawn(model, None, 2);
+    let mut rng = Rng::new(7);
+    let doomed = server.submit(
+        GenerateRequest::greedy(trace_prompt(&mut rng), max_new * 4)
+            .with_stop(StopCondition::MaxLen));
+    let mut live = server.submit(
+        GenerateRequest::greedy(trace_prompt(&mut rng), max_new)
+            .with_sampling(SamplingParams::temperature(0.8, 42)));
+    print!("streamed tokens: ");
+    let _ = std::io::stdout().flush();
+    for (i, tok) in live.tokens().enumerate() {
+        print!("{tok} ");
+        let _ = std::io::stdout().flush();
+        if i == 2 {
+            doomed.cancel(); // frees its batch slot mid-decode
+        }
+    }
+    doomed.cancel(); // idempotent: covers a live stream shorter than 3
+    let done = live.completion().expect("completion").clone();
+    println!("\nfinish={:?}  ttft={:.2}ms  cancelled-peer={}",
+             done.finish, done.ttft_ns as f64 / 1e6,
+             doomed.wait().is_none());
+    println!("{}", server.metrics.render_text());
+    server.shutdown();
+}
+
 fn run_trace(name: &str, model: Arc<MoeModel>, odp: Option<DecodeOdp>,
              n_req: usize, batch: usize, max_new: usize) -> TraceResult {
     let load_mb = memmodel::loading_bytes(&model) as f64 / 1e6;
     let server = Server::spawn(model, odp, batch);
     let mut rng = Rng::new(2024);
     let t0 = Instant::now();
-    let rxs: Vec<_> = (0..n_req)
+    let handles: Vec<_> = (0..n_req)
         .map(|_| {
-            // request = a task prompt (stop at SEP) like a real workload
-            let task = rng.below(8);
-            let mut prompt = task_sequence(&mut rng, task);
-            let sep = prompt.iter().position(|&t| t == 3).unwrap();
-            prompt.truncate(sep + 1);
-            server.submit(prompt, max_new)
+            server.submit(GenerateRequest::greedy(
+                trace_prompt(&mut rng), max_new))
         })
         .collect();
     let mut ttfts = Vec::new();
-    for rx in rxs {
-        let done = rx.recv().expect("completion");
+    for h in handles {
+        let done = h.wait().expect("completion");
         ttfts.push(done.ttft_ns as f32 / 1e6);
     }
     let wall = t0.elapsed().as_secs_f64();
@@ -85,6 +126,9 @@ fn main() -> Result<()> {
                                   PmqHyper::default())?;
     let seqs = calibration_set(17, 4, cfg.max_seq, Split::General);
     let odp = DecodeOdp::calibrate(&wb.fp, &seqs, wb.cal.mu_median(), 0.02);
+
+    eprintln!("live streaming + cancellation on the MC engine:");
+    streaming_demo(Arc::new(mc.clone()), max_new);
 
     eprintln!("replaying trace: {n_req} requests, batch {batch}, {max_new} new tokens each\n");
     let results = vec![

@@ -191,14 +191,14 @@ fn engine_suite() {
     let t0 = Instant::now();
     let server = Server::spawn(fp.clone(), None, 4);
     let mut rng = Rng::new(3);
-    let rxs: Vec<_> = (0..8)
+    let handles: Vec<_> = (0..8)
         .map(|_| {
             let prompt: Vec<u32> = (0..32).map(|_| rng.below(200) as u32 + 1).collect();
-            server.submit(prompt, 16)
+            server.submit_greedy(prompt, 16)
         })
         .collect();
-    for rx in rxs {
-        let _ = rx.recv();
+    for h in handles {
+        let _ = h.wait();
     }
     let tokens = server.metrics.tokens_generated
         .load(std::sync::atomic::Ordering::Relaxed) as f64;

@@ -538,15 +538,15 @@ fn tab13(ctx: &Ctx) {
             let decode = if ctx.fast { 16 } else { 32 };
             let mut rng = mc_moe::util::rng::Rng::new(7);
             let t0 = Instant::now();
-            let rxs: Vec<_> = (0..batch)
+            let handles: Vec<_> = (0..batch)
                 .map(|_| {
                     let prompt: Vec<u32> =
                         (0..prefill).map(|_| rng.below(200) as u32 + 1).collect();
-                    server.submit(prompt, decode)
+                    server.submit_greedy(prompt, decode)
                 })
                 .collect();
-            for rx in rxs {
-                let _ = rx.recv();
+            for h in handles {
+                let _ = h.wait();
             }
             let total_tokens = server
                 .metrics

@@ -5,51 +5,46 @@
 //! is dispatched at most once per layer per iteration across all
 //! sessions (`decode::step_many`, DESIGN.md §3). Prompt admission uses
 //! the batched single-shot prefill.
+//!
+//! The batcher consumes the unified `GenerateRequest` surface: every
+//! emitted token streams to the request's `RequestTicket` channel the
+//! step it is produced, sampling runs through the shared `Sampler`,
+//! stop conditions follow `StopCondition`, admission honors
+//! `Priority` (FIFO within a class), and a raised cancel flag retires
+//! the session at the next step — freeing its batch slot for the
+//! queue (DESIGN.md §3.1).
 
-use std::collections::VecDeque;
 use std::sync::Arc;
 use std::time::Instant;
 
-use crate::config::EOS;
 use crate::moe::model::MoeModel;
-use crate::util::stats::argmax;
 
 use super::decode::{step_many, DecodeOdp, DecodeSession};
 use super::metrics::Metrics;
-
-#[derive(Debug, Clone)]
-pub struct Request {
-    pub id: u64,
-    pub prompt: Vec<u32>,
-    pub max_new_tokens: usize,
-    /// greedy if None, else top-1 of logits/temperature sampling seed
-    pub temperature: Option<(f32, u64)>,
-}
-
-#[derive(Debug, Clone)]
-pub struct Completion {
-    pub id: u64,
-    pub tokens: Vec<u32>,
-    pub ttft_ns: u64,
-    pub total_ns: u64,
-}
+use super::request::{
+    request_channel, Completion, FinishReason, GenerateRequest,
+    RequestHandle, RequestTicket, StreamEvent,
+};
+use super::sampling::Sampler;
 
 struct Active {
-    req: Request,
+    req: GenerateRequest,
+    ticket: RequestTicket,
     session: DecodeSession,
+    sampler: Sampler,
     generated: Vec<u32>,
     started: Instant,
     first_token_ns: Option<u64>,
-    rng_state: u64,
 }
 
 pub struct Batcher {
     model: Arc<MoeModel>,
     odp: Option<DecodeOdp>,
     pub max_batch: usize,
-    queue: VecDeque<Request>,
+    /// submission order; admission scans for the best priority class
+    queue: Vec<(GenerateRequest, RequestTicket)>,
     active: Vec<Active>,
-    pub done: Vec<Completion>,
+    next_id: u64,
 }
 
 impl Batcher {
@@ -59,14 +54,27 @@ impl Batcher {
             model,
             odp,
             max_batch,
-            queue: VecDeque::new(),
+            queue: Vec::new(),
             active: Vec::new(),
-            done: Vec::new(),
+            next_id: 1,
         }
     }
 
-    pub fn submit(&mut self, req: Request) {
-        self.queue.push_back(req);
+    /// Enqueue a request; the returned handle streams its events.
+    pub fn submit(&mut self, req: GenerateRequest) -> RequestHandle {
+        let id = self.next_id;
+        self.next_id += 1;
+        let (ticket, handle) = request_channel(id);
+        self.queue.push((req, ticket));
+        handle
+    }
+
+    /// Enqueue with a caller-built ticket (the server constructs the
+    /// handle on the client thread and ships the ticket here).
+    pub fn submit_with_ticket(&mut self, req: GenerateRequest,
+                              ticket: RequestTicket) {
+        self.next_id = self.next_id.max(ticket.id + 1);
+        self.queue.push((req, ticket));
     }
 
     pub fn pending(&self) -> usize {
@@ -77,12 +85,88 @@ impl Batcher {
         self.active.len()
     }
 
-    /// Admit + advance every active session by one token (one fused
-    /// pass). Returns completions retired this step.
-    pub fn step(&mut self, metrics: &Metrics) -> Vec<Completion> {
-        // admission (continuous batching: fill free slots every step)
-        while self.active.len() < self.max_batch {
-            let Some(req) = self.queue.pop_front() else { break };
+    fn retire(a: Active, finish: FinishReason, metrics: &Metrics)
+              -> Completion {
+        Metrics::inc(&metrics.expert_calls,
+                     a.session.stats.expert_calls as u64);
+        Metrics::inc(&metrics.experts_pruned,
+                     a.session.stats.pruned_total() as u64);
+        Completion {
+            id: a.ticket.id,
+            tokens: a.generated,
+            finish,
+            ttft_ns: a.first_token_ns.unwrap_or(0),
+            total_ns: a.started.elapsed().as_nanos() as u64,
+        }
+    }
+
+    /// Reap raised cancel flags: queued requests are dropped, active
+    /// sessions are retired (their batch slot frees for admission
+    /// below). Streams get a terminal `Cancelled` event.
+    fn reap_cancelled(&mut self, metrics: &Metrics) {
+        self.queue.retain(|(_, ticket)| {
+            if ticket.cancelled() {
+                Metrics::inc(&metrics.requests_cancelled, 1);
+                ticket.send(StreamEvent::Cancelled { id: ticket.id });
+                false
+            } else {
+                true
+            }
+        });
+        for i in (0..self.active.len()).rev() {
+            if self.active[i].ticket.cancelled() {
+                let a = self.active.swap_remove(i);
+                Metrics::inc(&metrics.requests_cancelled, 1);
+                let ticket = a.ticket.clone();
+                Self::retire(a, FinishReason::Cancelled, metrics);
+                ticket.send(StreamEvent::Cancelled { id: ticket.id });
+            }
+        }
+    }
+
+    /// Fill free batch slots from the queue, best priority class
+    /// first, FIFO within a class. Degenerate requests never need a
+    /// slot, so they complete (or are rejected) immediately even when
+    /// the batch is saturated; their completions are returned so
+    /// `step`/`run_to_completion` report them like any other.
+    fn admit(&mut self, metrics: &Metrics) -> Vec<Completion> {
+        let mut degenerate = Vec::new();
+        // resolve every degenerate queue entry first, slot-free. Empty
+        // prompt is invalid input (the engine path errors on it) and
+        // reports Rejected without counting as completed;
+        // max_new_tokens == 0 is a legitimate no-op, MaxTokens (as on
+        // the engine path).
+        let mut i = 0;
+        while i < self.queue.len() {
+            let req = &self.queue[i].0;
+            if !req.prompt.is_empty() && req.max_new_tokens > 0 {
+                i += 1;
+                continue;
+            }
+            let (req, ticket) = self.queue.remove(i);
+            Metrics::inc(&metrics.requests_admitted, 1);
+            let finish = if req.prompt.is_empty() {
+                Metrics::inc(&metrics.requests_rejected, 1);
+                FinishReason::Rejected
+            } else {
+                Metrics::inc(&metrics.requests_completed, 1);
+                FinishReason::MaxTokens
+            };
+            let done = Completion {
+                id: ticket.id,
+                tokens: Vec::new(),
+                finish,
+                ttft_ns: 0,
+                total_ns: 0,
+            };
+            ticket.send(StreamEvent::Done(done.clone()));
+            degenerate.push(done);
+        }
+        while self.active.len() < self.max_batch && !self.queue.is_empty() {
+            let best = (0..self.queue.len())
+                .min_by_key(|&i| self.queue[i].0.priority)
+                .unwrap();
+            let (req, ticket) = self.queue.remove(best);
             Metrics::inc(&metrics.requests_admitted, 1);
             let mut session =
                 DecodeSession::new(self.model.clone(), self.odp.clone());
@@ -94,18 +178,31 @@ impl Batcher {
             if !head.is_empty() {
                 session.prefill(head);
             }
-            let seed = req.temperature.map(|(_, s)| s).unwrap_or(1);
+            let sampler = Sampler::new(req.sampling.clone());
             self.active.push(Active {
-                rng_state: seed,
-                req: Request { prompt: tail.to_vec(), ..req },
+                req: GenerateRequest { prompt: tail.to_vec(), ..req },
+                ticket,
                 session,
+                sampler,
                 generated: Vec::new(),
                 started,
                 first_token_ns: None,
             });
         }
+        degenerate
+    }
+
+    /// Reap cancellations, admit from the queue, then advance every
+    /// active session by one token (one fused pass). Each produced
+    /// token streams to its request's channel immediately. Returns
+    /// completions retired this step.
+    pub fn step(&mut self, metrics: &Metrics) -> Vec<Completion> {
+        self.reap_cancelled(metrics);
+        let mut retired = self.admit(metrics);
+        Metrics::set_gauge(&metrics.queue_depth, self.queue.len() as u64);
+        Metrics::set_gauge(&metrics.batch_occupancy, self.active.len() as u64);
         if self.active.is_empty() {
-            return Vec::new();
+            return retired;
         }
 
         // one fused decode step across every active session
@@ -124,27 +221,12 @@ impl Batcher {
         // the fused pass produced one token per session
         let per_token_ns = (step_ns / self.active.len() as u64).max(1);
 
-        // sampling + retirement per session (descending index so
-        // swap_remove never disturbs rows not yet processed)
-        let mut retired = Vec::new();
+        // sampling + streaming + retirement per session (descending
+        // index so swap_remove never disturbs rows not yet processed)
         for i in (0..self.active.len()).rev() {
             let a = &mut self.active[i];
             metrics.record_tpot(per_token_ns);
-            let next = match a.req.temperature {
-                None => argmax(&logits[i]) as u32,
-                Some((temp, _)) => {
-                    // Gumbel-max sampling with a per-request LCG
-                    a.rng_state = crate::util::rng::lcg_next(a.rng_state);
-                    let mut rng = crate::util::rng::Rng::new(a.rng_state);
-                    let scaled: Vec<f32> =
-                        logits[i].iter().map(|l| l / temp).collect();
-                    let noisy: Vec<f32> = scaled
-                        .iter()
-                        .map(|&l| l - (-(rng.f64().max(1e-12).ln())).ln() as f32)
-                        .collect();
-                    argmax(&noisy) as u32
-                }
-            };
+            let next = a.sampler.next_token(&logits[i]);
             if a.first_token_ns.is_none() {
                 let ns = a.started.elapsed().as_nanos() as u64;
                 a.first_token_ns = Some(ns);
@@ -152,29 +234,31 @@ impl Batcher {
             }
             a.generated.push(next);
             Metrics::inc(&metrics.tokens_generated, 1);
-            let finished = a.generated.len() >= a.req.max_new_tokens
-                || next == EOS
-                || a.session.remaining() == 0;
-            if finished {
+            a.ticket.send(StreamEvent::Token(next));
+            let finish = if a.req.stop.hits(next) {
+                Some(FinishReason::Stop(next))
+            } else if a.generated.len() >= a.req.max_new_tokens
+                || a.session.remaining() == 0
+            {
+                Some(FinishReason::MaxTokens)
+            } else {
+                None
+            };
+            if let Some(finish) = finish {
                 let a = self.active.swap_remove(i);
                 Metrics::inc(&metrics.requests_completed, 1);
-                Metrics::inc(&metrics.expert_calls,
-                             a.session.stats.expert_calls as u64);
-                Metrics::inc(&metrics.experts_pruned,
-                             a.session.stats.pruned_total() as u64);
-                retired.push(Completion {
-                    id: a.req.id,
-                    tokens: a.generated,
-                    ttft_ns: a.first_token_ns.unwrap_or(0),
-                    total_ns: a.started.elapsed().as_nanos() as u64,
-                });
+                let ticket = a.ticket.clone();
+                let done = Self::retire(a, finish, metrics);
+                ticket.send(StreamEvent::Done(done.clone()));
+                retired.push(done);
             }
         }
-        self.done.extend(retired.clone());
+        Metrics::set_gauge(&metrics.batch_occupancy, self.active.len() as u64);
         retired
     }
 
-    /// Drive to completion; returns all completions.
+    /// Drive to completion; returns all completions (cancelled
+    /// requests terminate their streams but produce no completion).
     pub fn run_to_completion(&mut self, metrics: &Metrics) -> Vec<Completion> {
         let mut all = Vec::new();
         while self.pending() > 0 {
@@ -188,33 +272,36 @@ impl Batcher {
 mod tests {
     use super::*;
     use crate::config::ModelConfig;
+    use crate::coordinator::request::{Priority, SamplingParams, StopCondition};
     use crate::moe::model::tests::random_model;
 
     fn engine() -> Arc<MoeModel> {
         Arc::new(random_model(&ModelConfig::test_tiny(), 0))
     }
 
-    fn req(id: u64, n: usize) -> Request {
-        Request {
-            id,
-            prompt: vec![1, 5, 80 + id as u32 % 8, 3],
-            max_new_tokens: n,
-            temperature: None,
-        }
+    fn req(tag: u64, n: usize) -> GenerateRequest {
+        GenerateRequest::greedy(vec![1, 5, 80 + tag as u32 % 8, 3], n)
     }
 
     #[test]
     fn completes_all_requests() {
         let metrics = Metrics::new();
         let mut b = Batcher::new(engine(), None, 2);
-        for i in 0..5 {
-            b.submit(req(i, 4));
-        }
+        let handles: Vec<RequestHandle> =
+            (0..5).map(|i| b.submit(req(i, 4))).collect();
         let done = b.run_to_completion(&metrics);
         assert_eq!(done.len(), 5);
         for c in &done {
             assert!(!c.tokens.is_empty() && c.tokens.len() <= 4);
             assert!(c.ttft_ns > 0);
+        }
+        // every handle's stream delivered the same tokens as the
+        // returned completion, in order
+        for h in handles {
+            let id = h.id;
+            let c = h.wait().expect("completion");
+            let want = done.iter().find(|d| d.id == id).unwrap();
+            assert_eq!(c.tokens, want.tokens);
         }
         assert_eq!(metrics.requests_completed.load(
             std::sync::atomic::Ordering::Relaxed), 5);
@@ -229,6 +316,10 @@ mod tests {
         }
         b.step(&metrics);
         assert_eq!(b.occupancy(), 2);
+        assert_eq!(metrics.batch_occupancy.load(
+            std::sync::atomic::Ordering::Relaxed), 2);
+        assert_eq!(metrics.queue_depth.load(
+            std::sync::atomic::Ordering::Relaxed), 4);
     }
 
     #[test]
@@ -257,12 +348,11 @@ mod tests {
             .collect();
         let m = Metrics::new();
         let mut b = Batcher::new(engine(), None, 4);
-        for i in 0..4 {
-            b.submit(req(i, 6));
-        }
+        let ids: Vec<u64> = (0..4).map(|i| b.submit(req(i, 6)).id).collect();
         let done = b.run_to_completion(&m);
         for c in done {
-            assert_eq!(c.tokens, solo[c.id as usize], "request {}", c.id);
+            let slot = ids.iter().position(|&id| id == c.id).unwrap();
+            assert_eq!(c.tokens, solo[slot], "request {}", c.id);
         }
     }
 
@@ -270,11 +360,101 @@ mod tests {
     fn sampling_differs_from_greedy() {
         let metrics = Metrics::new();
         let mut b = Batcher::new(engine(), None, 2);
-        b.submit(Request { temperature: Some((5.0, 7)), ..req(0, 8) });
-        b.submit(req(1, 8));
-        let done = b.run_to_completion(&metrics);
-        let a = done.iter().find(|c| c.id == 0).unwrap();
-        let g = done.iter().find(|c| c.id == 1).unwrap();
+        let sampled = b.submit(
+            req(0, 8).with_sampling(SamplingParams::temperature(5.0, 7)));
+        let greedy = b.submit(req(0, 8));
+        b.run_to_completion(&metrics);
+        let a = sampled.wait().unwrap();
+        let g = greedy.wait().unwrap();
         assert_ne!(a.tokens, g.tokens);
+    }
+
+    #[test]
+    fn cancelled_queued_request_never_runs() {
+        let metrics = Metrics::new();
+        let mut b = Batcher::new(engine(), None, 1);
+        b.submit(req(0, 4));
+        let victim = b.submit(req(1, 4));
+        victim.cancel();
+        let done = b.run_to_completion(&metrics);
+        assert_eq!(done.len(), 1);
+        assert!(victim.wait().is_none());
+        assert_eq!(metrics.requests_cancelled.load(
+            std::sync::atomic::Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn cancel_mid_decode_frees_slot_and_admits_queue() {
+        let metrics = Metrics::new();
+        let mut b = Batcher::new(engine(), None, 1);
+        let victim = b.submit(req(0, 64).with_stop(StopCondition::MaxLen));
+        let waiting = b.submit(req(1, 3));
+        b.step(&metrics); // victim occupies the only slot
+        assert_eq!(b.occupancy(), 1);
+        victim.cancel();
+        b.step(&metrics); // slot freed, waiting admitted + first token
+        assert_eq!(b.occupancy(), 1);
+        let done = b.run_to_completion(&metrics);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].id, waiting.id);
+        assert!(victim.wait().is_none());
+        assert!(waiting.wait().is_some());
+    }
+
+    #[test]
+    fn empty_prompt_rejected_zero_max_new_is_noop() {
+        let metrics = Metrics::new();
+        let mut b = Batcher::new(engine(), None, 1);
+        // saturate the only slot, then submit degenerates: they must
+        // resolve immediately, not wait for the slot to free
+        b.submit(req(0, 8));
+        b.step(&metrics);
+        let empty = b.submit(GenerateRequest::greedy(Vec::new(), 4));
+        let noop = b.submit(GenerateRequest::greedy(vec![1, 5], 0));
+        let step_done = b.step(&metrics);
+        assert!(step_done.iter().any(|c| c.id == empty.id),
+                "rejected while the batch is full");
+        assert!(step_done.iter().any(|c| c.id == noop.id));
+        assert_eq!(empty.wait().unwrap().finish, FinishReason::Rejected);
+        assert_eq!(noop.wait().unwrap().finish, FinishReason::MaxTokens);
+        use std::sync::atomic::Ordering;
+        assert_eq!(metrics.requests_rejected.load(Ordering::Relaxed), 1);
+        b.run_to_completion(&metrics);
+    }
+
+    #[test]
+    fn priority_admission_order() {
+        let metrics = Metrics::new();
+        let mut b = Batcher::new(engine(), None, 1);
+        // occupy the slot so later submissions queue up
+        b.submit(req(0, 2));
+        b.step(&metrics);
+        let low = b.submit(req(1, 2).with_priority(Priority::Low));
+        let high = b.submit(req(2, 2).with_priority(Priority::High));
+        let done = b.run_to_completion(&metrics);
+        let pos = |id| done.iter().position(|c| c.id == id).unwrap();
+        assert!(pos(high.id) < pos(low.id),
+                "high priority admitted before low");
+    }
+
+    #[test]
+    fn stop_token_set_honored() {
+        let metrics = Metrics::new();
+        let mut b = Batcher::new(engine(), None, 1);
+        // run greedy once to learn the second emitted token...
+        let probe = b.submit(req(0, 4).with_stop(StopCondition::MaxLen));
+        b.run_to_completion(&metrics);
+        let probe_tokens = probe.wait().unwrap().tokens;
+        assert_eq!(probe_tokens.len(), 4);
+        // ...then make that token a stop token: generation ends at
+        // its first occurrence (greedy replay is deterministic)
+        let stop_at = probe_tokens[1];
+        let first = probe_tokens.iter().position(|&t| t == stop_at).unwrap();
+        let h = b.submit(req(0, 4)
+            .with_stop(StopCondition::StopTokens(vec![stop_at])));
+        let done = b.run_to_completion(&metrics);
+        assert_eq!(done[0].tokens, probe_tokens[..=first].to_vec());
+        assert_eq!(done[0].finish, FinishReason::Stop(stop_at));
+        drop(h);
     }
 }

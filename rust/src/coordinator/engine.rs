@@ -1,6 +1,9 @@
 //! McEngine: the compressed-model serving facade — scoring with ODP,
-//! greedy/sampled generation, and memory/throughput reporting. This is
-//! what `mc-moe serve` and the examples drive.
+//! and single-request generation driven by the unified
+//! `GenerateRequest`/`SamplingParams`/`StopCondition` surface (the
+//! same types the batcher and server consume, sampled by the same
+//! shared `Sampler`). This is what `mc-moe generate` and the examples
+//! drive for one-off requests; batched serving goes through `Server`.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -13,6 +16,8 @@ use crate::tensor::Mat;
 use super::decode::{DecodeOdp, DecodeSession};
 use super::memmodel;
 use super::metrics::Metrics;
+use super::request::{Completion, FinishReason, GenerateRequest};
+use super::sampling::Sampler;
 
 pub struct McEngine {
     pub model: Arc<MoeModel>,
@@ -44,34 +49,61 @@ impl McEngine {
         out.logits
     }
 
-    /// Greedy generation via the KV-cache decode path. Records TTFT
-    /// (batched prefill + first logits) and per-token decode latency,
-    /// so `tokens_per_sec()` / `mc_ttft_ms_mean` are live on the
-    /// single-request path, not just under the batcher.
-    pub fn generate(&self, prompt: &[u32], max_new: usize) -> Result<Vec<u32>> {
-        anyhow::ensure!(!prompt.is_empty(), "empty prompt");
+    /// Run one `GenerateRequest` to completion on the KV-cache decode
+    /// path, streaming each produced token to `on_token` as it is
+    /// sampled. Records TTFT (batched prefill + first logits) and
+    /// per-token decode latency, so `tokens_per_sec()` /
+    /// `mc_ttft_ms_mean` are live on the single-request path, not
+    /// just under the batcher.
+    pub fn generate_stream(
+        &self,
+        req: &GenerateRequest,
+        mut on_token: impl FnMut(u32),
+    ) -> Result<Completion> {
+        anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
+        Metrics::inc(&self.metrics.requests_admitted, 1);
+        let mut sampler = Sampler::new(req.sampling.clone());
         let mut sess =
             DecodeSession::new(self.model.clone(), self.decode_odp.clone());
         let started = Instant::now();
-        let logits = sess.prefill(prompt);
-        let mut out = Vec::with_capacity(max_new);
-        let mut next = crate::util::stats::argmax(&logits) as u32;
-        self.metrics.record_ttft(started.elapsed().as_nanos() as u64);
-        for _ in 0..max_new {
-            out.push(next);
-            if next == crate::config::EOS || sess.remaining() == 0 {
+        let mut logits = sess.prefill(&req.prompt);
+        let ttft_ns = started.elapsed().as_nanos() as u64;
+        self.metrics.record_ttft(ttft_ns);
+        let mut tokens = Vec::with_capacity(req.max_new_tokens);
+        let mut finish = FinishReason::MaxTokens;
+        while tokens.len() < req.max_new_tokens {
+            let next = sampler.next_token(&logits);
+            tokens.push(next);
+            on_token(next);
+            if req.stop.hits(next) {
+                finish = FinishReason::Stop(next);
+                break;
+            }
+            if tokens.len() >= req.max_new_tokens || sess.remaining() == 0 {
                 break;
             }
             let t0 = Instant::now();
-            let logits = sess.step(next);
+            logits = sess.step(next);
             self.metrics.record_tpot(t0.elapsed().as_nanos() as u64);
-            next = crate::util::stats::argmax(&logits) as u32;
         }
-        Metrics::inc(&self.metrics.tokens_generated, out.len() as u64);
-        Metrics::inc(&self.metrics.expert_calls, sess.stats.expert_calls as u64);
+        Metrics::inc(&self.metrics.tokens_generated, tokens.len() as u64);
+        Metrics::inc(&self.metrics.requests_completed, 1);
+        Metrics::inc(&self.metrics.expert_calls,
+                     sess.stats.expert_calls as u64);
         Metrics::inc(&self.metrics.experts_pruned,
                      sess.stats.pruned_total() as u64);
-        Ok(out)
+        Ok(Completion {
+            id: 0,
+            tokens,
+            finish,
+            ttft_ns,
+            total_ns: started.elapsed().as_nanos() as u64,
+        })
+    }
+
+    /// `generate_stream` without a token callback.
+    pub fn generate(&self, req: &GenerateRequest) -> Result<Completion> {
+        self.generate_stream(req, |_| {})
     }
 
     /// One-line deployment summary (Tab. 4-style row).
@@ -93,17 +125,30 @@ impl McEngine {
 mod tests {
     use super::*;
     use crate::config::ModelConfig;
+    use crate::coordinator::request::StopCondition;
     use crate::moe::model::tests::random_model;
 
     #[test]
     fn generate_terminates_and_counts() {
         let cfg = ModelConfig::test_tiny();
         let engine = McEngine::new(random_model(&cfg, 0), None, None);
-        let out = engine.generate(&[1, 5, 80, 3], 8).unwrap();
-        assert!(!out.is_empty() && out.len() <= 8);
+        let req = GenerateRequest::greedy(vec![1, 5, 80, 3], 8);
+        let out = engine.generate(&req).unwrap();
+        assert!(!out.tokens.is_empty() && out.tokens.len() <= 8);
         assert!(engine.metrics.tokens_generated.load(
-            std::sync::atomic::Ordering::Relaxed) as usize == out.len());
+            std::sync::atomic::Ordering::Relaxed) as usize
+            == out.tokens.len());
         assert!(engine.summary().contains("model=test"));
+    }
+
+    #[test]
+    fn generate_streams_tokens_in_order() {
+        let cfg = ModelConfig::test_tiny();
+        let engine = McEngine::new(random_model(&cfg, 3), None, None);
+        let req = GenerateRequest::greedy(vec![1, 5, 80, 3], 6);
+        let mut streamed = Vec::new();
+        let out = engine.generate_stream(&req, |t| streamed.push(t)).unwrap();
+        assert_eq!(streamed, out.tokens);
     }
 
     #[test]
@@ -111,14 +156,26 @@ mod tests {
         // single-request path must feed TTFT/TPOT (not just Batcher)
         let cfg = ModelConfig::test_tiny();
         let engine = McEngine::new(random_model(&cfg, 2), None, None);
-        let out = engine.generate(&[1, 5, 80, 3], 6).unwrap();
+        let req = GenerateRequest::greedy(vec![1, 5, 80, 3], 6);
+        let out = engine.generate(&req).unwrap();
         assert_eq!(engine.metrics.ttft_ns.lock().unwrap().len(), 1);
-        if out.len() > 1 {
+        if out.tokens.len() > 1 {
             // at least one decode step ran -> TPOT samples exist
             assert!(!engine.metrics.tpot_ns.lock().unwrap().is_empty());
             assert!(engine.metrics.tokens_per_sec() > 0.0);
         }
         assert!(engine.metrics.render_text().contains("mc_ttft_ms_mean"));
+    }
+
+    #[test]
+    fn max_len_stop_ignores_eos() {
+        let cfg = ModelConfig::test_tiny();
+        let engine = McEngine::new(random_model(&cfg, 0), None, None);
+        let req = GenerateRequest::greedy(vec![1, 5, 80, 3], 8)
+            .with_stop(StopCondition::MaxLen);
+        let out = engine.generate(&req).unwrap();
+        assert_eq!(out.tokens.len(), 8);
+        assert_eq!(out.finish, FinishReason::MaxTokens);
     }
 
     #[test]

@@ -1,20 +1,91 @@
-//! Serving metrics: counters + latency records, printable as a
-//! prometheus-style text block or JSON.
+//! Serving metrics: counters, gauges, and bounded latency records,
+//! printable as a prometheus-style text block.
+//!
+//! Latency samples (TTFT / per-token) live in fixed-capacity rings so
+//! a long-lived server's memory stays O(1) no matter how many
+//! requests it has served; summary statistics are over the most
+//! recent `RING_CAP` samples (a sliding window, which is also what an
+//! operator wants from a live gauge).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
+
+/// Retained latency samples per series.
+pub const RING_CAP: usize = 4096;
+
+/// Fixed-capacity overwrite-oldest sample buffer.
+#[derive(Debug)]
+pub struct LatencyRing {
+    cap: usize,
+    buf: Vec<u64>,
+    next: usize,
+    /// lifetime pushes (>= buf.len(); buf holds the most recent cap)
+    total: u64,
+}
+
+impl Default for LatencyRing {
+    fn default() -> LatencyRing {
+        LatencyRing::with_capacity(RING_CAP)
+    }
+}
+
+impl LatencyRing {
+    pub fn with_capacity(cap: usize) -> LatencyRing {
+        assert!(cap > 0);
+        LatencyRing { cap, buf: Vec::new(), next: 0, total: 0 }
+    }
+
+    pub fn push(&mut self, v: u64) {
+        if self.buf.len() < self.cap {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+            self.next = (self.next + 1) % self.cap;
+        }
+        self.total += 1;
+    }
+
+    /// Samples currently held (<= capacity).
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Lifetime number of pushes.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Mean of the retained window (0.0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.buf.is_empty() {
+            return 0.0;
+        }
+        self.buf.iter().sum::<u64>() as f64 / self.buf.len() as f64
+    }
+}
 
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub requests_admitted: AtomicU64,
     pub requests_completed: AtomicU64,
+    pub requests_cancelled: AtomicU64,
+    /// invalid requests (empty prompt) turned away at admission
+    pub requests_rejected: AtomicU64,
     pub tokens_generated: AtomicU64,
     pub expert_calls: AtomicU64,
     pub experts_pruned: AtomicU64,
-    /// time-to-first-token samples (ns)
-    pub ttft_ns: Mutex<Vec<u64>>,
-    /// per-token decode latencies (ns)
-    pub tpot_ns: Mutex<Vec<u64>>,
+    /// gauge: requests waiting in the admission queue (set per step)
+    pub queue_depth: AtomicU64,
+    /// gauge: active decode sessions in the fused batch (set per step)
+    pub batch_occupancy: AtomicU64,
+    /// time-to-first-token samples (ns), last `RING_CAP` retained
+    pub ttft_ns: Mutex<LatencyRing>,
+    /// per-token decode latencies (ns), last `RING_CAP` retained
+    pub tpot_ns: Mutex<LatencyRing>,
 }
 
 impl Metrics {
@@ -26,6 +97,10 @@ impl Metrics {
         counter.fetch_add(by, Ordering::Relaxed);
     }
 
+    pub fn set_gauge(gauge: &AtomicU64, v: u64) {
+        gauge.store(v, Ordering::Relaxed);
+    }
+
     pub fn record_ttft(&self, ns: u64) {
         self.ttft_ns.lock().unwrap().push(ns);
     }
@@ -35,11 +110,10 @@ impl Metrics {
     }
 
     pub fn tokens_per_sec(&self) -> f64 {
-        let tpot = self.tpot_ns.lock().unwrap();
-        if tpot.is_empty() {
+        let mean_ns = self.tpot_ns.lock().unwrap().mean();
+        if mean_ns == 0.0 {
             return 0.0;
         }
-        let mean_ns = tpot.iter().sum::<u64>() as f64 / tpot.len() as f64;
         1e9 / mean_ns
     }
 
@@ -53,25 +127,27 @@ impl Metrics {
     }
 
     pub fn render_text(&self) -> String {
-        let ttft = self.ttft_ns.lock().unwrap();
-        let ttft_ms = if ttft.is_empty() {
-            0.0
-        } else {
-            ttft.iter().sum::<u64>() as f64 / ttft.len() as f64 / 1e6
-        };
+        let ttft_ms = self.ttft_ns.lock().unwrap().mean() / 1e6;
         format!(
             "mc_requests_admitted {}\nmc_requests_completed {}\n\
-             mc_tokens_generated {}\nmc_tokens_per_sec {:.2}\n\
+             mc_requests_cancelled {}\nmc_requests_rejected {}\n\
+             mc_tokens_generated {}\n\
+             mc_tokens_per_sec {:.2}\n\
              mc_expert_calls {}\nmc_experts_pruned {}\n\
-             mc_prune_ratio {:.4}\nmc_ttft_ms_mean {:.3}\n",
+             mc_prune_ratio {:.4}\nmc_ttft_ms_mean {:.3}\n\
+             mc_queue_depth {}\nmc_batch_occupancy {}\n",
             self.requests_admitted.load(Ordering::Relaxed),
             self.requests_completed.load(Ordering::Relaxed),
+            self.requests_cancelled.load(Ordering::Relaxed),
+            self.requests_rejected.load(Ordering::Relaxed),
             self.tokens_generated.load(Ordering::Relaxed),
             self.tokens_per_sec(),
             self.expert_calls.load(Ordering::Relaxed),
             self.experts_pruned.load(Ordering::Relaxed),
             self.prune_ratio(),
             ttft_ms,
+            self.queue_depth.load(Ordering::Relaxed),
+            self.batch_occupancy.load(Ordering::Relaxed),
         )
     }
 }
@@ -86,6 +162,8 @@ mod tests {
         Metrics::inc(&m.requests_admitted, 2);
         Metrics::inc(&m.expert_calls, 90);
         Metrics::inc(&m.experts_pruned, 10);
+        Metrics::set_gauge(&m.queue_depth, 3);
+        Metrics::set_gauge(&m.batch_occupancy, 4);
         m.record_ttft(2_000_000);
         m.record_tpot(1_000_000);
         assert!((m.prune_ratio() - 0.1).abs() < 1e-9);
@@ -93,5 +171,30 @@ mod tests {
         let text = m.render_text();
         assert!(text.contains("mc_requests_admitted 2"));
         assert!(text.contains("mc_prune_ratio 0.1000"));
+        assert!(text.contains("mc_queue_depth 3"));
+        assert!(text.contains("mc_batch_occupancy 4"));
+    }
+
+    #[test]
+    fn ring_is_bounded_and_windows() {
+        let mut r = LatencyRing::with_capacity(4);
+        for v in 1..=10u64 {
+            r.push(v);
+        }
+        assert_eq!(r.len(), 4);
+        assert_eq!(r.total(), 10);
+        // retains the last 4 pushes {7,8,9,10}
+        assert!((r.mean() - 8.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn metrics_latency_storage_is_bounded() {
+        let m = Metrics::new();
+        for i in 0..(RING_CAP as u64 + 100) {
+            m.record_tpot(i);
+        }
+        let tpot = m.tpot_ns.lock().unwrap();
+        assert_eq!(tpot.len(), RING_CAP);
+        assert_eq!(tpot.total(), RING_CAP as u64 + 100);
     }
 }

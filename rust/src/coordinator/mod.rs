@@ -4,6 +4,12 @@
 //! threaded request server, the device memory model (Tab. 4/13/14),
 //! and metrics.
 //!
+//! One request surface (`request::GenerateRequest` + `SamplingParams`
+//! + `StopCondition`) feeds every path — `McEngine` (single request),
+//! `Batcher` (fused continuous batching), `Server` (threaded) — with
+//! all sampling in `sampling::Sampler` and per-token streaming +
+//! cancellation over `RequestHandle` (DESIGN.md §3.1).
+//!
 //! Rust owns the event loop and process topology; python exists only
 //! at build time (DESIGN.md §3).
 
@@ -12,11 +18,18 @@ pub mod decode;
 pub mod engine;
 pub mod memmodel;
 pub mod metrics;
+pub mod request;
+pub mod sampling;
 pub mod server;
 
-pub use batcher::{Batcher, Request};
+pub use batcher::Batcher;
 pub use decode::{step_many, DecodeOdp, DecodeSession};
 pub use engine::McEngine;
 pub use memmodel::{Platform, PLATFORMS};
 pub use metrics::Metrics;
+pub use request::{
+    Completion, FinishReason, GenerateRequest, Priority, RequestHandle,
+    SamplingParams, StopCondition, StreamEvent,
+};
+pub use sampling::Sampler;
 pub use server::Server;

@@ -1,0 +1,383 @@
+//! The unified request surface: every serving path — `McEngine`
+//! (single request), `Batcher` (continuous batching), `Server`
+//! (threaded) — consumes the same `GenerateRequest` and produces the
+//! same `Completion`, streamed incrementally as `StreamEvent`s over a
+//! per-request channel. A `RequestHandle` is the client side of that
+//! channel: iterate streamed tokens, `wait()` for the completion, or
+//! `cancel()` mid-flight (DESIGN.md §3.1).
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{
+    channel, Receiver, RecvTimeoutError, Sender, TryRecvError,
+};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::config::EOS;
+
+/// How to pick the next token from the logits. `Default` is greedy
+/// (argmax); any `temperature > 0` enables Gumbel-max sampling with
+/// optional top-k / top-p truncation, deterministically seeded.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SamplingParams {
+    /// 0.0 = greedy argmax; > 0.0 = sample from logits/temperature
+    pub temperature: f32,
+    /// keep only the k highest logits before sampling (0 = off)
+    pub top_k: usize,
+    /// keep the smallest prefix of the sorted distribution whose
+    /// cumulative probability reaches p (1.0 = off)
+    pub top_p: f32,
+    /// per-request RNG seed; same seed + same logits = same tokens
+    pub seed: u64,
+}
+
+impl Default for SamplingParams {
+    fn default() -> SamplingParams {
+        SamplingParams { temperature: 0.0, top_k: 0, top_p: 1.0, seed: 1 }
+    }
+}
+
+impl SamplingParams {
+    pub fn greedy() -> SamplingParams {
+        SamplingParams::default()
+    }
+
+    pub fn temperature(temp: f32, seed: u64) -> SamplingParams {
+        SamplingParams { temperature: temp, seed, ..Default::default() }
+    }
+
+    pub fn is_greedy(&self) -> bool {
+        self.temperature <= 0.0
+    }
+}
+
+/// When generation ends (besides `max_new_tokens`, which always caps).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum StopCondition {
+    /// stop when the model emits EOS (the classic default)
+    #[default]
+    Eos,
+    /// stop on any token in the set (EOS only if listed)
+    StopTokens(Vec<u32>),
+    /// never stop early: run to max_new_tokens / KV exhaustion
+    MaxLen,
+}
+
+impl StopCondition {
+    /// Does emitting `token` end the request?
+    pub fn hits(&self, token: u32) -> bool {
+        match self {
+            StopCondition::Eos => token == EOS,
+            StopCondition::StopTokens(set) => set.contains(&token),
+            StopCondition::MaxLen => false,
+        }
+    }
+}
+
+/// Admission priority: higher classes are admitted first; FIFO within
+/// a class (no preemption of already-running sessions).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub enum Priority {
+    High = 0,
+    #[default]
+    Normal = 1,
+    Low = 2,
+}
+
+/// The one request type every serving path consumes.
+#[derive(Debug, Clone, Default)]
+pub struct GenerateRequest {
+    pub prompt: Vec<u32>,
+    pub max_new_tokens: usize,
+    pub sampling: SamplingParams,
+    pub stop: StopCondition,
+    pub priority: Priority,
+}
+
+impl GenerateRequest {
+    /// Greedy request with default stop/priority — the common case.
+    pub fn greedy(prompt: Vec<u32>, max_new_tokens: usize) -> GenerateRequest {
+        GenerateRequest { prompt, max_new_tokens, ..Default::default() }
+    }
+
+    pub fn with_sampling(mut self, sampling: SamplingParams) -> GenerateRequest {
+        self.sampling = sampling;
+        self
+    }
+
+    pub fn with_stop(mut self, stop: StopCondition) -> GenerateRequest {
+        self.stop = stop;
+        self
+    }
+
+    pub fn with_priority(mut self, priority: Priority) -> GenerateRequest {
+        self.priority = priority;
+        self
+    }
+}
+
+/// Why a completion ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishReason {
+    /// a `StopCondition` token was emitted (EOS or a stop-set member)
+    Stop(u32),
+    /// `max_new_tokens` reached, or the KV cache ran out of rows
+    MaxTokens,
+    Cancelled,
+    /// invalid request (empty prompt) — the engine path returns an
+    /// error for the same input; the batched paths report it here
+    Rejected,
+}
+
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: u64,
+    pub tokens: Vec<u32>,
+    pub finish: FinishReason,
+    pub ttft_ns: u64,
+    pub total_ns: u64,
+}
+
+/// Incremental per-request events: one `Token` per decode step as the
+/// fused batcher produces it, terminated by exactly one `Done` or
+/// `Cancelled`.
+#[derive(Debug, Clone)]
+pub enum StreamEvent {
+    Token(u32),
+    Done(Completion),
+    Cancelled { id: u64 },
+}
+
+/// Server/batcher side of a request: where to stream events, and the
+/// flag the client's `cancel()` raises.
+#[derive(Debug, Clone)]
+pub struct RequestTicket {
+    pub id: u64,
+    pub stream: Sender<StreamEvent>,
+    pub cancel: Arc<AtomicBool>,
+}
+
+impl RequestTicket {
+    pub fn cancelled(&self) -> bool {
+        self.cancel.load(Ordering::Relaxed)
+    }
+
+    /// Best-effort send (the client may have dropped its handle).
+    pub fn send(&self, ev: StreamEvent) {
+        let _ = self.stream.send(ev);
+    }
+}
+
+/// Client side of a submitted request.
+pub struct RequestHandle {
+    pub id: u64,
+    cancel: Arc<AtomicBool>,
+    rx: Receiver<StreamEvent>,
+    done: Option<Completion>,
+    cancelled: bool,
+    /// the server dropped the stream without a terminal event
+    disconnected: bool,
+}
+
+/// Create the two halves of a request's stream.
+pub fn request_channel(id: u64) -> (RequestTicket, RequestHandle) {
+    let (tx, rx) = channel();
+    let cancel = Arc::new(AtomicBool::new(false));
+    let ticket = RequestTicket { id, stream: tx, cancel: cancel.clone() };
+    let handle = RequestHandle {
+        id,
+        cancel,
+        rx,
+        done: None,
+        cancelled: false,
+        disconnected: false,
+    };
+    (ticket, handle)
+}
+
+impl RequestHandle {
+    /// Raise the cancel flag; the serving loop retires the session at
+    /// its next step and replies with `StreamEvent::Cancelled`.
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
+    /// Record a terminal event's state so both the blocking and
+    /// non-blocking receive paths stay in sync.
+    fn note(&mut self, ev: &StreamEvent) {
+        match ev {
+            StreamEvent::Done(c) => self.done = Some(c.clone()),
+            StreamEvent::Cancelled { .. } => self.cancelled = true,
+            StreamEvent::Token(_) => {}
+        }
+    }
+
+    /// Has the stream terminated (Done, Cancelled, or server gone)?
+    /// Polling clients should stop once this is true.
+    pub fn is_terminated(&self) -> bool {
+        self.done.is_some() || self.cancelled || self.disconnected
+    }
+
+    /// Next event, blocking. `None` once the stream has terminated
+    /// (after `Done`/`Cancelled` or if the server went away).
+    pub fn next_event(&mut self) -> Option<StreamEvent> {
+        if self.is_terminated() {
+            return None;
+        }
+        match self.rx.recv() {
+            Ok(ev) => {
+                self.note(&ev);
+                Some(ev)
+            }
+            Err(_) => {
+                self.disconnected = true;
+                None
+            }
+        }
+    }
+
+    /// Non-blocking variant of `next_event`: `None` means "no event
+    /// yet" until `is_terminated()` reports the stream is over.
+    pub fn try_next_event(&mut self) -> Option<StreamEvent> {
+        if self.is_terminated() {
+            return None;
+        }
+        match self.rx.try_recv() {
+            Ok(ev) => {
+                self.note(&ev);
+                Some(ev)
+            }
+            Err(TryRecvError::Empty) => None,
+            Err(TryRecvError::Disconnected) => {
+                self.disconnected = true;
+                None
+            }
+        }
+    }
+
+    /// Blocking iterator over streamed tokens; ends at `Done` or
+    /// `Cancelled` (query `completion()`/`was_cancelled()` after).
+    pub fn tokens(&mut self) -> TokenIter<'_> {
+        TokenIter { handle: self }
+    }
+
+    /// Drain the stream to termination; `Some(completion)` unless the
+    /// request was cancelled or the server dropped the stream.
+    pub fn wait(mut self) -> Option<Completion> {
+        while self.next_event().is_some() {}
+        self.done
+    }
+
+    /// `wait` with a deadline: blocks until the stream terminates or
+    /// `timeout` elapses. Returns the completion if the request
+    /// finished; `None` on timeout, cancellation, or disconnect
+    /// (`is_terminated()` distinguishes a timeout — still false —
+    /// from a terminated stream). The handle stays usable, so callers
+    /// can keep waiting or `cancel()` after a timeout.
+    pub fn wait_timeout(&mut self, timeout: Duration) -> Option<Completion> {
+        let deadline = Instant::now() + timeout;
+        while !self.is_terminated() {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match self.rx.recv_timeout(deadline - now) {
+                Ok(ev) => self.note(&ev),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => {
+                    self.disconnected = true;
+                }
+            }
+        }
+        self.done.clone()
+    }
+
+    /// The completion, if the stream has already delivered `Done`.
+    pub fn completion(&self) -> Option<&Completion> {
+        self.done.as_ref()
+    }
+
+    pub fn was_cancelled(&self) -> bool {
+        self.cancelled
+    }
+}
+
+pub struct TokenIter<'a> {
+    handle: &'a mut RequestHandle,
+}
+
+impl Iterator for TokenIter<'_> {
+    type Item = u32;
+
+    fn next(&mut self) -> Option<u32> {
+        loop {
+            match self.handle.next_event()? {
+                StreamEvent::Token(t) => return Some(t),
+                StreamEvent::Done(_) | StreamEvent::Cancelled { .. } => {
+                    return None
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stop_condition_semantics() {
+        assert!(StopCondition::Eos.hits(EOS));
+        assert!(!StopCondition::Eos.hits(7));
+        let set = StopCondition::StopTokens(vec![7, 9]);
+        assert!(set.hits(7) && set.hits(9));
+        assert!(!set.hits(EOS), "EOS only stops the set if listed");
+        assert!(!StopCondition::MaxLen.hits(EOS));
+    }
+
+    #[test]
+    fn handle_streams_tokens_then_done() {
+        let (ticket, mut handle) = request_channel(3);
+        ticket.send(StreamEvent::Token(10));
+        ticket.send(StreamEvent::Token(11));
+        ticket.send(StreamEvent::Done(Completion {
+            id: 3,
+            tokens: vec![10, 11],
+            finish: FinishReason::MaxTokens,
+            ttft_ns: 1,
+            total_ns: 2,
+        }));
+        let toks: Vec<u32> = handle.tokens().collect();
+        assert_eq!(toks, vec![10, 11]);
+        assert_eq!(handle.completion().unwrap().tokens, vec![10, 11]);
+        assert!(!handle.was_cancelled());
+    }
+
+    #[test]
+    fn handle_wait_sees_cancellation() {
+        let (ticket, handle) = request_channel(4);
+        handle.cancel();
+        assert!(ticket.cancelled());
+        ticket.send(StreamEvent::Cancelled { id: 4 });
+        assert!(handle.wait().is_none());
+    }
+
+    #[test]
+    fn dropped_server_terminates_stream() {
+        let (ticket, mut handle) = request_channel(9);
+        ticket.send(StreamEvent::Token(1));
+        drop(ticket);
+        // buffered events still drain, then the drop is detected
+        assert!(matches!(handle.try_next_event(),
+                         Some(StreamEvent::Token(1))));
+        assert!(handle.try_next_event().is_none());
+        assert!(handle.is_terminated());
+        assert!(handle.completion().is_none());
+    }
+
+    #[test]
+    fn priority_orders() {
+        assert!(Priority::High < Priority::Normal);
+        assert!(Priority::Normal < Priority::Low);
+    }
+}

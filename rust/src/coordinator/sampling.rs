@@ -1,0 +1,184 @@
+//! The one sampler. Every serving path (engine single-request decode,
+//! fused batcher, server) turns logits into tokens through `Sampler`,
+//! so greedy/temperature/top-k/top-p semantics cannot drift between
+//! paths — same `SamplingParams` + same seed + same logits = same
+//! tokens, regardless of which path ran them.
+//!
+//! Sampling is Gumbel-max over the temperature-scaled logits after
+//! top-k / top-p truncation: argmax_i (l_i/T + g_i) with g_i standard
+//! Gumbel noise from a per-request splitmix64 stream keyed by an LCG
+//! chain off the request seed (one chain step per emitted token).
+
+use crate::util::rng::{lcg_next, Rng};
+use crate::util::stats::argmax;
+
+use super::request::SamplingParams;
+
+#[derive(Debug, Clone)]
+pub struct Sampler {
+    params: SamplingParams,
+    rng_state: u64,
+}
+
+impl Sampler {
+    pub fn new(params: SamplingParams) -> Sampler {
+        let rng_state = params.seed;
+        Sampler { params, rng_state }
+    }
+
+    pub fn greedy() -> Sampler {
+        Sampler::new(SamplingParams::greedy())
+    }
+
+    pub fn params(&self) -> &SamplingParams {
+        &self.params
+    }
+
+    /// Pick the next token from `logits`, advancing the RNG stream iff
+    /// the params call for sampling.
+    pub fn next_token(&mut self, logits: &[f32]) -> u32 {
+        if self.params.is_greedy() {
+            return argmax(logits) as u32;
+        }
+        let temp = self.params.temperature;
+        let scaled: Vec<f32> = logits.iter().map(|l| l / temp).collect();
+        self.rng_state = lcg_next(self.rng_state);
+        let mut rng = Rng::new(self.rng_state);
+        let k = self.params.top_k;
+        let p = self.params.top_p;
+        if (k == 0 || k >= scaled.len()) && p >= 1.0 {
+            // no truncation: no sort, no index Vec on the hot path
+            return gumbel_pick(&mut rng, &scaled, 0..scaled.len()) as u32;
+        }
+        let allowed = self.allowed_indices(&scaled);
+        gumbel_pick(&mut rng, &scaled, allowed.iter().copied()) as u32
+    }
+
+    /// Indices surviving top-k then top-p truncation of the scaled
+    /// logits, in ascending index order (never empty: the argmax
+    /// always survives both filters).
+    fn allowed_indices(&self, scaled: &[f32]) -> Vec<usize> {
+        let k = self.params.top_k;
+        let p = self.params.top_p;
+        let mut order: Vec<usize> = (0..scaled.len()).collect();
+        order.sort_by(|&a, &b| {
+            scaled[b].partial_cmp(&scaled[a]).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        if k > 0 && k < order.len() {
+            order.truncate(k);
+        }
+        if p < 1.0 {
+            // softmax over the (already top-k-truncated) candidates
+            let m = scaled[order[0]];
+            let exps: Vec<f64> = order
+                .iter()
+                .map(|&i| ((scaled[i] - m) as f64).exp())
+                .collect();
+            let z: f64 = exps.iter().sum();
+            let mut cum = 0.0;
+            let mut keep = order.len();
+            for (rank, e) in exps.iter().enumerate() {
+                cum += e / z;
+                if cum >= p as f64 {
+                    keep = rank + 1;
+                    break;
+                }
+            }
+            order.truncate(keep.max(1));
+        }
+        order.sort_unstable();
+        order
+    }
+}
+
+/// Gumbel-max over `scaled` restricted to `idxs` (ascending index
+/// order keeps the per-candidate draw sequence deterministic).
+fn gumbel_pick(rng: &mut Rng, scaled: &[f32],
+               idxs: impl IntoIterator<Item = usize>) -> usize {
+    let mut best: Option<(usize, f32)> = None;
+    for i in idxs {
+        let g = -(-(rng.f64().max(1e-12).ln())).ln() as f32;
+        let v = scaled[i] + g;
+        let better = match best {
+            None => true,
+            Some((_, bv)) => v > bv,
+        };
+        if better {
+            best = Some((i, v));
+        }
+    }
+    best.expect("non-empty candidate set").0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn logits() -> Vec<f32> {
+        vec![0.1, 2.0, -1.0, 1.5, 0.0, -3.0, 0.7, 1.0]
+    }
+
+    #[test]
+    fn greedy_is_argmax() {
+        let mut s = Sampler::greedy();
+        assert_eq!(s.next_token(&logits()), 1);
+        // greedy never advances RNG: repeated calls identical
+        assert_eq!(s.next_token(&logits()), 1);
+    }
+
+    #[test]
+    fn same_seed_same_stream() {
+        let p = SamplingParams::temperature(1.3, 42);
+        let mut a = Sampler::new(p.clone());
+        let mut b = Sampler::new(p);
+        for _ in 0..20 {
+            assert_eq!(a.next_token(&logits()), b.next_token(&logits()));
+        }
+    }
+
+    #[test]
+    fn different_seeds_diverge() {
+        let mut a = Sampler::new(SamplingParams::temperature(5.0, 1));
+        let mut b = Sampler::new(SamplingParams::temperature(5.0, 2));
+        let sa: Vec<u32> = (0..32).map(|_| a.next_token(&logits())).collect();
+        let sb: Vec<u32> = (0..32).map(|_| b.next_token(&logits())).collect();
+        assert_ne!(sa, sb);
+    }
+
+    #[test]
+    fn top_k_restricts_support() {
+        let p = SamplingParams {
+            temperature: 10.0, // near-uniform without truncation
+            top_k: 2,
+            ..SamplingParams::temperature(10.0, 7)
+        };
+        let mut s = Sampler::new(p);
+        for _ in 0..64 {
+            let t = s.next_token(&logits());
+            assert!(t == 1 || t == 3, "top-2 support is {{1,3}}, got {t}");
+        }
+    }
+
+    #[test]
+    fn top_p_restricts_support() {
+        // one dominant logit: tiny p keeps only the argmax
+        let p = SamplingParams {
+            temperature: 1.0,
+            top_p: 0.1,
+            ..SamplingParams::temperature(1.0, 9)
+        };
+        let mut s = Sampler::new(p);
+        let sharp = vec![0.0, 10.0, 0.0, 0.0];
+        for _ in 0..32 {
+            assert_eq!(s.next_token(&sharp), 1);
+        }
+    }
+
+    #[test]
+    fn high_temperature_spreads_mass() {
+        let mut s = Sampler::new(SamplingParams::temperature(50.0, 11));
+        let seen: std::collections::BTreeSet<u32> =
+            (0..200).map(|_| s.next_token(&logits())).collect();
+        assert!(seen.len() > 3, "hot sampling should visit many tokens");
+    }
+}

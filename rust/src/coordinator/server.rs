@@ -1,10 +1,13 @@
 //! Threaded request server: a worker thread owns the batcher and
-//! drives continuous batching; clients submit requests over an mpsc
-//! channel and receive completions on per-request channels. (The
-//! offline image has no tokio; std threads + channels own the event
-//! loop, which at 1 core is the honest architecture anyway.)
+//! drives continuous batching; clients submit `GenerateRequest`s over
+//! an mpsc channel and get back a `RequestHandle` whose stream
+//! delivers every token the fused step produces, then a terminal
+//! `Done`/`Cancelled` event. `RequestHandle::cancel()` raises a flag
+//! the batcher reaps at its next step, retiring the session and
+//! freeing its batch slot for the queue. (The offline image has no
+//! tokio; std threads + channels own the event loop, which at 1 core
+//! is the honest architecture anyway.)
 
-use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -12,12 +15,15 @@ use std::thread::JoinHandle;
 
 use crate::moe::model::MoeModel;
 
-use super::batcher::{Batcher, Completion, Request};
+use super::batcher::Batcher;
 use super::decode::DecodeOdp;
 use super::metrics::Metrics;
+use super::request::{
+    request_channel, GenerateRequest, RequestHandle, RequestTicket,
+};
 
 enum Msg {
-    Submit(Request, Sender<Completion>),
+    Submit(GenerateRequest, RequestTicket),
     Shutdown,
 }
 
@@ -36,33 +42,28 @@ impl Server {
         let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
         let worker = std::thread::spawn(move || {
             let mut batcher = Batcher::new(model, odp, max_batch);
-            let mut reply: BTreeMap<u64, Sender<Completion>> = BTreeMap::new();
             let mut shutdown = false;
             loop {
                 // drain the mailbox (block only when idle)
                 if batcher.pending() == 0 {
                     match rx.recv() {
-                        Ok(Msg::Submit(req, ch)) => {
-                            reply.insert(req.id, ch);
-                            batcher.submit(req);
+                        Ok(Msg::Submit(req, ticket)) => {
+                            batcher.submit_with_ticket(req, ticket);
                         }
                         Ok(Msg::Shutdown) | Err(_) => break,
                     }
                 }
                 while let Ok(msg) = rx.try_recv() {
                     match msg {
-                        Msg::Submit(req, ch) => {
-                            reply.insert(req.id, ch);
-                            batcher.submit(req);
+                        Msg::Submit(req, ticket) => {
+                            batcher.submit_with_ticket(req, ticket);
                         }
                         Msg::Shutdown => shutdown = true,
                     }
                 }
-                for done in batcher.step(&m2) {
-                    if let Some(ch) = reply.remove(&done.id) {
-                        let _ = ch.send(done);
-                    }
-                }
+                // the step streams tokens and terminal events to each
+                // request's own channel; completions need no routing
+                batcher.step(&m2);
                 if shutdown && batcher.pending() == 0 {
                     break;
                 }
@@ -71,14 +72,20 @@ impl Server {
         Server { tx, worker: Some(worker), next_id: AtomicU64::new(1), metrics }
     }
 
-    /// Submit a prompt; returns a receiver for the completion.
-    pub fn submit(&self, prompt: Vec<u32>, max_new_tokens: usize)
-                  -> Receiver<Completion> {
-        let (tx, rx) = channel();
+    /// Submit a request; the handle streams `Token` events as the
+    /// fused batcher produces them, supports `cancel()` mid-flight,
+    /// and terminates with `Done(Completion)` or `Cancelled`.
+    pub fn submit(&self, req: GenerateRequest) -> RequestHandle {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = Request { id, prompt, max_new_tokens, temperature: None };
-        let _ = self.tx.send(Msg::Submit(req, tx));
-        rx
+        let (ticket, handle) = request_channel(id);
+        let _ = self.tx.send(Msg::Submit(req, ticket));
+        handle
+    }
+
+    /// Convenience: greedy request with default stop/priority.
+    pub fn submit_greedy(&self, prompt: Vec<u32>, max_new_tokens: usize)
+                         -> RequestHandle {
+        self.submit(GenerateRequest::greedy(prompt, max_new_tokens))
     }
 
     pub fn shutdown(mut self) {
@@ -102,22 +109,45 @@ impl Drop for Server {
 mod tests {
     use super::*;
     use crate::config::ModelConfig;
+    use crate::coordinator::request::StreamEvent;
     use crate::moe::model::tests::random_model;
 
     #[test]
     fn serves_concurrent_requests() {
         let model = Arc::new(random_model(&ModelConfig::test_tiny(), 0));
         let server = Server::spawn(model, None, 4);
-        let rxs: Vec<_> = (0..6)
-            .map(|i| server.submit(vec![1, 5, 80 + i, 3], 5))
+        let handles: Vec<_> = (0..6)
+            .map(|i| server.submit_greedy(vec![1, 5, 80 + i, 3], 5))
             .collect();
-        for rx in rxs {
-            let done = rx.recv_timeout(std::time::Duration::from_secs(30))
+        for mut h in handles {
+            let done = h
+                .wait_timeout(std::time::Duration::from_secs(30))
                 .expect("completion");
             assert!(!done.tokens.is_empty());
         }
         assert_eq!(
             server.metrics.requests_completed.load(Ordering::Relaxed), 6);
+        server.shutdown();
+    }
+
+    #[test]
+    fn streams_tokens_before_done() {
+        let model = Arc::new(random_model(&ModelConfig::test_tiny(), 1));
+        let server = Server::spawn(model, None, 2);
+        let mut h = server.submit_greedy(vec![1, 5, 80, 3], 5);
+        let mut streamed = Vec::new();
+        let mut done = None;
+        while let Some(ev) = h.next_event() {
+            match ev {
+                StreamEvent::Token(t) => streamed.push(t),
+                StreamEvent::Done(c) => done = Some(c),
+                StreamEvent::Cancelled { .. } => panic!("not cancelled"),
+            }
+        }
+        let done = done.expect("terminal Done event");
+        assert!(!streamed.is_empty());
+        assert_eq!(streamed, done.tokens,
+                   "stream delivers exactly the completion's tokens");
         server.shutdown();
     }
 

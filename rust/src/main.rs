@@ -3,18 +3,24 @@
 //!
 //! Subcommands:
 //!   info                         model/artifact status
-//!   compress  [--avg-bits 2.5] [--strategy pmq] [--eval]
+//!   compress  [--avg-bits 2.5] [--strategy pmq] [--eval] [--save m.mcqz]
 //!   eval      [--mode suite|ppl|fewshot|niah|cot] [--odp] [--avg-bits ...]
-//!   serve     [--requests 16] [--batch 4] [--odp]
-//!   generate  [--task 3] [--max-new 16]
+//!             [--load m.mcqz]
+//!   serve     [--requests 16] [--batch 4] [--odp] [--load m.mcqz]
+//!   generate  [--task 3] [--max-new 16] [--odp] [--load m.mcqz]
+//!             [--temperature 0.8] [--top-k 0] [--top-p 1.0] [--seed 5]
 //!   expert-analysis [--out file.json]     (Fig. 3 / Fig. 10 data)
+//!
+//! `serve` and `generate` accept `--load <model.mcqz>` (a compressed
+//! model saved by `compress --save`), so the MC-compressed model can
+//! be served end-to-end, matching `eval --load`.
 
 use std::path::Path;
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 use mc_moe::config::{artifacts_dir, ModelConfig, TASK_NAMES};
-use mc_moe::coordinator::{memmodel, Server};
+use mc_moe::coordinator::{memmodel, GenerateRequest, SamplingParams, Server};
 use mc_moe::data::{calibration_set, Split};
 use mc_moe::eval::{eval_cot_chain, eval_niah_grid, eval_suite, perplexity};
 use mc_moe::moe::{MoeModel, WeightFile};
@@ -27,6 +33,49 @@ fn load_fp(dir: &Path) -> Result<MoeModel> {
         .context("run `make artifacts` first")?;
     let wf = WeightFile::load(&dir.join("weights.mcwt"))?;
     MoeModel::load_f32(&cfg, &wf)
+}
+
+/// The model a serving command drives: `--load model.mcqz` picks a
+/// saved compressed model; otherwise the fp32 training artifacts.
+fn load_serving_model(dir: &Path, args: &Args) -> Result<MoeModel> {
+    match args.get("load") {
+        Some(path) => {
+            let model = mc_moe::moe::qz::load(Path::new(path))?;
+            eprintln!("loaded {} ({:.2} expert bits)", path,
+                      model.expert_avg_bits());
+            Ok(model)
+        }
+        None => load_fp(dir),
+    }
+}
+
+/// Decode-time ODP calibrated on the model being served (only if
+/// `--odp` was passed).
+fn decode_odp_for(model: &MoeModel, args: &Args)
+                  -> Option<mc_moe::coordinator::DecodeOdp> {
+    args.flag("odp").then(|| {
+        let seqs = calibration_set(17, 4, model.cfg.max_seq.min(256),
+                                   Split::General);
+        let cal = mc_moe::pmq::calibrate(model, &seqs);
+        mc_moe::coordinator::DecodeOdp::calibrate(
+            model, &seqs, cal.mu_median(), 0.02)
+    })
+}
+
+/// Sampling options shared by `generate` and `serve`. Passing a
+/// truncation knob (`--top-k`/`--top-p`) without `--temperature`
+/// implies temperature 1.0 — otherwise the greedy short-circuit would
+/// silently ignore the knobs.
+fn sampling_from(args: &Args) -> Result<SamplingParams> {
+    let wants_sampling =
+        args.get("top-k").is_some() || args.get("top-p").is_some();
+    let default_temp = if wants_sampling { 1.0 } else { 0.0 };
+    Ok(SamplingParams {
+        temperature: args.f64_or("temperature", default_temp)? as f32,
+        top_k: args.usize_or("top-k", 0)?,
+        top_p: args.f64_or("top-p", 1.0)? as f32,
+        seed: args.usize_or("seed", 5)? as u64,
+    })
 }
 
 fn parse_strategy(s: &str) -> Result<Allocator> {
@@ -178,29 +227,27 @@ fn cmd_eval(dir: &Path, args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(dir: &Path, args: &Args) -> Result<()> {
-    let fp = load_fp(dir)?;
-    let odp = args.flag("odp").then(|| {
-        let seqs = calibration_set(17, 4, fp.cfg.max_seq.min(256), Split::General);
-        let cal = mc_moe::pmq::calibrate(&fp, &seqs);
-        mc_moe::coordinator::DecodeOdp::calibrate(
-            &fp, &seqs, cal.mu_median(), 0.02)
-    });
+    let model = load_serving_model(dir, args)?;
+    let odp = decode_odp_for(&model, args);
+    let sampling = sampling_from(args)?;
     let n_req = args.usize_or("requests", 16)?;
     let batch = args.usize_or("batch", 4)?;
     let max_new = args.usize_or("max-new", 24)?;
-    let server = Server::spawn(Arc::new(fp), odp, batch);
+    let server = Server::spawn(Arc::new(model), odp, batch);
     let mut rng = mc_moe::util::rng::Rng::new(99);
     let t0 = std::time::Instant::now();
-    let rxs: Vec<_> = (0..n_req)
-        .map(|_| {
+    let handles: Vec<_> = (0..n_req)
+        .map(|i| {
             let task = rng.below(8);
             let mut prompt = mc_moe::data::task_sequence(&mut rng, task);
             prompt.truncate(prompt.len() - 2); // stop at SEP
-            server.submit(prompt, max_new)
+            let req = GenerateRequest::greedy(prompt, max_new).with_sampling(
+                SamplingParams { seed: sampling.seed ^ i as u64, ..sampling.clone() });
+            server.submit(req)
         })
         .collect();
-    for rx in rxs {
-        let _ = rx.recv();
+    for h in handles {
+        let _ = h.wait();
     }
     let dt = t0.elapsed().as_secs_f64();
     println!("{}", server.metrics.render_text());
@@ -212,18 +259,24 @@ fn cmd_serve(dir: &Path, args: &Args) -> Result<()> {
 }
 
 fn cmd_generate(dir: &Path, args: &Args) -> Result<()> {
-    let fp = load_fp(dir)?;
-    let engine = mc_moe::coordinator::McEngine::new(fp, None, None);
+    let model = load_serving_model(dir, args)?;
+    let decode_odp = decode_odp_for(&model, args);
+    let engine = mc_moe::coordinator::McEngine::new(model, None, decode_odp);
     let task = args.usize_or("task", 3)?;
     let mut rng = mc_moe::util::rng::Rng::new(args.usize_or("seed", 5)? as u64);
     let seq = mc_moe::data::task_sequence(&mut rng, task);
     let sep = seq.iter().position(|&t| t == 3).unwrap();
     let prompt = &seq[..=sep];
     let gold = &seq[sep + 1..seq.len() - 1];
-    let out = engine.generate(prompt, args.usize_or("max-new", 16)?)?;
+    let req = GenerateRequest::greedy(
+        prompt.to_vec(), args.usize_or("max-new", 16)?)
+        .with_sampling(sampling_from(args)?);
+    let out = engine.generate(&req)?;
     println!("task     : {}", TASK_NAMES[task]);
     println!("prompt   : {prompt:?}");
-    println!("generated: {out:?}");
+    println!("generated: {:?}", out.tokens);
+    println!("finish   : {:?}  ttft: {:.2}ms", out.finish,
+             out.ttft_ns as f64 / 1e6);
     println!("gold     : {gold:?}");
     Ok(())
 }

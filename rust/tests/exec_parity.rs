@@ -7,47 +7,12 @@ use std::sync::Arc;
 
 use mc_moe::config::ModelConfig;
 use mc_moe::coordinator::{DecodeOdp, DecodeSession};
-use mc_moe::moe::model::{CalibSink, Expert, ForwardOpts, Layer, MoeModel, OdpPolicy};
-use mc_moe::quant::QTensor;
+use mc_moe::moe::model::{CalibSink, ForwardOpts, OdpPolicy};
 use mc_moe::tensor::Mat;
-use mc_moe::util::rng::Rng;
 use mc_moe::util::stats::argmax;
 
-// the random-model helper lives behind cfg(test) in the lib; rebuild a
-// small equivalent here for integration-test use
-fn random_model(cfg: &ModelConfig, seed: u64) -> MoeModel {
-    let mut rng = Rng::new(seed);
-    let d = cfg.d_model;
-    let mk = |rng: &mut Rng, r: usize, c: usize| {
-        QTensor::F32(Mat::randn(rng, r, c, (r as f32).powf(-0.5)))
-    };
-    let layers = (0..cfg.n_layers)
-        .map(|_| Layer {
-            attn_norm: vec![1.0; d],
-            ffn_norm: vec![1.0; d],
-            gate: Mat::randn(&mut rng, d, cfg.n_experts, (d as f32).powf(-0.5)),
-            wq: mk(&mut rng, d, d),
-            wk: mk(&mut rng, d, d),
-            wv: mk(&mut rng, d, d),
-            wo: mk(&mut rng, d, d),
-            experts: (0..cfg.n_experts)
-                .map(|_| Expert {
-                    w1: mk(&mut rng, d, cfg.d_ff),
-                    w3: mk(&mut rng, d, cfg.d_ff),
-                    w2: mk(&mut rng, cfg.d_ff, d),
-                })
-                .collect(),
-        })
-        .collect();
-    MoeModel {
-        cfg: cfg.clone(),
-        tok_emb: Mat::randn(&mut rng, cfg.vocab_size, d, 0.02),
-        pos_emb: Mat::randn(&mut rng, cfg.max_seq, d, 0.02),
-        final_norm: vec![1.0; d],
-        lm_head: Mat::randn(&mut rng, d, cfg.vocab_size, (d as f32).powf(-0.5)),
-        layers,
-    }
-}
+mod common;
+use common::random_model;
 
 fn close(a: &[f32], b: &[f32], tol: f32, what: &str) {
     assert_eq!(a.len(), b.len(), "{what}: length mismatch");

@@ -10,42 +10,8 @@ use mc_moe::quant::{quantize_rtn, QTensor};
 use mc_moe::tensor::Mat;
 use mc_moe::util::rng::Rng;
 
-// the random-model helper lives behind cfg(test) in the lib; rebuild a
-// small equivalent here for integration-test use
-fn random_model(cfg: &ModelConfig, seed: u64) -> mc_moe::moe::MoeModel {
-    use mc_moe::moe::model::{Expert, Layer, MoeModel};
-    let mut rng = Rng::new(seed);
-    let d = cfg.d_model;
-    let mk = |rng: &mut Rng, r: usize, c: usize| {
-        QTensor::F32(Mat::randn(rng, r, c, (r as f32).powf(-0.5)))
-    };
-    let layers = (0..cfg.n_layers)
-        .map(|_| Layer {
-            attn_norm: vec![1.0; d],
-            ffn_norm: vec![1.0; d],
-            gate: Mat::randn(&mut rng, d, cfg.n_experts, (d as f32).powf(-0.5)),
-            wq: mk(&mut rng, d, d),
-            wk: mk(&mut rng, d, d),
-            wv: mk(&mut rng, d, d),
-            wo: mk(&mut rng, d, d),
-            experts: (0..cfg.n_experts)
-                .map(|_| Expert {
-                    w1: mk(&mut rng, d, cfg.d_ff),
-                    w3: mk(&mut rng, d, cfg.d_ff),
-                    w2: mk(&mut rng, cfg.d_ff, d),
-                })
-                .collect(),
-        })
-        .collect();
-    MoeModel {
-        cfg: cfg.clone(),
-        tok_emb: Mat::randn(&mut rng, cfg.vocab_size, d, 0.02),
-        pos_emb: Mat::randn(&mut rng, cfg.max_seq, d, 0.02),
-        final_norm: vec![1.0; d],
-        lm_head: Mat::randn(&mut rng, d, cfg.vocab_size, (d as f32).powf(-0.5)),
-        layers,
-    }
-}
+mod common;
+use common::random_model;
 
 #[test]
 fn prop_pack_roundtrip_random_shapes() {
@@ -173,7 +139,7 @@ fn prop_eval_sample_gold_always_valid() {
 
 #[test]
 fn prop_batcher_completes_under_random_load() {
-    use mc_moe::coordinator::{Batcher, Metrics, Request};
+    use mc_moe::coordinator::{Batcher, GenerateRequest, Metrics};
     use std::sync::Arc;
     let cfg = ModelConfig::test_tiny();
     let model = Arc::new(random_model(&cfg, 107));
@@ -183,16 +149,11 @@ fn prop_batcher_completes_under_random_load() {
         let max_batch = 1 + rng.below(4);
         let mut b = Batcher::new(model.clone(), None, max_batch);
         let n = 2 + rng.below(6);
-        for id in 0..n {
+        for _ in 0..n {
             let plen = 2 + rng.below(8);
             let prompt: Vec<u32> =
                 (0..plen).map(|_| rng.below(200) as u32 + 4).collect();
-            b.submit(Request {
-                id: id as u64,
-                prompt,
-                max_new_tokens: 1 + rng.below(6),
-                temperature: None,
-            });
+            b.submit(GenerateRequest::greedy(prompt, 1 + rng.below(6)));
         }
         let done = b.run_to_completion(&metrics);
         assert_eq!(done.len(), n, "trial {trial}");

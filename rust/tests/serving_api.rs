@@ -1,0 +1,222 @@
+//! Integration tests for the unified request API (ISSUE 2): one
+//! `GenerateRequest`/`SamplingParams`/`StopCondition` surface across
+//! `McEngine` (single-request), `Batcher` (fused continuous
+//! batching), and `Server` (threaded streaming + cancellation).
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mc_moe::config::{ModelConfig, EOS};
+use mc_moe::coordinator::{
+    Batcher, FinishReason, GenerateRequest, McEngine, Metrics, Priority,
+    SamplingParams, Server, StopCondition, StreamEvent,
+};
+use mc_moe::moe::model::MoeModel;
+
+mod common;
+use common::random_model;
+
+fn shared_model(seed: u64) -> Arc<MoeModel> {
+    Arc::new(random_model(&ModelConfig::test_tiny(), seed))
+}
+
+fn batcher_tokens(model: Arc<MoeModel>, req: GenerateRequest, max_batch: usize)
+                  -> Vec<u32> {
+    let metrics = Metrics::new();
+    let mut b = Batcher::new(model, None, max_batch);
+    let h = b.submit(req);
+    b.run_to_completion(&metrics);
+    h.wait().expect("completion").tokens
+}
+
+#[test]
+fn same_seed_sampling_matches_across_engine_and_batcher() {
+    // the tentpole guarantee: one Sampler, so the single-request
+    // engine path and the fused batcher path emit identical tokens
+    // for the same SamplingParams + seed
+    let model = shared_model(11);
+    let prompt = vec![1u32, 5, 80, 3, 44, 9];
+    for sampling in [
+        SamplingParams::greedy(),
+        SamplingParams::temperature(0.8, 42),
+        SamplingParams { temperature: 1.2, top_k: 8, top_p: 0.95, seed: 7 },
+    ] {
+        let req = GenerateRequest::greedy(prompt.clone(), 10)
+            .with_sampling(sampling.clone())
+            .with_stop(StopCondition::MaxLen);
+        let engine =
+            McEngine::new(random_model(&ModelConfig::test_tiny(), 11),
+                          None, None);
+        let via_engine = engine.generate(&req).unwrap().tokens;
+        let via_batcher = batcher_tokens(model.clone(), req.clone(), 1);
+        assert_eq!(via_engine, via_batcher, "params {sampling:?}");
+        // and the batcher is batch-width invariant for seeded sampling
+        let via_wide = {
+            let metrics = Metrics::new();
+            let mut b = Batcher::new(model.clone(), None, 3);
+            let h = b.submit(req.clone());
+            b.submit(GenerateRequest::greedy(vec![2, 6, 81, 3], 10)
+                .with_stop(StopCondition::MaxLen));
+            b.submit(GenerateRequest::greedy(vec![3, 7, 82, 3], 10)
+                .with_stop(StopCondition::MaxLen));
+            b.run_to_completion(&metrics);
+            h.wait().expect("completion").tokens
+        };
+        assert_eq!(via_engine, via_wide, "params {sampling:?} (batch 3)");
+    }
+}
+
+#[test]
+fn same_seed_same_tokens_different_seed_diverges() {
+    let model = shared_model(13);
+    let mk = |seed| {
+        GenerateRequest::greedy(vec![1, 5, 80, 3], 12)
+            .with_sampling(SamplingParams::temperature(2.0, seed))
+            .with_stop(StopCondition::MaxLen)
+    };
+    let a = batcher_tokens(model.clone(), mk(5), 2);
+    let b = batcher_tokens(model.clone(), mk(5), 2);
+    let c = batcher_tokens(model, mk(6), 2);
+    assert_eq!(a, b, "same seed must replay identically");
+    assert_ne!(a, c, "different seeds must diverge at temp 2.0");
+}
+
+#[test]
+fn stop_conditions_eos_stopset_maxlen() {
+    let model = shared_model(17);
+    let prompt = vec![1u32, 5, 80, 3];
+    // max-len: exactly max_new_tokens, finish MaxTokens, EOS ignored
+    let ml = GenerateRequest::greedy(prompt.clone(), 6)
+        .with_stop(StopCondition::MaxLen);
+    let metrics = Metrics::new();
+    let mut b = Batcher::new(model.clone(), None, 1);
+    let h = b.submit(ml);
+    let done = b.run_to_completion(&metrics);
+    assert_eq!(done[0].tokens.len(), 6);
+    assert_eq!(done[0].finish, FinishReason::MaxTokens);
+    let greedy_tokens = h.wait().unwrap().tokens;
+
+    // stop-set: cut at the first occurrence of a chosen stop token
+    let stop_at = greedy_tokens[2];
+    let first = greedy_tokens.iter().position(|&t| t == stop_at).unwrap();
+    let ss = GenerateRequest::greedy(prompt.clone(), 6)
+        .with_stop(StopCondition::StopTokens(vec![stop_at]));
+    let mut b = Batcher::new(model.clone(), None, 1);
+    let done = b.run_to_completion_after(ss, &metrics);
+    assert_eq!(done.tokens, greedy_tokens[..=first].to_vec());
+    assert_eq!(done.finish, FinishReason::Stop(stop_at));
+
+    // eos: default condition stops iff the model emits EOS; emulate by
+    // making EOS the stop-set and checking Eos behaves identically
+    let eos_like = GenerateRequest::greedy(prompt.clone(), 6); // Eos default
+    let explicit = GenerateRequest::greedy(prompt, 6)
+        .with_stop(StopCondition::StopTokens(vec![EOS]));
+    let mut b1 = Batcher::new(model.clone(), None, 1);
+    let d1 = b1.run_to_completion_after(eos_like, &metrics);
+    let mut b2 = Batcher::new(model, None, 1);
+    let d2 = b2.run_to_completion_after(explicit, &metrics);
+    assert_eq!(d1.tokens, d2.tokens);
+}
+
+#[test]
+fn server_streams_tokens_incrementally() {
+    let server = Server::spawn(shared_model(19), None, 2);
+    let mut h = server.submit(
+        GenerateRequest::greedy(vec![1, 5, 80, 3], 5)
+            .with_stop(StopCondition::MaxLen));
+    let mut streamed = Vec::new();
+    let mut saw_done = false;
+    while let Some(ev) = h.next_event() {
+        match ev {
+            StreamEvent::Token(t) => {
+                assert!(!saw_done, "tokens must precede Done");
+                streamed.push(t);
+            }
+            StreamEvent::Done(c) => {
+                saw_done = true;
+                assert_eq!(c.tokens, streamed);
+            }
+            StreamEvent::Cancelled { .. } => panic!("not cancelled"),
+        }
+    }
+    assert!(saw_done);
+    assert_eq!(streamed.len(), 5);
+    server.shutdown();
+}
+
+#[test]
+fn server_cancellation_frees_slot_and_admits_queued() {
+    // batch=1: a long-running request holds the only slot; cancelling
+    // it mid-decode must retire the session and admit the waiter.
+    // A bigger-than-test_tiny model widens the decode to hundreds of
+    // ms so the client-side cancel cannot lose the race against the
+    // request finishing naturally on a descheduled CI runner.
+    let mut cfg = ModelConfig::test_tiny();
+    cfg.d_model = 64;
+    cfg.n_heads = 4;
+    cfg.d_ff = 256;
+    cfg.n_layers = 4;
+    cfg.max_seq = 256;
+    let server = Server::spawn(Arc::new(random_model(&cfg, 23)), None, 1);
+    let mut long = server.submit(
+        GenerateRequest::greedy(vec![1, 5, 80, 3], 240)
+            .with_stop(StopCondition::MaxLen));
+    // wait until it is demonstrably mid-decode (first token streamed)
+    let first = long.next_event();
+    assert!(matches!(first, Some(StreamEvent::Token(_))));
+    let mut waiter =
+        server.submit(GenerateRequest::greedy(vec![2, 6, 81, 3], 3));
+    long.cancel();
+    // the waiter can only complete if the cancelled session's slot was
+    // freed; the bounded wait turns a hung/regressed worker into a
+    // fast failure instead of a suite hang
+    let done = waiter
+        .wait_timeout(Duration::from_secs(120))
+        .expect("queued request admitted after cancel");
+    assert!(!done.tokens.is_empty());
+    // the cancelled stream terminates with Cancelled, not Done
+    while let Some(ev) = long.next_event() {
+        if let StreamEvent::Done(_) = ev {
+            panic!("cancelled request must not complete");
+        }
+    }
+    assert!(long.was_cancelled());
+    assert_eq!(
+        server.metrics.requests_cancelled
+            .load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+    server.shutdown();
+}
+
+#[test]
+fn priority_requests_jump_the_queue() {
+    let metrics = Metrics::new();
+    let mut b = Batcher::new(shared_model(29), None, 1);
+    b.submit(GenerateRequest::greedy(vec![1, 5, 80, 3], 2));
+    b.step(&metrics); // occupy the slot
+    let low = b.submit(GenerateRequest::greedy(vec![2, 6, 81, 3], 2)
+        .with_priority(Priority::Low));
+    let high = b.submit(GenerateRequest::greedy(vec![3, 7, 82, 3], 2)
+        .with_priority(Priority::High));
+    let done = b.run_to_completion(&metrics);
+    let pos = |id| done.iter().position(|c| c.id == id).unwrap();
+    assert!(pos(high.id) < pos(low.id));
+}
+
+/// Helper trait so the stop-condition test reads linearly.
+trait RunOne {
+    fn run_to_completion_after(&mut self, req: GenerateRequest,
+                               metrics: &Metrics)
+                               -> mc_moe::coordinator::Completion;
+}
+
+impl RunOne for Batcher {
+    fn run_to_completion_after(&mut self, req: GenerateRequest,
+                               metrics: &Metrics)
+                               -> mc_moe::coordinator::Completion {
+        let h = self.submit(req);
+        self.run_to_completion(metrics);
+        h.wait().expect("completion")
+    }
+}
