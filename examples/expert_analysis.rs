@@ -32,7 +32,7 @@ fn main() -> Result<()> {
     let dir = artifacts_dir();
     let cfg = ModelConfig::load(&dir.join("config.json"))?;
     let wf = WeightFile::load(&dir.join("weights.mcwt"))?;
-    let fp = MoeModel::load_f32(&cfg, &wf)?;
+    let fp = MoeModel::load_f32(&cfg, wf)?;
 
     // Fig. 3: general-split significance
     let wb = Workbench::build(fp.clone(), WorkbenchConfig::default())?;

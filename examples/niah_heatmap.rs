@@ -35,7 +35,7 @@ fn main() -> Result<()> {
     let dir = artifacts_dir();
     let cfg = ModelConfig::load(&dir.join("config.json"))?;
     let wf = WeightFile::load(&dir.join("weights.mcwt"))?;
-    let fp = MoeModel::load_f32(&cfg, &wf)?;
+    let fp = MoeModel::load_f32(&cfg, wf)?;
 
     let lengths: Vec<usize> = vec![64, 128, 192, cfg.max_seq];
     let depths = vec![0.1, 0.3, 0.5, 0.7, 0.9];

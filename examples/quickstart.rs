@@ -18,7 +18,7 @@ fn main() -> Result<()> {
     let dir = artifacts_dir();
     let cfg = ModelConfig::load(&dir.join("config.json"))?;
     let wf = WeightFile::load(&dir.join("weights.mcwt"))?;
-    let fp = MoeModel::load_f32(&cfg, &wf)?;
+    let fp = MoeModel::load_f32(&cfg, wf)?;
     println!("loaded {} ({:.1}M params, {:.1} MB fp32)",
              cfg.name, cfg.param_count() as f64 / 1e6,
              memmodel::loading_bytes(&fp) as f64 / 1e6);

@@ -116,7 +116,7 @@ fn main() -> Result<()> {
     let dir = artifacts_dir();
     let cfg = ModelConfig::load(&dir.join("config.json"))?;
     let wf = WeightFile::load(&dir.join("weights.mcwt"))?;
-    let fp = MoeModel::load_f32(&cfg, &wf)?;
+    let fp = MoeModel::load_f32(&cfg, wf)?;
 
     eprintln!("compressing (PMQ 2.5-bit avg)...");
     let wb = Workbench::build(fp, WorkbenchConfig {

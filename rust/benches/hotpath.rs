@@ -1,25 +1,132 @@
-//! Hot-path micro-benchmarks (EXPERIMENTS.md §Perf): packed dequant
-//! matmul vs dense f32, binary matmul, decode step latency, serial vs
-//! threaded expert dispatch (emits BENCH_dispatch.json), PJRT
-//! full-forward vs native (with the `pjrt` feature), and batcher
-//! throughput.
+//! Hot-path micro-benchmarks (EXPERIMENTS.md §Perf): tiled vs scalar
+//! GEMM, packed dequant matmul vs dense f32, pooled vs serial
+//! attention, expert dispatch (persistent pool vs legacy per-call
+//! spawns vs serial), end-to-end fused multi-session decode, and the
+//! artifact-gated engine paths.
 //!
-//!   cargo bench --bench hotpath
+//!   cargo bench --bench hotpath            # full shapes
+//!   MC_BENCH_FAST=1 cargo bench --bench hotpath   # CI smoke shapes
+//!
+//! Emits `BENCH_hotpath.json` (kernel + decode trajectory, consumed by
+//! the CI bench-smoke artifact and EXPERIMENTS.md §Perf) and keeps the
+//! PR-1 `BENCH_dispatch.json` series going.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use mc_moe::config::{artifacts_dir, ModelConfig};
+use mc_moe::coordinator::decode::{step_many_into, StepScratch};
 use mc_moe::coordinator::{DecodeSession, Server};
+use mc_moe::moe::exec::attention::{causal_attention_into, AttnScratch};
 use mc_moe::moe::exec::dispatch::{dispatch_experts, scatter, DispatchMode};
 use mc_moe::moe::model::Expert;
 use mc_moe::moe::{MoeModel, WeightFile};
 use mc_moe::quant::{binary::binarize, linear::quantize_groupwise, qmatmul, QTensor};
-use mc_moe::tensor::Mat;
+use mc_moe::tensor::{matmul_into_naive, matmul_into_with, Mat};
 use mc_moe::util::bench::{bench_for, Table};
+use mc_moe::util::pool::WorkerPool;
 use mc_moe::util::rng::Rng;
 
-fn matmul_suite() {
+// the one shared random-model fixture (also used by the integration
+// tests) — no per-bench copy to drift out of sync
+#[path = "../tests/common/mod.rs"]
+mod common;
+use common::random_model;
+
+fn fast() -> bool {
+    std::env::var("MC_BENCH_FAST").is_ok()
+}
+
+/// ms budget per timed kernel loop.
+fn budget() -> u64 {
+    if fast() { 60 } else { 800 }
+}
+
+fn threads() -> usize {
+    std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+// ---------------------------------------------------------------------------
+// GEMM: scalar-ikj baseline vs tiled vs pool strips
+// ---------------------------------------------------------------------------
+
+struct GemmResult {
+    d: usize,
+    naive_us: f64,
+    tiled_us: f64,
+    pool_us: f64,
+    naive_m1_us: f64,
+    tiled_m1_us: f64,
+}
+
+fn gemm_suite() -> GemmResult {
+    let d = if fast() { 96 } else { 256 };
+    let mut rng = Rng::new(0);
+    let x = Mat::randn(&mut rng, d, d, 1.0);
+    let w = Mat::randn(&mut rng, d, d, 1.0);
+    let x1 = Mat::randn(&mut rng, 1, d, 1.0);
+    let mut y = Mat::zeros(d, d);
+    let mut y1 = Mat::zeros(1, d);
+    let pool = WorkerPool::global();
+
+    let r_naive = bench_for("gemm naive", budget(), || {
+        y.data.fill(0.0);
+        matmul_into_naive(&x, &w, &mut y);
+        std::hint::black_box(&y);
+    });
+    let r_tiled = bench_for("gemm tiled", budget(), || {
+        y.data.fill(0.0);
+        matmul_into_with(&x, &w, &mut y, None);
+        std::hint::black_box(&y);
+    });
+    let r_pool = bench_for("gemm pool", budget(), || {
+        y.data.fill(0.0);
+        matmul_into_with(&x, &w, &mut y, Some(pool));
+        std::hint::black_box(&y);
+    });
+    let r_naive_m1 = bench_for("gemm naive M=1", budget() / 2, || {
+        y1.data.fill(0.0);
+        matmul_into_naive(&x1, &w, &mut y1);
+        std::hint::black_box(&y1);
+    });
+    let r_tiled_m1 = bench_for("gemm tiled M=1", budget() / 2, || {
+        y1.data.fill(0.0);
+        matmul_into_with(&x1, &w, &mut y1, None);
+        std::hint::black_box(&y1);
+    });
+
+    let res = GemmResult {
+        d,
+        naive_us: r_naive.timings.mean_ns() / 1e3,
+        tiled_us: r_tiled.timings.mean_ns() / 1e3,
+        pool_us: r_pool.timings.mean_ns() / 1e3,
+        naive_m1_us: r_naive_m1.timings.mean_ns() / 1e3,
+        tiled_m1_us: r_tiled_m1.timings.mean_ns() / 1e3,
+    };
+    let mut t = Table::new(
+        &format!("hotpath — dense GEMM {d}x{d}x{d} (us, speedup vs scalar ikj)"),
+        &["kernel", "us", "speedup"],
+    );
+    t.row(vec!["scalar ikj (naive)".into(), format!("{:.1}", res.naive_us),
+               "1.00".into()]);
+    t.row(vec!["tiled 4x4".into(), format!("{:.1}", res.tiled_us),
+               format!("{:.2}", res.naive_us / res.tiled_us)]);
+    t.row(vec![format!("tiled + pool (x{})", threads()),
+               format!("{:.1}", res.pool_us),
+               format!("{:.2}", res.naive_us / res.pool_us)]);
+    t.row(vec!["M=1 scalar".into(), format!("{:.1}", res.naive_m1_us),
+               "1.00".into()]);
+    t.row(vec!["M=1 tiled".into(), format!("{:.1}", res.tiled_m1_us),
+               format!("{:.2}", res.naive_m1_us / res.tiled_m1_us)]);
+    t.print();
+    res
+}
+
+// ---------------------------------------------------------------------------
+// Packed matmul variants (decode shape M=1 uses the fused kernel)
+// ---------------------------------------------------------------------------
+
+fn matmul_variants_suite() {
     let mut t = Table::new(
         "hotpath — matmul variants (128x256 weight, M activation rows)",
         &["variant", "M=1 us", "M=16 us", "M=128 us", "GB read (w)"],
@@ -57,7 +164,7 @@ fn matmul_suite() {
         for m in [1usize, 16, 128] {
             let mut rng = Rng::new(m as u64);
             let x = Mat::randn(&mut rng, m, k, 1.0);
-            let r = bench_for(name, 200, || {
+            let r = bench_for(name, budget() / 4, || {
                 std::hint::black_box(f(&x));
             });
             cells.push(format!("{:.1}", r.timings.mean_ns() / 1e3));
@@ -68,11 +175,72 @@ fn matmul_suite() {
     t.print();
 }
 
-/// Serial vs `std::thread::scope`-threaded expert dispatch at a
-/// serving-representative shape; records the comparison in
-/// BENCH_dispatch.json (ISSUE 1 acceptance: threaded >= 1.5x serial).
-fn dispatch_suite() {
-    let (d, d_ff, n_experts, rows, top_k) = (128usize, 512usize, 8usize, 128usize, 2usize);
+// ---------------------------------------------------------------------------
+// Attention: serial vs pooled head fan-out
+// ---------------------------------------------------------------------------
+
+struct AttnResult {
+    s: usize,
+    d: usize,
+    heads: usize,
+    serial_us: f64,
+    pool_us: f64,
+}
+
+fn attention_suite() -> AttnResult {
+    let (s, d, heads) = if fast() { (96, 96, 8) } else { (256, 256, 8) };
+    let mut rng = Rng::new(2);
+    let q = Mat::randn(&mut rng, s, d, 1.0);
+    let k = Mat::randn(&mut rng, s, d, 1.0);
+    let v = Mat::randn(&mut rng, s, d, 1.0);
+    let mut scratch = AttnScratch::new();
+    let mut out = Mat::zeros(0, 0);
+    let pool = WorkerPool::global();
+    let r_serial = bench_for("attention serial", budget(), || {
+        causal_attention_into(&q, &k, &v, s, heads, false, None,
+                              &mut scratch, &mut out);
+        std::hint::black_box(&out);
+    });
+    let r_pool = bench_for("attention pool", budget(), || {
+        causal_attention_into(&q, &k, &v, s, heads, false, Some(pool),
+                              &mut scratch, &mut out);
+        std::hint::black_box(&out);
+    });
+    let res = AttnResult {
+        s,
+        d,
+        heads,
+        serial_us: r_serial.timings.mean_ns() / 1e3,
+        pool_us: r_pool.timings.mean_ns() / 1e3,
+    };
+    let mut t = Table::new(
+        &format!("hotpath — attention S={s} d={d} heads={heads}"),
+        &["mode", "us", "speedup"],
+    );
+    t.row(vec!["serial".into(), format!("{:.1}", res.serial_us), "1.00".into()]);
+    t.row(vec![format!("pool (x{})", threads()),
+               format!("{:.1}", res.pool_us),
+               format!("{:.2}", res.serial_us / res.pool_us)]);
+    t.print();
+    res
+}
+
+// ---------------------------------------------------------------------------
+// Expert dispatch: serial vs legacy spawns vs persistent pool
+// ---------------------------------------------------------------------------
+
+struct DispatchResult {
+    serial_us: f64,
+    spawn_us: f64,
+    pool_us: f64,
+}
+
+fn dispatch_suite() -> DispatchResult {
+    let (d, d_ff, n_experts, rows, top_k) = if fast() {
+        (64usize, 256usize, 8usize, 64usize, 2usize)
+    } else {
+        (128, 512, 8, 128, 2)
+    };
     let mut rng = Rng::new(7);
     let experts: Vec<Expert> = (0..n_experts)
         .map(|_| Expert {
@@ -91,46 +259,143 @@ fn dispatch_suite() {
         })
         .collect();
 
-    let r_serial = bench_for("dispatch serial", 1500, || {
-        let b = dispatch_experts(&h, &topk, &experts, None, DispatchMode::Serial);
-        std::hint::black_box(scatter(&b, rows, d));
-    });
-    let r_threaded = bench_for("dispatch threaded", 1500, || {
-        let b = dispatch_experts(&h, &topk, &experts, None, DispatchMode::Threaded);
-        std::hint::black_box(scatter(&b, rows, d));
-    });
-    let serial_us = r_serial.timings.mean_ns() / 1e3;
-    let threaded_us = r_threaded.timings.mean_ns() / 1e3;
-    let speedup = serial_us / threaded_us;
-    let threads = std::thread::available_parallelism()
-        .map(|p| p.get())
-        .unwrap_or(1);
+    let run = |mode: DispatchMode| {
+        bench_for("dispatch", budget(), || {
+            let b = dispatch_experts(&h, &topk, &experts, None, mode);
+            std::hint::black_box(scatter(&b, rows, d));
+        })
+        .timings
+        .mean_ns()
+            / 1e3
+    };
+    let serial_us = run(DispatchMode::Serial);
+    let spawn_us = run(DispatchMode::SpawnScope);
+    let pool_us = run(DispatchMode::Threaded);
 
     let mut t = Table::new(
-        "hotpath — expert dispatch (serial vs thread::scope)",
-        &["mode", "us/layer", "speedup"],
+        "hotpath — expert dispatch (serial vs spawn-per-call vs pool)",
+        &["mode", "us/layer", "speedup vs serial"],
     );
     t.row(vec!["serial".into(), format!("{serial_us:.1}"), "1.00".into()]);
-    t.row(vec![
-        format!("threaded (x{threads})"),
-        format!("{threaded_us:.1}"),
-        format!("{speedup:.2}"),
-    ]);
+    t.row(vec!["thread::scope spawns".into(), format!("{spawn_us:.1}"),
+               format!("{:.2}", serial_us / spawn_us)]);
+    t.row(vec![format!("pool (x{})", threads()), format!("{pool_us:.1}"),
+               format!("{:.2}", serial_us / pool_us)]);
     t.print();
 
+    // keep the PR-1 BENCH_dispatch.json series alive (threaded == pool)
+    let speedup = serial_us / pool_us;
     let json = format!(
         "{{\n  \"shape\": {{\"d_model\": {d}, \"d_ff\": {d_ff}, \
          \"n_experts\": {n_experts}, \"rows\": {rows}, \"top_k\": {top_k}}},\n  \
-         \"threads\": {threads},\n  \
+         \"threads\": {},\n  \
          \"serial_us\": {serial_us:.1},\n  \
-         \"threaded_us\": {threaded_us:.1},\n  \
-         \"speedup\": {speedup:.3}\n}}\n"
+         \"spawn_us\": {spawn_us:.1},\n  \
+         \"threaded_us\": {pool_us:.1},\n  \
+         \"speedup\": {speedup:.3}\n}}\n",
+        threads(),
     );
     match std::fs::write("BENCH_dispatch.json", &json) {
-        Ok(()) => println!("wrote BENCH_dispatch.json (speedup {speedup:.2}x)"),
+        Ok(()) => println!("wrote BENCH_dispatch.json (pool speedup {speedup:.2}x)"),
         Err(e) => eprintln!("could not write BENCH_dispatch.json: {e}"),
     }
+    DispatchResult { serial_us, spawn_us, pool_us }
 }
+
+// ---------------------------------------------------------------------------
+// End-to-end fused multi-session decode: tokens/s per dispatch mode
+// ---------------------------------------------------------------------------
+
+struct DecodeResult {
+    cfg: ModelConfig,
+    batch: usize,
+    steps: usize,
+    serial_tok_s: f64,
+    spawn_tok_s: f64,
+    pool_tok_s: f64,
+}
+
+fn decode_suite() -> DecodeResult {
+    let cfg = if fast() {
+        ModelConfig {
+            name: "bench-fast".into(),
+            vocab_size: 256,
+            d_model: 48,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 192,
+            n_experts: 8,
+            top_k: 2,
+            max_seq: 64,
+            prefill_tile: 32,
+        }
+    } else {
+        ModelConfig {
+            name: "bench".into(),
+            vocab_size: 256,
+            d_model: 96,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 384,
+            n_experts: 8,
+            top_k: 2,
+            max_seq: 192,
+            prefill_tile: 64,
+        }
+    };
+    let model = Arc::new(random_model(&cfg, 11));
+    let batch = 8usize;
+    let prompt_len = 16usize.min(cfg.max_seq / 4);
+    let steps = if fast() { 8 } else { 48.min(cfg.max_seq - prompt_len - 1) };
+
+    let run_mode = |mode: DispatchMode| -> f64 {
+        let mut sessions: Vec<DecodeSession> = (0..batch)
+            .map(|i| {
+                let mut s = DecodeSession::new(model.clone(), None);
+                let prompt: Vec<u32> =
+                    (0..prompt_len).map(|t| ((t * 7 + i) % 200 + 1) as u32).collect();
+                s.prefill(&prompt);
+                s
+            })
+            .collect();
+        let mut refs: Vec<&mut DecodeSession> = sessions.iter_mut().collect();
+        let toks: Vec<u32> = (0..batch).map(|i| (i % 200 + 1) as u32).collect();
+        let mut sc = StepScratch::new();
+        sc.dispatch_mode = mode;
+        // warmup (grow scratch, start pool)
+        step_many_into(&mut refs, &toks, &mut sc);
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            std::hint::black_box(step_many_into(&mut refs, &toks, &mut sc));
+        }
+        (batch * steps) as f64 / t0.elapsed().as_secs_f64()
+    };
+
+    let serial_tok_s = run_mode(DispatchMode::Serial);
+    let spawn_tok_s = run_mode(DispatchMode::SpawnScope);
+    let pool_tok_s = run_mode(DispatchMode::Threaded);
+
+    let mut t = Table::new(
+        &format!(
+            "hotpath — fused decode tokens/s (b={batch}, {} layers, d={})",
+            cfg.n_layers, cfg.d_model
+        ),
+        &["expert execution", "tok/s", "vs spawns"],
+    );
+    t.row(vec!["serial".into(), format!("{serial_tok_s:.0}"),
+               format!("{:.2}", serial_tok_s / spawn_tok_s)]);
+    t.row(vec!["spawn-per-step (legacy)".into(), format!("{spawn_tok_s:.0}"),
+               "1.00".into()]);
+    t.row(vec![format!("worker pool (x{})", threads()),
+               format!("{pool_tok_s:.0}"),
+               format!("{:.2}", pool_tok_s / spawn_tok_s)]);
+    t.print();
+    DecodeResult { cfg, batch, steps, serial_tok_s, spawn_tok_s, pool_tok_s }
+}
+
+// ---------------------------------------------------------------------------
+// Engine paths (artifact-gated)
+// ---------------------------------------------------------------------------
 
 fn engine_suite() {
     let dir = artifacts_dir();
@@ -139,13 +404,13 @@ fn engine_suite() {
         return;
     };
     let wf = WeightFile::load(&dir.join("weights.mcwt")).unwrap();
-    let fp = Arc::new(MoeModel::load_f32(&cfg, &wf).unwrap());
+    let fp = Arc::new(MoeModel::load_f32(&cfg, wf).unwrap());
 
     let mut t = Table::new("hotpath — engine paths", &["path", "ms/unit", "unit"]);
 
     // full-seq native scoring
     let toks: Vec<u32> = (0..cfg.max_seq as u32).map(|i| i % 200 + 1).collect();
-    let r = bench_for("native score", 1500, || {
+    let r = bench_for("native score", budget(), || {
         std::hint::black_box(fp.score(&toks));
     });
     t.row(vec!["native full-seq score".into(),
@@ -154,24 +419,26 @@ fn engine_suite() {
     // single-shot batched prefill (fills the KV cache in one pass);
     // session allocated once and rewound so only prefill is timed
     let mut psess = DecodeSession::new(fp.clone(), None);
-    let r = bench_for("batched prefill", 1000, || {
+    let r = bench_for("batched prefill", budget(), || {
         psess.reset();
         std::hint::black_box(psess.prefill(&toks[..64]));
     });
     t.row(vec!["batched prefill (KV)".into(), format!("{:.3}", r.mean_ms()),
                "64 tok".into()]);
 
-    // decode step
+    // decode step (zero-alloc into-path with a reused logits buffer)
     let mut sess = DecodeSession::new(fp.clone(), None);
     sess.prefill(&toks[..64]);
+    let mut logits = Vec::new();
     let mut i = 0u32;
-    let r = bench_for("decode step", 1000, || {
+    let r = bench_for("decode step", budget(), || {
         if sess.remaining() == 0 {
             sess = DecodeSession::new(fp.clone(), None);
             sess.prefill(&toks[..64]);
         }
         i += 1;
-        std::hint::black_box(sess.step(i % 200 + 1));
+        sess.step_into(i % 200 + 1, &mut logits);
+        std::hint::black_box(&logits);
     });
     t.row(vec!["decode step (KV)".into(), format!("{:.3}", r.mean_ms()),
                "token".into()]);
@@ -209,8 +476,70 @@ fn engine_suite() {
     t.print();
 }
 
+// ---------------------------------------------------------------------------
+
+fn write_hotpath_json(gemm: &GemmResult, attn: &AttnResult,
+                      disp: &DispatchResult, dec: &DecodeResult) {
+    let json = format!(
+        "{{\n  \"fast\": {},\n  \"threads\": {},\n  \
+         \"gemm\": {{\"d\": {}, \"naive_us\": {:.1}, \"tiled_us\": {:.1}, \
+         \"pool_us\": {:.1}, \"tiled_speedup\": {:.3}, \"pool_speedup\": {:.3}, \
+         \"naive_m1_us\": {:.2}, \"tiled_m1_us\": {:.2}}},\n  \
+         \"attention\": {{\"s\": {}, \"d\": {}, \"heads\": {}, \
+         \"serial_us\": {:.1}, \"pool_us\": {:.1}, \"speedup\": {:.3}}},\n  \
+         \"dispatch\": {{\"serial_us\": {:.1}, \"spawn_us\": {:.1}, \
+         \"pool_us\": {:.1}, \"pool_vs_spawn\": {:.3}}},\n  \
+         \"decode\": {{\"batch\": {}, \"layers\": {}, \"d_model\": {}, \
+         \"d_ff\": {}, \"n_experts\": {}, \"steps\": {}, \
+         \"serial_tok_s\": {:.1}, \"spawn_tok_s\": {:.1}, \
+         \"pool_tok_s\": {:.1}, \"pool_vs_spawn\": {:.3}, \
+         \"pool_vs_serial\": {:.3}}}\n}}\n",
+        fast(),
+        threads(),
+        gemm.d,
+        gemm.naive_us,
+        gemm.tiled_us,
+        gemm.pool_us,
+        gemm.naive_us / gemm.tiled_us,
+        gemm.naive_us / gemm.pool_us,
+        gemm.naive_m1_us,
+        gemm.tiled_m1_us,
+        attn.s,
+        attn.d,
+        attn.heads,
+        attn.serial_us,
+        attn.pool_us,
+        attn.serial_us / attn.pool_us,
+        disp.serial_us,
+        disp.spawn_us,
+        disp.pool_us,
+        disp.spawn_us / disp.pool_us,
+        dec.batch,
+        dec.cfg.n_layers,
+        dec.cfg.d_model,
+        dec.cfg.d_ff,
+        dec.cfg.n_experts,
+        dec.steps,
+        dec.serial_tok_s,
+        dec.spawn_tok_s,
+        dec.pool_tok_s,
+        dec.pool_tok_s / dec.spawn_tok_s,
+        dec.pool_tok_s / dec.serial_tok_s,
+    );
+    match std::fs::write("BENCH_hotpath.json", &json) {
+        Ok(()) => println!("wrote BENCH_hotpath.json"),
+        Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
+    }
+}
+
 fn main() {
-    matmul_suite();
-    dispatch_suite();
-    engine_suite();
+    let gemm = gemm_suite();
+    matmul_variants_suite();
+    let attn = attention_suite();
+    let disp = dispatch_suite();
+    let dec = decode_suite();
+    write_hotpath_json(&gemm, &attn, &disp, &dec);
+    if !fast() {
+        engine_suite();
+    }
 }

@@ -54,7 +54,7 @@ fn load_ctx() -> Ctx {
     let cfg = ModelConfig::load(&dir.join("config.json"))
         .expect("run `make artifacts` first");
     let wf = WeightFile::load(&dir.join("weights.mcwt")).unwrap();
-    let fp = MoeModel::load_f32(&cfg, &wf).unwrap();
+    let fp = MoeModel::load_f32(&cfg, wf).unwrap();
     let fast = std::env::var("MC_FAST").is_ok();
     let n = cfg.n_experts;
     eprintln!("[setup] building workbench (calibration, GPTQ zoo, probes)...");

@@ -18,8 +18,9 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use crate::moe::model::MoeModel;
+use crate::util::pool::WorkerPool;
 
-use super::decode::{step_many, DecodeOdp, DecodeSession};
+use super::decode::{step_many_into, DecodeOdp, DecodeSession, StepScratch};
 use super::metrics::Metrics;
 use super::request::{
     request_channel, Completion, FinishReason, GenerateRequest,
@@ -45,11 +46,19 @@ pub struct Batcher {
     queue: Vec<(GenerateRequest, RequestTicket)>,
     active: Vec<Active>,
     next_id: u64,
+    /// fused-step scratch arena, reused every iteration so the
+    /// steady-state decode loop never allocates (DESIGN.md §4)
+    scratch: StepScratch,
+    /// reused fused-step input-token buffer
+    inputs: Vec<u32>,
 }
 
 impl Batcher {
     pub fn new(model: Arc<MoeModel>, odp: Option<DecodeOdp>,
                max_batch: usize) -> Batcher {
+        // start the worker pool now so its spawn cost is paid at
+        // construction, not on the first request
+        let _ = WorkerPool::global();
         Batcher {
             model,
             odp,
@@ -57,6 +66,8 @@ impl Batcher {
             queue: Vec::new(),
             active: Vec::new(),
             next_id: 1,
+            scratch: StepScratch::new(),
+            inputs: Vec::new(),
         }
     }
 
@@ -206,16 +217,17 @@ impl Batcher {
         }
 
         // one fused decode step across every active session
-        let inputs: Vec<u32> = self
-            .active
-            .iter()
-            .map(|a| *a.generated.last().unwrap_or(&a.req.prompt[0]))
-            .collect();
+        self.inputs.clear();
+        self.inputs.extend(
+            self.active
+                .iter()
+                .map(|a| *a.generated.last().unwrap_or(&a.req.prompt[0])),
+        );
         let t0 = Instant::now();
         let logits = {
             let mut sessions: Vec<&mut DecodeSession> =
                 self.active.iter_mut().map(|a| &mut a.session).collect();
-            step_many(&mut sessions, &inputs)
+            step_many_into(&mut sessions, &self.inputs, &mut self.scratch)
         };
         let step_ns = t0.elapsed().as_nanos() as u64;
         // the fused pass produced one token per session
@@ -226,7 +238,7 @@ impl Batcher {
         for i in (0..self.active.len()).rev() {
             let a = &mut self.active[i];
             metrics.record_tpot(per_token_ns);
-            let next = a.sampler.next_token(&logits[i]);
+            let next = a.sampler.next_token(logits.row(i));
             if a.first_token_ns.is_none() {
                 let ns = a.started.elapsed().as_nanos() as u64;
                 a.first_token_ns = Some(ns);

@@ -4,12 +4,20 @@
 //! expert dispatch are the same code the scoring forward runs, so the
 //! two paths can no longer drift.
 //!
+//! **Zero-allocation steady state (DESIGN.md §4):** every buffer the
+//! decode loop touches lives in a scratch arena owned by its driver —
+//! [`SessionScratch`] per session (projection/attention/router/
+//! dispatch buffers, reserved up front so the growing KV window never
+//! reallocates) and [`StepScratch`] per fused-batch driver. After the
+//! first step at a given batch shape, `step_many_into` performs no
+//! heap allocation in the attention/dispatch/GEMM paths
+//! (`tests/zero_alloc.rs` asserts this with a counting allocator).
+//!
 //! ODP at decode time (paper Sec. 3.3 applied autoregressively): the
 //! w1/w0 ratio rule is exact; Eq.-6 token protection needs attention
 //! *received from future queries*, which doesn't exist yet for the
 //! token being decoded, so protection falls back to the L1-norm factor
-//! of Eq. 6 alone — a token whose hidden state has large ‖t‖₁ keeps
-//! both experts. The threshold is the calibrated (1-protect_ratio)
+//! of Eq. 6 alone. The threshold is the calibrated (1-protect_ratio)
 //! percentile of training-distribution L1 norms (see
 //! `DecodeOdp::calibrate`); divergence from the paper documented in
 //! DESIGN.md §2.
@@ -17,20 +25,77 @@
 //! `prefill` runs the whole prompt as ONE batched full-sequence pass
 //! that fills the KV cache in a single shot (not S sequential steps);
 //! `step_many` advances several sessions at once, dispatching each
-//! expert at most once per layer across the whole batch (the fused
-//! batcher step, DESIGN.md §3).
+//! expert at most once per layer per iteration (the fused batcher
+//! step, DESIGN.md §3), with per-session attention fanned out across
+//! the `WorkerPool` (disjoint KV caches and output rows, so pooled
+//! results are bit-exact with serial).
 
 use std::sync::Arc;
 
+use crate::config::ModelConfig;
 use crate::moe::exec::{attention, dispatch, router};
+use crate::moe::exec::attention::AttnScratch;
+use crate::moe::exec::dispatch::{DispatchMode, DispatchScratch};
 use crate::moe::model::{MoeModel, RunStats, RMS_EPS};
-use crate::tensor::{add_inplace, rmsnorm, Mat};
+use crate::quant::QmScratch;
+use crate::tensor::{
+    add_inplace, matmul_reset_into, rmsnorm_into, vecmat_into, Mat,
+};
+use crate::util::pool::{SendPtr, WorkerPool};
 
 pub use crate::moe::exec::router::DecodeOdp;
+
+/// Per-session attention fan-out gate: total score+mix work
+/// (Σ klen · d) below this stays serial in `step_many_into`.
+const SESSION_ATTN_MIN_WORK: usize = 65_536;
 
 struct LayerKv {
     k: Mat, // [max_seq, D]
     v: Mat,
+}
+
+/// Per-session scratch arena: every intermediate of the layer stack,
+/// reused across steps. Buffers are reserved for the session's
+/// steady-state decode shapes at construction, so their pointers stay
+/// stable from the first step on.
+pub struct SessionScratch {
+    pub attn: AttnScratch,
+    pub attn_out: Mat,
+    pub x: Mat,
+    pub h: Mat,
+    pub q: Mat,
+    pub k: Mat,
+    pub v: Mat,
+    pub proj: Mat,
+    pub probs: Mat,
+    pub moe_y: Mat,
+    pub xf: Mat,
+    pub topk: Vec<Vec<(usize, f32)>>,
+    pub dispatch: DispatchScratch,
+    pub qs: QmScratch,
+}
+
+impl SessionScratch {
+    fn new(cfg: &ModelConfig) -> SessionScratch {
+        let mut attn = AttnScratch::new();
+        attn.reserve(cfg.head_dim(), cfg.max_seq);
+        SessionScratch {
+            attn,
+            attn_out: Mat::zeros(0, 0),
+            x: Mat::zeros(0, 0),
+            h: Mat::zeros(0, 0),
+            q: Mat::zeros(0, 0),
+            k: Mat::zeros(0, 0),
+            v: Mat::zeros(0, 0),
+            proj: Mat::zeros(0, 0),
+            probs: Mat::zeros(0, 0),
+            moe_y: Mat::zeros(0, 0),
+            xf: Mat::zeros(0, 0),
+            topk: Vec::new(),
+            dispatch: DispatchScratch::new(),
+            qs: QmScratch::new(),
+        }
+    }
 }
 
 pub struct DecodeSession {
@@ -41,6 +106,7 @@ pub struct DecodeSession {
     /// Same accounting struct as the scoring path (`RunStats`), so
     /// pruning metrics mean the same thing on both paths.
     pub stats: RunStats,
+    pub scratch: SessionScratch,
 }
 
 impl DecodeSession {
@@ -50,7 +116,8 @@ impl DecodeSession {
             .map(|_| LayerKv { k: Mat::zeros(s, d), v: Mat::zeros(s, d) })
             .collect();
         let stats = RunStats::new(model.cfg.n_layers, model.cfg.n_experts);
-        DecodeSession { model, kv, pos: 0, odp, stats }
+        let scratch = SessionScratch::new(&model.cfg);
+        DecodeSession { model, kv, pos: 0, odp, stats, scratch }
     }
 
     pub fn remaining(&self) -> usize {
@@ -68,20 +135,36 @@ impl DecodeSession {
     /// Feed the whole prompt in ONE batched full-sequence pass (fills
     /// the KV cache in a single shot); returns last-position logits.
     pub fn prefill(&mut self, tokens: &[u32]) -> Vec<f32> {
-        if tokens.is_empty() {
-            return Vec::new();
+        let mut logits = Vec::new();
+        self.prefill_into(tokens, &mut logits);
+        logits
+    }
+
+    /// `prefill` into a caller-owned logits buffer (left empty for an
+    /// empty prompt).
+    pub fn prefill_into(&mut self, tokens: &[u32], logits: &mut Vec<f32>) {
+        logits.clear();
+        if !tokens.is_empty() {
+            self.append(tokens, logits);
         }
-        self.append(tokens)
     }
 
     /// Append one token, return next-token logits.
     pub fn step(&mut self, token: u32) -> Vec<f32> {
-        self.append(&[token])
+        let mut logits = Vec::new();
+        self.step_into(token, &mut logits);
+        logits
+    }
+
+    /// `step` into a caller-owned logits buffer — with a warmed buffer
+    /// this is the zero-allocation single-session decode path.
+    pub fn step_into(&mut self, token: u32, logits: &mut Vec<f32>) {
+        self.append(&[token], logits);
     }
 
     /// Append `tokens` at positions `pos..pos+T` in one batched pass
-    /// and return the logits of the last appended position.
-    fn append(&mut self, tokens: &[u32]) -> Vec<f32> {
+    /// and write the logits of the last appended position.
+    fn append(&mut self, tokens: &[u32], logits: &mut Vec<f32>) {
         let model = self.model.clone();
         let cfg = &model.cfg;
         let d = cfg.d_model;
@@ -91,72 +174,179 @@ impl DecodeSession {
         assert!(pos0 + t_new <= cfg.max_seq, "KV cache exhausted");
         self.pos += t_new;
         self.stats.tokens_seen += t_new;
+        // multi-token appends (prefill) pool attention across heads;
+        // single-token decode stays serial (it is pooled across
+        // sessions by `step_many_into` instead)
+        let attn_pool =
+            if t_new > 1 { Some(WorkerPool::global()) } else { None };
 
-        let mut x = model.embed(tokens, pos0);
-        for (li, layer) in model.layers.iter().enumerate() {
-            // attention with KV cache (shared kernel, append shape)
-            let h = rmsnorm(&x, &layer.attn_norm, RMS_EPS);
-            let q = layer.wq.matmul(&h);
-            let knew = layer.wk.matmul(&h);
-            let vnew = layer.wv.matmul(&h);
-            let cache = &mut self.kv[li];
-            for i in 0..t_new {
-                cache.k.row_mut(pos0 + i).copy_from_slice(knew.row(i));
-                cache.v.row_mut(pos0 + i).copy_from_slice(vnew.row(i));
-            }
-            let attn = attention::causal_attention(
-                &q, &cache.k, &cache.v, pos0 + t_new, cfg.n_heads, false,
-            );
-            let proj = layer.wo.matmul(&attn.out);
-            add_inplace(&mut x, &proj);
+        let (kv, sc, stats, odp) = (
+            &mut self.kv,
+            &mut self.scratch,
+            &mut self.stats,
+            self.odp.as_ref(),
+        );
 
-            // MoE with decode-time ODP (shared router + dispatch)
-            let h = rmsnorm(&x, &layer.ffn_norm, RMS_EPS);
-            let probs = router::gate_probs(&h, &layer.gate);
-            let topk: Vec<Vec<(usize, f32)>> = (0..t_new)
-                .map(|t| {
-                    router::decode_select(
-                        probs.row(t),
-                        h.row(t),
-                        cfg.top_k,
-                        li,
-                        self.odp.as_ref(),
-                        &mut self.stats,
-                    )
-                })
-                .collect();
-            let batches = dispatch::dispatch_experts(
-                &h,
-                &topk,
-                &layer.experts,
-                None,
-                dispatch::DispatchMode::Auto,
-            );
-            let y = dispatch::scatter(&batches, t_new, d);
-            add_inplace(&mut x, &y);
+        // token + positional embedding at this session's positions
+        sc.x.resize_to(t_new, d);
+        for (t, &tok) in tokens.iter().enumerate() {
+            model.embed_row(tok, pos0 + t, sc.x.row_mut(t));
         }
 
-        let xf = rmsnorm(&x, &model.final_norm, RMS_EPS);
+        for (li, layer) in model.layers.iter().enumerate() {
+            // attention with KV cache (shared kernel, append shape)
+            rmsnorm_into(&sc.x, &layer.attn_norm, RMS_EPS, &mut sc.h);
+            layer.wq.matmul_into(&sc.h, &mut sc.q, &mut sc.qs);
+            layer.wk.matmul_into(&sc.h, &mut sc.k, &mut sc.qs);
+            layer.wv.matmul_into(&sc.h, &mut sc.v, &mut sc.qs);
+            let cache = &mut kv[li];
+            for i in 0..t_new {
+                cache.k.row_mut(pos0 + i).copy_from_slice(sc.k.row(i));
+                cache.v.row_mut(pos0 + i).copy_from_slice(sc.v.row(i));
+            }
+            attention::causal_attention_into(
+                &sc.q, &cache.k, &cache.v, pos0 + t_new, cfg.n_heads, false,
+                attn_pool, &mut sc.attn, &mut sc.attn_out,
+            );
+            layer.wo.matmul_into(&sc.attn_out, &mut sc.proj, &mut sc.qs);
+            add_inplace(&mut sc.x, &sc.proj);
+
+            // MoE with decode-time ODP (shared router + dispatch)
+            rmsnorm_into(&sc.x, &layer.ffn_norm, RMS_EPS, &mut sc.h);
+            router::gate_probs_into(&sc.h, &layer.gate, &mut sc.probs);
+            while sc.topk.len() < t_new {
+                sc.topk.push(Vec::new());
+            }
+            for t in 0..t_new {
+                router::decode_select_into(
+                    sc.probs.row(t),
+                    sc.h.row(t),
+                    cfg.top_k,
+                    li,
+                    odp,
+                    stats,
+                    &mut sc.topk[t],
+                );
+            }
+            dispatch::dispatch_experts_into(
+                &sc.h,
+                &sc.topk[..t_new],
+                &layer.experts,
+                None,
+                DispatchMode::Auto,
+                &mut sc.dispatch,
+            );
+            dispatch::scatter_into(&sc.dispatch, t_new, d, &mut sc.moe_y);
+            add_inplace(&mut sc.x, &sc.moe_y);
+        }
+
+        rmsnorm_into(&sc.x, &model.final_norm, RMS_EPS, &mut sc.xf);
         // only the last position's logits are the decode output
-        let last = xf.slice_rows(t_new - 1, t_new);
-        last.matmul(&model.lm_head).data
+        vecmat_into(sc.xf.row(t_new - 1), &model.lm_head, logits);
     }
 }
 
+/// Per-driver scratch for the fused multi-session step: batched
+/// projections, routing selections, dispatch buffers, and the logits
+/// matrix `step_many_into` returns a view of. `dispatch_mode` defaults
+/// to `Auto`; `benches/hotpath.rs` overrides it to compare the pool
+/// against the legacy spawn-per-step baseline.
+pub struct StepScratch {
+    pub dispatch_mode: DispatchMode,
+    pub x: Mat,
+    pub h: Mat,
+    pub q: Mat,
+    pub k: Mat,
+    pub v: Mat,
+    pub attn_out: Mat,
+    pub proj: Mat,
+    pub probs: Mat,
+    pub moe_y: Mat,
+    pub xf: Mat,
+    pub logits: Mat,
+    pub topk: Vec<Vec<(usize, f32)>>,
+    pub dispatch: DispatchScratch,
+    pub qs: QmScratch,
+    positions: Vec<usize>,
+}
+
+impl Default for StepScratch {
+    fn default() -> StepScratch {
+        StepScratch {
+            dispatch_mode: DispatchMode::Auto,
+            x: Mat::zeros(0, 0),
+            h: Mat::zeros(0, 0),
+            q: Mat::zeros(0, 0),
+            k: Mat::zeros(0, 0),
+            v: Mat::zeros(0, 0),
+            attn_out: Mat::zeros(0, 0),
+            proj: Mat::zeros(0, 0),
+            probs: Mat::zeros(0, 0),
+            moe_y: Mat::zeros(0, 0),
+            xf: Mat::zeros(0, 0),
+            logits: Mat::zeros(0, 0),
+            topk: Vec::new(),
+            dispatch: DispatchScratch::new(),
+            qs: QmScratch::new(),
+            positions: Vec::new(),
+        }
+    }
+}
+
+impl StepScratch {
+    pub fn new() -> StepScratch {
+        StepScratch::default()
+    }
+}
+
+/// One session's decode attention inside the fused step: append this
+/// step's K/V rows to the session's cache, run single-query attention
+/// with the session-owned scratch, and write the result into row `i`
+/// of the shared attention output (disjoint across sessions).
+fn session_attention(
+    sess: &mut DecodeSession,
+    li: usize,
+    i: usize,
+    t: usize,
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    n_heads: usize,
+    attn_base: SendPtr<f32>,
+    d: usize,
+) {
+    let cache = &mut sess.kv[li];
+    cache.k.row_mut(t).copy_from_slice(k.row(i));
+    cache.v.row_mut(t).copy_from_slice(v.row(i));
+    let sc = &mut sess.scratch;
+    sc.q.resize_to(1, d);
+    sc.q.row_mut(0).copy_from_slice(q.row(i));
+    attention::causal_attention_into(
+        &sc.q, &cache.k, &cache.v, t + 1, n_heads, false, None, &mut sc.attn,
+        &mut sc.attn_out,
+    );
+    // Safety: session i owns row i of the shared output exclusively.
+    let orow =
+        unsafe { std::slice::from_raw_parts_mut(attn_base.0.add(i * d), d) };
+    orow.copy_from_slice(sc.attn_out.row(0));
+}
+
 /// Advance several sessions (sharing one model) by one token each in a
-/// fused pass: attention runs per session over its own KV cache, while
-/// layer projections, routing, and expert dispatch run once over the
-/// whole batch — each expert executes at most once per layer per
-/// iteration, regardless of how many sessions selected it.
-/// Returns next-token logits per session, identical to calling
-/// `step` on each session individually.
-pub fn step_many(sessions: &mut [&mut DecodeSession], tokens: &[u32])
-                 -> Vec<Vec<f32>> {
+/// fused pass: attention runs per session over its own KV cache
+/// (pool-parallel across sessions), while layer projections, routing,
+/// and expert dispatch run once over the whole batch — each expert
+/// executes at most once per layer per iteration, regardless of how
+/// many sessions selected it. Returns a view of the per-session
+/// next-token logits ([B, vocab], row i = session i), identical to
+/// calling `step` on each session individually.
+pub fn step_many_into<'a>(
+    sessions: &mut [&mut DecodeSession],
+    tokens: &[u32],
+    sc: &'a mut StepScratch,
+) -> &'a Mat {
     let b = sessions.len();
     assert_eq!(b, tokens.len(), "one token per session");
-    if b == 0 {
-        return Vec::new();
-    }
+    assert!(b > 0, "empty fused step");
     let model = sessions[0].model.clone();
     for s in sessions.iter() {
         assert!(Arc::ptr_eq(&s.model, &model), "fused step needs a shared model");
@@ -164,71 +354,100 @@ pub fn step_many(sessions: &mut [&mut DecodeSession], tokens: &[u32])
     }
     let cfg = &model.cfg;
     let d = cfg.d_model;
+
     // each session's token embeds at that session's own position
-    let positions: Vec<usize> = sessions.iter().map(|s| s.pos).collect();
-    let mut x = Mat::zeros(b, d);
+    sc.positions.clear();
+    sc.x.resize_to(b, d);
     for (i, s) in sessions.iter_mut().enumerate() {
-        let emb = model.tok_emb.row(tokens[i] as usize);
-        let pos = model.pos_emb.row(s.pos);
-        for c in 0..d {
-            x.data[i * d + c] = emb[c] + pos[c];
-        }
+        sc.positions.push(s.pos);
+        model.embed_row(tokens[i], s.pos, sc.x.row_mut(i));
         s.pos += 1;
         s.stats.tokens_seen += 1;
     }
 
+    let pool = WorkerPool::global();
+    let attn_work: usize = sc.positions.iter().map(|p| (p + 1) * d).sum();
+
     for (li, layer) in model.layers.iter().enumerate() {
         // batched projections; per-session attention over its own cache
-        let h = rmsnorm(&x, &layer.attn_norm, RMS_EPS);
-        let q = layer.wq.matmul(&h);
-        let k = layer.wk.matmul(&h);
-        let v = layer.wv.matmul(&h);
-        let mut attn_out = Mat::zeros(b, d);
-        for (i, sess) in sessions.iter_mut().enumerate() {
-            let t = positions[i];
-            let cache = &mut sess.kv[li];
-            cache.k.row_mut(t).copy_from_slice(k.row(i));
-            cache.v.row_mut(t).copy_from_slice(v.row(i));
-            let qi = q.slice_rows(i, i + 1);
-            let a = attention::causal_attention(
-                &qi, &cache.k, &cache.v, t + 1, cfg.n_heads, false,
-            );
-            attn_out.row_mut(i).copy_from_slice(a.out.row(0));
+        rmsnorm_into(&sc.x, &layer.attn_norm, RMS_EPS, &mut sc.h);
+        layer.wq.matmul_into(&sc.h, &mut sc.q, &mut sc.qs);
+        layer.wk.matmul_into(&sc.h, &mut sc.k, &mut sc.qs);
+        layer.wv.matmul_into(&sc.h, &mut sc.v, &mut sc.qs);
+        sc.attn_out.resize_to(b, d);
+        {
+            let attn_base = SendPtr(sc.attn_out.data.as_mut_ptr());
+            let (q, k, v) = (&sc.q, &sc.k, &sc.v);
+            let positions = &sc.positions;
+            let nh = cfg.n_heads;
+            if b >= 2
+                && pool.width() > 1
+                && attn_work >= SESSION_ATTN_MIN_WORK
+                && !WorkerPool::on_worker()
+            {
+                let sptr = SendPtr(sessions.as_mut_ptr());
+                pool.for_each(b, move |i| {
+                    // Safety: indices are unique per region, so each
+                    // task holds the only &mut to its session.
+                    let sess = unsafe { &mut **sptr.0.add(i) };
+                    session_attention(sess, li, i, positions[i], q, k, v, nh,
+                                      attn_base, d);
+                });
+            } else {
+                for i in 0..b {
+                    session_attention(&mut *sessions[i], li, i, positions[i],
+                                      q, k, v, nh, attn_base, d);
+                }
+            }
         }
-        let proj = layer.wo.matmul(&attn_out);
-        add_inplace(&mut x, &proj);
+        layer.wo.matmul_into(&sc.attn_out, &mut sc.proj, &mut sc.qs);
+        add_inplace(&mut sc.x, &sc.proj);
 
         // fused MoE: route the whole batch, dispatch each expert once
-        let h = rmsnorm(&x, &layer.ffn_norm, RMS_EPS);
-        let probs = router::gate_probs(&h, &layer.gate);
-        let topk: Vec<Vec<(usize, f32)>> = sessions
-            .iter_mut()
-            .enumerate()
-            .map(|(i, sess)| {
-                router::decode_select(
-                    probs.row(i),
-                    h.row(i),
-                    cfg.top_k,
-                    li,
-                    sess.odp.as_ref(),
-                    &mut sess.stats,
-                )
-            })
-            .collect();
-        let batches = dispatch::dispatch_experts(
-            &h,
-            &topk,
+        rmsnorm_into(&sc.x, &layer.ffn_norm, RMS_EPS, &mut sc.h);
+        router::gate_probs_into(&sc.h, &layer.gate, &mut sc.probs);
+        while sc.topk.len() < b {
+            sc.topk.push(Vec::new());
+        }
+        for (i, sess) in sessions.iter_mut().enumerate() {
+            router::decode_select_into(
+                sc.probs.row(i),
+                sc.h.row(i),
+                cfg.top_k,
+                li,
+                sess.odp.as_ref(),
+                &mut sess.stats,
+                &mut sc.topk[i],
+            );
+        }
+        dispatch::dispatch_experts_into(
+            &sc.h,
+            &sc.topk[..b],
             &layer.experts,
             None,
-            dispatch::DispatchMode::Auto,
+            sc.dispatch_mode,
+            &mut sc.dispatch,
         );
-        let y = dispatch::scatter(&batches, b, d);
-        add_inplace(&mut x, &y);
+        dispatch::scatter_into(&sc.dispatch, b, d, &mut sc.moe_y);
+        add_inplace(&mut sc.x, &sc.moe_y);
     }
 
-    let xf = rmsnorm(&x, &model.final_norm, RMS_EPS);
-    let logits = xf.matmul(&model.lm_head);
-    (0..b).map(|i| logits.row(i).to_vec()).collect()
+    rmsnorm_into(&sc.x, &model.final_norm, RMS_EPS, &mut sc.xf);
+    matmul_reset_into(&sc.xf, &model.lm_head, &mut sc.logits);
+    &sc.logits
+}
+
+/// Allocating wrapper over [`step_many_into`] (tests and one-off
+/// callers; the batcher reuses a `StepScratch` across iterations).
+pub fn step_many(sessions: &mut [&mut DecodeSession], tokens: &[u32])
+                 -> Vec<Vec<f32>> {
+    assert_eq!(sessions.len(), tokens.len(), "one token per session");
+    if sessions.is_empty() {
+        return Vec::new();
+    }
+    let mut sc = StepScratch::new();
+    let logits = step_many_into(sessions, tokens, &mut sc);
+    (0..logits.rows).map(|i| logits.row(i).to_vec()).collect()
 }
 
 #[cfg(test)]
@@ -327,6 +546,43 @@ mod tests {
         for (s, p) in fused.iter().zip(&prompts) {
             assert_eq!(s.pos, p.len() + 1);
         }
+    }
+
+    #[test]
+    fn step_scratch_buffers_are_pointer_stable() {
+        let cfg = ModelConfig::test_tiny();
+        let model = Arc::new(random_model(&cfg, 6));
+        let mut sessions: Vec<DecodeSession> = (0..3)
+            .map(|i| {
+                let mut s = DecodeSession::new(model.clone(), None);
+                s.prefill(&[1, 4 + i as u32, 9]);
+                s
+            })
+            .collect();
+        let mut refs: Vec<&mut DecodeSession> =
+            sessions.iter_mut().collect();
+        let toks = [7u32, 8, 9];
+        let mut sc = StepScratch::new();
+        step_many_into(&mut refs, &toks, &mut sc);
+        let ptrs = [
+            sc.x.data.as_ptr(),
+            sc.h.data.as_ptr(),
+            sc.probs.data.as_ptr(),
+            sc.logits.data.as_ptr(),
+        ];
+        for _ in 0..6 {
+            step_many_into(&mut refs, &toks, &mut sc);
+        }
+        assert_eq!(
+            ptrs,
+            [
+                sc.x.data.as_ptr(),
+                sc.h.data.as_ptr(),
+                sc.probs.data.as_ptr(),
+                sc.logits.data.as_ptr(),
+            ],
+            "steady-state step buffers must not reallocate"
+        );
     }
 
     #[test]

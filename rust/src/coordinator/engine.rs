@@ -31,6 +31,9 @@ pub struct McEngine {
 impl McEngine {
     pub fn new(model: MoeModel, odp: Option<OdpPolicy>,
                decode_odp: Option<DecodeOdp>) -> McEngine {
+        // start the worker pool now so its spawn cost is paid at
+        // construction, not inside the first request
+        let _ = crate::util::pool::WorkerPool::global();
         McEngine {
             model: Arc::new(model),
             odp,
@@ -66,7 +69,11 @@ impl McEngine {
         let mut sess =
             DecodeSession::new(self.model.clone(), self.decode_odp.clone());
         let started = Instant::now();
-        let mut logits = sess.prefill(&req.prompt);
+        // one logits buffer for the whole request: after prefill the
+        // decode loop reuses it (and the session's scratch arena), so
+        // steady-state stepping allocates nothing
+        let mut logits = Vec::new();
+        sess.prefill_into(&req.prompt, &mut logits);
         let ttft_ns = started.elapsed().as_nanos() as u64;
         self.metrics.record_ttft(ttft_ns);
         let mut tokens = Vec::with_capacity(req.max_new_tokens);
@@ -83,7 +90,7 @@ impl McEngine {
                 break;
             }
             let t0 = Instant::now();
-            logits = sess.step(next);
+            sess.step_into(next, &mut logits);
             self.metrics.record_tpot(t0.elapsed().as_nanos() as u64);
         }
         Metrics::inc(&self.metrics.tokens_generated, tokens.len() as u64);

@@ -23,7 +23,9 @@ pub mod sampling;
 pub mod server;
 
 pub use batcher::Batcher;
-pub use decode::{step_many, DecodeOdp, DecodeSession};
+pub use decode::{
+    step_many, step_many_into, DecodeOdp, DecodeSession, StepScratch,
+};
 pub use engine::McEngine;
 pub use memmodel::{Platform, PLATFORMS};
 pub use metrics::Metrics;

@@ -3,7 +3,7 @@
 
 use crate::data::{pack_stream, Split, TextChannel};
 use crate::moe::model::{ForwardOpts, MoeModel, NullSink, OdpPolicy, RunStats};
-use crate::tensor::log_softmax;
+use crate::tensor::log_softmax_into;
 use crate::util::rng::Rng;
 
 #[derive(Debug, Clone)]
@@ -23,13 +23,14 @@ pub fn perplexity(model: &MoeModel, split: Split, seed: u64, n_seqs: usize,
     let mut nll = 0.0f64;
     let mut count = 0usize;
     let mut stats = RunStats::new(model.cfg.n_layers, model.cfg.n_experts);
+    let mut lp = Vec::new();
     for _ in 0..n_seqs {
         let toks = pack_stream(&mut rng, &text, seq_len, split);
         let opts = ForwardOpts { odp, ..Default::default() };
         let out = model.forward(&toks, &opts, &mut NullSink);
         stats.merge(&out.stats);
         for t in 1..toks.len() {
-            let lp = log_softmax(out.logits.row(t - 1));
+            log_softmax_into(out.logits.row(t - 1), &mut lp);
             nll -= lp[toks[t] as usize] as f64;
             count += 1;
         }

@@ -8,7 +8,7 @@ use crate::data::niah::niah_sample;
 use crate::data::tasks::{eval_sample, fewshot_sample, EvalSample};
 use crate::data::TextChannel;
 use crate::moe::model::{ForwardOpts, MoeModel, NullSink, OdpPolicy, RunStats};
-use crate::tensor::log_softmax;
+use crate::tensor::log_softmax_into;
 use crate::util::rng::Rng;
 use crate::util::stats::argmax;
 
@@ -22,7 +22,8 @@ pub fn score_sample(model: &MoeModel, sample: &EvalSample,
         let opts = ForwardOpts { odp, ..Default::default() };
         let out = model.forward(&sample.prompt, &opts, &mut NullSink);
         stats.merge(&out.stats);
-        let lp = log_softmax(out.logits.row(sample.prompt.len() - 1));
+        let mut lp = Vec::new();
+        log_softmax_into(out.logits.row(sample.prompt.len() - 1), &mut lp);
         let scores: Vec<f32> = sample
             .choices
             .iter()
@@ -126,6 +127,7 @@ pub fn eval_cot_chain(model: &MoeModel, steps: usize, n_chains: usize,
     use crate::config::{BOS, NUM_BASE, NUM_COUNT, SEP, TASK_BASE};
     let mut rng = Rng::new(seed);
     let mut correct_chains = 0usize;
+    let mut lp = Vec::new();
     for _ in 0..n_chains {
         let mut acc = rng.below(NUM_COUNT as usize) as u32;
         let mut all_ok = true;
@@ -135,7 +137,7 @@ pub fn eval_cot_chain(model: &MoeModel, steps: usize, n_chains: usize,
             let prompt = vec![BOS, TASK_BASE + 3, NUM_BASE + acc, NUM_BASE + b, SEP];
             let opts = ForwardOpts { odp, ..Default::default() };
             let out = model.forward(&prompt, &opts, &mut NullSink);
-            let lp = log_softmax(out.logits.row(prompt.len() - 1));
+            log_softmax_into(out.logits.row(prompt.len() - 1), &mut lp);
             // argmax over the full number range (harder than 4-way MC)
             let pred = (0..NUM_COUNT)
                 .max_by(|&a, &b| {

@@ -32,7 +32,7 @@ fn load_fp(dir: &Path) -> Result<MoeModel> {
     let cfg = ModelConfig::load(&dir.join("config.json"))
         .context("run `make artifacts` first")?;
     let wf = WeightFile::load(&dir.join("weights.mcwt"))?;
-    MoeModel::load_f32(&cfg, &wf)
+    MoeModel::load_f32(&cfg, wf)
 }
 
 /// The model a serving command drives: `--load model.mcqz` picks a

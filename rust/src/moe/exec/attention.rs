@@ -12,11 +12,21 @@
 //!     back to the L1 factor, see `exec::router`).
 //!
 //! One kernel serves both, so the scoring and decode paths can no
-//! longer drift apart numerically.
+//! longer drift apart numerically. The `_into` entry point writes into
+//! a caller-owned output through [`AttnScratch`] (zero-allocation
+//! decode, DESIGN.md §4) and can fan heads out across the
+//! `WorkerPool`: each head owns a disjoint column range of the output,
+//! so pooled and serial execution are bit-identical. The Eq.-6 map is
+//! a cross-head mean (a reduction), so `want_map` forces the serial
+//! path to keep its accumulation order fixed.
 
 use crate::tensor::{softmax_rows, Mat};
+use crate::util::pool::{SendPtr, WorkerPool};
 
 pub const NEG_INF: f32 = -1e30;
+
+/// Head-work volume (t·klen·d) below which the pool is not engaged.
+const ATTN_PAR_MIN_WORK: usize = 262_144;
 
 pub struct AttnOut {
     /// [T, D] concatenated head outputs (the input of wo).
@@ -26,11 +36,37 @@ pub struct AttnOut {
     pub a_mean: Option<Mat>,
 }
 
+/// Reusable per-context attention buffers: the transposed K panel and
+/// the score matrix. A `DecodeSession` owns one and calls
+/// [`AttnScratch::reserve`] up front so steady-state decode never
+/// reallocates as the KV window grows.
+#[derive(Debug, Default)]
+pub struct AttnScratch {
+    kht: Vec<f32>,
+    scores: Mat,
+}
+
+impl AttnScratch {
+    pub fn new() -> AttnScratch {
+        AttnScratch::default()
+    }
+
+    /// Pre-reserve for single-token decode against a KV window of up
+    /// to `max_klen` keys (buffer-pointer stability from step one).
+    pub fn reserve(&mut self, head_dim: usize, max_klen: usize) {
+        self.kht.reserve(head_dim * max_klen);
+        self.scores.data.reserve(max_klen);
+    }
+}
+
 /// Causal attention for the `q.rows` newest tokens against keys/values
 /// `0..klen`. Query row `i` sits at global position `klen - q.rows + i`
 /// and attends to keys `0..=klen - q.rows + i`. `k` and `v` must hold
 /// at least `klen` valid rows (decode passes the whole KV-cache
 /// buffer; scoring passes exactly the fresh projections).
+///
+/// Allocating wrapper over [`causal_attention_into`] (scoring path and
+/// tests; the decode loop uses the into-variant with its own scratch).
 pub fn causal_attention(
     q: &Mat,
     k: &Mat,
@@ -39,6 +75,39 @@ pub fn causal_attention(
     n_heads: usize,
     want_map: bool,
 ) -> AttnOut {
+    let mut scratch = AttnScratch::new();
+    let mut out = Mat::zeros(0, 0);
+    let a_mean = causal_attention_into(
+        q,
+        k,
+        v,
+        klen,
+        n_heads,
+        want_map,
+        Some(WorkerPool::global()),
+        &mut scratch,
+        &mut out,
+    );
+    AttnOut { out, a_mean }
+}
+
+/// Attention into a caller-owned `out` (resized + overwritten), with
+/// kht/score buffers from `scratch`. `pool: Some(..)` fans heads out
+/// when the map is not requested and the work clears the gate — each
+/// head writes out[:, head·hd ..] exclusively, so results are
+/// bit-identical to `pool: None`. Returns the Eq.-6 map if requested.
+#[allow(clippy::too_many_arguments)]
+pub fn causal_attention_into(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    klen: usize,
+    n_heads: usize,
+    want_map: bool,
+    pool: Option<&WorkerPool>,
+    scratch: &mut AttnScratch,
+    out: &mut Mat,
+) -> Option<Mat> {
     let t = q.rows;
     let d = q.cols;
     assert!(t >= 1 && klen >= t, "bad attention window: T={t} klen={klen}");
@@ -49,60 +118,112 @@ pub fn causal_attention(
     assert!(!want_map || pos0 == 0, "Eq.-6 map needs the full sequence");
     let scale = 1.0 / (hd as f32).sqrt();
 
-    let mut out = Mat::zeros(t, d);
+    out.resize_to(t, d);
+    out.data.fill(0.0);
+    let outbase = SendPtr(out.data.as_mut_ptr());
+
+    let pooled = match pool {
+        Some(p)
+            if !want_map
+                && n_heads >= 2
+                && p.width() > 1
+                && t * klen * d >= ATTN_PAR_MIN_WORK
+                && !WorkerPool::on_worker() =>
+        {
+            Some(p)
+        }
+        _ => None,
+    };
+    if let Some(p) = pooled {
+        p.for_each(n_heads, move |head| {
+            // per-head buffers: this is the prefill/scoring-scale
+            // path, outside the zero-alloc decode contract
+            let mut kht = Vec::new();
+            let mut scores = Mat::zeros(0, 0);
+            one_head(q, k, v, klen, pos0, head * hd, hd, scale, &mut kht,
+                     &mut scores, outbase, d);
+        });
+        return None;
+    }
+
     let mut a_mean = if want_map { Some(Mat::zeros(t, t)) } else { None };
-    // transposed K per head so the score loop vectorizes over j
-    // (EXPERIMENTS.md §Perf: ikj axpy instead of per-pair dots)
-    let mut kht = vec![0.0f32; hd * klen];
     for head in 0..n_heads {
-        let c0 = head * hd;
-        for j in 0..klen {
-            let krow = &k.row(j)[c0..c0 + hd];
-            for (dd, &kv) in krow.iter().enumerate() {
-                kht[dd * klen + j] = kv;
-            }
-        }
-        let mut scores = Mat::zeros(t, klen);
-        for i in 0..t {
-            let limit = pos0 + i; // last key this query may attend to
-            let qrow = &q.row(i)[c0..c0 + hd];
-            let srow = &mut scores.data[i * klen..(i + 1) * klen];
-            for (dd, &qv) in qrow.iter().enumerate() {
-                let kr = &kht[dd * klen..dd * klen + limit + 1];
-                for (sv, &kv) in srow[..=limit].iter_mut().zip(kr) {
-                    *sv += qv * kv;
-                }
-            }
-            for sv in srow[..=limit].iter_mut() {
-                *sv *= scale;
-            }
-            for sv in srow[limit + 1..].iter_mut() {
-                *sv = NEG_INF;
-            }
-        }
-        softmax_rows(&mut scores);
+        one_head(q, k, v, klen, pos0, head * hd, hd, scale,
+                 &mut scratch.kht, &mut scratch.scores, outbase, d);
         if let Some(am) = a_mean.as_mut() {
-            for (a, sc) in am.data.iter_mut().zip(&scores.data) {
+            for (a, sc) in am.data.iter_mut().zip(&scratch.scores.data) {
                 *a += sc / n_heads as f32;
             }
         }
-        // out[:, c0..c0+hd] += scores @ v[:, c0..c0+hd]
-        for i in 0..t {
-            let limit = pos0 + i;
-            for j in 0..=limit {
-                let a = scores.data[i * klen + j];
-                if a == 0.0 {
-                    continue;
-                }
-                let vrow = &v.row(j)[c0..c0 + hd];
-                let orow = &mut out.data[i * d + c0..i * d + c0 + hd];
-                for (o, &vv) in orow.iter_mut().zip(vrow) {
-                    *o += a * vv;
-                }
+    }
+    a_mean
+}
+
+/// One attention head over columns [c0, c0+hd): transpose K into
+/// `kht` so the score loop vectorizes over key index j (EXPERIMENTS.md
+/// §Perf), softmax, then accumulate scores @ v into the head's column
+/// range of the output (disjoint across heads — pool-safe).
+#[allow(clippy::too_many_arguments)]
+fn one_head(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    klen: usize,
+    pos0: usize,
+    c0: usize,
+    hd: usize,
+    scale: f32,
+    kht: &mut Vec<f32>,
+    scores: &mut Mat,
+    outbase: SendPtr<f32>,
+    d: usize,
+) {
+    let t = q.rows;
+    kht.resize(hd * klen, 0.0);
+    for j in 0..klen {
+        let krow = &k.row(j)[c0..c0 + hd];
+        for (dd, &kv) in krow.iter().enumerate() {
+            kht[dd * klen + j] = kv;
+        }
+    }
+    scores.resize_to(t, klen);
+    scores.data.fill(0.0);
+    for i in 0..t {
+        let limit = pos0 + i; // last key this query may attend to
+        let qrow = &q.row(i)[c0..c0 + hd];
+        let srow = &mut scores.data[i * klen..(i + 1) * klen];
+        for (dd, &qv) in qrow.iter().enumerate() {
+            let kr = &kht[dd * klen..dd * klen + limit + 1];
+            for (sv, &kv) in srow[..=limit].iter_mut().zip(kr) {
+                *sv += qv * kv;
+            }
+        }
+        for sv in srow[..=limit].iter_mut() {
+            *sv *= scale;
+        }
+        for sv in srow[limit + 1..].iter_mut() {
+            *sv = NEG_INF;
+        }
+    }
+    softmax_rows(scores);
+    // out[:, c0..c0+hd] += scores @ v[:, c0..c0+hd]
+    for i in 0..t {
+        let limit = pos0 + i;
+        // Safety: each head owns columns [c0, c0+hd) exclusively.
+        let orow = unsafe {
+            std::slice::from_raw_parts_mut(outbase.0.add(i * d + c0), hd)
+        };
+        for j in 0..=limit {
+            let a = scores.data[i * klen + j];
+            if a == 0.0 {
+                continue;
+            }
+            let vrow = &v.row(j)[c0..c0 + hd];
+            for (o, &vv) in orow.iter_mut().zip(vrow) {
+                *o += a * vv;
             }
         }
     }
-    AttnOut { out, a_mean }
 }
 
 /// Eq. 6: I_j = ||t_j||_1 * mean_{i >= j} A[i, j] (head-averaged A).
@@ -171,6 +292,43 @@ mod tests {
                 assert_eq!(am.at(i, j), 0.0, "future leak at ({i},{j})");
             }
         }
+    }
+
+    #[test]
+    fn pooled_heads_bit_match_serial() {
+        // shape chosen to clear ATTN_PAR_MIN_WORK so the pool engages
+        // (when this host has >1 core; with 1 core both runs inline)
+        let (s, d, nh) = (64, 64, 8);
+        let (q, k, v) = qkv(3, s, d);
+        let mut scratch = AttnScratch::new();
+        let mut serial = Mat::zeros(0, 0);
+        causal_attention_into(&q, &k, &v, s, nh, false, None, &mut scratch,
+                              &mut serial);
+        let mut pooled = Mat::zeros(0, 0);
+        causal_attention_into(&q, &k, &v, s, nh, false,
+                              Some(WorkerPool::global()), &mut scratch,
+                              &mut pooled);
+        assert_eq!(serial.data, pooled.data, "head fan-out must be bit-exact");
+    }
+
+    #[test]
+    fn scratch_reuse_is_pointer_stable() {
+        let (s, d, nh) = (12, 8, 2);
+        let (q, k, v) = qkv(4, s, d);
+        let mut scratch = AttnScratch::new();
+        scratch.reserve(d / nh, s);
+        let mut out = Mat::zeros(0, 0);
+        causal_attention_into(&q, &k, &v, s, nh, false, None, &mut scratch,
+                              &mut out);
+        let (kp, sp, op) = (scratch.kht.as_ptr(), scratch.scores.data.as_ptr(),
+                            out.data.as_ptr());
+        let first = out.clone();
+        causal_attention_into(&q, &k, &v, s, nh, false, None, &mut scratch,
+                              &mut out);
+        assert_eq!(scratch.kht.as_ptr(), kp);
+        assert_eq!(scratch.scores.data.as_ptr(), sp);
+        assert_eq!(out.data.as_ptr(), op);
+        assert_eq!(out.data, first.data);
     }
 
     #[test]

@@ -2,30 +2,42 @@
 //! run every active expert's SwiGLU FFN (optionally in parallel), and
 //! scatter the weighted outputs back to token order.
 //!
-//! Threading uses `std::thread::scope` — the crate is deliberately
-//! dependency-free (no rayon), and per-layer expert FFNs are the one
-//! place with enough coarse-grained, disjoint work to pay for thread
-//! spawns (DESIGN.md §4; measured in `benches/hotpath.rs`, recorded in
-//! BENCH_dispatch.json).
+//! Parallel execution runs on the persistent `util::pool::WorkerPool`
+//! (DESIGN.md §4): each active expert's batch is one pool task owning
+//! its `&mut ExpertBatch`, so pooled results are bit-exact with serial
+//! execution. The pre-pool behavior — one `std::thread::scope` spawn
+//! per expert per call — is kept as `DispatchMode::SpawnScope`, the
+//! baseline `benches/hotpath.rs` measures the pool against.
+//!
+//! [`DispatchScratch`] keeps the per-expert gather/`gated`/`y` buffers
+//! alive across calls (keyed by expert index), so the steady-state
+//! decode loop gathers and executes without heap allocation.
 
 use crate::moe::model::Expert;
-use crate::tensor::Mat;
+use crate::tensor::{axpy, Mat};
+use crate::util::pool::{SendPtr, WorkerPool};
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DispatchMode {
     Serial,
+    /// Force pool-parallel execution (benchmarks, parity tests).
     Threaded,
-    /// Thread only when the expert work dwarfs spawn cost (and the
-    /// host has more than one core); single-token decode stays serial.
+    /// Pool-parallel only when the expert work dwarfs region overhead
+    /// (and the pool has width); single-token decode stays serial.
     Auto,
+    /// Legacy baseline: spawn one scoped OS thread per active expert
+    /// per call. Kept only so `benches/hotpath.rs` can measure the
+    /// persistent pool against what it replaced.
+    SpawnScope,
 }
 
 /// Minimum expert-FFN FLOP volume (~2 ms of scalar work) before Auto
-/// switches to threads; below this, spawn overhead dominates.
+/// goes parallel; below this, region overhead dominates.
 const AUTO_THREAD_MIN_FLOPS: u64 = 8_000_000;
 
 /// One expert's gathered batch: the rows it serves, its inputs, the
 /// gated hidden (kept for `CalibSink::expert_batch`), and its output.
+/// `tmp`/`qs` are kernel scratch reused across calls.
 pub struct ExpertBatch {
     pub expert: usize,
     /// (token row in `h`, renormalized routing weight)
@@ -33,6 +45,79 @@ pub struct ExpertBatch {
     pub x: Mat,
     pub gated: Mat,
     pub y: Mat,
+    pub(crate) tmp: Mat,
+    pub(crate) qs: crate::quant::QmScratch,
+}
+
+impl ExpertBatch {
+    fn empty(expert: usize) -> ExpertBatch {
+        ExpertBatch {
+            expert,
+            rows: Vec::new(),
+            x: Mat::zeros(0, 0),
+            gated: Mat::zeros(0, 0),
+            y: Mat::zeros(0, 0),
+            tmp: Mat::zeros(0, 0),
+            qs: crate::quant::QmScratch::new(),
+        }
+    }
+}
+
+/// Persistent per-expert batches (indexed by expert) plus the list of
+/// experts active in the current call. Owned by whoever drives a
+/// decode loop (`SessionScratch`, `StepScratch`) or created ad hoc by
+/// the allocating [`dispatch_experts`] wrapper.
+pub struct DispatchScratch {
+    batches: Vec<ExpertBatch>,
+    active: Vec<usize>,
+    /// Worst-case pre-reservation only pays off when the scratch is
+    /// reused across calls (the zero-alloc decode arenas); the
+    /// allocating wrapper's one-shot scratch skips it and lets each
+    /// active batch size itself from the rows actually routed.
+    reserve_worst_case: bool,
+}
+
+impl Default for DispatchScratch {
+    fn default() -> DispatchScratch {
+        DispatchScratch::new()
+    }
+}
+
+impl DispatchScratch {
+    pub fn new() -> DispatchScratch {
+        DispatchScratch {
+            batches: Vec::new(),
+            active: Vec::new(),
+            reserve_worst_case: true,
+        }
+    }
+
+    fn one_shot() -> DispatchScratch {
+        DispatchScratch { reserve_worst_case: false, ..DispatchScratch::new() }
+    }
+
+    /// Batches of the experts active in the last dispatch, ascending
+    /// expert order.
+    pub fn active_batches(&self) -> impl Iterator<Item = &ExpertBatch> {
+        self.active.iter().map(|&e| &self.batches[e])
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    /// Gather-buffer pointer of expert `e` (stability assertions in
+    /// the zero-alloc tests).
+    pub fn probe_x_ptr(&self, e: usize) -> *const f32 {
+        self.batches[e].x.data.as_ptr()
+    }
+}
+
+fn reserve_mat(m: &mut Mat, rows: usize, cols: usize) {
+    let cap = rows * cols;
+    if m.data.capacity() < cap {
+        m.data.reserve(cap - m.data.len());
+    }
 }
 
 fn run_one(b: &mut ExpertBatch, experts: &[Expert],
@@ -41,16 +126,134 @@ fn run_one(b: &mut ExpertBatch, experts: &[Expert],
         Some((oe, repl)) if oe == b.expert => repl,
         _ => &experts[b.expert],
     };
-    b.gated = ex.gated_hidden(&b.x);
-    b.y = ex.w2.matmul(&b.gated);
+    ex.gated_hidden_into(&b.x, &mut b.gated, &mut b.tmp, &mut b.qs);
+    ex.w2.matmul_into(&b.gated, &mut b.y, &mut b.qs);
 }
 
-/// Gather + execute. `topk[t]` lists `(expert, weight)` selections for
-/// token row `t` of `h`; `override_expert` substitutes one expert
-/// (PMQ's eps_{i,j} probe). Returns per-expert batches in ascending
-/// expert order — combine them with [`scatter`], and feed
-/// `CalibSink::expert_batch` from `x`/`gated` (execution order never
-/// affects the Hessian sums, so calibration is thread-safe).
+/// Gather + execute into `scratch`. `topk[t]` lists `(expert, weight)`
+/// selections for token row `t` of `h`; `override_expert` substitutes
+/// one expert (PMQ's eps_{i,j} probe). Active batches are available
+/// via `scratch.active_batches()` in ascending expert order — combine
+/// them with [`scatter_into`], and feed `CalibSink::expert_batch` from
+/// `x`/`gated` (execution order never affects the Hessian sums, so
+/// calibration is thread-safe).
+pub fn dispatch_experts_into(
+    h: &Mat,
+    topk: &[Vec<(usize, f32)>],
+    experts: &[Expert],
+    override_expert: Option<(usize, &Expert)>,
+    mode: DispatchMode,
+    scratch: &mut DispatchScratch,
+) {
+    let d = h.cols;
+    while scratch.batches.len() < experts.len() {
+        let e = scratch.batches.len();
+        scratch.batches.push(ExpertBatch::empty(e));
+    }
+    // worst-case reservation: in a later call of this batch shape,
+    // every routed row could land on any one expert — reserving that
+    // up front (a capacity check per call thereafter) is what makes
+    // the steady-state loop allocation-free even when routing shifts
+    // load between experts (tests/zero_alloc.rs). One-shot scratches
+    // skip it: active batches size themselves from actual routing.
+    if scratch.reserve_worst_case {
+        let worst = topk.len();
+        for (e, b) in
+            scratch.batches.iter_mut().enumerate().take(experts.len())
+        {
+            let (_, d_ff) = experts[e].w1.shape();
+            reserve_mat(&mut b.x, worst, d);
+            reserve_mat(&mut b.gated, worst, d_ff);
+            reserve_mat(&mut b.tmp, worst, d_ff);
+            reserve_mat(&mut b.y, worst, d);
+            if b.rows.capacity() < worst {
+                b.rows.reserve(worst - b.rows.len());
+            }
+            b.qs.reserve(d.max(d_ff), worst);
+        }
+    }
+    for b in scratch.batches.iter_mut() {
+        b.rows.clear();
+    }
+    for (t, sel) in topk.iter().enumerate() {
+        for &(e, w) in sel {
+            scratch.batches[e].rows.push((t, w));
+        }
+    }
+    // gather + the Auto FLOP gate, computed from the batches actually
+    // routed (not `experts.first()`, which is wrong for heterogeneous
+    // bit-widths and empty expert lists)
+    scratch.active.clear();
+    let mut flops = 0u64;
+    for (e, b) in scratch.batches.iter_mut().enumerate() {
+        if b.rows.is_empty() {
+            continue;
+        }
+        scratch.active.push(e);
+        let ex = match override_expert {
+            Some((oe, repl)) if oe == e => repl,
+            _ => &experts[e],
+        };
+        let (_, d_ff) = ex.w1.shape();
+        flops += b.rows.len() as u64 * 6 * d as u64 * d_ff as u64;
+        b.x.resize_to(b.rows.len(), d);
+        for (ri, &(t, _)) in b.rows.iter().enumerate() {
+            b.x.row_mut(ri).copy_from_slice(h.row(t));
+        }
+    }
+
+    let nactive = scratch.active.len();
+    let pool = WorkerPool::global();
+    // the pool-width check lives here, once, for every mode
+    let parallel = nactive >= 2
+        && pool.width() > 1
+        && match mode {
+            DispatchMode::Serial | DispatchMode::SpawnScope => false,
+            DispatchMode::Threaded => true,
+            DispatchMode::Auto => flops >= AUTO_THREAD_MIN_FLOPS,
+        };
+
+    if mode == DispatchMode::SpawnScope && nactive >= 2 {
+        std::thread::scope(|s| {
+            for b in scratch.batches.iter_mut().filter(|b| !b.rows.is_empty()) {
+                // the legacy baseline must reproduce pre-pool behavior:
+                // expert kernels stay inline on their spawned thread
+                s.spawn(move || {
+                    WorkerPool::run_inline(|| {
+                        run_one(b, experts, override_expert)
+                    })
+                });
+            }
+        });
+    } else if parallel {
+        let bptr = SendPtr(scratch.batches.as_mut_ptr());
+        let active = &scratch.active;
+        pool.for_each(nactive, move |ai| {
+            // Safety: active indices are unique, so each task holds
+            // the only &mut to its batch for the region's duration.
+            let b = unsafe { &mut *bptr.0.add(active[ai]) };
+            run_one(b, experts, override_expert);
+        });
+    } else if matches!(mode, DispatchMode::Serial | DispatchMode::SpawnScope) {
+        // Serial promises in-thread execution (DESIGN.md §4): suppress
+        // the kernels' auto-parallel heuristics for its duration
+        WorkerPool::run_inline(|| {
+            for &e in &scratch.active {
+                run_one(&mut scratch.batches[e], experts, override_expert);
+            }
+        });
+    } else {
+        // Auto below its gate / pool without width: in-thread here,
+        // but individual large kernels may still strip across the pool
+        for &e in &scratch.active {
+            run_one(&mut scratch.batches[e], experts, override_expert);
+        }
+    }
+}
+
+/// Allocating wrapper over [`dispatch_experts_into`]: returns the
+/// active batches in ascending expert order (scoring forward,
+/// calibration, tests — paths outside the zero-alloc decode loop).
 pub fn dispatch_experts(
     h: &Mat,
     topk: &[Vec<(usize, f32)>],
@@ -58,78 +261,41 @@ pub fn dispatch_experts(
     override_expert: Option<(usize, &Expert)>,
     mode: DispatchMode,
 ) -> Vec<ExpertBatch> {
-    let d = h.cols;
-    let mut per_expert: Vec<Vec<(usize, f32)>> = vec![Vec::new(); experts.len()];
-    let mut routed_rows = 0usize;
-    for (t, sel) in topk.iter().enumerate() {
-        for &(e, w) in sel {
-            per_expert[e].push((t, w));
-            routed_rows += 1;
-        }
+    let mut scratch = DispatchScratch::one_shot();
+    dispatch_experts_into(h, topk, experts, override_expert, mode, &mut scratch);
+    let mut out = Vec::with_capacity(scratch.active.len());
+    for &e in &scratch.active {
+        out.push(std::mem::replace(&mut scratch.batches[e],
+                                   ExpertBatch::empty(e)));
     }
-    let mut batches: Vec<ExpertBatch> = Vec::new();
-    for (e, rows) in per_expert.into_iter().enumerate() {
-        if rows.is_empty() {
-            continue;
-        }
-        let mut x = Mat::zeros(rows.len(), d);
-        for (ri, &(t, _)) in rows.iter().enumerate() {
-            x.row_mut(ri).copy_from_slice(h.row(t));
-        }
-        batches.push(ExpertBatch {
-            expert: e,
-            rows,
-            x,
-            gated: Mat::zeros(0, 0),
-            y: Mat::zeros(0, 0),
-        });
-    }
-
-    let threaded = match mode {
-        DispatchMode::Serial => false,
-        DispatchMode::Threaded => batches.len() >= 2,
-        DispatchMode::Auto => {
-            let (_, d_ff) = match experts.first() {
-                Some(ex) => ex.w1.shape(),
-                None => (0, 0),
-            };
-            let flops = routed_rows as u64 * 6 * d as u64 * d_ff as u64;
-            batches.len() >= 2
-                && flops >= AUTO_THREAD_MIN_FLOPS
-                && std::thread::available_parallelism()
-                    .map(|p| p.get())
-                    .unwrap_or(1)
-                    > 1
-        }
-    };
-
-    if threaded {
-        std::thread::scope(|s| {
-            for b in batches.iter_mut() {
-                s.spawn(move || run_one(b, experts, override_expert));
-            }
-        });
-    } else {
-        for b in batches.iter_mut() {
-            run_one(b, experts, override_expert);
-        }
-    }
-    batches
+    out
 }
 
 /// Scatter expert outputs back to token order: y[t] += w * y_e[row].
 pub fn scatter(batches: &[ExpertBatch], t_rows: usize, d: usize) -> Mat {
     let mut y = Mat::zeros(t_rows, d);
+    scatter_batches(batches.iter(), d, &mut y);
+    y
+}
+
+/// Scatter into a reused buffer (resized + overwritten). Iterates
+/// active batches in ascending expert order — the same per-token
+/// accumulation order as serial dispatch, so results never depend on
+/// execution interleaving.
+pub fn scatter_into(scratch: &DispatchScratch, t_rows: usize, d: usize,
+                    y: &mut Mat) {
+    y.resize_to(t_rows, d);
+    y.data.fill(0.0);
+    scatter_batches(scratch.active_batches(), d, y);
+}
+
+fn scatter_batches<'a>(batches: impl Iterator<Item = &'a ExpertBatch>,
+                       d: usize, y: &mut Mat) {
     for b in batches {
         for (ri, &(t, w)) in b.rows.iter().enumerate() {
-            let yrow = b.y.row(ri);
-            let orow = &mut y.data[t * d..(t + 1) * d];
-            for (o, &v) in orow.iter_mut().zip(yrow) {
-                *o += w * v;
-            }
+            axpy(&mut y.data[t * d..(t + 1) * d], b.y.row(ri), w);
         }
     }
-    y
 }
 
 #[cfg(test)]
@@ -165,10 +331,42 @@ mod tests {
         let h = Mat::randn(&mut rng, rows, d, 1.0);
         let topk = round_robin_topk(rows, ne, 2);
         let bs = dispatch_experts(&h, &topk, &exps, None, DispatchMode::Serial);
-        let bt = dispatch_experts(&h, &topk, &exps, None, DispatchMode::Threaded);
         let ys = scatter(&bs, rows, d);
-        let yt = scatter(&bt, rows, d);
-        assert_eq!(ys.data, yt.data, "threaded dispatch must be bit-exact");
+        for mode in [DispatchMode::Threaded, DispatchMode::SpawnScope] {
+            let bt = dispatch_experts(&h, &topk, &exps, None, mode);
+            let yt = scatter(&bt, rows, d);
+            assert_eq!(ys.data, yt.data,
+                       "{mode:?} dispatch must be bit-exact");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_pointer_stable() {
+        let mut rng = Rng::new(4);
+        let (rows, d, d_ff, ne) = (12, 8, 16, 4);
+        let exps = experts(&mut rng, ne, d, d_ff);
+        let h = Mat::randn(&mut rng, rows, d, 1.0);
+        let topk = round_robin_topk(rows, ne, 2);
+        let mut scratch = DispatchScratch::new();
+        let mut y = Mat::zeros(0, 0);
+        dispatch_experts_into(&h, &topk, &exps, None, DispatchMode::Serial,
+                              &mut scratch);
+        scatter_into(&scratch, rows, d, &mut y);
+        let first = y.clone();
+        let ptrs: Vec<*const f32> =
+            (0..ne).map(|e| scratch.probe_x_ptr(e)).collect();
+        let yp = y.data.as_ptr();
+        for _ in 0..3 {
+            dispatch_experts_into(&h, &topk, &exps, None,
+                                  DispatchMode::Serial, &mut scratch);
+            scatter_into(&scratch, rows, d, &mut y);
+        }
+        for (e, &p) in ptrs.iter().enumerate() {
+            assert_eq!(scratch.probe_x_ptr(e), p,
+                       "expert {e} gather buffer must not realloc");
+        }
+        assert_eq!(y.data.as_ptr(), yp);
+        assert_eq!(y.data, first.data);
     }
 
     #[test]
@@ -218,5 +416,14 @@ mod tests {
         assert_eq!(b.len(), 1);
         assert_eq!(b[0].expert, 2);
         assert_eq!(b[0].rows.len(), rows);
+    }
+
+    #[test]
+    fn auto_gate_handles_empty_expert_list() {
+        // no experts, no routing: must not panic on experts.first()
+        let h = Mat::zeros(2, 8);
+        let topk: Vec<Vec<(usize, f32)>> = vec![Vec::new(); 2];
+        let b = dispatch_experts(&h, &topk, &[], None, DispatchMode::Auto);
+        assert!(b.is_empty());
     }
 }

@@ -13,16 +13,28 @@
 //!     attention map;
 //!   * [`router`] — top-k selection, every `OdpPolicy` / `DecodeOdp`
 //!     pruning decision, and the shared `RunStats` accounting;
-//!   * [`dispatch`] — expert gather/scatter with optional
-//!     `std::thread::scope`-parallel per-expert FFN execution.
+//!   * [`dispatch`] — expert gather/scatter with per-expert FFN
+//!     execution on the persistent `util::pool::WorkerPool`.
+//!
+//! Every subsystem has an `*_into` entry point that writes into
+//! caller-owned scratch buffers (`AttnScratch`, `DispatchScratch`,
+//! reused selection Vecs), which is how the decode hot path runs
+//! allocation-free (DESIGN.md §4).
 
 pub mod attention;
 pub mod dispatch;
 pub mod router;
 
-pub use attention::{causal_attention, eq6_importance, AttnOut};
-pub use dispatch::{dispatch_experts, scatter, DispatchMode, ExpertBatch};
+pub use attention::{
+    causal_attention, causal_attention_into, eq6_importance, AttnOut,
+    AttnScratch,
+};
+pub use dispatch::{
+    dispatch_experts, dispatch_experts_into, scatter, scatter_into,
+    DispatchMode, DispatchScratch, ExpertBatch,
+};
 pub use router::{
-    decode_select, gate_probs, score_route, select_top_k, DecodeOdp, RunStats,
+    decode_select, decode_select_into, gate_probs, gate_probs_into,
+    score_route, select_top_k, select_top_k_into, DecodeOdp, RunStats,
     ScoreRoute,
 };

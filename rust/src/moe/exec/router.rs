@@ -133,7 +133,22 @@ pub fn select_top_k(
     k: usize,
     eligible: impl Fn(usize) -> bool,
 ) -> Vec<(usize, f32)> {
-    let mut sel: Vec<(usize, f32)> = Vec::with_capacity(k + 1);
+    let mut sel = Vec::with_capacity(k + 1);
+    select_top_k_into(row, k, eligible, &mut sel);
+    sel
+}
+
+/// `select_top_k` into a reused selection buffer (cleared first): the
+/// decode loop keeps one Vec per batch slot, so routing allocates
+/// nothing in steady state. The candidate list never exceeds k+1
+/// entries, so the sort is allocation-free insertion sort.
+pub fn select_top_k_into(
+    row: &[f32],
+    k: usize,
+    eligible: impl Fn(usize) -> bool,
+    sel: &mut Vec<(usize, f32)>,
+) {
+    sel.clear();
     for (e, &w) in row.iter().enumerate() {
         if !eligible(e) {
             continue;
@@ -142,7 +157,6 @@ pub fn select_top_k(
         sel.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
         sel.truncate(k);
     }
-    sel
 }
 
 /// Router probabilities for a token batch: softmax(h @ gate).
@@ -152,9 +166,36 @@ pub fn gate_probs(h: &Mat, gate: &Mat) -> Mat {
     probs
 }
 
+/// `gate_probs` into a reused buffer (resized + overwritten).
+pub fn gate_probs_into(h: &Mat, gate: &Mat, probs: &mut Mat) {
+    crate::tensor::matmul_reset_into(h, gate, probs);
+    softmax_rows(probs);
+}
+
 /// Shared per-token selection: top-k (minus an optionally masked
 /// expert), renormalize, record activation/weight/possible counts.
-/// Returns the selection and the w1/w0 ratio the ODP rules consume.
+/// Returns the w1/w0 ratio the ODP rules consume.
+fn select_and_count_into(
+    row: &[f32],
+    top_k: usize,
+    li: usize,
+    masked_expert: Option<usize>,
+    stats: &mut RunStats,
+    sel: &mut Vec<(usize, f32)>,
+) -> f32 {
+    select_top_k_into(row, top_k, |e| Some(e) != masked_expert, sel);
+    let sum: f32 = sel.iter().map(|&(_, w)| w).sum();
+    for se in sel.iter_mut() {
+        se.1 /= sum;
+    }
+    for &(e, w) in sel.iter() {
+        stats.activation_counts[li][e] += 1;
+        stats.weight_sums[li][e] += w as f64;
+    }
+    stats.expert_possible += top_k;
+    if sel.len() >= 2 { sel[1].1 / sel[0].1 } else { 0.0 }
+}
+
 fn select_and_count(
     row: &[f32],
     top_k: usize,
@@ -162,22 +203,15 @@ fn select_and_count(
     masked_expert: Option<usize>,
     stats: &mut RunStats,
 ) -> (Vec<(usize, f32)>, f32) {
-    let mut sel = select_top_k(row, top_k, |e| Some(e) != masked_expert);
-    let sum: f32 = sel.iter().map(|&(_, w)| w).sum();
-    for se in sel.iter_mut() {
-        se.1 /= sum;
-    }
-    for &(e, w) in &sel {
-        stats.activation_counts[li][e] += 1;
-        stats.weight_sums[li][e] += w as f64;
-    }
-    stats.expert_possible += top_k;
-    let ratio = if sel.len() >= 2 { sel[1].1 / sel[0].1 } else { 0.0 };
+    let mut sel = Vec::with_capacity(top_k + 1);
+    let ratio = select_and_count_into(row, top_k, li, masked_expert, stats,
+                                      &mut sel);
     (sel, ratio)
 }
 
 /// One decode-time routing decision (used token-wise by `step`,
 /// batched prefill, and the fused multi-session batcher step).
+/// Allocating wrapper over [`decode_select_into`].
 pub fn decode_select(
     probs_row: &[f32],
     h_row: &[f32],
@@ -186,7 +220,23 @@ pub fn decode_select(
     odp: Option<&DecodeOdp>,
     stats: &mut RunStats,
 ) -> Vec<(usize, f32)> {
-    let (mut sel, ratio) = select_and_count(probs_row, top_k, li, None, stats);
+    let mut sel = Vec::with_capacity(top_k + 1);
+    decode_select_into(probs_row, h_row, top_k, li, odp, stats, &mut sel);
+    sel
+}
+
+/// `decode_select` into a reused selection buffer (cleared first) —
+/// the zero-allocation decode routing path.
+pub fn decode_select_into(
+    probs_row: &[f32],
+    h_row: &[f32],
+    top_k: usize,
+    li: usize,
+    odp: Option<&DecodeOdp>,
+    stats: &mut RunStats,
+    sel: &mut Vec<(usize, f32)>,
+) {
+    let ratio = select_and_count_into(probs_row, top_k, li, None, stats, sel);
     if let Some(odp) = odp {
         let protected = match &odp.l1_threshold {
             Some(thr) => {
@@ -202,7 +252,6 @@ pub fn decode_select(
         }
     }
     stats.expert_calls += sel.len();
-    sel
 }
 
 // ---------------------------------------------------------------------------

@@ -16,7 +16,7 @@ use anyhow::Result;
 
 use crate::config::ModelConfig;
 use crate::quant::QTensor;
-use crate::tensor::{add_inplace, log_softmax, rmsnorm, Mat};
+use crate::tensor::{add_inplace, log_softmax_into, rmsnorm, Mat};
 
 use super::exec::{attention, dispatch, router};
 use super::weights::WeightFile;
@@ -49,12 +49,23 @@ impl Expert {
     /// silu(x@w1) * (x@w3) — exposed so calibration can capture the
     /// w2-input Hessian.
     pub fn gated_hidden(&self, x: &Mat) -> Mat {
-        let mut h1 = self.w1.matmul(x);
-        let h3 = self.w3.matmul(x);
-        for (a, &b) in h1.data.iter_mut().zip(&h3.data) {
+        let mut gated = Mat::zeros(0, 0);
+        let mut tmp = Mat::zeros(0, 0);
+        let mut qs = crate::quant::QmScratch::new();
+        self.gated_hidden_into(x, &mut gated, &mut tmp, &mut qs);
+        gated
+    }
+
+    /// `gated_hidden` into reused buffers: `gated` receives the
+    /// result, `tmp` holds the x@w3 intermediate, `qs` feeds the
+    /// packed kernels — the zero-allocation dispatch path.
+    pub fn gated_hidden_into(&self, x: &Mat, gated: &mut Mat, tmp: &mut Mat,
+                             qs: &mut crate::quant::QmScratch) {
+        self.w1.matmul_into(x, gated, qs);
+        self.w3.matmul_into(x, tmp, qs);
+        for (a, &b) in gated.data.iter_mut().zip(&tmp.data) {
             *a = crate::tensor::silu(*a) * b;
         }
-        h1
     }
 
     pub fn storage_bytes(&self) -> usize {
@@ -92,36 +103,39 @@ pub struct MoeModel {
 }
 
 impl MoeModel {
-    /// Load the FP32 model from an MCWT weight file.
-    pub fn load_f32(cfg: &ModelConfig, wf: &WeightFile) -> Result<MoeModel> {
+    /// Load the FP32 model from an MCWT weight file. Consumes the
+    /// file: each tensor's payload is moved (not cloned) into the
+    /// model, so load-time peak memory is one copy of the weights,
+    /// not two.
+    pub fn load_f32(cfg: &ModelConfig, mut wf: WeightFile) -> Result<MoeModel> {
         let mut layers = Vec::with_capacity(cfg.n_layers);
         for i in 0..cfg.n_layers {
             let mut experts = Vec::with_capacity(cfg.n_experts);
             for e in 0..cfg.n_experts {
                 let p = |m: &str| format!("layers.{i}.experts.{e}.{m}");
                 experts.push(Expert {
-                    w1: QTensor::F32(wf.mat(&p("w1"))?),
-                    w3: QTensor::F32(wf.mat(&p("w3"))?),
-                    w2: QTensor::F32(wf.mat(&p("w2"))?),
+                    w1: QTensor::F32(wf.take_mat(&p("w1"))?),
+                    w3: QTensor::F32(wf.take_mat(&p("w3"))?),
+                    w2: QTensor::F32(wf.take_mat(&p("w2"))?),
                 });
             }
             layers.push(Layer {
-                attn_norm: wf.vec1(&format!("layers.{i}.attn_norm"))?,
-                ffn_norm: wf.vec1(&format!("layers.{i}.ffn_norm"))?,
-                gate: wf.mat(&format!("layers.{i}.gate"))?,
-                wq: QTensor::F32(wf.mat(&format!("layers.{i}.attn.wq"))?),
-                wk: QTensor::F32(wf.mat(&format!("layers.{i}.attn.wk"))?),
-                wv: QTensor::F32(wf.mat(&format!("layers.{i}.attn.wv"))?),
-                wo: QTensor::F32(wf.mat(&format!("layers.{i}.attn.wo"))?),
+                attn_norm: wf.take_vec1(&format!("layers.{i}.attn_norm"))?,
+                ffn_norm: wf.take_vec1(&format!("layers.{i}.ffn_norm"))?,
+                gate: wf.take_mat(&format!("layers.{i}.gate"))?,
+                wq: QTensor::F32(wf.take_mat(&format!("layers.{i}.attn.wq"))?),
+                wk: QTensor::F32(wf.take_mat(&format!("layers.{i}.attn.wk"))?),
+                wv: QTensor::F32(wf.take_mat(&format!("layers.{i}.attn.wv"))?),
+                wo: QTensor::F32(wf.take_mat(&format!("layers.{i}.attn.wo"))?),
                 experts,
             });
         }
         Ok(MoeModel {
             cfg: cfg.clone(),
-            tok_emb: wf.mat("tok_emb")?,
-            pos_emb: wf.mat("pos_emb")?,
-            final_norm: wf.vec1("final_norm")?,
-            lm_head: wf.mat("lm_head")?,
+            tok_emb: wf.take_mat("tok_emb")?,
+            pos_emb: wf.take_mat("pos_emb")?,
+            final_norm: wf.take_vec1("final_norm")?,
+            lm_head: wf.take_mat("lm_head")?,
             layers,
         })
     }
@@ -162,17 +176,24 @@ impl MoeModel {
         bits / elems
     }
 
+    /// Token + positional embedding of one token at `pos`, written
+    /// into `xrow` — the single embed implementation every path
+    /// (scoring, KV-cache append, fused step) drives, so they cannot
+    /// drift. Writes in place: usable from the zero-alloc decode loop.
+    pub(crate) fn embed_row(&self, tok: u32, pos: usize, xrow: &mut [f32]) {
+        let emb = self.tok_emb.row(tok as usize);
+        let p = self.pos_emb.row(pos);
+        for ((xv, &e), &pv) in xrow.iter_mut().zip(emb).zip(p) {
+            *xv = e + pv;
+        }
+    }
+
     /// Token + positional embedding for `tokens` placed at positions
     /// `pos0..pos0 + tokens.len()` (pos0 > 0 on KV-cache appends).
     pub(crate) fn embed(&self, tokens: &[u32], pos0: usize) -> Mat {
-        let d = self.cfg.d_model;
-        let mut x = Mat::zeros(tokens.len(), d);
+        let mut x = Mat::zeros(tokens.len(), self.cfg.d_model);
         for (t, &tok) in tokens.iter().enumerate() {
-            let emb = self.tok_emb.row(tok as usize);
-            let pos = self.pos_emb.row(pos0 + t);
-            for c in 0..d {
-                x.data[t * d + c] = emb[c] + pos[c];
-            }
+            self.embed_row(tok, pos0 + t, x.row_mut(t));
         }
         x
     }
@@ -377,8 +398,9 @@ impl MoeModel {
     /// computed at positions [start-1 .. start-1+len).
     pub fn continuation_logprob(logits: &Mat, tokens: &[u32], start: usize) -> f32 {
         let mut total = 0.0;
+        let mut lp = Vec::new();
         for (i, &tok) in tokens.iter().enumerate().skip(start) {
-            let lp = log_softmax(logits.row(i - 1));
+            log_softmax_into(logits.row(i - 1), &mut lp);
             total += lp[tok as usize];
         }
         total

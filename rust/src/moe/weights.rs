@@ -23,7 +23,9 @@ impl Tensor {
         self.shape.iter().product()
     }
 
-    /// View as a 2-D matrix (errors on other ranks).
+    /// View as a 2-D matrix (errors on other ranks). Clones the
+    /// payload — model loading uses the consuming [`Tensor::into_mat`]
+    /// so load-time peak memory stays at one copy.
     pub fn as_mat(&self) -> Result<Mat> {
         if self.shape.len() != 2 {
             bail!("tensor rank {} != 2", self.shape.len());
@@ -36,6 +38,60 @@ impl Tensor {
             bail!("tensor rank {} != 1", self.shape.len());
         }
         Ok(self.data.clone())
+    }
+
+    /// Consume into a 2-D matrix without copying the payload.
+    pub fn into_mat(self) -> Result<Mat> {
+        if self.shape.len() != 2 {
+            bail!("tensor rank {} != 2", self.shape.len());
+        }
+        Ok(Mat::from_vec(self.shape[0], self.shape[1], self.data))
+    }
+
+    /// Consume into a 1-D vector without copying the payload.
+    pub fn into_vec1(self) -> Result<Vec<f32>> {
+        if self.shape.len() != 1 {
+            bail!("tensor rank {} != 1", self.shape.len());
+        }
+        Ok(self.data)
+    }
+}
+
+/// Bulk little-endian f32 decode: one memcpy on LE hosts, a per-value
+/// conversion loop only on BE.
+fn f32s_from_le(bytes: &[u8]) -> Vec<f32> {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    let mut data = vec![0.0f32; bytes.len() / 4];
+    if cfg!(target_endian = "little") {
+        // Safety: f32 and [u8; 4] have identical size; any bit
+        // pattern is a valid f32.
+        let out = unsafe {
+            std::slice::from_raw_parts_mut(data.as_mut_ptr().cast::<u8>(),
+                                           bytes.len())
+        };
+        out.copy_from_slice(bytes);
+    } else {
+        for (v, c) in data.iter_mut().zip(bytes.chunks_exact(4)) {
+            *v = f32::from_le_bytes(c.try_into().unwrap());
+        }
+    }
+    data
+}
+
+/// Bulk little-endian f32 encode into `out` (one memcpy on LE hosts).
+fn f32s_to_le(vals: &[f32], out: &mut [u8]) {
+    debug_assert_eq!(out.len(), vals.len() * 4);
+    if cfg!(target_endian = "little") {
+        // Safety: plain-old-data reinterpret, sizes checked above.
+        let bytes = unsafe {
+            std::slice::from_raw_parts(vals.as_ptr().cast::<u8>(),
+                                       out.len())
+        };
+        out.copy_from_slice(bytes);
+    } else {
+        for (c, &v) in out.chunks_exact_mut(4).zip(vals) {
+            c.copy_from_slice(&v.to_le_bytes());
+        }
     }
 }
 
@@ -86,10 +142,8 @@ impl WeightFile {
             if bytes.len() < start + nbytes {
                 bail!("tensor {name}: payload out of bounds");
             }
-            let mut data = Vec::with_capacity(numel);
-            for c in bytes[start..start + nbytes].chunks_exact(4) {
-                data.push(f32::from_le_bytes(c.try_into().unwrap()));
-            }
+            let data = f32s_from_le(&bytes[start..start + nbytes]);
+            debug_assert_eq!(data.len(), numel);
             tensors.insert(name.clone(), Tensor { shape, data });
         }
         Ok(WeightFile { tensors })
@@ -107,6 +161,23 @@ impl WeightFile {
 
     pub fn vec1(&self, name: &str) -> Result<Vec<f32>> {
         self.get(name)?.as_vec1().with_context(|| name.to_string())
+    }
+
+    /// Remove a tensor from the file (consuming access for loaders).
+    pub fn take(&mut self, name: &str) -> Result<Tensor> {
+        self.tensors
+            .remove(name)
+            .with_context(|| format!("missing tensor {name:?}"))
+    }
+
+    /// Move a tensor out as a matrix — no payload copy.
+    pub fn take_mat(&mut self, name: &str) -> Result<Mat> {
+        self.take(name)?.into_mat().with_context(|| name.to_string())
+    }
+
+    /// Move a tensor out as a vector — no payload copy.
+    pub fn take_vec1(&mut self, name: &str) -> Result<Vec<f32>> {
+        self.take(name)?.into_vec1().with_context(|| name.to_string())
     }
 }
 
@@ -147,11 +218,9 @@ pub fn write_mcwt(path: &Path, tensors: &BTreeMap<String, Tensor>) -> Result<()>
     let base = out.len();
     out.resize(base + offset, 0);
     for (off, t) in spans {
-        let mut pos = base + off;
-        for &v in &t.data {
-            out[pos..pos + 4].copy_from_slice(&v.to_le_bytes());
-            pos += 4;
-        }
+        // one bulk little-endian write per tensor
+        let pos = base + off;
+        f32s_to_le(&t.data, &mut out[pos..pos + t.numel() * 4]);
     }
     std::fs::write(path, out)?;
     Ok(())
@@ -210,5 +279,23 @@ mod tests {
         assert!(t.as_mat().is_ok());
         let v = Tensor { shape: vec![6], data: vec![0.0; 6] };
         assert!(v.as_mat().is_err());
+        let t = Tensor { shape: vec![2, 3], data: vec![0.0; 6] };
+        assert!(t.into_vec1().is_err());
+        let v = Tensor { shape: vec![6], data: vec![0.0; 6] };
+        assert!(v.into_mat().is_err());
+    }
+
+    #[test]
+    fn take_moves_payload_without_copy() {
+        let dir = std::env::temp_dir().join("mcwt_test_take.mcwt");
+        write_mcwt(&dir, &sample()).unwrap();
+        let mut wf = WeightFile::load(&dir).unwrap();
+        let src_ptr = wf.get("a").unwrap().data.as_ptr();
+        let m = wf.take_mat("a").unwrap();
+        assert_eq!(m.data.as_ptr(), src_ptr, "into_mat must move, not clone");
+        assert_eq!(m.data, vec![1., 2., 3., 4., 5., 6.]);
+        assert!(wf.get("a").is_err(), "taken tensor leaves the file");
+        assert_eq!(wf.take_vec1("b.vec").unwrap(), vec![0.5, -0.5, 1.5, -1.5]);
+        std::fs::remove_file(&dir).ok();
     }
 }

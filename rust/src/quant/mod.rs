@@ -14,6 +14,7 @@ use crate::tensor::Mat;
 
 pub use binary::BinaryTensor;
 pub use pack::PackedTensor;
+pub use qmatmul::QmScratch;
 
 /// A weight matrix in any representation the engine can matmul with.
 #[derive(Debug, Clone)]
@@ -68,6 +69,16 @@ impl QTensor {
             QTensor::F32(m) => x.matmul(m),
             QTensor::Packed(p) => qmatmul::packed_matmul(x, p),
             QTensor::Binary(b) => qmatmul::binary_matmul(x, b),
+        }
+    }
+
+    /// y = x @ W into a reused buffer (resized + overwritten), with
+    /// kernel scratch from `qs` — the zero-allocation decode path.
+    pub fn matmul_into(&self, x: &Mat, y: &mut Mat, qs: &mut QmScratch) {
+        match self {
+            QTensor::F32(m) => crate::tensor::matmul_reset_into(x, m, y),
+            QTensor::Packed(p) => qmatmul::packed_matmul_into(x, p, y, qs),
+            QTensor::Binary(b) => qmatmul::binary_matmul_into(x, b, y, qs),
         }
     }
 }

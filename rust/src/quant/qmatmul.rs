@@ -1,140 +1,294 @@
 //! Packed dequant-matmul hot paths (the serving-time analogue of the
 //! paper's HQQ CUDA kernels; EXPERIMENTS.md §Perf tracks these).
 //!
-//! Strategy ("ikj" with row-decode): for each input row k, decode the
-//! packed weight row once into a stack buffer, then axpy into all
-//! output rows. The f32 weight row never hits the heap and the decode
-//! cost is amortized across the M activation rows.
+//! Two regimes:
+//!   * **small M (decode)** — fused word-decode kernel: each packed
+//!     u32 is loaded once and all of its `vpw` fields are decoded in a
+//!     statically-unrolled shift/mask chain (const-generic over the
+//!     bit-width), combined with the group-factored form
+//!       y_n = Σ_g s_gn · (Σ_{k∈g} x_k·q_kn) − s_gn·z_gn·(Σ_{k∈g} x_k)
+//!     so scale/zero are applied once per group, not per element.
+//!   * **large M (prefill)** — decode each weight row once into a
+//!     scratch buffer and amortize across all activation rows; big
+//!     shapes split output columns across the `WorkerPool` (strips are
+//!     bit-exact with serial execution).
+//!
+//! The `*_into` variants write into caller-owned buffers through
+//! [`QmScratch`] so the decode loop runs allocation-free.
 
-use crate::tensor::Mat;
+use crate::tensor::{axpy, Mat};
+use crate::util::pool::{SendPtr, WorkerPool};
 
 use super::binary::BinaryTensor;
 use super::pack::PackedTensor;
 
-/// y = x @ W for a packed 2/3/4-bit tensor.
-///
-/// Two regimes (EXPERIMENTS.md §Perf):
-///   * small M (decode): group-factored form — per group g,
-///       y_n = Σ_g s_gn · (Σ_{k∈g} x_k·q_kn) − s_gn·z_gn·(Σ_{k∈g} x_k)
-///     so the inner loop is one shift/mask + fma per element (no
-///     per-element scale/zero), and the scale/zero are applied once
-///     per group.
-///   * large M (prefill): decode each weight row once into a stack
-///     buffer and amortize across all activation rows.
-pub fn packed_matmul(x: &Mat, w: &PackedTensor) -> Mat {
-    if x.rows <= 4 {
-        packed_matmul_small_m(x, w)
-    } else {
-        packed_matmul_large_m(x, w)
+/// Reusable accumulators for the packed/binary kernels (one per
+/// execution context: expert batch, session scratch, …).
+#[derive(Debug, Default)]
+pub struct QmScratch {
+    /// per-column group accumulator (small-M packed kernel)
+    acc: Vec<f32>,
+    /// per-row activation sums (binary kernel)
+    xsums: Vec<f32>,
+    /// decoded weight row (large-M packed kernel, serial path)
+    wrow: Vec<f32>,
+    /// per-pool-task decoded strip rows (large-M pooled path) — kept
+    /// here so pooled quantized GEMMs stay allocation-free in steady
+    /// state, same as the serial path
+    strips: Vec<Vec<f32>>,
+}
+
+impl QmScratch {
+    pub fn new() -> QmScratch {
+        QmScratch::default()
+    }
+
+    /// Pre-reserve for kernels up to `n_max` output columns and
+    /// `rows_max` activation rows (buffer-pointer stability from the
+    /// first call).
+    pub fn reserve(&mut self, n_max: usize, rows_max: usize) {
+        reserve_to(&mut self.acc, n_max);
+        reserve_to(&mut self.wrow, n_max);
+        reserve_to(&mut self.xsums, rows_max);
     }
 }
 
-fn packed_matmul_small_m(x: &Mat, w: &PackedTensor) -> Mat {
-    let n = w.n;
+fn reserve_to(v: &mut Vec<f32>, cap: usize) {
+    if v.capacity() < cap {
+        v.reserve(cap - v.len());
+    }
+}
+
+/// FLOP volume below which a packed GEMM stays serial.
+const QMM_PAR_MIN_FLOPS: usize = 2_000_000;
+/// Minimum output-column strip width per pool task.
+const QMM_MIN_STRIP: usize = 32;
+
+/// y = x @ W for a packed 2/3/4-bit tensor (allocating wrapper).
+pub fn packed_matmul(x: &Mat, w: &PackedTensor) -> Mat {
+    let mut y = Mat::zeros(x.rows, w.n);
+    let mut qs = QmScratch::new();
+    packed_matmul_into(x, w, &mut y, &mut qs);
+    y
+}
+
+/// y = x @ W into a reused buffer (resized + overwritten).
+pub fn packed_matmul_into(x: &Mat, w: &PackedTensor, y: &mut Mat,
+                          qs: &mut QmScratch) {
     assert_eq!(x.cols, w.k, "inner dim");
-    let vpw = crate::config::vals_per_word(w.bits);
-    let mask = (1u32 << w.bits) - 1;
+    y.resize_to(x.rows, w.n);
+    y.data.fill(0.0);
+    if x.rows <= 4 {
+        packed_small_m_into(x, w, y, &mut qs.acc);
+    } else {
+        packed_large_m_into(x, w, y, qs);
+    }
+}
+
+fn packed_small_m_into(x: &Mat, w: &PackedTensor, y: &mut Mat,
+                       acc: &mut Vec<f32>) {
+    match w.bits {
+        2 => small_m_kernel::<2, 16>(x, w, y, acc),
+        3 => small_m_kernel::<3, 10>(x, w, y, acc),
+        4 => small_m_kernel::<4, 8>(x, w, y, acc),
+        other => panic!("unsupported packed bit-width {other}"),
+    }
+}
+
+/// Fused decode kernel, statically unrolled over the `VPW` fields of
+/// each packed word: every u32 of the weight row is loaded and decoded
+/// exactly once per activation row (the pre-fusion kernel re-masked it
+/// once per k). Group edges that fall inside a word (3-bit: 10 fields
+/// per word vs group 64) take the partial-word path.
+fn small_m_kernel<const BITS: u32, const VPW: usize>(
+    x: &Mat,
+    w: &PackedTensor,
+    y: &mut Mat,
+    acc: &mut Vec<f32>,
+) {
+    let n = w.n;
+    let mask = (1u32 << BITS) - 1;
     let groups = w.k / w.group;
-    let mut y = Mat::zeros(x.rows, n);
-    let mut acc = vec![0.0f32; n];
+    acc.resize(n, 0.0);
     for m in 0..x.rows {
         let xrow = x.row(m);
         let yrow = &mut y.data[m * n..(m + 1) * n];
         for g in 0..groups {
+            let k0 = g * w.group;
+            let k1 = k0 + w.group;
             acc.fill(0.0);
-            let mut xsum = 0.0f32;
-            for k in g * w.group..(g + 1) * w.group {
-                let xv = xrow[k];
-                if xv == 0.0 {
-                    continue;
+            let xsum: f32 = xrow[k0..k1].iter().sum();
+            let mut k = k0;
+            while k < k1 {
+                let wi = k / VPW;
+                let j0 = k % VPW;
+                let jn = (VPW - j0).min(k1 - k);
+                let word_row = &w.qweight[wi * n..(wi + 1) * n];
+                let xs = &xrow[k..k + jn];
+                if jn == VPW {
+                    // full word: statically-unrolled decode
+                    let xs: &[f32; VPW] = xs.try_into().unwrap();
+                    for (a, &word) in acc.iter_mut().zip(word_row) {
+                        let mut s = 0.0f32;
+                        let mut bits = word;
+                        for &xv in xs.iter() {
+                            s += xv * (bits & mask) as f32;
+                            bits >>= BITS;
+                        }
+                        *a += s;
+                    }
+                } else {
+                    // group edge inside a word
+                    let shift = j0 as u32 * BITS;
+                    for (a, &word) in acc.iter_mut().zip(word_row) {
+                        let mut s = 0.0f32;
+                        let mut bits = word >> shift;
+                        for &xv in xs {
+                            s += xv * (bits & mask) as f32;
+                            bits >>= BITS;
+                        }
+                        *a += s;
+                    }
                 }
-                xsum += xv;
-                let word_row = &w.qweight[(k / vpw) * n..(k / vpw + 1) * n];
-                let field = ((k % vpw) * w.bits) as u32;
-                for (a, &word) in acc.iter_mut().zip(word_row) {
-                    // integer level scaled later: one fma per element
-                    *a += xv * ((word >> field) & mask) as f32;
-                }
+                k += jn;
             }
             let srow = &w.scales[g * n..(g + 1) * n];
             let zrow = &w.zeros[g * n..(g + 1) * n];
-            for c in 0..n {
-                yrow[c] += srow[c] * (acc[c] - zrow[c] * xsum);
+            for (((yv, &a), &s), &z) in
+                yrow.iter_mut().zip(acc.iter()).zip(srow).zip(zrow)
+            {
+                *yv += s * (a - z * xsum);
             }
         }
     }
-    y
 }
 
-fn packed_matmul_large_m(x: &Mat, w: &PackedTensor) -> Mat {
+fn packed_large_m_into(x: &Mat, w: &PackedTensor, y: &mut Mat,
+                       qs: &mut QmScratch) {
     let n = w.n;
-    assert_eq!(x.cols, w.k, "inner dim");
+    let pool = WorkerPool::global();
+    let flops = 2 * x.rows * w.k * n;
+    let tasks = pool.width().min(n / QMM_MIN_STRIP);
+    if flops >= QMM_PAR_MIN_FLOPS && tasks >= 2 && !WorkerPool::on_worker() {
+        while qs.strips.len() < tasks {
+            qs.strips.push(Vec::new());
+        }
+        let ybase = SendPtr(y.data.as_mut_ptr());
+        let sbase = SendPtr(qs.strips.as_mut_ptr());
+        pool.for_each(tasks, move |t| {
+            let (c0, c1) = WorkerPool::strip(n, tasks, t);
+            // Safety: task t exclusively owns strip buffer t and the
+            // disjoint column range [c0, c1) of y.
+            let strip_row = unsafe { &mut *sbase.0.add(t) };
+            strip_row.resize(c1 - c0, 0.0);
+            unsafe { packed_large_m_cols(x, w, ybase.0, c0, c1, strip_row) };
+        });
+    } else {
+        qs.wrow.resize(n, 0.0);
+        // Safety: exclusive access to all of y.
+        unsafe {
+            packed_large_m_cols(x, w, y.data.as_mut_ptr(), 0, n, &mut qs.wrow)
+        };
+    }
+}
+
+/// Row-decode kernel over output columns [c0, c1): decode weight row r
+/// once into `wrow`, then axpy into every activation row. Caller
+/// guarantees `ybase` points at a [x.rows, w.n] row-major buffer and
+/// concurrent calls use disjoint column ranges.
+unsafe fn packed_large_m_cols(x: &Mat, w: &PackedTensor, ybase: *mut f32,
+                              c0: usize, c1: usize, wrow: &mut [f32]) {
+    let n = w.n;
+    let cw = c1 - c0;
+    if cw == 0 {
+        return;
+    }
     let vpw = crate::config::vals_per_word(w.bits);
     let mask = (1u32 << w.bits) - 1;
-    let mut y = Mat::zeros(x.rows, n);
-    let mut wrow = vec![0.0f32; n];
     for r in 0..w.k {
-        // decode row r: contiguous word row + per-group scale/zero rows
-        let word_row = &w.qweight[(r / vpw) * n..(r / vpw + 1) * n];
+        let word_row = &w.qweight[(r / vpw) * n + c0..(r / vpw) * n + c1];
         let field = ((r % vpw) * w.bits) as u32;
         let g = r / w.group;
-        let srow = &w.scales[g * n..(g + 1) * n];
-        let zrow = &w.zeros[g * n..(g + 1) * n];
-        for c in 0..n {
-            let q = (word_row[c] >> field) & mask;
-            wrow[c] = (q as f32 - zrow[c]) * srow[c];
+        let srow = &w.scales[g * n + c0..g * n + c1];
+        let zrow = &w.zeros[g * n + c0..g * n + c1];
+        for (((wv, &word), &s), &z) in wrow[..cw]
+            .iter_mut()
+            .zip(word_row)
+            .zip(srow)
+            .zip(zrow)
+        {
+            let q = (word >> field) & mask;
+            *wv = (q as f32 - z) * s;
         }
-        // axpy into each activation row
         for m in 0..x.rows {
-            let xv = x.at(m, r);
-            if xv == 0.0 {
-                continue;
-            }
-            let yrow = &mut y.data[m * n..(m + 1) * n];
-            for (yv, &wv) in yrow.iter_mut().zip(wrow.iter()) {
-                *yv += xv * wv;
-            }
+            let yrow = std::slice::from_raw_parts_mut(ybase.add(m * n + c0), cw);
+            axpy(yrow, &wrow[..cw], x.at(m, r));
         }
     }
+}
+
+/// y = x @ W for a binary tensor (allocating wrapper).
+pub fn binary_matmul(x: &Mat, w: &BinaryTensor) -> Mat {
+    let mut y = Mat::zeros(x.rows, w.n);
+    let mut qs = QmScratch::new();
+    binary_matmul_into(x, w, &mut y, &mut qs);
     y
 }
 
-/// y = x @ W for a binary tensor: accumulate signed sums then apply the
-/// per-column scale once (paper Eq. 10 restated; see
-/// kernels/binary_matmul.py for the algebraic identity).
-pub fn binary_matmul(x: &Mat, w: &BinaryTensor) -> Mat {
+/// y = x @ W for a binary tensor, word-unrolled: each packed u32 is
+/// loaded once and its 32 sign bits decoded in a statically-unrolled
+/// chain (the pre-fusion kernel re-read the word once per k).
+/// Masked-add form: acc_n = Σ_{bit=1} x_k, then y_n = s_n·(2·acc_n −
+/// Σx) — one fma per element (paper Eq. 10; kernels/binary_matmul.py).
+pub fn binary_matmul_into(x: &Mat, w: &BinaryTensor, y: &mut Mat,
+                          qs: &mut QmScratch) {
     assert_eq!(x.cols, w.k, "inner dim");
     let n = w.n;
-    let mut acc = Mat::zeros(x.rows, n);
-    // masked-add form: acc_n = Σ_{bit=1} x_k, then
-    // y_n = s_n * (2·acc_n − Σ x) — one fma per element in the hot loop
-    // instead of the sign-select multiply (EXPERIMENTS.md §Perf).
-    let mut xsums = vec![0.0f32; x.rows];
-    for (m, xs) in xsums.iter_mut().enumerate() {
+    y.resize_to(x.rows, n);
+    y.data.fill(0.0);
+    qs.xsums.resize(x.rows, 0.0);
+    for (m, xs) in qs.xsums.iter_mut().enumerate() {
         *xs = x.row(m).iter().sum();
     }
-    for r in 0..w.k {
-        let word_row = &w.packed[(r / 32) * n..(r / 32 + 1) * n];
-        let bit = (r % 32) as u32;
+    let k_words = w.k.div_ceil(32);
+    for wi in 0..k_words {
+        let k0 = wi * 32;
+        let kn = 32.min(w.k - k0);
+        let word_row = &w.packed[wi * n..(wi + 1) * n];
         for m in 0..x.rows {
-            let xv = x.at(m, r);
-            if xv == 0.0 {
-                continue;
-            }
-            let yrow = &mut acc.data[m * n..(m + 1) * n];
-            for (yv, &word) in yrow.iter_mut().zip(word_row) {
-                *yv += xv * ((word >> bit) & 1) as f32;
+            let xs = &x.row(m)[k0..k0 + kn];
+            let yrow = &mut y.data[m * n..(m + 1) * n];
+            if kn == 32 {
+                let xs: &[f32; 32] = xs.try_into().unwrap();
+                for (yv, &word) in yrow.iter_mut().zip(word_row) {
+                    let mut s = 0.0f32;
+                    let mut bits = word;
+                    for &xv in xs.iter() {
+                        s += xv * (bits & 1) as f32;
+                        bits >>= 1;
+                    }
+                    *yv += s;
+                }
+            } else {
+                for (yv, &word) in yrow.iter_mut().zip(word_row) {
+                    let mut s = 0.0f32;
+                    let mut bits = word;
+                    for &xv in xs {
+                        s += xv * (bits & 1) as f32;
+                        bits >>= 1;
+                    }
+                    *yv += s;
+                }
             }
         }
     }
     for m in 0..x.rows {
-        let xs = xsums[m];
-        let yrow = &mut acc.data[m * n..(m + 1) * n];
+        let xs = qs.xsums[m];
+        let yrow = &mut y.data[m * n..(m + 1) * n];
         for (yv, &s) in yrow.iter_mut().zip(w.scales.iter()) {
             *yv = s * (2.0 * *yv - xs);
         }
     }
-    acc
 }
 
 #[cfg(test)]
@@ -174,12 +328,39 @@ mod tests {
     }
 
     #[test]
+    fn binary_partial_word_tail() {
+        // K = 50: the last word holds only 18 valid bits
+        let mut rng = Rng::new(5);
+        let w = Mat::randn(&mut rng, 50, 12, 1.0);
+        let b = binarize(&w, false);
+        let x = Mat::randn(&mut rng, 3, 50, 1.0);
+        assert_close(&binary_matmul(&x, &b), &x.matmul(&b.dequantize()), 1e-4);
+    }
+
+    #[test]
     fn single_row_decode_path() {
         let mut rng = Rng::new(2);
         let w = Mat::randn(&mut rng, 64, 16, 1.0);
         let t = quantize_groupwise(&w, 3);
         let x = Mat::randn(&mut rng, 1, 64, 1.0);
         assert_close(&packed_matmul(&x, &t), &x.matmul(&t.dequantize()), 1e-4);
+    }
+
+    #[test]
+    fn into_variant_reuses_buffers() {
+        let mut rng = Rng::new(3);
+        let w = Mat::randn(&mut rng, 128, 24, 1.0);
+        let t = quantize_groupwise(&w, 4);
+        let x = Mat::randn(&mut rng, 2, 128, 1.0);
+        let mut y = Mat::zeros(0, 0);
+        let mut qs = QmScratch::new();
+        packed_matmul_into(&x, &t, &mut y, &mut qs);
+        let (yp, ap) = (y.data.as_ptr(), qs.acc.as_ptr());
+        let first = y.clone();
+        packed_matmul_into(&x, &t, &mut y, &mut qs);
+        assert_eq!(y.data.as_ptr(), yp, "steady-state y must not realloc");
+        assert_eq!(qs.acc.as_ptr(), ap, "steady-state acc must not realloc");
+        assert_eq!(y.data, first.data);
     }
 }
 
@@ -197,13 +378,23 @@ mod perf_path_tests {
             let t = quantize_groupwise(&w, bits);
             for m in [1usize, 3, 4] {
                 let x = Mat::randn(&mut rng, m, 128, 1.0);
-                let small = packed_matmul_small_m(&x, &t);
-                let large = packed_matmul_large_m(&x, &t);
+                let mut small = Mat::zeros(0, 0);
+                let mut qs = QmScratch::new();
+                packed_small_m_into_for_test(&x, &t, &mut small, &mut qs);
+                let mut large = Mat::zeros(x.rows, t.n);
+                packed_large_m_into(&x, &t, &mut large, &mut qs);
                 for (a, b) in small.data.iter().zip(&large.data) {
                     assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()),
                             "bits={bits} m={m}: {a} vs {b}");
                 }
             }
         }
+    }
+
+    fn packed_small_m_into_for_test(x: &Mat, w: &PackedTensor, y: &mut Mat,
+                                    qs: &mut QmScratch) {
+        y.resize_to(x.rows, w.n);
+        y.data.fill(0.0);
+        packed_small_m_into(x, w, y, &mut qs.acc);
     }
 }

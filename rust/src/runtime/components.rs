@@ -126,7 +126,7 @@ mod tests {
         let dir = artifacts_dir();
         let cfg = ModelConfig::load(&dir.join("config.json")).ok()?;
         let wf = WeightFile::load(&dir.join("weights.mcwt")).ok()?;
-        let model = MoeModel::load_f32(&cfg, &wf).ok()?;
+        let model = MoeModel::load_f32(&cfg, wf).ok()?;
         let mut rt = Runtime::cpu(&dir).ok()?;
         for name in ["gate", "expert_ffn_f32", "expert_ffn_q2",
                      "expert_ffn_q3", "expert_ffn_b1"] {

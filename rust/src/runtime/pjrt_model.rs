@@ -76,7 +76,7 @@ mod tests {
         }
         let mut pm = PjrtModel::load(&dir).unwrap();
         let wf = WeightFile::load(&dir.join("weights.mcwt")).unwrap();
-        let native = MoeModel::load_f32(&pm.cfg, &wf).unwrap();
+        let native = MoeModel::load_f32(&pm.cfg, wf).unwrap();
         let tokens: Vec<u32> = (0..64u32).map(|i| (i * 31) % 200 + 1).collect();
         let want = native.score(&tokens);
         let got = pm.score(&tokens).unwrap();

@@ -1,12 +1,23 @@
 //! Dense f32 tensor substrate for the native engine.
 //!
-//! Row-major matrices with the cache-friendly "ikj" matmul (the inner
-//! loop runs contiguously over the output row, which LLVM auto-
-//! vectorizes). This is the baseline the packed-quantized hot path in
-//! `quant::qmatmul` is benchmarked against (EXPERIMENTS.md §Perf).
+//! `matmul_into` is a register-blocked tiled kernel: output rows are
+//! processed in blocks of 4 so each `w` panel row is loaded once per
+//! block instead of once per row, and the K loop is unrolled by 4 so
+//! the inner axpy carries 4 independent FMA streams (EXPERIMENTS.md
+//! §Perf). Large GEMMs additionally split their output columns into
+//! strips across the persistent `WorkerPool` — column partitioning
+//! never changes any element's accumulation order, so pooled and
+//! serial results are bit-identical. The pre-tiling scalar "ikj"
+//! kernel is kept as [`matmul_into_naive`]: it is the parity reference
+//! for the kernel test suite and the baseline `benches/hotpath.rs`
+//! measures the tiled kernel against.
+//!
+//! The `*_into` variants write into caller-owned buffers so the decode
+//! hot path runs allocation-free (DESIGN.md §4 scratch rules).
 
 use std::fmt;
 
+use crate::util::pool::{SendPtr, WorkerPool};
 use crate::util::rng::Rng;
 
 #[derive(Clone, PartialEq)]
@@ -35,6 +46,15 @@ impl Mat {
     pub fn randn(rng: &mut Rng, rows: usize, cols: usize, std: f32) -> Mat {
         let data = (0..rows * cols).map(|_| rng.normal() * std).collect();
         Mat { rows, cols, data }
+    }
+
+    /// Reshape to `[rows, cols]`, reusing the existing allocation when
+    /// capacity allows (the scratch-buffer contract: steady-state
+    /// shapes never reallocate). Contents are unspecified.
+    pub fn resize_to(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
     }
 
     #[inline]
@@ -99,9 +119,150 @@ impl Mat {
     }
 }
 
-/// y = x @ w, accumulating into a pre-zeroed (or pre-filled) buffer.
-/// "ikj" order: the inner loop is a contiguous axpy over the out row.
+/// FLOP volume below which a GEMM is not worth a pool region.
+const GEMM_PAR_MIN_FLOPS: usize = 2_000_000;
+/// Minimum output-column strip width per pool task.
+const GEMM_MIN_STRIP: usize = 32;
+
+/// y += x @ w, accumulating into a pre-zeroed (or pre-filled) buffer.
+/// Tiled kernel; auto-parallelized over column strips for large
+/// shapes. Bit-identical to `matmul_into_with(.., None)`.
 pub fn matmul_into(x: &Mat, w: &Mat, y: &mut Mat) {
+    let pool = WorkerPool::global();
+    let flops = 2 * x.rows * x.cols * w.cols;
+    let p = if flops >= GEMM_PAR_MIN_FLOPS
+        && pool.width() > 1
+        && !WorkerPool::on_worker()
+    {
+        Some(pool)
+    } else {
+        None
+    };
+    matmul_into_with(x, w, y, p);
+}
+
+/// y += x @ w with an explicit pool choice (None = serial). Pooled and
+/// serial execution are bit-identical: strips partition output
+/// columns, and each element's K-accumulation order is unchanged.
+pub fn matmul_into_with(x: &Mat, w: &Mat, y: &mut Mat, pool: Option<&WorkerPool>) {
+    assert_eq!(x.cols, w.rows, "matmul inner dim");
+    assert_eq!((y.rows, y.cols), (x.rows, w.cols), "matmul out dims");
+    let n = w.cols;
+    if let Some(p) = pool {
+        let tasks = p.width().min(n / GEMM_MIN_STRIP);
+        if tasks >= 2 && !WorkerPool::on_worker() {
+            let ybase = SendPtr(y.data.as_mut_ptr());
+            p.for_each(tasks, move |t| {
+                let (c0, c1) = WorkerPool::strip(n, tasks, t);
+                // Safety: strips are disjoint column ranges of y.
+                unsafe { matmul_cols(x, w, ybase.0, c0, c1) };
+            });
+            return;
+        }
+    }
+    // Safety: exclusive access to all of y.
+    unsafe { matmul_cols(x, w, y.data.as_mut_ptr(), 0, n) };
+}
+
+/// Tiled kernel over output columns [c0, c1): 4-row output blocks
+/// reuse each `w` panel, K unrolled by 4, no per-element zero test
+/// (dense path). Caller guarantees `ybase` points at a row-major
+/// [x.rows, w.cols] buffer and concurrent calls use disjoint column
+/// ranges.
+unsafe fn matmul_cols(x: &Mat, w: &Mat, ybase: *mut f32, c0: usize, c1: usize) {
+    let n = w.cols;
+    let kk = x.cols;
+    let cw = c1 - c0;
+    if cw == 0 {
+        return;
+    }
+    let mut i = 0;
+    while i + 4 <= x.rows {
+        let y0 = std::slice::from_raw_parts_mut(ybase.add(i * n + c0), cw);
+        let y1 = std::slice::from_raw_parts_mut(ybase.add((i + 1) * n + c0), cw);
+        let y2 = std::slice::from_raw_parts_mut(ybase.add((i + 2) * n + c0), cw);
+        let y3 = std::slice::from_raw_parts_mut(ybase.add((i + 3) * n + c0), cw);
+        let (x0, x1, x2, x3) =
+            (x.row(i), x.row(i + 1), x.row(i + 2), x.row(i + 3));
+        let mut k = 0;
+        while k + 4 <= kk {
+            let w0 = &w.row(k)[c0..c1];
+            let w1 = &w.row(k + 1)[c0..c1];
+            let w2 = &w.row(k + 2)[c0..c1];
+            let w3 = &w.row(k + 3)[c0..c1];
+            axpy4(y0, w0, w1, w2, w3, x0[k], x0[k + 1], x0[k + 2], x0[k + 3]);
+            axpy4(y1, w0, w1, w2, w3, x1[k], x1[k + 1], x1[k + 2], x1[k + 3]);
+            axpy4(y2, w0, w1, w2, w3, x2[k], x2[k + 1], x2[k + 2], x2[k + 3]);
+            axpy4(y3, w0, w1, w2, w3, x3[k], x3[k + 1], x3[k + 2], x3[k + 3]);
+            k += 4;
+        }
+        while k < kk {
+            let wr = &w.row(k)[c0..c1];
+            axpy(y0, wr, x0[k]);
+            axpy(y1, wr, x1[k]);
+            axpy(y2, wr, x2[k]);
+            axpy(y3, wr, x3[k]);
+            k += 1;
+        }
+        i += 4;
+    }
+    while i < x.rows {
+        let y0 = std::slice::from_raw_parts_mut(ybase.add(i * n + c0), cw);
+        let x0 = x.row(i);
+        let mut k = 0;
+        while k + 4 <= kk {
+            axpy4(
+                y0,
+                &w.row(k)[c0..c1],
+                &w.row(k + 1)[c0..c1],
+                &w.row(k + 2)[c0..c1],
+                &w.row(k + 3)[c0..c1],
+                x0[k],
+                x0[k + 1],
+                x0[k + 2],
+                x0[k + 3],
+            );
+            k += 4;
+        }
+        while k < kk {
+            axpy(y0, &w.row(k)[c0..c1], x0[k]);
+            k += 1;
+        }
+        i += 1;
+    }
+}
+
+#[inline(always)]
+fn axpy4(
+    y: &mut [f32],
+    w0: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    w3: &[f32],
+    a0: f32,
+    a1: f32,
+    a2: f32,
+    a3: f32,
+) {
+    for ((((yv, &b0), &b1), &b2), &b3) in
+        y.iter_mut().zip(w0).zip(w1).zip(w2).zip(w3)
+    {
+        *yv += a0 * b0 + a1 * b1 + a2 * b2 + a3 * b3;
+    }
+}
+
+#[inline(always)]
+pub(crate) fn axpy(y: &mut [f32], w: &[f32], a: f32) {
+    for (yv, &wv) in y.iter_mut().zip(w) {
+        *yv += a * wv;
+    }
+}
+
+/// The pre-tiling scalar "ikj" kernel (with its sparse-activation
+/// skip), kept verbatim as the parity reference for
+/// `tests/kernel_parity.rs` and the baseline `benches/hotpath.rs`
+/// reports speedups against.
+pub fn matmul_into_naive(x: &Mat, w: &Mat, y: &mut Mat) {
     assert_eq!(x.cols, w.rows, "matmul inner dim");
     assert_eq!((y.rows, y.cols), (x.rows, w.cols), "matmul out dims");
     let n = w.cols;
@@ -110,13 +271,47 @@ pub fn matmul_into(x: &Mat, w: &Mat, y: &mut Mat) {
         let yrow = &mut y.data[i * n..(i + 1) * n];
         for (k, &xv) in xrow.iter().enumerate() {
             if xv == 0.0 {
-                continue; // dense-mixing weights are often sparse
+                continue;
             }
             let wrow = &w.data[k * n..(k + 1) * n];
             for (yv, &wv) in yrow.iter_mut().zip(wrow) {
                 *yv += xv * wv;
             }
         }
+    }
+}
+
+/// y = x @ w into a reused scratch Mat (resized + zeroed first).
+pub fn matmul_reset_into(x: &Mat, w: &Mat, y: &mut Mat) {
+    y.resize_to(x.rows, w.cols);
+    y.data.fill(0.0);
+    matmul_into(x, w, y);
+}
+
+/// y[n] = x[k] @ w[k, n] for a single activation row (the decode
+/// logits path: only the last position's logits are needed).
+pub fn vecmat_into(x: &[f32], w: &Mat, y: &mut Vec<f32>) {
+    assert_eq!(x.len(), w.rows, "vecmat inner dim");
+    y.clear();
+    y.resize(w.cols, 0.0);
+    let mut k = 0;
+    while k + 4 <= x.len() {
+        axpy4(
+            y,
+            w.row(k),
+            w.row(k + 1),
+            w.row(k + 2),
+            w.row(k + 3),
+            x[k],
+            x[k + 1],
+            x[k + 2],
+            x[k + 3],
+        );
+        k += 4;
+    }
+    while k < x.len() {
+        axpy(y, w.row(k), x[k]);
+        k += 1;
     }
 }
 
@@ -130,17 +325,24 @@ pub fn add_inplace(y: &mut Mat, x: &Mat) {
 
 /// RMSNorm over the last dim with learned gain, eps matching the jax ref.
 pub fn rmsnorm(x: &Mat, weight: &[f32], eps: f32) -> Mat {
-    assert_eq!(x.cols, weight.len());
     let mut y = Mat::zeros(x.rows, x.cols);
+    rmsnorm_into(x, weight, eps, &mut y);
+    y
+}
+
+/// RMSNorm into a reused scratch Mat (resized; fully overwritten).
+pub fn rmsnorm_into(x: &Mat, weight: &[f32], eps: f32, y: &mut Mat) {
+    assert_eq!(x.cols, weight.len());
+    y.resize_to(x.rows, x.cols);
     for r in 0..x.rows {
         let row = x.row(r);
         let ms = row.iter().map(|v| v * v).sum::<f32>() / x.cols as f32;
         let inv = 1.0 / (ms + eps).sqrt();
-        for (c, (&v, &w)) in row.iter().zip(weight).enumerate() {
-            y.data[r * x.cols + c] = v * inv * w;
+        let yrow = &mut y.data[r * x.cols..(r + 1) * x.cols];
+        for ((yv, &v), &w) in yrow.iter_mut().zip(row).zip(weight) {
+            *yv = v * inv * w;
         }
     }
-    y
 }
 
 /// Numerically-stable in-place softmax over each row.
@@ -167,9 +369,18 @@ pub fn silu(x: f32) -> f32 {
 
 /// log-softmax of one row (for log-likelihood scoring)
 pub fn log_softmax(row: &[f32]) -> Vec<f32> {
+    let mut out = Vec::new();
+    log_softmax_into(row, &mut out);
+    out
+}
+
+/// log-softmax into a reused buffer: scoring loops call this once per
+/// position, so the eval paths stop allocating a fresh Vec per token.
+pub fn log_softmax_into(row: &[f32], out: &mut Vec<f32>) {
     let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
     let lse = m + row.iter().map(|v| (v - m).exp()).sum::<f32>().ln();
-    row.iter().map(|v| v - lse).collect()
+    out.clear();
+    out.extend(row.iter().map(|v| v - lse));
 }
 
 #[cfg(test)]
@@ -196,6 +407,81 @@ mod tests {
         for (x, y) in a.data.iter().zip(&y.data) {
             assert!((x - y).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn tiled_matches_naive_reference() {
+        let mut rng = Rng::new(7);
+        for &(m, k, n) in &[
+            (1usize, 7usize, 5usize),
+            (3, 17, 9),
+            (4, 32, 33),
+            (5, 50, 31),
+            (9, 65, 66),
+        ] {
+            let x = Mat::randn(&mut rng, m, k, 1.0);
+            let w = Mat::randn(&mut rng, k, n, 1.0);
+            let mut tiled = Mat::zeros(m, n);
+            matmul_into_with(&x, &w, &mut tiled, None);
+            let mut naive = Mat::zeros(m, n);
+            matmul_into_naive(&x, &w, &mut naive);
+            for (a, b) in tiled.data.iter().zip(&naive.data) {
+                assert!(
+                    (a - b).abs() < 1e-4 * (1.0 + b.abs()),
+                    "({m},{k},{n}): {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pooled_strips_bit_match_serial() {
+        let mut rng = Rng::new(8);
+        let pool = WorkerPool::global();
+        let (m, k, n) = (7, 33, 130);
+        let x = Mat::randn(&mut rng, m, k, 1.0);
+        let w = Mat::randn(&mut rng, k, n, 1.0);
+        let mut serial = Mat::zeros(m, n);
+        matmul_into_with(&x, &w, &mut serial, None);
+        let mut pooled = Mat::zeros(m, n);
+        matmul_into_with(&x, &w, &mut pooled, Some(pool));
+        assert_eq!(serial.data, pooled.data, "pool must be bit-exact");
+    }
+
+    #[test]
+    fn matmul_accumulates_into_prefilled() {
+        let mut rng = Rng::new(9);
+        let x = Mat::randn(&mut rng, 3, 8, 1.0);
+        let w = Mat::randn(&mut rng, 8, 6, 1.0);
+        let mut y = Mat::from_vec(3, 6, vec![1.0; 18]);
+        matmul_into(&x, &w, &mut y);
+        let base = x.matmul(&w);
+        for (a, b) in y.data.iter().zip(&base.data) {
+            assert!((a - (b + 1.0)).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn vecmat_matches_matmul_row() {
+        let mut rng = Rng::new(10);
+        let x = Mat::randn(&mut rng, 1, 37, 1.0);
+        let w = Mat::randn(&mut rng, 37, 23, 1.0);
+        let full = x.matmul(&w);
+        let mut y = Vec::new();
+        vecmat_into(x.row(0), &w, &mut y);
+        for (a, b) in y.iter().zip(full.row(0)) {
+            assert!((a - b).abs() < 1e-5 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn resize_keeps_capacity() {
+        let mut m = Mat::zeros(8, 8);
+        let ptr = m.data.as_ptr();
+        m.resize_to(2, 3);
+        assert_eq!((m.rows, m.cols, m.data.len()), (2, 3, 6));
+        m.resize_to(8, 8);
+        assert_eq!(m.data.as_ptr(), ptr, "shrink+regrow must not realloc");
     }
 
     #[test]
@@ -238,6 +524,13 @@ mod tests {
     fn log_softmax_sums_to_one() {
         let l = log_softmax(&[0.5, 1.5, -0.5]);
         let s: f32 = l.iter().map(|v| v.exp()).sum();
+        assert!((s - 1.0).abs() < 1e-5);
+        // into-variant reuses the buffer without reallocating
+        let mut buf = l.clone();
+        let ptr = buf.as_ptr();
+        log_softmax_into(&[1.0, 0.0, -1.0], &mut buf);
+        assert_eq!(buf.as_ptr(), ptr);
+        let s: f32 = buf.iter().map(|v| v.exp()).sum();
         assert!((s - 1.0).abs() < 1e-5);
     }
 

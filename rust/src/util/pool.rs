@@ -1,0 +1,443 @@
+//! Persistent worker pool (DESIGN.md §4).
+//!
+//! Dependency-free (no rayon) replacement for the per-layer
+//! `std::thread::scope` spawns the dispatch path used before: threads
+//! are spawned once (`WorkerPool::global()`, sized from
+//! `available_parallelism`) and parallel regions are broadcast to them
+//! over a condvar — no channel, no per-region heap allocation, so the
+//! pool is usable from the zero-allocation decode hot path.
+//!
+//! The only primitive is [`WorkerPool::for_each`]: run `f(i)` for
+//! `i in 0..n`, with indices claimed dynamically from a shared atomic
+//! counter and the *caller participating* as one of the workers. Each
+//! index runs exactly once, so tasks that write disjoint output
+//! regions (expert batches, attention heads, GEMM column strips) are
+//! bit-exact with serial execution — parallelism never changes a
+//! reduction order, it only partitions writes (DESIGN.md §4 ownership
+//! rules).
+//!
+//! Nested regions degrade to serial: a task that calls `for_each`
+//! while running on a pool worker executes inline (checked via a
+//! thread-local), which both bounds oversubscription and makes the
+//! pool deadlock-free under composition (expert FFN → GEMM strips).
+//! [`WorkerPool::run_inline`] exposes the same mechanism to callers
+//! whose contract forbids parallelism (`DispatchMode::Serial`).
+//!
+//! Trade-off: a region is broadcast to *every* worker (each wakes,
+//! claims what it can, and acknowledges), so region latency includes
+//! one wake + mutex round per worker even when `n` is small. That
+//! keeps the protocol allocation-free and the job lifetime trivially
+//! sound; callers bound the cost by gating regions on work volume
+//! (the `*_MIN_FLOPS`/`*_MIN_WORK` thresholds at each call site).
+
+use std::any::Any;
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+
+type PanicPayload = Box<dyn Any + Send>;
+
+thread_local! {
+    static IN_POOL: Cell<bool> = const { Cell::new(false) };
+}
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    // a panic inside a task is re-raised on the caller; the pool's own
+    // state is always consistent, so poisoning is ignorable
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Raw-pointer handle for pool tasks that write disjoint regions of a
+/// shared buffer (GEMM column strips, attention head columns, expert
+/// batches, per-task scratch rows). Constructing one asserts the
+/// DESIGN.md §4 ownership rule: no two concurrent tasks may touch the
+/// same index, and the pointee outlives the region (guaranteed by
+/// `for_each` blocking until every worker exits).
+pub struct SendPtr<T>(pub *mut T);
+
+impl<T> Clone for SendPtr<T> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+impl<T> Copy for SendPtr<T> {}
+// Safety: see the ownership rule above — disjoint writes only, within
+// a region whose lifetime is bounded by the caller's stack frame.
+unsafe impl<T> Send for SendPtr<T> {}
+unsafe impl<T> Sync for SendPtr<T> {}
+
+/// One parallel region, broadcast to every worker. The references are
+/// lifetime-erased borrows of the caller's stack frame; `for_each`
+/// does not return until every worker has exited the region, so they
+/// never dangle (see the transmute in `for_each`).
+#[derive(Clone, Copy)]
+struct Job {
+    f: &'static (dyn Fn(usize) + Sync),
+    next: &'static AtomicUsize,
+    panicked: &'static AtomicBool,
+    /// first caught panic payload, re-raised on the caller so assert
+    /// messages from pooled tasks survive the hop between threads
+    payload: &'static Mutex<Option<PanicPayload>>,
+    n: usize,
+}
+
+struct State {
+    /// bumped once per region; workers run each generation exactly once
+    gen: u64,
+    job: Option<Job>,
+    /// workers still inside the current region
+    active: usize,
+    stop: bool,
+}
+
+struct Inner {
+    state: Mutex<State>,
+    work_cv: Condvar,
+    done_cv: Condvar,
+}
+
+pub struct WorkerPool {
+    inner: Arc<Inner>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    /// serializes regions from concurrent callers (server thread vs
+    /// an engine thread); waiting here is the back-pressure
+    region: Mutex<()>,
+}
+
+fn run_job(job: &Job) {
+    loop {
+        if job.panicked.load(Ordering::Relaxed) {
+            break;
+        }
+        let i = job.next.fetch_add(1, Ordering::Relaxed);
+        if i >= job.n {
+            break;
+        }
+        let f = job.f;
+        if let Err(p) =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(i)))
+        {
+            let mut slot = lock(job.payload);
+            if slot.is_none() {
+                *slot = Some(p);
+            }
+            drop(slot);
+            job.panicked.store(true, Ordering::Relaxed);
+            break;
+        }
+    }
+}
+
+fn worker_loop(inner: Arc<Inner>) {
+    IN_POOL.with(|c| c.set(true));
+    let mut seen = 0u64;
+    loop {
+        let job = {
+            let mut st = lock(&inner.state);
+            loop {
+                if st.stop {
+                    return;
+                }
+                if st.gen != seen {
+                    seen = st.gen;
+                    break st.job.expect("job set with generation bump");
+                }
+                st = inner
+                    .work_cv
+                    .wait(st)
+                    .unwrap_or_else(|e| e.into_inner());
+            }
+        };
+        run_job(&job);
+        let mut st = lock(&inner.state);
+        st.active -= 1;
+        if st.active == 0 {
+            inner.done_cv.notify_all();
+        }
+    }
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `workers` persistent threads. The caller of
+    /// `for_each` always participates, so the parallel width is
+    /// `workers + 1`.
+    pub fn new(workers: usize) -> WorkerPool {
+        let inner = Arc::new(Inner {
+            state: Mutex::new(State { gen: 0, job: None, active: 0, stop: false }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (0..workers)
+            .map(|i| {
+                let inner = inner.clone();
+                std::thread::Builder::new()
+                    .name(format!("mc-pool-{i}"))
+                    .spawn(move || worker_loop(inner))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        WorkerPool { inner, workers: handles, region: Mutex::new(()) }
+    }
+
+    /// The process-wide pool, started once on first use and sized from
+    /// `available_parallelism` (N-1 workers + the participating
+    /// caller). `McEngine` and `Batcher` touch this at construction so
+    /// the spawn cost is paid at startup, not on the first request.
+    pub fn global() -> &'static WorkerPool {
+        static POOL: OnceLock<WorkerPool> = OnceLock::new();
+        POOL.get_or_init(|| {
+            let cores = std::thread::available_parallelism()
+                .map(|p| p.get())
+                .unwrap_or(1);
+            WorkerPool::new(cores.saturating_sub(1))
+        })
+    }
+
+    /// Parallel width: worker threads plus the participating caller.
+    pub fn width(&self) -> usize {
+        self.workers.len() + 1
+    }
+
+    /// True when the current thread is a pool worker — callers use
+    /// this to keep nested parallel regions serial.
+    pub fn on_worker() -> bool {
+        IN_POOL.with(|c| c.get())
+    }
+
+    /// Run `f` with the current thread flagged as a pool worker, so
+    /// nested `for_each` calls and kernel auto-parallel heuristics
+    /// execute inline for its duration. `DispatchMode::Serial` and
+    /// `SpawnScope` use this to honor their in-thread contract —
+    /// without it the GEMM layer would silently re-introduce the pool
+    /// under a mode that promises not to use it (and would corrupt
+    /// the serial baselines in `benches/hotpath.rs`).
+    pub fn run_inline<R>(f: impl FnOnce() -> R) -> R {
+        struct Restore(bool);
+        impl Drop for Restore {
+            fn drop(&mut self) {
+                IN_POOL.with(|c| c.set(self.0));
+            }
+        }
+        let _restore = Restore(IN_POOL.with(|c| c.replace(true)));
+        f()
+    }
+
+    /// Run `f(i)` for every `i in 0..n` across the pool, returning
+    /// once all indices have completed. Each index runs exactly once;
+    /// the caller participates. Runs inline (serial) when the pool has
+    /// no workers, `n < 2`, or the caller is itself a pool worker.
+    pub fn for_each<F: Fn(usize) + Sync>(&self, n: usize, f: F) {
+        if n == 0 {
+            return;
+        }
+        if self.workers.is_empty() || n == 1 || Self::on_worker() {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let _region = lock(&self.region);
+        let next = AtomicUsize::new(0);
+        let panicked = AtomicBool::new(false);
+        let payload: Mutex<Option<PanicPayload>> = Mutex::new(None);
+        let fref: &(dyn Fn(usize) + Sync) = &f;
+        // Safety: lifetime erasure only — this function does not
+        // return until every worker has left the region (the `active`
+        // wait below), so the erased borrows never outlive the frame.
+        let job = Job {
+            f: unsafe {
+                std::mem::transmute::<
+                    &(dyn Fn(usize) + Sync),
+                    &'static (dyn Fn(usize) + Sync),
+                >(fref)
+            },
+            next: unsafe {
+                std::mem::transmute::<&AtomicUsize, &'static AtomicUsize>(
+                    &next,
+                )
+            },
+            panicked: unsafe {
+                std::mem::transmute::<&AtomicBool, &'static AtomicBool>(
+                    &panicked,
+                )
+            },
+            payload: unsafe {
+                std::mem::transmute::<
+                    &Mutex<Option<PanicPayload>>,
+                    &'static Mutex<Option<PanicPayload>>,
+                >(&payload)
+            },
+            n,
+        };
+        {
+            let mut st = lock(&self.inner.state);
+            st.gen = st.gen.wrapping_add(1);
+            st.job = Some(job);
+            st.active = self.workers.len();
+            self.inner.work_cv.notify_all();
+        }
+        // the caller is one of the workers; it is flagged as such for
+        // the duration so its own tasks' nested for_each calls run
+        // inline instead of re-entering the (non-reentrant) region
+        // lock. run_job never unwinds (tasks are caught), so the flag
+        // is always restored.
+        IN_POOL.with(|c| c.set(true));
+        run_job(&job);
+        IN_POOL.with(|c| c.set(false));
+        let mut st = lock(&self.inner.state);
+        while st.active > 0 {
+            st = self
+                .inner
+                .done_cv
+                .wait(st)
+                .unwrap_or_else(|e| e.into_inner());
+        }
+        st.job = None;
+        drop(st);
+        if panicked.load(Ordering::Relaxed) {
+            let p = lock(&payload).take();
+            match p {
+                Some(p) => std::panic::resume_unwind(p),
+                None => panic!("WorkerPool task panicked"),
+            }
+        }
+    }
+
+    /// Contiguous strip bounds for splitting `len` items into `tasks`
+    /// near-equal ranges: returns `(start, end)` of strip `t`.
+    pub fn strip(len: usize, tasks: usize, t: usize) -> (usize, usize) {
+        (t * len / tasks, (t + 1) * len / tasks)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock(&self.inner.state);
+            st.stop = true;
+            self.inner.work_cv.notify_all();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_index_runs_exactly_once() {
+        let pool = WorkerPool::new(3);
+        for n in [1usize, 2, 7, 64, 1000] {
+            let hits: Vec<AtomicUsize> =
+                (0..n).map(|_| AtomicUsize::new(0)).collect();
+            pool.for_each(n, |i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+            assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+        }
+    }
+
+    #[test]
+    fn zero_workers_runs_inline() {
+        let pool = WorkerPool::new(0);
+        assert_eq!(pool.width(), 1);
+        let sum = AtomicUsize::new(0);
+        pool.for_each(10, |i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn nested_regions_run_serially() {
+        let pool = WorkerPool::global();
+        let total = AtomicUsize::new(0);
+        pool.for_each(4, |_| {
+            // nested call from (possibly) a worker thread must inline
+            WorkerPool::global().for_each(8, |_| {
+                total.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(total.load(Ordering::Relaxed), 32);
+    }
+
+    #[test]
+    fn reusable_across_many_regions() {
+        let pool = WorkerPool::new(2);
+        let total = AtomicUsize::new(0);
+        for _ in 0..100 {
+            pool.for_each(5, |i| {
+                total.fetch_add(i + 1, Ordering::Relaxed);
+            });
+        }
+        assert_eq!(total.load(Ordering::Relaxed), 100 * 15);
+    }
+
+    #[test]
+    fn disjoint_writes_match_serial() {
+        let pool = WorkerPool::new(3);
+        let n = 257usize;
+        let mut par = vec![0.0f32; n];
+        let base = SendPtr(par.as_mut_ptr());
+        pool.for_each(n, |i| unsafe {
+            *base.0.add(i) = (i as f32).sqrt();
+        });
+        let serial: Vec<f32> = (0..n).map(|i| (i as f32).sqrt()).collect();
+        assert_eq!(par, serial, "pool writes must be bit-exact");
+    }
+
+    #[test]
+    fn run_inline_suppresses_regions_and_restores() {
+        assert!(!WorkerPool::on_worker());
+        let hits = AtomicUsize::new(0);
+        WorkerPool::run_inline(|| {
+            assert!(WorkerPool::on_worker());
+            // a region started under run_inline executes inline
+            WorkerPool::global().for_each(5, |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 5);
+        assert!(!WorkerPool::on_worker(), "flag must be restored");
+    }
+
+    #[test]
+    fn task_panic_propagates_and_pool_survives() {
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.for_each(8, |i| {
+                if i == 3 {
+                    panic!("boom at index {i}");
+                }
+            });
+        }));
+        // the original payload is re-raised, not a generic message
+        let payload = r.unwrap_err();
+        let msg = payload.downcast_ref::<String>().expect("String payload");
+        assert!(msg.contains("boom at index 3"), "{msg}");
+        // pool still works after a panicked region
+        let sum = AtomicUsize::new(0);
+        pool.for_each(4, |i| {
+            sum.fetch_add(i, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 6);
+    }
+
+    #[test]
+    fn strip_bounds_cover_range() {
+        let (len, tasks) = (103usize, 4usize);
+        let mut covered = 0;
+        for t in 0..tasks {
+            let (s, e) = WorkerPool::strip(len, tasks, t);
+            covered += e - s;
+            if t > 0 {
+                assert_eq!(s, WorkerPool::strip(len, tasks, t - 1).1);
+            }
+        }
+        assert_eq!(covered, len);
+    }
+
+}

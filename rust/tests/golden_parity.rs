@@ -14,7 +14,7 @@ fn load() -> Option<(ModelConfig, MoeModel, WeightFile)> {
     let cfg = ModelConfig::load(&dir.join("config.json")).ok()?;
     let wf = WeightFile::load(&dir.join("weights.mcwt")).ok()?;
     let golden = WeightFile::load(&dir.join("golden.mcwt")).ok()?;
-    let model = MoeModel::load_f32(&cfg, &wf).ok()?;
+    let model = MoeModel::load_f32(&cfg, wf).ok()?;
     Some((cfg, model, golden))
 }
 

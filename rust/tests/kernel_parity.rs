@@ -1,0 +1,231 @@
+//! Kernel parity suite (ISSUE 4): the tiled GEMM, the fused packed
+//! decode kernel, and every pool-parallel path must agree with their
+//! reference implementations —
+//!
+//!   * tiled `matmul_into` vs the kept naive scalar-ikj reference, at
+//!     shapes that exercise every remainder path (rows % 4, K % 4);
+//!   * fused packed small-M decode vs `dequantize() + dense matmul`
+//!     for bits ∈ {2, 3, 4} at group/word edge cases (K < GROUP_SIZE,
+//!     K where 3-bit words straddle group boundaries);
+//!   * pool-vs-serial **bit-exactness** for GEMM column strips,
+//!     attention head fan-out, and expert dispatch (the pool
+//!     partitions disjoint writes, so results must be identical to
+//!     the last bit, not just within tolerance).
+
+use mc_moe::moe::exec::attention::{causal_attention_into, AttnScratch};
+use mc_moe::moe::exec::dispatch::{
+    dispatch_experts, scatter, DispatchMode,
+};
+use mc_moe::moe::model::Expert;
+use mc_moe::quant::linear::quantize_groupwise;
+use mc_moe::quant::{binary::binarize, qmatmul, QTensor};
+use mc_moe::tensor::{
+    matmul_into_naive, matmul_into_with, Mat,
+};
+use mc_moe::util::pool::WorkerPool;
+use mc_moe::util::rng::Rng;
+
+fn assert_close(a: &Mat, b: &Mat, tol: f32, what: &str) {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols), "{what}: shape");
+    for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+        assert!(
+            (x - y).abs() <= tol * (1.0 + y.abs()),
+            "{what}[{i}]: {x} vs {y}"
+        );
+    }
+}
+
+#[test]
+fn tiled_gemm_matches_naive_at_odd_shapes() {
+    let mut rng = Rng::new(0);
+    // every (rows mod 4, K mod 4) remainder class plus tall/wide
+    for &(m, k, n) in &[
+        (1usize, 1usize, 1usize),
+        (1, 63, 17),
+        (2, 30, 5),
+        (3, 33, 129),
+        (4, 64, 64),
+        (5, 13, 7),
+        (6, 130, 31),
+        (7, 8, 256),
+        (8, 127, 65),
+        (13, 66, 19),
+    ] {
+        let x = Mat::randn(&mut rng, m, k, 1.0);
+        let w = Mat::randn(&mut rng, k, n, 1.0);
+        let mut tiled = Mat::zeros(m, n);
+        matmul_into_with(&x, &w, &mut tiled, None);
+        let mut naive = Mat::zeros(m, n);
+        matmul_into_naive(&x, &w, &mut naive);
+        assert_close(&tiled, &naive, 1e-4, &format!("gemm {m}x{k}x{n}"));
+    }
+}
+
+#[test]
+fn tiled_gemm_handles_sparse_activations() {
+    // the naive kernel skips zero activations; the tiled kernel must
+    // produce the same result without the branch
+    let mut rng = Rng::new(1);
+    let mut x = Mat::randn(&mut rng, 6, 40, 1.0);
+    for (i, v) in x.data.iter_mut().enumerate() {
+        if i % 3 == 0 {
+            *v = 0.0;
+        }
+    }
+    let w = Mat::randn(&mut rng, 40, 24, 1.0);
+    let mut tiled = Mat::zeros(6, 24);
+    matmul_into_with(&x, &w, &mut tiled, None);
+    let mut naive = Mat::zeros(6, 24);
+    matmul_into_naive(&x, &w, &mut naive);
+    assert_close(&tiled, &naive, 1e-4, "sparse gemm");
+}
+
+#[test]
+fn pooled_gemm_strips_bit_match_serial() {
+    let mut rng = Rng::new(2);
+    let pool = WorkerPool::global();
+    for &(m, k, n) in &[(1usize, 64usize, 200usize), (9, 33, 128), (64, 64, 300)] {
+        let x = Mat::randn(&mut rng, m, k, 1.0);
+        let w = Mat::randn(&mut rng, k, n, 1.0);
+        let mut serial = Mat::zeros(m, n);
+        matmul_into_with(&x, &w, &mut serial, None);
+        let mut pooled = Mat::zeros(m, n);
+        matmul_into_with(&x, &w, &mut pooled, Some(pool));
+        assert_eq!(serial.data, pooled.data,
+                   "gemm strips must be bit-exact ({m}x{k}x{n})");
+    }
+}
+
+#[test]
+fn fused_packed_decode_matches_dequant_reference() {
+    let mut rng = Rng::new(3);
+    // K values exercising the word/group edge cases:
+    //  * 30, 50: K < GROUP_SIZE (group == K), partial final word for
+    //    every bit-width (30 % 16, 50 % 10, 30 % 8 all nonzero)
+    //  * 64, 128: group-aligned
+    //  * 192: 3-bit words (10 vals) straddle the group-64 boundaries
+    for &k in &[30usize, 50, 64, 128, 192] {
+        for &bits in &[2usize, 3, 4] {
+            let w = Mat::randn(&mut rng, k, 19, 1.0);
+            let t = quantize_groupwise(&w, bits);
+            let dense = t.dequantize();
+            for m in [1usize, 2, 4] {
+                let x = Mat::randn(&mut rng, m, k, 1.0);
+                let fused = qmatmul::packed_matmul(&x, &t);
+                let reference = x.matmul(&dense);
+                assert_close(&fused, &reference, 2e-4,
+                             &format!("packed k={k} bits={bits} m={m}"));
+            }
+            // large-M path at the same K edge cases
+            let x = Mat::randn(&mut rng, 9, k, 1.0);
+            assert_close(&qmatmul::packed_matmul(&x, &t), &x.matmul(&dense),
+                         2e-4, &format!("packed large-M k={k} bits={bits}"));
+        }
+        // binary word unroll at the same K edge cases
+        let w = Mat::randn(&mut rng, k, 13, 1.0);
+        let b = binarize(&w, false);
+        let x = Mat::randn(&mut rng, 3, k, 1.0);
+        assert_close(&qmatmul::binary_matmul(&x, &b),
+                     &x.matmul(&b.dequantize()), 2e-4,
+                     &format!("binary k={k}"));
+    }
+}
+
+#[test]
+fn pooled_attention_heads_bit_match_serial() {
+    let mut rng = Rng::new(4);
+    let (s, d, nh) = (80, 64, 8);
+    let q = Mat::randn(&mut rng, s, d, 1.0);
+    let k = Mat::randn(&mut rng, s, d, 1.0);
+    let v = Mat::randn(&mut rng, s, d, 1.0);
+    let mut scratch = AttnScratch::new();
+    let mut serial = Mat::zeros(0, 0);
+    causal_attention_into(&q, &k, &v, s, nh, false, None, &mut scratch,
+                          &mut serial);
+    let mut pooled = Mat::zeros(0, 0);
+    causal_attention_into(&q, &k, &v, s, nh, false,
+                          Some(WorkerPool::global()), &mut scratch,
+                          &mut pooled);
+    assert_eq!(serial.data, pooled.data, "attention heads must be bit-exact");
+}
+
+#[test]
+fn pooled_dispatch_bit_matches_serial_and_spawn() {
+    let mut rng = Rng::new(5);
+    let (rows, d, d_ff, ne, top_k) = (48, 16, 32, 6, 2);
+    let experts: Vec<Expert> = (0..ne)
+        .map(|_| Expert {
+            w1: QTensor::F32(Mat::randn(&mut rng, d, d_ff, 0.1)),
+            w3: QTensor::F32(Mat::randn(&mut rng, d, d_ff, 0.1)),
+            w2: QTensor::F32(Mat::randn(&mut rng, d_ff, d, 0.1)),
+        })
+        .collect();
+    let h = Mat::randn(&mut rng, rows, d, 1.0);
+    let topk: Vec<Vec<(usize, f32)>> = (0..rows)
+        .map(|t| {
+            (0..top_k)
+                .map(|j| ((t + j) % ne, 1.0 / top_k as f32))
+                .collect()
+        })
+        .collect();
+    let y_serial = scatter(
+        &dispatch_experts(&h, &topk, &experts, None, DispatchMode::Serial),
+        rows, d,
+    );
+    for mode in [DispatchMode::Threaded, DispatchMode::SpawnScope,
+                 DispatchMode::Auto] {
+        let y = scatter(&dispatch_experts(&h, &topk, &experts, None, mode),
+                        rows, d);
+        assert_eq!(y_serial.data, y.data, "{mode:?} must be bit-exact");
+    }
+}
+
+#[test]
+fn quantized_expert_dispatch_pool_parity() {
+    // pool-vs-serial bit-exactness must also hold when experts run
+    // the packed kernels (2/3-bit + binary mix)
+    let mut rng = Rng::new(6);
+    let (rows, d, d_ff, ne, top_k) = (24, 64, 64, 4, 2);
+    let experts: Vec<Expert> = (0..ne)
+        .map(|e| {
+            let w1 = Mat::randn(&mut rng, d, d_ff, 0.1);
+            let w3 = Mat::randn(&mut rng, d, d_ff, 0.1);
+            let w2 = Mat::randn(&mut rng, d_ff, d, 0.1);
+            match e % 3 {
+                0 => Expert {
+                    w1: QTensor::Packed(quantize_groupwise(&w1, 2)),
+                    w3: QTensor::Packed(quantize_groupwise(&w3, 3)),
+                    w2: QTensor::Packed(quantize_groupwise(&w2, 4)),
+                },
+                1 => Expert {
+                    w1: QTensor::Binary(binarize(&w1, false)),
+                    w3: QTensor::F32(w3),
+                    w2: QTensor::Packed(quantize_groupwise(&w2, 3)),
+                },
+                _ => Expert {
+                    w1: QTensor::F32(w1),
+                    w3: QTensor::F32(w3),
+                    w2: QTensor::F32(w2),
+                },
+            }
+        })
+        .collect();
+    let h = Mat::randn(&mut rng, rows, d, 1.0);
+    let topk: Vec<Vec<(usize, f32)>> = (0..rows)
+        .map(|t| {
+            (0..top_k)
+                .map(|j| ((t + j) % ne, 1.0 / top_k as f32))
+                .collect()
+        })
+        .collect();
+    let y_serial = scatter(
+        &dispatch_experts(&h, &topk, &experts, None, DispatchMode::Serial),
+        rows, d,
+    );
+    let y_pool = scatter(
+        &dispatch_experts(&h, &topk, &experts, None, DispatchMode::Threaded),
+        rows, d,
+    );
+    assert_eq!(y_serial.data, y_pool.data,
+               "quantized dispatch must be bit-exact under the pool");
+}

@@ -21,7 +21,7 @@ fn workbench() -> Option<Workbench> {
     let dir = artifacts_dir();
     let cfg = ModelConfig::load(&dir.join("config.json")).ok()?;
     let wf = WeightFile::load(&dir.join("weights.mcwt")).ok()?;
-    let fp = MoeModel::load_f32(&cfg, &wf).ok()?;
+    let fp = MoeModel::load_f32(&cfg, wf).ok()?;
     Workbench::build(
         fp,
         WorkbenchConfig {
