@@ -1,5 +1,6 @@
-//! Quickstart: compress the trained MoE model with MC (PMQ + ODP) and
-//! compare it against FP32 on the benchmark suite.
+//! Quickstart: compress the trained MoE model with MC (PMQ + ODP),
+//! compare it against FP32 on the benchmark suite, then reload it
+//! under an expert residency budget (DESIGN.md §5).
 //!
 //!   make artifacts && cargo run --release --example quickstart
 
@@ -9,8 +10,9 @@ use mc_moe::coordinator::{
     memmodel, GenerateRequest, McEngine, SamplingParams,
 };
 use mc_moe::eval::eval_suite;
-use mc_moe::moe::{MoeModel, WeightFile};
+use mc_moe::moe::{qz, MoeModel, WeightFile};
 use mc_moe::odp;
+use mc_moe::offload::{self, PrefetchMode, ResidencyPriors};
 use mc_moe::pmq::allocate::{Allocator, PmqHyper};
 use mc_moe::pmq::{Workbench, WorkbenchConfig};
 
@@ -24,11 +26,11 @@ fn main() -> Result<()> {
              memmodel::loading_bytes(&fp) as f64 / 1e6);
 
     // 1. build the PMQ workbench: one calibration pass + GPTQ zoo
-    println!("\n[1/4] calibrating + quantizing (GPTQ at 1/2/3 bits)...");
+    println!("\n[1/5] calibrating + quantizing (GPTQ at 1/2/3 bits)...");
     let wb = Workbench::build(fp, WorkbenchConfig::default())?;
 
     // 2. solve the Eq.-4 integer program at a 2.5-bit average budget
-    println!("[2/4] solving bit allocation (PMQ, avg 2.5 bits)...");
+    println!("[2/5] solving bit allocation (PMQ, avg 2.5 bits)...");
     let total = 5 * cfg.n_experts / 2;
     let (mc_model, alloc) = wb.compress(Allocator::Pmq, total, PmqHyper::default())?;
     println!("  allocation histogram 1/2/3-bit: {:?}", alloc.histogram());
@@ -38,8 +40,15 @@ fn main() -> Result<()> {
              100.0 * memmodel::loading_bytes(&mc_model) as f64
                  / memmodel::loading_bytes(&wb.fp) as f64);
 
+    // save the compressed model (v2 segmented layout) with the
+    // significance priors the residency cache will reuse in step 5
+    let mcqz_path = std::env::temp_dir().join("mc_quickstart.mcqz");
+    qz::save_with_priors(&mcqz_path, &mc_model,
+                         Some(&ResidencyPriors::from_significance(&wb.sig)))?;
+    let expert_bytes = mc_model.expert_storage_bytes();
+
     // 3. evaluate FP vs MC (+ODP) on the 8-task suite
-    println!("[3/4] evaluating...");
+    println!("[3/5] evaluating...");
     let odp_policy = odp::odp_default(&wb.cal);
     let fp_r = eval_suite(&wb.fp, 40, 0, 4242, None);
     let mc_r = eval_suite(&mc_model, 40, 0, 4242, None);
@@ -57,7 +66,7 @@ fn main() -> Result<()> {
 
     // 4. generate through the unified request API: one GenerateRequest
     // drives the compressed engine, streaming tokens as they decode
-    println!("\n[4/4] sampled generation on the MC model...");
+    println!("\n[4/5] sampled generation on the MC model...");
     let engine = McEngine::new(mc_model, Some(odp_policy), None);
     let req = GenerateRequest::greedy(vec![1, 5, 80, 3], 16)
         .with_sampling(SamplingParams::temperature(0.8, 4242));
@@ -67,5 +76,19 @@ fn main() -> Result<()> {
         let _ = std::io::Write::flush(&mut std::io::stdout());
     })?;
     println!("\n  finish={:?}  {}", done.finish, engine.summary());
+
+    // 5. reload under a 50% expert budget: the residency cache serves
+    // misses from the segmented file, the predictor prefetches ahead
+    println!("\n[5/5] reloading under a 50% expert budget...");
+    let budget = expert_bytes / 2;
+    let capped = offload::load_cached(&mcqz_path, budget, PrefetchMode::Async)?;
+    let capped = McEngine::new(capped, None, None);
+    let req = GenerateRequest::greedy(vec![1, 5, 80, 3], 24);
+    let out = capped.generate(&req)?;
+    println!("  generated {} tokens under a {:.2} MB budget ({:.2} MB of experts)",
+             out.tokens.len(), budget as f64 / 1e6, expert_bytes as f64 / 1e6);
+    println!("  cache: {}", capped.metrics.cache_summary());
+    println!("  {}", capped.summary());
+    std::fs::remove_file(&mcqz_path).ok();
     Ok(())
 }

@@ -8,8 +8,10 @@
 //!   MC_BENCH_FAST=1 cargo bench --bench hotpath   # CI smoke shapes
 //!
 //! Emits `BENCH_hotpath.json` (kernel + decode trajectory, consumed by
-//! the CI bench-smoke artifact and EXPERIMENTS.md §Perf) and keeps the
-//! PR-1 `BENCH_dispatch.json` series going.
+//! the CI bench-smoke artifact and EXPERIMENTS.md §Perf), keeps the
+//! PR-1 `BENCH_dispatch.json` series going, and adds the expert
+//! offload suite (`BENCH_offload.json`: tokens/s and miss-stall time
+//! at 100%/60%/30% expert residency, EXPERIMENTS.md §Offload).
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -18,9 +20,12 @@ use mc_moe::config::{artifacts_dir, ModelConfig};
 use mc_moe::coordinator::decode::{step_many_into, StepScratch};
 use mc_moe::coordinator::{DecodeSession, Server};
 use mc_moe::moe::exec::attention::{causal_attention_into, AttnScratch};
-use mc_moe::moe::exec::dispatch::{dispatch_experts, scatter, DispatchMode};
+use mc_moe::moe::exec::dispatch::{
+    dispatch_experts, scatter, DispatchMode, ExpertsRef,
+};
 use mc_moe::moe::model::Expert;
-use mc_moe::moe::{MoeModel, WeightFile};
+use mc_moe::moe::{qz, MoeModel, WeightFile};
+use mc_moe::offload::{self, PrefetchMode};
 use mc_moe::quant::{binary::binarize, linear::quantize_groupwise, qmatmul, QTensor};
 use mc_moe::tensor::{matmul_into_naive, matmul_into_with, Mat};
 use mc_moe::util::bench::{bench_for, Table};
@@ -261,7 +266,8 @@ fn dispatch_suite() -> DispatchResult {
 
     let run = |mode: DispatchMode| {
         bench_for("dispatch", budget(), || {
-            let b = dispatch_experts(&h, &topk, &experts, None, mode);
+            let b = dispatch_experts(&h, &topk, ExpertsRef::resident(&experts),
+                                     None, mode);
             std::hint::black_box(scatter(&b, rows, d));
         })
         .timings
@@ -391,6 +397,158 @@ fn decode_suite() -> DecodeResult {
                format!("{:.2}", pool_tok_s / spawn_tok_s)]);
     t.print();
     DecodeResult { cfg, batch, steps, serial_tok_s, spawn_tok_s, pool_tok_s }
+}
+
+// ---------------------------------------------------------------------------
+// Expert offload: fused-decode tokens/s + stall time vs residency budget
+// ---------------------------------------------------------------------------
+
+struct OffloadRow {
+    residency: f64,
+    budget_mb: f64,
+    tok_s: f64,
+    hits: u64,
+    misses: u64,
+    prefetch_issued: u64,
+    prefetch_hits: u64,
+    evictions: u64,
+    stall_ms_mean: f64,
+    bytes_resident: u64,
+}
+
+/// Budget sweep over the decode-suite model: 100% residency (cache
+/// covers every expert) vs 60% and 30%, fused multi-session decode.
+fn offload_suite() -> Vec<OffloadRow> {
+    let cfg = if fast() {
+        ModelConfig {
+            name: "bench-fast".into(),
+            vocab_size: 256,
+            d_model: 48,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 192,
+            n_experts: 8,
+            top_k: 2,
+            max_seq: 64,
+            prefill_tile: 32,
+        }
+    } else {
+        ModelConfig {
+            name: "bench".into(),
+            vocab_size: 256,
+            d_model: 96,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 384,
+            n_experts: 8,
+            top_k: 2,
+            max_seq: 192,
+            prefill_tile: 64,
+        }
+    };
+    let source = random_model(&cfg, 11);
+    let expert_bytes: usize = source.layers.iter().flat_map(|l| &l.experts)
+        .map(|e| e.storage_bytes()).sum();
+    let path = std::env::temp_dir()
+        .join(format!("mc_bench_offload_{}.mcqz", std::process::id()));
+    qz::save(&path, &source).unwrap();
+    drop(source);
+
+    let batch = 4usize;
+    let prompt_len = 16usize.min(cfg.max_seq / 4);
+    let steps = if fast() { 8 } else { 48.min(cfg.max_seq - prompt_len - 1) };
+
+    let mut rows = Vec::new();
+    for residency in [1.0f64, 0.6, 0.3] {
+        let budget = (expert_bytes as f64 * residency).ceil() as usize;
+        let model = Arc::new(
+            offload::load_cached(&path, budget, PrefetchMode::Async).unwrap());
+        let metrics = model.resolver.metrics().unwrap();
+        let mut sessions: Vec<DecodeSession> = (0..batch)
+            .map(|i| {
+                let mut s = DecodeSession::new(model.clone(), None);
+                let prompt: Vec<u32> = (0..prompt_len)
+                    .map(|t| ((t * 7 + i) % 200 + 1) as u32)
+                    .collect();
+                s.prefill(&prompt);
+                s
+            })
+            .collect();
+        let mut refs: Vec<&mut DecodeSession> = sessions.iter_mut().collect();
+        let toks: Vec<u32> = (0..batch).map(|i| (i % 200 + 1) as u32).collect();
+        let mut sc = StepScratch::new();
+        // warmup (grow scratch, spin up cache + prefetcher)
+        step_many_into(&mut refs, &toks, &mut sc);
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            std::hint::black_box(step_many_into(&mut refs, &toks, &mut sc));
+        }
+        let tok_s = (batch * steps) as f64 / t0.elapsed().as_secs_f64();
+        use std::sync::atomic::Ordering::Relaxed;
+        rows.push(OffloadRow {
+            residency,
+            budget_mb: budget as f64 / (1 << 20) as f64,
+            tok_s,
+            hits: metrics.expert_cache_hits.load(Relaxed),
+            misses: metrics.expert_cache_misses.load(Relaxed),
+            prefetch_issued: metrics.expert_prefetch_issued.load(Relaxed),
+            prefetch_hits: metrics.expert_prefetch_hits.load(Relaxed),
+            evictions: metrics.expert_cache_evictions.load(Relaxed),
+            stall_ms_mean: metrics.miss_stall_ns.lock().unwrap().mean() / 1e6,
+            bytes_resident: metrics.bytes_resident.load(Relaxed),
+        });
+    }
+    std::fs::remove_file(&path).ok();
+
+    let mut t = Table::new(
+        &format!(
+            "hotpath — offload fused decode (b={batch}, {} layers, \
+             {:.2} MB experts)",
+            cfg.n_layers, expert_bytes as f64 / 1e6
+        ),
+        &["residency", "tok/s", "hit/miss", "prefetch", "evict",
+          "stall ms"],
+    );
+    for r in &rows {
+        t.row(vec![
+            format!("{:.0}%", r.residency * 100.0),
+            format!("{:.0}", r.tok_s),
+            format!("{}/{}", r.hits, r.misses),
+            format!("{}/{}", r.prefetch_hits, r.prefetch_issued),
+            format!("{}", r.evictions),
+            format!("{:.3}", r.stall_ms_mean),
+        ]);
+    }
+    t.print();
+    rows
+}
+
+fn write_offload_json(rows: &[OffloadRow]) {
+    let budgets: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"residency\": {:.2}, \"budget_mb\": {:.3}, \
+                 \"tok_s\": {:.1}, \"hits\": {}, \"misses\": {}, \
+                 \"prefetch_issued\": {}, \"prefetch_hits\": {}, \
+                 \"evictions\": {}, \"stall_ms_mean\": {:.4}, \
+                 \"bytes_resident\": {}}}",
+                r.residency, r.budget_mb, r.tok_s, r.hits, r.misses,
+                r.prefetch_issued, r.prefetch_hits, r.evictions,
+                r.stall_ms_mean, r.bytes_resident,
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"fast\": {},\n  \"threads\": {},\n  \"budgets\": [\n{}\n  ]\n}}\n",
+        fast(),
+        threads(),
+        budgets.join(",\n"),
+    );
+    match std::fs::write("BENCH_offload.json", &json) {
+        Ok(()) => println!("wrote BENCH_offload.json"),
+        Err(e) => eprintln!("could not write BENCH_offload.json: {e}"),
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -539,6 +697,8 @@ fn main() {
     let disp = dispatch_suite();
     let dec = decode_suite();
     write_hotpath_json(&gemm, &attn, &disp, &dec);
+    let off = offload_suite();
+    write_offload_json(&off);
     if !fast() {
         engine_suite();
     }

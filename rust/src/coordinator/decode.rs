@@ -35,8 +35,9 @@ use std::sync::Arc;
 use crate::config::ModelConfig;
 use crate::moe::exec::{attention, dispatch, router};
 use crate::moe::exec::attention::AttnScratch;
-use crate::moe::exec::dispatch::{DispatchMode, DispatchScratch};
-use crate::moe::model::{MoeModel, RunStats, RMS_EPS};
+use crate::moe::exec::dispatch::{DispatchMode, DispatchScratch, ExpertsRef};
+use crate::moe::model::{Expert, MoeModel, RunStats, RMS_EPS};
+use crate::offload;
 use crate::quant::QmScratch;
 use crate::tensor::{
     add_inplace, matmul_reset_into, rmsnorm_into, vecmat_into, Mat,
@@ -73,6 +74,10 @@ pub struct SessionScratch {
     pub topk: Vec<Vec<(usize, f32)>>,
     pub dispatch: DispatchScratch,
     pub qs: QmScratch,
+    /// per-layer routed expert set + pinned slots (cache-resolved
+    /// models only; resident decode never touches these)
+    needed: Vec<usize>,
+    pins: Vec<Option<Arc<Expert>>>,
 }
 
 impl SessionScratch {
@@ -94,6 +99,8 @@ impl SessionScratch {
             topk: Vec::new(),
             dispatch: DispatchScratch::new(),
             qs: QmScratch::new(),
+            needed: Vec::new(),
+            pins: Vec::new(),
         }
     }
 }
@@ -228,14 +235,31 @@ impl DecodeSession {
                     &mut sc.topk[t],
                 );
             }
-            dispatch::dispatch_experts_into(
-                &sc.h,
-                &sc.topk[..t_new],
-                &layer.experts,
-                None,
-                DispatchMode::Auto,
-                &mut sc.dispatch,
-            );
+            if model.resolver.is_resident() {
+                dispatch::dispatch_experts_into(
+                    &sc.h,
+                    &sc.topk[..t_new],
+                    ExpertsRef::resident(&layer.experts),
+                    None,
+                    DispatchMode::Auto,
+                    &mut sc.dispatch,
+                );
+            } else {
+                // pin the routed set for this dispatch; the predictor
+                // prefetches layer li+1 while these FFNs execute
+                offload::unique_experts(&sc.topk[..t_new], &mut sc.needed);
+                model.resolver.pin_layer(li, &sc.needed, &mut sc.pins);
+                model.resolver.note_routing(li, &sc.needed);
+                dispatch::dispatch_experts_into(
+                    &sc.h,
+                    &sc.topk[..t_new],
+                    ExpertsRef::pinned(&sc.pins),
+                    None,
+                    DispatchMode::Auto,
+                    &mut sc.dispatch,
+                );
+                model.resolver.unpin_layer(li, &sc.needed);
+            }
             dispatch::scatter_into(&sc.dispatch, t_new, d, &mut sc.moe_y);
             add_inplace(&mut sc.x, &sc.moe_y);
         }
@@ -268,6 +292,9 @@ pub struct StepScratch {
     pub dispatch: DispatchScratch,
     pub qs: QmScratch,
     positions: Vec<usize>,
+    /// cache-resolved models only (see `SessionScratch`)
+    needed: Vec<usize>,
+    pins: Vec<Option<Arc<Expert>>>,
 }
 
 impl Default for StepScratch {
@@ -289,6 +316,8 @@ impl Default for StepScratch {
             dispatch: DispatchScratch::new(),
             qs: QmScratch::new(),
             positions: Vec::new(),
+            needed: Vec::new(),
+            pins: Vec::new(),
         }
     }
 }
@@ -420,14 +449,29 @@ pub fn step_many_into<'a>(
                 &mut sc.topk[i],
             );
         }
-        dispatch::dispatch_experts_into(
-            &sc.h,
-            &sc.topk[..b],
-            &layer.experts,
-            None,
-            sc.dispatch_mode,
-            &mut sc.dispatch,
-        );
+        if model.resolver.is_resident() {
+            dispatch::dispatch_experts_into(
+                &sc.h,
+                &sc.topk[..b],
+                ExpertsRef::resident(&layer.experts),
+                None,
+                sc.dispatch_mode,
+                &mut sc.dispatch,
+            );
+        } else {
+            offload::unique_experts(&sc.topk[..b], &mut sc.needed);
+            model.resolver.pin_layer(li, &sc.needed, &mut sc.pins);
+            model.resolver.note_routing(li, &sc.needed);
+            dispatch::dispatch_experts_into(
+                &sc.h,
+                &sc.topk[..b],
+                ExpertsRef::pinned(&sc.pins),
+                None,
+                sc.dispatch_mode,
+                &mut sc.dispatch,
+            );
+            model.resolver.unpin_layer(li, &sc.needed);
+        }
         dispatch::scatter_into(&sc.dispatch, b, d, &mut sc.moe_y);
         add_inplace(&mut sc.x, &sc.moe_y);
     }

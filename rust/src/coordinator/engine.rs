@@ -34,11 +34,17 @@ impl McEngine {
         // start the worker pool now so its spawn cost is paid at
         // construction, not inside the first request
         let _ = crate::util::pool::WorkerPool::global();
+        // a cache-resolved model already records hit/miss/stall into
+        // its own Metrics — adopt it so one snapshot covers everything
+        let metrics = model
+            .resolver
+            .metrics()
+            .unwrap_or_else(|| Arc::new(Metrics::new()));
         McEngine {
             model: Arc::new(model),
             odp,
             decode_odp,
-            metrics: Arc::new(Metrics::new()),
+            metrics,
         }
     }
 
@@ -113,17 +119,29 @@ impl McEngine {
         self.generate_stream(req, |_| {})
     }
 
-    /// One-line deployment summary (Tab. 4-style row).
+    /// One-line deployment summary (Tab. 4-style row). Budgeted
+    /// models report resident (budget-capped) weight bytes alongside
+    /// total model size.
     pub fn summary(&self) -> String {
         let load = memmodel::loading_bytes(&self.model);
         let act = memmodel::activated_bytes_per_token(&self.model, 1.0);
+        let budget = match self.model.resolver.budget_bytes() {
+            Some(b) => format!(
+                " resident={:.3}GB (expert budget {:.1}MB)",
+                memmodel::gb(memmodel::resident_weight_bytes(
+                    &self.model, Some(b))),
+                b as f64 / (1 << 20) as f64,
+            ),
+            None => String::new(),
+        };
         format!(
-            "model={} bits={:.2} load={:.3}GB act/token={:.3}MB odp={}",
+            "model={} bits={:.2} load={:.3}GB act/token={:.3}MB odp={}{}",
             self.model.cfg.name,
             self.model.expert_avg_bits(),
             memmodel::gb(load),
             act / (1 << 20) as f64,
             self.odp.is_some(),
+            budget,
         )
     }
 }

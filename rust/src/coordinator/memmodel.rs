@@ -4,6 +4,14 @@
 //! throughput on A100/3090 GPUs. Those quantities are arithmetic over
 //! tensor sizes and bit-widths — identical math here, applied to our
 //! models, plus measured CPU wall-clock for the ratios (Tab. 13).
+//!
+//! Element sizes are not hardcoded in the formulas: [`MemParams`]
+//! derives them from the model (the engine's KV cache and activations
+//! are f32 `Mat`s today — `size_of::<f32>()` — and would change here,
+//! in one place, if a half-precision KV pass landed) and carries the
+//! expert-residency budget, so the peak/loading math of a
+//! budget-capped deployment (DESIGN.md §5) reflects what is actually
+//! resident rather than the full expert set.
 
 use crate::moe::model::MoeModel;
 
@@ -21,21 +29,93 @@ pub const PLATFORMS: [Platform; 3] = [
     Platform { name: "CPU-host", mem_bytes: 16 << 30, bw_bytes_per_s: 40.0e9 },
 ];
 
+/// Element sizes + residency budget the memory math runs over.
+#[derive(Debug, Clone, Copy)]
+pub struct MemParams {
+    /// bytes per KV-cache element
+    pub kv_elem_bytes: usize,
+    /// bytes per activation-workspace element
+    pub act_elem_bytes: usize,
+    /// expert-residency byte budget (None = fully resident)
+    pub expert_budget: Option<u64>,
+}
+
+impl MemParams {
+    /// Derive from the model: the engine materializes KV rows and
+    /// activations as f32 (`LayerKv`/scratch `Mat`s), and a
+    /// cache-resolved model contributes its configured byte budget.
+    pub fn for_model(model: &MoeModel) -> MemParams {
+        MemParams {
+            kv_elem_bytes: std::mem::size_of::<f32>(),
+            act_elem_bytes: std::mem::size_of::<f32>(),
+            expert_budget: model.resolver.budget_bytes(),
+        }
+    }
+
+    /// What-if element size for a half/quarter-precision KV cache
+    /// (the Tab. 14 sensitivity axis).
+    pub fn with_kv_elem_bytes(self, bytes: usize) -> MemParams {
+        MemParams { kv_elem_bytes: bytes, ..self }
+    }
+
+    pub fn with_expert_budget(self, budget: Option<u64>) -> MemParams {
+        MemParams { expert_budget: budget, ..self }
+    }
+}
+
 /// Weights-only loading memory (paper "Loading Memory" / "Params").
 pub fn loading_bytes(model: &MoeModel) -> u64 {
     model.storage_bytes() as u64
 }
 
-/// Peak serving memory: weights + KV cache + activation workspace.
-pub fn peak_bytes(model: &MoeModel, batch: usize, seq: usize) -> u64 {
+/// Weight bytes resident under an expert budget as *configured*: the
+/// full non-expert stack plus at most `budget` bytes of experts.
+/// (Transient demand-pin overshoot is modeled by [`peak_bytes_with`],
+/// which floors the expert term at a step's pinned working set.)
+pub fn resident_weight_bytes(model: &MoeModel, budget: Option<u64>) -> u64 {
+    let experts = model.expert_storage_bytes() as u64;
+    let non_expert = loading_bytes(model) - experts;
+    non_expert + budget.map_or(experts, |b| experts.min(b))
+}
+
+/// Peak serving memory under explicit element sizes and budget:
+/// resident weights + KV cache + activation workspace. The expert
+/// term is floored at one fused step's worst-case *pinned* working
+/// set (`min(batch·top_k, n_experts)` experts of one layer): the
+/// cache deliberately overshoots the budget rather than evict a
+/// pinned expert mid-dispatch (DESIGN.md §5), so a budget below that
+/// floor does not actually lower the peak.
+pub fn peak_bytes_with(model: &MoeModel, batch: usize, seq: usize,
+                       p: &MemParams) -> u64 {
     let cfg = &model.cfg;
-    let kv = 2 * batch * seq * cfg.d_model * cfg.n_layers * 4;
-    // activation workspace: hidden + logits + attention scores per seq
-    let act = batch
-        * (seq * cfg.d_model * 4 + seq * cfg.vocab_size
-           + cfg.n_heads * seq * seq)
-        * 4;
-    loading_bytes(model) + (kv + act) as u64
+    let kv = (2 * batch * seq * cfg.d_model * cfg.n_layers) as u64
+        * p.kv_elem_bytes as u64;
+    // activation workspace: 4 hidden-sized buffers + logits +
+    // attention scores per sequence
+    let act = (batch
+        * (4 * seq * cfg.d_model + seq * cfg.vocab_size
+           + cfg.n_heads * seq * seq)) as u64
+        * p.act_elem_bytes as u64;
+    let experts_total = model.expert_storage_bytes() as u64;
+    let non_expert = loading_bytes(model) - experts_total;
+    let resident_experts = match p.expert_budget {
+        None => experts_total,
+        Some(b) => {
+            let slots = (cfg.n_layers * cfg.n_experts).max(1) as u64;
+            let mean = experts_total / slots;
+            let pinned_worst =
+                (batch * cfg.top_k).min(cfg.n_experts) as u64 * mean;
+            experts_total
+                .min(b)
+                .max(pinned_worst.min(experts_total))
+        }
+    };
+    non_expert + resident_experts + kv + act
+}
+
+/// Peak serving memory with parameters derived from the model itself.
+pub fn peak_bytes(model: &MoeModel, batch: usize, seq: usize) -> u64 {
+    peak_bytes_with(model, batch, seq, &MemParams::for_model(model))
 }
 
 /// Average *activated* parameter bytes per token (paper "Act Params"):
@@ -48,6 +128,11 @@ pub fn activated_bytes_per_token(model: &MoeModel, keep_ratio: f64) -> f64 {
         + model.lm_head.data.len()
         + model.final_norm.len()) as f64
         * 4.0;
+    // cache-resolved layers have empty expert vecs; their per-expert
+    // mean comes from the store directory instead
+    let store_mean = model.resolver.expert_bytes().map(|total| {
+        total as f64 / (cfg.n_layers * cfg.n_experts) as f64
+    });
     let mut expert_bytes_mean = 0.0f64;
     for l in &model.layers {
         non_expert += (l.attn_norm.len() + l.ffn_norm.len() + l.gate.data.len()) as f64 * 4.0;
@@ -55,12 +140,16 @@ pub fn activated_bytes_per_token(model: &MoeModel, keep_ratio: f64) -> f64 {
             + l.wk.storage_bytes()
             + l.wv.storage_bytes()
             + l.wo.storage_bytes()) as f64;
-        let mean_expert: f64 = l
-            .experts
-            .iter()
-            .map(|e| e.storage_bytes() as f64)
-            .sum::<f64>()
-            / l.experts.len() as f64;
+        let mean_expert: f64 = match (&store_mean, l.experts.is_empty()) {
+            (Some(m), true) => *m,
+            _ => {
+                l.experts
+                    .iter()
+                    .map(|e| e.storage_bytes() as f64)
+                    .sum::<f64>()
+                    / l.experts.len().max(1) as f64
+            }
+        };
         expert_bytes_mean += mean_expert * cfg.top_k as f64 * keep_ratio;
     }
     non_expert + expert_bytes_mean
@@ -122,5 +211,51 @@ mod tests {
         assert!(fits(&m, &PLATFORMS[0], 1, 64));
         let tiny_dev = Platform { name: "tiny", mem_bytes: 1 << 18, bw_bytes_per_s: 1e9 };
         assert!(!fits(&m, &tiny_dev, 1, 64));
+    }
+
+    #[test]
+    fn expert_budget_caps_peak() {
+        let cfg = ModelConfig::test_tiny();
+        let m = random_model(&cfg, 4);
+        let experts = m.expert_storage_bytes() as u64;
+        let p_full = MemParams::for_model(&m);
+        let p_half = p_full.with_expert_budget(Some(experts / 2));
+        let full = peak_bytes_with(&m, 2, 32, &p_full);
+        let half = peak_bytes_with(&m, 2, 32, &p_half);
+        assert_eq!(full - half, experts - experts / 2,
+                   "budget removes exactly the over-budget expert bytes");
+        // a budget above the expert total changes nothing
+        let p_over = p_full.with_expert_budget(Some(experts * 2));
+        assert_eq!(peak_bytes_with(&m, 2, 32, &p_over), full);
+    }
+
+    #[test]
+    fn tiny_budget_floors_at_pinned_working_set() {
+        // the cache pins a step's routed experts past the budget, so
+        // peak cannot drop below that working set
+        let cfg = ModelConfig::test_tiny();
+        let m = random_model(&cfg, 6);
+        let experts = m.expert_storage_bytes() as u64;
+        let mean = experts / (cfg.n_layers * cfg.n_experts) as u64;
+        let (b, s) = (2usize, 32usize);
+        // batch * top_k = 4 = n_experts -> one full layer stays pinned
+        let floor = (b * cfg.top_k).min(cfg.n_experts) as u64 * mean;
+        let base = peak_bytes_with(&m, b, s, &MemParams::for_model(&m));
+        let p1 = MemParams::for_model(&m).with_expert_budget(Some(1));
+        let tiny = peak_bytes_with(&m, b, s, &p1);
+        assert_eq!(base - tiny, experts - floor,
+                   "a 1-byte budget still pins the step's working set");
+    }
+
+    #[test]
+    fn kv_elem_bytes_scale_kv_term() {
+        let cfg = ModelConfig::test_tiny();
+        let m = random_model(&cfg, 5);
+        let p4 = MemParams::for_model(&m);
+        let p2 = p4.with_kv_elem_bytes(2);
+        let (b, s) = (2usize, 32usize);
+        let kv_f32 = (2 * b * s * cfg.d_model * cfg.n_layers * 4) as u64;
+        let diff = peak_bytes_with(&m, b, s, &p4) - peak_bytes_with(&m, b, s, &p2);
+        assert_eq!(diff, kv_f32 / 2, "halving KV bytes halves the KV term");
     }
 }

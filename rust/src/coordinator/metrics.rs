@@ -86,6 +86,21 @@ pub struct Metrics {
     pub ttft_ns: Mutex<LatencyRing>,
     /// per-token decode latencies (ns), last `RING_CAP` retained
     pub tpot_ns: Mutex<LatencyRing>,
+    // --- expert residency (offload::ExpertCache, DESIGN.md §5) ---
+    /// demand accesses served from the cache
+    pub expert_cache_hits: AtomicU64,
+    /// demand accesses that had to load from the store
+    pub expert_cache_misses: AtomicU64,
+    /// experts dropped by the clock sweep to meet the byte budget
+    pub expert_cache_evictions: AtomicU64,
+    /// speculative loads the prefetcher actually performed
+    pub expert_prefetch_issued: AtomicU64,
+    /// prefetched experts later demanded before eviction
+    pub expert_prefetch_hits: AtomicU64,
+    /// gauge: expert bytes currently resident in the cache
+    pub bytes_resident: AtomicU64,
+    /// demand-miss load stalls (ns), last `RING_CAP` retained
+    pub miss_stall_ns: Mutex<LatencyRing>,
 }
 
 impl Metrics {
@@ -109,6 +124,46 @@ impl Metrics {
         self.tpot_ns.lock().unwrap().push(ns);
     }
 
+    pub fn record_miss_stall(&self, ns: u64) {
+        self.miss_stall_ns.lock().unwrap().push(ns);
+    }
+
+    /// Fraction of expert demand accesses served without a store load.
+    pub fn cache_hit_rate(&self) -> f64 {
+        let hits = self.expert_cache_hits.load(Ordering::Relaxed);
+        let misses = self.expert_cache_misses.load(Ordering::Relaxed);
+        if hits + misses == 0 {
+            return 0.0;
+        }
+        hits as f64 / (hits + misses) as f64
+    }
+
+    /// Fraction of issued prefetches that were later demanded.
+    pub fn prefetch_hit_rate(&self) -> f64 {
+        let issued = self.expert_prefetch_issued.load(Ordering::Relaxed);
+        if issued == 0 {
+            return 0.0;
+        }
+        self.expert_prefetch_hits.load(Ordering::Relaxed) as f64 / issued as f64
+    }
+
+    /// One-line expert-cache report (the CLI and examples all render
+    /// this instead of hand-assembling the counters).
+    pub fn cache_summary(&self) -> String {
+        format!(
+            "{} hits / {} misses ({:.1}% hit) | prefetch {}/{} hit | \
+             {} evictions | miss stall {:.3}ms mean | resident {:.2} MB",
+            self.expert_cache_hits.load(Ordering::Relaxed),
+            self.expert_cache_misses.load(Ordering::Relaxed),
+            100.0 * self.cache_hit_rate(),
+            self.expert_prefetch_hits.load(Ordering::Relaxed),
+            self.expert_prefetch_issued.load(Ordering::Relaxed),
+            self.expert_cache_evictions.load(Ordering::Relaxed),
+            self.miss_stall_ns.lock().unwrap().mean() / 1e6,
+            self.bytes_resident.load(Ordering::Relaxed) as f64 / 1e6,
+        )
+    }
+
     pub fn tokens_per_sec(&self) -> f64 {
         let mean_ns = self.tpot_ns.lock().unwrap().mean();
         if mean_ns == 0.0 {
@@ -128,6 +183,7 @@ impl Metrics {
 
     pub fn render_text(&self) -> String {
         let ttft_ms = self.ttft_ns.lock().unwrap().mean() / 1e6;
+        let stall_ms = self.miss_stall_ns.lock().unwrap().mean() / 1e6;
         format!(
             "mc_requests_admitted {}\nmc_requests_completed {}\n\
              mc_requests_cancelled {}\nmc_requests_rejected {}\n\
@@ -135,7 +191,13 @@ impl Metrics {
              mc_tokens_per_sec {:.2}\n\
              mc_expert_calls {}\nmc_experts_pruned {}\n\
              mc_prune_ratio {:.4}\nmc_ttft_ms_mean {:.3}\n\
-             mc_queue_depth {}\nmc_batch_occupancy {}\n",
+             mc_queue_depth {}\nmc_batch_occupancy {}\n\
+             mc_expert_cache_hits {}\nmc_expert_cache_misses {}\n\
+             mc_expert_cache_evictions {}\n\
+             mc_expert_prefetch_issued {}\nmc_expert_prefetch_hits {}\n\
+             mc_expert_cache_hit_rate {:.4}\n\
+             mc_expert_prefetch_hit_rate {:.4}\n\
+             mc_bytes_resident {}\nmc_miss_stall_ms_mean {:.3}\n",
             self.requests_admitted.load(Ordering::Relaxed),
             self.requests_completed.load(Ordering::Relaxed),
             self.requests_cancelled.load(Ordering::Relaxed),
@@ -148,6 +210,15 @@ impl Metrics {
             ttft_ms,
             self.queue_depth.load(Ordering::Relaxed),
             self.batch_occupancy.load(Ordering::Relaxed),
+            self.expert_cache_hits.load(Ordering::Relaxed),
+            self.expert_cache_misses.load(Ordering::Relaxed),
+            self.expert_cache_evictions.load(Ordering::Relaxed),
+            self.expert_prefetch_issued.load(Ordering::Relaxed),
+            self.expert_prefetch_hits.load(Ordering::Relaxed),
+            self.cache_hit_rate(),
+            self.prefetch_hit_rate(),
+            self.bytes_resident.load(Ordering::Relaxed),
+            stall_ms,
         )
     }
 }
@@ -185,6 +256,27 @@ mod tests {
         assert_eq!(r.total(), 10);
         // retains the last 4 pushes {7,8,9,10}
         assert!((r.mean() - 8.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn offload_counters_and_rates() {
+        let m = Metrics::new();
+        Metrics::inc(&m.expert_cache_hits, 9);
+        Metrics::inc(&m.expert_cache_misses, 1);
+        Metrics::inc(&m.expert_prefetch_issued, 4);
+        Metrics::inc(&m.expert_prefetch_hits, 3);
+        Metrics::set_gauge(&m.bytes_resident, 1234);
+        m.record_miss_stall(2_000_000);
+        assert!((m.cache_hit_rate() - 0.9).abs() < 1e-9);
+        assert!((m.prefetch_hit_rate() - 0.75).abs() < 1e-9);
+        let text = m.render_text();
+        assert!(text.contains("mc_expert_cache_hits 9"));
+        assert!(text.contains("mc_expert_cache_hit_rate 0.9000"));
+        assert!(text.contains("mc_bytes_resident 1234"));
+        assert!(text.contains("mc_miss_stall_ms_mean 2.000"));
+        let line = m.cache_summary();
+        assert!(line.contains("9 hits / 1 misses"), "{line}");
+        assert!(line.contains("prefetch 3/4 hit"), "{line}");
     }
 
     #[test]

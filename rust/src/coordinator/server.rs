@@ -37,7 +37,12 @@ pub struct Server {
 impl Server {
     pub fn spawn(model: Arc<MoeModel>, odp: Option<DecodeOdp>,
                  max_batch: usize) -> Server {
-        let metrics = Arc::new(Metrics::new());
+        // adopt a cache-resolved model's Metrics (hit/miss/stall land
+        // in the same snapshot the batcher's counters do)
+        let metrics = model
+            .resolver
+            .metrics()
+            .unwrap_or_else(|| Arc::new(Metrics::new()));
         let m2 = metrics.clone();
         let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
         let worker = std::thread::spawn(move || {

@@ -12,6 +12,7 @@ pub mod data;
 pub mod eval;
 pub mod moe;
 pub mod odp;
+pub mod offload;
 pub mod pmq;
 pub mod quant;
 pub mod runtime;

@@ -5,15 +5,23 @@
 //!   info                         model/artifact status
 //!   compress  [--avg-bits 2.5] [--strategy pmq] [--eval] [--save m.mcqz]
 //!   eval      [--mode suite|ppl|fewshot|niah|cot] [--odp] [--avg-bits ...]
-//!             [--load m.mcqz]
+//!             [--load m.mcqz] [--expert-budget-mb 8] [--prefetch async]
 //!   serve     [--requests 16] [--batch 4] [--odp] [--load m.mcqz]
+//!             [--expert-budget-mb 8] [--prefetch off|sync|async]
 //!   generate  [--task 3] [--max-new 16] [--odp] [--load m.mcqz]
 //!             [--temperature 0.8] [--top-k 0] [--top-p 1.0] [--seed 5]
+//!             [--expert-budget-mb 8] [--prefetch off|sync|async]
 //!   expert-analysis [--out file.json]     (Fig. 3 / Fig. 10 data)
 //!
 //! `serve` and `generate` accept `--load <model.mcqz>` (a compressed
 //! model saved by `compress --save`), so the MC-compressed model can
 //! be served end-to-end, matching `eval --load`.
+//!
+//! `--expert-budget-mb <MiB>` (with `--load`) serves the model through
+//! the expert residency cache (DESIGN.md §5): only the budgeted bytes
+//! of experts stay in RAM, misses demand-load from the segmented
+//! `.mcqz` v2 file, and `--prefetch` picks how predicted experts are
+//! brought in (default `async`).
 
 use std::path::Path;
 use std::sync::Arc;
@@ -35,17 +43,56 @@ fn load_fp(dir: &Path) -> Result<MoeModel> {
     MoeModel::load_f32(&cfg, wf)
 }
 
+/// `--expert-budget-mb` in bytes (None when absent or zero).
+fn expert_budget_bytes(args: &Args) -> Result<Option<usize>> {
+    let mb = args.f64_or("expert-budget-mb", 0.0)?;
+    if mb < 0.0 {
+        bail!("--expert-budget-mb must be positive, got {mb}");
+    }
+    if mb == 0.0 {
+        return Ok(None);
+    }
+    Ok(Some((mb * (1 << 20) as f64) as usize))
+}
+
+fn prefetch_mode(args: &Args) -> Result<mc_moe::offload::PrefetchMode> {
+    let s = args.get_or("prefetch", "async");
+    mc_moe::offload::PrefetchMode::parse(&s)
+        .ok_or_else(|| anyhow::anyhow!(
+            "--prefetch expects off|sync|async, got {s:?}"))
+}
+
 /// The model a serving command drives: `--load model.mcqz` picks a
-/// saved compressed model; otherwise the fp32 training artifacts.
+/// saved compressed model (optionally under an expert residency
+/// budget); otherwise the fp32 training artifacts.
 fn load_serving_model(dir: &Path, args: &Args) -> Result<MoeModel> {
-    match args.get("load") {
-        Some(path) => {
+    let budget = expert_budget_bytes(args)?;
+    match (args.get("load"), budget) {
+        (Some(path), Some(budget)) => {
+            let model = mc_moe::offload::load_cached(
+                Path::new(path), budget, prefetch_mode(args)?)?;
+            eprintln!(
+                "loaded {} ({:.2} expert bits) under a {:.1} MiB expert \
+                 budget ({:.1}% residency)",
+                path,
+                model.expert_avg_bits(),
+                budget as f64 / (1 << 20) as f64,
+                100.0 * budget as f64
+                    / model.expert_storage_bytes().max(1) as f64,
+            );
+            Ok(model)
+        }
+        (Some(path), None) => {
             let model = mc_moe::moe::qz::load(Path::new(path))?;
             eprintln!("loaded {} ({:.2} expert bits)", path,
                       model.expert_avg_bits());
             Ok(model)
         }
-        None => load_fp(dir),
+        (None, Some(_)) => {
+            bail!("--expert-budget-mb needs --load <model.mcqz>: the \
+                   residency cache serves from a segmented .mcqz v2 file")
+        }
+        (None, None) => load_fp(dir),
     }
 }
 
@@ -150,10 +197,10 @@ fn cmd_compress(dir: &Path, args: &Args) -> Result<()> {
 }
 
 fn cmd_eval(dir: &Path, args: &Args) -> Result<()> {
-    if let Some(path) = args.get("load") {
-        // evaluate a saved MCQZ model directly (no recalibration)
-        let model = mc_moe::moe::qz::load(Path::new(path))?;
-        println!("loaded {} ({:.2} expert bits)", path, model.expert_avg_bits());
+    if args.get("load").is_some() {
+        // evaluate a saved MCQZ model directly (no recalibration),
+        // honoring --expert-budget-mb like serve/generate
+        let model = load_serving_model(dir, args)?;
         let samples = args.usize_or("samples", 50)?;
         let r = eval_suite(&model, samples, 0, 4242, None);
         for (name, analogue, acc) in &r.rows {
@@ -278,6 +325,9 @@ fn cmd_generate(dir: &Path, args: &Args) -> Result<()> {
     println!("finish   : {:?}  ttft: {:.2}ms", out.finish,
              out.ttft_ns as f64 / 1e6);
     println!("gold     : {gold:?}");
+    if engine.model.resolver.budget_bytes().is_some() {
+        println!("cache    : {}", engine.metrics.cache_summary());
+    }
     Ok(())
 }
 

@@ -13,9 +13,59 @@
 //! alive across calls (keyed by expert index), so the steady-state
 //! decode loop gathers and executes without heap allocation.
 
+use std::sync::Arc;
+
 use crate::moe::model::Expert;
 use crate::tensor::{axpy, Mat};
 use crate::util::pool::{SendPtr, WorkerPool};
+
+/// The expert weights one dispatch call executes against — either a
+/// borrowed resident slice (`Layer::experts`, the zero-cost default)
+/// or the pinned slots an `offload::ExpertResolver` produced for this
+/// layer (index = expert id; only the routed experts are `Some`).
+/// This is the one seam through which every expert access flows
+/// (DESIGN.md §5).
+#[derive(Clone, Copy)]
+pub struct ExpertsRef<'a> {
+    owned: &'a [Expert],
+    pinned: &'a [Option<Arc<Expert>>],
+}
+
+impl<'a> ExpertsRef<'a> {
+    pub fn resident(experts: &'a [Expert]) -> ExpertsRef<'a> {
+        ExpertsRef { owned: experts, pinned: &[] }
+    }
+
+    pub fn pinned(slots: &'a [Option<Arc<Expert>>]) -> ExpertsRef<'a> {
+        ExpertsRef { owned: &[], pinned: slots }
+    }
+
+    /// Number of expert slots (resident and pinned views both cover
+    /// the full expert-id space of the layer).
+    pub fn len(&self) -> usize {
+        self.owned.len().max(self.pinned.len())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// The expert at id `e`; panics if it was neither resident nor
+    /// pinned (dispatch only executes experts with routed rows, which
+    /// the resolver pinned by contract).
+    pub fn get(&self, e: usize) -> &Expert {
+        self.try_get(e)
+            .unwrap_or_else(|| panic!("expert {e} neither resident nor pinned"))
+    }
+
+    pub fn try_get(&self, e: usize) -> Option<&Expert> {
+        if self.pinned.is_empty() {
+            self.owned.get(e)
+        } else {
+            self.pinned.get(e).and_then(|s| s.as_deref())
+        }
+    }
+}
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DispatchMode {
@@ -120,11 +170,11 @@ fn reserve_mat(m: &mut Mat, rows: usize, cols: usize) {
     }
 }
 
-fn run_one(b: &mut ExpertBatch, experts: &[Expert],
+fn run_one(b: &mut ExpertBatch, experts: ExpertsRef<'_>,
            override_expert: Option<(usize, &Expert)>) {
     let ex = match override_expert {
         Some((oe, repl)) if oe == b.expert => repl,
-        _ => &experts[b.expert],
+        _ => experts.get(b.expert),
     };
     ex.gated_hidden_into(&b.x, &mut b.gated, &mut b.tmp, &mut b.qs);
     ex.w2.matmul_into(&b.gated, &mut b.y, &mut b.qs);
@@ -140,7 +190,7 @@ fn run_one(b: &mut ExpertBatch, experts: &[Expert],
 pub fn dispatch_experts_into(
     h: &Mat,
     topk: &[Vec<(usize, f32)>],
-    experts: &[Expert],
+    experts: ExpertsRef<'_>,
     override_expert: Option<(usize, &Expert)>,
     mode: DispatchMode,
     scratch: &mut DispatchScratch,
@@ -156,12 +206,15 @@ pub fn dispatch_experts_into(
     // the steady-state loop allocation-free even when routing shifts
     // load between experts (tests/zero_alloc.rs). One-shot scratches
     // skip it: active batches size themselves from actual routing.
+    // Cache-resolved layers only expose this call's pinned experts,
+    // so unpinned slots are skipped (their batches carry no rows).
     if scratch.reserve_worst_case {
         let worst = topk.len();
         for (e, b) in
             scratch.batches.iter_mut().enumerate().take(experts.len())
         {
-            let (_, d_ff) = experts[e].w1.shape();
+            let Some(ex) = experts.try_get(e) else { continue };
+            let (_, d_ff) = ex.w1.shape();
             reserve_mat(&mut b.x, worst, d);
             reserve_mat(&mut b.gated, worst, d_ff);
             reserve_mat(&mut b.tmp, worst, d_ff);
@@ -192,7 +245,7 @@ pub fn dispatch_experts_into(
         scratch.active.push(e);
         let ex = match override_expert {
             Some((oe, repl)) if oe == e => repl,
-            _ => &experts[e],
+            _ => experts.get(e),
         };
         let (_, d_ff) = ex.w1.shape();
         flops += b.rows.len() as u64 * 6 * d as u64 * d_ff as u64;
@@ -257,7 +310,7 @@ pub fn dispatch_experts_into(
 pub fn dispatch_experts(
     h: &Mat,
     topk: &[Vec<(usize, f32)>],
-    experts: &[Expert],
+    experts: ExpertsRef<'_>,
     override_expert: Option<(usize, &Expert)>,
     mode: DispatchMode,
 ) -> Vec<ExpertBatch> {
@@ -330,10 +383,10 @@ mod tests {
         let exps = experts(&mut rng, ne, d, d_ff);
         let h = Mat::randn(&mut rng, rows, d, 1.0);
         let topk = round_robin_topk(rows, ne, 2);
-        let bs = dispatch_experts(&h, &topk, &exps, None, DispatchMode::Serial);
+        let bs = dispatch_experts(&h, &topk, ExpertsRef::resident(&exps), None, DispatchMode::Serial);
         let ys = scatter(&bs, rows, d);
         for mode in [DispatchMode::Threaded, DispatchMode::SpawnScope] {
-            let bt = dispatch_experts(&h, &topk, &exps, None, mode);
+            let bt = dispatch_experts(&h, &topk, ExpertsRef::resident(&exps), None, mode);
             let yt = scatter(&bt, rows, d);
             assert_eq!(ys.data, yt.data,
                        "{mode:?} dispatch must be bit-exact");
@@ -349,7 +402,7 @@ mod tests {
         let topk = round_robin_topk(rows, ne, 2);
         let mut scratch = DispatchScratch::new();
         let mut y = Mat::zeros(0, 0);
-        dispatch_experts_into(&h, &topk, &exps, None, DispatchMode::Serial,
+        dispatch_experts_into(&h, &topk, ExpertsRef::resident(&exps), None, DispatchMode::Serial,
                               &mut scratch);
         scatter_into(&scratch, rows, d, &mut y);
         let first = y.clone();
@@ -357,7 +410,7 @@ mod tests {
             (0..ne).map(|e| scratch.probe_x_ptr(e)).collect();
         let yp = y.data.as_ptr();
         for _ in 0..3 {
-            dispatch_experts_into(&h, &topk, &exps, None,
+            dispatch_experts_into(&h, &topk, ExpertsRef::resident(&exps), None,
                                   DispatchMode::Serial, &mut scratch);
             scatter_into(&scratch, rows, d, &mut y);
         }
@@ -378,7 +431,7 @@ mod tests {
         // every token routed to expert 0 with weight 0.5
         let topk: Vec<Vec<(usize, f32)>> =
             (0..rows).map(|_| vec![(0usize, 0.5f32)]).collect();
-        let b = dispatch_experts(&h, &topk, &exps, None, DispatchMode::Serial);
+        let b = dispatch_experts(&h, &topk, ExpertsRef::resident(&exps), None, DispatchMode::Serial);
         assert_eq!(b.len(), 1);
         let y = scatter(&b, rows, d);
         let full = exps[0].forward(&h);
@@ -396,8 +449,8 @@ mod tests {
         let h = Mat::randn(&mut rng, rows, d, 1.0);
         let topk: Vec<Vec<(usize, f32)>> =
             (0..rows).map(|_| vec![(1usize, 1.0f32)]).collect();
-        let base = dispatch_experts(&h, &topk, &exps, None, DispatchMode::Serial);
-        let swap = dispatch_experts(&h, &topk, &exps, Some((1, &repl_v[0])),
+        let base = dispatch_experts(&h, &topk, ExpertsRef::resident(&exps), None, DispatchMode::Serial);
+        let swap = dispatch_experts(&h, &topk, ExpertsRef::resident(&exps), Some((1, &repl_v[0])),
                                     DispatchMode::Serial);
         let yb = scatter(&base, rows, d);
         let ys = scatter(&swap, rows, d);
@@ -412,7 +465,7 @@ mod tests {
         let h = Mat::randn(&mut rng, rows, d, 1.0);
         let topk: Vec<Vec<(usize, f32)>> =
             (0..rows).map(|_| vec![(2usize, 1.0f32)]).collect();
-        let b = dispatch_experts(&h, &topk, &exps, None, DispatchMode::Auto);
+        let b = dispatch_experts(&h, &topk, ExpertsRef::resident(&exps), None, DispatchMode::Auto);
         assert_eq!(b.len(), 1);
         assert_eq!(b[0].expert, 2);
         assert_eq!(b[0].rows.len(), rows);
@@ -423,7 +476,7 @@ mod tests {
         // no experts, no routing: must not panic on experts.first()
         let h = Mat::zeros(2, 8);
         let topk: Vec<Vec<(usize, f32)>> = vec![Vec::new(); 2];
-        let b = dispatch_experts(&h, &topk, &[], None, DispatchMode::Auto);
+        let b = dispatch_experts(&h, &topk, ExpertsRef::resident(&[]), None, DispatchMode::Auto);
         assert!(b.is_empty());
     }
 }

@@ -31,7 +31,7 @@ pub use attention::{
 };
 pub use dispatch::{
     dispatch_experts, dispatch_experts_into, scatter, scatter_into,
-    DispatchMode, DispatchScratch, ExpertBatch,
+    DispatchMode, DispatchScratch, ExpertBatch, ExpertsRef,
 };
 pub use router::{
     decode_select, decode_select_into, gate_probs, gate_probs_into,

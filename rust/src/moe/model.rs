@@ -12,12 +12,16 @@
 //! in `coordinator`. Numerical parity with the JAX model is asserted
 //! against `artifacts/golden.mcwt` in `tests/golden_parity.rs`.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::config::ModelConfig;
+use crate::offload::ExpertResolver;
 use crate::quant::QTensor;
 use crate::tensor::{add_inplace, log_softmax_into, rmsnorm, Mat};
 
+use super::exec::dispatch::ExpertsRef;
 use super::exec::{attention, dispatch, router};
 use super::weights::WeightFile;
 
@@ -100,6 +104,12 @@ pub struct MoeModel {
     pub final_norm: Vec<f32>,
     pub lm_head: Mat,
     pub layers: Vec<Layer>,
+    /// How expert weights materialize for execution:
+    /// `offload::resident()` (eagerly owned in `Layer::experts`,
+    /// today's zero-cost default) or a byte-budgeted
+    /// `offload::CachedResolver` over an on-disk store, in which case
+    /// the layers' expert vecs are empty (DESIGN.md §5).
+    pub resolver: Arc<dyn ExpertResolver>,
 }
 
 impl MoeModel {
@@ -137,10 +147,13 @@ impl MoeModel {
             final_norm: wf.take_vec1("final_norm")?,
             lm_head: wf.take_mat("lm_head")?,
             layers,
+            resolver: crate::offload::resident(),
         })
     }
 
     /// Total weight storage in bytes (the paper's "Params" column).
+    /// Cache-resolved models count their experts from the store
+    /// directory (the layers' expert vecs are empty).
     pub fn storage_bytes(&self) -> usize {
         let mut total = (self.tok_emb.data.len()
             + self.pos_emb.data.len()
@@ -157,23 +170,28 @@ impl MoeModel {
                 total += e.storage_bytes();
             }
         }
+        if self.layers.iter().all(|l| l.experts.is_empty()) {
+            total += self.resolver.expert_bytes().unwrap_or(0);
+        }
         total
+    }
+
+    /// Sum of expert storage bytes, resident or store-resolved.
+    pub fn expert_storage_bytes(&self) -> usize {
+        if let Some(b) = self.resolver.expert_bytes() {
+            return b;
+        }
+        self.layers
+            .iter()
+            .flat_map(|l| &l.experts)
+            .map(|e| e.storage_bytes())
+            .sum()
     }
 
     /// Average bits per *expert* weight (the paper's "Bits" axis).
     pub fn expert_avg_bits(&self) -> f64 {
-        let mut bits = 0.0;
-        let mut elems = 0.0;
-        for l in &self.layers {
-            for e in &l.experts {
-                for t in [&e.w1, &e.w3, &e.w2] {
-                    let (k, n) = t.shape();
-                    bits += t.storage_bytes() as f64 * 8.0;
-                    elems += (k * n) as f64;
-                }
-            }
-        }
-        bits / elems
+        let elems = self.cfg.expert_param_count() as f64;
+        self.expert_storage_bytes() as f64 * 8.0 / elems
     }
 
     /// Token + positional embedding of one token at `pos`, written
@@ -312,6 +330,9 @@ impl MoeModel {
 
         let odp = opts.odp.unwrap_or(&OdpPolicy::None);
         let needs_imp = odp.needs_importance() || opts.collect_importance;
+        // cache-resolved pin buffers, reused across layers
+        let mut needed = Vec::new();
+        let mut pins = Vec::new();
 
         for (li, layer) in self.layers.iter().enumerate() {
             // ---- attention ----
@@ -355,13 +376,30 @@ impl MoeModel {
                 .override_expert
                 .filter(|&(l, _, _)| l == li)
                 .map(|(_, e, repl)| (e, repl));
-            let batches = dispatch::dispatch_experts(
-                &h,
-                &routed.topk,
-                &layer.experts,
-                ovr,
-                dispatch::DispatchMode::Auto,
-            );
+            let batches = if self.resolver.is_resident() {
+                dispatch::dispatch_experts(
+                    &h,
+                    &routed.topk,
+                    ExpertsRef::resident(&layer.experts),
+                    ovr,
+                    dispatch::DispatchMode::Auto,
+                )
+            } else {
+                // cache-resolved experts: pin the routed set for the
+                // dispatch, feed the prefetcher, unpin after
+                crate::offload::unique_experts(&routed.topk, &mut needed);
+                self.resolver.pin_layer(li, &needed, &mut pins);
+                self.resolver.note_routing(li, &needed);
+                let batches = dispatch::dispatch_experts(
+                    &h,
+                    &routed.topk,
+                    ExpertsRef::pinned(&pins),
+                    ovr,
+                    dispatch::DispatchMode::Auto,
+                );
+                self.resolver.unpin_layer(li, &needed);
+                batches
+            };
             for b in &batches {
                 sink.expert_batch(li, b.expert, &b.x, &b.gated);
             }
@@ -444,6 +482,7 @@ pub mod tests {
             final_norm: vec![1.0; d],
             lm_head: Mat::randn(&mut rng, d, cfg.vocab_size, (d as f32).powf(-0.5)),
             layers,
+            resolver: crate::offload::resident(),
         }
     }
 

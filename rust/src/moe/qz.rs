@@ -7,21 +7,35 @@
 //! Layout (little-endian): magic "MCQZ", u32 version, u32 header len,
 //! JSON header describing every tensor (kind, dims, bits, group,
 //! section offsets), then the raw payload 64-byte aligned per section.
+//!
+//! **v2 (segmented):** every non-expert tensor is written before any
+//! expert, and each expert's three tensors occupy one contiguous byte
+//! range recorded in an `expert_dir` header table (plus `experts_off`,
+//! where the expert region begins). `offload::ExpertStore` uses the
+//! directory to fetch a single expert's bytes with one seek + read —
+//! without parsing or materializing the rest of the file — which is
+//! what makes byte-budgeted expert residency (DESIGN.md §5) possible.
+//! The header may also carry `priors` (calibration significance
+//! factors) that seed the cache's eviction score and the prefetcher's
+//! co-activation table. v1 files (monolithic, no directory) remain
+//! fully loadable; `save_v1` keeps the writer covered by tests.
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use crate::config::ModelConfig;
+use crate::offload::ResidencyPriors;
 use crate::quant::{BinaryTensor, PackedTensor, QTensor};
 use crate::tensor::Mat;
-use crate::util::json::{num, obj, s, Json};
+use crate::util::json::{arr, num, obj, s, Json};
 
 use super::model::{Expert, Layer, MoeModel};
 
-const MAGIC: &[u8; 4] = b"MCQZ";
-const VERSION: u32 = 1;
+pub(crate) const MAGIC: &[u8; 4] = b"MCQZ";
+pub(crate) const VERSION: u32 = 2;
+pub(crate) const VERSION_V1: u32 = 1;
 const ALIGN: usize = 64;
 
 struct Writer {
@@ -117,9 +131,33 @@ impl Writer {
     }
 }
 
-/// Serialize a (possibly quantized) model to MCQZ.
+/// Serialize a (possibly quantized) model to MCQZ v2 (segmented).
 pub fn save(path: &Path, model: &MoeModel) -> Result<()> {
+    save_with_priors(path, model, None)
+}
+
+/// v2 save carrying residency priors (significance factors) for the
+/// expert cache's eviction score and the prefetcher's warm start.
+pub fn save_with_priors(path: &Path, model: &MoeModel,
+                        priors: Option<&ResidencyPriors>) -> Result<()> {
+    write_file(path, model, VERSION, priors)
+}
+
+/// Legacy v1 writer (no expert directory) — kept so the v1 read path
+/// stays exercised (`tests/quant_pipeline.rs` round-trips v1 -> v2).
+pub fn save_v1(path: &Path, model: &MoeModel) -> Result<()> {
+    write_file(path, model, VERSION_V1, None)
+}
+
+fn write_file(path: &Path, model: &MoeModel, version: u32,
+              priors: Option<&ResidencyPriors>) -> Result<()> {
+    if model.layers.iter().any(|l| l.experts.is_empty()) {
+        bail!("cannot save a cache-resolved model (experts are not \
+               materialized); save the source model instead");
+    }
     let mut w = Writer::new();
+    // non-expert tensors first, so a budgeted loader materializes the
+    // model head by reading payload[..experts_off] only
     w.add_mat("tok_emb", &model.tok_emb);
     w.add_mat("pos_emb", &model.pos_emb);
     w.add_mat("lm_head", &model.lm_head);
@@ -133,20 +171,43 @@ pub fn save(path: &Path, model: &MoeModel) -> Result<()> {
         w.add_qtensor(&p("attn.wk"), &layer.wk);
         w.add_qtensor(&p("attn.wv"), &layer.wv);
         w.add_qtensor(&p("attn.wo"), &layer.wo);
+    }
+    // expert region: one contiguous segment per (layer, expert)
+    let experts_off = w.align();
+    let mut dir_rows = Vec::with_capacity(model.layers.len());
+    for (i, layer) in model.layers.iter().enumerate() {
+        let mut row = Vec::with_capacity(layer.experts.len());
         for (e, ex) in layer.experts.iter().enumerate() {
+            let seg_off = w.align();
             w.add_qtensor(&format!("layers.{i}.experts.{e}.w1"), &ex.w1);
             w.add_qtensor(&format!("layers.{i}.experts.{e}.w3"), &ex.w3);
             w.add_qtensor(&format!("layers.{i}.experts.{e}.w2"), &ex.w2);
+            let seg_len = w.payload.len() - seg_off;
+            row.push(obj(vec![
+                ("off", num(seg_off as f64)),
+                ("len", num(seg_len as f64)),
+            ]));
         }
+        dir_rows.push(arr(row));
     }
-    let header = obj(vec![
+    let mut fields = vec![
         ("config", Json::parse(&config_json(&model.cfg))?),
         ("tensors", Json::Obj(w.entries.clone())),
-    ])
-    .to_string();
+    ];
+    if version >= 2 {
+        fields.push(("experts_off", num(experts_off as f64)));
+        fields.push(("expert_dir", arr(dir_rows)));
+        if let Some(p) = priors {
+            // a mismatched priors block would panic at serve time
+            // deep inside the cache; reject it at save time instead
+            p.validate(model.cfg.n_layers, model.cfg.n_experts)?;
+            fields.push(("priors", p.to_json()));
+        }
+    }
+    let header = obj(fields).to_string();
     let mut out = Vec::with_capacity(12 + header.len() + w.payload.len());
     out.extend_from_slice(MAGIC);
-    out.extend_from_slice(&VERSION.to_le_bytes());
+    out.extend_from_slice(&version.to_le_bytes());
     out.extend_from_slice(&(header.len() as u32).to_le_bytes());
     out.extend_from_slice(header.as_bytes());
     out.extend_from_slice(&w.payload);
@@ -170,34 +231,44 @@ fn config_json(cfg: &ModelConfig) -> String {
     .to_string()
 }
 
-struct Reader<'a> {
-    payload: &'a [u8],
+/// Tensor-section reader over (a slice of) the payload. `base` is the
+/// absolute payload offset of `payload[0]`: header metadata records
+/// absolute offsets, so a reader over a fetched expert segment rebases
+/// through it (full-file readers use base 0).
+pub(crate) struct Reader<'a> {
+    pub(crate) payload: &'a [u8],
+    pub(crate) base: usize,
 }
 
 impl<'a> Reader<'a> {
-    fn f32s(&self, off: usize, len: usize) -> Result<Vec<f32>> {
-        let end = off + len * 4;
+    fn span(&self, off: usize, bytes: usize) -> Result<&'a [u8]> {
+        let off = off
+            .checked_sub(self.base)
+            .ok_or_else(|| anyhow!("section offset before reader base"))?;
+        let end = off + bytes;
         if end > self.payload.len() {
-            bail!("f32 section out of bounds");
+            bail!("section out of bounds");
         }
-        Ok(self.payload[off..end]
+        Ok(&self.payload[off..end])
+    }
+
+    fn f32s(&self, off: usize, len: usize) -> Result<Vec<f32>> {
+        Ok(self
+            .span(off, len * 4)?
             .chunks_exact(4)
             .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
 
     fn u32s(&self, off: usize, len: usize) -> Result<Vec<u32>> {
-        let end = off + len * 4;
-        if end > self.payload.len() {
-            bail!("u32 section out of bounds");
-        }
-        Ok(self.payload[off..end]
+        Ok(self
+            .span(off, len * 4)?
             .chunks_exact(4)
             .map(|c| u32::from_le_bytes(c.try_into().unwrap()))
             .collect())
     }
 
-    fn qtensor(&self, e: &Json) -> Result<QTensor> {
+    pub(crate) fn qtensor(&self, e: &Json) -> Result<QTensor> {
         match e.get("kind")?.as_str()? {
             "f32" => {
                 let rows = e.get("rows")?.as_usize()?;
@@ -246,33 +317,62 @@ impl<'a> Reader<'a> {
     }
 }
 
-/// Load an MCQZ compressed model.
-pub fn load(path: &Path) -> Result<MoeModel> {
-    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+/// Storage bytes a header tensor entry describes, without decoding it
+/// (the store's budget / loading math needs exact `storage_bytes`
+/// parity with the materialized `QTensor`).
+pub(crate) fn entry_storage_bytes(e: &Json) -> Result<usize> {
+    Ok(match e.get("kind")?.as_str()? {
+        "f32" => e.get("rows")?.as_usize()? * e.get("cols")?.as_usize()? * 4,
+        "packed" => {
+            (e.get("qw_len")?.as_usize()? + 2 * e.get("sc_len")?.as_usize()?) * 4
+        }
+        "binary" => (e.get("pk_len")?.as_usize()? + e.get("n")?.as_usize()?) * 4,
+        other => bail!("unknown tensor kind {other:?}"),
+    })
+}
+
+/// Split an MCQZ byte buffer into (version, parsed header, payload
+/// offset). Accepts v1 and v2 containers.
+pub(crate) fn parse_container(bytes: &[u8]) -> Result<(u32, Json, usize)> {
     if bytes.len() < 12 || &bytes[0..4] != MAGIC {
         bail!("bad MCQZ magic");
     }
     let version = u32::from_le_bytes(bytes[4..8].try_into().unwrap());
-    if version != VERSION {
+    if version != VERSION_V1 && version != VERSION {
         bail!("unsupported MCQZ version {version}");
     }
     let hlen = u32::from_le_bytes(bytes[8..12].try_into().unwrap()) as usize;
+    if bytes.len() < 12 + hlen {
+        bail!("truncated MCQZ header");
+    }
     let header = Json::parse(std::str::from_utf8(&bytes[12..12 + hlen])?)?;
+    Ok((version, header, 12 + hlen))
+}
+
+/// Materialize a model from a parsed header + payload. With
+/// `with_experts = false` the layers get empty expert vecs (the model
+/// head a cache-resolved deployment serves; `payload` then only needs
+/// to cover the non-expert region).
+pub(crate) fn build_model(header: &Json, payload: &[u8],
+                          with_experts: bool) -> Result<MoeModel> {
     let cfg = ModelConfig::from_json(header.get("config")?)?;
     let tensors = header.get("tensors")?;
-    let r = Reader { payload: &bytes[12 + hlen..] };
+    let r = Reader { payload, base: 0 };
 
     let get = |name: &str| -> Result<&Json> { tensors.get(name) };
     let mut layers = Vec::with_capacity(cfg.n_layers);
     for i in 0..cfg.n_layers {
         let p = |m: &str| format!("layers.{i}.{m}");
-        let mut experts = Vec::with_capacity(cfg.n_experts);
-        for e in 0..cfg.n_experts {
-            experts.push(Expert {
-                w1: r.qtensor(get(&format!("layers.{i}.experts.{e}.w1"))?)?,
-                w3: r.qtensor(get(&format!("layers.{i}.experts.{e}.w3"))?)?,
-                w2: r.qtensor(get(&format!("layers.{i}.experts.{e}.w2"))?)?,
-            });
+        let mut experts = Vec::new();
+        if with_experts {
+            experts.reserve(cfg.n_experts);
+            for e in 0..cfg.n_experts {
+                experts.push(Expert {
+                    w1: r.qtensor(get(&format!("layers.{i}.experts.{e}.w1"))?)?,
+                    w3: r.qtensor(get(&format!("layers.{i}.experts.{e}.w3"))?)?,
+                    w2: r.qtensor(get(&format!("layers.{i}.experts.{e}.w2"))?)?,
+                });
+            }
         }
         layers.push(Layer {
             attn_norm: r.vec1(get(&p("attn_norm"))?)?,
@@ -292,7 +392,16 @@ pub fn load(path: &Path) -> Result<MoeModel> {
         final_norm: r.vec1(get("final_norm")?)?,
         lm_head: r.mat(get("lm_head")?)?,
         layers,
+        resolver: crate::offload::resident(),
     })
+}
+
+/// Load an MCQZ compressed model, fully materialized (v1 or v2). For
+/// byte-budgeted serving of a v2 file see `offload::load_cached`.
+pub fn load(path: &Path) -> Result<MoeModel> {
+    let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
+    let (_version, header, payload_off) = parse_container(&bytes)?;
+    build_model(&header, &bytes[payload_off..], true)
 }
 
 #[cfg(test)]
@@ -329,6 +438,67 @@ mod tests {
         let a = m.score(&toks);
         let b = loaded.score(&toks);
         assert_eq!(a.data, b.data, "bit-exact reload required");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v1_reload_is_bit_exact() {
+        let m = mixed_model();
+        let path = std::env::temp_dir().join("mcqz_v1.mcqz");
+        save_v1(&path, &m).unwrap();
+        let loaded = load(&path).unwrap();
+        let toks: Vec<u32> = (1..17).collect();
+        assert_eq!(m.score(&toks).data, loaded.score(&toks).data);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v2_header_has_expert_directory() {
+        let m = mixed_model();
+        let path = std::env::temp_dir().join("mcqz_dir.mcqz");
+        save(&path, &m).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let (version, header, payload_off) = parse_container(&bytes).unwrap();
+        assert_eq!(version, VERSION);
+        let experts_off = header.get("experts_off").unwrap().as_usize().unwrap();
+        let dir = header.get("expert_dir").unwrap().as_arr().unwrap();
+        assert_eq!(dir.len(), m.cfg.n_layers);
+        let payload_len = bytes.len() - payload_off;
+        let mut prev_end = experts_off;
+        for row in dir {
+            let row = row.as_arr().unwrap();
+            assert_eq!(row.len(), m.cfg.n_experts);
+            for seg in row {
+                let off = seg.get("off").unwrap().as_usize().unwrap();
+                let len = seg.get("len").unwrap().as_usize().unwrap();
+                // segments are disjoint, ordered, and inside the payload
+                assert!(off >= prev_end, "segment overlaps predecessor");
+                assert!(off + len <= payload_len);
+                prev_end = off + len;
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn entry_bytes_match_materialized_storage() {
+        let m = mixed_model();
+        let path = std::env::temp_dir().join("mcqz_bytes.mcqz");
+        save(&path, &m).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let (_, header, _) = parse_container(&bytes).unwrap();
+        let tensors = header.get("tensors").unwrap();
+        for (l, layer) in m.layers.iter().enumerate() {
+            for (e, ex) in layer.experts.iter().enumerate() {
+                for (w, t) in [("w1", &ex.w1), ("w3", &ex.w3), ("w2", &ex.w2)] {
+                    let meta = tensors
+                        .get(&format!("layers.{l}.experts.{e}.{w}"))
+                        .unwrap();
+                    assert_eq!(entry_storage_bytes(meta).unwrap(),
+                               t.storage_bytes());
+                }
+            }
+        }
         std::fs::remove_file(&path).ok();
     }
 

@@ -1,0 +1,399 @@
+//! `ExpertCache` — byte-budgeted expert residency (DESIGN.md §5).
+//!
+//! A `(layer, expert)`-keyed map of materialized experts under a hard
+//! byte budget. Demand access (`get_pinned`) pins the expert for the
+//! duration of the fused step — pinned slots are never evicted, so the
+//! weights a dispatch is executing cannot be freed under it. Eviction
+//! is clock-style with significance-weighted second chances: every
+//! slot carries a credit of `1 + round(3 * sig)` where `sig` blends
+//! the pmq significance factors (activation frequency, routing-weight
+//! mass, reconstruction error) from the store's priors; the sweeping
+//! hand decrements credits and evicts the first unpinned slot at zero.
+//! A hit refreshes the slot's credit, so recency and significance
+//! jointly pick the victim.
+//!
+//! Budget discipline: demand loads may exceed the budget when
+//! everything else is pinned (the current step's working set must be
+//! resident for correctness — the overshoot lasts until the step
+//! unpins); speculative prefetch loads never overshoot, they are
+//! dropped instead.
+
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::coordinator::metrics::Metrics;
+use crate::moe::model::Expert;
+
+use super::store::ExpertStore;
+
+/// Extra eviction credits a maximally significant expert gets on top
+/// of the base second chance.
+const SIG_CREDITS: f64 = 3.0;
+
+#[derive(Debug)]
+struct Slot {
+    expert: Arc<Expert>,
+    bytes: usize,
+    pins: u32,
+    /// clock credits left before this slot is evictable
+    credit: u8,
+    /// inserted by the prefetcher and not yet demanded
+    prefetched: bool,
+}
+
+#[derive(Debug)]
+struct Inner {
+    slots: Vec<Vec<Option<Slot>>>,
+    bytes: usize,
+    /// clock hand over the flattened (layer, expert) space
+    hand: usize,
+}
+
+#[derive(Debug)]
+pub struct ExpertCache {
+    store: Arc<ExpertStore>,
+    budget: usize,
+    metrics: Arc<Metrics>,
+    /// eviction credit per [layer][expert]: 1 + round(3 * sig score)
+    credit: Vec<Vec<u8>>,
+    n_experts: usize,
+    inner: Mutex<Inner>,
+}
+
+impl ExpertCache {
+    pub fn new(store: Arc<ExpertStore>, budget_bytes: usize,
+               metrics: Arc<Metrics>) -> ExpertCache {
+        let cfg = store.config();
+        let (nl, ne) = (cfg.n_layers, cfg.n_experts);
+        let credit = match store.priors() {
+            Some(p) => p
+                .scores()
+                .iter()
+                .map(|row| {
+                    row.iter()
+                        .map(|&s| 1 + (SIG_CREDITS * s).round() as u8)
+                        .collect()
+                })
+                .collect(),
+            None => vec![vec![1u8; ne]; nl],
+        };
+        ExpertCache {
+            store,
+            budget: budget_bytes,
+            metrics,
+            credit,
+            n_experts: ne,
+            inner: Mutex::new(Inner {
+                slots: (0..nl).map(|_| (0..ne).map(|_| None).collect()).collect(),
+                bytes: 0,
+                hand: 0,
+            }),
+        }
+    }
+
+    pub fn budget_bytes(&self) -> usize {
+        self.budget
+    }
+
+    pub fn bytes_resident(&self) -> usize {
+        self.inner.lock().unwrap().bytes
+    }
+
+    pub fn contains(&self, layer: usize, expert: usize) -> bool {
+        self.inner.lock().unwrap().slots[layer][expert].is_some()
+    }
+
+    /// Resolve one expert for the current step, pinning it until the
+    /// matching [`unpin`]. Misses demand-load from the store (the
+    /// stall is recorded in `Metrics::miss_stall_ns`) and may exceed
+    /// the budget if every other slot is pinned.
+    pub fn get_pinned(&self, layer: usize, expert: usize) -> Arc<Expert> {
+        {
+            let mut g = self.inner.lock().unwrap();
+            if let Some(slot) = g.slots[layer][expert].as_mut() {
+                slot.pins += 1;
+                slot.credit = self.credit[layer][expert];
+                if slot.prefetched {
+                    slot.prefetched = false;
+                    Metrics::inc(&self.metrics.expert_prefetch_hits, 1);
+                }
+                Metrics::inc(&self.metrics.expert_cache_hits, 1);
+                return slot.expert.clone();
+            }
+        }
+        Metrics::inc(&self.metrics.expert_cache_misses, 1);
+        let t0 = Instant::now();
+        let fetched = self
+            .store
+            .fetch(layer, expert)
+            .unwrap_or_else(|e| {
+                panic!("expert store fetch failed (layer {layer}, \
+                        expert {expert}): {e:#}")
+            });
+        self.metrics.record_miss_stall(t0.elapsed().as_nanos() as u64);
+        let bytes = fetched.storage_bytes();
+        let expert_arc = Arc::new(fetched);
+        let mut g = self.inner.lock().unwrap();
+        if let Some(slot) = g.slots[layer][expert].as_mut() {
+            // another thread (prefetcher) won the race; use its copy.
+            // This demand already paid its own stall, so the slot's
+            // prefetch does NOT count as a hit — clear the flag
+            // silently and refresh the credit like any other access.
+            slot.prefetched = false;
+            slot.credit = self.credit[layer][expert];
+            slot.pins += 1;
+            return slot.expert.clone();
+        }
+        // demand loads must land even if eviction can't make room
+        // (everything else pinned): the step's working set is sacred
+        self.evict_for(&mut g, bytes);
+        g.slots[layer][expert] = Some(Slot {
+            expert: expert_arc.clone(),
+            bytes,
+            pins: 1,
+            credit: self.credit[layer][expert],
+            prefetched: false,
+        });
+        g.bytes += bytes;
+        Metrics::set_gauge(&self.metrics.bytes_resident, g.bytes as u64);
+        expert_arc
+    }
+
+    /// Release a step's pin. The slot stays resident; it merely
+    /// becomes evictable again.
+    pub fn unpin(&self, layer: usize, expert: usize) {
+        let mut g = self.inner.lock().unwrap();
+        if let Some(slot) = g.slots[layer][expert].as_mut() {
+            debug_assert!(slot.pins > 0, "unbalanced unpin");
+            slot.pins = slot.pins.saturating_sub(1);
+        }
+    }
+
+    /// Speculative load (prefetcher path): no pin, never over-budget.
+    /// Returns true when the expert was actually brought in.
+    /// Feasibility is checked from the store directory *before* any
+    /// I/O or eviction: if the pinned working set plus this expert
+    /// cannot fit, nothing is fetched and nothing resident is churned.
+    pub fn prefetch(&self, layer: usize, expert: usize) -> bool {
+        let bytes = self.store.expert_storage_bytes(layer, expert);
+        {
+            let g = self.inner.lock().unwrap();
+            if g.slots[layer][expert].is_some() {
+                return false;
+            }
+            // everything unpinned is evictable in principle, so the
+            // load fits iff the pinned bytes leave room
+            if Self::pinned_bytes(&g) + bytes > self.budget {
+                return false;
+            }
+        }
+        let Ok(fetched) = self.store.fetch(layer, expert) else {
+            return false;
+        };
+        Metrics::inc(&self.metrics.expert_prefetch_issued, 1);
+        debug_assert_eq!(fetched.storage_bytes(), bytes);
+        let mut g = self.inner.lock().unwrap();
+        if g.slots[layer][expert].is_some() {
+            return false; // raced with a demand load
+        }
+        if !self.evict_for(&mut g, bytes) {
+            return false; // pins grew since the check: drop it
+        }
+        g.slots[layer][expert] = Some(Slot {
+            expert: Arc::new(fetched),
+            bytes,
+            pins: 0,
+            credit: self.credit[layer][expert],
+            prefetched: true,
+        });
+        g.bytes += bytes;
+        Metrics::set_gauge(&self.metrics.bytes_resident, g.bytes as u64);
+        true
+    }
+
+    /// Bytes held by currently pinned slots (the floor no eviction can
+    /// go below).
+    fn pinned_bytes(g: &Inner) -> usize {
+        g.slots
+            .iter()
+            .flatten()
+            .filter_map(|s| s.as_ref())
+            .filter(|s| s.pins > 0)
+            .map(|s| s.bytes)
+            .sum()
+    }
+
+    /// Clock sweep until `incoming` fits in the budget. Pinned slots
+    /// are skipped unconditionally; unpinned slots burn one credit per
+    /// visit and are evicted at zero. Returns false when the budget
+    /// cannot be met (all remaining residents are pinned).
+    fn evict_for(&self, g: &mut Inner, incoming: usize) -> bool {
+        let nslots = g.slots.len() * self.n_experts;
+        if nslots == 0 {
+            return g.bytes + incoming <= self.budget;
+        }
+        // every slot absorbs at most credit+1 visits before eviction,
+        // so this bound means "only pinned slots remain"
+        let max_visits = nslots * (SIG_CREDITS as usize + 3);
+        let mut visits = 0usize;
+        while g.bytes + incoming > self.budget {
+            if visits >= max_visits {
+                Metrics::set_gauge(&self.metrics.bytes_resident,
+                                   g.bytes as u64);
+                return false;
+            }
+            visits += 1;
+            let (l, e) = (g.hand / self.n_experts, g.hand % self.n_experts);
+            g.hand = (g.hand + 1) % nslots;
+            let Some(slot) = g.slots[l][e].as_mut() else { continue };
+            if slot.pins > 0 {
+                continue;
+            }
+            if slot.credit > 0 {
+                slot.credit -= 1;
+                continue;
+            }
+            let freed = slot.bytes;
+            g.slots[l][e] = None;
+            g.bytes -= freed;
+            Metrics::inc(&self.metrics.expert_cache_evictions, 1);
+        }
+        Metrics::set_gauge(&self.metrics.bytes_resident, g.bytes as u64);
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::moe::model::tests::random_model;
+    use crate::moe::qz;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("{name}_{}.mcqz", std::process::id()))
+    }
+
+    /// f32 test model: every expert has identical storage bytes.
+    fn setup(name: &str, budget_experts: usize)
+             -> (Arc<Metrics>, ExpertCache, usize, std::path::PathBuf) {
+        let cfg = ModelConfig::test_tiny();
+        let m = random_model(&cfg, 3);
+        let per_expert = m.layers[0].experts[0].storage_bytes();
+        let path = tmp(name);
+        qz::save(&path, &m).unwrap();
+        let (_, store) = ExpertStore::open(&path).unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let cache = ExpertCache::new(Arc::new(store),
+                                     budget_experts * per_expert,
+                                     metrics.clone());
+        (metrics, cache, per_expert, path)
+    }
+
+    #[test]
+    fn hit_miss_and_budget_accounting() {
+        let (metrics, cache, per_expert, path) = setup("cache_hits", 2);
+        let a = cache.get_pinned(0, 0);
+        cache.unpin(0, 0);
+        let b = cache.get_pinned(0, 0);
+        cache.unpin(0, 0);
+        assert!(Arc::ptr_eq(&a, &b), "hit must return the resident copy");
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(metrics.expert_cache_misses.load(Relaxed), 1);
+        assert_eq!(metrics.expert_cache_hits.load(Relaxed), 1);
+        assert_eq!(cache.bytes_resident(), per_expert);
+        assert_eq!(metrics.miss_stall_ns.lock().unwrap().len(), 1);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn eviction_respects_budget_and_clock() {
+        let (metrics, cache, per_expert, path) = setup("cache_evict", 2);
+        for e in 0..4 {
+            cache.get_pinned(0, e);
+            cache.unpin(0, e);
+        }
+        use std::sync::atomic::Ordering::Relaxed;
+        assert!(cache.bytes_resident() <= 2 * per_expert);
+        assert_eq!(metrics.expert_cache_evictions.load(Relaxed), 2);
+        assert_eq!(metrics.expert_cache_misses.load(Relaxed), 4);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn pinned_experts_survive_pressure() {
+        let (metrics, cache, per_expert, path) = setup("cache_pin", 2);
+        // pin two experts (the whole budget), then demand a third:
+        // the pinned pair must stay resident, the budget overshoots
+        cache.get_pinned(0, 0);
+        cache.get_pinned(0, 1);
+        cache.get_pinned(0, 2);
+        assert!(cache.contains(0, 0) && cache.contains(0, 1),
+                "pinned experts must never be evicted");
+        assert!(cache.bytes_resident() > cache.budget_bytes(),
+                "demand load overshoots rather than evicting pins");
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(metrics.expert_cache_evictions.load(Relaxed), 0);
+        // release the pins: the next load can now evict back under
+        cache.unpin(0, 0);
+        cache.unpin(0, 1);
+        cache.get_pinned(0, 3);
+        assert!(cache.bytes_resident() <= 2 * per_expert + per_expert,
+                "{} bytes resident", cache.bytes_resident());
+        assert!(metrics.expert_cache_evictions.load(Relaxed) > 0);
+        assert!(cache.contains(0, 2), "still-pinned expert survives");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn prefetch_never_overshoots_and_hits_count() {
+        let (metrics, cache, _per, path) = setup("cache_prefetch", 2);
+        assert!(cache.prefetch(1, 0), "prefetch into free budget");
+        use std::sync::atomic::Ordering::Relaxed;
+        assert_eq!(metrics.expert_prefetch_issued.load(Relaxed), 1);
+        // demanding the prefetched expert counts a prefetch hit
+        cache.get_pinned(1, 0);
+        assert_eq!(metrics.expert_prefetch_hits.load(Relaxed), 1);
+        // second access is an ordinary hit, not another prefetch hit
+        cache.unpin(1, 0);
+        cache.get_pinned(1, 0);
+        assert_eq!(metrics.expert_prefetch_hits.load(Relaxed), 1);
+        // with the rest of the budget pinned, prefetch must refuse
+        cache.get_pinned(1, 1);
+        let before = cache.bytes_resident();
+        assert!(!cache.prefetch(1, 2), "prefetch never overshoots");
+        assert_eq!(cache.bytes_resident(), before);
+        assert!(!cache.contains(1, 2));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn significant_experts_outlast_insignificant() {
+        // priors make expert 0 maximally significant: under pressure
+        // the clock burns through expert 1..3 first
+        let cfg = ModelConfig::test_tiny();
+        let m = random_model(&cfg, 5);
+        let per_expert = m.layers[0].experts[0].storage_bytes();
+        let priors = crate::offload::ResidencyPriors {
+            phi: vec![vec![1.0, 0.0, 0.0, 0.0]; cfg.n_layers],
+            weight: vec![vec![1.0, 0.0, 0.0, 0.0]; cfg.n_layers],
+            recon: vec![vec![1.0, 0.0, 0.0, 0.0]; cfg.n_layers],
+        };
+        let path = tmp("cache_sig");
+        qz::save_with_priors(&path, &m, Some(&priors)).unwrap();
+        let (_, store) = ExpertStore::open(&path).unwrap();
+        let metrics = Arc::new(Metrics::new());
+        let cache = ExpertCache::new(Arc::new(store), 2 * per_expert, metrics);
+        cache.get_pinned(0, 0); // sig expert resident, credit 4
+        cache.unpin(0, 0);
+        for e in [1usize, 2, 3] {
+            cache.get_pinned(0, e);
+            cache.unpin(0, e);
+        }
+        // without priors this churn evicts expert 0 (credit 1 burns in
+        // one sweep); its 4 significance credits carry it through
+        assert!(cache.contains(0, 0),
+                "high-significance expert outlasts the churn");
+        std::fs::remove_file(&path).ok();
+    }
+}

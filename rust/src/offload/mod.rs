@@ -1,0 +1,241 @@
+//! Expert residency (DESIGN.md §5): serve MoE models whose expert
+//! working set exceeds the memory budget.
+//!
+//! Four parts: [`store::ExpertStore`] (random access to single experts
+//! of a segmented `.mcqz` v2 file), [`cache::ExpertCache`] (a
+//! byte-budgeted residency map with pin/unpin and significance-blended
+//! clock eviction), [`prefetch::Prefetcher`] (co-activation-predicted
+//! speculative loads), and the [`ExpertResolver`] seam every expert
+//! access in the engine flows through:
+//!
+//! * [`Resident`] — today's behavior: experts live eagerly in
+//!   `Layer::experts`, the resolver is a no-op, and the decode hot
+//!   path keeps its zero-allocation contract untouched.
+//! * [`CachedResolver`] — layers carry *empty* expert vecs; the
+//!   drivers (scoring forward, KV decode, fused batcher step) pin each
+//!   layer's routed experts for the duration of its dispatch, feed the
+//!   routed set to the prefetcher, and unpin afterwards.
+//!
+//! Pinning rule: an expert stays pinned from `pin_layer` until the
+//! matching `unpin_layer` — the cache never evicts a pinned slot, so
+//! weights cannot be freed while a dispatch executes over them.
+//! Tokens are bit-exact with the fully-resident run because the cache
+//! materializes the same bytes the monolithic loader would
+//! (`tests/offload_parity.rs`).
+
+pub mod cache;
+pub mod prefetch;
+pub mod store;
+
+use std::fmt::Debug;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::metrics::Metrics;
+use crate::moe::model::{Expert, MoeModel};
+
+pub use cache::ExpertCache;
+pub use prefetch::{Prefetcher, PrefetchMode};
+pub use store::{ExpertStore, ResidencyPriors};
+
+/// How a model's experts are materialized for execution. One seam for
+/// every driver: `moe/exec/dispatch.rs` consumes the pinned slots,
+/// `coordinator/decode.rs` and `MoeModel::forward` drive
+/// pin → dispatch → unpin per layer.
+pub trait ExpertResolver: Send + Sync + Debug {
+    /// Experts owned eagerly in `Layer::experts`. When true, drivers
+    /// bypass the resolver entirely (the zero-cost path).
+    fn is_resident(&self) -> bool;
+
+    /// Pin every expert in `needed` (unique ids) of `layer` into
+    /// `pins` — a caller-owned slot vec indexed by expert id, cleared
+    /// and refilled here so steady-state callers reuse its capacity.
+    /// Pins hold until [`ExpertResolver::unpin_layer`].
+    fn pin_layer(&self, layer: usize, needed: &[usize],
+                 pins: &mut Vec<Option<Arc<Expert>>>);
+
+    /// Release the pins taken by the matching `pin_layer`.
+    fn unpin_layer(&self, layer: usize, needed: &[usize]);
+
+    /// Report the routed expert set of `layer` (drives the
+    /// co-activation predictor and its prefetch loads).
+    fn note_routing(&self, layer: usize, selected: &[usize]);
+
+    /// Total expert storage bytes behind this resolver (None when the
+    /// experts are resident and countable from the layers).
+    fn expert_bytes(&self) -> Option<usize> {
+        None
+    }
+
+    /// Residency byte budget (None = unbudgeted / fully resident).
+    fn budget_bytes(&self) -> Option<u64> {
+        None
+    }
+
+    /// Metrics sink the cache records into (hit/miss/prefetch/stall);
+    /// serving facades adopt it so one snapshot covers both worlds.
+    fn metrics(&self) -> Option<Arc<Metrics>> {
+        None
+    }
+}
+
+/// Today's behavior: all experts in RAM, resolver is a no-op.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Resident;
+
+impl ExpertResolver for Resident {
+    fn is_resident(&self) -> bool {
+        true
+    }
+
+    fn pin_layer(&self, _layer: usize, _needed: &[usize],
+                 _pins: &mut Vec<Option<Arc<Expert>>>) {}
+
+    fn unpin_layer(&self, _layer: usize, _needed: &[usize]) {}
+
+    fn note_routing(&self, _layer: usize, _selected: &[usize]) {}
+}
+
+/// The default resolver every eagerly-loaded model carries.
+pub fn resident() -> Arc<dyn ExpertResolver> {
+    Arc::new(Resident)
+}
+
+/// Byte-budgeted residency over an on-disk `ExpertStore`.
+#[derive(Debug)]
+pub struct CachedResolver {
+    cache: Arc<ExpertCache>,
+    prefetcher: Prefetcher,
+    metrics: Arc<Metrics>,
+    n_experts: usize,
+    expert_bytes: usize,
+    budget: usize,
+}
+
+impl CachedResolver {
+    pub fn cache(&self) -> &Arc<ExpertCache> {
+        &self.cache
+    }
+}
+
+impl ExpertResolver for CachedResolver {
+    fn is_resident(&self) -> bool {
+        false
+    }
+
+    fn pin_layer(&self, layer: usize, needed: &[usize],
+                 pins: &mut Vec<Option<Arc<Expert>>>) {
+        pins.clear();
+        pins.resize(self.n_experts, None);
+        for &e in needed {
+            pins[e] = Some(self.cache.get_pinned(layer, e));
+        }
+    }
+
+    fn unpin_layer(&self, layer: usize, needed: &[usize]) {
+        for &e in needed {
+            self.cache.unpin(layer, e);
+        }
+    }
+
+    fn note_routing(&self, layer: usize, selected: &[usize]) {
+        self.prefetcher.note_routing(layer, selected);
+    }
+
+    fn expert_bytes(&self) -> Option<usize> {
+        Some(self.expert_bytes)
+    }
+
+    fn budget_bytes(&self) -> Option<u64> {
+        Some(self.budget as u64)
+    }
+
+    fn metrics(&self) -> Option<Arc<Metrics>> {
+        Some(self.metrics.clone())
+    }
+}
+
+/// Open a segmented `.mcqz` v2 file for serving under `budget_bytes`
+/// of expert residency: the model head loads eagerly, experts resolve
+/// through the cache + prefetcher. The returned model's `resolver`
+/// carries the `Metrics` the cache records into
+/// (`model.resolver.metrics()`), which `McEngine`/`Server` adopt.
+pub fn load_cached(path: &Path, budget_bytes: usize,
+                   mode: PrefetchMode) -> Result<MoeModel> {
+    let metrics = Arc::new(Metrics::new());
+    let (mut model, store) = ExpertStore::open(path)?;
+    let store = Arc::new(store);
+    let cfg = store.config().clone();
+    let cache = Arc::new(ExpertCache::new(store.clone(), budget_bytes,
+                                          metrics.clone()));
+    let prefetcher = Prefetcher::new(cache.clone(), cfg.n_layers,
+                                     cfg.n_experts, store.priors(), mode);
+    model.resolver = Arc::new(CachedResolver {
+        cache,
+        prefetcher,
+        metrics,
+        n_experts: cfg.n_experts,
+        expert_bytes: store.total_expert_bytes(),
+        budget: budget_bytes,
+    });
+    Ok(model)
+}
+
+/// Collect the unique experts routed to in `topk`, ascending — the
+/// per-layer pin set. `out` is reused by steady-state callers.
+pub fn unique_experts(topk: &[Vec<(usize, f32)>], out: &mut Vec<usize>) {
+    out.clear();
+    for sel in topk {
+        for &(e, _) in sel {
+            out.push(e);
+        }
+    }
+    out.sort_unstable();
+    out.dedup();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+    use crate::moe::model::tests::random_model;
+    use crate::moe::qz;
+
+    #[test]
+    fn unique_experts_sorts_and_dedups() {
+        let topk = vec![
+            vec![(3usize, 0.5f32), (1, 0.5)],
+            vec![(1, 1.0)],
+            vec![(0, 0.7), (3, 0.3)],
+        ];
+        let mut out = vec![9, 9, 9];
+        unique_experts(&topk, &mut out);
+        assert_eq!(out, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn cached_model_scores_bit_exact() {
+        // the scoring forward also flows through the resolver seam
+        let cfg = ModelConfig::test_tiny();
+        let m = random_model(&cfg, 11);
+        let path = std::env::temp_dir()
+            .join(format!("offload_score_{}.mcqz", std::process::id()));
+        qz::save(&path, &m).unwrap();
+        let expert_bytes: usize = m.layers.iter().flat_map(|l| &l.experts)
+            .map(|e| e.storage_bytes()).sum();
+        let cached = load_cached(&path, expert_bytes / 2,
+                                 PrefetchMode::Sync).unwrap();
+        assert!(!cached.resolver.is_resident());
+        assert!(cached.layers.iter().all(|l| l.experts.is_empty()));
+        assert_eq!(cached.resolver.expert_bytes(), Some(expert_bytes));
+        let toks: Vec<u32> = (1..25).collect();
+        assert_eq!(m.score(&toks).data, cached.score(&toks).data,
+                   "budget-capped scoring must be bit-exact");
+        // accounting through the model surface still works
+        assert_eq!(cached.storage_bytes(), m.storage_bytes());
+        assert!((cached.expert_avg_bits() - m.expert_avg_bits()).abs() < 1e-9);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,229 @@
+//! Router-predicted expert prefetch (DESIGN.md §5).
+//!
+//! After the router of layer *l* selects its expert set, the predictor
+//! ranks layer *l+1*'s experts by accumulated co-activation counts
+//! (`co[l][e][e']`: e active at l together with e' at l+1, wrapping
+//! the last layer onto layer 0 of the *next* token so decode loops
+//! prefetch across token boundaries) and asks the cache to bring the
+//! top candidates in before the dispatch that will need them. Counts
+//! are warmed from calibration frequencies (`ResidencyPriors::phi`)
+//! when the store carries priors, so the very first tokens already
+//! prefetch the frequency-favored experts.
+//!
+//! `Async` runs the loads on a background thread — the demand path
+//! rarely blocks because predicted experts stream in while the
+//! current layer's FFNs execute. `Sync` issues the same loads inline
+//! (deterministic; used by the parity tests), `Off` disables the
+//! predictor entirely.
+
+use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::util::stats::top_k_indices;
+
+use super::cache::ExpertCache;
+use super::store::ResidencyPriors;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefetchMode {
+    /// no prediction, no speculative loads
+    Off,
+    /// predict + load inline on the calling thread (deterministic)
+    Sync,
+    /// predict inline, load on the background prefetcher thread
+    Async,
+}
+
+impl PrefetchMode {
+    pub fn parse(s: &str) -> Option<PrefetchMode> {
+        match s {
+            "off" => Some(PrefetchMode::Off),
+            "sync" => Some(PrefetchMode::Sync),
+            "async" => Some(PrefetchMode::Async),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Debug)]
+struct Predictor {
+    n_layers: usize,
+    n_experts: usize,
+    /// co[l][e][e']: times expert e (layer l) co-activated with
+    /// expert e' at layer (l+1) % n_layers
+    co: Vec<Vec<Vec<f32>>>,
+    /// last observed (layer, expert set), for count updates
+    last: Option<(usize, Vec<usize>)>,
+}
+
+impl Predictor {
+    fn new(n_layers: usize, n_experts: usize,
+           priors: Option<&ResidencyPriors>) -> Predictor {
+        let co = (0..n_layers)
+            .map(|l| {
+                let next = (l + 1) % n_layers;
+                (0..n_experts)
+                    .map(|_| {
+                        (0..n_experts)
+                            .map(|e2| match priors {
+                                // calibration frequency of the *next*
+                                // layer's expert seeds every row
+                                Some(p) => p.phi[next][e2] as f32,
+                                None => 0.0,
+                            })
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        Predictor { n_layers, n_experts, co, last: None }
+    }
+
+    /// Record layer `layer`'s routed set and predict the next layer's:
+    /// returns `(next_layer, predicted experts)`.
+    fn observe(&mut self, layer: usize, set: &[usize])
+               -> (usize, Vec<usize>) {
+        if let Some((pl, pset)) = self.last.take() {
+            if (pl + 1) % self.n_layers == layer {
+                for &a in &pset {
+                    for &b in set {
+                        self.co[pl][a][b] += 1.0;
+                    }
+                }
+            }
+        }
+        self.last = Some((layer, set.to_vec()));
+        let next = (layer + 1) % self.n_layers;
+        let mut score = vec![0.0f32; self.n_experts];
+        for &a in set {
+            for (b, sc) in score.iter_mut().enumerate() {
+                *sc += self.co[layer][a][b];
+            }
+        }
+        let k = set.len().min(self.n_experts);
+        (next, top_k_indices(&score, k))
+    }
+}
+
+/// The prefetcher: a predictor plus (in `Async` mode) a background
+/// worker draining prediction batches into `ExpertCache::prefetch`.
+#[derive(Debug)]
+pub struct Prefetcher {
+    mode: PrefetchMode,
+    cache: Arc<ExpertCache>,
+    predictor: Mutex<Predictor>,
+    tx: Option<SyncSender<(usize, Vec<usize>)>>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    pub fn new(cache: Arc<ExpertCache>, n_layers: usize, n_experts: usize,
+               priors: Option<&ResidencyPriors>, mode: PrefetchMode)
+               -> Prefetcher {
+        let predictor = Mutex::new(Predictor::new(n_layers, n_experts, priors));
+        let (tx, worker) = if mode == PrefetchMode::Async {
+            // bounded handoff: when the worker's store I/O is slower
+            // than the decode loop, stale predictions are DROPPED
+            // (try_send below) instead of queueing without bound —
+            // loading experts for layers the decode already passed
+            // only evicts residents that are still useful
+            let (tx, rx) = sync_channel::<(usize, Vec<usize>)>(2);
+            let c = cache.clone();
+            let worker = std::thread::Builder::new()
+                .name("mc-prefetch".into())
+                .spawn(move || {
+                    for (layer, experts) in rx {
+                        for e in experts {
+                            c.prefetch(layer, e);
+                        }
+                    }
+                })
+                .expect("spawning prefetcher thread");
+            (Some(tx), Some(worker))
+        } else {
+            (None, None)
+        };
+        Prefetcher { mode, cache, predictor, tx, worker }
+    }
+
+    /// Feed one layer's routed expert set; predicts and (unless `Off`)
+    /// loads the next layer's candidates.
+    pub fn note_routing(&self, layer: usize, selected: &[usize]) {
+        if self.mode == PrefetchMode::Off || selected.is_empty() {
+            return;
+        }
+        let (next, predicted) =
+            self.predictor.lock().unwrap().observe(layer, selected);
+        match (&self.mode, &self.tx) {
+            (PrefetchMode::Sync, _) => {
+                for e in predicted {
+                    self.cache.prefetch(next, e);
+                }
+            }
+            (PrefetchMode::Async, Some(tx)) => {
+                // never block the decode loop: a Full error means the
+                // worker is behind and this prediction is best dropped
+                let _: Result<(), TrySendError<_>> =
+                    tx.try_send((next, predicted));
+            }
+            _ => {}
+        }
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        // closing the channel ends the worker's recv loop
+        self.tx = None;
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn predictor_learns_coactivation() {
+        let mut p = Predictor::new(2, 4, None);
+        // teach: layer 0 {0} -> layer 1 {2, 3}, twice
+        for _ in 0..2 {
+            p.observe(0, &[0]);
+            p.observe(1, &[2, 3]);
+        }
+        let (next, pred) = p.observe(0, &[0]);
+        assert_eq!(next, 1);
+        assert_eq!(pred.len(), 1);
+        assert!([2usize, 3].contains(&pred[0]), "{pred:?}");
+    }
+
+    #[test]
+    fn predictor_wraps_last_layer_to_first() {
+        let mut p = Predictor::new(2, 4, None);
+        p.observe(1, &[1]);
+        // layer 1 -> layer 0 crosses the token boundary
+        p.observe(0, &[3]);
+        let (next, pred) = p.observe(1, &[1]);
+        assert_eq!(next, 0);
+        // the learned transition 1@L1 -> 3@L0 dominates
+        assert_eq!(pred, vec![3]);
+    }
+
+    #[test]
+    fn priors_warm_the_first_prediction() {
+        let priors = ResidencyPriors {
+            phi: vec![vec![0.0, 0.0, 0.9, 0.1], vec![0.8, 0.1, 0.1, 0.0]],
+            weight: vec![vec![0.25; 4]; 2],
+            recon: vec![vec![0.0; 4]; 2],
+        };
+        let mut p = Predictor::new(2, 4, Some(&priors));
+        // before any observations, layer 0 predicts layer 1's most
+        // frequent expert (phi[1][0] = 0.8)
+        let (next, pred) = p.observe(0, &[1]);
+        assert_eq!(next, 1);
+        assert_eq!(pred, vec![0]);
+    }
+}

@@ -1,0 +1,364 @@
+//! `ExpertStore` — random access to single experts of a segmented
+//! `.mcqz` v2 file (DESIGN.md §5).
+//!
+//! `open` reads the header and the non-expert region only, so the
+//! model head materializes without touching expert bytes; `fetch`
+//! reads one expert's contiguous segment with a single seek +
+//! `read_exact` and decodes its three tensors in place. This is the
+//! I/O half of the pre-loading story: the cache above it decides
+//! *which* experts deserve residency, the store makes any of them
+//! reachable in one bounded read.
+
+use std::io::{Read, Seek, SeekFrom};
+use std::path::Path;
+use std::sync::Mutex;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::moe::model::{Expert, MoeModel};
+use crate::moe::qz;
+use crate::pmq::significance::Significance;
+use crate::util::json::{arr, num, obj, Json};
+
+/// Calibration-time significance factors shipped in the v2 header:
+/// the cache blends them into its eviction score and the prefetcher
+/// warms its co-activation table from the frequencies.
+#[derive(Debug, Clone, Default)]
+pub struct ResidencyPriors {
+    /// activation frequency per [layer][expert] (phi)
+    pub phi: Vec<Vec<f64>>,
+    /// routing-weight mass per [layer][expert] (w)
+    pub weight: Vec<Vec<f64>>,
+    /// reconstruction / quantization output error per [layer][expert]
+    pub recon: Vec<Vec<f64>>,
+}
+
+impl ResidencyPriors {
+    pub fn from_significance(sig: &Significance) -> ResidencyPriors {
+        ResidencyPriors {
+            phi: sig.phi.clone(),
+            weight: sig.weight.clone(),
+            recon: sig
+                .eps
+                .iter()
+                .map(|layer| {
+                    layer
+                        .iter()
+                        .map(|e| e.iter().map(|&v| v as f64).sum::<f64>() / 3.0)
+                        .collect()
+                })
+                .collect(),
+        }
+    }
+
+    /// Blend the three factors into one max-normalized significance
+    /// score per (layer, expert) in [0, 1].
+    pub fn scores(&self) -> Vec<Vec<f64>> {
+        let norm = |v: &Vec<Vec<f64>>| -> Vec<Vec<f64>> {
+            let max = v
+                .iter()
+                .flatten()
+                .cloned()
+                .fold(0.0f64, f64::max)
+                .max(1e-12);
+            v.iter().map(|r| r.iter().map(|x| x / max).collect()).collect()
+        };
+        let (p, w, r) = (norm(&self.phi), norm(&self.weight), norm(&self.recon));
+        p.iter()
+            .zip(&w)
+            .zip(&r)
+            .map(|((pr, wr), rr)| {
+                pr.iter()
+                    .zip(wr)
+                    .zip(rr)
+                    .map(|((a, b), c)| (a + b + c) / 3.0)
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Arity check against the model shape: the cache and predictor
+    /// index `[layer][expert]` without bounds slack, so a mismatched
+    /// priors block is a malformed file, not a latent panic.
+    pub(crate) fn validate(&self, n_layers: usize,
+                           n_experts: usize) -> Result<()> {
+        for (name, v) in [("phi", &self.phi), ("weight", &self.weight),
+                          ("recon", &self.recon)] {
+            if v.len() != n_layers
+                || v.iter().any(|row| row.len() != n_experts)
+            {
+                bail!(
+                    "priors.{name} arity mismatch: expected \
+                     {n_layers}x{n_experts} (layers x experts)"
+                );
+            }
+        }
+        Ok(())
+    }
+
+    pub(crate) fn to_json(&self) -> Json {
+        let f = |v: &Vec<Vec<f64>>| {
+            arr(v.iter().map(|r| arr(r.iter().map(|&x| num(x)))))
+        };
+        obj(vec![
+            ("phi", f(&self.phi)),
+            ("weight", f(&self.weight)),
+            ("recon", f(&self.recon)),
+        ])
+    }
+
+    pub(crate) fn from_json(j: &Json) -> Result<ResidencyPriors> {
+        let f = |key: &str| -> Result<Vec<Vec<f64>>> {
+            j.get(key)?
+                .as_arr()?
+                .iter()
+                .map(|row| -> Result<Vec<f64>> {
+                    row.as_arr()?.iter().map(|v| v.as_f64()).collect()
+                })
+                .collect()
+        };
+        Ok(ResidencyPriors {
+            phi: f("phi")?,
+            weight: f("weight")?,
+            recon: f("recon")?,
+        })
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Segment {
+    /// absolute payload offset of the expert's byte range
+    off: usize,
+    len: usize,
+}
+
+#[derive(Debug)]
+struct ExpertMeta {
+    seg: Segment,
+    /// header metadata of w1 / w3 / w2 (offsets absolute in payload)
+    tensors: [Json; 3],
+    /// exact `QTensor::storage_bytes` of the materialized expert
+    storage_bytes: usize,
+}
+
+/// Random-access reader over the expert segments of a `.mcqz` v2 file.
+#[derive(Debug)]
+pub struct ExpertStore {
+    file: Mutex<std::fs::File>,
+    payload_off: u64,
+    cfg: ModelConfig,
+    metas: Vec<Vec<ExpertMeta>>,
+    priors: Option<ResidencyPriors>,
+    total_storage_bytes: usize,
+}
+
+impl ExpertStore {
+    /// Open a v2 file: parse the header, materialize the model head
+    /// (everything except experts — their layer vecs come back empty),
+    /// and index the expert directory for `fetch`.
+    pub fn open(path: &Path) -> Result<(MoeModel, ExpertStore)> {
+        let mut file = std::fs::File::open(path)
+            .with_context(|| format!("opening {path:?}"))?;
+        let mut fixed = [0u8; 12];
+        file.read_exact(&mut fixed).context("reading MCQZ header")?;
+        if &fixed[0..4] != qz::MAGIC {
+            bail!("bad MCQZ magic");
+        }
+        let version = u32::from_le_bytes(fixed[4..8].try_into().unwrap());
+        if version != qz::VERSION {
+            bail!(
+                "expert offload needs a segmented .mcqz v2 file (got \
+                 version {version}); re-save the model with this build"
+            );
+        }
+        let hlen = u32::from_le_bytes(fixed[8..12].try_into().unwrap()) as usize;
+        let mut hbytes = vec![0u8; hlen];
+        file.read_exact(&mut hbytes).context("reading MCQZ header json")?;
+        let header = Json::parse(std::str::from_utf8(&hbytes)?)?;
+        let payload_off = (12 + hlen) as u64;
+
+        // the non-expert region is payload[..experts_off] by the v2
+        // layout contract; it alone materializes the model head
+        let experts_off = header.get("experts_off")?.as_usize()?;
+        let mut head = vec![0u8; experts_off];
+        file.read_exact(&mut head).context("reading non-expert region")?;
+        let model = qz::build_model(&header, &head, false)?;
+        let cfg = model.cfg.clone();
+
+        let dir = header.get("expert_dir")?.as_arr()?;
+        if dir.len() != cfg.n_layers {
+            bail!("expert_dir layer arity mismatch");
+        }
+        let tensors = header.get("tensors")?;
+        let mut metas = Vec::with_capacity(cfg.n_layers);
+        let mut total = 0usize;
+        for (l, row) in dir.iter().enumerate() {
+            let row = row.as_arr()?;
+            if row.len() != cfg.n_experts {
+                bail!("expert_dir expert arity mismatch at layer {l}");
+            }
+            let mut layer_metas = Vec::with_capacity(cfg.n_experts);
+            for (e, seg) in row.iter().enumerate() {
+                let seg = Segment {
+                    off: seg.get("off")?.as_usize()?,
+                    len: seg.get("len")?.as_usize()?,
+                };
+                let meta = |w: &str| -> Result<Json> {
+                    Ok(tensors
+                        .get(&format!("layers.{l}.experts.{e}.{w}"))?
+                        .clone())
+                };
+                let tensors = [meta("w1")?, meta("w3")?, meta("w2")?];
+                let storage_bytes = tensors
+                    .iter()
+                    .map(qz::entry_storage_bytes)
+                    .sum::<Result<usize>>()?;
+                total += storage_bytes;
+                layer_metas.push(ExpertMeta { seg, tensors, storage_bytes });
+            }
+            metas.push(layer_metas);
+        }
+        let priors = match header.opt("priors") {
+            Some(p) => {
+                let p = ResidencyPriors::from_json(p)?;
+                p.validate(cfg.n_layers, cfg.n_experts)?;
+                Some(p)
+            }
+            None => None,
+        };
+        let store = ExpertStore {
+            file: Mutex::new(file),
+            payload_off,
+            cfg,
+            metas,
+            priors,
+            total_storage_bytes: total,
+        };
+        Ok((model, store))
+    }
+
+    pub fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    pub fn priors(&self) -> Option<&ResidencyPriors> {
+        self.priors.as_ref()
+    }
+
+    /// Exact `storage_bytes` of one expert once materialized (the unit
+    /// the cache budget is accounted in).
+    pub fn expert_storage_bytes(&self, layer: usize, expert: usize) -> usize {
+        self.metas[layer][expert].storage_bytes
+    }
+
+    /// Sum of all experts' storage bytes (the paper's expert "Params").
+    pub fn total_expert_bytes(&self) -> usize {
+        self.total_storage_bytes
+    }
+
+    /// Read + decode one expert: a single seek + `read_exact` of its
+    /// segment, then in-place tensor decode. Never touches the rest of
+    /// the file.
+    pub fn fetch(&self, layer: usize, expert: usize) -> Result<Expert> {
+        let meta = &self.metas[layer][expert];
+        let mut buf = vec![0u8; meta.seg.len];
+        {
+            let mut f = self.file.lock().unwrap();
+            f.seek(SeekFrom::Start(self.payload_off + meta.seg.off as u64))?;
+            f.read_exact(&mut buf).with_context(|| {
+                format!("reading expert segment (layer {layer}, expert {expert})")
+            })?;
+        }
+        let r = qz::Reader { payload: &buf, base: meta.seg.off };
+        Ok(Expert {
+            w1: r.qtensor(&meta.tensors[0])?,
+            w3: r.qtensor(&meta.tensors[1])?,
+            w2: r.qtensor(&meta.tensors[2])?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::moe::model::tests::random_model;
+    use crate::quant::quantize_rtn;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("{name}_{}.mcqz", std::process::id()))
+    }
+
+    fn quantized_model() -> MoeModel {
+        let cfg = ModelConfig::test_tiny();
+        let mut m = random_model(&cfg, 7);
+        for layer in m.layers.iter_mut() {
+            for (e, bits) in [(0usize, 2usize), (1, 3), (2, 1)] {
+                let ex = &mut layer.experts[e];
+                ex.w1 = quantize_rtn(&ex.w1.dequantize(), bits);
+                ex.w3 = quantize_rtn(&ex.w3.dequantize(), bits);
+                ex.w2 = quantize_rtn(&ex.w2.dequantize(), bits);
+            }
+        }
+        m
+    }
+
+    #[test]
+    fn fetch_matches_full_load_bit_exact() {
+        let m = quantized_model();
+        let path = tmp("store_fetch");
+        qz::save(&path, &m).unwrap();
+        let (head, store) = ExpertStore::open(&path).unwrap();
+        assert_eq!(head.cfg, m.cfg);
+        assert!(head.layers.iter().all(|l| l.experts.is_empty()));
+        let mut total = 0usize;
+        for l in 0..m.cfg.n_layers {
+            for e in 0..m.cfg.n_experts {
+                let got = store.fetch(l, e).unwrap();
+                let want = &m.layers[l].experts[e];
+                assert_eq!(got.w1.dequantize().data, want.w1.dequantize().data);
+                assert_eq!(got.w3.dequantize().data, want.w3.dequantize().data);
+                assert_eq!(got.w2.dequantize().data, want.w2.dequantize().data);
+                assert_eq!(got.storage_bytes(),
+                           store.expert_storage_bytes(l, e));
+                total += got.storage_bytes();
+            }
+        }
+        assert_eq!(store.total_expert_bytes(), total);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn open_rejects_v1() {
+        let m = quantized_model();
+        let path = tmp("store_v1");
+        qz::save_v1(&path, &m).unwrap();
+        assert!(ExpertStore::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn priors_roundtrip_and_scores_normalize() {
+        let m = quantized_model();
+        let priors = ResidencyPriors {
+            phi: vec![vec![0.5, 0.25, 0.125, 0.125]; m.cfg.n_layers],
+            weight: vec![vec![0.4, 0.3, 0.2, 0.1]; m.cfg.n_layers],
+            recon: vec![vec![1.0, 2.0, 3.0, 4.0]; m.cfg.n_layers],
+        };
+        let path = tmp("store_priors");
+        qz::save_with_priors(&path, &m, Some(&priors)).unwrap();
+        let (_, store) = ExpertStore::open(&path).unwrap();
+        let got = store.priors().expect("priors survive the roundtrip");
+        assert_eq!(got.phi, priors.phi);
+        assert_eq!(got.weight, priors.weight);
+        assert_eq!(got.recon, priors.recon);
+        let scores = got.scores();
+        assert!(scores
+            .iter()
+            .flatten()
+            .all(|&s| (0.0..=1.0).contains(&s)));
+        // the most frequent+heavy+fragile expert scores highest
+        assert!(scores[0][0] > scores[0][1] || scores[0][3] == 1.0);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -4,6 +4,8 @@
 //!   drop-F-norm, Hessian/HAWQ-v2 (Dong et al. 2020), and BSP
 //!   (Li et al. 2024, layer-granular).
 
+use anyhow::{anyhow, ensure, Result};
+
 use crate::config::ModelConfig;
 use crate::util::rng::Rng;
 
@@ -108,20 +110,36 @@ impl<'a> AllocInputs<'a> {
 }
 
 /// Allocate `total_bits` per layer (n..=3n) with the chosen strategy.
+/// An infeasible budget is a user error (`Err`), surfaced through the
+/// CLI — not a crash.
 pub fn allocate(inputs: &AllocInputs, strategy: Allocator, total_bits: usize,
-                hyper: PmqHyper) -> Allocation {
+                hyper: PmqHyper) -> Result<Allocation> {
     let cfg = inputs.cfg;
     let n = cfg.n_experts;
-    assert!((n..=3 * n).contains(&total_bits), "infeasible budget");
+    ensure!(
+        (n..=3 * n).contains(&total_bits),
+        "infeasible expert bit budget {total_bits}: with {n} experts at \
+         1..=3 bits each the per-layer total must lie in [{n}, {}] \
+         (i.e. --avg-bits between 1.0 and 3.0)",
+        3 * n
+    );
     // the paper's >=1@3-bit / >=1@2-bit constraint can be infeasible at
     // very low budgets (e.g. B < n+3); relax it there, as the paper's
     // own 1.57-bit setting implies
-    let solve = |cost: Vec<[f64; 3]>| -> Vec<usize> {
+    let solve = |cost: Vec<[f64; 3]>| -> Result<Vec<usize>> {
         let strict = IpProblem { cost: cost.clone(), total_bits, enforce_minimums: true };
-        solve_layer(&strict).unwrap_or_else(|| {
-            let relaxed = IpProblem { cost, total_bits, enforce_minimums: false };
-            solve_layer(&relaxed).expect("budget within [n, 3n]")
-        })
+        match solve_layer(&strict) {
+            Some(bits) => Ok(bits),
+            None => {
+                let relaxed = IpProblem { cost, total_bits, enforce_minimums: false };
+                solve_layer(&relaxed).ok_or_else(|| {
+                    anyhow!(
+                        "bit-allocation IP found no solution for budget \
+                         {total_bits} over {n} experts"
+                    )
+                })
+            }
+        }
     };
     let mut bits = Vec::with_capacity(cfg.n_layers);
     match strategy {
@@ -135,7 +153,7 @@ pub fn allocate(inputs: &AllocInputs, strategy: Allocator, total_bits: usize,
                     hyper.beta,
                     hyper.gamma,
                 );
-                bits.push(solve(cost));
+                bits.push(solve(cost)?);
             }
         }
         Allocator::FNorm => {
@@ -172,7 +190,7 @@ pub fn allocate(inputs: &AllocInputs, strategy: Allocator, total_bits: usize,
                         ]
                     })
                     .collect();
-                bits.push(solve(cost));
+                bits.push(solve(cost)?);
             }
         }
         Allocator::Random(seed) => {
@@ -205,7 +223,7 @@ pub fn allocate(inputs: &AllocInputs, strategy: Allocator, total_bits: usize,
             let low = if low_layers == 0 {
                 3
             } else {
-                ((want_total - high_bits) as f64 / (low_layers * n) as f64)
+                (want_total.saturating_sub(high_bits) as f64 / (low_layers * n) as f64)
                     .round()
                     .clamp(1.0, 3.0) as usize
             };
@@ -218,10 +236,10 @@ pub fn allocate(inputs: &AllocInputs, strategy: Allocator, total_bits: usize,
             }
         }
     }
-    Allocation {
+    Ok(Allocation {
         bits,
         strategy: format!("{strategy:?}@B{total_bits}"),
-    }
+    })
 }
 
 /// Rank-based allocation for single-score baselines: high scores get 3
@@ -307,7 +325,7 @@ mod tests {
             Allocator::Random(7),
         ] {
             for total in [n + 1, 2 * n, 5 * n / 2] {
-                let a = allocate(&inputs, strat, total, PmqHyper::default());
+                let a = allocate(&inputs, strat, total, PmqHyper::default()).unwrap();
                 for (l, row) in a.bits.iter().enumerate() {
                     assert_eq!(
                         row.iter().sum::<usize>(),
@@ -324,7 +342,7 @@ mod tests {
         let (cfg, cal, sig) = setup();
         let inputs = AllocInputs::new(&cfg, &sig, &cal);
         let a = allocate(&inputs, Allocator::Bsp, 5 * cfg.n_experts / 2,
-                         PmqHyper::default());
+                         PmqHyper::default()).unwrap();
         // layer-granular: every expert in a layer shares a width
         for row in &a.bits {
             assert!(row.iter().all(|&b| b == row[0]));
@@ -345,9 +363,23 @@ mod tests {
         sig.eps[0][1] = [1e-6, 1e-6, 1e-6];
         let inputs = AllocInputs::new(&cfg, &sig, &cal);
         let a = allocate(&inputs, Allocator::Pmq, 2 * cfg.n_experts,
-                         PmqHyper::default());
+                         PmqHyper::default()).unwrap();
         assert_eq!(a.bits[0][0], 3, "{:?}", a.bits[0]);
         assert_eq!(a.bits[0][1], 1, "{:?}", a.bits[0]);
+    }
+
+    #[test]
+    fn infeasible_budget_is_an_error_not_a_panic() {
+        let (cfg, cal, sig) = setup();
+        let inputs = AllocInputs::new(&cfg, &sig, &cal);
+        let n = cfg.n_experts;
+        for bad in [0, n - 1, 3 * n + 1, 100 * n] {
+            let err = allocate(&inputs, Allocator::Pmq, bad,
+                               PmqHyper::default());
+            assert!(err.is_err(), "budget {bad} must be rejected");
+            let msg = format!("{:#}", err.unwrap_err());
+            assert!(msg.contains("infeasible"), "unhelpful message: {msg}");
+        }
     }
 
     #[test]
@@ -355,9 +387,9 @@ mod tests {
         let (cfg, cal, sig) = setup();
         let inputs = AllocInputs::new(&cfg, &sig, &cal);
         let a = allocate(&inputs, Allocator::Random(1), 2 * cfg.n_experts,
-                         PmqHyper::default());
+                         PmqHyper::default()).unwrap();
         let b = allocate(&inputs, Allocator::Random(2), 2 * cfg.n_experts,
-                         PmqHyper::default());
+                         PmqHyper::default()).unwrap();
         assert_ne!(a.bits, b.bits);
     }
 

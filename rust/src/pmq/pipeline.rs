@@ -74,7 +74,7 @@ impl Workbench {
     pub fn compress(&self, strategy: Allocator, total_bits: usize,
                     hyper: PmqHyper) -> Result<(MoeModel, Allocation)> {
         let inputs = AllocInputs::new(&self.fp.cfg, &self.sig, &self.cal);
-        let alloc = allocate(&inputs, strategy, total_bits, hyper);
+        let alloc = allocate(&inputs, strategy, total_bits, hyper)?;
         let model = assemble(&self.fp, &self.zoo, &alloc, &self.cal.hessians,
                              self.cfg.attn_bits)?;
         Ok((model, alloc))

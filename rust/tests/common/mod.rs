@@ -41,5 +41,6 @@ pub fn random_model(cfg: &ModelConfig, seed: u64) -> MoeModel {
         final_norm: vec![1.0; d],
         lm_head: Mat::randn(&mut rng, d, cfg.vocab_size, (d as f32).powf(-0.5)),
         layers,
+        resolver: mc_moe::offload::resident(),
     }
 }

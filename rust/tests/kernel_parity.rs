@@ -14,7 +14,7 @@
 
 use mc_moe::moe::exec::attention::{causal_attention_into, AttnScratch};
 use mc_moe::moe::exec::dispatch::{
-    dispatch_experts, scatter, DispatchMode,
+    dispatch_experts, scatter, DispatchMode, ExpertsRef,
 };
 use mc_moe::moe::model::Expert;
 use mc_moe::quant::linear::quantize_groupwise;
@@ -169,12 +169,12 @@ fn pooled_dispatch_bit_matches_serial_and_spawn() {
         })
         .collect();
     let y_serial = scatter(
-        &dispatch_experts(&h, &topk, &experts, None, DispatchMode::Serial),
+        &dispatch_experts(&h, &topk, ExpertsRef::resident(&experts), None, DispatchMode::Serial),
         rows, d,
     );
     for mode in [DispatchMode::Threaded, DispatchMode::SpawnScope,
                  DispatchMode::Auto] {
-        let y = scatter(&dispatch_experts(&h, &topk, &experts, None, mode),
+        let y = scatter(&dispatch_experts(&h, &topk, ExpertsRef::resident(&experts), None, mode),
                         rows, d);
         assert_eq!(y_serial.data, y.data, "{mode:?} must be bit-exact");
     }
@@ -219,11 +219,11 @@ fn quantized_expert_dispatch_pool_parity() {
         })
         .collect();
     let y_serial = scatter(
-        &dispatch_experts(&h, &topk, &experts, None, DispatchMode::Serial),
+        &dispatch_experts(&h, &topk, ExpertsRef::resident(&experts), None, DispatchMode::Serial),
         rows, d,
     );
     let y_pool = scatter(
-        &dispatch_experts(&h, &topk, &experts, None, DispatchMode::Threaded),
+        &dispatch_experts(&h, &topk, ExpertsRef::resident(&experts), None, DispatchMode::Threaded),
         rows, d,
     );
     assert_eq!(y_serial.data, y_pool.data,

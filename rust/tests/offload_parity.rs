@@ -1,0 +1,178 @@
+//! Expert residency acceptance (ISSUE 5): with `--expert-budget-mb`
+//! below the total expert bytes, generated tokens must be **identical**
+//! to the fully-resident run on both the engine path and the fused
+//! batcher path; the decode workload must show real cache churn
+//! (nonzero evictions) and a working predictor (prefetch hit-rate
+//! > 0); and pinned experts must never be evicted mid-step.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use mc_moe::config::ModelConfig;
+use mc_moe::coordinator::{
+    Batcher, GenerateRequest, McEngine, Metrics, StopCondition,
+};
+use mc_moe::moe::model::MoeModel;
+use mc_moe::moe::qz;
+use mc_moe::offload::{self, ExpertCache, ExpertStore, PrefetchMode};
+use mc_moe::quant::quantize_rtn;
+
+mod common;
+use common::random_model;
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("{name}_{}.mcqz", std::process::id()))
+}
+
+/// Uniformly 2-bit-quantized model: every expert has identical
+/// storage bytes, so budgets translate to exact slot capacities.
+fn quantized_model(seed: u64) -> MoeModel {
+    let cfg = ModelConfig::test_tiny();
+    let mut m = random_model(&cfg, seed);
+    for layer in m.layers.iter_mut() {
+        for ex in layer.experts.iter_mut() {
+            ex.w1 = quantize_rtn(&ex.w1.dequantize(), 2);
+            ex.w3 = quantize_rtn(&ex.w3.dequantize(), 2);
+            ex.w2 = quantize_rtn(&ex.w2.dequantize(), 2);
+        }
+    }
+    m
+}
+
+fn per_expert_bytes(m: &MoeModel) -> usize {
+    m.layers[0].experts[0].storage_bytes()
+}
+
+fn greedy(prompt: Vec<u32>, max_new: usize) -> GenerateRequest {
+    // MaxLen: run the full decode length regardless of EOS, so the
+    // cached run exercises sustained churn
+    GenerateRequest::greedy(prompt, max_new).with_stop(StopCondition::MaxLen)
+}
+
+#[test]
+fn engine_greedy_parity_under_budget() {
+    let m = quantized_model(21);
+    let path = tmp("offload_engine");
+    qz::save(&path, &m).unwrap();
+    let per = per_expert_bytes(&m);
+    let total: usize = m.layers.iter().flat_map(|l| &l.experts)
+        .map(|e| e.storage_bytes()).sum();
+
+    let resident = McEngine::new(qz::load(&path).unwrap(), None, None);
+    // 50% residency: room for one layer's pinned set plus the
+    // prefetched set of the next
+    let budget = 4 * per;
+    assert!(budget < total, "budget must be under total expert bytes");
+    let cached_model =
+        offload::load_cached(&path, budget, PrefetchMode::Sync).unwrap();
+    let metrics = cached_model.resolver.metrics().unwrap();
+    let cached = McEngine::new(cached_model, None, None);
+    assert!(Arc::ptr_eq(&metrics, &cached.metrics),
+            "engine adopts the cache's metrics");
+
+    let prompts: [&[u32]; 3] = [&[1, 5, 80, 3], &[2, 9, 81, 44, 7], &[1, 30, 3]];
+    for prompt in prompts {
+        let req = greedy(prompt.to_vec(), 40);
+        let want = resident.generate(&req).unwrap();
+        let got = cached.generate(&req).unwrap();
+        assert_eq!(got.tokens, want.tokens,
+                   "budget-capped tokens must be bit-identical");
+        assert_eq!(got.finish, want.finish);
+    }
+
+    use std::sync::atomic::Ordering::Relaxed;
+    assert!(metrics.expert_cache_misses.load(Relaxed) > 0,
+            "a 50% budget must demand-load");
+    assert!(metrics.expert_cache_evictions.load(Relaxed) > 0,
+            "a 50% budget must evict");
+    assert!(metrics.expert_cache_hits.load(Relaxed) > 0);
+    assert!(metrics.prefetch_hit_rate() > 0.0,
+            "the co-activation predictor must land some prefetches \
+             ({} issued, {} hit)",
+            metrics.expert_prefetch_issued.load(Relaxed),
+            metrics.expert_prefetch_hits.load(Relaxed));
+    assert!(!metrics.miss_stall_ns.lock().unwrap().is_empty(),
+            "miss stalls must be recorded");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn fused_batcher_parity_under_budget() {
+    let m = quantized_model(22);
+    let path = tmp("offload_batcher");
+    qz::save(&path, &m).unwrap();
+    let per = per_expert_bytes(&m);
+
+    let run = |model: MoeModel, metrics: &Metrics| -> Vec<(u64, Vec<u32>)> {
+        let mut b = Batcher::new(Arc::new(model), None, 2);
+        let prompts: [&[u32]; 3] =
+            [&[1, 5, 80, 3], &[2, 9, 81, 44, 7], &[1, 30, 3]];
+        let ids: Vec<u64> = prompts
+            .iter()
+            .map(|p| b.submit(greedy(p.to_vec(), 12)).id)
+            .collect();
+        let done = b.run_to_completion(metrics);
+        ids.iter()
+            .map(|&id| {
+                let c = done.iter().find(|c| c.id == id).unwrap();
+                (id, c.tokens.clone())
+            })
+            .collect()
+    };
+
+    let resident_metrics = Metrics::new();
+    let want = run(qz::load(&path).unwrap(), &resident_metrics);
+
+    let cached_model =
+        offload::load_cached(&path, 4 * per, PrefetchMode::Sync).unwrap();
+    let metrics = cached_model.resolver.metrics().unwrap();
+    let got = run(cached_model, &metrics);
+    assert_eq!(got, want,
+               "fused batcher tokens must match fully-resident exactly");
+
+    use std::sync::atomic::Ordering::Relaxed;
+    assert!(metrics.expert_cache_misses.load(Relaxed) > 0);
+    assert!(metrics.expert_cache_evictions.load(Relaxed) > 0,
+            "batch-wide routing under a 50% budget must evict");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn pinned_experts_never_evicted_under_pressure() {
+    let m = quantized_model(23);
+    let path = tmp("offload_pins");
+    qz::save(&path, &m).unwrap();
+    let per = per_expert_bytes(&m);
+    let (_, store) = ExpertStore::open(&path).unwrap();
+    let metrics = Arc::new(Metrics::new());
+    // budget: two experts
+    let cache = ExpertCache::new(Arc::new(store), 2 * per, metrics.clone());
+
+    // pin the whole budget, as a mid-step dispatch would
+    let a = cache.get_pinned(0, 0);
+    let b = cache.get_pinned(0, 1);
+    // pressure: demand + prefetch more experts than the budget holds
+    cache.get_pinned(1, 0);
+    cache.unpin(1, 0);
+    cache.prefetch(1, 1);
+    cache.get_pinned(1, 2);
+    cache.unpin(1, 2);
+    assert!(cache.contains(0, 0) && cache.contains(0, 1),
+            "pinned experts must survive every form of pressure");
+    use std::sync::atomic::Ordering::Relaxed;
+    assert!(metrics.expert_cache_evictions.load(Relaxed) > 0,
+            "unpinned slots churned instead");
+    // weights stay usable while pinned
+    assert!(a.w1.shape().0 > 0 && b.w1.shape().0 > 0);
+
+    // once unpinned, pressure may evict them
+    cache.unpin(0, 0);
+    cache.unpin(0, 1);
+    for e in 0..4 {
+        cache.get_pinned(1, e);
+        cache.unpin(1, e);
+    }
+    assert!(cache.bytes_resident() <= 2 * per,
+            "with no pins the budget is enforced again");
+    std::fs::remove_file(&path).ok();
+}

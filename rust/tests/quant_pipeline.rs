@@ -12,10 +12,13 @@ use mc_moe::config::{artifacts_dir, ModelConfig};
 use mc_moe::data::Split;
 use mc_moe::eval::perplexity;
 use mc_moe::moe::model::OdpPolicy;
-use mc_moe::moe::{MoeModel, WeightFile};
+use mc_moe::moe::{qz, MoeModel, WeightFile};
 use mc_moe::odp;
 use mc_moe::pmq::allocate::{Allocator, PmqHyper};
 use mc_moe::pmq::{Workbench, WorkbenchConfig};
+use mc_moe::quant::quantize_rtn;
+
+mod common;
 
 fn workbench() -> Option<Workbench> {
     let dir = artifacts_dir();
@@ -119,6 +122,39 @@ fn binary_experts_degrade_gracefully() {
     let p3 = ppl(&uni3, None);
     assert!(p1.is_finite() && p3.is_finite());
     assert!(p3 < p1, "3-bit {p3} must beat 1-bit {p1}");
+}
+
+#[test]
+fn mcqz_v1_to_v2_roundtrip_is_bit_exact() {
+    // not artifact-gated: a legacy v1 file must load, re-save as the
+    // segmented v2 layout, and reload with bit-identical outputs and
+    // storage accounting
+    let cfg = ModelConfig::test_tiny();
+    let mut m = common::random_model(&cfg, 77);
+    for layer in m.layers.iter_mut() {
+        for (e, bits) in [(0usize, 2usize), (1, 3), (2, 1)] {
+            let ex = &mut layer.experts[e];
+            ex.w1 = quantize_rtn(&ex.w1.dequantize(), bits);
+            ex.w3 = quantize_rtn(&ex.w3.dequantize(), bits);
+            ex.w2 = quantize_rtn(&ex.w2.dequantize(), bits);
+        }
+    }
+    let pid = std::process::id();
+    let p1 = std::env::temp_dir().join(format!("qp_v1_{pid}.mcqz"));
+    let p2 = std::env::temp_dir().join(format!("qp_v2_{pid}.mcqz"));
+    qz::save_v1(&p1, &m).unwrap();
+    let from_v1 = qz::load(&p1).unwrap();
+    qz::save(&p2, &from_v1).unwrap();
+    let from_v2 = qz::load(&p2).unwrap();
+    let toks: Vec<u32> = (1..25).collect();
+    let want = m.score(&toks);
+    assert_eq!(want.data, from_v1.score(&toks).data, "v1 reload drifted");
+    assert_eq!(want.data, from_v2.score(&toks).data,
+               "v1 -> v2 roundtrip must be bit-exact");
+    assert_eq!(from_v1.storage_bytes(), from_v2.storage_bytes());
+    assert_eq!(from_v1.cfg, from_v2.cfg);
+    std::fs::remove_file(&p1).ok();
+    std::fs::remove_file(&p2).ok();
 }
 
 #[test]
