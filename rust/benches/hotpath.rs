@@ -12,6 +12,12 @@
 //! PR-1 `BENCH_dispatch.json` series going, and adds the expert
 //! offload suite (`BENCH_offload.json`: tokens/s and miss-stall time
 //! at 100%/60%/30% expert residency, EXPERIMENTS.md §Offload).
+//!
+//! The roofline-style kernel table (`BENCH_kernels.json`, modeled on
+//! `python/compile/kernels/roofline.py`) times every hot kernel on
+//! every compiled-and-runnable SIMD backend (`kernels::available()`)
+//! and reports us, GB/s, GFLOP/s, and speedup vs the scalar
+//! reference; CI bench-smoke asserts the AVX2 dequant-GEMM speedup.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -19,15 +25,19 @@ use std::time::Instant;
 use mc_moe::config::{artifacts_dir, ModelConfig};
 use mc_moe::coordinator::decode::{step_many_into, StepScratch};
 use mc_moe::coordinator::{DecodeSession, Server};
-use mc_moe::moe::exec::attention::{causal_attention_into, AttnScratch};
+use mc_moe::kernels;
+use mc_moe::moe::exec::attention::{
+    causal_attention_into, causal_attention_into_ops, AttnScratch,
+};
 use mc_moe::moe::exec::dispatch::{
     dispatch_experts, scatter, DispatchMode, ExpertsRef,
 };
 use mc_moe::moe::model::Expert;
 use mc_moe::moe::{qz, MoeModel, WeightFile};
 use mc_moe::offload::{self, PrefetchMode};
+use mc_moe::quant::qmatmul::QmScratch;
 use mc_moe::quant::{binary::binarize, linear::quantize_groupwise, qmatmul, QTensor};
-use mc_moe::tensor::{matmul_into_naive, matmul_into_with, Mat};
+use mc_moe::tensor::{matmul_into_naive, matmul_into_ops, matmul_into_with, Mat};
 use mc_moe::util::bench::{bench_for, Table};
 use mc_moe::util::pool::WorkerPool;
 use mc_moe::util::rng::Rng;
@@ -49,6 +59,191 @@ fn budget() -> u64 {
 
 fn threads() -> usize {
     std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+}
+
+// ---------------------------------------------------------------------------
+// Roofline-style kernel table: every compiled backend, per-kernel
+// GB/s + GFLOP/s (modeled on python/compile/kernels/roofline.py)
+// ---------------------------------------------------------------------------
+
+struct KernelRow {
+    kernel: String,
+    backend: &'static str,
+    us: f64,
+    gb_s: f64,
+    gflop_s: f64,
+    /// vs the scalar table at the same shape (1.0 for scalar itself)
+    speedup: f64,
+}
+
+fn record_kernel(
+    rows: &mut Vec<KernelRow>,
+    baseline_us: &mut std::collections::BTreeMap<String, f64>,
+    kernel: &str,
+    backend: &'static str,
+    flops: f64,
+    bytes: f64,
+    us: f64,
+) {
+    // available() is scalar-first, so the first time a kernel name
+    // appears it is the scalar measurement — that's the baseline
+    let base = *baseline_us.entry(kernel.to_string()).or_insert(us);
+    rows.push(KernelRow {
+        kernel: kernel.to_string(),
+        backend,
+        us,
+        gb_s: bytes / (us * 1e3),
+        gflop_s: flops / (us * 1e3),
+        speedup: base / us,
+    });
+}
+
+/// Time every hot kernel on every backend the CPU can run. Bytes are
+/// the per-call traffic of the kernel-facing buffers (weights +
+/// activations + output read-modify-write); FLOP counts are the
+/// mul-add work — both modeled, like the python roofline, so GB/s and
+/// GFLOP/s are comparable across backends, not absolute truth.
+fn kernels_suite() -> Vec<KernelRow> {
+    let (k, n) = if fast() { (128usize, 128usize) } else { (256, 256) };
+    let gemm_m = if fast() { 16usize } else { 64 };
+    let big_m = 32usize;
+    let (s, d, nh) = if fast() { (64usize, 64usize, 4usize) } else { (128, 128, 8) };
+    let mut rng = Rng::new(20);
+    let w = Mat::randn(&mut rng, k, n, 1.0);
+    let q2 = quantize_groupwise(&w, 2);
+    let q3 = quantize_groupwise(&w, 3);
+    let q4 = quantize_groupwise(&w, 4);
+    let b1 = binarize(&w, false);
+    let xg = Mat::randn(&mut rng, gemm_m, k, 1.0);
+    let x4 = Mat::randn(&mut rng, 4, k, 1.0);
+    let xb = Mat::randn(&mut rng, big_m, k, 1.0);
+    let aq = Mat::randn(&mut rng, s, d, 1.0);
+    let ak = Mat::randn(&mut rng, s, d, 1.0);
+    let av = Mat::randn(&mut rng, s, d, 1.0);
+
+    let mut rows: Vec<KernelRow> = Vec::new();
+    let mut baseline = std::collections::BTreeMap::new();
+    for ops in kernels::available() {
+        let backend = ops.isa.name();
+
+        let mut y = Mat::zeros(gemm_m, n);
+        let flops = 2.0 * (gemm_m * k * n) as f64;
+        let bytes = 4.0 * (gemm_m * k + k * n + 2 * gemm_m * n) as f64;
+        let r = bench_for("kern gemm_f32", budget() / 8, || {
+            y.data.fill(0.0);
+            matmul_into_ops(&xg, &w, &mut y, None, ops);
+            std::hint::black_box(&y);
+        });
+        record_kernel(&mut rows, &mut baseline, "gemm_f32", backend, flops,
+                      bytes, r.timings.mean_ns() / 1e3);
+
+        // fused small-M dequant-GEMM at every packed bit-width
+        // (decode shape: m = 4 <= small-M cutoff)
+        for (name, q) in [("dequant2", &q2), ("dequant3", &q3),
+                          ("dequant4", &q4)] {
+            let mut y = Mat::zeros(0, 0);
+            let mut qs = QmScratch::new();
+            let flops = 2.0 * (4 * k * n) as f64;
+            let bytes = 4.0 * (q.qweight.len() + q.scales.len()
+                               + q.zeros.len() + 4 * k + 2 * 4 * n) as f64;
+            let r = bench_for("kern dequant", budget() / 8, || {
+                qmatmul::packed_matmul_into_ops(&x4, q, &mut y, &mut qs, ops);
+                std::hint::black_box(&y);
+            });
+            record_kernel(&mut rows, &mut baseline, name, backend, flops,
+                          bytes, r.timings.mean_ns() / 1e3);
+        }
+
+        // large-M path (dequant-row + dense axpy), 3-bit
+        {
+            let mut y = Mat::zeros(0, 0);
+            let mut qs = QmScratch::new();
+            let flops = 2.0 * (big_m * k * n) as f64;
+            let bytes = 4.0 * (q3.qweight.len() + q3.scales.len()
+                               + q3.zeros.len() + big_m * k
+                               + 2 * big_m * n) as f64;
+            let r = bench_for("kern dequant largeM", budget() / 8, || {
+                qmatmul::packed_matmul_into_ops(&xb, &q3, &mut y, &mut qs, ops);
+                std::hint::black_box(&y);
+            });
+            record_kernel(&mut rows, &mut baseline, "dequant3_largem",
+                          backend, flops, bytes, r.timings.mean_ns() / 1e3);
+        }
+
+        {
+            let mut y = Mat::zeros(0, 0);
+            let mut qs = QmScratch::new();
+            let flops = 2.0 * (4 * k * n) as f64;
+            let bytes = 4.0 * (b1.packed.len() + b1.scales.len() + 4 * k
+                               + 2 * 4 * n) as f64;
+            let r = bench_for("kern binary", budget() / 8, || {
+                qmatmul::binary_matmul_into_ops(&x4, &b1, &mut y, &mut qs, ops);
+                std::hint::black_box(&y);
+            });
+            record_kernel(&mut rows, &mut baseline, "binary", backend, flops,
+                          bytes, r.timings.mean_ns() / 1e3);
+        }
+
+        {
+            let mut out = Mat::zeros(0, 0);
+            let mut scratch = AttnScratch::new();
+            // causal: ~s²·d mul-adds each for QK^T and AV
+            let flops = 2.0 * (s * s * d) as f64;
+            let bytes = 4.0 * (3 * s * d + 2 * s * s) as f64;
+            let r = bench_for("kern attention", budget() / 8, || {
+                causal_attention_into_ops(&aq, &ak, &av, s, nh, false, None,
+                                          &mut scratch, &mut out, ops);
+                std::hint::black_box(&out);
+            });
+            record_kernel(&mut rows, &mut baseline, "attention", backend,
+                          flops, bytes, r.timings.mean_ns() / 1e3);
+        }
+    }
+
+    let mut t = Table::new(
+        &format!("hotpath — kernel roofline (k={k} n={n}; cpu: {})",
+                 kernels::detected_summary()),
+        &["kernel", "backend", "us", "GB/s", "GFLOP/s", "vs scalar"],
+    );
+    for r in &rows {
+        t.row(vec![
+            r.kernel.clone(),
+            r.backend.to_string(),
+            format!("{:.1}", r.us),
+            format!("{:.2}", r.gb_s),
+            format!("{:.2}", r.gflop_s),
+            format!("{:.2}", r.speedup),
+        ]);
+    }
+    t.print();
+    rows
+}
+
+fn write_kernels_json(rows: &[KernelRow]) {
+    let items: Vec<String> = rows
+        .iter()
+        .map(|r| {
+            format!(
+                "    {{\"kernel\": \"{}\", \"backend\": \"{}\", \
+                 \"us\": {:.2}, \"gb_s\": {:.3}, \"gflop_s\": {:.3}, \
+                 \"speedup_vs_scalar\": {:.3}}}",
+                r.kernel, r.backend, r.us, r.gb_s, r.gflop_s, r.speedup,
+            )
+        })
+        .collect();
+    let json = format!(
+        "{{\n  \"fast\": {},\n  \"threads\": {},\n  \"cpu\": \"{}\",\n  \
+         \"active_backend\": \"{}\",\n  \"kernels\": [\n{}\n  ]\n}}\n",
+        fast(),
+        threads(),
+        kernels::detected_summary(),
+        kernels::active().isa.name(),
+        items.join(",\n"),
+    );
+    match std::fs::write("BENCH_kernels.json", &json) {
+        Ok(()) => println!("wrote BENCH_kernels.json ({} rows)", rows.len()),
+        Err(e) => eprintln!("could not write BENCH_kernels.json: {e}"),
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -640,6 +835,7 @@ fn write_hotpath_json(gemm: &GemmResult, attn: &AttnResult,
                       disp: &DispatchResult, dec: &DecodeResult) {
     let json = format!(
         "{{\n  \"fast\": {},\n  \"threads\": {},\n  \
+         \"kernel_backend\": \"{}\",\n  \
          \"gemm\": {{\"d\": {}, \"naive_us\": {:.1}, \"tiled_us\": {:.1}, \
          \"pool_us\": {:.1}, \"tiled_speedup\": {:.3}, \"pool_speedup\": {:.3}, \
          \"naive_m1_us\": {:.2}, \"tiled_m1_us\": {:.2}}},\n  \
@@ -654,6 +850,7 @@ fn write_hotpath_json(gemm: &GemmResult, attn: &AttnResult,
          \"pool_vs_serial\": {:.3}}}\n}}\n",
         fast(),
         threads(),
+        kernels::active().isa.name(),
         gemm.d,
         gemm.naive_us,
         gemm.tiled_us,
@@ -691,6 +888,9 @@ fn write_hotpath_json(gemm: &GemmResult, attn: &AttnResult,
 }
 
 fn main() {
+    kernels::log_selection();
+    let kern = kernels_suite();
+    write_kernels_json(&kern);
     let gemm = gemm_suite();
     matmul_variants_suite();
     let attn = attention_suite();

@@ -34,12 +34,16 @@ impl McEngine {
         // start the worker pool now so its spawn cost is paid at
         // construction, not inside the first request
         let _ = crate::util::pool::WorkerPool::global();
+        // pin + announce the kernel dispatch table before any request
+        // runs (one banner per process, DESIGN.md §4)
+        let kops = crate::kernels::log_selection();
         // a cache-resolved model already records hit/miss/stall into
         // its own Metrics — adopt it so one snapshot covers everything
         let metrics = model
             .resolver
             .metrics()
             .unwrap_or_else(|| Arc::new(Metrics::new()));
+        metrics.set_kernel_backend(kops.isa.name());
         McEngine {
             model: Arc::new(model),
             odp,

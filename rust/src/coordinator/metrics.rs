@@ -101,6 +101,10 @@ pub struct Metrics {
     pub bytes_resident: AtomicU64,
     /// demand-miss load stalls (ns), last `RING_CAP` retained
     pub miss_stall_ns: Mutex<LatencyRing>,
+    /// info: kernel backend ISA the engine selected at startup
+    /// (empty until [`Metrics::set_kernel_backend`]; bench JSONs copy
+    /// it so every number records which backend produced it)
+    pub kernel_backend: Mutex<String>,
 }
 
 impl Metrics {
@@ -126,6 +130,24 @@ impl Metrics {
 
     pub fn record_miss_stall(&self, ns: u64) {
         self.miss_stall_ns.lock().unwrap().push(ns);
+    }
+
+    /// Record which kernel backend the engine selected (engine/server
+    /// startup calls this right after `kernels::log_selection()`).
+    pub fn set_kernel_backend(&self, isa: &str) {
+        *self.kernel_backend.lock().unwrap() = isa.to_string();
+    }
+
+    /// The recorded backend name, falling back to whatever the
+    /// process-wide dispatch table resolved to (covers callers that
+    /// render metrics without going through an engine).
+    pub fn kernel_backend_name(&self) -> String {
+        let s = self.kernel_backend.lock().unwrap().clone();
+        if s.is_empty() {
+            crate::kernels::active().isa.name().to_string()
+        } else {
+            s
+        }
     }
 
     /// Fraction of expert demand accesses served without a store load.
@@ -184,6 +206,7 @@ impl Metrics {
     pub fn render_text(&self) -> String {
         let ttft_ms = self.ttft_ns.lock().unwrap().mean() / 1e6;
         let stall_ms = self.miss_stall_ns.lock().unwrap().mean() / 1e6;
+        let backend = self.kernel_backend_name();
         format!(
             "mc_requests_admitted {}\nmc_requests_completed {}\n\
              mc_requests_cancelled {}\nmc_requests_rejected {}\n\
@@ -197,7 +220,8 @@ impl Metrics {
              mc_expert_prefetch_issued {}\nmc_expert_prefetch_hits {}\n\
              mc_expert_cache_hit_rate {:.4}\n\
              mc_expert_prefetch_hit_rate {:.4}\n\
-             mc_bytes_resident {}\nmc_miss_stall_ms_mean {:.3}\n",
+             mc_bytes_resident {}\nmc_miss_stall_ms_mean {:.3}\n\
+             mc_kernel_backend{{isa=\"{}\"}} 1\n",
             self.requests_admitted.load(Ordering::Relaxed),
             self.requests_completed.load(Ordering::Relaxed),
             self.requests_cancelled.load(Ordering::Relaxed),
@@ -219,6 +243,7 @@ impl Metrics {
             self.prefetch_hit_rate(),
             self.bytes_resident.load(Ordering::Relaxed),
             stall_ms,
+            backend,
         )
     }
 }
@@ -244,6 +269,11 @@ mod tests {
         assert!(text.contains("mc_prune_ratio 0.1000"));
         assert!(text.contains("mc_queue_depth 3"));
         assert!(text.contains("mc_batch_occupancy 4"));
+        // falls back to the process-wide dispatch table when unset
+        assert!(text.contains("mc_kernel_backend{isa=\""), "{text}");
+        m.set_kernel_backend("scalar");
+        assert!(m.render_text().contains("mc_kernel_backend{isa=\"scalar\"} 1"));
+        assert_eq!(m.kernel_backend_name(), "scalar");
     }
 
     #[test]

@@ -37,12 +37,16 @@ pub struct Server {
 impl Server {
     pub fn spawn(model: Arc<MoeModel>, odp: Option<DecodeOdp>,
                  max_batch: usize) -> Server {
+        // pin + announce the kernel dispatch table before the worker
+        // thread takes its first request (one banner per process)
+        let kops = crate::kernels::log_selection();
         // adopt a cache-resolved model's Metrics (hit/miss/stall land
         // in the same snapshot the batcher's counters do)
         let metrics = model
             .resolver
             .metrics()
             .unwrap_or_else(|| Arc::new(Metrics::new()));
+        metrics.set_kernel_backend(kops.isa.name());
         let m2 = metrics.clone();
         let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
         let worker = std::thread::spawn(move || {

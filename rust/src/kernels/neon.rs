@@ -1,0 +1,299 @@
+//! aarch64 NEON backend (4 f32 lanes). Same structure and the same
+//! numerical contract as `kernels::x86`: lane groups map to output
+//! columns, accumulation stages use `vfmaq_f32` (fused, so they carry
+//! the FMA tolerance documented in `tests/kernel_parity.rs`), and the
+//! scale/zero application stages replicate the scalar op sequence
+//! exactly (separate mul/sub/add — bit-exact). Variable right shifts
+//! go through `vshlq_u32` with a negated shift count, NEON's idiom
+//! for a runtime shift amount.
+//!
+//! This file only compiles on aarch64; CI's x86 runners gate it via
+//! `cfg`, so the parity suite on an aarch64 host is the compile and
+//! correctness check for this backend.
+
+#![cfg(target_arch = "aarch64")]
+
+pub mod neon {
+    use std::arch::aarch64::*;
+
+    /// Safe wrapper over a `#[target_feature(enable = "neon")]` impl.
+    /// Safety: the `kernels::` dispatch table containing these
+    /// wrappers is only handed out after
+    /// `is_aarch64_feature_detected!("neon")` succeeds.
+    macro_rules! wrap {
+        ($name:ident => $imp:ident ( $($arg:ident : $ty:ty),* ) $(-> $ret:ty)?) => {
+            pub fn $name($($arg: $ty),*) $(-> $ret)? {
+                unsafe { $imp($($arg),*) }
+            }
+        };
+    }
+
+    wrap!(axpy => axpy_imp(y: &mut [f32], w: &[f32], a: f32));
+    wrap!(axpy4 => axpy4_imp(y: &mut [f32], w0: &[f32], w1: &[f32],
+                             w2: &[f32], w3: &[f32], a: [f32; 4]));
+    wrap!(packed_word_acc => packed_word_acc_imp(
+        acc: &mut [f32], words: &[u32], xs: &[f32], shift: u32, bits: u32));
+    wrap!(packed_scale_apply => packed_scale_apply_imp(
+        y: &mut [f32], acc: &[f32], scales: &[f32], zeros: &[f32], xsum: f32));
+    wrap!(packed_dequant_row => packed_dequant_row_imp(
+        wrow: &mut [f32], words: &[u32], scales: &[f32], zeros: &[f32],
+        field: u32, bits: u32));
+    wrap!(binary_word_acc => binary_word_acc_imp(
+        y: &mut [f32], words: &[u32], xs: &[f32]));
+    wrap!(binary_scale_apply => binary_scale_apply_imp(
+        y: &mut [f32], scales: &[f32], xsum: f32));
+    wrap!(vmax => vmax_imp(x: &[f32]) -> f32);
+    wrap!(vscale => vscale_imp(x: &mut [f32], s: f32));
+
+    #[target_feature(enable = "neon")]
+    unsafe fn axpy_imp(y: &mut [f32], w: &[f32], a: f32) {
+        let n = y.len().min(w.len());
+        let yp = y.as_mut_ptr();
+        let wp = w.as_ptr();
+        let av = vdupq_n_f32(a);
+        let mut i = 0;
+        while i + 4 <= n {
+            let yv = vld1q_f32(yp.add(i));
+            let wv = vld1q_f32(wp.add(i));
+            vst1q_f32(yp.add(i), vfmaq_f32(yv, av, wv));
+            i += 4;
+        }
+        while i < n {
+            *yp.add(i) += a * *wp.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn axpy4_imp(
+        y: &mut [f32],
+        w0: &[f32],
+        w1: &[f32],
+        w2: &[f32],
+        w3: &[f32],
+        a: [f32; 4],
+    ) {
+        let n = y
+            .len()
+            .min(w0.len())
+            .min(w1.len())
+            .min(w2.len())
+            .min(w3.len());
+        let yp = y.as_mut_ptr();
+        let a0 = vdupq_n_f32(a[0]);
+        let a1 = vdupq_n_f32(a[1]);
+        let a2 = vdupq_n_f32(a[2]);
+        let a3 = vdupq_n_f32(a[3]);
+        let mut i = 0;
+        while i + 4 <= n {
+            let mut acc = vld1q_f32(yp.add(i));
+            acc = vfmaq_f32(acc, a0, vld1q_f32(w0.as_ptr().add(i)));
+            acc = vfmaq_f32(acc, a1, vld1q_f32(w1.as_ptr().add(i)));
+            acc = vfmaq_f32(acc, a2, vld1q_f32(w2.as_ptr().add(i)));
+            acc = vfmaq_f32(acc, a3, vld1q_f32(w3.as_ptr().add(i)));
+            vst1q_f32(yp.add(i), acc);
+            i += 4;
+        }
+        while i < n {
+            *yp.add(i) +=
+                a[0] * w0[i] + a[1] * w1[i] + a[2] * w2[i] + a[3] * w3[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn packed_word_acc_imp(
+        acc: &mut [f32],
+        words: &[u32],
+        xs: &[f32],
+        shift: u32,
+        bits: u32,
+    ) {
+        let n = acc.len().min(words.len());
+        let mask = (1u32 << bits) - 1;
+        let maskv = vdupq_n_u32(mask);
+        let ap = acc.as_mut_ptr();
+        let wp = words.as_ptr();
+        let mut c = 0;
+        while c + 4 <= n {
+            let wv = vld1q_u32(wp.add(c));
+            let mut s = vdupq_n_f32(0.0);
+            for (j, &xv) in xs.iter().enumerate() {
+                let sh = shift + j as u32 * bits;
+                // NEON right shift by a runtime amount: left shift by
+                // the negated count.
+                let q = vandq_u32(
+                    vshlq_u32(wv, vdupq_n_s32(-(sh as i32))),
+                    maskv,
+                );
+                s = vfmaq_f32(s, vdupq_n_f32(xv), vcvtq_f32_u32(q));
+            }
+            let av = vld1q_f32(ap.add(c));
+            vst1q_f32(ap.add(c), vaddq_f32(av, s));
+            c += 4;
+        }
+        while c < n {
+            let word = *wp.add(c);
+            let mut s = 0.0f32;
+            for (j, &xv) in xs.iter().enumerate() {
+                let q = (word >> (shift + j as u32 * bits)) & mask;
+                s += xv * q as f32;
+            }
+            *ap.add(c) += s;
+            c += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn packed_scale_apply_imp(
+        y: &mut [f32],
+        acc: &[f32],
+        scales: &[f32],
+        zeros: &[f32],
+        xsum: f32,
+    ) {
+        let n = y.len().min(acc.len()).min(scales.len()).min(zeros.len());
+        let yp = y.as_mut_ptr();
+        let xv = vdupq_n_f32(xsum);
+        let mut c = 0;
+        // mul/sub/mul/add exactly as scalar (no FMA) => bit-exact
+        while c + 4 <= n {
+            let a = vld1q_f32(acc.as_ptr().add(c));
+            let s = vld1q_f32(scales.as_ptr().add(c));
+            let z = vld1q_f32(zeros.as_ptr().add(c));
+            let t = vsubq_f32(a, vmulq_f32(z, xv));
+            let yv = vld1q_f32(yp.add(c));
+            vst1q_f32(yp.add(c), vaddq_f32(yv, vmulq_f32(s, t)));
+            c += 4;
+        }
+        while c < n {
+            *yp.add(c) += scales[c] * (acc[c] - zeros[c] * xsum);
+            c += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn packed_dequant_row_imp(
+        wrow: &mut [f32],
+        words: &[u32],
+        scales: &[f32],
+        zeros: &[f32],
+        field: u32,
+        bits: u32,
+    ) {
+        let n = wrow.len().min(words.len()).min(scales.len()).min(zeros.len());
+        let mask = (1u32 << bits) - 1;
+        let maskv = vdupq_n_u32(mask);
+        let shv = vdupq_n_s32(-(field as i32));
+        let wp = wrow.as_mut_ptr();
+        let mut c = 0;
+        // cvt/sub/mul exactly as scalar (no FMA) => bit-exact
+        while c + 4 <= n {
+            let words4 = vld1q_u32(words.as_ptr().add(c));
+            let q = vcvtq_f32_u32(vandq_u32(vshlq_u32(words4, shv), maskv));
+            let z = vld1q_f32(zeros.as_ptr().add(c));
+            let s = vld1q_f32(scales.as_ptr().add(c));
+            vst1q_f32(wp.add(c), vmulq_f32(vsubq_f32(q, z), s));
+            c += 4;
+        }
+        while c < n {
+            let q = (words[c] >> field) & mask;
+            *wp.add(c) = (q as f32 - zeros[c]) * scales[c];
+            c += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn binary_word_acc_imp(y: &mut [f32], words: &[u32], xs: &[f32]) {
+        let n = y.len().min(words.len());
+        let yp = y.as_mut_ptr();
+        let wp = words.as_ptr();
+        let mut c = 0;
+        while c + 4 <= n {
+            let wv = vld1q_u32(wp.add(c));
+            let mut s = vdupq_n_f32(0.0);
+            for (j, &xv) in xs.iter().enumerate() {
+                let bitv = vdupq_n_u32(1u32 << j);
+                let hit = vceqq_u32(vandq_u32(wv, bitv), bitv);
+                let sel = vandq_u32(hit, vreinterpretq_u32_f32(vdupq_n_f32(xv)));
+                s = vaddq_f32(s, vreinterpretq_f32_u32(sel));
+            }
+            let yv = vld1q_f32(yp.add(c));
+            vst1q_f32(yp.add(c), vaddq_f32(yv, s));
+            c += 4;
+        }
+        while c < n {
+            let word = *wp.add(c);
+            let mut s = 0.0f32;
+            let mut bits = word;
+            for &xv in xs {
+                s += xv * (bits & 1) as f32;
+                bits >>= 1;
+            }
+            *yp.add(c) += s;
+            c += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn binary_scale_apply_imp(y: &mut [f32], scales: &[f32], xsum: f32) {
+        let n = y.len().min(scales.len());
+        let yp = y.as_mut_ptr();
+        let two = vdupq_n_f32(2.0);
+        let xv = vdupq_n_f32(xsum);
+        let mut c = 0;
+        // mul/sub/mul exactly as scalar (no FMA) => bit-exact
+        while c + 4 <= n {
+            let yv = vld1q_f32(yp.add(c));
+            let s = vld1q_f32(scales.as_ptr().add(c));
+            let t = vsubq_f32(vmulq_f32(two, yv), xv);
+            vst1q_f32(yp.add(c), vmulq_f32(s, t));
+            c += 4;
+        }
+        while c < n {
+            *yp.add(c) = scales[c] * (2.0 * *yp.add(c) - xsum);
+            c += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn vmax_imp(x: &[f32]) -> f32 {
+        let mut m = f32::NEG_INFINITY;
+        let n = x.len();
+        let xp = x.as_ptr();
+        let mut i = 0;
+        if n >= 4 {
+            let mut mv = vdupq_n_f32(f32::NEG_INFINITY);
+            while i + 4 <= n {
+                mv = vmaxq_f32(mv, vld1q_f32(xp.add(i)));
+                i += 4;
+            }
+            let mut lanes = [0.0f32; 4];
+            vst1q_f32(lanes.as_mut_ptr(), mv);
+            for &l in &lanes {
+                m = m.max(l);
+            }
+        }
+        while i < n {
+            m = m.max(*xp.add(i));
+            i += 1;
+        }
+        m
+    }
+
+    #[target_feature(enable = "neon")]
+    unsafe fn vscale_imp(x: &mut [f32], s: f32) {
+        let n = x.len();
+        let xp = x.as_mut_ptr();
+        let sv = vdupq_n_f32(s);
+        let mut i = 0;
+        while i + 4 <= n {
+            vst1q_f32(xp.add(i), vmulq_f32(vld1q_f32(xp.add(i)), sv));
+            i += 4;
+        }
+        while i < n {
+            *xp.add(i) *= s;
+            i += 1;
+        }
+    }
+}

@@ -1,0 +1,168 @@
+//! Scalar reference backend: the PR-3 kernel inner loops, kept
+//! verbatim (same accumulation order, same static word unrolls) so
+//! every SIMD backend has a fixed numerical reference to be tested
+//! against. `MC_KERNEL=scalar` pins the whole engine to this path.
+
+/// y[c] += a * w[c]
+pub fn axpy(y: &mut [f32], w: &[f32], a: f32) {
+    for (yv, &wv) in y.iter_mut().zip(w) {
+        *yv += a * wv;
+    }
+}
+
+/// y[c] += a0*w0[c] + a1*w1[c] + a2*w2[c] + a3*w3[c]
+/// (4 independent FMA streams; the tiled GEMM's K-unrolled inner loop)
+pub fn axpy4(
+    y: &mut [f32],
+    w0: &[f32],
+    w1: &[f32],
+    w2: &[f32],
+    w3: &[f32],
+    a: [f32; 4],
+) {
+    let [a0, a1, a2, a3] = a;
+    for ((((yv, &b0), &b1), &b2), &b3) in
+        y.iter_mut().zip(w0).zip(w1).zip(w2).zip(w3)
+    {
+        *yv += a0 * b0 + a1 * b1 + a2 * b2 + a3 * b3;
+    }
+}
+
+/// Fused word-decode accumulation for the packed small-M kernel:
+///   acc[c] += Σ_j xs[j] * ((words[c] >> (shift + j*bits)) & mask)
+/// Full words (shift == 0, xs.len() == vals-per-word) take a
+/// statically-unrolled path per bit-width, exactly as the PR-3
+/// const-generic kernel did; each word contributes one partial sum
+/// `s` that is added to `acc[c]` in a single rounding step.
+pub fn packed_word_acc(
+    acc: &mut [f32],
+    words: &[u32],
+    xs: &[f32],
+    shift: u32,
+    bits: u32,
+) {
+    match bits {
+        2 => word_acc::<2, 16>(acc, words, xs, shift),
+        3 => word_acc::<3, 10>(acc, words, xs, shift),
+        4 => word_acc::<4, 8>(acc, words, xs, shift),
+        other => panic!("unsupported packed bit-width {other}"),
+    }
+}
+
+fn word_acc<const BITS: u32, const VPW: usize>(
+    acc: &mut [f32],
+    words: &[u32],
+    xs: &[f32],
+    shift: u32,
+) {
+    let mask = (1u32 << BITS) - 1;
+    if shift == 0 && xs.len() == VPW {
+        // full word: statically-unrolled decode
+        let xs: &[f32; VPW] = xs.try_into().unwrap();
+        for (a, &word) in acc.iter_mut().zip(words) {
+            let mut s = 0.0f32;
+            let mut bits = word;
+            for &xv in xs.iter() {
+                s += xv * (bits & mask) as f32;
+                bits >>= BITS;
+            }
+            *a += s;
+        }
+    } else {
+        // group edge inside a word
+        for (a, &word) in acc.iter_mut().zip(words) {
+            let mut s = 0.0f32;
+            let mut bits = word >> shift;
+            for &xv in xs {
+                s += xv * (bits & mask) as f32;
+                bits >>= BITS;
+            }
+            *a += s;
+        }
+    }
+}
+
+/// Group-factored scale/zero application (paper Eq. in qmatmul.rs):
+///   y[c] += scales[c] * (acc[c] - zeros[c] * xsum)
+/// Every backend replicates this exact mul/sub/mul/add sequence (no
+/// FMA contraction), so the application stage is bit-exact across
+/// ISAs; only the accumulation stages carry FMA tolerances.
+pub fn packed_scale_apply(
+    y: &mut [f32],
+    acc: &[f32],
+    scales: &[f32],
+    zeros: &[f32],
+    xsum: f32,
+) {
+    for (((yv, &a), &s), &z) in
+        y.iter_mut().zip(acc).zip(scales).zip(zeros)
+    {
+        *yv += s * (a - z * xsum);
+    }
+}
+
+/// Decode one packed weight row (bit-field `field` of each word) into
+/// dequantized f32: wrow[c] = (q - zeros[c]) * scales[c].
+pub fn packed_dequant_row(
+    wrow: &mut [f32],
+    words: &[u32],
+    scales: &[f32],
+    zeros: &[f32],
+    field: u32,
+    bits: u32,
+) {
+    let mask = (1u32 << bits) - 1;
+    for (((wv, &word), &s), &z) in
+        wrow.iter_mut().zip(words).zip(scales).zip(zeros)
+    {
+        let q = (word >> field) & mask;
+        *wv = (q as f32 - z) * s;
+    }
+}
+
+/// Binary word accumulation: y[c] += Σ_j xs[j] * bit_j(words[c]),
+/// statically unrolled for full 32-bit words.
+pub fn binary_word_acc(y: &mut [f32], words: &[u32], xs: &[f32]) {
+    if xs.len() == 32 {
+        let xs: &[f32; 32] = xs.try_into().unwrap();
+        for (yv, &word) in y.iter_mut().zip(words) {
+            let mut s = 0.0f32;
+            let mut bits = word;
+            for &xv in xs.iter() {
+                s += xv * (bits & 1) as f32;
+                bits >>= 1;
+            }
+            *yv += s;
+        }
+    } else {
+        for (yv, &word) in y.iter_mut().zip(words) {
+            let mut s = 0.0f32;
+            let mut bits = word;
+            for &xv in xs {
+                s += xv * (bits & 1) as f32;
+                bits >>= 1;
+            }
+            *yv += s;
+        }
+    }
+}
+
+/// Binary reconstruction: y[c] = scales[c] * (2*y[c] - xsum)
+/// (paper Eq. 10; same exact op sequence on every backend).
+pub fn binary_scale_apply(y: &mut [f32], scales: &[f32], xsum: f32) {
+    for (yv, &s) in y.iter_mut().zip(scales) {
+        *yv = s * (2.0 * *yv - xsum);
+    }
+}
+
+/// Row max (softmax stabilizer).
+pub fn vmax(x: &[f32]) -> f32 {
+    x.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+}
+
+/// x[c] *= s (softmax normalization / score scaling).
+pub fn vscale(x: &mut [f32], s: f32) {
+    for v in x.iter_mut() {
+        *v *= s;
+    }
+}

@@ -1,0 +1,607 @@
+//! x86-64 SIMD backends: AVX2+FMA (8 f32 lanes) and AVX-512F (16
+//! lanes). Lane groups always map to *output columns*, so SIMD never
+//! changes any element's K-accumulation order — per-element results
+//! differ from scalar only where FMA fuses a mul+add rounding step
+//! (axpy/axpy4 and the packed/attention accumulators; see the
+//! tolerance contract in `tests/kernel_parity.rs`). The scale/zero
+//! application and dequant stages replicate the scalar op sequence
+//! with separate mul/sub/add (no FMA), so they are bit-exact.
+//!
+//! Unsafe boundary (DESIGN.md §4): every `#[target_feature]` fn is
+//! private and reachable only through the safe wrappers below, which
+//! the dispatch tables in `kernels::` hand out strictly after
+//! `is_x86_feature_detected!` confirms the ISA at runtime.
+//!
+//! Two deliberate non-uses:
+//!  * variable shifts go through `_mm*_srl_epi32` with the count in an
+//!    xmm register (`_mm*_srli_epi32` needs a const immediate, but the
+//!    packed bit-field offset is runtime data);
+//!  * the binary kernel does NOT use popcount: activations are f32, so
+//!    a popcount would only count bits, not weight the sum by x. The
+//!    mask-select lanes below (cmpeq -> and_ps -> add) keep the exact
+//!    masked-add semantics of the scalar kernel.
+
+#![cfg(target_arch = "x86_64")]
+
+use std::arch::x86_64::*;
+
+/// Safe wrapper over a `#[target_feature]` impl fn.
+/// Safety argument, shared by every expansion: the enclosing table is
+/// only returned by `kernels::table_for` after runtime detection of
+/// the features the impl fn enables.
+macro_rules! wrap {
+    ($name:ident => $imp:ident ( $($arg:ident : $ty:ty),* ) $(-> $ret:ty)?) => {
+        pub fn $name($($arg: $ty),*) $(-> $ret)? {
+            unsafe { $imp($($arg),*) }
+        }
+    };
+}
+
+pub mod avx2 {
+    use super::*;
+
+    wrap!(axpy => axpy_imp(y: &mut [f32], w: &[f32], a: f32));
+    wrap!(axpy4 => axpy4_imp(y: &mut [f32], w0: &[f32], w1: &[f32],
+                             w2: &[f32], w3: &[f32], a: [f32; 4]));
+    wrap!(packed_word_acc => packed_word_acc_imp(
+        acc: &mut [f32], words: &[u32], xs: &[f32], shift: u32, bits: u32));
+    wrap!(packed_scale_apply => packed_scale_apply_imp(
+        y: &mut [f32], acc: &[f32], scales: &[f32], zeros: &[f32], xsum: f32));
+    wrap!(packed_dequant_row => packed_dequant_row_imp(
+        wrow: &mut [f32], words: &[u32], scales: &[f32], zeros: &[f32],
+        field: u32, bits: u32));
+    wrap!(binary_word_acc => binary_word_acc_imp(
+        y: &mut [f32], words: &[u32], xs: &[f32]));
+    wrap!(binary_scale_apply => binary_scale_apply_imp(
+        y: &mut [f32], scales: &[f32], xsum: f32));
+    wrap!(vmax => vmax_imp(x: &[f32]) -> f32);
+    wrap!(vscale => vscale_imp(x: &mut [f32], s: f32));
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn axpy_imp(y: &mut [f32], w: &[f32], a: f32) {
+        let n = y.len().min(w.len());
+        let yp = y.as_mut_ptr();
+        let wp = w.as_ptr();
+        let av = _mm256_set1_ps(a);
+        let mut i = 0;
+        while i + 8 <= n {
+            let yv = _mm256_loadu_ps(yp.add(i));
+            let wv = _mm256_loadu_ps(wp.add(i));
+            _mm256_storeu_ps(yp.add(i), _mm256_fmadd_ps(av, wv, yv));
+            i += 8;
+        }
+        while i < n {
+            *yp.add(i) += a * *wp.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn axpy4_imp(
+        y: &mut [f32],
+        w0: &[f32],
+        w1: &[f32],
+        w2: &[f32],
+        w3: &[f32],
+        a: [f32; 4],
+    ) {
+        let n = y
+            .len()
+            .min(w0.len())
+            .min(w1.len())
+            .min(w2.len())
+            .min(w3.len());
+        let yp = y.as_mut_ptr();
+        let a0 = _mm256_set1_ps(a[0]);
+        let a1 = _mm256_set1_ps(a[1]);
+        let a2 = _mm256_set1_ps(a[2]);
+        let a3 = _mm256_set1_ps(a[3]);
+        let mut i = 0;
+        while i + 8 <= n {
+            let mut acc = _mm256_loadu_ps(yp.add(i));
+            acc = _mm256_fmadd_ps(a0, _mm256_loadu_ps(w0.as_ptr().add(i)), acc);
+            acc = _mm256_fmadd_ps(a1, _mm256_loadu_ps(w1.as_ptr().add(i)), acc);
+            acc = _mm256_fmadd_ps(a2, _mm256_loadu_ps(w2.as_ptr().add(i)), acc);
+            acc = _mm256_fmadd_ps(a3, _mm256_loadu_ps(w3.as_ptr().add(i)), acc);
+            _mm256_storeu_ps(yp.add(i), acc);
+            i += 8;
+        }
+        while i < n {
+            *yp.add(i) +=
+                a[0] * w0[i] + a[1] * w1[i] + a[2] * w2[i] + a[3] * w3[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn packed_word_acc_imp(
+        acc: &mut [f32],
+        words: &[u32],
+        xs: &[f32],
+        shift: u32,
+        bits: u32,
+    ) {
+        let n = acc.len().min(words.len());
+        let mask = (1u32 << bits) - 1;
+        let maskv = _mm256_set1_epi32(mask as i32);
+        let ap = acc.as_mut_ptr();
+        let wp = words.as_ptr();
+        let mut c = 0;
+        while c + 8 <= n {
+            let wv = _mm256_loadu_si256(wp.add(c) as *const __m256i);
+            let mut s = _mm256_setzero_ps();
+            for (j, &xv) in xs.iter().enumerate() {
+                let sh = shift + j as u32 * bits;
+                let q = _mm256_and_si256(
+                    _mm256_srl_epi32(wv, _mm_cvtsi32_si128(sh as i32)),
+                    maskv,
+                );
+                s = _mm256_fmadd_ps(
+                    _mm256_set1_ps(xv),
+                    _mm256_cvtepi32_ps(q),
+                    s,
+                );
+            }
+            let av = _mm256_loadu_ps(ap.add(c));
+            _mm256_storeu_ps(ap.add(c), _mm256_add_ps(av, s));
+            c += 8;
+        }
+        while c < n {
+            let word = *wp.add(c);
+            let mut s = 0.0f32;
+            for (j, &xv) in xs.iter().enumerate() {
+                let q = (word >> (shift + j as u32 * bits)) & mask;
+                s += xv * q as f32;
+            }
+            *ap.add(c) += s;
+            c += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn packed_scale_apply_imp(
+        y: &mut [f32],
+        acc: &[f32],
+        scales: &[f32],
+        zeros: &[f32],
+        xsum: f32,
+    ) {
+        let n = y.len().min(acc.len()).min(scales.len()).min(zeros.len());
+        let yp = y.as_mut_ptr();
+        let xv = _mm256_set1_ps(xsum);
+        let mut c = 0;
+        // mul/sub/mul/add exactly as scalar (no FMA) => bit-exact
+        while c + 8 <= n {
+            let a = _mm256_loadu_ps(acc.as_ptr().add(c));
+            let s = _mm256_loadu_ps(scales.as_ptr().add(c));
+            let z = _mm256_loadu_ps(zeros.as_ptr().add(c));
+            let t = _mm256_sub_ps(a, _mm256_mul_ps(z, xv));
+            let yv = _mm256_loadu_ps(yp.add(c));
+            _mm256_storeu_ps(yp.add(c), _mm256_add_ps(yv, _mm256_mul_ps(s, t)));
+            c += 8;
+        }
+        while c < n {
+            *yp.add(c) += scales[c] * (acc[c] - zeros[c] * xsum);
+            c += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn packed_dequant_row_imp(
+        wrow: &mut [f32],
+        words: &[u32],
+        scales: &[f32],
+        zeros: &[f32],
+        field: u32,
+        bits: u32,
+    ) {
+        let n = wrow.len().min(words.len()).min(scales.len()).min(zeros.len());
+        let mask = (1u32 << bits) - 1;
+        let maskv = _mm256_set1_epi32(mask as i32);
+        let count = _mm_cvtsi32_si128(field as i32);
+        let wp = wrow.as_mut_ptr();
+        let mut c = 0;
+        // cvt/sub/mul exactly as scalar (no FMA) => bit-exact
+        while c + 8 <= n {
+            let words8 =
+                _mm256_loadu_si256(words.as_ptr().add(c) as *const __m256i);
+            let q = _mm256_cvtepi32_ps(_mm256_and_si256(
+                _mm256_srl_epi32(words8, count),
+                maskv,
+            ));
+            let z = _mm256_loadu_ps(zeros.as_ptr().add(c));
+            let s = _mm256_loadu_ps(scales.as_ptr().add(c));
+            _mm256_storeu_ps(wp.add(c), _mm256_mul_ps(_mm256_sub_ps(q, z), s));
+            c += 8;
+        }
+        while c < n {
+            let q = (words[c] >> field) & mask;
+            *wp.add(c) = (q as f32 - zeros[c]) * scales[c];
+            c += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn binary_word_acc_imp(y: &mut [f32], words: &[u32], xs: &[f32]) {
+        let n = y.len().min(words.len());
+        let yp = y.as_mut_ptr();
+        let wp = words.as_ptr();
+        let mut c = 0;
+        while c + 8 <= n {
+            let wv = _mm256_loadu_si256(wp.add(c) as *const __m256i);
+            let mut s = _mm256_setzero_ps();
+            for (j, &xv) in xs.iter().enumerate() {
+                let bitv = _mm256_set1_epi32((1u32 << j) as i32);
+                let hit =
+                    _mm256_cmpeq_epi32(_mm256_and_si256(wv, bitv), bitv);
+                s = _mm256_add_ps(
+                    s,
+                    _mm256_and_ps(
+                        _mm256_castsi256_ps(hit),
+                        _mm256_set1_ps(xv),
+                    ),
+                );
+            }
+            let yv = _mm256_loadu_ps(yp.add(c));
+            _mm256_storeu_ps(yp.add(c), _mm256_add_ps(yv, s));
+            c += 8;
+        }
+        while c < n {
+            let word = *wp.add(c);
+            let mut s = 0.0f32;
+            let mut bits = word;
+            for &xv in xs {
+                s += xv * (bits & 1) as f32;
+                bits >>= 1;
+            }
+            *yp.add(c) += s;
+            c += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn binary_scale_apply_imp(y: &mut [f32], scales: &[f32], xsum: f32) {
+        let n = y.len().min(scales.len());
+        let yp = y.as_mut_ptr();
+        let two = _mm256_set1_ps(2.0);
+        let xv = _mm256_set1_ps(xsum);
+        let mut c = 0;
+        // mul/sub/mul exactly as scalar (no FMA) => bit-exact
+        while c + 8 <= n {
+            let yv = _mm256_loadu_ps(yp.add(c));
+            let s = _mm256_loadu_ps(scales.as_ptr().add(c));
+            let t = _mm256_sub_ps(_mm256_mul_ps(two, yv), xv);
+            _mm256_storeu_ps(yp.add(c), _mm256_mul_ps(s, t));
+            c += 8;
+        }
+        while c < n {
+            *yp.add(c) = scales[c] * (2.0 * *yp.add(c) - xsum);
+            c += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn vmax_imp(x: &[f32]) -> f32 {
+        let mut m = f32::NEG_INFINITY;
+        let n = x.len();
+        let xp = x.as_ptr();
+        let mut i = 0;
+        if n >= 8 {
+            let mut mv = _mm256_set1_ps(f32::NEG_INFINITY);
+            while i + 8 <= n {
+                mv = _mm256_max_ps(mv, _mm256_loadu_ps(xp.add(i)));
+                i += 8;
+            }
+            let mut lanes = [0.0f32; 8];
+            _mm256_storeu_ps(lanes.as_mut_ptr(), mv);
+            for &l in &lanes {
+                m = m.max(l);
+            }
+        }
+        while i < n {
+            m = m.max(*xp.add(i));
+            i += 1;
+        }
+        m
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn vscale_imp(x: &mut [f32], s: f32) {
+        let n = x.len();
+        let xp = x.as_mut_ptr();
+        let sv = _mm256_set1_ps(s);
+        let mut i = 0;
+        while i + 8 <= n {
+            _mm256_storeu_ps(xp.add(i), _mm256_mul_ps(_mm256_loadu_ps(xp.add(i)), sv));
+            i += 8;
+        }
+        while i < n {
+            *xp.add(i) *= s;
+            i += 1;
+        }
+    }
+}
+
+pub mod avx512 {
+    use super::*;
+
+    wrap!(axpy => axpy_imp(y: &mut [f32], w: &[f32], a: f32));
+    wrap!(axpy4 => axpy4_imp(y: &mut [f32], w0: &[f32], w1: &[f32],
+                             w2: &[f32], w3: &[f32], a: [f32; 4]));
+    wrap!(packed_word_acc => packed_word_acc_imp(
+        acc: &mut [f32], words: &[u32], xs: &[f32], shift: u32, bits: u32));
+    wrap!(packed_scale_apply => packed_scale_apply_imp(
+        y: &mut [f32], acc: &[f32], scales: &[f32], zeros: &[f32], xsum: f32));
+    wrap!(packed_dequant_row => packed_dequant_row_imp(
+        wrow: &mut [f32], words: &[u32], scales: &[f32], zeros: &[f32],
+        field: u32, bits: u32));
+    wrap!(binary_word_acc => binary_word_acc_imp(
+        y: &mut [f32], words: &[u32], xs: &[f32]));
+    wrap!(binary_scale_apply => binary_scale_apply_imp(
+        y: &mut [f32], scales: &[f32], xsum: f32));
+    wrap!(vmax => vmax_imp(x: &[f32]) -> f32);
+    wrap!(vscale => vscale_imp(x: &mut [f32], s: f32));
+
+    /// Unaligned 16-lane integer load (packed words are u32 streams).
+    #[target_feature(enable = "avx512f")]
+    unsafe fn load_si512(p: *const u32) -> __m512i {
+        p.cast::<__m512i>().read_unaligned()
+    }
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn axpy_imp(y: &mut [f32], w: &[f32], a: f32) {
+        let n = y.len().min(w.len());
+        let yp = y.as_mut_ptr();
+        let wp = w.as_ptr();
+        let av = _mm512_set1_ps(a);
+        let mut i = 0;
+        while i + 16 <= n {
+            let yv = _mm512_loadu_ps(yp.add(i));
+            let wv = _mm512_loadu_ps(wp.add(i));
+            _mm512_storeu_ps(yp.add(i), _mm512_fmadd_ps(av, wv, yv));
+            i += 16;
+        }
+        while i < n {
+            *yp.add(i) += a * *wp.add(i);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn axpy4_imp(
+        y: &mut [f32],
+        w0: &[f32],
+        w1: &[f32],
+        w2: &[f32],
+        w3: &[f32],
+        a: [f32; 4],
+    ) {
+        let n = y
+            .len()
+            .min(w0.len())
+            .min(w1.len())
+            .min(w2.len())
+            .min(w3.len());
+        let yp = y.as_mut_ptr();
+        let a0 = _mm512_set1_ps(a[0]);
+        let a1 = _mm512_set1_ps(a[1]);
+        let a2 = _mm512_set1_ps(a[2]);
+        let a3 = _mm512_set1_ps(a[3]);
+        let mut i = 0;
+        while i + 16 <= n {
+            let mut acc = _mm512_loadu_ps(yp.add(i));
+            acc = _mm512_fmadd_ps(a0, _mm512_loadu_ps(w0.as_ptr().add(i)), acc);
+            acc = _mm512_fmadd_ps(a1, _mm512_loadu_ps(w1.as_ptr().add(i)), acc);
+            acc = _mm512_fmadd_ps(a2, _mm512_loadu_ps(w2.as_ptr().add(i)), acc);
+            acc = _mm512_fmadd_ps(a3, _mm512_loadu_ps(w3.as_ptr().add(i)), acc);
+            _mm512_storeu_ps(yp.add(i), acc);
+            i += 16;
+        }
+        while i < n {
+            *yp.add(i) +=
+                a[0] * w0[i] + a[1] * w1[i] + a[2] * w2[i] + a[3] * w3[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn packed_word_acc_imp(
+        acc: &mut [f32],
+        words: &[u32],
+        xs: &[f32],
+        shift: u32,
+        bits: u32,
+    ) {
+        let n = acc.len().min(words.len());
+        let mask = (1u32 << bits) - 1;
+        let maskv = _mm512_set1_epi32(mask as i32);
+        let ap = acc.as_mut_ptr();
+        let wp = words.as_ptr();
+        let mut c = 0;
+        while c + 16 <= n {
+            let wv = load_si512(wp.add(c));
+            let mut s = _mm512_setzero_ps();
+            for (j, &xv) in xs.iter().enumerate() {
+                let sh = shift + j as u32 * bits;
+                let q = _mm512_and_si512(
+                    _mm512_srl_epi32(wv, _mm_cvtsi32_si128(sh as i32)),
+                    maskv,
+                );
+                s = _mm512_fmadd_ps(
+                    _mm512_set1_ps(xv),
+                    _mm512_cvtepi32_ps(q),
+                    s,
+                );
+            }
+            let av = _mm512_loadu_ps(ap.add(c));
+            _mm512_storeu_ps(ap.add(c), _mm512_add_ps(av, s));
+            c += 16;
+        }
+        while c < n {
+            let word = *wp.add(c);
+            let mut s = 0.0f32;
+            for (j, &xv) in xs.iter().enumerate() {
+                let q = (word >> (shift + j as u32 * bits)) & mask;
+                s += xv * q as f32;
+            }
+            *ap.add(c) += s;
+            c += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn packed_scale_apply_imp(
+        y: &mut [f32],
+        acc: &[f32],
+        scales: &[f32],
+        zeros: &[f32],
+        xsum: f32,
+    ) {
+        let n = y.len().min(acc.len()).min(scales.len()).min(zeros.len());
+        let yp = y.as_mut_ptr();
+        let xv = _mm512_set1_ps(xsum);
+        let mut c = 0;
+        while c + 16 <= n {
+            let a = _mm512_loadu_ps(acc.as_ptr().add(c));
+            let s = _mm512_loadu_ps(scales.as_ptr().add(c));
+            let z = _mm512_loadu_ps(zeros.as_ptr().add(c));
+            let t = _mm512_sub_ps(a, _mm512_mul_ps(z, xv));
+            let yv = _mm512_loadu_ps(yp.add(c));
+            _mm512_storeu_ps(yp.add(c), _mm512_add_ps(yv, _mm512_mul_ps(s, t)));
+            c += 16;
+        }
+        while c < n {
+            *yp.add(c) += scales[c] * (acc[c] - zeros[c] * xsum);
+            c += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn packed_dequant_row_imp(
+        wrow: &mut [f32],
+        words: &[u32],
+        scales: &[f32],
+        zeros: &[f32],
+        field: u32,
+        bits: u32,
+    ) {
+        let n = wrow.len().min(words.len()).min(scales.len()).min(zeros.len());
+        let mask = (1u32 << bits) - 1;
+        let maskv = _mm512_set1_epi32(mask as i32);
+        let count = _mm_cvtsi32_si128(field as i32);
+        let wp = wrow.as_mut_ptr();
+        let mut c = 0;
+        while c + 16 <= n {
+            let words16 = load_si512(words.as_ptr().add(c));
+            let q = _mm512_cvtepi32_ps(_mm512_and_si512(
+                _mm512_srl_epi32(words16, count),
+                maskv,
+            ));
+            let z = _mm512_loadu_ps(zeros.as_ptr().add(c));
+            let s = _mm512_loadu_ps(scales.as_ptr().add(c));
+            _mm512_storeu_ps(wp.add(c), _mm512_mul_ps(_mm512_sub_ps(q, z), s));
+            c += 16;
+        }
+        while c < n {
+            let q = (words[c] >> field) & mask;
+            *wp.add(c) = (q as f32 - zeros[c]) * scales[c];
+            c += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn binary_word_acc_imp(y: &mut [f32], words: &[u32], xs: &[f32]) {
+        let n = y.len().min(words.len());
+        let yp = y.as_mut_ptr();
+        let wp = words.as_ptr();
+        let mut c = 0;
+        while c + 16 <= n {
+            let wv = load_si512(wp.add(c));
+            let mut s = _mm512_setzero_ps();
+            for (j, &xv) in xs.iter().enumerate() {
+                let bitv = _mm512_set1_epi32((1u32 << j) as i32);
+                let hit: __mmask16 =
+                    _mm512_cmpeq_epi32_mask(_mm512_and_si512(wv, bitv), bitv);
+                s = _mm512_mask_add_ps(s, hit, s, _mm512_set1_ps(xv));
+            }
+            let yv = _mm512_loadu_ps(yp.add(c));
+            _mm512_storeu_ps(yp.add(c), _mm512_add_ps(yv, s));
+            c += 16;
+        }
+        while c < n {
+            let word = *wp.add(c);
+            let mut s = 0.0f32;
+            let mut bits = word;
+            for &xv in xs {
+                s += xv * (bits & 1) as f32;
+                bits >>= 1;
+            }
+            *yp.add(c) += s;
+            c += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn binary_scale_apply_imp(y: &mut [f32], scales: &[f32], xsum: f32) {
+        let n = y.len().min(scales.len());
+        let yp = y.as_mut_ptr();
+        let two = _mm512_set1_ps(2.0);
+        let xv = _mm512_set1_ps(xsum);
+        let mut c = 0;
+        while c + 16 <= n {
+            let yv = _mm512_loadu_ps(yp.add(c));
+            let s = _mm512_loadu_ps(scales.as_ptr().add(c));
+            let t = _mm512_sub_ps(_mm512_mul_ps(two, yv), xv);
+            _mm512_storeu_ps(yp.add(c), _mm512_mul_ps(s, t));
+            c += 16;
+        }
+        while c < n {
+            *yp.add(c) = scales[c] * (2.0 * *yp.add(c) - xsum);
+            c += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn vmax_imp(x: &[f32]) -> f32 {
+        let mut m = f32::NEG_INFINITY;
+        let n = x.len();
+        let xp = x.as_ptr();
+        let mut i = 0;
+        if n >= 16 {
+            let mut mv = _mm512_set1_ps(f32::NEG_INFINITY);
+            while i + 16 <= n {
+                mv = _mm512_max_ps(mv, _mm512_loadu_ps(xp.add(i)));
+                i += 16;
+            }
+            let mut lanes = [0.0f32; 16];
+            _mm512_storeu_ps(lanes.as_mut_ptr(), mv);
+            for &l in &lanes {
+                m = m.max(l);
+            }
+        }
+        while i < n {
+            m = m.max(*xp.add(i));
+            i += 1;
+        }
+        m
+    }
+
+    #[target_feature(enable = "avx512f")]
+    unsafe fn vscale_imp(x: &mut [f32], s: f32) {
+        let n = x.len();
+        let xp = x.as_mut_ptr();
+        let sv = _mm512_set1_ps(s);
+        let mut i = 0;
+        while i + 16 <= n {
+            _mm512_storeu_ps(
+                xp.add(i),
+                _mm512_mul_ps(_mm512_loadu_ps(xp.add(i)), sv),
+            );
+            i += 16;
+        }
+        while i < n {
+            *xp.add(i) *= s;
+            i += 1;
+        }
+    }
+}

@@ -10,6 +10,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod eval;
+pub mod kernels;
 pub mod moe;
 pub mod odp;
 pub mod offload;

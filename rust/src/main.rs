@@ -22,6 +22,12 @@
 //! of experts stay in RAM, misses demand-load from the segmented
 //! `.mcqz` v2 file, and `--prefetch` picks how predicted experts are
 //! brought in (default `async`).
+//!
+//! `--kernel-backend <scalar|avx2|avx512|neon>` (any subcommand) pins
+//! the SIMD kernel dispatch table instead of auto-detecting the widest
+//! ISA the CPU supports; the `MC_KERNEL` env var does the same
+//! (DESIGN.md §4). Errors if the requested backend cannot run on this
+//! CPU.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -350,6 +356,10 @@ fn cmd_expert_analysis(dir: &Path, args: &Args) -> Result<()> {
 fn main() -> Result<()> {
     let args = Args::parse_env();
     let dir = artifacts_dir();
+    if let Some(backend) = args.get("kernel-backend") {
+        mc_moe::kernels::force_named(backend)
+            .map_err(|e| anyhow::anyhow!("--kernel-backend: {e}"))?;
+    }
     match args.positional.first().map(|s| s.as_str()) {
         Some("info") => cmd_info(&dir),
         Some("compress") => cmd_compress(&dir, &args),

@@ -20,7 +20,8 @@
 //! a cross-head mean (a reduction), so `want_map` forces the serial
 //! path to keep its accumulation order fixed.
 
-use crate::tensor::{softmax_rows, Mat};
+use crate::kernels::{self, KernelOps};
+use crate::tensor::{softmax_rows_ops, Mat};
 use crate::util::pool::{SendPtr, WorkerPool};
 
 pub const NEG_INF: f32 = -1e30;
@@ -108,6 +109,25 @@ pub fn causal_attention_into(
     scratch: &mut AttnScratch,
     out: &mut Mat,
 ) -> Option<Mat> {
+    causal_attention_into_ops(q, k, v, klen, n_heads, want_map, pool, scratch,
+                              out, kernels::active())
+}
+
+/// [`causal_attention_into`] pinned to an explicit kernel backend
+/// (parity tests cross-check every compiled ISA against scalar).
+#[allow(clippy::too_many_arguments)]
+pub fn causal_attention_into_ops(
+    q: &Mat,
+    k: &Mat,
+    v: &Mat,
+    klen: usize,
+    n_heads: usize,
+    want_map: bool,
+    pool: Option<&WorkerPool>,
+    scratch: &mut AttnScratch,
+    out: &mut Mat,
+    ops: &'static KernelOps,
+) -> Option<Mat> {
     let t = q.rows;
     let d = q.cols;
     assert!(t >= 1 && klen >= t, "bad attention window: T={t} klen={klen}");
@@ -141,7 +161,7 @@ pub fn causal_attention_into(
             let mut kht = Vec::new();
             let mut scores = Mat::zeros(0, 0);
             one_head(q, k, v, klen, pos0, head * hd, hd, scale, &mut kht,
-                     &mut scores, outbase, d);
+                     &mut scores, outbase, d, ops);
         });
         return None;
     }
@@ -149,7 +169,7 @@ pub fn causal_attention_into(
     let mut a_mean = if want_map { Some(Mat::zeros(t, t)) } else { None };
     for head in 0..n_heads {
         one_head(q, k, v, klen, pos0, head * hd, hd, scale,
-                 &mut scratch.kht, &mut scratch.scores, outbase, d);
+                 &mut scratch.kht, &mut scratch.scores, outbase, d, ops);
         if let Some(am) = a_mean.as_mut() {
             for (a, sc) in am.data.iter_mut().zip(&scratch.scores.data) {
                 *a += sc / n_heads as f32;
@@ -162,7 +182,9 @@ pub fn causal_attention_into(
 /// One attention head over columns [c0, c0+hd): transpose K into
 /// `kht` so the score loop vectorizes over key index j (EXPERIMENTS.md
 /// §Perf), softmax, then accumulate scores @ v into the head's column
-/// range of the output (disjoint across heads — pool-safe).
+/// range of the output (disjoint across heads — pool-safe). The score
+/// and AV inner loops dispatch through `ops.axpy`, so one SIMD axpy
+/// serves GEMM, dequant-GEMM and attention alike.
 #[allow(clippy::too_many_arguments)]
 fn one_head(
     q: &Mat,
@@ -177,6 +199,7 @@ fn one_head(
     scores: &mut Mat,
     outbase: SendPtr<f32>,
     d: usize,
+    ops: &'static KernelOps,
 ) {
     let t = q.rows;
     kht.resize(hd * klen, 0.0);
@@ -194,18 +217,14 @@ fn one_head(
         let srow = &mut scores.data[i * klen..(i + 1) * klen];
         for (dd, &qv) in qrow.iter().enumerate() {
             let kr = &kht[dd * klen..dd * klen + limit + 1];
-            for (sv, &kv) in srow[..=limit].iter_mut().zip(kr) {
-                *sv += qv * kv;
-            }
+            (ops.axpy)(&mut srow[..=limit], kr, qv);
         }
-        for sv in srow[..=limit].iter_mut() {
-            *sv *= scale;
-        }
+        (ops.vscale)(&mut srow[..=limit], scale);
         for sv in srow[limit + 1..].iter_mut() {
             *sv = NEG_INF;
         }
     }
-    softmax_rows(scores);
+    softmax_rows_ops(scores, ops);
     // out[:, c0..c0+hd] += scores @ v[:, c0..c0+hd]
     for i in 0..t {
         let limit = pos0 + i;
@@ -219,9 +238,7 @@ fn one_head(
                 continue;
             }
             let vrow = &v.row(j)[c0..c0 + hd];
-            for (o, &vv) in orow.iter_mut().zip(vrow) {
-                *o += a * vv;
-            }
+            (ops.axpy)(orow, vrow, a);
         }
     }
 }

@@ -286,9 +286,11 @@ impl<'a> Reader<'a> {
                     n,
                     group: e.get("group")?.as_usize()?,
                     qweight: self.u32s(e.get("qw_off")?.as_usize()?,
-                                       e.get("qw_len")?.as_usize()?)?,
-                    scales: self.f32s(e.get("sc_off")?.as_usize()?, sc_len)?,
-                    zeros: self.f32s(e.get("zp_off")?.as_usize()?, sc_len)?,
+                                       e.get("qw_len")?.as_usize()?)?.into(),
+                    scales: self.f32s(e.get("sc_off")?.as_usize()?, sc_len)?
+                        .into(),
+                    zeros: self.f32s(e.get("zp_off")?.as_usize()?, sc_len)?
+                        .into(),
                 }))
             }
             "binary" => {
@@ -297,8 +299,8 @@ impl<'a> Reader<'a> {
                     k: e.get("k")?.as_usize()?,
                     n,
                     packed: self.u32s(e.get("pk_off")?.as_usize()?,
-                                      e.get("pk_len")?.as_usize()?)?,
-                    scales: self.f32s(e.get("sc_off")?.as_usize()?, n)?,
+                                      e.get("pk_len")?.as_usize()?)?.into(),
+                    scales: self.f32s(e.get("sc_off")?.as_usize()?, n)?.into(),
                 }))
             }
             other => bail!("unknown tensor kind {other:?}"),

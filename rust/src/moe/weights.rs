@@ -10,12 +10,15 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::tensor::Mat;
+use crate::util::alloc::AVec;
 use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
 pub struct Tensor {
     pub shape: Vec<usize>,
-    pub data: Vec<f32>,
+    /// 64-byte aligned so [`Tensor::into_mat`] moves straight into a
+    /// kernel-ready `Mat` backing buffer without a copy.
+    pub data: AVec<f32>,
 }
 
 impl Tensor {
@@ -37,7 +40,7 @@ impl Tensor {
         if self.shape.len() != 1 {
             bail!("tensor rank {} != 1", self.shape.len());
         }
-        Ok(self.data.clone())
+        Ok(self.data.to_vec())
     }
 
     /// Consume into a 2-D matrix without copying the payload.
@@ -48,20 +51,21 @@ impl Tensor {
         Ok(Mat::from_vec(self.shape[0], self.shape[1], self.data))
     }
 
-    /// Consume into a 1-D vector without copying the payload.
+    /// Consume into a 1-D vector (one copy out of the aligned buffer;
+    /// only the small norm/gain vectors take this path).
     pub fn into_vec1(self) -> Result<Vec<f32>> {
         if self.shape.len() != 1 {
             bail!("tensor rank {} != 1", self.shape.len());
         }
-        Ok(self.data)
+        Ok(self.data.to_vec())
     }
 }
 
 /// Bulk little-endian f32 decode: one memcpy on LE hosts, a per-value
 /// conversion loop only on BE.
-fn f32s_from_le(bytes: &[u8]) -> Vec<f32> {
+fn f32s_from_le(bytes: &[u8]) -> AVec<f32> {
     debug_assert_eq!(bytes.len() % 4, 0);
-    let mut data = vec![0.0f32; bytes.len() / 4];
+    let mut data: AVec<f32> = AVec::zeroed(bytes.len() / 4);
     if cfg!(target_endian = "little") {
         // Safety: f32 and [u8; 4] have identical size; any bit
         // pattern is a valid f32.
@@ -234,11 +238,14 @@ mod tests {
         let mut m = BTreeMap::new();
         m.insert(
             "a".to_string(),
-            Tensor { shape: vec![2, 3], data: vec![1., 2., 3., 4., 5., 6.] },
+            Tensor {
+                shape: vec![2, 3],
+                data: vec![1., 2., 3., 4., 5., 6.].into(),
+            },
         );
         m.insert(
             "b.vec".to_string(),
-            Tensor { shape: vec![4], data: vec![0.5, -0.5, 1.5, -1.5] },
+            Tensor { shape: vec![4], data: vec![0.5, -0.5, 1.5, -1.5].into() },
         );
         m
     }
@@ -274,14 +281,14 @@ mod tests {
 
     #[test]
     fn rank_guards() {
-        let t = Tensor { shape: vec![2, 3], data: vec![0.0; 6] };
+        let t = Tensor { shape: vec![2, 3], data: vec![0.0; 6].into() };
         assert!(t.as_vec1().is_err());
         assert!(t.as_mat().is_ok());
-        let v = Tensor { shape: vec![6], data: vec![0.0; 6] };
+        let v = Tensor { shape: vec![6], data: vec![0.0; 6].into() };
         assert!(v.as_mat().is_err());
-        let t = Tensor { shape: vec![2, 3], data: vec![0.0; 6] };
+        let t = Tensor { shape: vec![2, 3], data: vec![0.0; 6].into() };
         assert!(t.into_vec1().is_err());
-        let v = Tensor { shape: vec![6], data: vec![0.0; 6] };
+        let v = Tensor { shape: vec![6], data: vec![0.0; 6].into() };
         assert!(v.into_mat().is_err());
     }
 

@@ -7,15 +7,17 @@
 //! s = ||W||_1/(d*m) via `scalar_scale = true`.
 
 use crate::tensor::Mat;
+use crate::util::alloc::AVec;
 
 #[derive(Debug, Clone)]
 pub struct BinaryTensor {
     pub k: usize,
     pub n: usize,
     /// [k_words, n] row-major; bit i of word w = row w*32+i
-    pub packed: Vec<u32>,
+    /// (64-byte aligned for the SIMD backends)
+    pub packed: AVec<u32>,
     /// per-column scale [n]
-    pub scales: Vec<f32>,
+    pub scales: AVec<f32>,
 }
 
 impl BinaryTensor {
@@ -74,7 +76,7 @@ pub fn binarize(w: &Mat, scalar_scale: bool) -> BinaryTensor {
             }
         }
     }
-    BinaryTensor { k, n, packed, scales }
+    BinaryTensor { k, n, packed: packed.into(), scales: scales.into() }
 }
 
 /// Binarize a single row given fixed column scales (used inside the

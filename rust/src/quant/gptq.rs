@@ -201,7 +201,7 @@ pub fn gptq_quantize(w: &Mat, hess: &Hessian, bits: usize) -> Result<GptqResult>
     let mut dq = Mat::zeros(k, n); // final dequantized weights
 
     // 1-bit: fixed per-column scales from the original weights
-    let bin_scales: Option<Vec<f32>> = if bits == 1 {
+    let bin_scales = if bits == 1 {
         Some(binarize(w, false).scales)
     } else {
         None
@@ -260,7 +260,7 @@ pub fn gptq_quantize(w: &Mat, hess: &Hessian, bits: usize) -> Result<GptqResult>
         let mut bt = BinaryTensor {
             k,
             n,
-            packed: vec![0u32; k.div_ceil(32) * n],
+            packed: vec![0u32; k.div_ceil(32) * n].into(),
             scales: bin_scales.unwrap(),
         };
         for r in 0..k {
@@ -277,9 +277,9 @@ pub fn gptq_quantize(w: &Mat, hess: &Hessian, bits: usize) -> Result<GptqResult>
             k,
             n,
             group,
-            qweight: pack_levels(&levels, k, n, bits),
-            scales,
-            zeros,
+            qweight: pack_levels(&levels, k, n, bits).into(),
+            scales: scales.into(),
+            zeros: zeros.into(),
         })
     };
     Ok(GptqResult { tensor, recon_err })

@@ -73,7 +73,15 @@ pub fn quantize_groupwise(w: &Mat, bits: usize) -> PackedTensor {
             }
         }
     }
-    PackedTensor { bits, k, n, group, qweight: pack_levels(&q, k, n, bits), scales, zeros }
+    PackedTensor {
+        bits,
+        k,
+        n,
+        group,
+        qweight: pack_levels(&q, k, n, bits).into(),
+        scales: scales.into(),
+        zeros: zeros.into(),
+    }
 }
 
 #[cfg(test)]

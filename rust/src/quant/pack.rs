@@ -7,6 +7,7 @@
 
 use crate::config::vals_per_word;
 use crate::tensor::Mat;
+use crate::util::alloc::AVec;
 
 /// 2/3/4-bit group-wise packed tensor for a logical [K, N] weight.
 #[derive(Debug, Clone)]
@@ -16,12 +17,12 @@ pub struct PackedTensor {
     pub n: usize,
     /// quantization group length along K (min(GROUP_SIZE, K))
     pub group: usize,
-    /// [k_words, n] row-major
-    pub qweight: Vec<u32>,
+    /// [k_words, n] row-major (64-byte aligned for the SIMD backends)
+    pub qweight: AVec<u32>,
     /// [k/GROUP_SIZE, n] row-major
-    pub scales: Vec<f32>,
+    pub scales: AVec<f32>,
     /// [k/GROUP_SIZE, n] row-major (float zero-points)
-    pub zeros: Vec<f32>,
+    pub zeros: AVec<f32>,
 }
 
 impl PackedTensor {
@@ -144,9 +145,9 @@ mod tests {
             k,
             n,
             group: crate::config::GROUP_SIZE,
-            qweight: pack_levels(&q, k, n, bits),
-            scales: vec![1.0; (k / crate::config::GROUP_SIZE) * n],
-            zeros: vec![0.0; (k / crate::config::GROUP_SIZE) * n],
+            qweight: pack_levels(&q, k, n, bits).into(),
+            scales: vec![1.0; (k / crate::config::GROUP_SIZE) * n].into(),
+            zeros: vec![0.0; (k / crate::config::GROUP_SIZE) * n].into(),
         };
         for r in 0..k {
             for c in 0..n {

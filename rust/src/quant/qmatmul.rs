@@ -3,9 +3,8 @@
 //!
 //! Two regimes:
 //!   * **small M (decode)** — fused word-decode kernel: each packed
-//!     u32 is loaded once and all of its `vpw` fields are decoded in a
-//!     statically-unrolled shift/mask chain (const-generic over the
-//!     bit-width), combined with the group-factored form
+//!     u32 is loaded once and all of its `vpw` fields are decoded in
+//!     one shift/mask chain, combined with the group-factored form
 //!       y_n = Σ_g s_gn · (Σ_{k∈g} x_k·q_kn) − s_gn·z_gn·(Σ_{k∈g} x_k)
 //!     so scale/zero are applied once per group, not per element.
 //!   * **large M (prefill)** — decode each weight row once into a
@@ -13,10 +12,16 @@
 //!     shapes split output columns across the `WorkerPool` (strips are
 //!     bit-exact with serial execution).
 //!
+//! The per-column inner loops (word decode, scale/zero application,
+//! row dequant, binary masked-add) live in [`crate::kernels`] and are
+//! dispatched through the runtime-selected ISA table; the `*_ops`
+//! variants take the table explicitly for parity tests and benches.
+//!
 //! The `*_into` variants write into caller-owned buffers through
 //! [`QmScratch`] so the decode loop runs allocation-free.
 
-use crate::tensor::{axpy, Mat};
+use crate::kernels::{self, KernelOps};
+use crate::tensor::Mat;
 use crate::util::pool::{SendPtr, WorkerPool};
 
 use super::binary::BinaryTensor;
@@ -72,42 +77,35 @@ pub fn packed_matmul(x: &Mat, w: &PackedTensor) -> Mat {
     y
 }
 
-/// y = x @ W into a reused buffer (resized + overwritten).
+/// y = x @ W into a reused buffer (resized + overwritten), on the
+/// process-wide kernel backend.
 pub fn packed_matmul_into(x: &Mat, w: &PackedTensor, y: &mut Mat,
                           qs: &mut QmScratch) {
+    packed_matmul_into_ops(x, w, y, qs, kernels::active());
+}
+
+/// [`packed_matmul_into`] on an explicit kernel table.
+pub fn packed_matmul_into_ops(x: &Mat, w: &PackedTensor, y: &mut Mat,
+                              qs: &mut QmScratch, ops: &'static KernelOps) {
     assert_eq!(x.cols, w.k, "inner dim");
     y.resize_to(x.rows, w.n);
     y.data.fill(0.0);
     if x.rows <= 4 {
-        packed_small_m_into(x, w, y, &mut qs.acc);
+        packed_small_m_into(x, w, y, &mut qs.acc, ops);
     } else {
-        packed_large_m_into(x, w, y, qs);
+        packed_large_m_into(x, w, y, qs, ops);
     }
 }
 
+/// Fused decode kernel: every u32 of the weight row is loaded and
+/// decoded exactly once per activation row via `ops.packed_word_acc`
+/// (the pre-fusion kernel re-masked it once per k). Group edges that
+/// fall inside a word (3-bit: 10 fields per word vs group 64) pass a
+/// non-zero in-word shift.
 fn packed_small_m_into(x: &Mat, w: &PackedTensor, y: &mut Mat,
-                       acc: &mut Vec<f32>) {
-    match w.bits {
-        2 => small_m_kernel::<2, 16>(x, w, y, acc),
-        3 => small_m_kernel::<3, 10>(x, w, y, acc),
-        4 => small_m_kernel::<4, 8>(x, w, y, acc),
-        other => panic!("unsupported packed bit-width {other}"),
-    }
-}
-
-/// Fused decode kernel, statically unrolled over the `VPW` fields of
-/// each packed word: every u32 of the weight row is loaded and decoded
-/// exactly once per activation row (the pre-fusion kernel re-masked it
-/// once per k). Group edges that fall inside a word (3-bit: 10 fields
-/// per word vs group 64) take the partial-word path.
-fn small_m_kernel<const BITS: u32, const VPW: usize>(
-    x: &Mat,
-    w: &PackedTensor,
-    y: &mut Mat,
-    acc: &mut Vec<f32>,
-) {
+                       acc: &mut Vec<f32>, ops: &'static KernelOps) {
     let n = w.n;
-    let mask = (1u32 << BITS) - 1;
+    let vpw = crate::config::vals_per_word(w.bits);
     let groups = w.k / w.group;
     acc.resize(n, 0.0);
     for m in 0..x.rows {
@@ -120,51 +118,28 @@ fn small_m_kernel<const BITS: u32, const VPW: usize>(
             let xsum: f32 = xrow[k0..k1].iter().sum();
             let mut k = k0;
             while k < k1 {
-                let wi = k / VPW;
-                let j0 = k % VPW;
-                let jn = (VPW - j0).min(k1 - k);
+                let wi = k / vpw;
+                let j0 = k % vpw;
+                let jn = (vpw - j0).min(k1 - k);
                 let word_row = &w.qweight[wi * n..(wi + 1) * n];
-                let xs = &xrow[k..k + jn];
-                if jn == VPW {
-                    // full word: statically-unrolled decode
-                    let xs: &[f32; VPW] = xs.try_into().unwrap();
-                    for (a, &word) in acc.iter_mut().zip(word_row) {
-                        let mut s = 0.0f32;
-                        let mut bits = word;
-                        for &xv in xs.iter() {
-                            s += xv * (bits & mask) as f32;
-                            bits >>= BITS;
-                        }
-                        *a += s;
-                    }
-                } else {
-                    // group edge inside a word
-                    let shift = j0 as u32 * BITS;
-                    for (a, &word) in acc.iter_mut().zip(word_row) {
-                        let mut s = 0.0f32;
-                        let mut bits = word >> shift;
-                        for &xv in xs {
-                            s += xv * (bits & mask) as f32;
-                            bits >>= BITS;
-                        }
-                        *a += s;
-                    }
-                }
+                (ops.packed_word_acc)(
+                    &mut acc[..],
+                    word_row,
+                    &xrow[k..k + jn],
+                    (j0 * w.bits) as u32,
+                    w.bits as u32,
+                );
                 k += jn;
             }
             let srow = &w.scales[g * n..(g + 1) * n];
             let zrow = &w.zeros[g * n..(g + 1) * n];
-            for (((yv, &a), &s), &z) in
-                yrow.iter_mut().zip(acc.iter()).zip(srow).zip(zrow)
-            {
-                *yv += s * (a - z * xsum);
-            }
+            (ops.packed_scale_apply)(yrow, &acc[..], srow, zrow, xsum);
         }
     }
 }
 
 fn packed_large_m_into(x: &Mat, w: &PackedTensor, y: &mut Mat,
-                       qs: &mut QmScratch) {
+                       qs: &mut QmScratch, ops: &'static KernelOps) {
     let n = w.n;
     let pool = WorkerPool::global();
     let flops = 2 * x.rows * w.k * n;
@@ -181,48 +156,44 @@ fn packed_large_m_into(x: &Mat, w: &PackedTensor, y: &mut Mat,
             // disjoint column range [c0, c1) of y.
             let strip_row = unsafe { &mut *sbase.0.add(t) };
             strip_row.resize(c1 - c0, 0.0);
-            unsafe { packed_large_m_cols(x, w, ybase.0, c0, c1, strip_row) };
+            unsafe {
+                packed_large_m_cols(x, w, ybase.0, c0, c1, strip_row, ops)
+            };
         });
     } else {
         qs.wrow.resize(n, 0.0);
         // Safety: exclusive access to all of y.
         unsafe {
-            packed_large_m_cols(x, w, y.data.as_mut_ptr(), 0, n, &mut qs.wrow)
+            packed_large_m_cols(x, w, y.data.as_mut_ptr(), 0, n,
+                                &mut qs.wrow, ops)
         };
     }
 }
 
 /// Row-decode kernel over output columns [c0, c1): decode weight row r
-/// once into `wrow`, then axpy into every activation row. Caller
-/// guarantees `ybase` points at a [x.rows, w.n] row-major buffer and
-/// concurrent calls use disjoint column ranges.
+/// once into `wrow` (`ops.packed_dequant_row`), then axpy into every
+/// activation row. Caller guarantees `ybase` points at a [x.rows, w.n]
+/// row-major buffer and concurrent calls use disjoint column ranges.
 unsafe fn packed_large_m_cols(x: &Mat, w: &PackedTensor, ybase: *mut f32,
-                              c0: usize, c1: usize, wrow: &mut [f32]) {
+                              c0: usize, c1: usize, wrow: &mut [f32],
+                              ops: &'static KernelOps) {
     let n = w.n;
     let cw = c1 - c0;
     if cw == 0 {
         return;
     }
     let vpw = crate::config::vals_per_word(w.bits);
-    let mask = (1u32 << w.bits) - 1;
     for r in 0..w.k {
         let word_row = &w.qweight[(r / vpw) * n + c0..(r / vpw) * n + c1];
         let field = ((r % vpw) * w.bits) as u32;
         let g = r / w.group;
         let srow = &w.scales[g * n + c0..g * n + c1];
         let zrow = &w.zeros[g * n + c0..g * n + c1];
-        for (((wv, &word), &s), &z) in wrow[..cw]
-            .iter_mut()
-            .zip(word_row)
-            .zip(srow)
-            .zip(zrow)
-        {
-            let q = (word >> field) & mask;
-            *wv = (q as f32 - z) * s;
-        }
+        (ops.packed_dequant_row)(&mut wrow[..cw], word_row, srow, zrow,
+                                 field, w.bits as u32);
         for m in 0..x.rows {
             let yrow = std::slice::from_raw_parts_mut(ybase.add(m * n + c0), cw);
-            axpy(yrow, &wrow[..cw], x.at(m, r));
+            (ops.axpy)(yrow, &wrow[..cw], x.at(m, r));
         }
     }
 }
@@ -236,12 +207,18 @@ pub fn binary_matmul(x: &Mat, w: &BinaryTensor) -> Mat {
 }
 
 /// y = x @ W for a binary tensor, word-unrolled: each packed u32 is
-/// loaded once and its 32 sign bits decoded in a statically-unrolled
-/// chain (the pre-fusion kernel re-read the word once per k).
-/// Masked-add form: acc_n = Σ_{bit=1} x_k, then y_n = s_n·(2·acc_n −
-/// Σx) — one fma per element (paper Eq. 10; kernels/binary_matmul.py).
+/// loaded once and its 32 sign bits decoded in one masked-add chain
+/// (`ops.binary_word_acc`): acc_n = Σ_{bit=1} x_k, then y_n =
+/// s_n·(2·acc_n − Σx) — one fma per element (paper Eq. 10;
+/// kernels/binary_matmul.py). Runs on the process-wide backend.
 pub fn binary_matmul_into(x: &Mat, w: &BinaryTensor, y: &mut Mat,
                           qs: &mut QmScratch) {
+    binary_matmul_into_ops(x, w, y, qs, kernels::active());
+}
+
+/// [`binary_matmul_into`] on an explicit kernel table.
+pub fn binary_matmul_into_ops(x: &Mat, w: &BinaryTensor, y: &mut Mat,
+                              qs: &mut QmScratch, ops: &'static KernelOps) {
     assert_eq!(x.cols, w.k, "inner dim");
     let n = w.n;
     y.resize_to(x.rows, n);
@@ -258,36 +235,13 @@ pub fn binary_matmul_into(x: &Mat, w: &BinaryTensor, y: &mut Mat,
         for m in 0..x.rows {
             let xs = &x.row(m)[k0..k0 + kn];
             let yrow = &mut y.data[m * n..(m + 1) * n];
-            if kn == 32 {
-                let xs: &[f32; 32] = xs.try_into().unwrap();
-                for (yv, &word) in yrow.iter_mut().zip(word_row) {
-                    let mut s = 0.0f32;
-                    let mut bits = word;
-                    for &xv in xs.iter() {
-                        s += xv * (bits & 1) as f32;
-                        bits >>= 1;
-                    }
-                    *yv += s;
-                }
-            } else {
-                for (yv, &word) in yrow.iter_mut().zip(word_row) {
-                    let mut s = 0.0f32;
-                    let mut bits = word;
-                    for &xv in xs {
-                        s += xv * (bits & 1) as f32;
-                        bits >>= 1;
-                    }
-                    *yv += s;
-                }
-            }
+            (ops.binary_word_acc)(yrow, word_row, xs);
         }
     }
     for m in 0..x.rows {
         let xs = qs.xsums[m];
         let yrow = &mut y.data[m * n..(m + 1) * n];
-        for (yv, &s) in yrow.iter_mut().zip(w.scales.iter()) {
-            *yv = s * (2.0 * *yv - xs);
-        }
+        (ops.binary_scale_apply)(yrow, &w.scales[..], xs);
     }
 }
 
@@ -373,6 +327,7 @@ mod perf_path_tests {
     #[test]
     fn small_and_large_m_paths_agree() {
         let mut rng = Rng::new(7);
+        let ops = kernels::active();
         for &bits in &[2usize, 3, 4] {
             let w = Mat::randn(&mut rng, 128, 48, 1.0);
             let t = quantize_groupwise(&w, bits);
@@ -380,9 +335,9 @@ mod perf_path_tests {
                 let x = Mat::randn(&mut rng, m, 128, 1.0);
                 let mut small = Mat::zeros(0, 0);
                 let mut qs = QmScratch::new();
-                packed_small_m_into_for_test(&x, &t, &mut small, &mut qs);
+                packed_small_m_into_for_test(&x, &t, &mut small, &mut qs, ops);
                 let mut large = Mat::zeros(x.rows, t.n);
-                packed_large_m_into(&x, &t, &mut large, &mut qs);
+                packed_large_m_into(&x, &t, &mut large, &mut qs, ops);
                 for (a, b) in small.data.iter().zip(&large.data) {
                     assert!((a - b).abs() < 1e-3 * (1.0 + b.abs()),
                             "bits={bits} m={m}: {a} vs {b}");
@@ -392,9 +347,10 @@ mod perf_path_tests {
     }
 
     fn packed_small_m_into_for_test(x: &Mat, w: &PackedTensor, y: &mut Mat,
-                                    qs: &mut QmScratch) {
+                                    qs: &mut QmScratch,
+                                    ops: &'static KernelOps) {
         y.resize_to(x.rows, w.n);
         y.data.fill(0.0);
-        packed_small_m_into(x, w, y, &mut qs.acc);
+        packed_small_m_into(x, w, y, &mut qs.acc, ops);
     }
 }

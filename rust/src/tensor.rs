@@ -4,19 +4,26 @@
 //! processed in blocks of 4 so each `w` panel row is loaded once per
 //! block instead of once per row, and the K loop is unrolled by 4 so
 //! the inner axpy carries 4 independent FMA streams (EXPERIMENTS.md
-//! §Perf). Large GEMMs additionally split their output columns into
-//! strips across the persistent `WorkerPool` — column partitioning
-//! never changes any element's accumulation order, so pooled and
-//! serial results are bit-identical. The pre-tiling scalar "ikj"
-//! kernel is kept as [`matmul_into_naive`]: it is the parity reference
-//! for the kernel test suite and the baseline `benches/hotpath.rs`
-//! measures the tiled kernel against.
+//! §Perf). The axpy primitives themselves are dispatched through the
+//! runtime-selected [`crate::kernels`] backend (scalar/AVX2/AVX-512/
+//! NEON); `*_ops` variants take the table explicitly so tests and
+//! benches can pin a backend. Large GEMMs additionally split their
+//! output columns into strips across the persistent `WorkerPool` —
+//! column partitioning never changes any element's accumulation order,
+//! so pooled and serial results are bit-identical on any one backend.
+//! The pre-tiling scalar "ikj" kernel is kept as [`matmul_into_naive`]:
+//! it is the parity reference for the kernel test suite and the
+//! baseline `benches/hotpath.rs` measures the tiled kernel against.
 //!
-//! The `*_into` variants write into caller-owned buffers so the decode
-//! hot path runs allocation-free (DESIGN.md §4 scratch rules).
+//! Backing storage is [`AVec`], 64-byte aligned so SIMD row loads
+//! never split cache lines. The `*_into` variants write into
+//! caller-owned buffers so the decode hot path runs allocation-free
+//! (DESIGN.md §4 scratch rules).
 
 use std::fmt;
 
+use crate::kernels::{self, KernelOps};
+use crate::util::alloc::{AVec, BUF_ALIGN};
 use crate::util::pool::{SendPtr, WorkerPool};
 use crate::util::rng::Rng;
 
@@ -24,7 +31,7 @@ use crate::util::rng::Rng;
 pub struct Mat {
     pub rows: usize,
     pub cols: usize,
-    pub data: Vec<f32>,
+    pub data: AVec<f32>,
 }
 
 impl fmt::Debug for Mat {
@@ -35,10 +42,15 @@ impl fmt::Debug for Mat {
 
 impl Mat {
     pub fn zeros(rows: usize, cols: usize) -> Mat {
-        Mat { rows, cols, data: vec![0.0; rows * cols] }
+        Mat { rows, cols, data: AVec::zeroed(rows * cols) }
     }
 
-    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+    pub fn from_vec(
+        rows: usize,
+        cols: usize,
+        data: impl Into<AVec<f32>>,
+    ) -> Mat {
+        let data = data.into();
         assert_eq!(rows * cols, data.len());
         Mat { rows, cols, data }
     }
@@ -64,7 +76,8 @@ impl Mat {
 
     #[inline]
     pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
-        &mut self.data[r * self.cols..(r + 1) * self.cols]
+        let cols = self.cols;
+        &mut self.data[r * cols..(r + 1) * cols]
     }
 
     #[inline]
@@ -74,7 +87,8 @@ impl Mat {
 
     #[inline]
     pub fn set(&mut self, r: usize, c: usize, v: f32) {
-        self.data[r * self.cols + c] = v;
+        let cols = self.cols;
+        self.data[r * cols + c] = v;
     }
 
     /// y = self @ w  (self: [M,K], w: [K,N])
@@ -114,7 +128,7 @@ impl Mat {
         Mat {
             rows: end - start,
             cols: self.cols,
-            data: self.data[start * self.cols..end * self.cols].to_vec(),
+            data: AVec::from(&self.data[start * self.cols..end * self.cols]),
         }
     }
 }
@@ -141,12 +155,28 @@ pub fn matmul_into(x: &Mat, w: &Mat, y: &mut Mat) {
     matmul_into_with(x, w, y, p);
 }
 
-/// y += x @ w with an explicit pool choice (None = serial). Pooled and
-/// serial execution are bit-identical: strips partition output
-/// columns, and each element's K-accumulation order is unchanged.
+/// y += x @ w with an explicit pool choice (None = serial), on the
+/// process-wide kernel backend.
 pub fn matmul_into_with(x: &Mat, w: &Mat, y: &mut Mat, pool: Option<&WorkerPool>) {
+    matmul_into_ops(x, w, y, pool, kernels::active());
+}
+
+/// y += x @ w on an explicit kernel table. Pooled and serial
+/// execution are bit-identical on any one backend: strips partition
+/// output columns, and each element's K-accumulation order is
+/// unchanged.
+pub fn matmul_into_ops(
+    x: &Mat,
+    w: &Mat,
+    y: &mut Mat,
+    pool: Option<&WorkerPool>,
+    ops: &'static KernelOps,
+) {
     assert_eq!(x.cols, w.rows, "matmul inner dim");
     assert_eq!((y.rows, y.cols), (x.rows, w.cols), "matmul out dims");
+    debug_assert_eq!(x.data.as_ptr() as usize % BUF_ALIGN, 0);
+    debug_assert_eq!(w.data.as_ptr() as usize % BUF_ALIGN, 0);
+    debug_assert_eq!(y.data.as_ptr() as usize % BUF_ALIGN, 0);
     let n = w.cols;
     if let Some(p) = pool {
         let tasks = p.width().min(n / GEMM_MIN_STRIP);
@@ -155,13 +185,13 @@ pub fn matmul_into_with(x: &Mat, w: &Mat, y: &mut Mat, pool: Option<&WorkerPool>
             p.for_each(tasks, move |t| {
                 let (c0, c1) = WorkerPool::strip(n, tasks, t);
                 // Safety: strips are disjoint column ranges of y.
-                unsafe { matmul_cols(x, w, ybase.0, c0, c1) };
+                unsafe { matmul_cols(x, w, ybase.0, c0, c1, ops) };
             });
             return;
         }
     }
     // Safety: exclusive access to all of y.
-    unsafe { matmul_cols(x, w, y.data.as_mut_ptr(), 0, n) };
+    unsafe { matmul_cols(x, w, y.data.as_mut_ptr(), 0, n, ops) };
 }
 
 /// Tiled kernel over output columns [c0, c1): 4-row output blocks
@@ -169,7 +199,14 @@ pub fn matmul_into_with(x: &Mat, w: &Mat, y: &mut Mat, pool: Option<&WorkerPool>
 /// (dense path). Caller guarantees `ybase` points at a row-major
 /// [x.rows, w.cols] buffer and concurrent calls use disjoint column
 /// ranges.
-unsafe fn matmul_cols(x: &Mat, w: &Mat, ybase: *mut f32, c0: usize, c1: usize) {
+unsafe fn matmul_cols(
+    x: &Mat,
+    w: &Mat,
+    ybase: *mut f32,
+    c0: usize,
+    c1: usize,
+    ops: &'static KernelOps,
+) {
     let n = w.cols;
     let kk = x.cols;
     let cw = c1 - c0;
@@ -190,18 +227,22 @@ unsafe fn matmul_cols(x: &Mat, w: &Mat, ybase: *mut f32, c0: usize, c1: usize) {
             let w1 = &w.row(k + 1)[c0..c1];
             let w2 = &w.row(k + 2)[c0..c1];
             let w3 = &w.row(k + 3)[c0..c1];
-            axpy4(y0, w0, w1, w2, w3, x0[k], x0[k + 1], x0[k + 2], x0[k + 3]);
-            axpy4(y1, w0, w1, w2, w3, x1[k], x1[k + 1], x1[k + 2], x1[k + 3]);
-            axpy4(y2, w0, w1, w2, w3, x2[k], x2[k + 1], x2[k + 2], x2[k + 3]);
-            axpy4(y3, w0, w1, w2, w3, x3[k], x3[k + 1], x3[k + 2], x3[k + 3]);
+            (ops.axpy4)(y0, w0, w1, w2, w3,
+                        [x0[k], x0[k + 1], x0[k + 2], x0[k + 3]]);
+            (ops.axpy4)(y1, w0, w1, w2, w3,
+                        [x1[k], x1[k + 1], x1[k + 2], x1[k + 3]]);
+            (ops.axpy4)(y2, w0, w1, w2, w3,
+                        [x2[k], x2[k + 1], x2[k + 2], x2[k + 3]]);
+            (ops.axpy4)(y3, w0, w1, w2, w3,
+                        [x3[k], x3[k + 1], x3[k + 2], x3[k + 3]]);
             k += 4;
         }
         while k < kk {
             let wr = &w.row(k)[c0..c1];
-            axpy(y0, wr, x0[k]);
-            axpy(y1, wr, x1[k]);
-            axpy(y2, wr, x2[k]);
-            axpy(y3, wr, x3[k]);
+            (ops.axpy)(y0, wr, x0[k]);
+            (ops.axpy)(y1, wr, x1[k]);
+            (ops.axpy)(y2, wr, x2[k]);
+            (ops.axpy)(y3, wr, x3[k]);
             k += 1;
         }
         i += 4;
@@ -211,51 +252,29 @@ unsafe fn matmul_cols(x: &Mat, w: &Mat, ybase: *mut f32, c0: usize, c1: usize) {
         let x0 = x.row(i);
         let mut k = 0;
         while k + 4 <= kk {
-            axpy4(
+            (ops.axpy4)(
                 y0,
                 &w.row(k)[c0..c1],
                 &w.row(k + 1)[c0..c1],
                 &w.row(k + 2)[c0..c1],
                 &w.row(k + 3)[c0..c1],
-                x0[k],
-                x0[k + 1],
-                x0[k + 2],
-                x0[k + 3],
+                [x0[k], x0[k + 1], x0[k + 2], x0[k + 3]],
             );
             k += 4;
         }
         while k < kk {
-            axpy(y0, &w.row(k)[c0..c1], x0[k]);
+            (ops.axpy)(y0, &w.row(k)[c0..c1], x0[k]);
             k += 1;
         }
         i += 1;
     }
 }
 
-#[inline(always)]
-fn axpy4(
-    y: &mut [f32],
-    w0: &[f32],
-    w1: &[f32],
-    w2: &[f32],
-    w3: &[f32],
-    a0: f32,
-    a1: f32,
-    a2: f32,
-    a3: f32,
-) {
-    for ((((yv, &b0), &b1), &b2), &b3) in
-        y.iter_mut().zip(w0).zip(w1).zip(w2).zip(w3)
-    {
-        *yv += a0 * b0 + a1 * b1 + a2 * b2 + a3 * b3;
-    }
-}
-
-#[inline(always)]
+/// Scatter/accumulate primitive on the active backend (used by
+/// `moe::exec::dispatch` for the weighted expert merge).
+#[inline]
 pub(crate) fn axpy(y: &mut [f32], w: &[f32], a: f32) {
-    for (yv, &wv) in y.iter_mut().zip(w) {
-        *yv += a * wv;
-    }
+    (kernels::active().axpy)(y, w, a)
 }
 
 /// The pre-tiling scalar "ikj" kernel (with its sparse-activation
@@ -291,26 +310,34 @@ pub fn matmul_reset_into(x: &Mat, w: &Mat, y: &mut Mat) {
 /// y[n] = x[k] @ w[k, n] for a single activation row (the decode
 /// logits path: only the last position's logits are needed).
 pub fn vecmat_into(x: &[f32], w: &Mat, y: &mut Vec<f32>) {
+    vecmat_into_ops(x, w, y, kernels::active());
+}
+
+/// [`vecmat_into`] on an explicit kernel table.
+pub fn vecmat_into_ops(
+    x: &[f32],
+    w: &Mat,
+    y: &mut Vec<f32>,
+    ops: &'static KernelOps,
+) {
     assert_eq!(x.len(), w.rows, "vecmat inner dim");
     y.clear();
     y.resize(w.cols, 0.0);
+    let yrow = y.as_mut_slice();
     let mut k = 0;
     while k + 4 <= x.len() {
-        axpy4(
-            y,
+        (ops.axpy4)(
+            yrow,
             w.row(k),
             w.row(k + 1),
             w.row(k + 2),
             w.row(k + 3),
-            x[k],
-            x[k + 1],
-            x[k + 2],
-            x[k + 3],
+            [x[k], x[k + 1], x[k + 2], x[k + 3]],
         );
         k += 4;
     }
     while k < x.len() {
-        axpy(y, w.row(k), x[k]);
+        (ops.axpy)(yrow, w.row(k), x[k]);
         k += 1;
     }
 }
@@ -347,18 +374,22 @@ pub fn rmsnorm_into(x: &Mat, weight: &[f32], eps: f32, y: &mut Mat) {
 
 /// Numerically-stable in-place softmax over each row.
 pub fn softmax_rows(x: &mut Mat) {
+    softmax_rows_ops(x, kernels::active());
+}
+
+/// [`softmax_rows`] on an explicit kernel table. The max and the
+/// final normalization run in SIMD lanes; both are exact operations,
+/// so softmax is bit-identical across backends.
+pub fn softmax_rows_ops(x: &mut Mat, ops: &'static KernelOps) {
     for r in 0..x.rows {
         let row = x.row_mut(r);
-        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let m = (ops.vmax)(row);
         let mut sum = 0.0;
         for v in row.iter_mut() {
             *v = (*v - m).exp();
             sum += *v;
         }
-        let inv = 1.0 / sum;
-        for v in row.iter_mut() {
-            *v *= inv;
-        }
+        (ops.vscale)(row, 1.0 / sum);
     }
 }
 
@@ -407,6 +438,17 @@ mod tests {
         for (x, y) in a.data.iter().zip(&y.data) {
             assert!((x - y).abs() < 1e-6);
         }
+    }
+
+    #[test]
+    fn mat_backing_is_64_byte_aligned() {
+        for m in [Mat::zeros(3, 5), Mat::from_vec(1, 3, vec![1., 2., 3.])] {
+            assert_eq!(m.data.as_ptr() as usize % BUF_ALIGN, 0);
+        }
+        let mut rng = Rng::new(3);
+        let m = Mat::randn(&mut rng, 9, 17, 1.0);
+        assert_eq!(m.data.as_ptr() as usize % BUF_ALIGN, 0);
+        assert_eq!(m.slice_rows(2, 5).data.as_ptr() as usize % BUF_ALIGN, 0);
     }
 
     #[test]

@@ -1,0 +1,360 @@
+//! 64-byte-aligned backing buffers for kernel-facing tensors.
+//!
+//! `Vec<f32>` only guarantees 4-byte alignment, so SIMD loads in the
+//! `kernels::` backends could straddle cache lines (and an `_mm512`
+//! lane group could straddle two). [`AVec`] is a minimal Vec-alike
+//! whose allocation is always 64-byte aligned (one x86 cache line /
+//! one AVX-512 register), used as the storage of `Mat`,
+//! `PackedTensor`, `BinaryTensor`, and the weight-file `Tensor`.
+//!
+//! Restricted to `T: Copy` (f32/u32 here), which keeps drop handling
+//! trivial: no element destructors, deallocate the block and done.
+//! Everything slice-shaped is inherited through `Deref<Target = [T]>`;
+//! only the Vec-specific growth API (`resize`, `reserve`, `push`,
+//! `extend_from_slice`) is re-implemented, with the same amortized
+//! doubling so the scratch-arena contract (shrink + regrow within
+//! capacity never reallocates) carries over unchanged.
+
+use std::alloc::{alloc, alloc_zeroed, dealloc, handle_alloc_error, Layout};
+use std::fmt;
+use std::marker::PhantomData;
+use std::ops::{Deref, DerefMut};
+use std::ptr::NonNull;
+
+/// Allocation alignment: one cache line == one AVX-512 register.
+pub const BUF_ALIGN: usize = 64;
+
+pub struct AVec<T: Copy> {
+    ptr: NonNull<T>,
+    len: usize,
+    cap: usize,
+    _marker: PhantomData<T>,
+}
+
+// Safety: AVec owns its buffer exclusively, like Vec<T>.
+unsafe impl<T: Copy + Send> Send for AVec<T> {}
+unsafe impl<T: Copy + Sync> Sync for AVec<T> {}
+
+impl<T: Copy> AVec<T> {
+    fn layout(cap: usize) -> Layout {
+        Layout::from_size_align(cap * std::mem::size_of::<T>(), BUF_ALIGN)
+            .expect("AVec layout overflow")
+    }
+
+    pub fn new() -> AVec<T> {
+        AVec {
+            ptr: NonNull::dangling(),
+            len: 0,
+            cap: 0,
+            _marker: PhantomData,
+        }
+    }
+
+    pub fn with_capacity(cap: usize) -> AVec<T> {
+        let mut v = AVec::new();
+        if cap > 0 {
+            v.ptr = Self::raw_alloc(cap, false);
+            v.cap = cap;
+        }
+        v
+    }
+
+    /// `len` zero-initialized elements (valid for f32/u32: all-zero
+    /// bits are 0.0 / 0).
+    pub fn zeroed(len: usize) -> AVec<T> {
+        let mut v = AVec::new();
+        if len > 0 {
+            v.ptr = Self::raw_alloc(len, true);
+            v.cap = len;
+            v.len = len;
+        }
+        v
+    }
+
+    /// `len` copies of `value`.
+    pub fn from_elem(value: T, len: usize) -> AVec<T> {
+        let mut v = AVec::with_capacity(len);
+        for i in 0..len {
+            // Safety: i < cap, freshly allocated.
+            unsafe { v.ptr.as_ptr().add(i).write(value) };
+        }
+        v.len = len;
+        v
+    }
+
+    fn raw_alloc(cap: usize, zero: bool) -> NonNull<T> {
+        let layout = Self::layout(cap);
+        // Safety: cap > 0 at every call site, so layout.size() > 0.
+        let p = unsafe {
+            if zero {
+                alloc_zeroed(layout)
+            } else {
+                alloc(layout)
+            }
+        };
+        let Some(nn) = NonNull::new(p.cast::<T>()) else {
+            handle_alloc_error(layout);
+        };
+        debug_assert_eq!(
+            nn.as_ptr() as usize % BUF_ALIGN,
+            0,
+            "AVec allocation must be {BUF_ALIGN}-byte aligned"
+        );
+        nn
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+
+    /// Grow capacity to at least `need` (amortized doubling).
+    fn grow_to(&mut self, need: usize) {
+        if need <= self.cap {
+            return;
+        }
+        let new_cap = need.max(self.cap * 2).max(4);
+        let new_ptr = Self::raw_alloc(new_cap, false);
+        if self.cap > 0 {
+            // Safety: both buffers hold at least self.len elements and
+            // cannot overlap (new_ptr is a fresh allocation).
+            unsafe {
+                std::ptr::copy_nonoverlapping(
+                    self.ptr.as_ptr(),
+                    new_ptr.as_ptr(),
+                    self.len,
+                );
+                dealloc(self.ptr.as_ptr().cast::<u8>(), Self::layout(self.cap));
+            }
+        }
+        self.ptr = new_ptr;
+        self.cap = new_cap;
+    }
+
+    pub fn reserve(&mut self, additional: usize) {
+        self.grow_to(self.len + additional);
+    }
+
+    pub fn clear(&mut self) {
+        self.len = 0;
+    }
+
+    pub fn resize(&mut self, new_len: usize, value: T) {
+        if new_len > self.cap {
+            self.grow_to(new_len);
+        }
+        if new_len > self.len {
+            for i in self.len..new_len {
+                // Safety: i < cap after grow_to.
+                unsafe { self.ptr.as_ptr().add(i).write(value) };
+            }
+        }
+        self.len = new_len;
+    }
+
+    pub fn push(&mut self, value: T) {
+        if self.len == self.cap {
+            self.grow_to(self.len + 1);
+        }
+        // Safety: len < cap after grow_to.
+        unsafe { self.ptr.as_ptr().add(self.len).write(value) };
+        self.len += 1;
+    }
+
+    pub fn extend_from_slice(&mut self, other: &[T]) {
+        self.grow_to(self.len + other.len());
+        // Safety: capacity reserved above; slices cannot overlap the
+        // spare tail of a uniquely-owned buffer.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                other.as_ptr(),
+                self.ptr.as_ptr().add(self.len),
+                other.len(),
+            );
+        }
+        self.len += other.len();
+    }
+}
+
+impl<T: Copy> Drop for AVec<T> {
+    fn drop(&mut self) {
+        if self.cap > 0 {
+            // Safety: allocated in raw_alloc with the identical layout.
+            unsafe {
+                dealloc(self.ptr.as_ptr().cast::<u8>(), Self::layout(self.cap));
+            }
+        }
+    }
+}
+
+impl<T: Copy> Deref for AVec<T> {
+    type Target = [T];
+
+    fn deref(&self) -> &[T] {
+        // Safety: first `len` elements are initialized; for len == 0
+        // the dangling pointer is non-null and T-aligned.
+        unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl<T: Copy> DerefMut for AVec<T> {
+    fn deref_mut(&mut self) -> &mut [T] {
+        // Safety: as Deref, plus exclusive access through &mut self.
+        unsafe { std::slice::from_raw_parts_mut(self.ptr.as_ptr(), self.len) }
+    }
+}
+
+impl<T: Copy> Default for AVec<T> {
+    fn default() -> AVec<T> {
+        AVec::new()
+    }
+}
+
+impl<T: Copy> Clone for AVec<T> {
+    fn clone(&self) -> AVec<T> {
+        AVec::from(&self[..])
+    }
+}
+
+impl<T: Copy + fmt::Debug> fmt::Debug for AVec<T> {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(&**self, f)
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq for AVec<T> {
+    fn eq(&self, other: &AVec<T>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq<Vec<T>> for AVec<T> {
+    fn eq(&self, other: &Vec<T>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl<T: Copy + PartialEq> PartialEq<AVec<T>> for Vec<T> {
+    fn eq(&self, other: &AVec<T>) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl<T: Copy> From<&[T]> for AVec<T> {
+    fn from(s: &[T]) -> AVec<T> {
+        let mut v = AVec::with_capacity(s.len());
+        v.extend_from_slice(s);
+        v
+    }
+}
+
+impl<T: Copy> From<Vec<T>> for AVec<T> {
+    fn from(s: Vec<T>) -> AVec<T> {
+        AVec::from(&s[..])
+    }
+}
+
+impl<T: Copy> FromIterator<T> for AVec<T> {
+    fn from_iter<I: IntoIterator<Item = T>>(iter: I) -> AVec<T> {
+        let it = iter.into_iter();
+        let mut v = AVec::with_capacity(it.size_hint().0);
+        for x in it {
+            v.push(x);
+        }
+        v
+    }
+}
+
+impl<'a, T: Copy> IntoIterator for &'a AVec<T> {
+    type Item = &'a T;
+    type IntoIter = std::slice::Iter<'a, T>;
+
+    fn into_iter(self) -> std::slice::Iter<'a, T> {
+        self.iter()
+    }
+}
+
+impl<'a, T: Copy> IntoIterator for &'a mut AVec<T> {
+    type Item = &'a mut T;
+    type IntoIter = std::slice::IterMut<'a, T>;
+
+    fn into_iter(self) -> std::slice::IterMut<'a, T> {
+        self.iter_mut()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alignment_is_64_bytes() {
+        for len in [1usize, 7, 64, 1000] {
+            let v: AVec<f32> = AVec::zeroed(len);
+            assert_eq!(v.as_ptr() as usize % BUF_ALIGN, 0, "len={len}");
+            assert!(v.iter().all(|&x| x == 0.0));
+        }
+        let v: AVec<u32> = AVec::from(vec![1u32, 2, 3]);
+        assert_eq!(v.as_ptr() as usize % BUF_ALIGN, 0);
+    }
+
+    #[test]
+    fn vec_roundtrip_and_eq() {
+        let v: AVec<f32> = vec![1.0f32, 2.0, 3.0].into();
+        assert_eq!(v.len(), 3);
+        assert_eq!(v, vec![1.0, 2.0, 3.0]);
+        assert_eq!(v[1], 2.0);
+        assert_eq!(&v[1..], &[2.0, 3.0]);
+        let w = v.clone();
+        assert_eq!(v, w);
+        assert_ne!(v.as_ptr(), w.as_ptr());
+    }
+
+    #[test]
+    fn shrink_and_regrow_within_capacity_is_stable() {
+        let mut v: AVec<f32> = AVec::zeroed(64);
+        let p = v.as_ptr();
+        v.resize(6, 0.0);
+        assert_eq!(v.len(), 6);
+        v.resize(64, 1.0);
+        assert_eq!(v.as_ptr(), p, "regrow within capacity must not realloc");
+        assert_eq!(v[5], 0.0);
+        assert_eq!(v[6], 1.0);
+    }
+
+    #[test]
+    fn growth_preserves_contents_and_alignment() {
+        let mut v: AVec<u32> = AVec::new();
+        for i in 0..100u32 {
+            v.push(i);
+        }
+        assert_eq!(v.as_ptr() as usize % BUF_ALIGN, 0);
+        assert!(v.iter().enumerate().all(|(i, &x)| x == i as u32));
+        v.extend_from_slice(&[100, 101]);
+        assert_eq!(v.len(), 102);
+        assert_eq!(v[101], 101);
+    }
+
+    #[test]
+    fn collect_and_iterate() {
+        let v: AVec<f32> = (0..5).map(|i| i as f32).collect();
+        let sum: f32 = v.iter().sum();
+        assert_eq!(sum, 10.0);
+        let mut v = v;
+        for x in &mut v {
+            *x *= 2.0;
+        }
+        assert_eq!(v, vec![0.0, 2.0, 4.0, 6.0, 8.0]);
+    }
+
+    #[test]
+    fn reserve_then_fill_is_pointer_stable() {
+        let mut v: AVec<f32> = AVec::new();
+        v.reserve(128);
+        let p = v.as_ptr();
+        for _ in 0..128 {
+            v.push(0.5);
+        }
+        assert_eq!(v.as_ptr(), p);
+        assert_eq!(v.capacity(), 128);
+    }
+}

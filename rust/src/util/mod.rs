@@ -5,6 +5,7 @@
 //! clap, criterion, rayon) are re-implemented here at the scale this
 //! project needs. Each submodule is unit-tested in place.
 
+pub mod alloc;
 pub mod cli;
 pub mod json;
 pub mod pool;

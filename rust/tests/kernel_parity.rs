@@ -10,17 +10,30 @@
 //!   * pool-vs-serial **bit-exactness** for GEMM column strips,
 //!     attention head fan-out, and expert dispatch (the pool
 //!     partitions disjoint writes, so results must be identical to
-//!     the last bit, not just within tolerance).
+//!     the last bit, not just within tolerance);
+//!   * every compiled SIMD backend (`kernels::available()`) vs the
+//!     scalar reference, through the `*_ops` entry points, at ragged
+//!     shapes and every packed bit-width. Tolerances are per stage
+//!     (DESIGN.md §4): FMA accumulation stages (GEMM, packed
+//!     word-acc, attention scores) carry a ~1e-4 relative bound;
+//!     scale/zero application, dequant rows, binary masked-adds and
+//!     softmax replicate the scalar operation sequence exactly, so
+//!     those paths are asserted (effectively) bit-exact.
 
-use mc_moe::moe::exec::attention::{causal_attention_into, AttnScratch};
+use mc_moe::kernels;
+use mc_moe::moe::exec::attention::{
+    causal_attention_into, causal_attention_into_ops, AttnScratch,
+};
 use mc_moe::moe::exec::dispatch::{
     dispatch_experts, scatter, DispatchMode, ExpertsRef,
 };
 use mc_moe::moe::model::Expert;
 use mc_moe::quant::linear::quantize_groupwise;
+use mc_moe::quant::qmatmul::QmScratch;
 use mc_moe::quant::{binary::binarize, qmatmul, QTensor};
 use mc_moe::tensor::{
-    matmul_into_naive, matmul_into_with, Mat,
+    matmul_into_naive, matmul_into_ops, matmul_into_with, softmax_rows_ops,
+    Mat,
 };
 use mc_moe::util::pool::WorkerPool;
 use mc_moe::util::rng::Rng;
@@ -228,4 +241,163 @@ fn quantized_expert_dispatch_pool_parity() {
     );
     assert_eq!(y_serial.data, y_pool.data,
                "quantized dispatch must be bit-exact under the pool");
+}
+
+// ---- cross-ISA backend parity (kernels::available() vs scalar) ----
+
+/// Non-scalar tables compiled for this target AND runnable on this
+/// CPU. Empty on a machine with no SIMD — every test below then
+/// degenerates to a no-op rather than a false pass/fail.
+fn simd_backends() -> Vec<&'static kernels::KernelOps> {
+    kernels::available()
+        .into_iter()
+        .filter(|o| o.isa != kernels::Isa::Scalar)
+        .collect()
+}
+
+#[test]
+fn every_backend_matches_scalar_gemm() {
+    let mut rng = Rng::new(10);
+    let scalar = kernels::table_for(kernels::Isa::Scalar).unwrap();
+    // ragged shapes: every lane-remainder class for 8- and 16-wide
+    // ISAs (n mod 16 ∈ {1, 5, 7, 8, 15}), plus odd-K tails via k=13/33
+    for &(m, k, n) in &[
+        (1usize, 13usize, 1usize),
+        (2, 33, 5),
+        (3, 64, 23),
+        (5, 30, 40),
+        (8, 127, 65),
+        (13, 66, 79),
+    ] {
+        let x = Mat::randn(&mut rng, m, k, 1.0);
+        let w = Mat::randn(&mut rng, k, n, 1.0);
+        let mut reference = Mat::zeros(m, n);
+        matmul_into_ops(&x, &w, &mut reference, None, scalar);
+        for ops in simd_backends() {
+            let mut got = Mat::zeros(m, n);
+            matmul_into_ops(&x, &w, &mut got, None, ops);
+            // FMA accumulation stage: documented ~1e-4 relative bound
+            assert_close(&got, &reference, 1e-4,
+                         &format!("{} gemm {m}x{k}x{n}", ops.isa.name()));
+        }
+    }
+}
+
+#[test]
+fn every_backend_matches_scalar_packed_all_bit_widths() {
+    let mut rng = Rng::new(11);
+    let scalar = kernels::table_for(kernels::Isa::Scalar).unwrap();
+    // same K edge cases as the fused-vs-dequant test: partial words,
+    // group == K, and 3-bit words straddling group boundaries
+    for &k in &[30usize, 50, 64, 128, 192] {
+        for &bits in &[2usize, 3, 4] {
+            let w = Mat::randn(&mut rng, k, 19, 1.0);
+            let t = quantize_groupwise(&w, bits);
+            // m ∈ {1, 4}: small-M fused kernel; m = 9: large-M
+            // dequant-row kernel
+            for m in [1usize, 4, 9] {
+                let x = Mat::randn(&mut rng, m, k, 1.0);
+                let mut qs = QmScratch::new();
+                let mut reference = Mat::zeros(0, 0);
+                qmatmul::packed_matmul_into_ops(&x, &t, &mut reference,
+                                                &mut qs, scalar);
+                for ops in simd_backends() {
+                    let mut got = Mat::zeros(0, 0);
+                    qmatmul::packed_matmul_into_ops(&x, &t, &mut got,
+                                                    &mut qs, ops);
+                    assert_close(&got, &reference, 1e-4,
+                                 &format!("{} packed k={k} bits={bits} m={m}",
+                                          ops.isa.name()));
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn every_backend_matches_scalar_binary() {
+    let mut rng = Rng::new(12);
+    let scalar = kernels::table_for(kernels::Isa::Scalar).unwrap();
+    for &k in &[30usize, 50, 64, 128, 192] {
+        let w = Mat::randn(&mut rng, k, 21, 1.0);
+        let b = binarize(&w, false);
+        for m in [1usize, 3, 9] {
+            let x = Mat::randn(&mut rng, m, k, 1.0);
+            let mut qs = QmScratch::new();
+            let mut reference = Mat::zeros(0, 0);
+            qmatmul::binary_matmul_into_ops(&x, &b, &mut reference, &mut qs,
+                                            scalar);
+            for ops in simd_backends() {
+                let mut got = Mat::zeros(0, 0);
+                qmatmul::binary_matmul_into_ops(&x, &b, &mut got, &mut qs,
+                                                ops);
+                // masked-add + exact scale application: per-column add
+                // order matches scalar, so effectively exact (1e-6
+                // leaves headroom for nothing but rounding-mode quirks)
+                assert_close(&got, &reference, 1e-6,
+                             &format!("{} binary k={k} m={m}",
+                                      ops.isa.name()));
+            }
+        }
+    }
+}
+
+#[test]
+fn softmax_is_bit_identical_across_backends() {
+    let mut rng = Rng::new(13);
+    let scalar = kernels::table_for(kernels::Isa::Scalar).unwrap();
+    for &(rows, cols) in &[(1usize, 7usize), (3, 33), (8, 127)] {
+        let src = Mat::randn(&mut rng, rows, cols, 3.0);
+        let mut reference = src.clone();
+        softmax_rows_ops(&mut reference, scalar);
+        for ops in simd_backends() {
+            let mut got = src.clone();
+            softmax_rows_ops(&mut got, ops);
+            // vmax and vscale are exact operations: identical input
+            // must produce identical output to the last bit
+            assert_eq!(got.data, reference.data,
+                       "{} softmax {rows}x{cols}", ops.isa.name());
+        }
+    }
+}
+
+#[test]
+fn every_backend_matches_scalar_attention() {
+    let mut rng = Rng::new(14);
+    let scalar = kernels::table_for(kernels::Isa::Scalar).unwrap();
+    // full-sequence and KV-append windows, ragged head dims
+    for &(s, klen, d, nh) in &[(9usize, 9usize, 24usize, 2usize),
+                               (1, 17, 40, 4), (5, 12, 64, 8)] {
+        let q = Mat::randn(&mut rng, s, d, 1.0);
+        let k = Mat::randn(&mut rng, klen, d, 1.0);
+        let v = Mat::randn(&mut rng, klen, d, 1.0);
+        let mut scratch = AttnScratch::new();
+        let mut reference = Mat::zeros(0, 0);
+        causal_attention_into_ops(&q, &k, &v, klen, nh, false, None,
+                                  &mut scratch, &mut reference, scalar);
+        for ops in simd_backends() {
+            let mut got = Mat::zeros(0, 0);
+            causal_attention_into_ops(&q, &k, &v, klen, nh, false, None,
+                                      &mut scratch, &mut got, ops);
+            // scores accumulate through FMA axpy; softmax + AV stay
+            // within the same documented bound
+            assert_close(&got, &reference, 1e-4,
+                         &format!("{} attention s={s} klen={klen} d={d}",
+                                  ops.isa.name()));
+        }
+    }
+}
+
+#[test]
+fn kernel_facing_buffers_are_64_byte_aligned() {
+    let mut rng = Rng::new(15);
+    let m = Mat::randn(&mut rng, 7, 13, 1.0);
+    assert_eq!(m.data.as_ptr() as usize % 64, 0, "Mat backing");
+    let t = quantize_groupwise(&Mat::randn(&mut rng, 64, 9, 1.0), 3);
+    assert_eq!(t.qweight.as_ptr() as usize % 64, 0, "qweight");
+    assert_eq!(t.scales.as_ptr() as usize % 64, 0, "scales");
+    assert_eq!(t.zeros.as_ptr() as usize % 64, 0, "zeros");
+    let b = binarize(&Mat::randn(&mut rng, 96, 5, 1.0), false);
+    assert_eq!(b.packed.as_ptr() as usize % 64, 0, "binary packed");
+    assert_eq!(b.scales.as_ptr() as usize % 64, 0, "binary scales");
 }
