@@ -1,13 +1,17 @@
 //! Quickstart: compress the trained MoE model with MC (PMQ + ODP),
-//! compare it against FP32 on the benchmark suite, then reload it
-//! under an expert residency budget (DESIGN.md §5).
+//! compare it against FP32 on the benchmark suite, reload it under an
+//! expert residency budget (DESIGN.md §5), then serve it over HTTP
+//! and stream a generation across a real socket (DESIGN.md §6).
 //!
 //!   make artifacts && cargo run --release --example quickstart
+
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 use mc_moe::config::{artifacts_dir, ModelConfig};
 use mc_moe::coordinator::{
-    memmodel, GenerateRequest, McEngine, SamplingParams,
+    memmodel, GenerateRequest, McEngine, SamplingParams, Server,
 };
 use mc_moe::eval::eval_suite;
 use mc_moe::moe::{qz, MoeModel, WeightFile};
@@ -15,6 +19,7 @@ use mc_moe::odp;
 use mc_moe::offload::{self, PrefetchMode, ResidencyPriors};
 use mc_moe::pmq::allocate::{Allocator, PmqHyper};
 use mc_moe::pmq::{Workbench, WorkbenchConfig};
+use mc_moe::serve::{client as serve_client, HttpServer, ServeConfig};
 
 fn main() -> Result<()> {
     let dir = artifacts_dir();
@@ -26,11 +31,11 @@ fn main() -> Result<()> {
              memmodel::loading_bytes(&fp) as f64 / 1e6);
 
     // 1. build the PMQ workbench: one calibration pass + GPTQ zoo
-    println!("\n[1/5] calibrating + quantizing (GPTQ at 1/2/3 bits)...");
+    println!("\n[1/6] calibrating + quantizing (GPTQ at 1/2/3 bits)...");
     let wb = Workbench::build(fp, WorkbenchConfig::default())?;
 
     // 2. solve the Eq.-4 integer program at a 2.5-bit average budget
-    println!("[2/5] solving bit allocation (PMQ, avg 2.5 bits)...");
+    println!("[2/6] solving bit allocation (PMQ, avg 2.5 bits)...");
     let total = 5 * cfg.n_experts / 2;
     let (mc_model, alloc) = wb.compress(Allocator::Pmq, total, PmqHyper::default())?;
     println!("  allocation histogram 1/2/3-bit: {:?}", alloc.histogram());
@@ -48,7 +53,7 @@ fn main() -> Result<()> {
     let expert_bytes = mc_model.expert_storage_bytes();
 
     // 3. evaluate FP vs MC (+ODP) on the 8-task suite
-    println!("[3/5] evaluating...");
+    println!("[3/6] evaluating...");
     let odp_policy = odp::odp_default(&wb.cal);
     let fp_r = eval_suite(&wb.fp, 40, 0, 4242, None);
     let mc_r = eval_suite(&mc_model, 40, 0, 4242, None);
@@ -66,7 +71,7 @@ fn main() -> Result<()> {
 
     // 4. generate through the unified request API: one GenerateRequest
     // drives the compressed engine, streaming tokens as they decode
-    println!("\n[4/5] sampled generation on the MC model...");
+    println!("\n[4/6] sampled generation on the MC model...");
     let engine = McEngine::new(mc_model, Some(odp_policy), None);
     let req = GenerateRequest::greedy(vec![1, 5, 80, 3], 16)
         .with_sampling(SamplingParams::temperature(0.8, 4242));
@@ -79,7 +84,7 @@ fn main() -> Result<()> {
 
     // 5. reload under a 50% expert budget: the residency cache serves
     // misses from the segmented file, the predictor prefetches ahead
-    println!("\n[5/5] reloading under a 50% expert budget...");
+    println!("\n[5/6] reloading under a 50% expert budget...");
     let budget = expert_bytes / 2;
     let capped = offload::load_cached(&mcqz_path, budget, PrefetchMode::Async)?;
     let capped = McEngine::new(capped, None, None);
@@ -89,6 +94,41 @@ fn main() -> Result<()> {
              out.tokens.len(), budget as f64 / 1e6, expert_bytes as f64 / 1e6);
     println!("  cache: {}", capped.metrics.cache_summary());
     println!("  {}", capped.summary());
+
+    // 6. serve the compressed model over HTTP and stream a generation
+    // across a real socket (SSE), then drain gracefully
+    println!("\n[6/6] serving over HTTP (SSE stream + graceful drain)...");
+    let served = Arc::new(qz::load(&mcqz_path)?);
+    let scfg = ServeConfig { port: 0, max_batch: 2, ..ServeConfig::default() };
+    let engine = Server::spawn(served, None, scfg.max_batch);
+    let http = HttpServer::bind(engine, scfg)?;
+    let addr = http.addr();
+    println!("  listening on http://{addr}  (try: curl -N -X POST \
+              http://{addr}/v1/generate -d '{{\"prompt\":[1,5,80,3]}}')");
+    let body = br#"{"prompt":[1,5,80,3],"max_new_tokens":12,"stop":"max_len"}"#;
+    let reply = serve_client::open_generate(
+        addr, body, &[("X-Tenant", "quickstart")], Duration::from_secs(60))?;
+    match reply {
+        serve_client::GenerateReply::Stream(mut sse) => {
+            print!("  streamed:");
+            while let Some(ev) = sse.next_event()? {
+                match ev.name.as_str() {
+                    "token" => print!(" {}", ev.data),
+                    _ => {
+                        println!("\n  terminal frame: {}", ev.name);
+                        break;
+                    }
+                }
+            }
+        }
+        serve_client::GenerateReply::Response(r) => {
+            anyhow::bail!("expected an SSE stream, got status {}", r.status);
+        }
+    }
+    http.begin_drain();
+    let report = http.serve_until_drained();
+    println!("  drained in {:.1} ms (inflight at drain: {})",
+             report.drain_ms, report.inflight_at_start);
     std::fs::remove_file(&mcqz_path).ok();
     Ok(())
 }

@@ -1,0 +1,285 @@
+//! HTTP front-end soak bench (EXPERIMENTS.md §Serve): a burst of
+//! concurrent streamed clients against a real `HttpServer` socket,
+//! measuring admission behavior under overload and streaming latency
+//! for the admitted set, then a graceful-drain phase that proves no
+//! in-flight token is lost.
+//!
+//!   cargo bench --bench serve_soak              # 512 clients
+//!   MC_BENCH_FAST=1 cargo bench --bench serve_soak   # 256, CI smoke
+//!
+//! Emits `BENCH_serve.json`: admitted/shed/completed/wedged counts,
+//! p50/p99 TTFT and TPOT over the admitted streams, end-to-end token
+//! throughput, and the drain report (validated by CI bench-smoke).
+
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use mc_moe::config::ModelConfig;
+use mc_moe::coordinator::Server;
+use mc_moe::serve::client::{self, GenerateReply};
+use mc_moe::serve::{HttpServer, ServeConfig};
+
+#[path = "../tests/common/mod.rs"]
+mod common;
+use common::random_model;
+
+fn fast() -> bool {
+    std::env::var("MC_BENCH_FAST").is_ok()
+}
+
+/// Per-read client bound: a stream stalled past this counts as wedged.
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// One client's outcome in the burst phase.
+enum Outcome {
+    /// stream completed: (ttft_ms, tpot_ms, tokens)
+    Completed(f64, f64, usize),
+    /// 429 with a numeric Retry-After
+    Shed,
+    /// tenant-cap 429 (distinguished by the response body)
+    TenantLimited,
+    /// io error, timeout, missing Retry-After, or a broken stream
+    Wedged(String),
+}
+
+fn run_client(addr: std::net::SocketAddr, idx: usize, max_new: usize)
+              -> Outcome {
+    let priority = ["low", "normal", "high"][idx % 3];
+    let tenant = format!("tenant-{}", idx % 4);
+    let body = format!(
+        "{{\"prompt\":[1,5,{},3],\"max_new_tokens\":{max_new},\
+         \"stop\":\"max_len\",\"priority\":\"{priority}\"}}",
+        80 + idx % 8
+    );
+    let t0 = Instant::now();
+    let reply = match client::open_generate(
+        addr, body.as_bytes(), &[("X-Tenant", &tenant)], CLIENT_TIMEOUT)
+    {
+        Ok(r) => r,
+        Err(e) => return Outcome::Wedged(format!("open: {e}")),
+    };
+    let mut stream = match reply {
+        GenerateReply::Stream(s) => s,
+        GenerateReply::Response(r) => {
+            if r.status != 429 {
+                return Outcome::Wedged(format!("status {}", r.status));
+            }
+            match r.header("retry-after").map(str::parse::<u64>) {
+                Some(Ok(secs)) if secs >= 1 => {}
+                _ => return Outcome::Wedged("429 without Retry-After".into()),
+            }
+            return if r.body_str().contains("tenant") {
+                Outcome::TenantLimited
+            } else {
+                Outcome::Shed
+            };
+        }
+    };
+    let mut ttft_ms = 0.0;
+    let mut first_token = None;
+    let mut last_token = t0;
+    let mut tokens = 0usize;
+    loop {
+        match stream.next_event() {
+            Ok(Some(ev)) => match ev.name.as_str() {
+                "token" => {
+                    let now = Instant::now();
+                    if first_token.is_none() {
+                        ttft_ms = now.duration_since(t0).as_secs_f64() * 1e3;
+                        first_token = Some(now);
+                    }
+                    last_token = now;
+                    tokens += 1;
+                }
+                "done" => break,
+                other => return Outcome::Wedged(format!("event {other:?}")),
+            },
+            Ok(None) => {
+                return Outcome::Wedged("closed without done".into())
+            }
+            Err(e) => return Outcome::Wedged(format!("read: {e}")),
+        }
+    }
+    if tokens != max_new {
+        return Outcome::Wedged(format!("{tokens}/{max_new} tokens"));
+    }
+    let tpot_ms = match first_token {
+        Some(f) if tokens > 1 => {
+            last_token.duration_since(f).as_secs_f64() * 1e3
+                / (tokens - 1) as f64
+        }
+        _ => 0.0,
+    };
+    Outcome::Completed(ttft_ms, tpot_ms, tokens)
+}
+
+fn percentile(sorted: &[f64], p: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    let rank = p * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+fn main() {
+    let (clients, max_new) = if fast() { (256, 8) } else { (512, 16) };
+    let drain_streams = 8usize;
+    let cfg = ServeConfig {
+        port: 0,
+        max_conns: clients + 16,
+        // unlimited per tenant: the burst measures queue shedding, and
+        // admitted + shed must account for every client exactly
+        max_streams_per_tenant: 0,
+        shed_queue_depth: 64,
+        max_batch: 8,
+        ..ServeConfig::default()
+    };
+    let engine = Server::spawn(
+        Arc::new(random_model(&ModelConfig::test_tiny(), 77)),
+        None, cfg.max_batch);
+    let http = HttpServer::bind(engine, cfg).expect("bind 127.0.0.1:0");
+    let addr = http.addr();
+    println!(
+        "serve soak: {clients} clients x {max_new} tokens on {addr} \
+         (batch=8, shed-depth=64)"
+    );
+
+    // -- burst phase: every client fires at once --------------------
+    let barrier = Arc::new(Barrier::new(clients));
+    let t_start = Instant::now();
+    let workers: Vec<_> = (0..clients)
+        .map(|i| {
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                barrier.wait();
+                run_client(addr, i, max_new)
+            })
+        })
+        .collect();
+    let outcomes: Vec<Outcome> =
+        workers.into_iter().map(|w| w.join().expect("client thread")).collect();
+    let wall_s = t_start.elapsed().as_secs_f64();
+
+    let mut admitted = 0u64;
+    let mut shed = 0u64;
+    let mut tenant_limited = 0u64;
+    let mut wedged = 0u64;
+    let mut tokens_total = 0usize;
+    let mut ttfts = Vec::new();
+    let mut tpots = Vec::new();
+    for o in &outcomes {
+        match o {
+            Outcome::Completed(ttft, tpot, tokens) => {
+                admitted += 1;
+                tokens_total += tokens;
+                ttfts.push(*ttft);
+                if *tpot > 0.0 {
+                    tpots.push(*tpot);
+                }
+            }
+            Outcome::Shed => shed += 1,
+            Outcome::TenantLimited => tenant_limited += 1,
+            Outcome::Wedged(why) => {
+                wedged += 1;
+                eprintln!("WEDGED client: {why}");
+            }
+        }
+    }
+    // every admitted client ran to done with the full token count
+    // (run_client reports anything else as wedged)
+    let completed = admitted;
+    ttfts.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    tpots.sort_by(|a, b| a.partial_cmp(b).unwrap());
+
+    // -- drain phase: in-flight streams survive a graceful drain ----
+    let mut streams = Vec::new();
+    for i in 0..drain_streams {
+        let body = format!(
+            "{{\"prompt\":[2,6,{},3],\"max_new_tokens\":{max_new},\
+             \"stop\":\"max_len\"}}",
+            70 + i
+        );
+        match client::open_generate(addr, body.as_bytes(), &[],
+                                    CLIENT_TIMEOUT) {
+            Ok(GenerateReply::Stream(mut s)) => {
+                // wait until demonstrably decoding before the drain
+                match s.next_event() {
+                    Ok(Some(ev)) if ev.name == "token" => {
+                        streams.push((s, 1usize))
+                    }
+                    other => panic!("drain stream {i} first frame: {other:?}"),
+                }
+            }
+            other => panic!("drain stream {i} refused: {:?}", other.is_ok()),
+        }
+    }
+    let drain_resp = client::request(addr, "POST", "/admin/drain", &[], b"",
+                                     CLIENT_TIMEOUT)
+        .expect("drain request");
+    assert_eq!(drain_resp.status, 200);
+    // a post-drain submission must be refused
+    let refused = client::open_generate(
+        addr, b"{\"prompt\":[1,5,80,3]}", &[], CLIENT_TIMEOUT);
+    let refused_503 = matches!(refused,
+                               Ok(GenerateReply::Response(ref r))
+                               if r.status == 503);
+    // every in-flight stream still delivers every promised token
+    let mut drain_tokens = 0usize;
+    for (mut s, mut count) in streams {
+        loop {
+            match s.next_event().expect("drain stream read") {
+                Some(ev) if ev.name == "token" => count += 1,
+                Some(ev) if ev.name == "done" => break,
+                other => panic!("drain stream event: {other:?}"),
+            }
+        }
+        drain_tokens += count;
+    }
+    let tokens_lost = drain_streams * max_new - drain_tokens;
+    let report = http.shutdown();
+
+    // -- report -----------------------------------------------------
+    let toks_per_s = tokens_total as f64 / wall_s;
+    let kernel = mc_moe::kernels::active().isa.name();
+    println!("admitted={admitted} shed={shed} tenant_limited={tenant_limited} \
+              wedged={wedged} completed={completed}");
+    println!("ttft p50={:.2}ms p99={:.2}ms  tpot p50={:.3}ms p99={:.3}ms",
+             percentile(&ttfts, 0.50), percentile(&ttfts, 0.99),
+             percentile(&tpots, 0.50), percentile(&tpots, 0.99));
+    println!("tokens={tokens_total} wall={wall_s:.2}s ({toks_per_s:.0} tok/s)");
+    println!("drain: {} streams, {:.1}ms, tokens_lost={tokens_lost}, \
+              post-drain 503={refused_503}",
+             drain_streams, report.drain_ms);
+    assert_eq!(wedged, 0, "soak must complete with zero wedged connections");
+    assert!(refused_503, "draining server must 503 new work");
+    assert_eq!(tokens_lost, 0, "drain must not lose in-flight tokens");
+    assert_eq!(admitted + shed + tenant_limited, clients as u64,
+               "every client is accounted for exactly once");
+
+    let json = format!(
+        "{{\n  \"mode\": \"{mode}\",\n  \"clients\": {clients},\n  \
+         \"max_new_tokens\": {max_new},\n  \"admitted\": {admitted},\n  \
+         \"shed\": {shed},\n  \"tenant_limited\": {tenant_limited},\n  \
+         \"completed\": {completed},\n  \"wedged\": {wedged},\n  \
+         \"ttft_ms\": {{\"p50\": {tf50:.3}, \"p99\": {tf99:.3}}},\n  \
+         \"tpot_ms\": {{\"p50\": {tp50:.4}, \"p99\": {tp99:.4}}},\n  \
+         \"tokens_total\": {tokens_total},\n  \"wall_s\": {wall_s:.3},\n  \
+         \"toks_per_s\": {toks_per_s:.1},\n  \
+         \"drain\": {{\"inflight\": {drain_streams}, \
+         \"drain_ms\": {dms:.2}, \"tokens_lost\": {tokens_lost}}},\n  \
+         \"kernel_backend\": \"{kernel}\"\n}}\n",
+        mode = if fast() { "fast" } else { "full" },
+        tf50 = percentile(&ttfts, 0.50),
+        tf99 = percentile(&ttfts, 0.99),
+        tp50 = percentile(&tpots, 0.50),
+        tp99 = percentile(&tpots, 0.99),
+        dms = report.drain_ms,
+    );
+    match std::fs::write("BENCH_serve.json", &json) {
+        Ok(()) => println!("wrote BENCH_serve.json"),
+        Err(e) => eprintln!("could not write BENCH_serve.json: {e}"),
+    }
+}

@@ -323,9 +323,9 @@ mod tests {
     fn respects_max_batch() {
         let metrics = Metrics::new();
         let mut b = Batcher::new(engine(), None, 2);
-        for i in 0..6 {
-            b.submit(req(i, 8));
-        }
+        // handles must outlive the run: dropping one cancels its request
+        let _handles: Vec<RequestHandle> =
+            (0..6).map(|i| b.submit(req(i, 8))).collect();
         b.step(&metrics);
         assert_eq!(b.occupancy(), 2);
         assert_eq!(metrics.batch_occupancy.load(
@@ -338,11 +338,11 @@ mod tests {
     fn greedy_is_deterministic() {
         let m1 = Metrics::new();
         let mut b1 = Batcher::new(engine(), None, 1);
-        b1.submit(req(0, 6));
+        let _h1 = b1.submit(req(0, 6));
         let d1 = b1.run_to_completion(&m1);
         let m2 = Metrics::new();
         let mut b2 = Batcher::new(engine(), None, 1);
-        b2.submit(req(0, 6));
+        let _h2 = b2.submit(req(0, 6));
         let d2 = b2.run_to_completion(&m2);
         assert_eq!(d1[0].tokens, d2[0].tokens);
     }
@@ -354,13 +354,15 @@ mod tests {
             .map(|i| {
                 let m = Metrics::new();
                 let mut b = Batcher::new(engine(), None, 1);
-                b.submit(req(i, 6));
+                let _h = b.submit(req(i, 6));
                 b.run_to_completion(&m)[0].tokens.clone()
             })
             .collect();
         let m = Metrics::new();
         let mut b = Batcher::new(engine(), None, 4);
-        let ids: Vec<u64> = (0..4).map(|i| b.submit(req(i, 6)).id).collect();
+        let handles: Vec<RequestHandle> =
+            (0..4).map(|i| b.submit(req(i, 6))).collect();
+        let ids: Vec<u64> = handles.iter().map(|h| h.id).collect();
         let done = b.run_to_completion(&m);
         for c in done {
             let slot = ids.iter().position(|&id| id == c.id).unwrap();
@@ -385,7 +387,7 @@ mod tests {
     fn cancelled_queued_request_never_runs() {
         let metrics = Metrics::new();
         let mut b = Batcher::new(engine(), None, 1);
-        b.submit(req(0, 4));
+        let _first = b.submit(req(0, 4));
         let victim = b.submit(req(1, 4));
         victim.cancel();
         let done = b.run_to_completion(&metrics);
@@ -419,7 +421,7 @@ mod tests {
         let mut b = Batcher::new(engine(), None, 1);
         // saturate the only slot, then submit degenerates: they must
         // resolve immediately, not wait for the slot to free
-        b.submit(req(0, 8));
+        let _occupant = b.submit(req(0, 8));
         b.step(&metrics);
         let empty = b.submit(GenerateRequest::greedy(Vec::new(), 4));
         let noop = b.submit(GenerateRequest::greedy(vec![1, 5], 0));
@@ -439,7 +441,7 @@ mod tests {
         let metrics = Metrics::new();
         let mut b = Batcher::new(engine(), None, 1);
         // occupy the slot so later submissions queue up
-        b.submit(req(0, 2));
+        let _first = b.submit(req(0, 2));
         b.step(&metrics);
         let low = b.submit(req(1, 2).with_priority(Priority::Low));
         let high = b.submit(req(2, 2).with_priority(Priority::High));

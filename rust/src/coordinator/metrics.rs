@@ -7,6 +7,7 @@
 //! recent `RING_CAP` samples (a sliding window, which is also what an
 //! operator wants from a live gauge).
 
+use std::fmt::Write as _;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
@@ -66,6 +67,21 @@ impl LatencyRing {
         }
         self.buf.iter().sum::<u64>() as f64 / self.buf.len() as f64
     }
+
+    /// p-th percentile (0..=100) of the retained window, linear
+    /// interpolation between adjacent samples; 0.0 when empty.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.buf.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.buf.clone();
+        sorted.sort_unstable();
+        let rank = (p / 100.0).clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let frac = rank - lo as f64;
+        sorted[lo] as f64 * (1.0 - frac) + sorted[hi] as f64 * frac
+    }
 }
 
 #[derive(Debug, Default)]
@@ -105,6 +121,25 @@ pub struct Metrics {
     /// (empty until [`Metrics::set_kernel_backend`]; bench JSONs copy
     /// it so every number records which backend produced it)
     pub kernel_backend: Mutex<String>,
+    // --- HTTP front end (serve::HttpServer, DESIGN.md §6) ---
+    /// connections handed to the pool
+    pub http_conns_accepted: AtomicU64,
+    /// connections answered 503 at the `--max-conns` cap
+    pub http_conns_rejected: AtomicU64,
+    /// gauge: connections currently queued or being handled
+    pub http_conns_active: AtomicU64,
+    /// unparseable / unroutable requests (400/404/408/413/431)
+    pub http_bad_requests: AtomicU64,
+    /// generate requests answered 429 by queue-depth load shedding
+    pub requests_shed: AtomicU64,
+    /// generate requests answered 429 at the per-tenant stream cap
+    pub requests_tenant_limited: AtomicU64,
+    /// SSE clients that vanished mid-stream (disconnect → cancel)
+    pub client_disconnects: AtomicU64,
+    /// gauge: admitted generate streams currently live
+    pub streams_inflight: AtomicU64,
+    /// gauge: duration of the most recent graceful drain (ns)
+    pub last_drain_ns: AtomicU64,
 }
 
 impl Metrics {
@@ -246,6 +281,111 @@ impl Metrics {
             backend,
         )
     }
+
+    /// Prometheus text exposition (content type
+    /// `text/plain; version=0.0.4`): every counter/gauge with `# HELP`
+    /// / `# TYPE` metadata, plus window-quantile summaries for the
+    /// latency rings. `GET /metrics` serves exactly this string, and
+    /// in-process callers (CLI, benches) can render the same snapshot.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::with_capacity(4096);
+        let mut counter = |name: &str, help: &str, v: u64| {
+            let _ = write!(out,
+                "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n");
+        };
+        let c = Ordering::Relaxed;
+        counter("mc_requests_admitted",
+                "requests admitted to the batcher",
+                self.requests_admitted.load(c));
+        counter("mc_requests_completed", "requests finished with Done",
+                self.requests_completed.load(c));
+        counter("mc_requests_cancelled", "requests cancelled mid-flight",
+                self.requests_cancelled.load(c));
+        counter("mc_requests_rejected", "invalid requests turned away",
+                self.requests_rejected.load(c));
+        counter("mc_requests_shed",
+                "generate requests shed with 429 at the queue-depth limit",
+                self.requests_shed.load(c));
+        counter("mc_requests_tenant_limited",
+                "generate requests 429'd at the per-tenant stream cap",
+                self.requests_tenant_limited.load(c));
+        counter("mc_tokens_generated", "tokens produced by decode steps",
+                self.tokens_generated.load(c));
+        counter("mc_expert_calls", "expert FFN invocations",
+                self.expert_calls.load(c));
+        counter("mc_experts_pruned", "expert calls skipped by ODP",
+                self.experts_pruned.load(c));
+        counter("mc_expert_cache_hits", "expert demand hits",
+                self.expert_cache_hits.load(c));
+        counter("mc_expert_cache_misses", "expert demand misses",
+                self.expert_cache_misses.load(c));
+        counter("mc_expert_cache_evictions", "experts evicted for budget",
+                self.expert_cache_evictions.load(c));
+        counter("mc_expert_prefetch_issued", "speculative expert loads",
+                self.expert_prefetch_issued.load(c));
+        counter("mc_expert_prefetch_hits", "prefetches later demanded",
+                self.expert_prefetch_hits.load(c));
+        counter("mc_http_conns_accepted", "connections handed to the pool",
+                self.http_conns_accepted.load(c));
+        counter("mc_http_conns_rejected",
+                "connections 503'd at the connection cap",
+                self.http_conns_rejected.load(c));
+        counter("mc_http_bad_requests",
+                "unparseable or unroutable HTTP requests",
+                self.http_bad_requests.load(c));
+        counter("mc_client_disconnects",
+                "SSE clients that vanished mid-stream",
+                self.client_disconnects.load(c));
+
+        let mut gauge = |name: &str, help: &str, v: f64| {
+            let _ = write!(out,
+                "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n");
+        };
+        gauge("mc_queue_depth", "requests waiting in the admission queue",
+              self.queue_depth.load(c) as f64);
+        gauge("mc_batch_occupancy", "active sessions in the fused batch",
+              self.batch_occupancy.load(c) as f64);
+        gauge("mc_streams_inflight", "admitted generate streams live now",
+              self.streams_inflight.load(c) as f64);
+        gauge("mc_http_conns_active", "connections queued or in handling",
+              self.http_conns_active.load(c) as f64);
+        gauge("mc_bytes_resident", "expert bytes resident in the cache",
+              self.bytes_resident.load(c) as f64);
+        gauge("mc_last_drain_ms", "duration of the most recent drain",
+              self.last_drain_ns.load(c) as f64 / 1e6);
+        gauge("mc_tokens_per_sec", "decode throughput over the tpot window",
+              self.tokens_per_sec());
+        gauge("mc_prune_ratio", "fraction of expert calls pruned",
+              self.prune_ratio());
+        gauge("mc_expert_cache_hit_rate", "demand hit fraction",
+              self.cache_hit_rate());
+        gauge("mc_expert_prefetch_hit_rate", "prefetch usefulness fraction",
+              self.prefetch_hit_rate());
+
+        let mut summary = |name: &str, help: &str, ring: &LatencyRing| {
+            let _ = write!(out,
+                "# HELP {name} {help}\n# TYPE {name} summary\n\
+                 {name}{{quantile=\"0.5\"}} {:.3}\n\
+                 {name}{{quantile=\"0.99\"}} {:.3}\n\
+                 {name}_count {}\n",
+                ring.percentile(50.0) / 1e6,
+                ring.percentile(99.0) / 1e6,
+                ring.total());
+        };
+        summary("mc_ttft_ms", "time to first token (window quantiles, ms)",
+                &self.ttft_ns.lock().unwrap());
+        summary("mc_tpot_ms", "per-token decode latency (window, ms)",
+                &self.tpot_ns.lock().unwrap());
+        summary("mc_miss_stall_ms", "expert demand-miss stalls (window, ms)",
+                &self.miss_stall_ns.lock().unwrap());
+
+        let _ = write!(out,
+            "# HELP mc_kernel_backend selected SIMD kernel backend\n\
+             # TYPE mc_kernel_backend gauge\n\
+             mc_kernel_backend{{isa=\"{}\"}} 1\n",
+            self.kernel_backend_name());
+        out
+    }
 }
 
 #[cfg(test)]
@@ -307,6 +447,54 @@ mod tests {
         let line = m.cache_summary();
         assert!(line.contains("9 hits / 1 misses"), "{line}");
         assert!(line.contains("prefetch 3/4 hit"), "{line}");
+    }
+
+    #[test]
+    fn ring_percentiles_interpolate() {
+        let mut r = LatencyRing::with_capacity(8);
+        assert_eq!(r.percentile(99.0), 0.0, "empty ring");
+        for v in [10u64, 20, 30, 40] {
+            r.push(v);
+        }
+        assert!((r.percentile(0.0) - 10.0).abs() < 1e-9);
+        assert!((r.percentile(50.0) - 25.0).abs() < 1e-9);
+        assert!((r.percentile(100.0) - 40.0).abs() < 1e-9);
+        // order-independent: the window is sorted before ranking
+        let mut rev = LatencyRing::with_capacity(8);
+        for v in [40u64, 10, 30, 20] {
+            rev.push(v);
+        }
+        assert_eq!(r.percentile(99.0), rev.percentile(99.0));
+    }
+
+    #[test]
+    fn prometheus_exposition_has_types_and_series() {
+        let m = Metrics::new();
+        Metrics::inc(&m.requests_admitted, 3);
+        Metrics::inc(&m.requests_shed, 2);
+        Metrics::inc(&m.requests_tenant_limited, 1);
+        Metrics::inc(&m.http_conns_accepted, 5);
+        Metrics::set_gauge(&m.streams_inflight, 4);
+        Metrics::set_gauge(&m.last_drain_ns, 7_000_000);
+        m.record_ttft(2_000_000);
+        m.record_ttft(4_000_000);
+        m.set_kernel_backend("scalar");
+        let text = m.render_prometheus();
+        assert!(text.contains("# TYPE mc_requests_admitted counter"));
+        assert!(text.contains("mc_requests_admitted 3"));
+        assert!(text.contains("mc_requests_shed 2"));
+        assert!(text.contains("mc_requests_tenant_limited 1"));
+        assert!(text.contains("mc_http_conns_accepted 5"));
+        assert!(text.contains("# TYPE mc_streams_inflight gauge"));
+        assert!(text.contains("mc_streams_inflight 4"));
+        assert!(text.contains("mc_last_drain_ms 7"));
+        assert!(text.contains("# TYPE mc_ttft_ms summary"));
+        assert!(text.contains("mc_ttft_ms{quantile=\"0.5\"} 3.000"));
+        assert!(text.contains("mc_ttft_ms_count 2"));
+        assert!(text.contains("mc_kernel_backend{isa=\"scalar\"} 1"));
+        // every HELP has a matching TYPE
+        assert_eq!(text.matches("# HELP").count(),
+                   text.matches("# TYPE").count());
     }
 
     #[test]

@@ -265,7 +265,9 @@ impl RequestHandle {
     /// request was cancelled or the server dropped the stream.
     pub fn wait(mut self) -> Option<Completion> {
         while self.next_event().is_some() {}
-        self.done
+        // clone rather than move: `RequestHandle: Drop` forbids moving
+        // a field out of `self`
+        self.done.clone()
     }
 
     /// `wait` with a deadline: blocks until the stream terminates or
@@ -299,6 +301,21 @@ impl RequestHandle {
 
     pub fn was_cancelled(&self) -> bool {
         self.cancelled
+    }
+}
+
+impl Drop for RequestHandle {
+    /// A handle dropped before its stream terminated means the client
+    /// walked away mid-request (or never read it): raise the cancel
+    /// flag so the serving loop retires the session at its next step
+    /// and frees the batch slot, instead of decoding tokens nobody
+    /// will ever receive. Dropping after `Done`/`Cancelled`/disconnect
+    /// is a no-op, and for an already-retired request the raised flag
+    /// is never read — so this is safe on every exit path.
+    fn drop(&mut self) {
+        if !self.is_terminated() {
+            self.cancel.store(true, Ordering::Relaxed);
+        }
     }
 }
 
@@ -373,6 +390,29 @@ mod tests {
         assert!(handle.try_next_event().is_none());
         assert!(handle.is_terminated());
         assert!(handle.completion().is_none());
+    }
+
+    #[test]
+    fn dropping_live_handle_raises_cancel() {
+        let (ticket, handle) = request_channel(12);
+        assert!(!ticket.cancelled());
+        drop(handle);
+        assert!(ticket.cancelled(), "abandoned handle must cancel");
+    }
+
+    #[test]
+    fn dropping_finished_handle_does_not_cancel() {
+        let (ticket, mut handle) = request_channel(13);
+        ticket.send(StreamEvent::Done(Completion {
+            id: 13,
+            tokens: vec![],
+            finish: FinishReason::MaxTokens,
+            ttft_ns: 1,
+            total_ns: 1,
+        }));
+        while handle.next_event().is_some() {}
+        drop(handle);
+        assert!(!ticket.cancelled(), "clean finish must not flag cancel");
     }
 
     #[test]

@@ -32,6 +32,10 @@ pub struct Server {
     worker: Option<JoinHandle<()>>,
     next_id: AtomicU64,
     pub metrics: Arc<Metrics>,
+    /// submitted-but-unfinished estimate: bumped on `submit`, snapped
+    /// to `batcher.pending()` every worker iteration. Front ends use
+    /// it as a queue-pressure signal without waiting a step.
+    pending_hint: Arc<AtomicU64>,
 }
 
 impl Server {
@@ -48,6 +52,8 @@ impl Server {
             .unwrap_or_else(|| Arc::new(Metrics::new()));
         metrics.set_kernel_backend(kops.isa.name());
         let m2 = metrics.clone();
+        let pending_hint = Arc::new(AtomicU64::new(0));
+        let hint = pending_hint.clone();
         let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
         let worker = std::thread::spawn(move || {
             let mut batcher = Batcher::new(model, odp, max_batch);
@@ -73,12 +79,20 @@ impl Server {
                 // the step streams tokens and terminal events to each
                 // request's own channel; completions need no routing
                 batcher.step(&m2);
+                hint.store(batcher.pending() as u64, Ordering::Relaxed);
                 if shutdown && batcher.pending() == 0 {
                     break;
                 }
             }
+            hint.store(0, Ordering::Relaxed);
         });
-        Server { tx, worker: Some(worker), next_id: AtomicU64::new(1), metrics }
+        Server {
+            tx,
+            worker: Some(worker),
+            next_id: AtomicU64::new(1),
+            metrics,
+            pending_hint,
+        }
     }
 
     /// Submit a request; the handle streams `Token` events as the
@@ -87,8 +101,15 @@ impl Server {
     pub fn submit(&self, req: GenerateRequest) -> RequestHandle {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (ticket, handle) = request_channel(id);
+        self.pending_hint.fetch_add(1, Ordering::Relaxed);
         let _ = self.tx.send(Msg::Submit(req, ticket));
         handle
+    }
+
+    /// Submitted-but-unfinished request estimate (see field docs);
+    /// eventually consistent with the batcher's own `pending()`.
+    pub fn pending_hint(&self) -> usize {
+        self.pending_hint.load(Ordering::Relaxed) as usize
     }
 
     /// Convenience: greedy request with default stop/priority.

@@ -17,5 +17,6 @@ pub mod offload;
 pub mod pmq;
 pub mod quant;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod util;

@@ -6,8 +6,12 @@
 //!   compress  [--avg-bits 2.5] [--strategy pmq] [--eval] [--save m.mcqz]
 //!   eval      [--mode suite|ppl|fewshot|niah|cot] [--odp] [--avg-bits ...]
 //!             [--load m.mcqz] [--expert-budget-mb 8] [--prefetch async]
-//!   serve     [--requests 16] [--batch 4] [--odp] [--load m.mcqz]
+//!   serve     [--port 8080] [--host 127.0.0.1] [--batch 4]
+//!             [--max-conns 256] [--max-streams-per-tenant 32]
+//!             [--shed-queue-depth 64] [--odp] [--load m.mcqz]
 //!             [--expert-budget-mb 8] [--prefetch off|sync|async]
+//!             (no --port: legacy in-process synthetic load,
+//!              [--requests 16] [--max-new 24])
 //!   generate  [--task 3] [--max-new 16] [--odp] [--load m.mcqz]
 //!             [--temperature 0.8] [--top-k 0] [--top-p 1.0] [--seed 5]
 //!             [--expert-budget-mb 8] [--prefetch off|sync|async]
@@ -279,8 +283,47 @@ fn cmd_eval(dir: &Path, args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `serve --port <p>`: HTTP/SSE front end (DESIGN.md §6). Runs until
+/// SIGTERM or `POST /admin/drain`, then drains in-flight streams and
+/// exits cleanly.
+fn cmd_serve_http(model: mc_moe::moe::MoeModel, args: &Args) -> Result<()> {
+    use mc_moe::serve::{drain, HttpServer, ServeConfig};
+    let odp = decode_odp_for(&model, args);
+    let defaults = ServeConfig::default();
+    let cfg = ServeConfig {
+        host: args.get_or("host", &defaults.host),
+        port: args.usize_or("port", defaults.port as usize)? as u16,
+        max_conns: args.usize_or("max-conns", defaults.max_conns)?,
+        max_streams_per_tenant: args.usize_or(
+            "max-streams-per-tenant", defaults.max_streams_per_tenant)?,
+        shed_queue_depth: args.usize_or(
+            "shed-queue-depth", defaults.shed_queue_depth)?,
+        max_batch: args.usize_or("batch", defaults.max_batch)?,
+        ..defaults
+    };
+    let engine = Server::spawn(Arc::new(model), odp, cfg.max_batch);
+    drain::install_sigterm_hook();
+    let http = HttpServer::bind(engine, cfg.clone())?;
+    println!(
+        "mc-moe serving on http://{}  (batch={} max-conns={} \
+         tenant-cap={} shed-depth={})",
+        http.addr(), cfg.max_batch, cfg.max_conns,
+        cfg.max_streams_per_tenant, cfg.shed_queue_depth);
+    println!("  POST /v1/generate   GET /healthz   GET /metrics   \
+              POST /admin/drain");
+    let metrics = http.metrics();
+    let report = http.serve_until_drained();
+    println!("{}", metrics.render_text());
+    println!("drained: {} in-flight streams in {:.1}ms (clean={})",
+             report.inflight_at_start, report.drain_ms, report.drained);
+    Ok(())
+}
+
 fn cmd_serve(dir: &Path, args: &Args) -> Result<()> {
     let model = load_serving_model(dir, args)?;
+    if args.get("port").is_some() {
+        return cmd_serve_http(model, args);
+    }
     let odp = decode_odp_for(&model, args);
     let sampling = sampling_from(args)?;
     let n_req = args.usize_or("requests", 16)?;

@@ -1,0 +1,241 @@
+//! Pre-engine admission: per-tenant concurrent-stream caps and
+//! queue-depth-based load shedding, decided *before* a request is
+//! submitted to the batcher so a shed request costs the engine
+//! nothing (DESIGN.md §6).
+//!
+//! Pressure is measured as the controller's own count of live
+//! generate streams beyond the fused batcher's slot capacity — a
+//! deterministic figure updated at admission/retirement, not the
+//! engine's step-cadence gauges, so shedding decisions are exact even
+//! under bursts that arrive between decode steps.
+//!
+//! The existing `Priority` lanes extend into shedding: low-priority
+//! traffic sheds at half the configured queue depth, normal at the
+//! configured depth, high at twice it — paid/interactive traffic
+//! sheds last.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::Priority;
+
+/// Outcome of an admission check.
+#[derive(Debug)]
+pub enum Admission {
+    /// admitted; drop the permit when the stream terminates
+    Granted(StreamPermit),
+    /// queue too deep for this priority class → 429 + Retry-After
+    Shed { retry_after_s: u64 },
+    /// tenant at its concurrent-stream cap → 429 + Retry-After
+    TenantBusy { retry_after_s: u64 },
+}
+
+struct Inner {
+    /// live admitted streams (all tenants)
+    inflight: u64,
+    /// live admitted streams per tenant
+    tenants: HashMap<String, u64>,
+}
+
+pub struct AdmissionControl {
+    /// fused-batcher slot capacity: streams beyond this are queued
+    max_batch: usize,
+    /// queued-stream depth at which Normal traffic sheds (0 = never)
+    shed_queue_depth: usize,
+    /// per-tenant concurrent-stream cap (0 = unlimited)
+    max_streams_per_tenant: usize,
+    state: Mutex<Inner>,
+    metrics: Arc<Metrics>,
+}
+
+/// RAII admission token: decrements the tenant and global stream
+/// counts when the stream terminates (whatever the exit path).
+pub struct StreamPermit {
+    ctrl: Arc<AdmissionControl>,
+    tenant: String,
+}
+
+impl Drop for StreamPermit {
+    fn drop(&mut self) {
+        let mut inner = self.ctrl.state.lock().unwrap();
+        inner.inflight = inner.inflight.saturating_sub(1);
+        if let Some(n) = inner.tenants.get_mut(&self.tenant) {
+            *n -= 1;
+            if *n == 0 {
+                inner.tenants.remove(&self.tenant);
+            }
+        }
+        Metrics::set_gauge(&self.ctrl.metrics.streams_inflight,
+                           inner.inflight);
+    }
+}
+
+/// Shedding threshold for a priority class, in queued streams.
+/// `base` is `--shed-queue-depth`; the returned threshold is always
+/// >= 1 so a zero estimate never sheds.
+fn shed_threshold(base: usize, priority: Priority) -> u64 {
+    let t = match priority {
+        Priority::Low => base.div_ceil(2),
+        Priority::Normal => base,
+        Priority::High => base.saturating_mul(2),
+    };
+    t.max(1) as u64
+}
+
+impl AdmissionControl {
+    pub fn new(
+        max_batch: usize,
+        shed_queue_depth: usize,
+        max_streams_per_tenant: usize,
+        metrics: Arc<Metrics>,
+    ) -> AdmissionControl {
+        AdmissionControl {
+            max_batch,
+            shed_queue_depth,
+            max_streams_per_tenant,
+            state: Mutex::new(Inner { inflight: 0, tenants: HashMap::new() }),
+            metrics,
+        }
+    }
+
+    /// Live admitted streams (terminated permits already excluded).
+    pub fn inflight(&self) -> u64 {
+        self.state.lock().unwrap().inflight
+    }
+
+    /// Streams waiting for a batch slot (the shedding signal).
+    fn queued(inner: &Inner, max_batch: usize) -> u64 {
+        inner.inflight.saturating_sub(max_batch as u64)
+    }
+
+    /// Decide admission for one generate request. Checks run under
+    /// one lock so concurrent connection threads serialize here and
+    /// every decision sees an exact stream count.
+    pub fn try_admit(
+        self: &Arc<Self>,
+        tenant: &str,
+        priority: Priority,
+    ) -> Admission {
+        let mut inner = self.state.lock().unwrap();
+
+        if self.max_streams_per_tenant > 0 {
+            let used = inner.tenants.get(tenant).copied().unwrap_or(0);
+            if used >= self.max_streams_per_tenant as u64 {
+                Metrics::inc(&self.metrics.requests_tenant_limited, 1);
+                return Admission::TenantBusy { retry_after_s: 1 };
+            }
+        }
+
+        let queued = Self::queued(&inner, self.max_batch);
+        if self.shed_queue_depth > 0
+            && queued >= shed_threshold(self.shed_queue_depth, priority)
+        {
+            Metrics::inc(&self.metrics.requests_shed, 1);
+            return Admission::Shed {
+                retry_after_s: self.retry_after(queued),
+            };
+        }
+
+        inner.inflight += 1;
+        *inner.tenants.entry(tenant.to_string()).or_insert(0) += 1;
+        Metrics::set_gauge(&self.metrics.streams_inflight, inner.inflight);
+        Admission::Granted(StreamPermit {
+            ctrl: self.clone(),
+            tenant: tenant.to_string(),
+        })
+    }
+
+    /// Retry-After estimate: one batch-drain interval per queued
+    /// batch-width of work, clamped to [1, 60] seconds. Coarse by
+    /// design — the point is to spread retries, not to promise a slot.
+    fn retry_after(&self, queued: u64) -> u64 {
+        (1 + queued / self.max_batch.max(1) as u64).min(60)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::Ordering;
+
+    fn ctrl(max_batch: usize, shed: usize, per_tenant: usize)
+            -> Arc<AdmissionControl> {
+        Arc::new(AdmissionControl::new(max_batch, shed, per_tenant,
+                                       Arc::new(Metrics::new())))
+    }
+
+    #[test]
+    fn thresholds_order_priority_lanes() {
+        assert_eq!(shed_threshold(2, Priority::Low), 1);
+        assert_eq!(shed_threshold(2, Priority::Normal), 2);
+        assert_eq!(shed_threshold(2, Priority::High), 4);
+        // zero estimate never sheds, even at base 0/1
+        assert_eq!(shed_threshold(0, Priority::Low), 1);
+        assert_eq!(shed_threshold(1, Priority::Low), 1);
+    }
+
+    #[test]
+    fn low_sheds_before_normal_before_high() {
+        let c = ctrl(1, 2, 0);
+        // slot holder + one queued → queued estimate 1
+        let _a = c.try_admit("t", Priority::Normal);
+        let _b = c.try_admit("t", Priority::Normal);
+        assert!(matches!(c.try_admit("t", Priority::Low),
+                         Admission::Shed { .. }));
+        // normal still admits at queued=1, sheds at queued=2
+        let _c2 = match c.try_admit("t", Priority::Normal) {
+            Admission::Granted(p) => p,
+            other => panic!("normal shed early: {other:?}"),
+        };
+        assert!(matches!(c.try_admit("t", Priority::Normal),
+                         Admission::Shed { retry_after_s } if retry_after_s >= 1));
+        // high rides through until 2x the configured depth
+        assert!(matches!(c.try_admit("t", Priority::High),
+                         Admission::Granted(_)));
+        assert_eq!(
+            c.metrics.requests_shed.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn permit_drop_frees_capacity() {
+        let c = ctrl(1, 1, 0);
+        let a = match c.try_admit("t", Priority::Normal) {
+            Admission::Granted(p) => p,
+            _ => unreachable!(),
+        };
+        let _b = c.try_admit("t", Priority::Normal); // queued=0 → granted
+        assert!(matches!(c.try_admit("t", Priority::Normal),
+                         Admission::Shed { .. }));
+        drop(a);
+        assert!(matches!(c.try_admit("t", Priority::Normal),
+                         Admission::Granted(_)));
+        assert_eq!(c.inflight(), 2);
+    }
+
+    #[test]
+    fn tenant_cap_is_per_tenant() {
+        let c = ctrl(8, 0, 1);
+        let _a = c.try_admit("acme", Priority::Normal);
+        assert!(matches!(c.try_admit("acme", Priority::Normal),
+                         Admission::TenantBusy { .. }));
+        assert!(matches!(c.try_admit("globex", Priority::Normal),
+                         Admission::Granted(_)));
+        assert_eq!(
+            c.metrics.requests_tenant_limited.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn shed_disabled_at_zero_depth() {
+        let c = ctrl(1, 0, 0);
+        let permits: Vec<_> = (0..20)
+            .map(|_| match c.try_admit("t", Priority::Low) {
+                Admission::Granted(p) => p,
+                other => panic!("shed with shedding off: {other:?}"),
+            })
+            .collect();
+        assert_eq!(c.inflight(), 20);
+        drop(permits);
+        assert_eq!(c.inflight(), 0);
+    }
+}

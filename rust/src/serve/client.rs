@@ -1,0 +1,253 @@
+//! Minimal blocking HTTP/SSE client for the front end's own tests,
+//! the soak bench, and examples — the other half of the wire format
+//! in `serve::http`, kept in-tree so every consumer speaks exactly
+//! the dialect the server serves (one request per connection, sized
+//! responses except SSE).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::time::Duration;
+
+/// A complete sized response.
+#[derive(Debug)]
+pub struct HttpResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl HttpResponse {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn body_str(&self) -> String {
+        String::from_utf8_lossy(&self.body).into_owned()
+    }
+}
+
+/// One parsed SSE frame.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SseEvent {
+    pub name: String,
+    pub data: String,
+}
+
+fn connect(addr: SocketAddr, timeout: Duration) -> std::io::Result<TcpStream> {
+    let stream = TcpStream::connect_timeout(&addr, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    stream.set_write_timeout(Some(timeout))?;
+    stream.set_nodelay(true)?;
+    Ok(stream)
+}
+
+fn write_request(
+    stream: &mut TcpStream,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "{method} {path} HTTP/1.1\r\nHost: localhost\r\n\
+         Content-Length: {}\r\nConnection: close\r\n",
+        body.len()
+    );
+    for (k, v) in headers {
+        head.push_str(&format!("{k}: {v}\r\n"));
+    }
+    head.push_str("\r\n");
+    stream.write_all(head.as_bytes())?;
+    stream.write_all(body)?;
+    stream.flush()
+}
+
+/// Parse `HTTP/1.1 <status> ...` + headers from `head` (the bytes up
+/// to and excluding the blank line).
+fn parse_head(head: &[u8]) -> std::io::Result<(u16, Vec<(String, String)>)> {
+    let text = std::str::from_utf8(head).map_err(|_| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, "non-utf8 head")
+    })?;
+    let mut lines = text.split("\r\n");
+    let status_line = lines.next().unwrap_or("");
+    let status = status_line
+        .split(' ')
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::InvalidData,
+                                format!("bad status line {status_line:?}"))
+        })?;
+    let mut headers = Vec::new();
+    for line in lines {
+        if let Some((k, v)) = line.split_once(':') {
+            headers.push((k.trim().to_ascii_lowercase(),
+                          v.trim().to_string()));
+        }
+    }
+    Ok((status, headers))
+}
+
+/// Read from `stream` until the header/body separator; returns
+/// (head bytes, already-read body prefix).
+fn read_head(stream: &mut TcpStream) -> std::io::Result<(Vec<u8>, Vec<u8>)> {
+    let mut buf = Vec::with_capacity(512);
+    loop {
+        if let Some(pos) = buf.windows(4).position(|w| w == b"\r\n\r\n") {
+            let rest = buf[pos + 4..].to_vec();
+            buf.truncate(pos);
+            return Ok((buf, rest));
+        }
+        let mut chunk = [0u8; 512];
+        let n = stream.read(&mut chunk)?;
+        if n == 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::UnexpectedEof,
+                "connection closed before response head",
+            ));
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    }
+}
+
+/// Issue one request and read the full response (the server always
+/// closes after the body, so read-to-EOF is the framing).
+pub fn request(
+    addr: SocketAddr,
+    method: &str,
+    path: &str,
+    headers: &[(&str, &str)],
+    body: &[u8],
+    timeout: Duration,
+) -> std::io::Result<HttpResponse> {
+    let mut stream = connect(addr, timeout)?;
+    write_request(&mut stream, method, path, headers, body)?;
+    let (head, mut resp_body) = read_head(&mut stream)?;
+    let (status, headers) = parse_head(&head)?;
+    stream.read_to_end(&mut resp_body)?;
+    Ok(HttpResponse { status, headers, body: resp_body })
+}
+
+/// `POST /v1/generate` that did not become a stream (non-200, or a
+/// `"stream":false` JSON reply) vs. a live SSE stream.
+pub enum GenerateReply {
+    Stream(SseStream),
+    Response(HttpResponse),
+}
+
+/// A live SSE connection; pull frames with `next_event` until `None`
+/// (server closed the stream after its terminal frame).
+pub struct SseStream {
+    stream: TcpStream,
+    buf: Vec<u8>,
+    eof: bool,
+}
+
+impl SseStream {
+    /// Next frame, blocking up to the connect timeout per read.
+    /// `Ok(None)` once the server has closed the stream.
+    pub fn next_event(&mut self) -> std::io::Result<Option<SseEvent>> {
+        loop {
+            if let Some(pos) = self.buf.windows(2).position(|w| w == b"\n\n") {
+                let frame: Vec<u8> = self.buf.drain(..pos + 2).collect();
+                if let Some(ev) = parse_sse_frame(&frame[..pos]) {
+                    return Ok(Some(ev));
+                }
+                continue; // comment/blank frame: keep reading
+            }
+            if self.eof {
+                return Ok(None);
+            }
+            let mut chunk = [0u8; 512];
+            let n = self.stream.read(&mut chunk)?;
+            if n == 0 {
+                self.eof = true;
+                continue;
+            }
+            self.buf.extend_from_slice(&chunk[..n]);
+        }
+    }
+
+    /// Drop the connection without reading further — from the
+    /// server's point of view this is a mid-stream client disconnect.
+    pub fn abort(self) {}
+}
+
+fn parse_sse_frame(frame: &[u8]) -> Option<SseEvent> {
+    let text = std::str::from_utf8(frame).ok()?;
+    let mut name = String::new();
+    let mut data = String::new();
+    for line in text.lines() {
+        if let Some(v) = line.strip_prefix("event:") {
+            name = v.trim().to_string();
+        } else if let Some(v) = line.strip_prefix("data:") {
+            if !data.is_empty() {
+                data.push('\n');
+            }
+            data.push_str(v.trim());
+        }
+    }
+    if name.is_empty() && data.is_empty() {
+        None
+    } else {
+        Some(SseEvent { name, data })
+    }
+}
+
+/// Open a generate request. 200 + `text/event-stream` becomes a
+/// `SseStream`; anything else is returned as a complete response.
+pub fn open_generate(
+    addr: SocketAddr,
+    body: &[u8],
+    headers: &[(&str, &str)],
+    timeout: Duration,
+) -> std::io::Result<GenerateReply> {
+    let mut stream = connect(addr, timeout)?;
+    write_request(&mut stream, "POST", "/v1/generate", headers, body)?;
+    let (head, prefix) = read_head(&mut stream)?;
+    let (status, resp_headers) = parse_head(&head)?;
+    let is_sse = status == 200
+        && resp_headers.iter().any(|(k, v)| {
+            k == "content-type" && v.starts_with("text/event-stream")
+        });
+    if is_sse {
+        return Ok(GenerateReply::Stream(SseStream {
+            stream,
+            buf: prefix,
+            eof: false,
+        }));
+    }
+    let mut body = prefix;
+    stream.read_to_end(&mut body)?;
+    Ok(GenerateReply::Response(HttpResponse {
+        status,
+        headers: resp_headers,
+        body,
+    }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_response_head() {
+        let (status, headers) = parse_head(
+            b"HTTP/1.1 429 Too Many Requests\r\nRetry-After: 2\r\n\
+              Content-Type: application/json").unwrap();
+        assert_eq!(status, 429);
+        assert_eq!(headers[0], ("retry-after".to_string(), "2".to_string()));
+    }
+
+    #[test]
+    fn parses_sse_frames() {
+        let ev = parse_sse_frame(b"event: token\ndata: {\"token\":7}").unwrap();
+        assert_eq!(ev.name, "token");
+        assert_eq!(ev.data, "{\"token\":7}");
+        assert!(parse_sse_frame(b": keep-alive comment").is_none());
+    }
+}

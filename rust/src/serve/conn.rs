@@ -1,0 +1,247 @@
+//! Per-connection request handling: route, admit, and stream.
+//!
+//! One request per connection (`Connection: close`): the connection
+//! lifecycle *is* the request lifecycle, which makes disconnect
+//! semantics exact — a closed socket means the client abandoned the
+//! request, and the handler's reply is `RequestHandle::cancel()`, so
+//! an abandoned stream can never pin a fused-batcher slot
+//! (DESIGN.md §6).
+//!
+//! Routes:
+//!   POST /v1/generate   SSE token stream (or JSON with "stream":false)
+//!   GET  /healthz       {"status":"ok"|"draining"}
+//!   GET  /metrics       Prometheus text exposition
+//!   POST /admin/drain   begin graceful drain
+
+use std::io::ErrorKind;
+use std::net::TcpStream;
+use std::time::Duration;
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::request::{RequestHandle, StreamEvent};
+
+use super::admission::Admission;
+use super::http::{
+    read_request, write_response, write_sse_event, write_sse_head, Request,
+};
+use super::json::{
+    cancelled_body, completion_body, error_body, parse_generate, token_body,
+};
+use super::Shared;
+
+/// Poll interval while an SSE stream waits for the next event; also
+/// the granularity of client-disconnect detection between tokens.
+const STREAM_POLL: Duration = Duration::from_millis(2);
+
+pub(crate) fn handle(mut stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_read_timeout(Some(shared.cfg.read_timeout));
+    let _ = stream.set_write_timeout(Some(shared.cfg.read_timeout));
+    let _ = stream.set_nodelay(true);
+
+    let req = match read_request(&mut stream, shared.cfg.max_head_bytes,
+                                 shared.cfg.max_body_bytes) {
+        Ok(req) => req,
+        Err(err) => {
+            Metrics::inc(&shared.metrics.http_bad_requests, 1);
+            if let Some((status, reason)) = err.status() {
+                let _ = write_response(
+                    &mut stream, status, reason, "application/json", &[],
+                    error_body(&err.message()).as_bytes());
+                lingering_close(&stream);
+            }
+            return;
+        }
+    };
+    route(&mut stream, &req, shared);
+}
+
+/// Lingering close for error replies sent before the request was
+/// fully read (e.g. an oversized body refused up front): send FIN,
+/// then sink whatever the peer already had in flight. Closing with
+/// unread bytes would RST the connection and can destroy the error
+/// response before the client reads it.
+fn lingering_close(stream: &TcpStream) {
+    let _ = stream.shutdown(std::net::Shutdown::Write);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(500)));
+    let mut sunk = 0usize;
+    let mut chunk = [0u8; 4096];
+    let mut r = stream;
+    while sunk < 256 << 10 {
+        match std::io::Read::read(&mut r, &mut chunk) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => sunk += n,
+        }
+    }
+}
+
+fn route(stream: &mut TcpStream, req: &Request, shared: &Shared) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/generate") => generate(stream, req, shared),
+        ("GET", "/healthz") => {
+            let status =
+                if shared.lifecycle.draining() { "draining" } else { "ok" };
+            let body = format!("{{\"status\":\"{status}\"}}");
+            let _ = write_response(stream, 200, "OK", "application/json",
+                                   &[], body.as_bytes());
+        }
+        ("GET", "/metrics") => {
+            let body = shared.metrics.render_prometheus();
+            let _ = write_response(
+                stream, 200, "OK",
+                "text/plain; version=0.0.4; charset=utf-8", &[],
+                body.as_bytes());
+        }
+        ("POST", "/admin/drain") | ("GET", "/admin/drain") => {
+            shared.lifecycle.begin_drain();
+            let body = format!(
+                "{{\"draining\":true,\"inflight\":{}}}",
+                shared.admission.inflight());
+            let _ = write_response(stream, 200, "OK", "application/json",
+                                   &[], body.as_bytes());
+        }
+        (_, path) => {
+            Metrics::inc(&shared.metrics.http_bad_requests, 1);
+            let _ = write_response(
+                stream, 404, "Not Found", "application/json", &[],
+                error_body(&format!("no route for {path}")).as_bytes());
+        }
+    }
+}
+
+fn generate(stream: &mut TcpStream, req: &Request, shared: &Shared) {
+    if shared.lifecycle.draining() {
+        let _ = write_response(
+            stream, 503, "Service Unavailable", "application/json",
+            &[("Retry-After", "1".to_string())],
+            error_body("draining: not accepting new requests").as_bytes());
+        return;
+    }
+    let (gen_req, want_stream) = match parse_generate(&req.body) {
+        Ok(parsed) => parsed,
+        Err(msg) => {
+            Metrics::inc(&shared.metrics.http_bad_requests, 1);
+            let _ = write_response(stream, 400, "Bad Request",
+                                   "application/json", &[],
+                                   error_body(&msg).as_bytes());
+            return;
+        }
+    };
+
+    let tenant = req.header("x-tenant").unwrap_or("default");
+    let permit = match shared.admission.try_admit(tenant, gen_req.priority) {
+        Admission::Granted(permit) => permit,
+        Admission::Shed { retry_after_s } => {
+            let _ = write_response(
+                stream, 429, "Too Many Requests", "application/json",
+                &[("Retry-After", retry_after_s.to_string())],
+                error_body("shed: queue depth over the admission limit")
+                    .as_bytes());
+            return;
+        }
+        Admission::TenantBusy { retry_after_s } => {
+            let _ = write_response(
+                stream, 429, "Too Many Requests", "application/json",
+                &[("Retry-After", retry_after_s.to_string())],
+                error_body(&format!(
+                    "tenant {tenant:?} at its concurrent-stream cap"))
+                    .as_bytes());
+            return;
+        }
+    };
+
+    let handle = shared.engine.submit(gen_req);
+    if want_stream {
+        stream_sse(stream, handle, shared);
+    } else {
+        // non-streaming: drain to the terminal event, reply once. The
+        // engine bounds every request (max_new_tokens / KV), so this
+        // always terminates.
+        match handle.wait() {
+            Some(done) => {
+                let _ = write_response(stream, 200, "OK", "application/json",
+                                       &[], completion_body(&done).as_bytes());
+            }
+            None => {
+                let _ = write_response(
+                    stream, 500, "Internal Server Error", "application/json",
+                    &[], error_body("request terminated without a \
+                                     completion").as_bytes());
+            }
+        }
+    }
+    drop(permit); // stream over: release tenant + inflight accounting
+}
+
+/// Has the peer gone away? A non-blocking zero-byte `peek` result
+/// means orderly close; a hard error (reset) counts too. Extra bytes
+/// the client sends after its request are ignored, not a close.
+fn peer_closed(stream: &TcpStream) -> bool {
+    if stream.set_nonblocking(true).is_err() {
+        return true;
+    }
+    let mut probe = [0u8; 1];
+    let closed = match stream.peek(&mut probe) {
+        Ok(0) => true,
+        Ok(_) => false,
+        Err(e) if e.kind() == ErrorKind::WouldBlock => false,
+        Err(_) => true,
+    };
+    let _ = stream.set_nonblocking(false);
+    closed
+}
+
+/// Stream `Token` events as SSE frames the step they are produced,
+/// ending with one `done`/`cancelled` frame. A write failure or a
+/// closed peer cancels the request so the batcher retires the session
+/// at its next step, then drains the handle so admission accounting
+/// matches the engine's view.
+fn stream_sse(stream: &mut TcpStream, mut handle: RequestHandle,
+              shared: &Shared) {
+    if write_sse_head(stream).is_err() {
+        abandon(&mut handle, shared);
+        return;
+    }
+    let mut index = 0usize;
+    loop {
+        match handle.try_next_event() {
+            Some(StreamEvent::Token(t)) => {
+                let frame = token_body(t, index);
+                index += 1;
+                if write_sse_event(stream, "token", &frame).is_err() {
+                    abandon(&mut handle, shared);
+                    return;
+                }
+            }
+            Some(StreamEvent::Done(done)) => {
+                let _ = write_sse_event(stream, "done",
+                                        &completion_body(&done));
+                return;
+            }
+            Some(StreamEvent::Cancelled { id }) => {
+                let _ = write_sse_event(stream, "cancelled",
+                                        &cancelled_body(id));
+                return;
+            }
+            None if handle.is_terminated() => return,
+            None => {
+                // idle between steps: the cheap moment to notice the
+                // client hung up (otherwise detection waits for the
+                // next token's failed write)
+                if peer_closed(stream) {
+                    abandon(&mut handle, shared);
+                    return;
+                }
+                std::thread::sleep(STREAM_POLL);
+            }
+        }
+    }
+}
+
+/// The client is gone: cancel so the batcher frees the slot, then
+/// drain the handle's channel to its terminal event (bounded: the
+/// batcher reaps the cancel flag at its next step).
+fn abandon(handle: &mut RequestHandle, shared: &Shared) {
+    Metrics::inc(&shared.metrics.client_disconnects, 1);
+    handle.cancel();
+    while handle.next_event().is_some() {}
+}

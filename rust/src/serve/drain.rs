@@ -1,0 +1,136 @@
+//! Graceful-drain state machine and the SIGTERM hook (DESIGN.md §6).
+//!
+//! Drain protocol: `begin_drain()` (from `/admin/drain` or SIGTERM)
+//! flips the server into draining — new generate requests are refused
+//! with 503 while health/metrics stay up and every in-flight stream
+//! runs to its terminal event. Once the stream count hits zero the
+//! accept loop stops and the engine shuts down. The drain duration
+//! lands in `Metrics::last_drain_ns` and the returned `DrainReport`.
+//!
+//! The SIGTERM hook is the one place the crate touches a C API: a
+//! handler that stores into a process-global `AtomicBool` (the only
+//! thing that is async-signal-safe anyway), registered via libc's
+//! `signal` — which every unix target links already, so this stays
+//! dependency-free. Non-unix builds compile the hook to a no-op.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+use std::time::Instant;
+
+/// Server lifecycle flags shared by the acceptor, connection threads,
+/// and the drain waiter.
+#[derive(Default)]
+pub struct Lifecycle {
+    draining: AtomicBool,
+    stop_accepting: AtomicBool,
+    drain_started: Mutex<Option<Instant>>,
+}
+
+/// What a completed drain looked like.
+#[derive(Debug, Clone, Copy)]
+pub struct DrainReport {
+    /// every in-flight stream terminated before the deadline
+    pub drained: bool,
+    /// begin_drain → zero in-flight streams
+    pub drain_ms: f64,
+    /// streams that were in flight when the drain began
+    pub inflight_at_start: u64,
+}
+
+impl Lifecycle {
+    pub fn new() -> Lifecycle {
+        Lifecycle::default()
+    }
+
+    /// Enter draining (idempotent; the first call wins the clock).
+    /// Returns whether this call initiated the drain.
+    pub fn begin_drain(&self) -> bool {
+        let first = !self.draining.swap(true, Ordering::SeqCst);
+        if first {
+            *self.drain_started.lock().unwrap() = Some(Instant::now());
+        }
+        first
+    }
+
+    pub fn draining(&self) -> bool {
+        self.draining.load(Ordering::SeqCst)
+    }
+
+    /// Milliseconds since `begin_drain` (0.0 if not draining).
+    pub fn drain_elapsed_ms(&self) -> f64 {
+        self.drain_started
+            .lock()
+            .unwrap()
+            .map(|t| t.elapsed().as_secs_f64() * 1e3)
+            .unwrap_or(0.0)
+    }
+
+    /// Tell the accept loop to exit (after drain completes, or on a
+    /// hard shutdown).
+    pub fn stop_accepting(&self) {
+        self.stop_accepting.store(true, Ordering::SeqCst);
+    }
+
+    pub fn accepting_stopped(&self) -> bool {
+        self.stop_accepting.load(Ordering::SeqCst)
+    }
+}
+
+static SIGTERM_SEEN: AtomicBool = AtomicBool::new(false);
+
+#[cfg(unix)]
+extern "C" fn on_sigterm(_sig: i32) {
+    // async-signal-safe: a single atomic store, nothing else
+    SIGTERM_SEEN.store(true, Ordering::SeqCst);
+}
+
+/// Install the SIGTERM → drain flag hook. Call once from the serving
+/// binary before blocking in the accept loop; the main loop polls
+/// [`sigterm_seen`] and begins a drain when it flips.
+pub fn install_sigterm_hook() {
+    #[cfg(unix)]
+    {
+        extern "C" {
+            // libc::signal without the libc crate: every unix target
+            // already links libc, and usize holds the handler pointer
+            fn signal(signum: i32, handler: usize) -> usize;
+        }
+        const SIGTERM: i32 = 15;
+        unsafe {
+            signal(SIGTERM, on_sigterm as usize);
+        }
+    }
+}
+
+/// Has SIGTERM been delivered since the hook was installed?
+pub fn sigterm_seen() -> bool {
+    SIGTERM_SEEN.load(Ordering::SeqCst)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drain_is_idempotent_and_timed() {
+        let lc = Lifecycle::new();
+        assert!(!lc.draining());
+        assert_eq!(lc.drain_elapsed_ms(), 0.0);
+        assert!(lc.begin_drain(), "first call initiates");
+        assert!(!lc.begin_drain(), "second call is a no-op");
+        assert!(lc.draining());
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert!(lc.drain_elapsed_ms() >= 4.0);
+        assert!(!lc.accepting_stopped());
+        lc.stop_accepting();
+        assert!(lc.accepting_stopped());
+    }
+
+    #[test]
+    fn sigterm_hook_installs() {
+        // just exercises the registration path; delivering a real
+        // SIGTERM would tear down the test harness
+        install_sigterm_hook();
+        assert!(!sigterm_seen());
+    }
+}

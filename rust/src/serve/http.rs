@@ -1,0 +1,335 @@
+//! HTTP/1.1 wire format: request parsing and response writing over
+//! any `Read`/`Write` stream (dependency-free; no hyper offline).
+//!
+//! The parser is deliberately strict and small: request line +
+//! headers (capped at `max_head` bytes), then an optional
+//! `Content-Length` body (capped at `max_body` bytes). Chunked
+//! transfer encoding is not accepted — every client this server
+//! speaks to (tests, the soak bench, `curl`) sends sized bodies.
+//! Every error maps to one response status so a malformed request can
+//! never wedge the connection thread (DESIGN.md §6).
+
+use std::io::{ErrorKind, Read, Write};
+
+/// A parsed request. Header names are lowercased at parse time so
+/// lookups are case-insensitive (RFC 9110 §5.1).
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    /// path with any `?query` suffix stripped
+    pub path: String,
+    pub headers: Vec<(String, String)>,
+    pub body: Vec<u8>,
+}
+
+impl Request {
+    pub fn header(&self, name: &str) -> Option<&str> {
+        let name = name.to_ascii_lowercase();
+        self.headers
+            .iter()
+            .find(|(k, _)| *k == name)
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+/// Parse failures, each with a definite response status.
+#[derive(Debug, PartialEq, Eq)]
+pub enum HttpError {
+    /// syntactically broken request line / headers / length → 400
+    Malformed(&'static str),
+    /// request head exceeded `max_head` → 431
+    HeadTooLarge,
+    /// declared Content-Length exceeded `max_body` → 413
+    BodyTooLarge(usize),
+    /// the peer stalled past the socket read timeout → 408
+    Timeout,
+    /// the peer closed before sending a complete request → no reply
+    Closed,
+}
+
+impl HttpError {
+    /// (status, reason) to answer with; `None` for `Closed` (there is
+    /// nobody left to answer).
+    pub fn status(&self) -> Option<(u16, &'static str)> {
+        match self {
+            HttpError::Malformed(_) => Some((400, "Bad Request")),
+            HttpError::HeadTooLarge => {
+                Some((431, "Request Header Fields Too Large"))
+            }
+            HttpError::BodyTooLarge(_) => {
+                Some((413, "Content Too Large"))
+            }
+            HttpError::Timeout => Some((408, "Request Timeout")),
+            HttpError::Closed => None,
+        }
+    }
+
+    pub fn message(&self) -> String {
+        match self {
+            HttpError::Malformed(why) => format!("malformed request: {why}"),
+            HttpError::HeadTooLarge => "request head too large".to_string(),
+            HttpError::BodyTooLarge(n) => {
+                format!("request body of {n} bytes exceeds the limit")
+            }
+            HttpError::Timeout => "timed out reading the request".to_string(),
+            HttpError::Closed => "connection closed".to_string(),
+        }
+    }
+}
+
+fn io_err(e: &std::io::Error) -> HttpError {
+    match e.kind() {
+        ErrorKind::WouldBlock | ErrorKind::TimedOut => HttpError::Timeout,
+        _ => HttpError::Closed,
+    }
+}
+
+/// Read one request off the stream. `max_head` bounds the request
+/// line + headers; `max_body` bounds the declared Content-Length
+/// (checked before any body byte is read, so oversized uploads are
+/// refused without buffering them).
+pub fn read_request<R: Read>(
+    r: &mut R,
+    max_head: usize,
+    max_body: usize,
+) -> Result<Request, HttpError> {
+    // accumulate until the blank line that ends the head
+    let mut buf: Vec<u8> = Vec::with_capacity(512);
+    let head_end = loop {
+        if let Some(pos) = find_head_end(&buf) {
+            break pos;
+        }
+        if buf.len() > max_head {
+            return Err(HttpError::HeadTooLarge);
+        }
+        let mut chunk = [0u8; 512];
+        let n = r.read(&mut chunk).map_err(|e| io_err(&e))?;
+        if n == 0 {
+            return if buf.is_empty() {
+                Err(HttpError::Closed)
+            } else {
+                Err(HttpError::Malformed("eof inside request head"))
+            };
+        }
+        buf.extend_from_slice(&chunk[..n]);
+    };
+
+    let head = std::str::from_utf8(&buf[..head_end])
+        .map_err(|_| HttpError::Malformed("non-utf8 request head"))?;
+    let mut lines = head.split("\r\n");
+    let request_line =
+        lines.next().ok_or(HttpError::Malformed("empty request"))?;
+    let mut parts = request_line.split(' ');
+    let method = parts
+        .next()
+        .filter(|m| !m.is_empty())
+        .ok_or(HttpError::Malformed("missing method"))?
+        .to_string();
+    let target = parts
+        .next()
+        .ok_or(HttpError::Malformed("missing request target"))?;
+    let version = parts
+        .next()
+        .ok_or(HttpError::Malformed("missing http version"))?;
+    if !version.starts_with("HTTP/1.") {
+        return Err(HttpError::Malformed("unsupported http version"));
+    }
+    let path = target.split('?').next().unwrap_or(target).to_string();
+    if !path.starts_with('/') {
+        return Err(HttpError::Malformed("request target must be a path"));
+    }
+
+    let mut headers = Vec::new();
+    for line in lines {
+        if line.is_empty() {
+            continue;
+        }
+        let (name, value) = line
+            .split_once(':')
+            .ok_or(HttpError::Malformed("header without a colon"))?;
+        headers.push((
+            name.trim().to_ascii_lowercase(),
+            value.trim().to_string(),
+        ));
+    }
+
+    // body: everything we over-read past the head, plus the rest of
+    // the declared Content-Length
+    let declared = match headers.iter().find(|(k, _)| k == "content-length") {
+        None => 0usize,
+        Some((_, v)) => v
+            .parse::<usize>()
+            .map_err(|_| HttpError::Malformed("bad content-length"))?,
+    };
+    if declared > max_body {
+        return Err(HttpError::BodyTooLarge(declared));
+    }
+    let mut body = buf[head_end + 4..].to_vec();
+    if body.len() > declared {
+        // pipelined extra bytes: this server answers one request per
+        // connection (Connection: close), so trailing bytes are noise
+        body.truncate(declared);
+    }
+    while body.len() < declared {
+        let mut chunk = [0u8; 4096];
+        let want = (declared - body.len()).min(chunk.len());
+        let n = r.read(&mut chunk[..want]).map_err(|e| io_err(&e))?;
+        if n == 0 {
+            return Err(HttpError::Malformed("eof inside request body"));
+        }
+        body.extend_from_slice(&chunk[..n]);
+    }
+
+    Ok(Request { method, path, headers, body })
+}
+
+fn find_head_end(buf: &[u8]) -> Option<usize> {
+    buf.windows(4).position(|w| w == b"\r\n\r\n")
+}
+
+/// Write a complete sized response. Every response carries
+/// `Connection: close` — one request per connection keeps the state
+/// machine trivial and matches SSE semantics (the stream *is* the
+/// rest of the connection).
+pub fn write_response<W: Write>(
+    w: &mut W,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    extra_headers: &[(&str, String)],
+    body: &[u8],
+) -> std::io::Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
+         Content-Length: {}\r\nConnection: close\r\n",
+        body.len()
+    );
+    for (k, v) in extra_headers {
+        head.push_str(k);
+        head.push_str(": ");
+        head.push_str(v);
+        head.push_str("\r\n");
+    }
+    head.push_str("\r\n");
+    w.write_all(head.as_bytes())?;
+    w.write_all(body)?;
+    w.flush()
+}
+
+/// Start an SSE response: status line + streaming headers, no
+/// Content-Length (the body is the event stream until close).
+pub fn write_sse_head<W: Write>(w: &mut W) -> std::io::Result<()> {
+    w.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\n\
+          Cache-Control: no-cache\r\nConnection: close\r\n\r\n",
+    )?;
+    w.flush()
+}
+
+/// One SSE frame: `event: <name>\ndata: <data>\n\n`, flushed so the
+/// client sees each token the step it was produced.
+pub fn write_sse_event<W: Write>(
+    w: &mut W,
+    name: &str,
+    data: &str,
+) -> std::io::Result<()> {
+    w.write_all(format!("event: {name}\ndata: {data}\n\n").as_bytes())?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(raw: &[u8]) -> Result<Request, HttpError> {
+        read_request(&mut &raw[..], 8192, 1 << 20)
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /v1/generate?x=1 HTTP/1.1\r\nHost: a\r\n\
+                    X-Tenant: acme\r\nContent-Length: 4\r\n\r\nabcd";
+        let req = parse(raw).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.header("x-tenant"), Some("acme"));
+        assert_eq!(req.header("X-TENANT"), Some("acme"));
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn parses_get_without_body() {
+        let req = parse(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
+        assert_eq!(req.method, "GET");
+        assert_eq!(req.path, "/healthz");
+        assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(matches!(parse(b"nonsense\r\n\r\n"),
+                         Err(HttpError::Malformed(_))));
+        assert!(matches!(parse(b"GET /x SPDY/3\r\n\r\n"),
+                         Err(HttpError::Malformed(_))));
+        assert!(matches!(
+            parse(b"POST /x HTTP/1.1\r\nContent-Length: zzz\r\n\r\n"),
+            Err(HttpError::Malformed(_))
+        ));
+        assert!(matches!(parse(b""), Err(HttpError::Closed)));
+        assert!(matches!(parse(b"GET / HTTP/1.1\r\nX: y"),
+                         Err(HttpError::Malformed(_))));
+    }
+
+    #[test]
+    fn caps_head_and_body() {
+        let big = format!("GET /{} HTTP/1.1\r\n\r\n", "a".repeat(9000));
+        assert_eq!(parse(big.as_bytes()), Err(HttpError::HeadTooLarge));
+        let raw = b"POST /x HTTP/1.1\r\nContent-Length: 2000000\r\n\r\n";
+        assert_eq!(parse(raw), Err(HttpError::BodyTooLarge(2_000_000)));
+    }
+
+    #[test]
+    fn body_split_across_reads() {
+        // a reader that returns one byte at a time exercises the
+        // accumulation loop
+        struct OneByte<'a>(&'a [u8]);
+        impl Read for OneByte<'_> {
+            fn read(&mut self, out: &mut [u8]) -> std::io::Result<usize> {
+                if self.0.is_empty() {
+                    return Ok(0);
+                }
+                out[0] = self.0[0];
+                self.0 = &self.0[1..];
+                Ok(1)
+            }
+        }
+        let raw = b"POST /g HTTP/1.1\r\nContent-Length: 3\r\n\r\nxyz";
+        let req = read_request(&mut OneByte(raw), 8192, 64).unwrap();
+        assert_eq!(req.body, b"xyz");
+    }
+
+    #[test]
+    fn response_roundtrips_through_parser_shape() {
+        let mut out = Vec::new();
+        write_response(&mut out, 429, "Too Many Requests",
+                       "application/json",
+                       &[("Retry-After", "2".to_string())],
+                       b"{\"error\":\"shed\"}")
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"));
+        assert!(text.contains("Retry-After: 2\r\n"));
+        assert!(text.contains("Connection: close\r\n"));
+        assert!(text.ends_with("{\"error\":\"shed\"}"));
+    }
+
+    #[test]
+    fn sse_frames() {
+        let mut out = Vec::new();
+        write_sse_head(&mut out).unwrap();
+        write_sse_event(&mut out, "token", "{\"token\":7}").unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Content-Type: text/event-stream"));
+        assert!(text.ends_with("event: token\ndata: {\"token\":7}\n\n"));
+    }
+}

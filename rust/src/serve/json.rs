@@ -1,0 +1,279 @@
+//! JSON bodies for the HTTP front end: `POST /v1/generate` request
+//! decoding and completion / SSE event encoding, built on the
+//! dependency-free `util::json` parser (no serde offline).
+//!
+//! Request schema (everything but `prompt` optional):
+//!
+//! ```json
+//! {
+//!   "prompt": [1, 5, 80, 3],
+//!   "max_new_tokens": 16,
+//!   "temperature": 0.8, "top_k": 40, "top_p": 0.95, "seed": 7,
+//!   "stop": "eos" | "max_len" | [17, 9],
+//!   "priority": "high" | "normal" | "low",
+//!   "stream": true
+//! }
+//! ```
+//!
+//! As on the CLI, passing a truncation knob (`top_k`/`top_p`) without
+//! `temperature` implies temperature 1.0 — otherwise the greedy
+//! short-circuit would silently ignore the knobs.
+
+use crate::coordinator::request::{
+    Completion, FinishReason, GenerateRequest, Priority, SamplingParams,
+    StopCondition,
+};
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Decode a generate body. The error string is sent back verbatim in
+/// a 400 response, so messages name the offending field.
+pub fn parse_generate(body: &[u8]) -> Result<(GenerateRequest, bool), String> {
+    let text = std::str::from_utf8(body)
+        .map_err(|_| "body is not utf-8".to_string())?;
+    if text.trim().is_empty() {
+        return Err("empty body (expected a JSON object)".to_string());
+    }
+    let json = Json::parse(text).map_err(|e| format!("invalid JSON: {e}"))?;
+    let prompt_json = json
+        .opt("prompt")
+        .ok_or_else(|| "missing required field \"prompt\"".to_string())?;
+    let mut prompt = Vec::new();
+    for (i, v) in prompt_json
+        .as_arr()
+        .map_err(|_| "\"prompt\" must be an array of token ids".to_string())?
+        .iter()
+        .enumerate()
+    {
+        let t = v
+            .as_usize()
+            .map_err(|_| format!("prompt[{i}] is not a token id"))?;
+        let t = u32::try_from(t)
+            .map_err(|_| format!("prompt[{i}] out of u32 range"))?;
+        prompt.push(t);
+    }
+
+    let field_usize = |name: &str, default: usize| -> Result<usize, String> {
+        match json.opt(name) {
+            None => Ok(default),
+            Some(v) => v
+                .as_usize()
+                .map_err(|_| format!("\"{name}\" must be a non-negative integer")),
+        }
+    };
+    let field_f32 = |name: &str, default: f32| -> Result<f32, String> {
+        match json.opt(name) {
+            None => Ok(default),
+            Some(v) => {
+                Ok(v.as_f64()
+                    .map_err(|_| format!("\"{name}\" must be a number"))?
+                    as f32)
+            }
+        }
+    };
+
+    let max_new_tokens = field_usize("max_new_tokens", 16)?;
+    let top_k = field_usize("top_k", 0)?;
+    let top_p = field_f32("top_p", 1.0)?;
+    let wants_sampling =
+        json.opt("top_k").is_some() || json.opt("top_p").is_some();
+    let default_temp = if wants_sampling { 1.0 } else { 0.0 };
+    let temperature = field_f32("temperature", default_temp)?;
+    let seed = field_usize("seed", 5)? as u64;
+
+    let stop = match json.opt("stop") {
+        None => StopCondition::Eos,
+        Some(Json::Str(mode)) => match mode.as_str() {
+            "eos" => StopCondition::Eos,
+            "max_len" => StopCondition::MaxLen,
+            other => {
+                return Err(format!(
+                    "\"stop\" must be \"eos\", \"max_len\", or a token \
+                     array, got {other:?}"
+                ))
+            }
+        },
+        Some(Json::Arr(tokens)) => {
+            let mut set = Vec::new();
+            for (i, v) in tokens.iter().enumerate() {
+                let t = v
+                    .as_usize()
+                    .map_err(|_| format!("stop[{i}] is not a token id"))?;
+                set.push(t as u32);
+            }
+            StopCondition::StopTokens(set)
+        }
+        Some(_) => {
+            return Err("\"stop\" must be \"eos\", \"max_len\", or a token \
+                        array"
+                .to_string())
+        }
+    };
+
+    let priority = match json.opt("priority") {
+        None => Priority::Normal,
+        Some(v) => {
+            let name = v
+                .as_str()
+                .map_err(|_| "\"priority\" must be a string".to_string())?;
+            parse_priority(name).ok_or_else(|| {
+                format!("\"priority\" must be high|normal|low, got {name:?}")
+            })?
+        }
+    };
+
+    let stream = match json.opt("stream") {
+        None => true,
+        Some(v) => v
+            .as_bool()
+            .map_err(|_| "\"stream\" must be a boolean".to_string())?,
+    };
+
+    let req = GenerateRequest {
+        prompt,
+        max_new_tokens,
+        sampling: SamplingParams { temperature, top_k, top_p, seed },
+        stop,
+        priority,
+    };
+    Ok((req, stream))
+}
+
+pub fn parse_priority(name: &str) -> Option<Priority> {
+    match name {
+        "high" => Some(Priority::High),
+        "normal" => Some(Priority::Normal),
+        "low" => Some(Priority::Low),
+        _ => None,
+    }
+}
+
+/// `finish` as wire strings; a `Stop` carries the stopping token in a
+/// sibling `stop_token` field.
+fn finish_fields(f: &FinishReason) -> (&'static str, Option<u32>) {
+    match f {
+        FinishReason::Stop(t) => ("stop", Some(*t)),
+        FinishReason::MaxTokens => ("max_tokens", None),
+        FinishReason::Cancelled => ("cancelled", None),
+        FinishReason::Rejected => ("rejected", None),
+    }
+}
+
+/// The completion object: the non-streaming response body and the
+/// `done` SSE event's data.
+pub fn completion_body(c: &Completion) -> String {
+    let (finish, stop_token) = finish_fields(&c.finish);
+    let mut pairs = vec![
+        ("id", num(c.id as f64)),
+        ("tokens", arr(c.tokens.iter().map(|&t| num(t as f64)))),
+        ("finish", s(finish)),
+        ("ttft_ms", num(c.ttft_ns as f64 / 1e6)),
+        ("total_ms", num(c.total_ns as f64 / 1e6)),
+    ];
+    if let Some(t) = stop_token {
+        pairs.push(("stop_token", num(t as f64)));
+    }
+    obj(pairs).to_string()
+}
+
+/// One streamed token: `{"token":t,"index":i}`.
+pub fn token_body(token: u32, index: usize) -> String {
+    obj(vec![("token", num(token as f64)), ("index", num(index as f64))])
+        .to_string()
+}
+
+pub fn cancelled_body(id: u64) -> String {
+    obj(vec![("id", num(id as f64))]).to_string()
+}
+
+pub fn error_body(message: &str) -> String {
+    obj(vec![("error", s(message))]).to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn full_request_roundtrip() {
+        let body = br#"{"prompt":[1,5,80,3],"max_new_tokens":8,
+            "temperature":0.8,"top_k":4,"top_p":0.9,"seed":7,
+            "stop":[9,17],"priority":"high","stream":false}"#;
+        let (req, stream) = parse_generate(body).unwrap();
+        assert_eq!(req.prompt, vec![1, 5, 80, 3]);
+        assert_eq!(req.max_new_tokens, 8);
+        assert_eq!(req.sampling.temperature, 0.8);
+        assert_eq!(req.sampling.top_k, 4);
+        assert_eq!(req.sampling.seed, 7);
+        assert_eq!(req.stop, StopCondition::StopTokens(vec![9, 17]));
+        assert_eq!(req.priority, Priority::High);
+        assert!(!stream);
+    }
+
+    #[test]
+    fn defaults_are_greedy_streaming_eos() {
+        let (req, stream) = parse_generate(br#"{"prompt":[2,3]}"#).unwrap();
+        assert_eq!(req.max_new_tokens, 16);
+        assert!(req.sampling.is_greedy());
+        assert_eq!(req.stop, StopCondition::Eos);
+        assert_eq!(req.priority, Priority::Normal);
+        assert!(stream);
+    }
+
+    #[test]
+    fn truncation_knobs_imply_sampling() {
+        let (req, _) =
+            parse_generate(br#"{"prompt":[1],"top_k":5}"#).unwrap();
+        assert_eq!(req.sampling.temperature, 1.0);
+        assert_eq!(req.sampling.top_k, 5);
+    }
+
+    #[test]
+    fn named_stop_modes() {
+        let (req, _) =
+            parse_generate(br#"{"prompt":[1],"stop":"max_len"}"#).unwrap();
+        assert_eq!(req.stop, StopCondition::MaxLen);
+        let (req, _) =
+            parse_generate(br#"{"prompt":[1],"stop":"eos"}"#).unwrap();
+        assert_eq!(req.stop, StopCondition::Eos);
+    }
+
+    #[test]
+    fn errors_name_the_field() {
+        assert!(parse_generate(b"").unwrap_err().contains("empty body"));
+        assert!(parse_generate(b"not json").unwrap_err().contains("JSON"));
+        assert!(parse_generate(br#"{"max_new_tokens":4}"#)
+            .unwrap_err()
+            .contains("prompt"));
+        assert!(parse_generate(br#"{"prompt":[1.5]}"#)
+            .unwrap_err()
+            .contains("prompt[0]"));
+        assert!(parse_generate(br#"{"prompt":[1],"priority":"vip"}"#)
+            .unwrap_err()
+            .contains("priority"));
+        assert!(parse_generate(br#"{"prompt":[1],"stop":5}"#)
+            .unwrap_err()
+            .contains("stop"));
+        assert!(parse_generate(br#"{"prompt":[1],"stream":"yes"}"#)
+            .unwrap_err()
+            .contains("stream"));
+    }
+
+    #[test]
+    fn completion_and_event_bodies() {
+        let c = Completion {
+            id: 3,
+            tokens: vec![10, 11],
+            finish: FinishReason::Stop(11),
+            ttft_ns: 2_000_000,
+            total_ns: 5_000_000,
+        };
+        let body = completion_body(&c);
+        assert!(body.contains("\"tokens\":[10,11]"), "{body}");
+        assert!(body.contains("\"finish\":\"stop\""), "{body}");
+        assert!(body.contains("\"stop_token\":11"), "{body}");
+        assert!(body.contains("\"ttft_ms\":2"), "{body}");
+        assert_eq!(token_body(7, 0), r#"{"index":0,"token":7}"#);
+        assert_eq!(cancelled_body(9), r#"{"id":9}"#);
+        assert_eq!(error_body("nope"), r#"{"error":"nope"}"#);
+    }
+}

@@ -1,0 +1,314 @@
+//! HTTP/SSE serving front end (DESIGN.md §6): the network layer that
+//! turns the in-process `coordinator::Server` into a socket-reachable
+//! service with a production admission envelope.
+//!
+//! - `POST /v1/generate` — JSON body → `GenerateRequest`; response is
+//!   an SSE stream of `token`/`done`/`cancelled` events (or a single
+//!   JSON completion with `"stream": false`)
+//! - `GET /healthz`, `GET /metrics` (Prometheus text exposition),
+//!   `POST /admin/drain`
+//! - connection cap (`--max-conns`), per-tenant concurrent-stream cap
+//!   keyed by the `X-Tenant` header, queue-depth load shedding with
+//!   priority lanes (429 + Retry-After, low sheds first), client
+//!   disconnect → `RequestHandle::cancel`, graceful drain on
+//!   SIGTERM / `/admin/drain`
+//!
+//! Topology: one nonblocking acceptor thread plus a fixed pool of
+//! `max_conns` connection threads (256 KiB stacks — they parse and
+//! stream, nothing deep) fed over an mpsc channel; the acceptor
+//! answers over-capacity connections with 503 inline so a full pool
+//! sheds instead of wedging. The engine `Server`'s own worker drives
+//! the fused batcher exactly as in-process callers use it — the front
+//! end is strictly additive.
+
+pub mod admission;
+pub mod client;
+mod conn;
+pub mod drain;
+pub mod http;
+pub mod json;
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::metrics::Metrics;
+use crate::coordinator::Server;
+
+use admission::AdmissionControl;
+use drain::{DrainReport, Lifecycle};
+
+/// Front-end knobs (`mc-moe serve --host/--port/...`).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub host: String,
+    /// 0 = OS-assigned (tests); read back via [`HttpServer::addr`]
+    pub port: u16,
+    /// connection-pool size; further connections get an inline 503
+    pub max_conns: usize,
+    /// concurrent streams per `X-Tenant` value (0 = unlimited)
+    pub max_streams_per_tenant: usize,
+    /// queued-stream depth at which Normal priority sheds (0 = off);
+    /// Low sheds at half this, High at twice (DESIGN.md §6)
+    pub shed_queue_depth: usize,
+    /// fused-batcher slot count (queue depth = streams beyond this)
+    pub max_batch: usize,
+    pub max_head_bytes: usize,
+    pub max_body_bytes: usize,
+    /// socket read/write timeout (slow-client guard)
+    pub read_timeout: Duration,
+    /// how long `shutdown` waits for in-flight streams to finish
+    pub drain_timeout: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            host: "127.0.0.1".to_string(),
+            port: 8080,
+            max_conns: 256,
+            max_streams_per_tenant: 32,
+            shed_queue_depth: 64,
+            max_batch: 4,
+            max_head_bytes: 8 << 10,
+            max_body_bytes: 1 << 20,
+            read_timeout: Duration::from_secs(10),
+            drain_timeout: Duration::from_secs(30),
+        }
+    }
+}
+
+/// State shared by the acceptor, connection threads, and the owner.
+pub(crate) struct Shared {
+    pub engine: Arc<Server>,
+    pub metrics: Arc<Metrics>,
+    pub admission: Arc<AdmissionControl>,
+    pub lifecycle: Lifecycle,
+    pub cfg: ServeConfig,
+}
+
+pub struct HttpServer {
+    shared: Arc<Shared>,
+    addr: SocketAddr,
+    acceptor: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    /// held so dropping it closes the pool's intake after the
+    /// acceptor exits
+    conn_tx: Option<Sender<TcpStream>>,
+}
+
+impl HttpServer {
+    /// Bind and start serving. The engine `Server` should have been
+    /// spawned with `cfg.max_batch` slots so admission's queue-depth
+    /// estimate matches the batcher's capacity.
+    pub fn bind(engine: Server, cfg: ServeConfig) -> Result<HttpServer> {
+        let listener = TcpListener::bind((cfg.host.as_str(), cfg.port))
+            .with_context(|| format!("bind {}:{}", cfg.host, cfg.port))?;
+        let addr = listener.local_addr()?;
+        listener
+            .set_nonblocking(true)
+            .context("nonblocking accept loop")?;
+
+        let metrics = engine.metrics.clone();
+        let admission = Arc::new(AdmissionControl::new(
+            cfg.max_batch,
+            cfg.shed_queue_depth,
+            cfg.max_streams_per_tenant,
+            metrics.clone(),
+        ));
+        let shared = Arc::new(Shared {
+            engine: Arc::new(engine),
+            metrics,
+            admission,
+            lifecycle: Lifecycle::new(),
+            cfg: cfg.clone(),
+        });
+
+        let (conn_tx, conn_rx): (Sender<TcpStream>, Receiver<TcpStream>) =
+            channel();
+        let conn_rx = Arc::new(Mutex::new(conn_rx));
+        let workers = (0..cfg.max_conns.max(1))
+            .map(|i| {
+                let rx = conn_rx.clone();
+                let shared = shared.clone();
+                std::thread::Builder::new()
+                    .name(format!("mc-conn-{i}"))
+                    .stack_size(256 << 10)
+                    .spawn(move || worker_loop(rx, shared))
+                    .expect("spawn connection worker")
+            })
+            .collect();
+
+        let acceptor = {
+            let shared = shared.clone();
+            let tx = conn_tx.clone();
+            std::thread::Builder::new()
+                .name("mc-accept".to_string())
+                .spawn(move || accept_loop(listener, tx, shared))
+                .expect("spawn acceptor")
+        };
+
+        Ok(HttpServer {
+            shared,
+            addr,
+            acceptor: Some(acceptor),
+            workers,
+            conn_tx: Some(conn_tx),
+        })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        self.shared.metrics.clone()
+    }
+
+    /// Enter draining: health reports "draining", new generate
+    /// requests get 503, in-flight streams run to completion.
+    pub fn begin_drain(&self) {
+        self.shared.lifecycle.begin_drain();
+    }
+
+    pub fn draining(&self) -> bool {
+        self.shared.lifecycle.draining()
+    }
+
+    /// Live admitted generate streams.
+    pub fn inflight(&self) -> u64 {
+        self.shared.admission.inflight()
+    }
+
+    /// Block until a drain has been requested (via [`begin_drain`],
+    /// `/admin/drain`, or SIGTERM once [`drain::install_sigterm_hook`]
+    /// ran) and every in-flight stream has terminated, then tear
+    /// down. This is `mc-moe serve`'s main loop.
+    pub fn serve_until_drained(self) -> DrainReport {
+        loop {
+            if drain::sigterm_seen() {
+                self.shared.lifecycle.begin_drain();
+            }
+            if self.shared.lifecycle.draining()
+                && self.shared.admission.inflight() == 0
+            {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        self.shutdown()
+    }
+
+    /// Graceful stop: drain (bounded by `cfg.drain_timeout`), stop
+    /// accepting, join every thread, shut the engine down. The
+    /// measured drain latency lands in `Metrics::last_drain_ns`.
+    pub fn shutdown(mut self) -> DrainReport {
+        let shared = &self.shared;
+        let inflight_at_start = shared.admission.inflight();
+        shared.lifecycle.begin_drain();
+        let deadline = std::time::Instant::now() + shared.cfg.drain_timeout;
+        while shared.admission.inflight() > 0
+            && std::time::Instant::now() < deadline
+        {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let drained = shared.admission.inflight() == 0;
+        let drain_ms = shared.lifecycle.drain_elapsed_ms();
+        Metrics::set_gauge(&shared.metrics.last_drain_ns,
+                           (drain_ms * 1e6) as u64);
+
+        shared.lifecycle.stop_accepting();
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        // close the pool intake; workers exit once the queue drains
+        drop(self.conn_tx.take());
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        // the engine Server's Drop sends Shutdown and joins its worker
+        DrainReport { drained, drain_ms, inflight_at_start }
+    }
+}
+
+fn worker_loop(rx: Arc<Mutex<Receiver<TcpStream>>>, shared: Arc<Shared>) {
+    loop {
+        // hold the lock only for the recv, not while handling
+        let stream = match rx.lock().unwrap().recv() {
+            Ok(s) => s,
+            Err(_) => return, // intake closed: shutdown
+        };
+        conn::handle(stream, &shared);
+        let active = shared
+            .metrics
+            .http_conns_active
+            .fetch_sub(1, std::sync::atomic::Ordering::Relaxed);
+        debug_assert!(active > 0, "conn gauge underflow");
+    }
+}
+
+fn accept_loop(listener: TcpListener, tx: Sender<TcpStream>,
+               shared: Arc<Shared>) {
+    use std::sync::atomic::Ordering;
+    loop {
+        if shared.lifecycle.accepting_stopped() {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let active =
+                    shared.metrics.http_conns_active.load(Ordering::Relaxed);
+                if active >= shared.cfg.max_conns as u64 {
+                    // inline 503: over-capacity connections are told
+                    // to back off instead of queueing unserved
+                    Metrics::inc(&shared.metrics.http_conns_rejected, 1);
+                    let mut stream = stream;
+                    let _ = stream.set_write_timeout(
+                        Some(Duration::from_secs(1)));
+                    let _ = http::write_response(
+                        &mut stream, 503, "Service Unavailable",
+                        "application/json",
+                        &[("Retry-After", "1".to_string())],
+                        json::error_body("connection limit reached")
+                            .as_bytes());
+                    continue;
+                }
+                Metrics::inc(&shared.metrics.http_conns_accepted, 1);
+                shared
+                    .metrics
+                    .http_conns_active
+                    .fetch_add(1, Ordering::Relaxed);
+                if tx.send(stream).is_err() {
+                    return; // pool gone: shutting down
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => {
+                // transient accept failure (EMFILE, reset during
+                // handshake): brief backoff, keep serving
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn config_defaults_are_sane() {
+        let cfg = ServeConfig::default();
+        assert!(cfg.max_conns >= 1);
+        assert!(cfg.max_body_bytes >= 1024);
+        assert!(cfg.shed_queue_depth > 0);
+        assert_eq!(cfg.host, "127.0.0.1");
+    }
+}

@@ -107,10 +107,12 @@ fn fused_batcher_parity_under_budget() {
         let mut b = Batcher::new(Arc::new(model), None, 2);
         let prompts: [&[u32]; 3] =
             [&[1, 5, 80, 3], &[2, 9, 81, 44, 7], &[1, 30, 3]];
-        let ids: Vec<u64> = prompts
+        // hold the handles across the run: dropping one cancels it
+        let handles: Vec<_> = prompts
             .iter()
-            .map(|p| b.submit(greedy(p.to_vec(), 12)).id)
+            .map(|p| b.submit(greedy(p.to_vec(), 12)))
             .collect();
+        let ids: Vec<u64> = handles.iter().map(|h| h.id).collect();
         let done = b.run_to_completion(metrics);
         ids.iter()
             .map(|&id| {

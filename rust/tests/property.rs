@@ -149,12 +149,16 @@ fn prop_batcher_completes_under_random_load() {
         let max_batch = 1 + rng.below(4);
         let mut b = Batcher::new(model.clone(), None, max_batch);
         let n = 2 + rng.below(6);
-        for _ in 0..n {
-            let plen = 2 + rng.below(8);
-            let prompt: Vec<u32> =
-                (0..plen).map(|_| rng.below(200) as u32 + 4).collect();
-            b.submit(GenerateRequest::greedy(prompt, 1 + rng.below(6)));
-        }
+        // hold every handle until the run finishes: a dropped handle
+        // cancels its request
+        let _handles: Vec<_> = (0..n)
+            .map(|_| {
+                let plen = 2 + rng.below(8);
+                let prompt: Vec<u32> =
+                    (0..plen).map(|_| rng.below(200) as u32 + 4).collect();
+                b.submit(GenerateRequest::greedy(prompt, 1 + rng.below(6)))
+            })
+            .collect();
         let done = b.run_to_completion(&metrics);
         assert_eq!(done.len(), n, "trial {trial}");
     }

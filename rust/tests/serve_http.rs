@@ -1,0 +1,426 @@
+//! End-to-end tests for the HTTP/SSE front end (ISSUE 7): every test
+//! talks to a real `HttpServer` over a localhost socket using the
+//! in-tree `serve::client`, so the full path — accept, parse, admit,
+//! stream, drain — is exercised exactly as `curl` would drive it.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mc_moe::config::ModelConfig;
+use mc_moe::coordinator::{GenerateRequest, Server, StopCondition};
+use mc_moe::moe::model::MoeModel;
+use mc_moe::serve::client::{self, GenerateReply, SseStream};
+use mc_moe::serve::{HttpServer, ServeConfig};
+use mc_moe::util::json::Json;
+
+mod common;
+use common::random_model;
+
+/// Generous per-read bound: turns a wedged stream into a test failure
+/// instead of a suite hang, even on a descheduled CI runner.
+const T: Duration = Duration::from_secs(120);
+
+/// A model big enough that a long request decodes for hundreds of ms,
+/// so admission choreography cannot lose races against it finishing
+/// (same recipe as the serving_api cancellation test).
+fn slow_cfg() -> ModelConfig {
+    let mut cfg = ModelConfig::test_tiny();
+    cfg.d_model = 64;
+    cfg.n_heads = 4;
+    cfg.d_ff = 256;
+    cfg.n_layers = 4;
+    cfg.max_seq = 256;
+    cfg
+}
+
+fn serve(model: MoeModel, scfg: ServeConfig) -> HttpServer {
+    let engine = Server::spawn(Arc::new(model), None, scfg.max_batch);
+    HttpServer::bind(engine, scfg).expect("bind 127.0.0.1:0")
+}
+
+/// `{"prompt":[..],"max_new_tokens":n,"stop":"max_len"<extra>}`
+fn gen_body(prompt: &[u32], max_new: usize, extra: &str) -> Vec<u8> {
+    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    format!(
+        "{{\"prompt\":[{}],\"max_new_tokens\":{max_new},\
+         \"stop\":\"max_len\"{extra}}}",
+        toks.join(",")
+    )
+    .into_bytes()
+}
+
+fn open_stream(
+    http: &HttpServer,
+    prompt: &[u32],
+    max_new: usize,
+    extra: &str,
+    headers: &[(&str, &str)],
+) -> GenerateReply {
+    client::open_generate(http.addr(), &gen_body(prompt, max_new, extra),
+                          headers, T)
+        .expect("request reached the server")
+}
+
+fn expect_stream(reply: GenerateReply) -> SseStream {
+    match reply {
+        GenerateReply::Stream(s) => s,
+        GenerateReply::Response(r) => {
+            panic!("expected SSE stream, got {} {}", r.status, r.body_str())
+        }
+    }
+}
+
+fn token_of(data: &str) -> u32 {
+    Json::parse(data).expect("token frame is JSON")
+        .opt("token").expect("token field")
+        .as_usize().expect("token id") as u32
+}
+
+/// Drain a stream to its terminal frame: (tokens, terminal event name).
+fn drain_stream(s: &mut SseStream) -> (Vec<u32>, String) {
+    let mut tokens = Vec::new();
+    while let Some(ev) = s.next_event().expect("stream read") {
+        match ev.name.as_str() {
+            "token" => tokens.push(token_of(&ev.data)),
+            terminal => return (tokens, terminal.to_string()),
+        }
+    }
+    panic!("stream closed without a terminal done/cancelled frame");
+}
+
+#[test]
+fn sse_and_json_modes_match_in_process_submit() {
+    let cfg = ModelConfig::test_tiny();
+    let prompt = vec![1u32, 5, 80, 3];
+
+    // ground truth: the same request through the in-process API on an
+    // identically-seeded model
+    let expected = {
+        let engine = Server::spawn(Arc::new(random_model(&cfg, 42)), None, 2);
+        let h = engine.submit(
+            GenerateRequest::greedy(prompt.clone(), 8)
+                .with_stop(StopCondition::MaxLen));
+        let done = h.wait().expect("in-process completion");
+        engine.shutdown();
+        done.tokens
+    };
+    assert_eq!(expected.len(), 8);
+
+    let http = serve(random_model(&cfg, 42), ServeConfig {
+        port: 0,
+        max_conns: 4,
+        max_streams_per_tenant: 0,
+        shed_queue_depth: 0,
+        max_batch: 2,
+        ..ServeConfig::default()
+    });
+
+    // streaming: SSE tokens arrive in order and the done frame agrees
+    let mut stream = expect_stream(open_stream(&http, &prompt, 8, "", &[]));
+    let mut tokens = Vec::new();
+    let mut done_data = None;
+    while let Some(ev) = stream.next_event().expect("sse read") {
+        match ev.name.as_str() {
+            "token" => tokens.push(token_of(&ev.data)),
+            "done" => done_data = Some(ev.data),
+            other => panic!("unexpected event {other:?}"),
+        }
+    }
+    assert_eq!(tokens, expected, "SSE tokens match in-process submit");
+    let done = Json::parse(&done_data.expect("done frame")).unwrap();
+    let done_tokens: Vec<u32> = done.opt("tokens").unwrap()
+        .as_arr().unwrap().iter()
+        .map(|v| v.as_usize().unwrap() as u32)
+        .collect();
+    assert_eq!(done_tokens, expected, "done frame repeats the tokens");
+    assert_eq!(done.opt("finish").unwrap().as_str().unwrap(), "max_tokens");
+
+    // non-streaming: one JSON completion, same tokens
+    let resp = match open_stream(&http, &prompt, 8, ",\"stream\":false", &[]) {
+        GenerateReply::Response(r) => r,
+        GenerateReply::Stream(_) => panic!("stream:false must not stream"),
+    };
+    assert_eq!(resp.status, 200, "{}", resp.body_str());
+    let body = Json::parse(&resp.body_str()).unwrap();
+    let got: Vec<u32> = body.opt("tokens").unwrap()
+        .as_arr().unwrap().iter()
+        .map(|v| v.as_usize().unwrap() as u32)
+        .collect();
+    assert_eq!(got, expected, "JSON mode matches in-process submit");
+
+    // observability endpoints on the same server
+    let health = client::request(http.addr(), "GET", "/healthz", &[], b"", T)
+        .unwrap();
+    assert_eq!(health.status, 200);
+    assert!(health.body_str().contains("\"status\":\"ok\""));
+    let metrics = client::request(http.addr(), "GET", "/metrics", &[], b"", T)
+        .unwrap();
+    assert_eq!(metrics.status, 200);
+    assert!(metrics.header("content-type").unwrap()
+        .starts_with("text/plain; version=0.0.4"));
+    let text = metrics.body_str();
+    assert!(text.contains("# TYPE mc_requests_completed counter"), "{text}");
+    assert!(text.contains("# TYPE mc_ttft_ms summary"), "{text}");
+    assert!(text.contains("mc_ttft_ms{quantile=\"0.99\"}"), "{text}");
+    let missing = client::request(http.addr(), "GET", "/nope", &[], b"", T)
+        .unwrap();
+    assert_eq!(missing.status, 404);
+
+    let report = http.shutdown();
+    assert!(report.drained, "no in-flight streams left to drain");
+}
+
+#[test]
+fn shed_returns_429_with_retry_after_low_priority_first() {
+    // max_batch=1, shed depth 2: thresholds are low=1, normal=2,
+    // high=4 queued streams (mirrors the admission unit test, but
+    // through real sockets)
+    let http = serve(random_model(&slow_cfg(), 7), ServeConfig {
+        port: 0,
+        max_conns: 8,
+        max_streams_per_tenant: 0,
+        shed_queue_depth: 2,
+        max_batch: 1,
+        ..ServeConfig::default()
+    });
+    let prompt = [1u32, 5, 80, 3];
+
+    // A occupies the only slot; confirm it is decoding before queuing
+    let mut a = expect_stream(open_stream(&http, &prompt, 240, "", &[]));
+    let first = a.next_event().expect("read").expect("first frame");
+    assert_eq!(first.name, "token");
+    // B queues behind it (queued estimate now 1)
+    let b = expect_stream(open_stream(&http, &prompt, 240, "", &[]));
+
+    // low priority sheds first: threshold 1 <= queued 1
+    let low = match open_stream(&http, &prompt, 240,
+                                ",\"priority\":\"low\"", &[]) {
+        GenerateReply::Response(r) => r,
+        GenerateReply::Stream(_) => panic!("low must shed at queued=1"),
+    };
+    assert_eq!(low.status, 429, "{}", low.body_str());
+    let retry: u64 = low.header("retry-after")
+        .expect("429 carries Retry-After")
+        .parse().expect("Retry-After is numeric seconds");
+    assert!(retry >= 1);
+
+    // normal still admits at queued=1...
+    let c = expect_stream(open_stream(&http, &prompt, 240, "", &[]));
+    // ...and sheds at queued=2
+    let shed = match open_stream(&http, &prompt, 240, "", &[]) {
+        GenerateReply::Response(r) => r,
+        GenerateReply::Stream(_) => panic!("normal must shed at queued=2"),
+    };
+    assert_eq!(shed.status, 429);
+    assert!(shed.header("retry-after").is_some());
+
+    // high priority rides through until twice the configured depth
+    let d = expect_stream(open_stream(&http, &prompt, 240,
+                                      ",\"priority\":\"high\"", &[]));
+
+    let m = http.metrics();
+    assert_eq!(m.requests_shed.load(std::sync::atomic::Ordering::Relaxed), 2);
+
+    // abandon everything; the server must cancel all four and drain
+    a.abort();
+    b.abort();
+    c.abort();
+    d.abort();
+    let report = http.shutdown();
+    assert!(report.drained, "aborted streams must not pin the drain");
+}
+
+#[test]
+fn tenant_cap_holds_while_other_tenant_proceeds() {
+    let http = serve(random_model(&slow_cfg(), 8), ServeConfig {
+        port: 0,
+        max_conns: 8,
+        max_streams_per_tenant: 1,
+        shed_queue_depth: 0,
+        max_batch: 2,
+        ..ServeConfig::default()
+    });
+    let prompt = [1u32, 5, 80, 3];
+    let acme = [("X-Tenant", "acme")];
+
+    // acme's one allowed stream
+    let mut a = expect_stream(open_stream(&http, &prompt, 240, "", &acme));
+    let first = a.next_event().expect("read").expect("first frame");
+    assert_eq!(first.name, "token");
+
+    // acme's second concurrent stream is refused with Retry-After
+    let busy = match open_stream(&http, &prompt, 4, "", &acme) {
+        GenerateReply::Response(r) => r,
+        GenerateReply::Stream(_) => panic!("tenant cap must refuse"),
+    };
+    assert_eq!(busy.status, 429, "{}", busy.body_str());
+    assert!(busy.header("retry-after").is_some());
+    assert!(busy.body_str().contains("acme"), "{}", busy.body_str());
+
+    // a different tenant proceeds at the same moment
+    let globex = match open_stream(&http, &prompt, 4, ",\"stream\":false",
+                                   &[("X-Tenant", "globex")]) {
+        GenerateReply::Response(r) => r,
+        GenerateReply::Stream(_) => unreachable!(),
+    };
+    assert_eq!(globex.status, 200, "{}", globex.body_str());
+    assert!(globex.body_str().contains("\"tokens\":["));
+
+    assert_eq!(http.metrics().requests_tenant_limited
+                   .load(std::sync::atomic::Ordering::Relaxed), 1);
+
+    // once acme's stream ends (client disconnect), its slot frees;
+    // poll because the server notices the hang-up asynchronously
+    a.abort();
+    let mut freed = false;
+    for _ in 0..1500 {
+        let again = match open_stream(&http, &prompt, 2, ",\"stream\":false",
+                                      &acme) {
+            GenerateReply::Response(r) => r,
+            GenerateReply::Stream(_) => unreachable!(),
+        };
+        if again.status == 200 {
+            freed = true;
+            break;
+        }
+        assert_eq!(again.status, 429, "{}", again.body_str());
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert!(freed, "tenant slot never freed after the disconnect");
+
+    let report = http.shutdown();
+    assert!(report.drained);
+}
+
+#[test]
+fn drain_finishes_inflight_and_refuses_new() {
+    let http = serve(random_model(&slow_cfg(), 9), ServeConfig {
+        port: 0,
+        max_conns: 8,
+        max_streams_per_tenant: 0,
+        shed_queue_depth: 0,
+        max_batch: 1,
+        ..ServeConfig::default()
+    });
+    let prompt = [1u32, 5, 80, 3];
+
+    let mut a = expect_stream(open_stream(&http, &prompt, 120, "", &[]));
+    let first = a.next_event().expect("read").expect("first frame");
+    assert_eq!(first.name, "token");
+    let mut tokens = vec![token_of(&first.data)];
+
+    // begin drain over the wire
+    let drain = client::request(http.addr(), "POST", "/admin/drain", &[],
+                                b"", T).unwrap();
+    assert_eq!(drain.status, 200);
+    assert!(drain.body_str().contains("\"draining\":true"));
+    assert!(http.draining());
+
+    // health reflects it; new generate requests are refused with 503
+    let health = client::request(http.addr(), "GET", "/healthz", &[], b"", T)
+        .unwrap();
+    assert!(health.body_str().contains("\"status\":\"draining\""));
+    let refused = match open_stream(&http, &prompt, 4, "", &[]) {
+        GenerateReply::Response(r) => r,
+        GenerateReply::Stream(_) => panic!("draining server must refuse"),
+    };
+    assert_eq!(refused.status, 503, "{}", refused.body_str());
+    assert!(refused.header("retry-after").is_some());
+
+    // the in-flight stream still delivers every token it was promised
+    let (rest, terminal) = drain_stream(&mut a);
+    tokens.extend(rest);
+    assert_eq!(terminal, "done", "drain must not cancel in-flight work");
+    assert_eq!(tokens.len(), 120, "drain lost streamed tokens");
+
+    let report = http.shutdown();
+    assert!(report.drained);
+}
+
+#[test]
+fn malformed_and_oversized_bodies_do_not_wedge() {
+    let http = serve(random_model(&ModelConfig::test_tiny(), 10), ServeConfig {
+        port: 0,
+        max_conns: 4,
+        max_streams_per_tenant: 0,
+        shed_queue_depth: 0,
+        max_batch: 1,
+        max_body_bytes: 1024,
+        ..ServeConfig::default()
+    });
+
+    // invalid JSON → 400 naming the problem
+    let bad = client::request(http.addr(), "POST", "/v1/generate", &[],
+                              b"this is not json", T).unwrap();
+    assert_eq!(bad.status, 400, "{}", bad.body_str());
+    assert!(bad.body_str().contains("JSON"), "{}", bad.body_str());
+
+    // valid JSON, missing required field → 400 naming the field
+    let missing = client::request(http.addr(), "POST", "/v1/generate", &[],
+                                  b"{\"max_new_tokens\":4}", T).unwrap();
+    assert_eq!(missing.status, 400);
+    assert!(missing.body_str().contains("prompt"));
+
+    // oversized body → 413, refused before buffering
+    let huge = vec![b'x'; 8 << 10];
+    let too_big = client::request(http.addr(), "POST", "/v1/generate", &[],
+                                  &huge, T).unwrap();
+    assert_eq!(too_big.status, 413, "{}", too_big.body_str());
+
+    // wrong method on a real route → 404 (no wedge, no panic)
+    let wrong = client::request(http.addr(), "GET", "/v1/generate", &[],
+                                b"", T).unwrap();
+    assert_eq!(wrong.status, 404);
+
+    // after all of that the server still serves work
+    let ok = match open_stream(&http, &[1, 5, 80, 3], 3,
+                               ",\"stream\":false", &[]) {
+        GenerateReply::Response(r) => r,
+        GenerateReply::Stream(_) => unreachable!(),
+    };
+    assert_eq!(ok.status, 200, "{}", ok.body_str());
+    assert_eq!(http.metrics().http_bad_requests
+                   .load(std::sync::atomic::Ordering::Relaxed), 4);
+
+    let report = http.shutdown();
+    assert!(report.drained);
+}
+
+#[test]
+fn mid_stream_disconnect_cancels_and_frees_slot() {
+    let http = serve(random_model(&slow_cfg(), 11), ServeConfig {
+        port: 0,
+        max_conns: 4,
+        max_streams_per_tenant: 0,
+        shed_queue_depth: 0,
+        max_batch: 1,
+        ..ServeConfig::default()
+    });
+    let prompt = [1u32, 5, 80, 3];
+
+    // a long stream takes the only batch slot...
+    let mut a = expect_stream(open_stream(&http, &prompt, 240, "", &[]));
+    let first = a.next_event().expect("read").expect("first frame");
+    assert_eq!(first.name, "token");
+    // ...and the client vanishes mid-stream
+    a.abort();
+
+    // the dropped connection must cancel the request and free its
+    // slot: a second request can only complete if it did
+    let next = match open_stream(&http, &prompt, 3, ",\"stream\":false", &[]) {
+        GenerateReply::Response(r) => r,
+        GenerateReply::Stream(_) => unreachable!(),
+    };
+    assert_eq!(next.status, 200,
+               "slot freed after disconnect: {}", next.body_str());
+
+    let m = http.metrics();
+    use std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(m.client_disconnects.load(Relaxed), 1);
+    assert_eq!(m.requests_cancelled.load(Relaxed), 1);
+
+    let report = http.shutdown();
+    assert!(report.drained, "no stuck streams after a disconnect");
+    assert_eq!(report.inflight_at_start, 0,
+               "everything had retired before shutdown began");
+}

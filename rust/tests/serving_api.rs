@@ -55,9 +55,9 @@ fn same_seed_sampling_matches_across_engine_and_batcher() {
             let metrics = Metrics::new();
             let mut b = Batcher::new(model.clone(), None, 3);
             let h = b.submit(req.clone());
-            b.submit(GenerateRequest::greedy(vec![2, 6, 81, 3], 10)
+            let _f1 = b.submit(GenerateRequest::greedy(vec![2, 6, 81, 3], 10)
                 .with_stop(StopCondition::MaxLen));
-            b.submit(GenerateRequest::greedy(vec![3, 7, 82, 3], 10)
+            let _f2 = b.submit(GenerateRequest::greedy(vec![3, 7, 82, 3], 10)
                 .with_stop(StopCondition::MaxLen));
             b.run_to_completion(&metrics);
             h.wait().expect("completion").tokens
@@ -190,10 +190,43 @@ fn server_cancellation_frees_slot_and_admits_queued() {
 }
 
 #[test]
+fn dropped_handle_cancels_and_frees_slot() {
+    // ISSUE 7 regression: a client that drops its RequestHandle
+    // mid-stream (the HTTP layer's disconnect path reduces to exactly
+    // this) must retire the session and free its batch slot — a
+    // waiter can only complete if it did.
+    let mut cfg = ModelConfig::test_tiny();
+    cfg.d_model = 64;
+    cfg.n_heads = 4;
+    cfg.d_ff = 256;
+    cfg.n_layers = 4;
+    cfg.max_seq = 256;
+    let server = Server::spawn(Arc::new(random_model(&cfg, 31)), None, 1);
+    let mut victim = server.submit(
+        GenerateRequest::greedy(vec![1, 5, 80, 3], 240)
+            .with_stop(StopCondition::MaxLen));
+    // demonstrably mid-decode before the drop
+    assert!(matches!(victim.next_event(), Some(StreamEvent::Token(_))));
+    drop(victim);
+    let mut waiter =
+        server.submit(GenerateRequest::greedy(vec![2, 6, 81, 3], 3));
+    let done = waiter
+        .wait_timeout(Duration::from_secs(120))
+        .expect("slot freed by the dropped handle");
+    assert!(!done.tokens.is_empty());
+    assert_eq!(
+        server.metrics.requests_cancelled
+            .load(std::sync::atomic::Ordering::Relaxed),
+        1
+    );
+    server.shutdown();
+}
+
+#[test]
 fn priority_requests_jump_the_queue() {
     let metrics = Metrics::new();
     let mut b = Batcher::new(shared_model(29), None, 1);
-    b.submit(GenerateRequest::greedy(vec![1, 5, 80, 3], 2));
+    let _first = b.submit(GenerateRequest::greedy(vec![1, 5, 80, 3], 2));
     b.step(&metrics); // occupy the slot
     let low = b.submit(GenerateRequest::greedy(vec![2, 6, 81, 3], 2)
         .with_priority(Priority::Low));
