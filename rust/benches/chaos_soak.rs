@@ -1,0 +1,294 @@
+//! Chaos soak (EXPERIMENTS.md §Chaos): the serve-soak client burst
+//! replayed against a *faulted* stack — a byte-budgeted offloaded
+//! model whose demand fetches suffer injected I/O errors, corrupted
+//! segments, and latency spikes, plus connection workers that panic
+//! mid-request — proving the fault-tolerance ladder (DESIGN.md §7)
+//! end to end:
+//!
+//!   * zero wedged clients: every stream reaches a terminal SSE event
+//!     (`done`, `error`, `cancelled`) or a complete HTTP status
+//!   * zero crashes: the process survives every injected panic and
+//!     still answers `/healthz` afterwards
+//!   * clean recovery: with faults cleared the same server serves
+//!     full-length streams again, no restart
+//!
+//!   cargo bench --bench chaos_soak               # 160 clients
+//!   MC_BENCH_FAST=1 cargo bench --bench chaos_soak   # 64, CI smoke
+//!
+//! The fault plan comes from `MC_FAULTS` when set; otherwise the
+//! bench installs its own aggressive plan (see `DEFAULT_PLAN`).
+//! Emits `BENCH_chaos.json` (validated by CI bench-smoke).
+
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use mc_moe::config::ModelConfig;
+use mc_moe::coordinator::{Server, ServerConfig};
+use mc_moe::moe::qz;
+use mc_moe::offload::{self, FetchPolicy, PrefetchMode};
+use mc_moe::serve::client::{self, GenerateReply};
+use mc_moe::serve::{HttpServer, ServeConfig};
+use mc_moe::util::faults::{self, FaultPlan};
+
+#[path = "../tests/common/mod.rs"]
+mod common;
+use common::random_model;
+
+fn fast() -> bool {
+    std::env::var("MC_BENCH_FAST").is_ok()
+}
+
+/// Per-read client bound: a stream stalled past this counts as wedged.
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(120);
+
+/// The plan installed when `MC_FAULTS` is unset: 8% fetch I/O errors,
+/// 4% corrupted segments, 2ms latency spikes on 5% of fetches, 4% of
+/// requests hit a worker panic, 10% of prefetches dropped.
+const DEFAULT_PLAN: &str = "io_err=0.08,corrupt=0.04,delay_ms=2@0.05,\
+                            panic=0.04,prefetch_drop=0.10,seed=4242";
+
+/// One client's outcome under chaos.
+enum Outcome {
+    /// stream (or `"stream":false` reply) delivered every token
+    Completed(usize),
+    /// terminal SSE `error`/`cancelled` frame (deadline / cancel):
+    /// a *failed* stream, but a cleanly terminated one
+    ErrorEvent,
+    /// complete HTTP 5xx status (panic → 500, deadline → 504)
+    Http5xx(u16),
+    /// 429 with Retry-After
+    Shed,
+    /// io error, timeout, or a stream cut without a terminal frame —
+    /// the one outcome the fault ladder must never produce
+    Wedged(String),
+}
+
+fn run_client(addr: std::net::SocketAddr, idx: usize, max_new: usize)
+              -> Outcome {
+    // every 4th client takes the non-streaming path so the 504/500
+    // status mapping is exercised alongside the SSE error frames
+    let want_stream = idx % 4 != 3;
+    let body = format!(
+        "{{\"prompt\":[1,5,{},3],\"max_new_tokens\":{max_new},\
+         \"stop\":\"max_len\",\"stream\":{want_stream}}}",
+        80 + idx % 8
+    );
+    let reply = match client::open_generate(addr, body.as_bytes(), &[],
+                                            CLIENT_TIMEOUT) {
+        Ok(r) => r,
+        Err(e) => return Outcome::Wedged(format!("open: {e}")),
+    };
+    let mut stream = match reply {
+        GenerateReply::Stream(s) => s,
+        GenerateReply::Response(r) => {
+            return match r.status {
+                200 => Outcome::Completed(max_new),
+                429 => Outcome::Shed,
+                500 | 504 => Outcome::Http5xx(r.status),
+                other => Outcome::Wedged(format!("status {other}")),
+            };
+        }
+    };
+    let mut tokens = 0usize;
+    loop {
+        match stream.next_event() {
+            Ok(Some(ev)) => match ev.name.as_str() {
+                "token" => tokens += 1,
+                "done" => break,
+                "error" | "cancelled" => return Outcome::ErrorEvent,
+                other => return Outcome::Wedged(format!("event {other:?}")),
+            },
+            Ok(None) => {
+                return Outcome::Wedged("closed without terminal".into())
+            }
+            Err(e) => return Outcome::Wedged(format!("read: {e}")),
+        }
+    }
+    if tokens != max_new {
+        return Outcome::Wedged(format!("done after {tokens}/{max_new}"));
+    }
+    Outcome::Completed(tokens)
+}
+
+fn main() {
+    let (clients, max_new) = if fast() { (64, 8) } else { (160, 12) };
+
+    // faulted substrate: an offloaded model at half budget, with a
+    // tight retry/quarantine policy so injected failures actually
+    // reach the quarantine + degraded-dispatch rungs of the ladder
+    let injected = std::env::var("MC_FAULTS").is_err();
+    if injected {
+        faults::install(Some(FaultPlan::parse(DEFAULT_PLAN).unwrap()));
+    }
+    let path = std::env::temp_dir()
+        .join(format!("chaos_soak_{}.mcqz", std::process::id()));
+    let seed_model = random_model(&ModelConfig::test_tiny(), 99);
+    qz::save(&path, &seed_model).expect("save chaos model");
+    let expert_bytes: usize = seed_model.layers.iter()
+        .flat_map(|l| &l.experts)
+        .map(|e| e.storage_bytes())
+        .sum();
+    drop(seed_model);
+    let model = offload::load_cached_with_policy(
+        &path, expert_bytes / 2, PrefetchMode::Async,
+        FetchPolicy {
+            max_retries: 2,
+            backoff: Duration::from_micros(200),
+            quarantine: Duration::from_millis(50),
+        })
+        .expect("open chaos model");
+
+    let serve_cfg = ServeConfig {
+        port: 0,
+        max_conns: clients + 16,
+        max_streams_per_tenant: 0,
+        shed_queue_depth: 256,
+        max_batch: 8,
+        default_timeout: Some(Duration::from_secs(60)),
+        ..ServeConfig::default()
+    };
+    let engine = Server::spawn_cfg(
+        Arc::new(model), None,
+        ServerConfig {
+            max_batch: serve_cfg.max_batch,
+            stall_budget: Duration::from_secs(10),
+            ..ServerConfig::default()
+        });
+    let http = HttpServer::bind(engine, serve_cfg).expect("bind 127.0.0.1:0");
+    let addr = http.addr();
+    let metrics = http.metrics();
+    println!(
+        "chaos soak: {clients} clients x {max_new} tokens on {addr} \
+         (plan: {})",
+        if injected { DEFAULT_PLAN } else { "MC_FAULTS" }
+    );
+
+    // -- chaos burst: every client fires at once --------------------
+    let barrier = Arc::new(Barrier::new(clients));
+    let t_start = Instant::now();
+    let workers: Vec<_> = (0..clients)
+        .map(|i| {
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                barrier.wait();
+                run_client(addr, i, max_new)
+            })
+        })
+        .collect();
+    let outcomes: Vec<Outcome> =
+        workers.into_iter().map(|w| w.join().expect("client thread")).collect();
+    let wall_s = t_start.elapsed().as_secs_f64();
+
+    let mut completed = 0u64;
+    let mut error_events = 0u64;
+    let mut http_5xx = 0u64;
+    let mut shed = 0u64;
+    let mut wedged = 0u64;
+    let mut tokens_total = 0usize;
+    for o in &outcomes {
+        match o {
+            Outcome::Completed(n) => {
+                completed += 1;
+                tokens_total += n;
+            }
+            Outcome::ErrorEvent => error_events += 1,
+            Outcome::Http5xx(_) => http_5xx += 1,
+            Outcome::Shed => shed += 1,
+            Outcome::Wedged(why) => {
+                wedged += 1;
+                eprintln!("WEDGED client: {why}");
+            }
+        }
+    }
+
+    // -- survival: the process answers health after the storm -------
+    let health = client::request(addr, "GET", "/healthz", &[], b"",
+                                 CLIENT_TIMEOUT)
+        .expect("healthz after chaos");
+    assert_eq!(health.status, 200, "server must survive the fault storm");
+
+    // -- recovery: faults off, quarantines lapse, full streams again
+    faults::install(None);
+    std::thread::sleep(Duration::from_millis(200)); // > quarantine
+    let mut recovered_ok = 0u64;
+    let recovery_clients = 4usize;
+    for i in 0..recovery_clients {
+        match run_client(addr, i * 4, max_new) {
+            Outcome::Completed(_) => recovered_ok += 1,
+            other => {
+                let label = match other {
+                    Outcome::ErrorEvent => "error event".to_string(),
+                    Outcome::Http5xx(s) => format!("http {s}"),
+                    Outcome::Shed => "shed".to_string(),
+                    Outcome::Wedged(w) => format!("wedged: {w}"),
+                    Outcome::Completed(_) => unreachable!(),
+                };
+                eprintln!("recovery client {i}: {label}");
+            }
+        }
+    }
+
+    let retries = metrics.expert_load_retries.load(Relaxed);
+    let failures = metrics.expert_load_failures.load(Relaxed);
+    let quarantined = metrics.experts_quarantined.load(Relaxed);
+    let degraded = metrics.degraded_dispatches.load(Relaxed);
+    let deadline = metrics.deadline_exceeded.load(Relaxed);
+    let panics = metrics.panics_recovered.load(Relaxed);
+    let report = http.shutdown();
+    std::fs::remove_file(&path).ok();
+
+    // -- report -----------------------------------------------------
+    let kernel = mc_moe::kernels::active().isa.name();
+    println!("completed={completed} error_events={error_events} \
+              http_5xx={http_5xx} shed={shed} wedged={wedged}");
+    println!("ladder: retries={retries} failures={failures} \
+              quarantined={quarantined} degraded={degraded} \
+              deadline_exceeded={deadline} panics_recovered={panics}");
+    println!("recovery: {recovered_ok}/{recovery_clients} clean streams \
+              after faults cleared");
+    println!("tokens={tokens_total} wall={wall_s:.2}s drain={:.1}ms \
+              drained={}",
+             report.drain_ms, report.drained);
+
+    assert_eq!(wedged, 0, "chaos soak must end with zero wedged clients");
+    assert_eq!(completed + error_events + http_5xx + shed, clients as u64,
+               "every client is accounted for exactly once");
+    if injected {
+        assert!(retries > 0,
+                "an 8% fetch fault rate must exercise the retry path");
+        assert_eq!(recovered_ok, recovery_clients as u64,
+                   "all post-chaos streams must complete clean");
+    }
+
+    let json = format!(
+        "{{\n  \"mode\": \"{mode}\",\n  \"clients\": {clients},\n  \
+         \"max_new_tokens\": {max_new},\n  \"completed\": {completed},\n  \
+         \"error_events\": {error_events},\n  \"http_5xx\": {http_5xx},\n  \
+         \"shed\": {shed},\n  \"wedged\": {wedged},\n  \
+         \"recovered_ok\": {recovered_ok},\n  \
+         \"recovery_clients\": {recovery_clients},\n  \
+         \"injected_plan\": {plan},\n  \
+         \"ladder\": {{\"expert_load_retries\": {retries}, \
+         \"expert_load_failures\": {failures}, \
+         \"experts_quarantined\": {quarantined}, \
+         \"degraded_dispatches\": {degraded}, \
+         \"deadline_exceeded\": {deadline}, \
+         \"panics_recovered\": {panics}}},\n  \
+         \"tokens_total\": {tokens_total},\n  \
+         \"wall_s\": {wall_s:.3},\n  \
+         \"drain_ms\": {dms:.2},\n  \
+         \"kernel_backend\": \"{kernel}\"\n}}\n",
+        mode = if fast() { "fast" } else { "full" },
+        plan = if injected {
+            format!("\"{DEFAULT_PLAN}\"")
+        } else {
+            "\"MC_FAULTS\"".to_string()
+        },
+        dms = report.drain_ms,
+    );
+    match std::fs::write("BENCH_chaos.json", &json) {
+        Ok(()) => println!("wrote BENCH_chaos.json"),
+        Err(e) => eprintln!("could not write BENCH_chaos.json: {e}"),
+    }
+}

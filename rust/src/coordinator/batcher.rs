@@ -15,7 +15,7 @@
 //! queue (DESIGN.md §3.1).
 
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::moe::model::MoeModel;
 use crate::util::pool::WorkerPool;
@@ -36,6 +36,8 @@ struct Active {
     generated: Vec<u32>,
     started: Instant,
     first_token_ns: Option<u64>,
+    /// absolute expiry (submission time + effective deadline)
+    deadline: Option<Instant>,
 }
 
 pub struct Batcher {
@@ -43,9 +45,12 @@ pub struct Batcher {
     odp: Option<DecodeOdp>,
     pub max_batch: usize,
     /// submission order; admission scans for the best priority class
-    queue: Vec<(GenerateRequest, RequestTicket)>,
+    /// (the `Instant` is submission time, for deadline accounting)
+    queue: Vec<(GenerateRequest, RequestTicket, Instant)>,
     active: Vec<Active>,
     next_id: u64,
+    /// applied to requests that carry no deadline of their own
+    default_deadline: Option<Duration>,
     /// fused-step scratch arena, reused every iteration so the
     /// steady-state decode loop never allocates (DESIGN.md §4)
     scratch: StepScratch,
@@ -66,9 +71,16 @@ impl Batcher {
             queue: Vec::new(),
             active: Vec::new(),
             next_id: 1,
+            default_deadline: None,
             scratch: StepScratch::new(),
             inputs: Vec::new(),
         }
+    }
+
+    /// Deadline applied to requests that don't carry their own
+    /// (`None` = unlimited, the historical behavior).
+    pub fn set_default_deadline(&mut self, deadline: Option<Duration>) {
+        self.default_deadline = deadline;
     }
 
     /// Enqueue a request; the returned handle streams its events.
@@ -76,7 +88,7 @@ impl Batcher {
         let id = self.next_id;
         self.next_id += 1;
         let (ticket, handle) = request_channel(id);
-        self.queue.push((req, ticket));
+        self.queue.push((req, ticket, Instant::now()));
         handle
     }
 
@@ -85,7 +97,7 @@ impl Batcher {
     pub fn submit_with_ticket(&mut self, req: GenerateRequest,
                               ticket: RequestTicket) {
         self.next_id = self.next_id.max(ticket.id + 1);
-        self.queue.push((req, ticket));
+        self.queue.push((req, ticket, Instant::now()));
     }
 
     pub fn pending(&self) -> usize {
@@ -111,14 +123,63 @@ impl Batcher {
         }
     }
 
+    /// Expire requests whose wall-clock deadline passed (or whose
+    /// ticket the watchdog already flagged): queued entries terminate
+    /// without ever running; active sessions retire with whatever
+    /// tokens they produced. Both streams end in a terminal
+    /// `Done(DeadlineExceeded)`.
+    fn reap_deadlines(&mut self, metrics: &Metrics) {
+        let now = Instant::now();
+        let default = self.default_deadline;
+        self.queue.retain(|(req, ticket, enqueued)| {
+            let expired = ticket.deadline_exceeded()
+                || req
+                    .deadline
+                    .or(default)
+                    .is_some_and(|d| now >= *enqueued + d);
+            if !expired {
+                return true;
+            }
+            if ticket.claim_terminal() {
+                Metrics::inc(&metrics.deadline_exceeded, 1);
+                ticket.send(StreamEvent::Done(Completion {
+                    id: ticket.id,
+                    tokens: Vec::new(),
+                    finish: FinishReason::DeadlineExceeded,
+                    ttft_ns: 0,
+                    total_ns: now.duration_since(*enqueued).as_nanos() as u64,
+                }));
+            }
+            false
+        });
+        for i in (0..self.active.len()).rev() {
+            let a = &self.active[i];
+            let expired = a.ticket.deadline_exceeded()
+                || a.deadline.is_some_and(|d| now >= d);
+            if !expired {
+                continue;
+            }
+            let a = self.active.swap_remove(i);
+            let ticket = a.ticket.clone();
+            let done =
+                Self::retire(a, FinishReason::DeadlineExceeded, metrics);
+            if ticket.claim_terminal() {
+                Metrics::inc(&metrics.deadline_exceeded, 1);
+                ticket.send(StreamEvent::Done(done));
+            }
+        }
+    }
+
     /// Reap raised cancel flags: queued requests are dropped, active
     /// sessions are retired (their batch slot frees for admission
     /// below). Streams get a terminal `Cancelled` event.
     fn reap_cancelled(&mut self, metrics: &Metrics) {
-        self.queue.retain(|(_, ticket)| {
+        self.queue.retain(|(_, ticket, _)| {
             if ticket.cancelled() {
                 Metrics::inc(&metrics.requests_cancelled, 1);
-                ticket.send(StreamEvent::Cancelled { id: ticket.id });
+                if ticket.claim_terminal() {
+                    ticket.send(StreamEvent::Cancelled { id: ticket.id });
+                }
                 false
             } else {
                 true
@@ -130,7 +191,9 @@ impl Batcher {
                 Metrics::inc(&metrics.requests_cancelled, 1);
                 let ticket = a.ticket.clone();
                 Self::retire(a, FinishReason::Cancelled, metrics);
-                ticket.send(StreamEvent::Cancelled { id: ticket.id });
+                if ticket.claim_terminal() {
+                    ticket.send(StreamEvent::Cancelled { id: ticket.id });
+                }
             }
         }
     }
@@ -154,7 +217,7 @@ impl Batcher {
                 i += 1;
                 continue;
             }
-            let (req, ticket) = self.queue.remove(i);
+            let (req, ticket, _) = self.queue.remove(i);
             Metrics::inc(&metrics.requests_admitted, 1);
             let finish = if req.prompt.is_empty() {
                 Metrics::inc(&metrics.requests_rejected, 1);
@@ -170,15 +233,21 @@ impl Batcher {
                 ttft_ns: 0,
                 total_ns: 0,
             };
-            ticket.send(StreamEvent::Done(done.clone()));
+            if ticket.claim_terminal() {
+                ticket.send(StreamEvent::Done(done.clone()));
+            }
             degenerate.push(done);
         }
         while self.active.len() < self.max_batch && !self.queue.is_empty() {
             let best = (0..self.queue.len())
                 .min_by_key(|&i| self.queue[i].0.priority)
                 .unwrap();
-            let (req, ticket) = self.queue.remove(best);
+            let (req, ticket, enqueued) = self.queue.remove(best);
             Metrics::inc(&metrics.requests_admitted, 1);
+            let deadline = req
+                .deadline
+                .or(self.default_deadline)
+                .map(|d| enqueued + d);
             let mut session =
                 DecodeSession::new(self.model.clone(), self.odp.clone());
             let started = Instant::now();
@@ -198,6 +267,7 @@ impl Batcher {
                 generated: Vec::new(),
                 started,
                 first_token_ns: None,
+                deadline,
             });
         }
         degenerate
@@ -208,6 +278,7 @@ impl Batcher {
     /// token streams to its request's channel immediately. Returns
     /// completions retired this step.
     pub fn step(&mut self, metrics: &Metrics) -> Vec<Completion> {
+        self.reap_deadlines(metrics);
         self.reap_cancelled(metrics);
         let mut retired = self.admit(metrics);
         Metrics::set_gauge(&metrics.queue_depth, self.queue.len() as u64);
@@ -261,7 +332,9 @@ impl Batcher {
                 Metrics::inc(&metrics.requests_completed, 1);
                 let ticket = a.ticket.clone();
                 let done = Self::retire(a, finish, metrics);
-                ticket.send(StreamEvent::Done(done.clone()));
+                if ticket.claim_terminal() {
+                    ticket.send(StreamEvent::Done(done.clone()));
+                }
                 retired.push(done);
             }
         }
@@ -449,6 +522,52 @@ mod tests {
         let pos = |id| done.iter().position(|c| c.id == id).unwrap();
         assert!(pos(high.id) < pos(low.id),
                 "high priority admitted before low");
+    }
+
+    #[test]
+    fn expired_deadline_retires_with_partial_tokens() {
+        let metrics = Metrics::new();
+        let mut b = Batcher::new(engine(), None, 1);
+        // zero budget: expires before the first step admits it
+        let queued =
+            b.submit(req(0, 8).with_deadline(Duration::from_millis(0)));
+        b.step(&metrics);
+        let done = queued.wait().expect("terminal Done event");
+        assert_eq!(done.finish, FinishReason::DeadlineExceeded);
+        assert!(done.tokens.is_empty());
+        // an active session expires mid-decode and keeps its partials
+        let long = b.submit(
+            req(1, 64)
+                .with_stop(StopCondition::MaxLen)
+                .with_deadline(Duration::from_millis(30)),
+        );
+        b.step(&metrics); // admit + first token
+        assert_eq!(b.occupancy(), 1);
+        std::thread::sleep(Duration::from_millis(40));
+        b.step(&metrics); // reap: slot freed
+        assert_eq!(b.occupancy(), 0);
+        let done = long.wait().expect("terminal Done event");
+        assert_eq!(done.finish, FinishReason::DeadlineExceeded);
+        assert!(!done.tokens.is_empty(), "partial tokens delivered");
+        use std::sync::atomic::Ordering;
+        assert_eq!(metrics.deadline_exceeded.load(Ordering::Relaxed), 2);
+    }
+
+    #[test]
+    fn default_deadline_applies_when_request_has_none() {
+        let metrics = Metrics::new();
+        let mut b = Batcher::new(engine(), None, 1);
+        b.set_default_deadline(Some(Duration::from_millis(0)));
+        let h = b.submit(req(0, 4));
+        b.step(&metrics);
+        let done = h.wait().expect("terminal Done event");
+        assert_eq!(done.finish, FinishReason::DeadlineExceeded);
+        // a per-request deadline overrides the default
+        b.set_default_deadline(Some(Duration::from_millis(0)));
+        let h = b.submit(req(1, 2).with_deadline(Duration::from_secs(60)));
+        let done = b.run_to_completion(&metrics);
+        assert_eq!(done.len(), 1);
+        assert!(h.wait().unwrap().finish != FinishReason::DeadlineExceeded);
     }
 
     #[test]

@@ -248,8 +248,14 @@ impl DecodeSession {
                 // pin the routed set for this dispatch; the predictor
                 // prefetches layer li+1 while these FFNs execute
                 offload::unique_experts(&sc.topk[..t_new], &mut sc.needed);
-                model.resolver.pin_layer(li, &sc.needed, &mut sc.pins);
+                let unavailable =
+                    model.resolver.pin_layer(li, &sc.needed, &mut sc.pins);
                 model.resolver.note_routing(li, &sc.needed);
+                if unavailable > 0
+                    && offload::degrade_topk(&mut sc.topk[..t_new], &sc.pins) > 0
+                {
+                    model.resolver.note_degraded();
+                }
                 dispatch::dispatch_experts_into(
                     &sc.h,
                     &sc.topk[..t_new],
@@ -460,8 +466,14 @@ pub fn step_many_into<'a>(
             );
         } else {
             offload::unique_experts(&sc.topk[..b], &mut sc.needed);
-            model.resolver.pin_layer(li, &sc.needed, &mut sc.pins);
+            let unavailable =
+                model.resolver.pin_layer(li, &sc.needed, &mut sc.pins);
             model.resolver.note_routing(li, &sc.needed);
+            if unavailable > 0
+                && offload::degrade_topk(&mut sc.topk[..b], &sc.pins) > 0
+            {
+                model.resolver.note_degraded();
+            }
             dispatch::dispatch_experts_into(
                 &sc.h,
                 &sc.topk[..b],

@@ -99,6 +99,14 @@ impl McEngine {
             if tokens.len() >= req.max_new_tokens || sess.remaining() == 0 {
                 break;
             }
+            // wall-clock budget check per token: the single-request
+            // path has no batcher/watchdog, so the engine enforces
+            // the deadline itself (partial tokens are still returned)
+            if req.deadline.is_some_and(|d| started.elapsed() >= d) {
+                finish = FinishReason::DeadlineExceeded;
+                Metrics::inc(&self.metrics.deadline_exceeded, 1);
+                break;
+            }
             let t0 = Instant::now();
             sess.step_into(next, &mut logits);
             self.metrics.record_tpot(t0.elapsed().as_nanos() as u64);
@@ -205,6 +213,21 @@ mod tests {
         let out = engine.generate(&req).unwrap();
         assert_eq!(out.tokens.len(), 8);
         assert_eq!(out.finish, FinishReason::MaxTokens);
+    }
+
+    #[test]
+    fn deadline_caps_generation_with_partial_tokens() {
+        let cfg = ModelConfig::test_tiny();
+        let engine = McEngine::new(random_model(&cfg, 4), None, None);
+        let req = GenerateRequest::greedy(vec![1, 5, 80, 3], 32)
+            .with_stop(StopCondition::MaxLen)
+            .with_deadline(std::time::Duration::ZERO);
+        let out = engine.generate(&req).unwrap();
+        assert_eq!(out.finish, FinishReason::DeadlineExceeded);
+        // the first sampled token always lands before the clock check
+        assert_eq!(out.tokens.len(), 1);
+        assert_eq!(engine.metrics.deadline_exceeded.load(
+            std::sync::atomic::Ordering::Relaxed), 1);
     }
 
     #[test]

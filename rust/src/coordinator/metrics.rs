@@ -117,6 +117,19 @@ pub struct Metrics {
     pub bytes_resident: AtomicU64,
     /// demand-miss load stalls (ns), last `RING_CAP` retained
     pub miss_stall_ns: Mutex<LatencyRing>,
+    // --- fault tolerance (offload retry + degraded dispatch, DESIGN.md §7) ---
+    /// store fetch attempts retried after a transient failure
+    pub expert_load_retries: AtomicU64,
+    /// fetches that exhausted their retry budget (expert quarantined)
+    pub expert_load_failures: AtomicU64,
+    /// (layer, expert) pairs placed in quarantine after failures
+    pub experts_quarantined: AtomicU64,
+    /// layer dispatches that ran with a reduced expert set
+    pub degraded_dispatches: AtomicU64,
+    /// requests terminated for exceeding their deadline or stalling
+    pub deadline_exceeded: AtomicU64,
+    /// worker panics caught and converted to error responses
+    pub panics_recovered: AtomicU64,
     /// info: kernel backend ISA the engine selected at startup
     /// (empty until [`Metrics::set_kernel_backend`]; bench JSONs copy
     /// it so every number records which backend produced it)
@@ -256,6 +269,9 @@ impl Metrics {
              mc_expert_cache_hit_rate {:.4}\n\
              mc_expert_prefetch_hit_rate {:.4}\n\
              mc_bytes_resident {}\nmc_miss_stall_ms_mean {:.3}\n\
+             mc_expert_load_retries {}\nmc_expert_load_failures {}\n\
+             mc_experts_quarantined {}\nmc_degraded_dispatches {}\n\
+             mc_deadline_exceeded {}\nmc_panics_recovered {}\n\
              mc_kernel_backend{{isa=\"{}\"}} 1\n",
             self.requests_admitted.load(Ordering::Relaxed),
             self.requests_completed.load(Ordering::Relaxed),
@@ -278,6 +294,12 @@ impl Metrics {
             self.prefetch_hit_rate(),
             self.bytes_resident.load(Ordering::Relaxed),
             stall_ms,
+            self.expert_load_retries.load(Ordering::Relaxed),
+            self.expert_load_failures.load(Ordering::Relaxed),
+            self.experts_quarantined.load(Ordering::Relaxed),
+            self.degraded_dispatches.load(Ordering::Relaxed),
+            self.deadline_exceeded.load(Ordering::Relaxed),
+            self.panics_recovered.load(Ordering::Relaxed),
             backend,
         )
     }
@@ -336,6 +358,24 @@ impl Metrics {
         counter("mc_client_disconnects",
                 "SSE clients that vanished mid-stream",
                 self.client_disconnects.load(c));
+        counter("mc_expert_load_retries",
+                "store fetch attempts retried after transient failure",
+                self.expert_load_retries.load(c));
+        counter("mc_expert_load_failures",
+                "fetches that exhausted their retry budget",
+                self.expert_load_failures.load(c));
+        counter("mc_experts_quarantined",
+                "(layer, expert) pairs quarantined after failures",
+                self.experts_quarantined.load(c));
+        counter("mc_degraded_dispatches",
+                "layer dispatches run with a reduced expert set",
+                self.degraded_dispatches.load(c));
+        counter("mc_deadline_exceeded",
+                "requests terminated for deadline or stall",
+                self.deadline_exceeded.load(c));
+        counter("mc_panics_recovered",
+                "worker panics caught and turned into error responses",
+                self.panics_recovered.load(c));
 
         let mut gauge = |name: &str, help: &str, v: f64| {
             let _ = write!(out,
@@ -479,6 +519,12 @@ mod tests {
         m.record_ttft(2_000_000);
         m.record_ttft(4_000_000);
         m.set_kernel_backend("scalar");
+        Metrics::inc(&m.expert_load_retries, 6);
+        Metrics::inc(&m.expert_load_failures, 2);
+        Metrics::inc(&m.experts_quarantined, 2);
+        Metrics::inc(&m.degraded_dispatches, 9);
+        Metrics::inc(&m.deadline_exceeded, 1);
+        Metrics::inc(&m.panics_recovered, 1);
         let text = m.render_prometheus();
         assert!(text.contains("# TYPE mc_requests_admitted counter"));
         assert!(text.contains("mc_requests_admitted 3"));
@@ -491,6 +537,13 @@ mod tests {
         assert!(text.contains("# TYPE mc_ttft_ms summary"));
         assert!(text.contains("mc_ttft_ms{quantile=\"0.5\"} 3.000"));
         assert!(text.contains("mc_ttft_ms_count 2"));
+        assert!(text.contains("# TYPE mc_expert_load_retries counter"));
+        assert!(text.contains("mc_expert_load_retries 6"));
+        assert!(text.contains("mc_expert_load_failures 2"));
+        assert!(text.contains("mc_experts_quarantined 2"));
+        assert!(text.contains("mc_degraded_dispatches 9"));
+        assert!(text.contains("mc_deadline_exceeded 1"));
+        assert!(text.contains("mc_panics_recovered 1"));
         assert!(text.contains("mc_kernel_backend{isa=\"scalar\"} 1"));
         // every HELP has a matching TYPE
         assert_eq!(text.matches("# HELP").count(),

@@ -34,4 +34,4 @@ pub use request::{
     SamplingParams, StopCondition, StreamEvent,
 };
 pub use sampling::Sampler;
-pub use server::Server;
+pub use server::{Server, ServerConfig};

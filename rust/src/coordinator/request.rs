@@ -6,7 +6,7 @@
 //! channel: iterate streamed tokens, `wait()` for the completion, or
 //! `cancel()` mid-flight (DESIGN.md §3.1).
 
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{
     channel, Receiver, RecvTimeoutError, Sender, TryRecvError,
 };
@@ -92,6 +92,9 @@ pub struct GenerateRequest {
     pub sampling: SamplingParams,
     pub stop: StopCondition,
     pub priority: Priority,
+    /// wall-clock budget measured from admission; `None` defers to the
+    /// server's configured default (which may also be unlimited)
+    pub deadline: Option<Duration>,
 }
 
 impl GenerateRequest {
@@ -114,6 +117,11 @@ impl GenerateRequest {
         self.priority = priority;
         self
     }
+
+    pub fn with_deadline(mut self, deadline: Duration) -> GenerateRequest {
+        self.deadline = Some(deadline);
+        self
+    }
 }
 
 /// Why a completion ended.
@@ -127,6 +135,10 @@ pub enum FinishReason {
     /// invalid request (empty prompt) — the engine path returns an
     /// error for the same input; the batched paths report it here
     Rejected,
+    /// the request's wall-clock deadline passed (or the watchdog found
+    /// the stream stalled) before generation finished; partial tokens
+    /// are still delivered in the completion
+    DeadlineExceeded,
 }
 
 #[derive(Debug, Clone)]
@@ -148,13 +160,34 @@ pub enum StreamEvent {
     Cancelled { id: u64 },
 }
 
-/// Server/batcher side of a request: where to stream events, and the
-/// flag the client's `cancel()` raises.
+/// Progress/terminal bookkeeping shared between the batcher, the
+/// watchdog, and whoever holds ticket clones. Every field is written
+/// through `RequestTicket` methods so the invariants hold no matter
+/// which thread observes them.
+#[derive(Debug, Default)]
+pub struct TicketState {
+    /// a terminal event (`Done`/`Cancelled`) has been sent
+    terminated: AtomicBool,
+    /// lifetime events sent on the stream (the watchdog's liveness
+    /// signal: a stream whose count stops moving is stalled)
+    events: AtomicU64,
+    /// the watchdog/batcher decided this request ran out of time; the
+    /// retiring path reports `DeadlineExceeded` instead of `Cancelled`
+    deadline_exceeded: AtomicBool,
+    /// claimed by whichever thread sends the terminal event, so the
+    /// batcher and the watchdog never double-send or double-count
+    terminal_claimed: AtomicBool,
+}
+
+/// Server/batcher side of a request: where to stream events, the flag
+/// the client's `cancel()` raises, and shared progress state the
+/// watchdog reads.
 #[derive(Debug, Clone)]
 pub struct RequestTicket {
     pub id: u64,
     pub stream: Sender<StreamEvent>,
     pub cancel: Arc<AtomicBool>,
+    pub state: Arc<TicketState>,
 }
 
 impl RequestTicket {
@@ -162,9 +195,58 @@ impl RequestTicket {
         self.cancel.load(Ordering::Relaxed)
     }
 
+    /// Raise the cancel flag from the server side (the watchdog uses
+    /// this to evict a request that blew its deadline or stalled).
+    pub fn cancel(&self) {
+        self.cancel.store(true, Ordering::Relaxed);
+    }
+
     /// Best-effort send (the client may have dropped its handle).
     pub fn send(&self, ev: StreamEvent) {
+        match ev {
+            StreamEvent::Done(_) | StreamEvent::Cancelled { .. } => {
+                self.state.terminated.store(true, Ordering::Release);
+            }
+            StreamEvent::Token(_) => {}
+        }
+        self.state.events.fetch_add(1, Ordering::Relaxed);
         let _ = self.stream.send(ev);
+    }
+
+    /// Has a terminal event been sent on this stream?
+    pub fn terminated(&self) -> bool {
+        self.state.terminated.load(Ordering::Acquire)
+    }
+
+    /// Lifetime events sent (tokens + terminal).
+    pub fn events(&self) -> u64 {
+        self.state.events.load(Ordering::Relaxed)
+    }
+
+    /// Mark the request as out of time; the retiring path turns this
+    /// into a `DeadlineExceeded` completion rather than `Cancelled`.
+    pub fn set_deadline_exceeded(&self) {
+        self.state.deadline_exceeded.store(true, Ordering::Relaxed);
+    }
+
+    pub fn deadline_exceeded(&self) -> bool {
+        self.state.deadline_exceeded.load(Ordering::Relaxed)
+    }
+
+    /// One-shot claim of the right to send the terminal event. The
+    /// batcher claims it when retiring normally; the watchdog claims
+    /// it only if the batcher never got there, so exactly one terminal
+    /// `Done`/`Cancelled` reaches the client.
+    pub fn claim_terminal(&self) -> bool {
+        self.state
+            .terminal_claimed
+            .compare_exchange(
+                false,
+                true,
+                Ordering::AcqRel,
+                Ordering::Acquire,
+            )
+            .is_ok()
     }
 }
 
@@ -183,7 +265,12 @@ pub struct RequestHandle {
 pub fn request_channel(id: u64) -> (RequestTicket, RequestHandle) {
     let (tx, rx) = channel();
     let cancel = Arc::new(AtomicBool::new(false));
-    let ticket = RequestTicket { id, stream: tx, cancel: cancel.clone() };
+    let ticket = RequestTicket {
+        id,
+        stream: tx,
+        cancel: cancel.clone(),
+        state: Arc::new(TicketState::default()),
+    };
     let handle = RequestHandle {
         id,
         cancel,
@@ -419,5 +506,36 @@ mod tests {
     fn priority_orders() {
         assert!(Priority::High < Priority::Normal);
         assert!(Priority::Normal < Priority::Low);
+    }
+
+    #[test]
+    fn ticket_state_tracks_progress_and_terminal() {
+        let (ticket, mut handle) = request_channel(21);
+        assert_eq!(ticket.events(), 0);
+        assert!(!ticket.terminated());
+        ticket.send(StreamEvent::Token(5));
+        assert_eq!(ticket.events(), 1);
+        assert!(!ticket.terminated());
+        // the terminal claim is one-shot across clones
+        let clone = ticket.clone();
+        assert!(ticket.claim_terminal());
+        assert!(!clone.claim_terminal(), "second claimant must lose");
+        ticket.send(StreamEvent::Done(Completion {
+            id: 21,
+            tokens: vec![5],
+            finish: FinishReason::DeadlineExceeded,
+            ttft_ns: 1,
+            total_ns: 2,
+        }));
+        assert!(ticket.terminated());
+        assert_eq!(ticket.events(), 2);
+        // server-side cancel raises the same flag the client uses
+        ticket.set_deadline_exceeded();
+        assert!(clone.deadline_exceeded(), "state is shared via Arc");
+        clone.cancel();
+        assert!(ticket.cancelled());
+        let done = handle.wait_timeout(Duration::from_secs(1)).unwrap();
+        assert_eq!(done.finish, FinishReason::DeadlineExceeded);
+        assert_eq!(done.tokens, vec![5]);
     }
 }

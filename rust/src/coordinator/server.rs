@@ -8,10 +8,11 @@
 //! tokio; std threads + channels own the event loop, which at 1 core
 //! is the honest architecture anyway.)
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
 
 use crate::moe::model::MoeModel;
 
@@ -19,7 +20,8 @@ use super::batcher::Batcher;
 use super::decode::DecodeOdp;
 use super::metrics::Metrics;
 use super::request::{
-    request_channel, GenerateRequest, RequestHandle, RequestTicket,
+    request_channel, Completion, FinishReason, GenerateRequest,
+    RequestHandle, RequestTicket, StreamEvent,
 };
 
 enum Msg {
@@ -27,9 +29,56 @@ enum Msg {
     Shutdown,
 }
 
+/// Server tuning knobs (DESIGN.md §7). `Server::spawn` keeps the
+/// historical 3-arg signature with everything else at `Default`.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub max_batch: usize,
+    /// deadline for requests that don't carry their own (None = no
+    /// limit, the historical behavior)
+    pub default_deadline: Option<Duration>,
+    /// how long a stream may go without emitting any event before the
+    /// watchdog declares it stalled and cancels it
+    pub stall_budget: Duration,
+    /// watchdog scan interval
+    pub watchdog_poll: Duration,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig {
+            max_batch: 4,
+            default_deadline: None,
+            stall_budget: Duration::from_secs(30),
+            watchdog_poll: Duration::from_millis(5),
+        }
+    }
+}
+
+/// One watchdog-tracked request.
+struct Watch {
+    ticket: RequestTicket,
+    /// absolute expiry (submission + effective deadline)
+    deadline: Option<Instant>,
+    last_events: u64,
+    last_progress: Instant,
+    /// when the watchdog raised the cancel flag; after a grace period
+    /// with no terminal event from the batcher, the watchdog sends the
+    /// terminal itself so the client can never wedge
+    cancelled_at: Option<Instant>,
+}
+
+/// How long after a watchdog cancel the batcher gets to deliver the
+/// terminal event before the watchdog force-terminates the stream.
+const TERMINAL_GRACE: Duration = Duration::from_millis(500);
+
 pub struct Server {
     tx: Sender<Msg>,
     worker: Option<JoinHandle<()>>,
+    watchdog: Option<JoinHandle<()>>,
+    watchdog_stop: Arc<AtomicBool>,
+    watches: Arc<Mutex<Vec<Watch>>>,
+    default_deadline: Option<Duration>,
     next_id: AtomicU64,
     pub metrics: Arc<Metrics>,
     /// submitted-but-unfinished estimate: bumped on `submit`, snapped
@@ -41,6 +90,12 @@ pub struct Server {
 impl Server {
     pub fn spawn(model: Arc<MoeModel>, odp: Option<DecodeOdp>,
                  max_batch: usize) -> Server {
+        Server::spawn_cfg(model, odp,
+                          ServerConfig { max_batch, ..Default::default() })
+    }
+
+    pub fn spawn_cfg(model: Arc<MoeModel>, odp: Option<DecodeOdp>,
+                     cfg: ServerConfig) -> Server {
         // pin + announce the kernel dispatch table before the worker
         // thread takes its first request (one banner per process)
         let kops = crate::kernels::log_selection();
@@ -54,9 +109,11 @@ impl Server {
         let m2 = metrics.clone();
         let pending_hint = Arc::new(AtomicU64::new(0));
         let hint = pending_hint.clone();
+        let default_deadline = cfg.default_deadline;
         let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
         let worker = std::thread::spawn(move || {
-            let mut batcher = Batcher::new(model, odp, max_batch);
+            let mut batcher = Batcher::new(model, odp, cfg.max_batch);
+            batcher.set_default_deadline(default_deadline);
             let mut shutdown = false;
             loop {
                 // drain the mailbox (block only when idle)
@@ -86,9 +143,81 @@ impl Server {
             }
             hint.store(0, Ordering::Relaxed);
         });
+
+        // watchdog: scans tracked requests for blown deadlines and
+        // stalled streams. It never touches the batcher directly —
+        // it raises the ticket's cancel/deadline flags (the batcher
+        // reaps them next step) and only force-terminates a stream
+        // itself if the batcher is too wedged to do so (DESIGN.md §7).
+        let watches: Arc<Mutex<Vec<Watch>>> = Arc::new(Mutex::new(Vec::new()));
+        let watchdog_stop = Arc::new(AtomicBool::new(false));
+        let (w2, stop2, m3) =
+            (watches.clone(), watchdog_stop.clone(), metrics.clone());
+        let (stall, poll) = (cfg.stall_budget, cfg.watchdog_poll);
+        let watchdog = std::thread::Builder::new()
+            .name("mc-watchdog".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    std::thread::sleep(poll);
+                    let now = Instant::now();
+                    let mut ws = w2.lock().unwrap();
+                    ws.retain_mut(|w| {
+                        if w.ticket.terminated() {
+                            return false;
+                        }
+                        let ev = w.ticket.events();
+                        if ev != w.last_events {
+                            w.last_events = ev;
+                            w.last_progress = now;
+                        }
+                        match w.cancelled_at {
+                            None => {
+                                let blown = w
+                                    .deadline
+                                    .is_some_and(|d| now >= d)
+                                    || now.duration_since(w.last_progress)
+                                        >= stall;
+                                if blown {
+                                    w.ticket.set_deadline_exceeded();
+                                    w.ticket.cancel();
+                                    w.cancelled_at = Some(now);
+                                }
+                                true
+                            }
+                            Some(t) => {
+                                if now.duration_since(t) < TERMINAL_GRACE {
+                                    return true;
+                                }
+                                // the batcher never delivered a
+                                // terminal: unwedge the client here
+                                if w.ticket.claim_terminal() {
+                                    Metrics::inc(&m3.deadline_exceeded, 1);
+                                    w.ticket.send(StreamEvent::Done(
+                                        Completion {
+                                            id: w.ticket.id,
+                                            tokens: Vec::new(),
+                                            finish:
+                                                FinishReason::DeadlineExceeded,
+                                            ttft_ns: 0,
+                                            total_ns: 0,
+                                        },
+                                    ));
+                                }
+                                false
+                            }
+                        }
+                    });
+                }
+            })
+            .expect("spawn mc-watchdog");
+
         Server {
             tx,
             worker: Some(worker),
+            watchdog: Some(watchdog),
+            watchdog_stop,
+            watches,
+            default_deadline,
             next_id: AtomicU64::new(1),
             metrics,
             pending_hint,
@@ -102,6 +231,17 @@ impl Server {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let (ticket, handle) = request_channel(id);
         self.pending_hint.fetch_add(1, Ordering::Relaxed);
+        let now = Instant::now();
+        self.watches.lock().unwrap().push(Watch {
+            ticket: ticket.clone(),
+            deadline: req
+                .deadline
+                .or(self.default_deadline)
+                .map(|d| now + d),
+            last_events: 0,
+            last_progress: now,
+            cancelled_at: None,
+        });
         let _ = self.tx.send(Msg::Submit(req, ticket));
         handle
     }
@@ -123,6 +263,14 @@ impl Server {
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
+        self.stop_watchdog();
+    }
+
+    fn stop_watchdog(&mut self) {
+        self.watchdog_stop.store(true, Ordering::Relaxed);
+        if let Some(w) = self.watchdog.take() {
+            let _ = w.join();
+        }
     }
 }
 
@@ -132,6 +280,7 @@ impl Drop for Server {
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
+        self.stop_watchdog();
     }
 }
 
@@ -142,17 +291,28 @@ mod tests {
     use crate::coordinator::request::StreamEvent;
     use crate::moe::model::tests::random_model;
 
+    /// Generous server-enforced deadline for tests: instead of each
+    /// client hand-rolling a `wait_timeout(30s)`, the server's own
+    /// deadline machinery bounds every request, so a wedged test fails
+    /// with `DeadlineExceeded` rather than hanging the suite.
+    fn test_cfg(max_batch: usize) -> ServerConfig {
+        ServerConfig {
+            max_batch,
+            default_deadline: Some(Duration::from_secs(30)),
+            ..Default::default()
+        }
+    }
+
     #[test]
     fn serves_concurrent_requests() {
         let model = Arc::new(random_model(&ModelConfig::test_tiny(), 0));
-        let server = Server::spawn(model, None, 4);
+        let server = Server::spawn_cfg(model, None, test_cfg(4));
         let handles: Vec<_> = (0..6)
             .map(|i| server.submit_greedy(vec![1, 5, 80 + i, 3], 5))
             .collect();
-        for mut h in handles {
-            let done = h
-                .wait_timeout(std::time::Duration::from_secs(30))
-                .expect("completion");
+        for h in handles {
+            let done = h.wait().expect("completion");
+            assert_ne!(done.finish, FinishReason::DeadlineExceeded);
             assert!(!done.tokens.is_empty());
         }
         assert_eq!(
@@ -167,13 +327,15 @@ mod tests {
         let mut h = server.submit_greedy(vec![1, 5, 80, 3], 5);
         let mut streamed = Vec::new();
         let mut done = None;
+        let mut cancelled = false;
         while let Some(ev) = h.next_event() {
             match ev {
                 StreamEvent::Token(t) => streamed.push(t),
                 StreamEvent::Done(c) => done = Some(c),
-                StreamEvent::Cancelled { .. } => panic!("not cancelled"),
+                StreamEvent::Cancelled { .. } => cancelled = true,
             }
         }
+        assert!(!cancelled, "request must not be cancelled");
         let done = done.expect("terminal Done event");
         assert!(!streamed.is_empty());
         assert_eq!(streamed, done.tokens,
@@ -186,5 +348,57 @@ mod tests {
         let model = Arc::new(random_model(&ModelConfig::test_tiny(), 1));
         let server = Server::spawn(model, None, 2);
         server.shutdown();
+    }
+
+    #[test]
+    fn per_request_deadline_terminates_stream() {
+        let model = Arc::new(random_model(&ModelConfig::test_tiny(), 2));
+        let server = Server::spawn_cfg(model, None, test_cfg(2));
+        // zero budget: expired on arrival, so the outcome can't race
+        // decode speed — the stream must still terminate cleanly
+        let req = GenerateRequest::greedy(vec![1, 5, 80, 3], 512)
+            .with_deadline(Duration::ZERO);
+        let done = server
+            .submit(req)
+            .wait()
+            .expect("deadline produces a terminal Done, never a hang");
+        assert_eq!(done.finish, FinishReason::DeadlineExceeded);
+        assert!(
+            server.metrics.deadline_exceeded.load(Ordering::Relaxed) >= 1);
+        server.shutdown();
+    }
+
+    #[test]
+    fn watchdog_unwedges_client_when_batcher_never_answers() {
+        // a server whose worker is already gone simulates a wedged
+        // batcher: the watchdog must deliver the terminal event itself
+        let model = Arc::new(random_model(&ModelConfig::test_tiny(), 3));
+        let cfg = ServerConfig {
+            max_batch: 1,
+            default_deadline: Some(Duration::from_millis(10)),
+            stall_budget: Duration::from_millis(10),
+            watchdog_poll: Duration::from_millis(1),
+        };
+        let mut server = Server::spawn_cfg(model, None, cfg);
+        // kill the worker under the watchdog's feet
+        let _ = server.tx.send(Msg::Shutdown);
+        if let Some(w) = server.worker.take() {
+            let _ = w.join();
+        }
+        let id = server.next_id.fetch_add(1, Ordering::Relaxed);
+        let (ticket, handle) = request_channel(id);
+        let now = Instant::now();
+        server.watches.lock().unwrap().push(Watch {
+            ticket,
+            deadline: Some(now + Duration::from_millis(10)),
+            last_events: 0,
+            last_progress: now,
+            cancelled_at: None,
+        });
+        let done = handle.wait().expect("watchdog-sent terminal Done");
+        assert_eq!(done.finish, FinishReason::DeadlineExceeded);
+        assert_eq!(
+            server.metrics.deadline_exceeded.load(Ordering::Relaxed), 1);
+        drop(server);
     }
 }

@@ -10,5 +10,7 @@ pub mod tasks;
 pub mod text;
 
 pub use corpus::{calibration_set, pack_stream, Split};
-pub use tasks::{eval_sample, task_sequence, EvalSample};
+pub use tasks::{
+    eval_sample, task_sequence, try_task_sequence, EvalSample, NUM_TASKS,
+};
 pub use text::TextChannel;

@@ -18,9 +18,15 @@ fn sym(v: u32) -> u32 {
     SYM_BASE + v
 }
 
-/// (prompt, answer) in raw tokens, formats identical to datagen.py.
-pub fn gen_task(rng: &mut Rng, task: usize) -> (Vec<u32>, Vec<u32>) {
-    match task {
+/// Number of task grammars (valid task ids are `0..NUM_TASKS`).
+pub const NUM_TASKS: usize = 8;
+
+/// Fallible variant of [`gen_task`] for untrusted task ids (e.g. a
+/// user-supplied `--task`): `None` instead of a panic when the id is
+/// out of range.
+pub fn try_gen_task(rng: &mut Rng, task: usize)
+                    -> Option<(Vec<u32>, Vec<u32>)> {
+    Some(match task {
         0 => gen_copy(rng),
         1 => gen_reverse(rng),
         2 => gen_sortsym(rng),
@@ -29,8 +35,17 @@ pub fn gen_task(rng: &mut Rng, task: usize) -> (Vec<u32>, Vec<u32>) {
         5 => gen_majority(rng),
         6 => gen_counting(rng),
         7 => gen_induction(rng),
-        _ => panic!("unknown task {task}"),
-    }
+        _ => return None,
+    })
+}
+
+/// (prompt, answer) in raw tokens, formats identical to datagen.py.
+/// Panics on `task >= NUM_TASKS` — internal callers pass ids they
+/// derived from `NUM_TASKS`; boundary code (CLI/HTTP) validates first
+/// or uses [`try_gen_task`].
+pub fn gen_task(rng: &mut Rng, task: usize) -> (Vec<u32>, Vec<u32>) {
+    try_gen_task(rng, task)
+        .unwrap_or_else(|| panic!("unknown task {task} (0..{NUM_TASKS})"))
 }
 
 fn gen_copy(rng: &mut Rng) -> (Vec<u32>, Vec<u32>) {
@@ -115,15 +130,22 @@ fn gen_induction(rng: &mut Rng) -> (Vec<u32>, Vec<u32>) {
     (prompt, vec![sym(b)])
 }
 
-/// Full training-format sequence: [BOS, tag] prompt [SEP] answer [EOS].
-pub fn task_sequence(rng: &mut Rng, task: usize) -> Vec<u32> {
-    let (prompt, answer) = gen_task(rng, task);
+/// Fallible variant of [`task_sequence`] for untrusted task ids.
+pub fn try_task_sequence(rng: &mut Rng, task: usize) -> Option<Vec<u32>> {
+    let (prompt, answer) = try_gen_task(rng, task)?;
     let mut seq = vec![BOS, TASK_BASE + task as u32];
     seq.extend(prompt);
     seq.push(SEP);
     seq.extend(answer);
     seq.push(EOS);
-    seq
+    Some(seq)
+}
+
+/// Full training-format sequence: [BOS, tag] prompt [SEP] answer [EOS].
+/// Panics on an out-of-range task (see [`gen_task`]).
+pub fn task_sequence(rng: &mut Rng, task: usize) -> Vec<u32> {
+    try_task_sequence(rng, task)
+        .unwrap_or_else(|| panic!("unknown task {task} (0..{NUM_TASKS})"))
 }
 
 // ---------------------------------------------------------------------------
@@ -250,6 +272,16 @@ pub fn fewshot_sample(rng: &mut Rng, task: usize, shots: usize) -> EvalSample {
 mod tests {
     use super::*;
     use crate::config::TASK_NAMES;
+
+    #[test]
+    fn out_of_range_task_is_none_not_panic() {
+        let mut rng = Rng::new(9);
+        assert!(try_gen_task(&mut rng, NUM_TASKS).is_none());
+        assert!(try_task_sequence(&mut rng, usize::MAX).is_none());
+        for task in 0..NUM_TASKS {
+            assert!(try_task_sequence(&mut rng, task).is_some());
+        }
+    }
 
     #[test]
     fn sequences_well_formed() {

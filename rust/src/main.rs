@@ -8,11 +8,13 @@
 //!             [--load m.mcqz] [--expert-budget-mb 8] [--prefetch async]
 //!   serve     [--port 8080] [--host 127.0.0.1] [--batch 4]
 //!             [--max-conns 256] [--max-streams-per-tenant 32]
-//!             [--shed-queue-depth 64] [--odp] [--load m.mcqz]
-//!             [--expert-budget-mb 8] [--prefetch off|sync|async]
+//!             [--shed-queue-depth 64] [--timeout-ms 0] [--odp]
+//!             [--load m.mcqz] [--expert-budget-mb 8]
+//!             [--prefetch off|sync|async]
 //!             (no --port: legacy in-process synthetic load,
 //!              [--requests 16] [--max-new 24])
-//!   generate  [--task 3] [--max-new 16] [--odp] [--load m.mcqz]
+//!   generate  [--task 3] [--max-new 16] [--timeout-ms 0] [--odp]
+//!             [--load m.mcqz]
 //!             [--temperature 0.8] [--top-k 0] [--top-p 1.0] [--seed 5]
 //!             [--expert-budget-mb 8] [--prefetch off|sync|async]
 //!   expert-analysis [--out file.json]     (Fig. 3 / Fig. 10 data)
@@ -63,6 +65,14 @@ fn expert_budget_bytes(args: &Args) -> Result<Option<usize>> {
         return Ok(None);
     }
     Ok(Some((mb * (1 << 20) as f64) as usize))
+}
+
+/// `--timeout-ms` as a per-request deadline (None when absent or 0).
+fn timeout_from(args: &Args) -> Result<Option<std::time::Duration>> {
+    Ok(match args.usize_or("timeout-ms", 0)? {
+        0 => None,
+        ms => Some(std::time::Duration::from_millis(ms as u64)),
+    })
 }
 
 fn prefetch_mode(args: &Args) -> Result<mc_moe::offload::PrefetchMode> {
@@ -299,6 +309,7 @@ fn cmd_serve_http(model: mc_moe::moe::MoeModel, args: &Args) -> Result<()> {
         shed_queue_depth: args.usize_or(
             "shed-queue-depth", defaults.shed_queue_depth)?,
         max_batch: args.usize_or("batch", defaults.max_batch)?,
+        default_timeout: timeout_from(args)?,
         ..defaults
     };
     let engine = Server::spawn(Arc::new(model), odp, cfg.max_batch);
@@ -360,13 +371,19 @@ fn cmd_generate(dir: &Path, args: &Args) -> Result<()> {
     let engine = mc_moe::coordinator::McEngine::new(model, None, decode_odp);
     let task = args.usize_or("task", 3)?;
     let mut rng = mc_moe::util::rng::Rng::new(args.usize_or("seed", 5)? as u64);
-    let seq = mc_moe::data::task_sequence(&mut rng, task);
+    let seq = mc_moe::data::try_task_sequence(&mut rng, task)
+        .ok_or_else(|| anyhow::anyhow!(
+            "--task {task} out of range (valid: 0..{})",
+            mc_moe::data::NUM_TASKS))?;
     let sep = seq.iter().position(|&t| t == 3).unwrap();
     let prompt = &seq[..=sep];
     let gold = &seq[sep + 1..seq.len() - 1];
-    let req = GenerateRequest::greedy(
+    let mut req = GenerateRequest::greedy(
         prompt.to_vec(), args.usize_or("max-new", 16)?)
         .with_sampling(sampling_from(args)?);
+    if let Some(d) = timeout_from(args)? {
+        req = req.with_deadline(d);
+    }
     let out = engine.generate(&req)?;
     println!("task     : {}", TASK_NAMES[task]);
     println!("prompt   : {prompt:?}");

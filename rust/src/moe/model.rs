@@ -359,7 +359,7 @@ impl MoeModel {
                 .mask_expert
                 .filter(|&(l, _)| l == li)
                 .map(|(_, e)| e);
-            let routed = router::score_route(
+            let mut routed = router::score_route(
                 &h,
                 &layer.gate,
                 self.cfg.top_k,
@@ -388,8 +388,13 @@ impl MoeModel {
                 // cache-resolved experts: pin the routed set for the
                 // dispatch, feed the prefetcher, unpin after
                 crate::offload::unique_experts(&routed.topk, &mut needed);
-                self.resolver.pin_layer(li, &needed, &mut pins);
+                let unavailable = self.resolver.pin_layer(li, &needed, &mut pins);
                 self.resolver.note_routing(li, &needed);
+                if unavailable > 0
+                    && crate::offload::degrade_topk(&mut routed.topk, &pins) > 0
+                {
+                    self.resolver.note_degraded();
+                }
                 let batches = dispatch::dispatch_experts(
                     &h,
                     &routed.topk,

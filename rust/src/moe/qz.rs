@@ -29,6 +29,7 @@ use crate::config::ModelConfig;
 use crate::offload::ResidencyPriors;
 use crate::quant::{BinaryTensor, PackedTensor, QTensor};
 use crate::tensor::Mat;
+use crate::util::crc32::crc32;
 use crate::util::json::{arr, num, obj, s, Json};
 
 use super::model::{Expert, Layer, MoeModel};
@@ -183,9 +184,14 @@ fn write_file(path: &Path, model: &MoeModel, version: u32,
             w.add_qtensor(&format!("layers.{i}.experts.{e}.w3"), &ex.w3);
             w.add_qtensor(&format!("layers.{i}.experts.{e}.w2"), &ex.w2);
             let seg_len = w.payload.len() - seg_off;
+            // per-segment integrity: ExpertStore::fetch re-hashes the
+            // bytes it reads so disk corruption surfaces as a typed
+            // error, not a garbage expert
+            let crc = crc32(&w.payload[seg_off..seg_off + seg_len]);
             row.push(obj(vec![
                 ("off", num(seg_off as f64)),
                 ("len", num(seg_len as f64)),
+                ("crc", num(crc as f64)),
             ]));
         }
         dir_rows.push(arr(row));
@@ -280,8 +286,16 @@ impl<'a> Reader<'a> {
                 let k = e.get("k")?.as_usize()?;
                 let n = e.get("n")?.as_usize()?;
                 let sc_len = e.get("sc_len")?.as_usize()?;
+                let bits = e.get("bits")?.as_usize()?;
+                // validated here, at the untrusted-input boundary, so
+                // the kernels' bit-width dispatch can never see a
+                // width it would have to panic on mid-request
+                if !(2..=4).contains(&bits) {
+                    bail!("unsupported packed bit-width {bits} \
+                           (supported: 2, 3, 4)");
+                }
                 Ok(QTensor::Packed(PackedTensor {
-                    bits: e.get("bits")?.as_usize()?,
+                    bits,
                     k,
                     n,
                     group: e.get("group")?.as_usize()?,
@@ -398,11 +412,40 @@ pub(crate) fn build_model(header: &Json, payload: &[u8],
     })
 }
 
+/// Verify every expert segment of a v2 header against its recorded
+/// crc32. Directory rows written before checksums existed carry no
+/// `crc` key and are skipped — re-saving such a file backfills them.
+pub(crate) fn verify_expert_dir(header: &Json, payload: &[u8]) -> Result<()> {
+    let Some(dir) = header.opt("expert_dir") else { return Ok(()) };
+    for (l, row) in dir.as_arr()?.iter().enumerate() {
+        for (e, seg) in row.as_arr()?.iter().enumerate() {
+            let Some(want) = seg.opt("crc") else { continue };
+            let want = want.as_usize()? as u32;
+            let off = seg.get("off")?.as_usize()?;
+            let len = seg.get("len")?.as_usize()?;
+            if off.checked_add(len).map_or(true, |end| end > payload.len()) {
+                bail!("expert segment out of bounds \
+                       (layer {l}, expert {e})");
+            }
+            let got = crc32(&payload[off..off + len]);
+            if got != want {
+                bail!("expert segment checksum mismatch (layer {l}, \
+                       expert {e}): crc32 {got:#010x} != {want:#010x}");
+            }
+        }
+    }
+    Ok(())
+}
+
 /// Load an MCQZ compressed model, fully materialized (v1 or v2). For
 /// byte-budgeted serving of a v2 file see `offload::load_cached`.
 pub fn load(path: &Path) -> Result<MoeModel> {
     let bytes = std::fs::read(path).with_context(|| format!("reading {path:?}"))?;
-    let (_version, header, payload_off) = parse_container(&bytes)?;
+    let (version, header, payload_off) = parse_container(&bytes)?;
+    if version >= 2 {
+        verify_expert_dir(&header, &bytes[payload_off..])
+            .with_context(|| format!("verifying {path:?}"))?;
+    }
     build_model(&header, &bytes[payload_off..], true)
 }
 
@@ -526,5 +569,88 @@ mod tests {
         std::fs::write(&path, b"NOPE0000000000").unwrap();
         assert!(load(&path).is_err());
         std::fs::remove_file(&path).ok();
+    }
+
+    /// First expert segment of a saved v2 file:
+    /// (absolute file offset of segment start, segment length).
+    fn first_segment(bytes: &[u8]) -> (usize, usize) {
+        let (_, header, payload_off) = parse_container(bytes).unwrap();
+        let seg = &header.get("expert_dir").unwrap().as_arr().unwrap()[0]
+            .as_arr().unwrap()[0];
+        (payload_off + seg.get("off").unwrap().as_usize().unwrap(),
+         seg.get("len").unwrap().as_usize().unwrap())
+    }
+
+    #[test]
+    fn truncated_header_is_err_not_panic() {
+        let m = mixed_model();
+        let path = std::env::temp_dir().join("mcqz_trunc_hdr.mcqz");
+        save(&path, &m).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // cut inside the fixed 12-byte prelude and inside the JSON
+        // header: both must be typed errors
+        for cut in [3usize, 8, 20] {
+            std::fs::write(&path, &bytes[..cut]).unwrap();
+            let err = load(&path).expect_err("truncated header");
+            assert!(!format!("{err:#}").is_empty());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncated_expert_segment_is_err_not_panic() {
+        let m = mixed_model();
+        let path = std::env::temp_dir().join("mcqz_trunc_seg.mcqz");
+        save(&path, &m).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        let (seg_at, _) = first_segment(&bytes);
+        // keep the header + non-expert region, lose the expert bytes
+        std::fs::write(&path, &bytes[..seg_at + 16]).unwrap();
+        let err = load(&path).expect_err("truncated segment");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("out of bounds"), "{msg}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn checksum_mismatch_is_err_not_panic() {
+        let m = mixed_model();
+        let path = std::env::temp_dir().join("mcqz_crc_flip.mcqz");
+        save(&path, &m).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        let (seg_at, seg_len) = first_segment(&bytes);
+        bytes[seg_at + seg_len / 2] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = load(&path).expect_err("flipped bit");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("checksum mismatch"), "{msg}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn v1_resave_backfills_checksums() {
+        let m = mixed_model();
+        let p1 = std::env::temp_dir().join("mcqz_migrate_v1.mcqz");
+        let p2 = std::env::temp_dir().join("mcqz_migrate_v2.mcqz");
+        save_v1(&p1, &m).unwrap();
+        // v1 has no directory, hence nothing to verify
+        let migrated = load(&p1).unwrap();
+        save(&p2, &migrated).unwrap();
+        let bytes = std::fs::read(&p2).unwrap();
+        let (version, header, payload_off) = parse_container(&bytes).unwrap();
+        assert_eq!(version, VERSION);
+        for row in header.get("expert_dir").unwrap().as_arr().unwrap() {
+            for seg in row.as_arr().unwrap() {
+                assert!(seg.opt("crc").is_some(),
+                        "migrated segment missing checksum");
+            }
+        }
+        // and the backfilled checksums verify against the payload
+        verify_expert_dir(&header, &bytes[payload_off..]).unwrap();
+        // migration is lossless
+        let toks: Vec<u32> = (1..17).collect();
+        assert_eq!(m.score(&toks).data, load(&p2).unwrap().score(&toks).data);
+        std::fs::remove_file(&p1).ok();
+        std::fs::remove_file(&p2).ok();
     }
 }

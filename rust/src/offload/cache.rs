@@ -19,16 +19,46 @@
 //! dropped instead.
 
 use std::sync::{Arc, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::coordinator::metrics::Metrics;
 use crate::moe::model::Expert;
+use crate::util::faults;
 
 use super::store::ExpertStore;
+use super::ExpertUnavailable;
 
 /// Extra eviction credits a maximally significant expert gets on top
 /// of the base second chance.
 const SIG_CREDITS: f64 = 3.0;
+
+/// Retry / quarantine discipline for demand fetches. A transient
+/// failure (short read, injected I/O error, checksum mismatch from a
+/// racing writer) is retried with exponential backoff; an expert that
+/// exhausts its retries is quarantined for a cool-down during which
+/// the resolver reports it [`ExpertUnavailable`] immediately instead
+/// of hammering the failing medium, and dispatch degrades around it
+/// (DESIGN.md §7). Quarantine expiry re-arms the fetch path, so a
+/// healed disk recovers without intervention.
+#[derive(Debug, Clone, Copy)]
+pub struct FetchPolicy {
+    /// extra attempts after the first failure
+    pub max_retries: u32,
+    /// backoff before retry `n` is `backoff * 2^(n-1)`
+    pub backoff: Duration,
+    /// how long a failed (layer, expert) stays unavailable
+    pub quarantine: Duration,
+}
+
+impl Default for FetchPolicy {
+    fn default() -> FetchPolicy {
+        FetchPolicy {
+            max_retries: 3,
+            backoff: Duration::from_micros(500),
+            quarantine: Duration::from_millis(250),
+        }
+    }
+}
 
 #[derive(Debug)]
 struct Slot {
@@ -47,6 +77,9 @@ struct Inner {
     bytes: usize,
     /// clock hand over the flattened (layer, expert) space
     hand: usize,
+    /// quarantine expiry per [layer][expert]; `Some` while the expert
+    /// is sidelined after exhausting its fetch retries
+    quarantined: Vec<Vec<Option<Instant>>>,
 }
 
 #[derive(Debug)]
@@ -57,6 +90,7 @@ pub struct ExpertCache {
     /// eviction credit per [layer][expert]: 1 + round(3 * sig score)
     credit: Vec<Vec<u8>>,
     n_experts: usize,
+    policy: Mutex<FetchPolicy>,
     inner: Mutex<Inner>,
 }
 
@@ -83,12 +117,20 @@ impl ExpertCache {
             metrics,
             credit,
             n_experts: ne,
+            policy: Mutex::new(FetchPolicy::default()),
             inner: Mutex::new(Inner {
                 slots: (0..nl).map(|_| (0..ne).map(|_| None).collect()).collect(),
                 bytes: 0,
                 hand: 0,
+                quarantined: vec![vec![None; ne]; nl],
             }),
         }
+    }
+
+    /// Replace the retry / quarantine discipline (tests and the chaos
+    /// bench tighten it; serving keeps the default).
+    pub fn set_fetch_policy(&self, policy: FetchPolicy) {
+        *self.policy.lock().unwrap() = policy;
     }
 
     pub fn budget_bytes(&self) -> usize {
@@ -104,10 +146,28 @@ impl ExpertCache {
     }
 
     /// Resolve one expert for the current step, pinning it until the
+    /// matching [`unpin`]. Infallible variant of [`try_get_pinned`]
+    /// for callers that treat an unavailable expert as a bug (tests,
+    /// offline tools); the serving path goes through the fallible one
+    /// and degrades instead.
+    ///
+    /// [`try_get_pinned`]: ExpertCache::try_get_pinned
+    pub fn get_pinned(&self, layer: usize, expert: usize) -> Arc<Expert> {
+        self.try_get_pinned(layer, expert).unwrap_or_else(|u| {
+            panic!("expert store fetch failed after retries: {u}")
+        })
+    }
+
+    /// Resolve one expert for the current step, pinning it until the
     /// matching [`unpin`]. Misses demand-load from the store (the
     /// stall is recorded in `Metrics::miss_stall_ns`) and may exceed
-    /// the budget if every other slot is pinned.
-    pub fn get_pinned(&self, layer: usize, expert: usize) -> Arc<Expert> {
+    /// the budget if every other slot is pinned. Fetch failures are
+    /// retried per the [`FetchPolicy`]; an expert that exhausts its
+    /// retries is quarantined and reported [`ExpertUnavailable`] until
+    /// the quarantine expires (callers drop it from dispatch — the
+    /// paper's ODP pruning path — rather than unwinding the step).
+    pub fn try_get_pinned(&self, layer: usize, expert: usize)
+                          -> Result<Arc<Expert>, ExpertUnavailable> {
         {
             let mut g = self.inner.lock().unwrap();
             if let Some(slot) = g.slots[layer][expert].as_mut() {
@@ -118,18 +178,39 @@ impl ExpertCache {
                     Metrics::inc(&self.metrics.expert_prefetch_hits, 1);
                 }
                 Metrics::inc(&self.metrics.expert_cache_hits, 1);
-                return slot.expert.clone();
+                return Ok(slot.expert.clone());
+            }
+            if let Some(until) = g.quarantined[layer][expert] {
+                if Instant::now() < until {
+                    return Err(ExpertUnavailable { layer, expert });
+                }
+                // cool-down over: re-arm the fetch path
+                g.quarantined[layer][expert] = None;
             }
         }
         Metrics::inc(&self.metrics.expert_cache_misses, 1);
+        let policy = *self.policy.lock().unwrap();
         let t0 = Instant::now();
-        let fetched = self
-            .store
-            .fetch(layer, expert)
-            .unwrap_or_else(|e| {
-                panic!("expert store fetch failed (layer {layer}, \
-                        expert {expert}): {e:#}")
-            });
+        let mut fetched = None;
+        for attempt in 0..=policy.max_retries {
+            if attempt > 0 {
+                Metrics::inc(&self.metrics.expert_load_retries, 1);
+                std::thread::sleep(
+                    policy.backoff * (1u32 << (attempt - 1).min(16)));
+            }
+            if let Ok(x) = self.store.fetch(layer, expert) {
+                fetched = Some(x);
+                break;
+            }
+        }
+        let Some(fetched) = fetched else {
+            Metrics::inc(&self.metrics.expert_load_failures, 1);
+            Metrics::inc(&self.metrics.experts_quarantined, 1);
+            let mut g = self.inner.lock().unwrap();
+            g.quarantined[layer][expert] =
+                Some(Instant::now() + policy.quarantine);
+            return Err(ExpertUnavailable { layer, expert });
+        };
         self.metrics.record_miss_stall(t0.elapsed().as_nanos() as u64);
         let bytes = fetched.storage_bytes();
         let expert_arc = Arc::new(fetched);
@@ -142,7 +223,7 @@ impl ExpertCache {
             slot.prefetched = false;
             slot.credit = self.credit[layer][expert];
             slot.pins += 1;
-            return slot.expert.clone();
+            return Ok(slot.expert.clone());
         }
         // demand loads must land even if eviction can't make room
         // (everything else pinned): the step's working set is sacred
@@ -156,7 +237,7 @@ impl ExpertCache {
         });
         g.bytes += bytes;
         Metrics::set_gauge(&self.metrics.bytes_resident, g.bytes as u64);
-        expert_arc
+        Ok(expert_arc)
     }
 
     /// Release a step's pin. The slot stays resident; it merely
@@ -187,7 +268,12 @@ impl ExpertCache {
                 return false;
             }
         }
-        let Ok(fetched) = self.store.fetch(layer, expert) else {
+        if let Some(fp) = faults::plan() {
+            if fp.drop_prefetch() {
+                return false; // injected: speculative load skipped
+            }
+        }
+        let Ok(fetched) = self.store.fetch_speculative(layer, expert) else {
             return false;
         };
         Metrics::inc(&self.metrics.expert_prefetch_issued, 1);
@@ -364,6 +450,51 @@ mod tests {
         assert!(!cache.prefetch(1, 2), "prefetch never overshoots");
         assert_eq!(cache.bytes_resident(), before);
         assert!(!cache.contains(1, 2));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn failed_fetch_retries_quarantines_and_recovers() {
+        let (metrics, cache, _per, path) = setup("cache_quarantine", 4);
+        cache.set_fetch_policy(FetchPolicy {
+            max_retries: 2,
+            backoff: Duration::ZERO,
+            quarantine: Duration::from_millis(40),
+        });
+        // corrupt expert (0, 0)'s segment on disk: every fetch of it
+        // now fails its checksum, everything else stays healthy
+        let clean = std::fs::read(&path).unwrap();
+        let (_, header, payload_off) =
+            crate::moe::qz::parse_container(&clean).unwrap();
+        let seg = &header.get("expert_dir").unwrap().as_arr().unwrap()[0]
+            .as_arr().unwrap()[0];
+        let at = payload_off + seg.get("off").unwrap().as_usize().unwrap()
+            + seg.get("len").unwrap().as_usize().unwrap() / 2;
+        let mut corrupt = clean.clone();
+        corrupt[at] ^= 0x08;
+        std::fs::write(&path, &corrupt).unwrap();
+
+        use std::sync::atomic::Ordering::Relaxed;
+        let err = cache.try_get_pinned(0, 0).expect_err("corrupt expert");
+        assert_eq!((err.layer, err.expert), (0, 0));
+        assert_eq!(metrics.expert_load_retries.load(Relaxed), 2,
+                   "both retries consumed");
+        assert_eq!(metrics.expert_load_failures.load(Relaxed), 1);
+        assert_eq!(metrics.experts_quarantined.load(Relaxed), 1);
+
+        // quarantined: the immediate re-ask fails fast, no new retries
+        assert!(cache.try_get_pinned(0, 0).is_err());
+        assert_eq!(metrics.expert_load_retries.load(Relaxed), 2);
+        // siblings are unaffected
+        assert!(cache.try_get_pinned(0, 1).is_ok());
+        cache.unpin(0, 1);
+
+        // heal the disk, wait out the quarantine: full recovery
+        std::fs::write(&path, &clean).unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+        let ex = cache.try_get_pinned(0, 0).expect("recovered after heal");
+        cache.unpin(0, 0);
+        assert!(ex.storage_bytes() > 0);
         std::fs::remove_file(&path).ok();
     }
 

@@ -36,9 +36,31 @@ use anyhow::Result;
 use crate::coordinator::metrics::Metrics;
 use crate::moe::model::{Expert, MoeModel};
 
-pub use cache::ExpertCache;
+pub use cache::{ExpertCache, FetchPolicy};
 pub use prefetch::{Prefetcher, PrefetchMode};
 pub use store::{ExpertStore, ResidencyPriors};
+
+/// Typed "this expert cannot be materialized right now" signal: the
+/// (layer, expert) exhausted its fetch retries and sits in quarantine.
+/// Deliberately *not* an `anyhow::Error` — it is an expected serving
+/// condition the dispatch path degrades around (renormalize the
+/// surviving routed weights, the paper's Eq.-6 pruning), never an
+/// unwind.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ExpertUnavailable {
+    pub layer: usize,
+    pub expert: usize,
+}
+
+impl std::fmt::Display for ExpertUnavailable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "expert unavailable (layer {}, expert {}): \
+                   fetch retries exhausted, quarantined",
+               self.layer, self.expert)
+    }
+}
+
+impl std::error::Error for ExpertUnavailable {}
 
 /// How a model's experts are materialized for execution. One seam for
 /// every driver: `moe/exec/dispatch.rs` consumes the pinned slots,
@@ -53,15 +75,26 @@ pub trait ExpertResolver: Send + Sync + Debug {
     /// `pins` — a caller-owned slot vec indexed by expert id, cleared
     /// and refilled here so steady-state callers reuse its capacity.
     /// Pins hold until [`ExpertResolver::unpin_layer`].
+    ///
+    /// Returns the number of `needed` experts that could NOT be
+    /// materialized (quarantined after fetch failures) — their slots
+    /// stay `None` and the caller degrades dispatch around them via
+    /// [`degrade_topk`]. Zero on every healthy path.
     fn pin_layer(&self, layer: usize, needed: &[usize],
-                 pins: &mut Vec<Option<Arc<Expert>>>);
+                 pins: &mut Vec<Option<Arc<Expert>>>) -> usize;
 
-    /// Release the pins taken by the matching `pin_layer`.
+    /// Release the pins taken by the matching `pin_layer` (safe to
+    /// pass the full `needed` set even when some experts never pinned:
+    /// the cache tolerates unpinning absent slots).
     fn unpin_layer(&self, layer: usize, needed: &[usize]);
 
     /// Report the routed expert set of `layer` (drives the
     /// co-activation predictor and its prefetch loads).
     fn note_routing(&self, layer: usize, selected: &[usize]);
+
+    /// A dispatch ran without one or more routed experts (degraded
+    /// mode). Default no-op; the cached resolver counts it.
+    fn note_degraded(&self) {}
 
     /// Total expert storage bytes behind this resolver (None when the
     /// experts are resident and countable from the layers).
@@ -91,7 +124,9 @@ impl ExpertResolver for Resident {
     }
 
     fn pin_layer(&self, _layer: usize, _needed: &[usize],
-                 _pins: &mut Vec<Option<Arc<Expert>>>) {}
+                 _pins: &mut Vec<Option<Arc<Expert>>>) -> usize {
+        0
+    }
 
     fn unpin_layer(&self, _layer: usize, _needed: &[usize]) {}
 
@@ -126,12 +161,17 @@ impl ExpertResolver for CachedResolver {
     }
 
     fn pin_layer(&self, layer: usize, needed: &[usize],
-                 pins: &mut Vec<Option<Arc<Expert>>>) {
+                 pins: &mut Vec<Option<Arc<Expert>>>) -> usize {
         pins.clear();
         pins.resize(self.n_experts, None);
+        let mut unavailable = 0usize;
         for &e in needed {
-            pins[e] = Some(self.cache.get_pinned(layer, e));
+            match self.cache.try_get_pinned(layer, e) {
+                Ok(x) => pins[e] = Some(x),
+                Err(_) => unavailable += 1,
+            }
         }
+        unavailable
     }
 
     fn unpin_layer(&self, layer: usize, needed: &[usize]) {
@@ -142,6 +182,10 @@ impl ExpertResolver for CachedResolver {
 
     fn note_routing(&self, layer: usize, selected: &[usize]) {
         self.prefetcher.note_routing(layer, selected);
+    }
+
+    fn note_degraded(&self) {
+        Metrics::inc(&self.metrics.degraded_dispatches, 1);
     }
 
     fn expert_bytes(&self) -> Option<usize> {
@@ -164,12 +208,22 @@ impl ExpertResolver for CachedResolver {
 /// (`model.resolver.metrics()`), which `McEngine`/`Server` adopt.
 pub fn load_cached(path: &Path, budget_bytes: usize,
                    mode: PrefetchMode) -> Result<MoeModel> {
+    load_cached_with_policy(path, budget_bytes, mode,
+                            FetchPolicy::default())
+}
+
+/// [`load_cached`] with an explicit retry / quarantine discipline
+/// (the chaos bench and fault tests tighten it to force quarantines).
+pub fn load_cached_with_policy(path: &Path, budget_bytes: usize,
+                               mode: PrefetchMode,
+                               policy: FetchPolicy) -> Result<MoeModel> {
     let metrics = Arc::new(Metrics::new());
     let (mut model, store) = ExpertStore::open(path)?;
     let store = Arc::new(store);
     let cfg = store.config().clone();
     let cache = Arc::new(ExpertCache::new(store.clone(), budget_bytes,
                                           metrics.clone()));
+    cache.set_fetch_policy(policy);
     let prefetcher = Prefetcher::new(cache.clone(), cfg.n_layers,
                                      cfg.n_experts, store.priors(), mode);
     model.resolver = Arc::new(CachedResolver {
@@ -196,6 +250,34 @@ pub fn unique_experts(topk: &[Vec<(usize, f32)>], out: &mut Vec<usize>) {
     out.dedup();
 }
 
+/// Degraded dispatch (DESIGN.md §7): drop routed selections whose
+/// expert has no pinned slot and renormalize each token's surviving
+/// weights — exactly the paper's Eq.-6 online-pruning arithmetic, with
+/// "unavailable" standing in for "pruned". A token that loses every
+/// expert keeps an empty selection: its FFN contribution is zero and
+/// the residual stream carries it (ODP's drop-all case). Returns the
+/// number of selections dropped; callers report a degraded dispatch
+/// via [`ExpertResolver::note_degraded`] when it is non-zero.
+pub fn degrade_topk(topk: &mut [Vec<(usize, f32)>],
+                    pins: &[Option<Arc<Expert>>]) -> usize {
+    let mut dropped = 0usize;
+    for sel in topk.iter_mut() {
+        let before = sel.len();
+        sel.retain(|&(e, _)| pins.get(e).is_some_and(|p| p.is_some()));
+        if sel.len() == before {
+            continue;
+        }
+        dropped += before - sel.len();
+        let sum: f32 = sel.iter().map(|&(_, w)| w).sum();
+        if sum > 0.0 {
+            for s in sel.iter_mut() {
+                s.1 /= sum;
+            }
+        }
+    }
+    dropped
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -213,6 +295,36 @@ mod tests {
         let mut out = vec![9, 9, 9];
         unique_experts(&topk, &mut out);
         assert_eq!(out, vec![0, 1, 3]);
+    }
+
+    #[test]
+    fn degrade_topk_renormalizes_survivors() {
+        // experts 0 and 2 pinned, 1 and 3 unavailable
+        let dummy = || {
+            Some(Arc::new(crate::moe::model::Expert {
+                w1: crate::quant::QTensor::F32(
+                    crate::tensor::Mat::zeros(1, 1)),
+                w3: crate::quant::QTensor::F32(
+                    crate::tensor::Mat::zeros(1, 1)),
+                w2: crate::quant::QTensor::F32(
+                    crate::tensor::Mat::zeros(1, 1)),
+            }))
+        };
+        let pins = vec![dummy(), None, dummy(), None];
+        let mut topk = vec![
+            vec![(0usize, 0.6f32), (1, 0.4)], // loses 1, renormalizes
+            vec![(0, 0.5), (2, 0.5)],         // untouched
+            vec![(1, 0.7), (3, 0.3)],         // loses everything
+        ];
+        let dropped = degrade_topk(&mut topk, &pins);
+        assert_eq!(dropped, 3);
+        assert_eq!(topk[0].len(), 1);
+        assert_eq!(topk[0][0].0, 0);
+        assert!((topk[0][0].1 - 1.0).abs() < 1e-6, "renormalized to 1");
+        assert_eq!(topk[1], vec![(0, 0.5), (2, 0.5)], "healthy untouched");
+        assert!(topk[2].is_empty(), "drop-all leaves residual-only token");
+        // a second pass over the degraded set is a no-op
+        assert_eq!(degrade_topk(&mut topk, &pins), 0);
     }
 
     #[test]

@@ -19,6 +19,8 @@ use crate::config::ModelConfig;
 use crate::moe::model::{Expert, MoeModel};
 use crate::moe::qz;
 use crate::pmq::significance::Significance;
+use crate::util::crc32::crc32;
+use crate::util::faults::{self, Site};
 use crate::util::json::{arr, num, obj, Json};
 
 /// Calibration-time significance factors shipped in the v2 header:
@@ -131,6 +133,9 @@ struct Segment {
     /// absolute payload offset of the expert's byte range
     off: usize,
     len: usize,
+    /// crc32 of the segment bytes; `None` for directories written
+    /// before checksums existed (re-saving the file backfills them)
+    crc: Option<u32>,
 }
 
 #[derive(Debug)]
@@ -203,6 +208,10 @@ impl ExpertStore {
                 let seg = Segment {
                     off: seg.get("off")?.as_usize()?,
                     len: seg.get("len")?.as_usize()?,
+                    crc: match seg.opt("crc") {
+                        Some(c) => Some(c.as_usize()? as u32),
+                        None => None,
+                    },
                 };
                 let meta = |w: &str| -> Result<Json> {
                     Ok(tensors
@@ -259,8 +268,32 @@ impl ExpertStore {
 
     /// Read + decode one expert: a single seek + `read_exact` of its
     /// segment, then in-place tensor decode. Never touches the rest of
-    /// the file.
+    /// the file. The segment's crc32 is re-verified on every read, so
+    /// disk corruption surfaces as a typed `Err` here instead of a
+    /// garbage expert downstream.
     pub fn fetch(&self, layer: usize, expert: usize) -> Result<Expert> {
+        self.fetch_at(layer, expert, Site::Demand)
+    }
+
+    /// Prefetch-path fetch: identical I/O, but draws injected faults
+    /// from the prefetch site so a chaos plan perturbs speculative and
+    /// demand traffic independently.
+    pub(crate) fn fetch_speculative(&self, layer: usize,
+                                    expert: usize) -> Result<Expert> {
+        self.fetch_at(layer, expert, Site::Prefetch)
+    }
+
+    fn fetch_at(&self, layer: usize, expert: usize,
+                site: Site) -> Result<Expert> {
+        let fault = faults::plan();
+        if let Some(fp) = &fault {
+            if let Some(d) = fp.delay(site) {
+                std::thread::sleep(d);
+            }
+            if fp.io_error(site) {
+                bail!("injected I/O error (layer {layer}, expert {expert})");
+            }
+        }
         let meta = &self.metas[layer][expert];
         let mut buf = vec![0u8; meta.seg.len];
         {
@@ -269,6 +302,18 @@ impl ExpertStore {
             f.read_exact(&mut buf).with_context(|| {
                 format!("reading expert segment (layer {layer}, expert {expert})")
             })?;
+        }
+        if let Some(fp) = &fault {
+            if !buf.is_empty() && fp.corrupt(site) {
+                buf[meta.seg.len / 2] ^= 0x01; // caught by the crc below
+            }
+        }
+        if let Some(want) = meta.seg.crc {
+            let got = crc32(&buf);
+            if got != want {
+                bail!("expert segment checksum mismatch (layer {layer}, \
+                       expert {expert}): crc32 {got:#010x} != {want:#010x}");
+            }
         }
         let r = qz::Reader { payload: &buf, base: meta.seg.off };
         Ok(Expert {
@@ -334,6 +379,56 @@ mod tests {
         let path = tmp("store_v1");
         qz::save_v1(&path, &m).unwrap();
         assert!(ExpertStore::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn open_rejects_malformed_containers() {
+        let path = tmp("store_malformed");
+        // bad magic
+        std::fs::write(&path, b"NOPE00000000").unwrap();
+        assert!(ExpertStore::open(&path).is_err());
+        // truncated fixed prelude
+        std::fs::write(&path, b"MCQZ").unwrap();
+        assert!(ExpertStore::open(&path).is_err());
+        // header length pointing past EOF
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(qz::MAGIC);
+        bytes.extend_from_slice(&qz::VERSION.to_le_bytes());
+        bytes.extend_from_slice(&(1u32 << 20).to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(ExpertStore::open(&path).is_err());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn fetch_detects_corrupt_segment_and_truncation() {
+        let m = quantized_model();
+        let path = tmp("store_corrupt");
+        qz::save(&path, &m).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        let (_, header, payload_off) = qz::parse_container(&clean).unwrap();
+        let seg0 = &header.get("expert_dir").unwrap().as_arr().unwrap()[0]
+            .as_arr().unwrap()[0];
+        let off = payload_off + seg0.get("off").unwrap().as_usize().unwrap();
+        let len = seg0.get("len").unwrap().as_usize().unwrap();
+
+        // flipped bit inside expert (0, 0): only that fetch fails, and
+        // it fails with a typed checksum error, not a panic
+        let mut corrupt = clean.clone();
+        corrupt[off + len / 3] ^= 0x40;
+        std::fs::write(&path, &corrupt).unwrap();
+        let (_, store) = ExpertStore::open(&path).unwrap();
+        let err = store.fetch(0, 0).expect_err("corrupt segment");
+        assert!(format!("{err:#}").contains("checksum mismatch"),
+                "{err:#}");
+        assert!(store.fetch(0, 1).is_ok(), "sibling experts unaffected");
+
+        // truncated expert region: open still succeeds (header + head
+        // are intact), the fetch of the missing segment is an Err
+        std::fs::write(&path, &clean[..off + len / 2]).unwrap();
+        let (_, store) = ExpertStore::open(&path).unwrap();
+        assert!(store.fetch(0, 0).is_err(), "truncated segment");
         std::fs::remove_file(&path).ok();
     }
 

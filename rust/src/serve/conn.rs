@@ -33,26 +33,26 @@ use super::Shared;
 /// the granularity of client-disconnect detection between tokens.
 const STREAM_POLL: Duration = Duration::from_millis(2);
 
-pub(crate) fn handle(mut stream: TcpStream, shared: &Shared) {
+pub(crate) fn handle(stream: &mut TcpStream, shared: &Shared) {
     let _ = stream.set_read_timeout(Some(shared.cfg.read_timeout));
     let _ = stream.set_write_timeout(Some(shared.cfg.read_timeout));
     let _ = stream.set_nodelay(true);
 
-    let req = match read_request(&mut stream, shared.cfg.max_head_bytes,
+    let req = match read_request(stream, shared.cfg.max_head_bytes,
                                  shared.cfg.max_body_bytes) {
         Ok(req) => req,
         Err(err) => {
             Metrics::inc(&shared.metrics.http_bad_requests, 1);
             if let Some((status, reason)) = err.status() {
                 let _ = write_response(
-                    &mut stream, status, reason, "application/json", &[],
+                    stream, status, reason, "application/json", &[],
                     error_body(&err.message()).as_bytes());
-                lingering_close(&stream);
+                lingering_close(stream);
             }
             return;
         }
     };
-    route(&mut stream, &req, shared);
+    route(stream, &req, shared);
 }
 
 /// Lingering close for error replies sent before the request was
@@ -109,6 +109,14 @@ fn route(stream: &mut TcpStream, req: &Request, shared: &Shared) {
 }
 
 fn generate(stream: &mut TcpStream, req: &Request, shared: &Shared) {
+    // chaos hook: an injected panic lands here, before any bytes of
+    // the response are written, so the recovery path in `worker_loop`
+    // can still send the client a clean 500 (never a mid-stream cut)
+    if let Some(fp) = crate::util::faults::plan() {
+        if fp.panic_now(crate::util::faults::Site::Conn) {
+            panic!("injected fault: connection worker panic");
+        }
+    }
     if shared.lifecycle.draining() {
         let _ = write_response(
             stream, 503, "Service Unavailable", "application/json",
@@ -116,7 +124,7 @@ fn generate(stream: &mut TcpStream, req: &Request, shared: &Shared) {
             error_body("draining: not accepting new requests").as_bytes());
         return;
     }
-    let (gen_req, want_stream) = match parse_generate(&req.body) {
+    let (mut gen_req, want_stream) = match parse_generate(&req.body) {
         Ok(parsed) => parsed,
         Err(msg) => {
             Metrics::inc(&shared.metrics.http_bad_requests, 1);
@@ -126,6 +134,12 @@ fn generate(stream: &mut TcpStream, req: &Request, shared: &Shared) {
             return;
         }
     };
+
+    // requests without their own timeout_ms inherit the server's
+    // default deadline (None = unlimited, the historical behavior)
+    if gen_req.deadline.is_none() {
+        gen_req.deadline = shared.cfg.default_timeout;
+    }
 
     let tenant = req.header("x-tenant").unwrap_or("default");
     let permit = match shared.admission.try_admit(tenant, gen_req.priority) {
@@ -154,9 +168,20 @@ fn generate(stream: &mut TcpStream, req: &Request, shared: &Shared) {
         stream_sse(stream, handle, shared);
     } else {
         // non-streaming: drain to the terminal event, reply once. The
-        // engine bounds every request (max_new_tokens / KV), so this
-        // always terminates.
+        // engine bounds every request (max_new_tokens / KV / deadline),
+        // so this always terminates.
         match handle.wait() {
+            Some(done)
+                if done.finish
+                    == crate::coordinator::request::FinishReason
+                        ::DeadlineExceeded =>
+            {
+                // the completion body (with partial tokens) still
+                // ships, under a status the client can branch on
+                let _ = write_response(
+                    stream, 504, "Gateway Timeout", "application/json",
+                    &[], completion_body(&done).as_bytes());
+            }
             Some(done) => {
                 let _ = write_response(stream, 200, "OK", "application/json",
                                        &[], completion_body(&done).as_bytes());
@@ -213,8 +238,17 @@ fn stream_sse(stream: &mut TcpStream, mut handle: RequestHandle,
                 }
             }
             Some(StreamEvent::Done(done)) => {
-                let _ = write_sse_event(stream, "done",
-                                        &completion_body(&done));
+                use crate::coordinator::request::FinishReason;
+                if done.finish == FinishReason::DeadlineExceeded {
+                    // deadline blown mid-stream: terminal `error`
+                    // event (clients treat it as a failed stream,
+                    // with the partial completion attached)
+                    let _ = write_sse_event(
+                        stream, "error", &completion_body(&done));
+                } else {
+                    let _ = write_sse_event(stream, "done",
+                                            &completion_body(&done));
+                }
                 return;
             }
             Some(StreamEvent::Cancelled { id }) => {

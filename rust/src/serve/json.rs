@@ -11,7 +11,8 @@
 //!   "temperature": 0.8, "top_k": 40, "top_p": 0.95, "seed": 7,
 //!   "stop": "eos" | "max_len" | [17, 9],
 //!   "priority": "high" | "normal" | "low",
-//!   "stream": true
+//!   "stream": true,
+//!   "timeout_ms": 5000
 //! }
 //! ```
 //!
@@ -128,12 +129,25 @@ pub fn parse_generate(body: &[u8]) -> Result<(GenerateRequest, bool), String> {
             .map_err(|_| "\"stream\" must be a boolean".to_string())?,
     };
 
+    // wall-clock budget; requests without one fall back to the
+    // server's configured default deadline (conn::generate)
+    let deadline = match json.opt("timeout_ms") {
+        None => None,
+        Some(v) => {
+            let ms = v.as_usize().map_err(|_| {
+                "\"timeout_ms\" must be a non-negative integer".to_string()
+            })?;
+            Some(std::time::Duration::from_millis(ms as u64))
+        }
+    };
+
     let req = GenerateRequest {
         prompt,
         max_new_tokens,
         sampling: SamplingParams { temperature, top_k, top_p, seed },
         stop,
         priority,
+        deadline,
     };
     Ok((req, stream))
 }
@@ -155,6 +169,7 @@ fn finish_fields(f: &FinishReason) -> (&'static str, Option<u32>) {
         FinishReason::MaxTokens => ("max_tokens", None),
         FinishReason::Cancelled => ("cancelled", None),
         FinishReason::Rejected => ("rejected", None),
+        FinishReason::DeadlineExceeded => ("deadline_exceeded", None),
     }
 }
 
@@ -225,6 +240,19 @@ mod tests {
             parse_generate(br#"{"prompt":[1],"top_k":5}"#).unwrap();
         assert_eq!(req.sampling.temperature, 1.0);
         assert_eq!(req.sampling.top_k, 5);
+    }
+
+    #[test]
+    fn timeout_ms_becomes_deadline() {
+        let (req, _) = parse_generate(br#"{"prompt":[1]}"#).unwrap();
+        assert_eq!(req.deadline, None);
+        let (req, _) =
+            parse_generate(br#"{"prompt":[1],"timeout_ms":250}"#).unwrap();
+        assert_eq!(req.deadline,
+                   Some(std::time::Duration::from_millis(250)));
+        assert!(parse_generate(br#"{"prompt":[1],"timeout_ms":-5}"#)
+            .unwrap_err()
+            .contains("timeout_ms"));
     }
 
     #[test]

@@ -63,6 +63,9 @@ pub struct ServeConfig {
     pub read_timeout: Duration,
     /// how long `shutdown` waits for in-flight streams to finish
     pub drain_timeout: Duration,
+    /// deadline applied to generate requests that don't carry a
+    /// `timeout_ms` of their own (None = unlimited)
+    pub default_timeout: Option<Duration>,
 }
 
 impl Default for ServeConfig {
@@ -78,6 +81,7 @@ impl Default for ServeConfig {
             max_body_bytes: 1 << 20,
             read_timeout: Duration::from_secs(10),
             drain_timeout: Duration::from_secs(30),
+            default_timeout: None,
         }
     }
 }
@@ -239,11 +243,27 @@ impl HttpServer {
 fn worker_loop(rx: Arc<Mutex<Receiver<TcpStream>>>, shared: Arc<Shared>) {
     loop {
         // hold the lock only for the recv, not while handling
-        let stream = match rx.lock().unwrap().recv() {
+        let mut stream = match rx.lock().unwrap().recv() {
             Ok(s) => s,
             Err(_) => return, // intake closed: shutdown
         };
-        conn::handle(stream, &shared);
+        // panic isolation: a poisoned request must not take the worker
+        // (and its pool slot) down with it. Admission permits and
+        // stream guards release during unwind, so accounting holds;
+        // the client gets a 500 instead of a wedged socket.
+        let outcome = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| {
+                conn::handle(&mut stream, &shared)
+            }),
+        );
+        if outcome.is_err() {
+            Metrics::inc(&shared.metrics.panics_recovered, 1);
+            let _ = http::write_response(
+                &mut stream, 500, "Internal Server Error",
+                "application/json", &[],
+                json::error_body("internal error (request aborted)")
+                    .as_bytes());
+        }
         let active = shared
             .metrics
             .http_conns_active

@@ -1,0 +1,67 @@
+//! CRC-32 (IEEE 802.3, reflected polynomial 0xEDB88320), table-driven
+//! and dependency-free. Used as the per-expert segment checksum in the
+//! `.mcqz` v2 expert directory: `ExpertStore::fetch` re-hashes every
+//! segment it reads from disk so a short read or flipped bit surfaces
+//! as a typed error instead of a garbage expert.
+//!
+//! One 256-entry table, built once behind a `OnceLock`; throughput is
+//! a non-issue next to the disk read it guards.
+
+use std::sync::OnceLock;
+
+const POLY: u32 = 0xEDB8_8320;
+
+fn table() -> &'static [u32; 256] {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { (c >> 1) ^ POLY } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    })
+}
+
+/// CRC-32 of `bytes` (init 0xFFFF_FFFF, final xor 0xFFFF_FFFF — the
+/// common zlib/PNG convention).
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let t = table();
+    let mut c = !0u32;
+    for &b in bytes {
+        c = t[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // canonical check value for the IEEE polynomial
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"a"), 0xE8B7_BE43);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"),
+                   0x414F_A339);
+    }
+
+    #[test]
+    fn detects_single_bit_flips() {
+        let base: Vec<u8> = (0..=255u8).cycle().take(4096).collect();
+        let want = crc32(&base);
+        for pos in [0usize, 1, 63, 64, 2048, 4095] {
+            for bit in 0..8 {
+                let mut corrupt = base.clone();
+                corrupt[pos] ^= 1 << bit;
+                assert_ne!(crc32(&corrupt), want,
+                           "flip at byte {pos} bit {bit} undetected");
+            }
+        }
+    }
+}

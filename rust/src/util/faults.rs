@@ -1,0 +1,293 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] is parsed from the `MC_FAULTS` environment variable
+//! (or installed programmatically by tests and the chaos-soak bench)
+//! and consulted at a small set of named injection sites:
+//!
+//!   * `Site::Demand`   — demand-path `ExpertStore` fetches
+//!   * `Site::Prefetch` — speculative prefetch fetches
+//!   * `Site::Conn`     — HTTP connection workers
+//!
+//! Spec grammar (comma-separated, all fields optional):
+//!
+//! ```text
+//! MC_FAULTS="io_err=0.05,corrupt=0.02,delay_ms=50@0.1,panic=0.01,\
+//!            prefetch_drop=0.1,seed=42"
+//! ```
+//!
+//! `io_err` fails a demand fetch before the read, `corrupt` flips one
+//! byte of the segment after the read (caught by the crc32 check),
+//! `delay_ms=N@P` sleeps N ms with probability P, `panic` poisons a
+//! connection worker, `prefetch_drop` makes the prefetcher skip a
+//! speculative load. Every decision is a pure function of
+//! `(seed, site, n-th draw at that site)` via a splitmix64 finalizer,
+//! so a plan replays the same fault sequence per site regardless of
+//! wall clock. When `MC_FAULTS` is unset the fast path is one relaxed
+//! atomic load — no locks, no allocation.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex, Once};
+use std::time::Duration;
+
+use anyhow::{bail, Result};
+
+/// Injection sites. Each site draws from its own deterministic
+/// sub-sequence so (for example) prefetch traffic cannot perturb the
+/// fault pattern seen by demand fetches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Site {
+    /// Demand-path expert fetch (`ExpertCache` miss).
+    Demand = 0,
+    /// Speculative prefetch fetch.
+    Prefetch = 1,
+    /// HTTP connection worker handling a request.
+    Conn = 2,
+}
+
+const N_SITES: usize = 3;
+
+/// A seeded, deterministic fault schedule.
+#[derive(Debug)]
+pub struct FaultPlan {
+    /// P(demand fetch fails with an injected I/O error).
+    pub io_err: f64,
+    /// P(one byte of a fetched segment is flipped post-read).
+    pub corrupt: f64,
+    /// Injected fetch latency and its probability (`delay_ms=N@P`).
+    pub delay: Duration,
+    pub delay_p: f64,
+    /// P(a connection worker panics at the top of a request).
+    pub panic_p: f64,
+    /// P(the prefetcher silently skips a speculative load).
+    pub prefetch_drop: f64,
+    /// Seed for the per-site decision sequences.
+    pub seed: u64,
+    draws: [AtomicU64; N_SITES],
+}
+
+impl Default for FaultPlan {
+    fn default() -> Self {
+        FaultPlan {
+            io_err: 0.0,
+            corrupt: 0.0,
+            delay: Duration::ZERO,
+            delay_p: 0.0,
+            panic_p: 0.0,
+            prefetch_drop: 0.0,
+            seed: 0x6D63_6661_756C_7473, // "mcfaults"
+            draws: Default::default(),
+        }
+    }
+}
+
+fn mix(mut z: u64) -> u64 {
+    // splitmix64 finalizer
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl FaultPlan {
+    /// Parse the `MC_FAULTS` grammar. Probabilities must lie in
+    /// `[0, 1]`; unknown keys are an error so typos fail loudly.
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut plan = FaultPlan::default();
+        for field in spec.split(',') {
+            let field = field.trim();
+            if field.is_empty() {
+                continue;
+            }
+            let (key, val) = field
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!(
+                    "fault field {field:?} is not key=value"))?;
+            let prob = |v: &str| -> Result<f64> {
+                let p: f64 = v.parse().map_err(|_| anyhow::anyhow!(
+                    "fault {key}: {v:?} is not a number"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    bail!("fault {key}: probability {p} outside [0, 1]");
+                }
+                Ok(p)
+            };
+            match key {
+                "io_err" => plan.io_err = prob(val)?,
+                "corrupt" => plan.corrupt = prob(val)?,
+                "panic" => plan.panic_p = prob(val)?,
+                "prefetch_drop" => plan.prefetch_drop = prob(val)?,
+                "seed" => {
+                    plan.seed = val.parse().map_err(|_| anyhow::anyhow!(
+                        "fault seed: {val:?} is not a u64"))?;
+                }
+                "delay_ms" => {
+                    let (ms, p) = match val.split_once('@') {
+                        Some((ms, p)) => (ms, prob(p)?),
+                        None => (val, 1.0),
+                    };
+                    let ms: u64 = ms.parse().map_err(|_| anyhow::anyhow!(
+                        "fault delay_ms: {ms:?} is not a u64"))?;
+                    plan.delay = Duration::from_millis(ms);
+                    plan.delay_p = p;
+                }
+                other => bail!("unknown fault key {other:?} \
+                                (io_err, corrupt, delay_ms, panic, \
+                                 prefetch_drop, seed)"),
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Next uniform draw in `[0, 1)` for `site`. Deterministic in the
+    /// per-site draw index.
+    fn roll(&self, site: Site) -> f64 {
+        let n = self.draws[site as usize].fetch_add(1, Relaxed);
+        let h = mix(mix(self.seed ^ ((site as u64) << 56)) ^ n);
+        (h >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    pub fn io_error(&self, site: Site) -> bool {
+        self.io_err > 0.0 && self.roll(site) < self.io_err
+    }
+
+    pub fn corrupt(&self, site: Site) -> bool {
+        self.corrupt > 0.0 && self.roll(site) < self.corrupt
+    }
+
+    pub fn panic_now(&self, site: Site) -> bool {
+        self.panic_p > 0.0 && self.roll(site) < self.panic_p
+    }
+
+    pub fn drop_prefetch(&self) -> bool {
+        self.prefetch_drop > 0.0
+            && self.roll(Site::Prefetch) < self.prefetch_drop
+    }
+
+    /// Injected latency for this draw, if the delay fault fires.
+    pub fn delay(&self, site: Site) -> Option<Duration> {
+        if self.delay_p > 0.0 && !self.delay.is_zero()
+            && self.roll(site) < self.delay_p
+        {
+            Some(self.delay)
+        } else {
+            None
+        }
+    }
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static PLAN: Mutex<Option<Arc<FaultPlan>>> = Mutex::new(None);
+static ENV_INIT: Once = Once::new();
+
+/// The active fault plan, if any. First call reads `MC_FAULTS`; a
+/// malformed spec is reported once and ignored (serving with no
+/// faults beats refusing to start over a chaos knob).
+pub fn plan() -> Option<Arc<FaultPlan>> {
+    ENV_INIT.call_once(|| {
+        let Ok(spec) = std::env::var("MC_FAULTS") else { return };
+        if spec.trim().is_empty() {
+            return;
+        }
+        match FaultPlan::parse(&spec) {
+            Ok(p) => {
+                *PLAN.lock().unwrap() = Some(Arc::new(p));
+                ENABLED.store(true, Relaxed);
+            }
+            Err(e) => eprintln!("MC_FAULTS ignored: {e}"),
+        }
+    });
+    if !ENABLED.load(Relaxed) {
+        return None;
+    }
+    PLAN.lock().unwrap().clone()
+}
+
+/// Install (or clear, with `None`) the active plan, overriding
+/// `MC_FAULTS`. Used by tests and the chaos-soak bench.
+pub fn install(p: Option<FaultPlan>) {
+    ENV_INIT.call_once(|| {}); // consume env init so it cannot override
+    let mut guard = PLAN.lock().unwrap();
+    ENABLED.store(p.is_some(), Relaxed);
+    *guard = p.map(Arc::new);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_full_spec() {
+        let p = FaultPlan::parse(
+            "io_err=0.05,corrupt=0.02,delay_ms=50@0.1,panic=0.01,\
+             prefetch_drop=0.2,seed=42").unwrap();
+        assert_eq!(p.io_err, 0.05);
+        assert_eq!(p.corrupt, 0.02);
+        assert_eq!(p.delay, Duration::from_millis(50));
+        assert_eq!(p.delay_p, 0.1);
+        assert_eq!(p.panic_p, 0.01);
+        assert_eq!(p.prefetch_drop, 0.2);
+        assert_eq!(p.seed, 42);
+        // bare delay_ms means always-on
+        let q = FaultPlan::parse("delay_ms=5").unwrap();
+        assert_eq!((q.delay, q.delay_p), (Duration::from_millis(5), 1.0));
+    }
+
+    #[test]
+    fn rejects_bad_specs() {
+        assert!(FaultPlan::parse("io_err=1.5").is_err());
+        assert!(FaultPlan::parse("io_err").is_err());
+        assert!(FaultPlan::parse("warp_core_breach=0.1").is_err());
+        assert!(FaultPlan::parse("delay_ms=xx@0.5").is_err());
+        assert!(FaultPlan::parse("seed=-3").is_err());
+    }
+
+    #[test]
+    fn draws_are_deterministic_and_per_site() {
+        let mk = || FaultPlan::parse("io_err=0.5,seed=7").unwrap();
+        let (a, b) = (mk(), mk());
+        let seq_a: Vec<bool> =
+            (0..64).map(|_| a.io_error(Site::Demand)).collect();
+        let seq_b: Vec<bool> =
+            (0..64).map(|_| b.io_error(Site::Demand)).collect();
+        assert_eq!(seq_a, seq_b, "same seed, same site, same sequence");
+        // a different site draws a different sequence from the same seed
+        let c = mk();
+        let seq_c: Vec<bool> =
+            (0..64).map(|_| c.io_error(Site::Prefetch)).collect();
+        assert_ne!(seq_a, seq_c, "sites draw independent sequences");
+    }
+
+    #[test]
+    fn empirical_rate_tracks_probability() {
+        let p = FaultPlan::parse("io_err=0.25,seed=1234").unwrap();
+        let n = 20_000;
+        let hits = (0..n).filter(|_| p.io_error(Site::Demand)).count();
+        let rate = hits as f64 / n as f64;
+        assert!((rate - 0.25).abs() < 0.02, "rate {rate} far from 0.25");
+    }
+
+    #[test]
+    fn zero_probability_never_fires_and_never_draws() {
+        let p = FaultPlan::default();
+        for _ in 0..32 {
+            assert!(!p.io_error(Site::Demand));
+            assert!(!p.corrupt(Site::Demand));
+            assert!(!p.panic_now(Site::Conn));
+            assert!(!p.drop_prefetch());
+            assert!(p.delay(Site::Demand).is_none());
+        }
+        // zero-rate checks must not consume draws, so enabling a rate
+        // later replays from the start of the sequence
+        assert_eq!(p.draws[Site::Demand as usize].load(Relaxed), 0);
+    }
+
+    #[test]
+    fn install_overrides_and_clears() {
+        // an all-zero plan: exercises the toggle without perturbing any
+        // concurrently-running test that consults the global plan
+        install(Some(FaultPlan::default()));
+        let got = plan().expect("installed plan is visible");
+        assert_eq!(got.io_err, 0.0);
+        install(None);
+        assert!(plan().is_none(), "cleared plan stays cleared");
+    }
+}

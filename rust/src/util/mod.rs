@@ -7,6 +7,8 @@
 
 pub mod alloc;
 pub mod cli;
+pub mod crc32;
+pub mod faults;
 pub mod json;
 pub mod pool;
 pub mod rng;

@@ -1,0 +1,226 @@
+//! End-to-end fault-tolerance tests (DESIGN.md §7): injected faults
+//! against real servers, proving each rung of the degradation ladder
+//! — worker panics become 500s, total fetch failure degrades dispatch
+//! instead of crashing, quarantine expiry restores bit-exact output,
+//! and deadlines map to 504 / SSE `error` frames over the wire.
+//!
+//! Lives in its own integration crate (= its own process) because
+//! `faults::install` is process-global: installing a panic plan here
+//! cannot perturb the other suites. Tests that install a plan
+//! serialize on `FAULT_LOCK`.
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use mc_moe::config::ModelConfig;
+use mc_moe::coordinator::{
+    FinishReason, GenerateRequest, Server, StopCondition,
+};
+use mc_moe::moe::qz;
+use mc_moe::offload::{self, FetchPolicy, PrefetchMode};
+use mc_moe::serve::client::{self, GenerateReply};
+use mc_moe::serve::{HttpServer, ServeConfig};
+use mc_moe::util::faults::{self, FaultPlan};
+
+mod common;
+use common::random_model;
+
+/// Generous per-read bound: a wedged stream fails, never hangs.
+const T: Duration = Duration::from_secs(120);
+
+/// Serializes tests that install a process-global fault plan.
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+fn fault_guard() -> std::sync::MutexGuard<'static, ()> {
+    FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+fn serve(model: mc_moe::moe::model::MoeModel, scfg: ServeConfig)
+         -> HttpServer {
+    let engine = Server::spawn(Arc::new(model), None, scfg.max_batch);
+    HttpServer::bind(engine, scfg).expect("bind 127.0.0.1:0")
+}
+
+fn small_serve_cfg() -> ServeConfig {
+    ServeConfig {
+        port: 0,
+        max_conns: 4,
+        max_streams_per_tenant: 0,
+        shed_queue_depth: 0,
+        max_batch: 2,
+        ..ServeConfig::default()
+    }
+}
+
+fn gen_body(prompt: &[u32], max_new: usize, extra: &str) -> Vec<u8> {
+    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    format!(
+        "{{\"prompt\":[{}],\"max_new_tokens\":{max_new},\
+         \"stop\":\"max_len\"{extra}}}",
+        toks.join(",")
+    )
+    .into_bytes()
+}
+
+/// A slower model so deadline tests cannot outrace generation.
+fn slow_cfg() -> ModelConfig {
+    let mut cfg = ModelConfig::test_tiny();
+    cfg.d_model = 64;
+    cfg.n_heads = 4;
+    cfg.d_ff = 256;
+    cfg.n_layers = 4;
+    cfg.max_seq = 256;
+    cfg
+}
+
+#[test]
+fn injected_worker_panic_returns_500_then_recovers() {
+    let _g = fault_guard();
+    faults::install(Some(FaultPlan::parse("panic=1.0,seed=2").unwrap()));
+
+    let http = serve(random_model(&ModelConfig::test_tiny(), 21),
+                     small_serve_cfg());
+    let body = gen_body(&[1, 5, 80, 3], 4, ",\"stream\":false");
+
+    // the worker panics at the top of the request; the pool must give
+    // the client a clean 500 instead of a dead socket
+    let poisoned = client::request(http.addr(), "POST", "/v1/generate",
+                                   &[], &body, T)
+        .expect("panicking worker still answers");
+    assert_eq!(poisoned.status, 500, "{}", poisoned.body_str());
+    assert!(poisoned.body_str().contains("internal error"),
+            "{}", poisoned.body_str());
+
+    // faults off: the *same worker pool* serves the next request
+    faults::install(None);
+    let ok = client::request(http.addr(), "POST", "/v1/generate",
+                             &[], &body, T).unwrap();
+    assert_eq!(ok.status, 200, "{}", ok.body_str());
+    assert!(ok.body_str().contains("\"tokens\":["));
+
+    use std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(http.metrics().panics_recovered.load(Relaxed), 1);
+
+    let report = http.shutdown();
+    assert!(report.drained, "panic must not pin the drain");
+}
+
+#[test]
+fn total_fetch_failure_degrades_then_recovers_bit_exact() {
+    let _g = fault_guard();
+
+    let cfg = ModelConfig::test_tiny();
+    let prompt = vec![1u32, 5, 80, 3];
+    let request = || {
+        GenerateRequest::greedy(prompt.clone(), 8)
+            .with_stop(StopCondition::MaxLen)
+    };
+
+    // ground truth on the fully-resident twin
+    let m = random_model(&cfg, 33);
+    let path = std::env::temp_dir()
+        .join(format!("fault_degrade_{}.mcqz", std::process::id()));
+    qz::save(&path, &m).unwrap();
+    let expert_bytes: usize = m.layers.iter().flat_map(|l| &l.experts)
+        .map(|e| e.storage_bytes()).sum();
+    let reference = {
+        let engine = Server::spawn(Arc::new(m), None, 1);
+        let done = engine.submit(request()).wait().expect("reference run");
+        engine.shutdown();
+        done.tokens
+    };
+    assert_eq!(reference.len(), 8);
+
+    // every demand fetch fails: all routed experts quarantine and
+    // every dispatch degrades to the residual-only path — yet the
+    // request completes instead of crashing or wedging
+    faults::install(Some(FaultPlan::parse("io_err=1.0,seed=3").unwrap()));
+    let cached = offload::load_cached_with_policy(
+        &path, expert_bytes / 2, PrefetchMode::Off,
+        FetchPolicy {
+            max_retries: 0,
+            backoff: Duration::ZERO,
+            quarantine: Duration::from_millis(100),
+        })
+        .unwrap();
+    let engine = Server::spawn(Arc::new(cached), None, 1);
+    let metrics = engine.metrics.clone();
+    let done = engine.submit(request()).wait().expect("degraded run");
+    assert_eq!(done.finish, FinishReason::MaxTokens,
+               "degraded generation still runs to its token budget");
+    assert_eq!(done.tokens.len(), 8);
+
+    use std::sync::atomic::Ordering::Relaxed;
+    assert!(metrics.expert_load_failures.load(Relaxed) > 0);
+    assert!(metrics.experts_quarantined.load(Relaxed) > 0);
+    assert!(metrics.degraded_dispatches.load(Relaxed) > 0,
+            "dispatch must have degraded around quarantined experts");
+
+    // faults cleared + quarantine lapsed: the same server recovers to
+    // bit-exact agreement with the resident model, no restart
+    faults::install(None);
+    std::thread::sleep(Duration::from_millis(150));
+    let healed = engine.submit(request()).wait().expect("recovered run");
+    assert_eq!(healed.tokens, reference,
+               "post-quarantine output must be bit-exact");
+    engine.shutdown();
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn timeout_ms_maps_to_504_and_sse_error() {
+    // deadlines need no fault plan, but the guard still serializes us
+    // behind the tests that install one (a concurrent panic=1.0 plan
+    // would poison these requests), and the all-zero install shields
+    // the timing from any ambient MC_FAULTS delay spec
+    let _g = fault_guard();
+    faults::install(Some(FaultPlan::default()));
+    let http = serve(random_model(&slow_cfg(), 12), small_serve_cfg());
+    let prompt = [1u32, 5, 80, 3];
+
+    // non-streaming: a 1ms budget against a 240-token request can
+    // only end one way — 504, with the partial completion attached
+    let resp = match client::open_generate(
+        http.addr(),
+        &gen_body(&prompt, 240, ",\"timeout_ms\":1,\"stream\":false"),
+        &[], T)
+        .expect("request reached the server")
+    {
+        GenerateReply::Response(r) => r,
+        GenerateReply::Stream(_) => panic!("stream:false must not stream"),
+    };
+    assert_eq!(resp.status, 504, "{}", resp.body_str());
+    assert!(resp.body_str().contains("\"finish\":\"deadline_exceeded\""),
+            "{}", resp.body_str());
+    assert!(resp.body_str().contains("\"tokens\":["),
+            "504 still carries the partial completion");
+
+    // streaming: the deadline surfaces as a terminal SSE `error`
+    // frame, never a silently cut stream
+    let mut stream = match client::open_generate(
+        http.addr(), &gen_body(&prompt, 240, ",\"timeout_ms\":1"), &[], T)
+        .expect("request reached the server")
+    {
+        GenerateReply::Stream(s) => s,
+        GenerateReply::Response(r) => {
+            panic!("expected SSE, got {} {}", r.status, r.body_str())
+        }
+    };
+    let terminal = loop {
+        match stream.next_event().expect("sse read") {
+            Some(ev) if ev.name == "token" => continue,
+            Some(ev) => break ev,
+            None => panic!("stream closed without a terminal frame"),
+        }
+    };
+    assert_eq!(terminal.name, "error", "data: {}", terminal.data);
+    assert!(terminal.data.contains("\"finish\":\"deadline_exceeded\""),
+            "{}", terminal.data);
+
+    use std::sync::atomic::Ordering::Relaxed;
+    assert!(http.metrics().deadline_exceeded.load(Relaxed) >= 2);
+
+    let report = http.shutdown();
+    assert!(report.drained, "expired requests must not pin the drain");
+    faults::install(None);
+}
