@@ -1,7 +1,9 @@
 //! Quickstart: compress the trained MoE model with MC (PMQ + ODP),
 //! compare it against FP32 on the benchmark suite, reload it under an
-//! expert residency budget (DESIGN.md §5), then serve it over HTTP
-//! and stream a generation across a real socket (DESIGN.md §6).
+//! expert residency budget (DESIGN.md §5), serve it over HTTP and
+//! stream a generation across a real socket (DESIGN.md §6), then
+//! serve under a hard memory ceiling that refuses with `503` instead
+//! of OOM-ing (DESIGN.md §8).
 //!
 //!   make artifacts && cargo run --release --example quickstart
 
@@ -12,6 +14,7 @@ use anyhow::Result;
 use mc_moe::config::{artifacts_dir, ModelConfig};
 use mc_moe::coordinator::{
     memmodel, GenerateRequest, McEngine, SamplingParams, Server,
+    ServerConfig,
 };
 use mc_moe::eval::eval_suite;
 use mc_moe::moe::{qz, MoeModel, WeightFile};
@@ -31,11 +34,11 @@ fn main() -> Result<()> {
              memmodel::loading_bytes(&fp) as f64 / 1e6);
 
     // 1. build the PMQ workbench: one calibration pass + GPTQ zoo
-    println!("\n[1/6] calibrating + quantizing (GPTQ at 1/2/3 bits)...");
+    println!("\n[1/7] calibrating + quantizing (GPTQ at 1/2/3 bits)...");
     let wb = Workbench::build(fp, WorkbenchConfig::default())?;
 
     // 2. solve the Eq.-4 integer program at a 2.5-bit average budget
-    println!("[2/6] solving bit allocation (PMQ, avg 2.5 bits)...");
+    println!("[2/7] solving bit allocation (PMQ, avg 2.5 bits)...");
     let total = 5 * cfg.n_experts / 2;
     let (mc_model, alloc) = wb.compress(Allocator::Pmq, total, PmqHyper::default())?;
     println!("  allocation histogram 1/2/3-bit: {:?}", alloc.histogram());
@@ -53,7 +56,7 @@ fn main() -> Result<()> {
     let expert_bytes = mc_model.expert_storage_bytes();
 
     // 3. evaluate FP vs MC (+ODP) on the 8-task suite
-    println!("[3/6] evaluating...");
+    println!("[3/7] evaluating...");
     let odp_policy = odp::odp_default(&wb.cal);
     let fp_r = eval_suite(&wb.fp, 40, 0, 4242, None);
     let mc_r = eval_suite(&mc_model, 40, 0, 4242, None);
@@ -71,7 +74,7 @@ fn main() -> Result<()> {
 
     // 4. generate through the unified request API: one GenerateRequest
     // drives the compressed engine, streaming tokens as they decode
-    println!("\n[4/6] sampled generation on the MC model...");
+    println!("\n[4/7] sampled generation on the MC model...");
     let engine = McEngine::new(mc_model, Some(odp_policy), None);
     let req = GenerateRequest::greedy(vec![1, 5, 80, 3], 16)
         .with_sampling(SamplingParams::temperature(0.8, 4242));
@@ -84,7 +87,7 @@ fn main() -> Result<()> {
 
     // 5. reload under a 50% expert budget: the residency cache serves
     // misses from the segmented file, the predictor prefetches ahead
-    println!("\n[5/6] reloading under a 50% expert budget...");
+    println!("\n[5/7] reloading under a 50% expert budget...");
     let budget = expert_bytes / 2;
     let capped = offload::load_cached(&mcqz_path, budget, PrefetchMode::Async)?;
     let capped = McEngine::new(capped, None, None);
@@ -97,7 +100,7 @@ fn main() -> Result<()> {
 
     // 6. serve the compressed model over HTTP and stream a generation
     // across a real socket (SSE), then drain gracefully
-    println!("\n[6/6] serving over HTTP (SSE stream + graceful drain)...");
+    println!("\n[6/7] serving over HTTP (SSE stream + graceful drain)...");
     let served = Arc::new(qz::load(&mcqz_path)?);
     let scfg = ServeConfig { port: 0, max_batch: 2, ..ServeConfig::default() };
     let engine = Server::spawn(served, None, scfg.max_batch);
@@ -129,6 +132,53 @@ fn main() -> Result<()> {
     let report = http.serve_until_drained();
     println!("  drained in {:.1} ms (inflight at drain: {})",
              report.drain_ms, report.inflight_at_start);
+
+    // 7. memory-governed serving (DESIGN.md §8): every allocation is
+    // accounted against one byte ceiling (`--mem-budget-mb` on the
+    // CLI); admission reserves the session's worst-case KV footprint
+    // up front, so over budget means 503 + Retry-After, never an OOM
+    println!("\n[7/7] serving under a hard memory budget...");
+    let served = Arc::new(qz::load(&mcqz_path)?);
+    let scfg = ServeConfig { port: 0, max_batch: 2, ..ServeConfig::default() };
+    let engine = Server::spawn_cfg(
+        served, None,
+        ServerConfig {
+            max_batch: scfg.max_batch,
+            mem_budget: Some(32 << 20), // 32 MiB ceiling
+            ..ServerConfig::default()
+        });
+    let governor = engine.governor().clone();
+    let http = HttpServer::bind(engine, scfg)?;
+    let addr = http.addr();
+    let body = br#"{"prompt":[1,5,80,3],"max_new_tokens":12,"stop":"max_len","stream":false}"#;
+    let ok = serve_client::request(addr, "POST", "/v1/generate", &[],
+                                   body, Duration::from_secs(60))?;
+    println!("  within budget: status {} (worst-case session {:.1} KB \
+              reserved up front, released on retire)",
+             ok.status,
+             governor.worst_case_session_bytes(4, 12, 0) as f64 / 1e3);
+    println!("  ledger: {}/{} bytes reserved, pressure {:.0}%, rung {}",
+             governor.bytes_reserved(), governor.budget_bytes(),
+             100.0 * governor.pressure(), governor.rung());
+    http.shutdown();
+
+    // the same request against a 1-byte ceiling: refused at admission
+    let served = Arc::new(qz::load(&mcqz_path)?);
+    let scfg = ServeConfig { port: 0, max_batch: 2, ..ServeConfig::default() };
+    let engine = Server::spawn_cfg(
+        served, None,
+        ServerConfig {
+            max_batch: scfg.max_batch,
+            mem_budget: Some(1),
+            ..ServerConfig::default()
+        });
+    let http = HttpServer::bind(engine, scfg)?;
+    let refused = serve_client::request(http.addr(), "POST", "/v1/generate",
+                                        &[], body, Duration::from_secs(60))?;
+    println!("  over budget:   status {} Retry-After {} — shed, not killed",
+             refused.status, refused.header("retry-after").unwrap_or("?"));
+    http.shutdown();
+
     std::fs::remove_file(&mcqz_path).ok();
     Ok(())
 }

@@ -44,9 +44,12 @@ const CLIENT_TIMEOUT: Duration = Duration::from_secs(120);
 
 /// The plan installed when `MC_FAULTS` is unset: 8% fetch I/O errors,
 /// 4% corrupted segments, 2ms latency spikes on 5% of fetches, 4% of
-/// requests hit a worker panic, 10% of prefetches dropped.
+/// requests hit a worker panic, 10% of prefetches dropped, 5% of
+/// memory-governor reservations refused as if the budget were gone
+/// (surfacing as 503 + Retry-After, counted under `shed`).
 const DEFAULT_PLAN: &str = "io_err=0.08,corrupt=0.04,delay_ms=2@0.05,\
-                            panic=0.04,prefetch_drop=0.10,seed=4242";
+                            panic=0.04,prefetch_drop=0.10,oom=0.05,\
+                            seed=4242";
 
 /// One client's outcome under chaos.
 enum Outcome {
@@ -57,7 +60,7 @@ enum Outcome {
     ErrorEvent,
     /// complete HTTP 5xx status (panic → 500, deadline → 504)
     Http5xx(u16),
-    /// 429 with Retry-After
+    /// 429 (load shed) or 503 (memory refusal) with Retry-After
     Shed,
     /// io error, timeout, or a stream cut without a terminal frame —
     /// the one outcome the fault ladder must never produce
@@ -84,7 +87,9 @@ fn run_client(addr: std::net::SocketAddr, idx: usize, max_new: usize)
         GenerateReply::Response(r) => {
             return match r.status {
                 200 => Outcome::Completed(max_new),
-                429 => Outcome::Shed,
+                // 429 = load shed, 503 = memory-governor refusal; both
+                // carry Retry-After and both are clean backpressure
+                429 | 503 => Outcome::Shed,
                 500 | 504 => Outcome::Http5xx(r.status),
                 other => Outcome::Wedged(format!("status {other}")),
             };

@@ -1,0 +1,308 @@
+//! KV-pressure soak (EXPERIMENTS.md §KV pressure): a long-context
+//! client burst against a server whose memory budget is ~50% of the
+//! burst's worst-case KV footprint, proving the memory governor
+//! (DESIGN.md §8) degrades instead of OOM-ing:
+//!
+//!   * zero aborted clients: every over-budget refusal is a clean
+//!     503 + Retry-After, and retrying clients all finish
+//!   * the full degradation ladder is observed: prefetch pause,
+//!     expert-budget shrink, idle-prefix eviction, KV page
+//!     down-quantization, and admission refusals all count > 0
+//!   * clean recovery: once the storm passes, pressure returns to
+//!     rung 0 and a reference request reproduces its pre-storm
+//!     tokens bit-exactly
+//!
+//!   cargo bench --bench kv_pressure              # 24 clients
+//!   MC_BENCH_FAST=1 cargo bench --bench kv_pressure  # 12, CI smoke
+//!
+//! Emits `BENCH_kvpressure.json` (validated by CI bench-smoke).
+
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use mc_moe::config::ModelConfig;
+use mc_moe::coordinator::memgov::{
+    scratch_estimate_bytes, worst_case_kv_bytes,
+};
+use mc_moe::coordinator::{MemReservation, Server, ServerConfig};
+use mc_moe::moe::exec::DEFAULT_PAGE_ROWS;
+use mc_moe::moe::qz;
+use mc_moe::offload::{self, FetchPolicy, PrefetchMode};
+use mc_moe::serve::client;
+use mc_moe::serve::{HttpServer, ServeConfig};
+
+#[path = "../tests/common/mod.rs"]
+mod common;
+use common::random_model;
+
+fn fast() -> bool {
+    std::env::var("MC_BENCH_FAST").is_ok()
+}
+
+const CLIENT_TIMEOUT: Duration = Duration::from_secs(120);
+/// Refusal retries per client before the client counts as aborted —
+/// generous: aborting is exactly what the governor must prevent.
+const MAX_ATTEMPTS: usize = 400;
+
+/// Long-context config: four 64-row pages of KV per session.
+fn pressure_cfg() -> ModelConfig {
+    let mut cfg = ModelConfig::test_tiny();
+    cfg.max_seq = 256;
+    cfg
+}
+
+/// The deterministic part of a completion body (id / ttft_ms /
+/// total_ms legitimately vary per request).
+fn tokens_of(body: &str) -> String {
+    let start = body.find("\"tokens\":[").expect("tokens array");
+    let end = body[start..].find(']').expect("closing bracket") + start;
+    body[start..=end].to_string()
+}
+
+/// One non-streaming request, retrying on 429/503 backpressure until
+/// it completes. Returns (attempts_used, tokens_json) or an error
+/// string describing the abort.
+fn run_client(addr: std::net::SocketAddr, prompt: &[u32], max_new: usize)
+              -> Result<(usize, String), String> {
+    let toks: Vec<String> = prompt.iter().map(|t| t.to_string()).collect();
+    let body = format!(
+        "{{\"prompt\":[{}],\"max_new_tokens\":{max_new},\
+         \"stop\":\"max_len\",\"stream\":false}}",
+        toks.join(",")
+    );
+    for attempt in 1..=MAX_ATTEMPTS {
+        let reply = client::request(addr, "POST", "/v1/generate", &[],
+                                    body.as_bytes(), CLIENT_TIMEOUT)
+            .map_err(|e| format!("transport: {e}"))?;
+        match reply.status {
+            200 => return Ok((attempt, tokens_of(&reply.body_str()))),
+            429 | 503 => {
+                if reply.header("retry-after").is_none() {
+                    return Err(format!("{} without Retry-After",
+                                       reply.status));
+                }
+                // honor the backoff signal at bench (not wall-clock)
+                // scale so the soak finishes in seconds, not minutes
+                std::thread::sleep(Duration::from_millis(25));
+            }
+            other => {
+                return Err(format!("status {other}: {}",
+                                   reply.body_str()))
+            }
+        }
+    }
+    Err(format!("aborted after {MAX_ATTEMPTS} refusals"))
+}
+
+fn main() {
+    let (clients, max_new) = if fast() { (12usize, 24usize) } else { (24, 24) };
+    let cfg = pressure_cfg();
+
+    // offloaded substrate at half expert budget so the rung-1/2
+    // actions (prefetch pause, budget shrink) act on a real cache
+    let path = std::env::temp_dir()
+        .join(format!("kv_pressure_{}.mcqz", std::process::id()));
+    let seed_model = random_model(&cfg, 77);
+    qz::save(&path, &seed_model).expect("save pressure model");
+    let expert_bytes: usize = seed_model.layers.iter()
+        .flat_map(|l| &l.experts)
+        .map(|e| e.storage_bytes())
+        .sum();
+    drop(seed_model);
+    let expert_budget = expert_bytes / 2;
+    let model = offload::load_cached_with_policy(
+        &path, expert_budget, PrefetchMode::Async,
+        FetchPolicy {
+            max_retries: 2,
+            backoff: Duration::from_micros(200),
+            quarantine: Duration::from_millis(50),
+        })
+        .expect("open pressure model");
+
+    // budget: static baseline + HALF the burst's worst-case KV bill
+    let max_batch = 8usize;
+    let unique_len = 176usize; // 2 cold pages even with 16 rows protected
+    let shared_len = 160usize;
+    let worst_kv = worst_case_kv_bytes(unique_len + max_new, 0,
+                                       DEFAULT_PAGE_ROWS, cfg.n_layers,
+                                       cfg.d_model);
+    let static_bytes =
+        expert_budget as u64 + scratch_estimate_bytes(&cfg, max_batch);
+    let budget = static_bytes + clients as u64 * worst_kv / 2;
+
+    let engine = Server::spawn_cfg(
+        Arc::new(model), None,
+        ServerConfig {
+            max_batch,
+            mem_budget: Some(budget),
+            ..ServerConfig::default()
+        });
+    let gov = engine.governor().clone();
+    let http = HttpServer::bind(engine, ServeConfig {
+        port: 0,
+        max_conns: clients + 8,
+        max_streams_per_tenant: 0,
+        shed_queue_depth: 0,
+        max_batch,
+        ..ServeConfig::default()
+    }).expect("bind 127.0.0.1:0");
+    let addr = http.addr();
+    let metrics = http.metrics();
+    println!(
+        "kv pressure: {clients} clients x ~{unique_len}+{max_new} tokens, \
+         budget {:.2} MiB (~50% of worst case) on {addr}",
+        budget as f64 / (1 << 20) as f64
+    );
+
+    // -- pre-storm reference: the bit-exactness baseline -------------
+    let reference_prompt: Vec<u32> =
+        (0..40).map(|i| 3 + (i * 11 % 89) as u32).collect();
+    let (_, ref_before) = run_client(addr, &reference_prompt, 8)
+        .expect("pre-storm reference");
+
+    // -- the storm: half identical prompts (prefix-sharing path), ----
+    // -- half unique long prompts (down-quantization path) -----------
+    let barrier = Arc::new(Barrier::new(clients + 1));
+    let t_start = Instant::now();
+    let workers: Vec<_> = (0..clients)
+        .map(|i| {
+            let barrier = barrier.clone();
+            std::thread::spawn(move || {
+                let prompt: Vec<u32> = if i % 2 == 0 {
+                    // identical long prompt: sessions share its prefix
+                    (0..shared_len).map(|t| 1 + (t * 7 % 97) as u32).collect()
+                } else {
+                    // unique tail: a private long context per session
+                    (0..unique_len)
+                        .map(|t| 1 + ((t * 13 + i * 31) % 101) as u32)
+                        .collect()
+                };
+                barrier.wait();
+                run_client(addr, &prompt, max_new)
+            })
+        })
+        .collect();
+    barrier.wait();
+
+    // -- pressure probe: once sessions are decoding, push reserved ---
+    // -- bytes over the top rung so the whole ladder provably fires --
+    let wait_deadline = Instant::now() + Duration::from_secs(30);
+    while gov.bytes_reserved() <= static_bytes
+        && Instant::now() < wait_deadline
+    {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let target = (gov.budget_bytes() as f64 * 0.97) as u64;
+    let mut probe: Vec<MemReservation> = Vec::new();
+    let probe_deadline = Instant::now() + Duration::from_secs(8);
+    while gov.bytes_reserved() < target && Instant::now() < probe_deadline {
+        let mut chunk = target.saturating_sub(gov.bytes_reserved());
+        let mut got = None;
+        while chunk > 1024 {
+            if let Some(r) = gov.try_reserve(chunk) {
+                got = Some(r);
+                break;
+            }
+            chunk /= 2;
+        }
+        match got {
+            Some(r) => probe.push(r),
+            None => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+    let peak_pressure = gov.pressure();
+    // hold across enough decode steps for rung-3 KV compression to
+    // visit the active long-context sessions
+    std::thread::sleep(Duration::from_millis(1200));
+    drop(probe);
+
+    let results: Vec<Result<(usize, String), String>> =
+        workers.into_iter().map(|w| w.join().expect("client thread")).collect();
+    let wall_s = t_start.elapsed().as_secs_f64();
+
+    let mut completed = 0u64;
+    let mut aborted = 0u64;
+    let mut attempts_total = 0usize;
+    for r in &results {
+        match r {
+            Ok((attempts, _)) => {
+                completed += 1;
+                attempts_total += attempts;
+            }
+            Err(why) => {
+                aborted += 1;
+                eprintln!("ABORTED client: {why}");
+            }
+        }
+    }
+
+    // -- recovery: pressure lifts, and the reference request ---------
+    // -- reproduces its pre-storm tokens bit-exactly -----------------
+    let (_, ref_after) = run_client(addr, &reference_prompt, 8)
+        .expect("post-storm reference");
+    let bit_exact = ref_after == ref_before;
+    let final_rung = gov.rung();
+
+    let pauses = metrics.mem_prefetch_pauses.load(Relaxed);
+    let shrinks = metrics.mem_budget_shrinks.load(Relaxed);
+    let evicted = metrics.kv_pages_evicted.load(Relaxed);
+    let downq = metrics.kv_pages_downquantized.load(Relaxed);
+    let refused = metrics.mem_admission_rejected.load(Relaxed);
+    let published = metrics.kv_prefix_published.load(Relaxed);
+    let hits = metrics.kv_prefix_hits.load(Relaxed);
+    let report = http.shutdown();
+    std::fs::remove_file(&path).ok();
+
+    // -- report -----------------------------------------------------
+    let kernel = mc_moe::kernels::active().isa.name();
+    println!("completed={completed} aborted={aborted} \
+              attempts_total={attempts_total} peak_pressure={peak_pressure:.3}");
+    println!("ladder: prefetch_pauses={pauses} budget_shrinks={shrinks} \
+              pages_evicted={evicted} pages_downquantized={downq} \
+              admissions_refused={refused}");
+    println!("prefix: published={published} hits={hits}");
+    println!("recovery: rung={final_rung} reference_bit_exact={bit_exact} \
+              wall={wall_s:.2}s drain={:.1}ms drained={}",
+             report.drain_ms, report.drained);
+
+    assert_eq!(aborted, 0, "pressure must degrade, never abort a client");
+    assert_eq!(completed, clients as u64, "every client is accounted for");
+    assert!(pauses > 0, "rung 1 (prefetch pause) never engaged");
+    assert!(shrinks > 0, "rung 2 (expert-budget shrink) never engaged");
+    assert!(evicted > 0, "rung 3 (idle-prefix eviction) never fired");
+    assert!(downq > 0, "rung 3 (KV down-quantization) never fired");
+    assert!(refused > 0, "the 50% budget never refused an admission");
+    assert!(published > 0 && hits > 0,
+            "identical prompts must publish and ride a shared prefix");
+    assert!(bit_exact,
+            "post-storm reference must reproduce pre-storm tokens");
+    assert_eq!(final_rung, 0, "pressure must fully recover after the storm");
+
+    let json = format!(
+        "{{\n  \"mode\": \"{mode}\",\n  \"clients\": {clients},\n  \
+         \"max_new_tokens\": {max_new},\n  \
+         \"budget_bytes\": {budget},\n  \
+         \"worst_case_session_bytes\": {worst_kv},\n  \
+         \"completed\": {completed},\n  \"aborted\": {aborted},\n  \
+         \"attempts_total\": {attempts_total},\n  \
+         \"peak_pressure\": {peak_pressure:.4},\n  \
+         \"ladder\": {{\"mem_prefetch_pauses\": {pauses}, \
+         \"mem_budget_shrinks\": {shrinks}, \
+         \"kv_pages_evicted\": {evicted}, \
+         \"kv_pages_downquantized\": {downq}, \
+         \"mem_admission_rejected\": {refused}}},\n  \
+         \"prefix\": {{\"published\": {published}, \"hits\": {hits}}},\n  \
+         \"reference_bit_exact\": {bit_exact},\n  \
+         \"final_rung\": {final_rung},\n  \
+         \"wall_s\": {wall_s:.3},\n  \
+         \"drain_ms\": {dms:.2},\n  \
+         \"kernel_backend\": \"{kernel}\"\n}}\n",
+        mode = if fast() { "fast" } else { "full" },
+        dms = report.drain_ms,
+    );
+    match std::fs::write("BENCH_kvpressure.json", &json) {
+        Ok(()) => println!("wrote BENCH_kvpressure.json"),
+        Err(e) => eprintln!("could not write BENCH_kvpressure.json: {e}"),
+    }
+}

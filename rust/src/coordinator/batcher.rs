@@ -21,9 +21,10 @@ use crate::moe::model::MoeModel;
 use crate::util::pool::WorkerPool;
 
 use super::decode::{step_many_into, DecodeOdp, DecodeSession, StepScratch};
+use super::memgov::MemoryGovernor;
 use super::metrics::Metrics;
 use super::request::{
-    request_channel, Completion, FinishReason, GenerateRequest,
+    request_channel, Completion, FinishReason, GenerateRequest, Priority,
     RequestHandle, RequestTicket, StreamEvent,
 };
 use super::sampling::Sampler;
@@ -56,6 +57,10 @@ pub struct Batcher {
     scratch: StepScratch,
     /// reused fused-step input-token buffer
     inputs: Vec<u32>,
+    /// memory governor: byte-ceiling admission, shared-prefix reuse,
+    /// and the pressure-degradation ladder (DESIGN.md §8). `None`
+    /// leaves the historical ungoverned behavior untouched.
+    governor: Option<Arc<MemoryGovernor>>,
 }
 
 impl Batcher {
@@ -74,6 +79,7 @@ impl Batcher {
             default_deadline: None,
             scratch: StepScratch::new(),
             inputs: Vec::new(),
+            governor: None,
         }
     }
 
@@ -81,6 +87,15 @@ impl Batcher {
     /// (`None` = unlimited, the historical behavior).
     pub fn set_default_deadline(&mut self, deadline: Option<Duration>) {
         self.default_deadline = deadline;
+    }
+
+    /// Route admission and the fused step through a memory governor:
+    /// requests that arrive without a grant reserve their worst-case
+    /// KV footprint here (over-budget requests stay queued), admitted
+    /// sessions attach/publish shared prompt prefixes, and each step
+    /// walks the pressure ladder (DESIGN.md §8).
+    pub fn set_governor(&mut self, gov: Arc<MemoryGovernor>) {
+        self.governor = Some(gov);
     }
 
     /// Enqueue a request; the returned handle streams its events.
@@ -242,7 +257,31 @@ impl Batcher {
             let best = (0..self.queue.len())
                 .min_by_key(|&i| self.queue[i].0.priority)
                 .unwrap();
-            let (req, ticket, enqueued) = self.queue.remove(best);
+            // memory admission (before dequeuing, so a refusal leaves
+            // the request queued rather than dropped): rung 4 defers
+            // every Low-priority request outright; otherwise a request
+            // without a grant reserves its worst-case footprint here.
+            // Either refusal stops admission for this step — retrying
+            // next step is the backpressure.
+            let mut grant = None;
+            if let Some(gov) = &self.governor {
+                let req = &self.queue[best].0;
+                if req.grant.is_none() {
+                    if gov.rung() >= 4 && req.priority == Priority::Low {
+                        Metrics::inc(&metrics.mem_sessions_deferred, 1);
+                        break;
+                    }
+                    match gov.admit_session(&req.prompt,
+                                            req.max_new_tokens) {
+                        Ok(g) => grant = Some(Arc::new(g)),
+                        Err(_needed) => break,
+                    }
+                }
+            }
+            let (mut req, ticket, enqueued) = self.queue.remove(best);
+            if grant.is_some() {
+                req.grant = grant;
+            }
             Metrics::inc(&metrics.requests_admitted, 1);
             let deadline = req
                 .deadline
@@ -253,10 +292,28 @@ impl Batcher {
             let started = Instant::now();
             // single-shot batched prefill of the prompt minus its last
             // token; the final prompt token is the first fused decode
-            // step below
+            // step below. Under a governor the session tracks per-token
+            // importance (the Eq. 6 map steers page down-quantization)
+            // and a granted shared prefix replaces its covered rows.
             let (head, tail) = req.prompt.split_at(req.prompt.len() - 1);
-            if !head.is_empty() {
-                session.prefill(head);
+            if self.governor.is_some() {
+                session.enable_importance();
+            }
+            if let Some(p) =
+                req.grant.as_ref().and_then(|g| g.prefix.clone())
+            {
+                session.attach_prefix(p);
+            }
+            if session.pos < head.len() {
+                session.prefill(&head[session.pos..]);
+            }
+            if let Some(gov) = &self.governor {
+                if req.grant.as_ref().map_or(true, |g| g.prefix.is_none())
+                    && gov.wants_prefix(head)
+                {
+                    let (k, v, imp) = session.export_prefix(head.len());
+                    gov.publish_prefix(head, k, v, imp);
+                }
             }
             let sampler = Sampler::new(req.sampling.clone());
             self.active.push(Active {
@@ -280,6 +337,30 @@ impl Batcher {
     pub fn step(&mut self, metrics: &Metrics) -> Vec<Completion> {
         self.reap_deadlines(metrics);
         self.reap_cancelled(metrics);
+        // walk the pressure ladder before admission so rung changes
+        // (including rung-4 Low-priority deferral) see this step's
+        // reservations. Rung 3 down-quantizes cold low-importance KV
+        // pages of every active session and returns the freed bytes to
+        // the ledger, so pressure can actually recede.
+        if let Some(gov) = &self.governor {
+            let rung = gov.tick(&self.model);
+            if rung >= 3 {
+                for a in &mut self.active {
+                    let before = a.session.quantized_pages();
+                    let saved = a.session.kv_compress(
+                        gov.cfg.downq_frac, gov.cfg.protect_recent_rows);
+                    if saved > 0 {
+                        let pages =
+                            (a.session.quantized_pages() - before) as u64;
+                        Metrics::inc(&metrics.kv_pages_downquantized,
+                                     pages);
+                        if let Some(g) = &a.req.grant {
+                            g.reservation.shrink(saved as u64);
+                        }
+                    }
+                }
+            }
+        }
         let mut retired = self.admit(metrics);
         Metrics::set_gauge(&metrics.queue_depth, self.queue.len() as u64);
         Metrics::set_gauge(&metrics.batch_occupancy, self.active.len() as u64);

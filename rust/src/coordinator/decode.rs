@@ -36,6 +36,9 @@ use crate::config::ModelConfig;
 use crate::moe::exec::{attention, dispatch, router};
 use crate::moe::exec::attention::AttnScratch;
 use crate::moe::exec::dispatch::{DispatchMode, DispatchScratch, ExpertsRef};
+use crate::moe::exec::kvcache::{
+    KvPage, KvView, SharedPrefix, DEFAULT_PAGE_ROWS,
+};
 use crate::moe::model::{Expert, MoeModel, RunStats, RMS_EPS};
 use crate::offload;
 use crate::quant::QmScratch;
@@ -50,9 +53,28 @@ pub use crate::moe::exec::router::DecodeOdp;
 /// (Σ klen · d) below this stays serial in `step_many_into`.
 const SESSION_ATTN_MIN_WORK: usize = 65_536;
 
+/// One layer's private KV storage: block-granular pages grown lazily
+/// as the sequence extends (DESIGN.md §8). Rows before the session's
+/// shared-prefix boundary live in the read-only [`SharedPrefix`], not
+/// here; row `pos` of the session maps to local row
+/// `pos - prefix_rows` in these pages.
 struct LayerKv {
-    k: Mat, // [max_seq, D]
-    v: Mat,
+    pages: Vec<KvPage>,
+}
+
+impl LayerKv {
+    /// Write a K/V row at page-local position `local`, allocating the
+    /// covering page on first touch. With `DEFAULT_PAGE_ROWS` sized to
+    /// the steady-state decode window, growth never lands inside the
+    /// zero-allocation measurement window (`tests/zero_alloc.rs`).
+    fn write_row(&mut self, local: usize, page_rows: usize, d: usize,
+                 krow: &[f32], vrow: &[f32]) {
+        let pi = local / page_rows;
+        while self.pages.len() <= pi {
+            self.pages.push(KvPage::new_f32(page_rows, d));
+        }
+        self.pages[pi].write_row(local % page_rows, d, krow, vrow);
+    }
 }
 
 /// Per-session scratch arena: every intermediate of the layer stack,
@@ -114,27 +136,165 @@ pub struct DecodeSession {
     /// pruning metrics mean the same thing on both paths.
     pub stats: RunStats,
     pub scratch: SessionScratch,
+    /// Read-only shared prompt prefix (CoW: this session never writes
+    /// rows < `prefix.rows`; its own KV starts there).
+    prefix: Option<Arc<SharedPrefix>>,
+    /// Per-absolute-position token importance (Eq. 6 over the prefill
+    /// window; L1-of-embedding fallback for decoded tokens). Only
+    /// tracked when `enable_importance` was called.
+    importance: Vec<f32>,
+    collect_importance: bool,
+    page_rows: usize,
 }
 
 impl DecodeSession {
     pub fn new(model: Arc<MoeModel>, odp: Option<DecodeOdp>) -> DecodeSession {
-        let (s, d) = (model.cfg.max_seq, model.cfg.d_model);
         let kv = (0..model.cfg.n_layers)
-            .map(|_| LayerKv { k: Mat::zeros(s, d), v: Mat::zeros(s, d) })
+            .map(|_| LayerKv { pages: Vec::new() })
             .collect();
         let stats = RunStats::new(model.cfg.n_layers, model.cfg.n_experts);
         let scratch = SessionScratch::new(&model.cfg);
-        DecodeSession { model, kv, pos: 0, odp, stats, scratch }
+        DecodeSession {
+            model,
+            kv,
+            pos: 0,
+            odp,
+            stats,
+            scratch,
+            prefix: None,
+            importance: Vec::new(),
+            collect_importance: false,
+            page_rows: DEFAULT_PAGE_ROWS,
+        }
     }
 
     pub fn remaining(&self) -> usize {
         self.model.cfg.max_seq - self.pos
     }
 
-    /// Rewind to an empty sequence, keeping the allocated KV buffers
-    /// (stale rows are never read: attention only sees rows < pos).
+    fn prefix_rows(&self) -> usize {
+        self.prefix.as_ref().map(|p| p.rows).unwrap_or(0)
+    }
+
+    /// Track per-token importance (memory-governed sessions: feeds
+    /// rung-3 page selection and prefix publication). Reserves the
+    /// full window up front so decode-time pushes never reallocate.
+    pub fn enable_importance(&mut self) {
+        self.collect_importance = true;
+        self.importance.reserve(self.model.cfg.max_seq);
+    }
+
+    pub fn importance(&self) -> &[f32] {
+        &self.importance
+    }
+
+    /// Attach a shared prompt prefix to an empty session: attention
+    /// reads rows `< prefix.rows` from the shared (read-only) mats;
+    /// this session's own pages start at that boundary.
+    pub fn attach_prefix(&mut self, p: Arc<SharedPrefix>) {
+        assert_eq!(self.pos, 0, "prefix must attach before any append");
+        assert!(self.prefix.is_none(), "prefix already attached");
+        assert_eq!(p.k.len(), self.model.cfg.n_layers);
+        assert!(p.rows <= self.model.cfg.max_seq);
+        self.pos = p.rows;
+        if self.collect_importance {
+            self.importance.clear();
+            self.importance.extend_from_slice(&p.importance);
+            self.importance.resize(p.rows, 0.0);
+        }
+        self.prefix = Some(p);
+    }
+
+    /// Copy the first `rows` KV rows (per layer) out of this session's
+    /// f32 pages, plus their importance — the raw material for
+    /// `MemoryGovernor::publish_prefix`. The session must own those
+    /// rows privately (no prefix attached) and not have down-quantized
+    /// them yet.
+    pub fn export_prefix(&self, rows: usize)
+                         -> (Vec<Mat>, Vec<Mat>, Vec<f32>) {
+        assert!(self.prefix.is_none(), "already sharing a prefix");
+        assert!(rows <= self.pos, "cannot export unwritten rows");
+        let d = self.model.cfg.d_model;
+        let mut ks = Vec::with_capacity(self.kv.len());
+        let mut vs = Vec::with_capacity(self.kv.len());
+        let mut dq = vec![0.0f32; d];
+        for layer in &self.kv {
+            let mut k = Mat::zeros(rows, d);
+            let mut v = Mat::zeros(rows, d);
+            let view = KvView {
+                prefix: None,
+                prefix_rows: 0,
+                pages: &layer.pages,
+                page_rows: self.page_rows,
+                d,
+                layer: 0,
+            };
+            for r in 0..rows {
+                k.row_mut(r).copy_from_slice(view.k_slice(r, 0, d, &mut dq));
+                v.row_mut(r).copy_from_slice(view.v_slice(r, 0, d, &mut dq));
+            }
+            ks.push(k);
+            vs.push(v);
+        }
+        let mut imp = self.importance.clone();
+        imp.resize(rows, 0.0);
+        imp.truncate(rows);
+        (ks, vs, imp)
+    }
+
+    /// Rung-3 pressure action: down-quantize the `frac` least-important
+    /// fully-written private pages to f16 (all layers), never touching
+    /// the last `protect_recent` rows behind the decode head. Returns
+    /// bytes freed (callers shrink their `MemReservation` by it).
+    pub fn kv_compress(&mut self, frac: f64, protect_recent: usize) -> usize {
+        let prefix_rows = self.prefix_rows();
+        let local_rows = self.pos.saturating_sub(prefix_rows);
+        let cutoff = local_rows
+            .saturating_sub(protect_recent) / self.page_rows; // pages < cutoff are cold
+        let mut eligible: Vec<(f32, usize)> = (0..cutoff)
+            .filter(|&p| !self.kv[0].pages[p].is_quantized())
+            .map(|p| {
+                let a = prefix_rows + p * self.page_rows;
+                let b = a + self.page_rows;
+                let sum: f32 = (a..b)
+                    .map(|r| self.importance.get(r).copied().unwrap_or(0.0))
+                    .sum();
+                (sum / self.page_rows as f32, p)
+            })
+            .collect();
+        if eligible.is_empty() {
+            return 0;
+        }
+        eligible.sort_by(|x, y| x.0.total_cmp(&y.0).then(x.1.cmp(&y.1)));
+        let take = ((frac * eligible.len() as f64).ceil() as usize)
+            .min(eligible.len());
+        let mut saved = 0usize;
+        for &(_, p) in &eligible[..take] {
+            for layer in &mut self.kv {
+                saved += layer.pages[p].quantize();
+            }
+        }
+        saved
+    }
+
+    /// Pages currently down-quantized (layer 0; all layers move
+    /// together).
+    pub fn quantized_pages(&self) -> usize {
+        self.kv[0].pages.iter().filter(|p| p.is_quantized()).count()
+    }
+
+    /// Rewind to an empty sequence. F32 pages are kept allocated
+    /// (their rows are rewritten before they are ever read again);
+    /// down-quantized pages are no longer writable and are dropped.
     pub fn reset(&mut self) {
         self.pos = 0;
+        self.prefix = None;
+        self.importance.clear();
+        for layer in &mut self.kv {
+            if layer.pages.iter().any(|p| p.is_quantized()) {
+                layer.pages.clear();
+            }
+        }
         self.stats = RunStats::new(self.model.cfg.n_layers,
                                    self.model.cfg.n_experts);
     }
@@ -186,12 +346,21 @@ impl DecodeSession {
         // sessions by `step_many_into` instead)
         let attn_pool =
             if t_new > 1 { Some(WorkerPool::global()) } else { None };
+        let prefix_rows = self.prefix_rows();
+        let page_rows = self.page_rows;
+        // Eq.-6 maps need the full square prefill grid: only a
+        // prefix-free whole-prompt prefill qualifies; decoded tokens
+        // fall back to the L1-of-embedding factor alone (module docs).
+        let want_map =
+            self.collect_importance && pos0 == 0 && t_new > 1;
 
-        let (kv, sc, stats, odp) = (
+        let (kv, sc, stats, odp, prefix, importance) = (
             &mut self.kv,
             &mut self.scratch,
             &mut self.stats,
             self.odp.as_ref(),
+            self.prefix.as_deref(),
+            &mut self.importance,
         );
 
         // token + positional embedding at this session's positions
@@ -199,6 +368,15 @@ impl DecodeSession {
         for (t, &tok) in tokens.iter().enumerate() {
             model.embed_row(tok, pos0 + t, sc.x.row_mut(t));
         }
+        if self.collect_importance {
+            importance.resize(pos0, 0.0);
+            for t in 0..t_new {
+                let l1: f32 =
+                    sc.x.row(t).iter().map(|v| v.abs()).sum();
+                importance.push(l1 / d as f32);
+            }
+        }
+        let mut eq6_acc = if want_map { vec![0.0f32; t_new] } else { Vec::new() };
 
         for (li, layer) in model.layers.iter().enumerate() {
             // attention with KV cache (shared kernel, append shape)
@@ -208,13 +386,28 @@ impl DecodeSession {
             layer.wv.matmul_into(&sc.h, &mut sc.v, &mut sc.qs);
             let cache = &mut kv[li];
             for i in 0..t_new {
-                cache.k.row_mut(pos0 + i).copy_from_slice(sc.k.row(i));
-                cache.v.row_mut(pos0 + i).copy_from_slice(sc.v.row(i));
+                cache.write_row(pos0 + i - prefix_rows, page_rows, d,
+                                sc.k.row(i), sc.v.row(i));
             }
-            attention::causal_attention_into(
-                &sc.q, &cache.k, &cache.v, pos0 + t_new, cfg.n_heads, false,
+            let view = KvView {
+                prefix,
+                prefix_rows,
+                pages: &cache.pages,
+                page_rows,
+                d,
+                layer: li,
+            };
+            let a_mean = attention::causal_attention_paged_into(
+                &sc.q, &view, pos0 + t_new, cfg.n_heads, want_map,
                 attn_pool, &mut sc.attn, &mut sc.attn_out,
             );
+            if let Some(am) = a_mean {
+                // layer-averaged Eq.-6 importance of the prefill window
+                let imp = attention::eq6_importance(&sc.x, &am);
+                for (a, v) in eq6_acc.iter_mut().zip(&imp) {
+                    *a += v / model.layers.len() as f32;
+                }
+            }
             layer.wo.matmul_into(&sc.attn_out, &mut sc.proj, &mut sc.qs);
             add_inplace(&mut sc.x, &sc.proj);
 
@@ -268,6 +461,16 @@ impl DecodeSession {
             }
             dispatch::scatter_into(&sc.dispatch, t_new, d, &mut sc.moe_y);
             add_inplace(&mut sc.x, &sc.moe_y);
+        }
+
+        if want_map {
+            // replace the L1-only placeholders with the layer-averaged
+            // Eq.-6 importance for the prefill window (the map already
+            // folds in the per-layer L1 factor)
+            importance[..t_new]
+                .iter_mut()
+                .zip(&eq6_acc)
+                .for_each(|(slot, w)| *slot = *w);
         }
 
         rmsnorm_into(&sc.x, &model.final_norm, RMS_EPS, &mut sc.xf);
@@ -350,14 +553,23 @@ fn session_attention(
     attn_base: SendPtr<f32>,
     d: usize,
 ) {
-    let cache = &mut sess.kv[li];
-    cache.k.row_mut(t).copy_from_slice(k.row(i));
-    cache.v.row_mut(t).copy_from_slice(v.row(i));
-    let sc = &mut sess.scratch;
+    let prefix_rows = sess.prefix_rows();
+    let page_rows = sess.page_rows;
+    sess.kv[li].write_row(t - prefix_rows, page_rows, d, k.row(i), v.row(i));
+    let (cache, sc, prefix) =
+        (&sess.kv[li], &mut sess.scratch, sess.prefix.as_deref());
     sc.q.resize_to(1, d);
     sc.q.row_mut(0).copy_from_slice(q.row(i));
-    attention::causal_attention_into(
-        &sc.q, &cache.k, &cache.v, t + 1, n_heads, false, None, &mut sc.attn,
+    let view = KvView {
+        prefix,
+        prefix_rows,
+        pages: &cache.pages,
+        page_rows,
+        d,
+        layer: li,
+    };
+    attention::causal_attention_paged_into(
+        &sc.q, &view, t + 1, n_heads, false, None, &mut sc.attn,
         &mut sc.attn_out,
     );
     // Safety: session i owns row i of the shared output exclusively.
@@ -396,6 +608,12 @@ pub fn step_many_into<'a>(
     for (i, s) in sessions.iter_mut().enumerate() {
         sc.positions.push(s.pos);
         model.embed_row(tokens[i], s.pos, sc.x.row_mut(i));
+        if s.collect_importance {
+            // decode-time fallback: L1 factor of Eq. 6 only (docs)
+            let l1: f32 = sc.x.row(i).iter().map(|v| v.abs()).sum();
+            s.importance.resize(s.pos, 0.0);
+            s.importance.push(l1 / d as f32);
+        }
         s.pos += 1;
         s.stats.tokens_seen += 1;
     }
@@ -682,5 +900,116 @@ mod tests {
         let seqs: Vec<Vec<u32>> = vec![(1..17).collect()];
         let odp = DecodeOdp::calibrate(&model, &seqs, vec![0.5; cfg.n_layers], 0.02);
         assert_eq!(odp.l1_threshold.unwrap().len(), cfg.n_layers);
+    }
+
+    #[test]
+    fn shared_prefix_decode_matches_private_bit_exact() {
+        // a session that attaches an exported prefix must produce the
+        // same logits and greedy tokens as one owning the whole prompt
+        let cfg = ModelConfig::test_tiny();
+        let model = Arc::new(random_model(&cfg, 7));
+        let prompt: Vec<u32> = (1..25).collect();
+        let head = &prompt[..20];
+
+        let mut donor = DecodeSession::new(model.clone(), None);
+        donor.enable_importance();
+        donor.prefill(&prompt);
+        let (k, v, imp) = donor.export_prefix(head.len());
+        assert_eq!(imp.len(), head.len());
+        assert!(imp.iter().all(|x| x.is_finite()));
+        let prefix = Arc::new(SharedPrefix {
+            tokens: head.to_vec(),
+            k,
+            v,
+            rows: head.len(),
+            importance: imp,
+        });
+
+        let decode = |sess: &mut DecodeSession, tail: &[u32]| {
+            let mut logits = sess.prefill(tail);
+            let mut toks = Vec::new();
+            for _ in 0..8 {
+                let next = logits
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.total_cmp(b.1))
+                    .unwrap()
+                    .0 as u32;
+                toks.push(next);
+                logits = sess.step(next);
+            }
+            (toks, logits)
+        };
+
+        let mut private = DecodeSession::new(model.clone(), None);
+        let (want_toks, want_logits) = decode(&mut private, &prompt);
+
+        let mut shared = DecodeSession::new(model.clone(), None);
+        shared.enable_importance();
+        shared.attach_prefix(prefix.clone());
+        assert_eq!(shared.pos, head.len());
+        let (got_toks, got_logits) =
+            decode(&mut shared, &prompt[head.len()..]);
+
+        assert_eq!(got_toks, want_toks, "greedy tokens must be identical");
+        assert_eq!(got_logits, want_logits, "logits must be bit-exact");
+        assert_eq!(Arc::strong_count(&prefix), 2, "session holds the Arc");
+    }
+
+    #[test]
+    fn kv_compress_quantizes_cold_pages_and_stays_close() {
+        let mut cfg = ModelConfig::test_tiny();
+        cfg.max_seq = 3 * DEFAULT_PAGE_ROWS;
+        let model = Arc::new(random_model(&cfg, 8));
+        let prompt: Vec<u32> =
+            (0..2 * DEFAULT_PAGE_ROWS as u32 + 2).map(|t| 1 + t % 250).collect();
+
+        let mut plain = DecodeSession::new(model.clone(), None);
+        plain.prefill(&prompt);
+        let mut sess = DecodeSession::new(model.clone(), None);
+        sess.enable_importance();
+        sess.prefill(&prompt);
+
+        // protect_recent large enough -> nothing eligible
+        assert_eq!(sess.kv_compress(1.0, cfg.max_seq), 0);
+        let saved = sess.kv_compress(1.0, 0);
+        assert!(saved > 0, "two full cold pages must down-quantize");
+        assert_eq!(sess.quantized_pages(), 2);
+        // idempotent: already-quantized pages are skipped
+        assert_eq!(sess.kv_compress(1.0, 0), 0);
+
+        // decode after compression tracks the uncompressed session
+        for t in [9u32, 42, 77] {
+            let want = plain.step(t);
+            let got = sess.step(t);
+            for (g, w) in got.iter().zip(&want) {
+                assert!(
+                    (g - w).abs() < 0.05 * (1.0 + w.abs()),
+                    "f16 KV drifted: {g} vs {w}"
+                );
+            }
+        }
+
+        // reset drops the (unwritable) quantized pages; session reusable
+        sess.reset();
+        assert_eq!(sess.quantized_pages(), 0);
+        sess.prefill(&[1, 2, 3]);
+        sess.step(4);
+    }
+
+    #[test]
+    fn half_fraction_compress_prefers_low_importance_pages() {
+        let mut cfg = ModelConfig::test_tiny();
+        cfg.max_seq = 3 * DEFAULT_PAGE_ROWS;
+        let model = Arc::new(random_model(&cfg, 9));
+        let prompt: Vec<u32> =
+            (0..2 * DEFAULT_PAGE_ROWS as u32).map(|t| 1 + t % 250).collect();
+        let mut sess = DecodeSession::new(model, None);
+        sess.enable_importance();
+        sess.prefill(&prompt);
+        assert_eq!(sess.importance().len(), prompt.len());
+        let saved = sess.kv_compress(0.5, 0);
+        assert!(saved > 0);
+        assert_eq!(sess.quantized_pages(), 1, "ceil(0.5 * 2) = 1 page");
     }
 }

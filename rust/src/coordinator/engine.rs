@@ -14,6 +14,7 @@ use crate::moe::model::{ForwardOpts, MoeModel, NullSink, OdpPolicy};
 use crate::tensor::Mat;
 
 use super::decode::{DecodeOdp, DecodeSession};
+use super::memgov::{MemoryGovernor, SessionGrant};
 use super::memmodel;
 use super::metrics::Metrics;
 use super::request::{Completion, FinishReason, GenerateRequest};
@@ -26,6 +27,11 @@ pub struct McEngine {
     /// decode-time policy (KV-cache path)
     pub decode_odp: Option<DecodeOdp>,
     pub metrics: Arc<Metrics>,
+    /// optional memory governor: when set, every request reserves its
+    /// worst-case KV footprint up front (over-budget errors instead of
+    /// OOM), attaches/publishes shared prompt prefixes, and ticks the
+    /// pressure ladder (DESIGN.md §8)
+    pub governor: Option<Arc<MemoryGovernor>>,
 }
 
 impl McEngine {
@@ -49,7 +55,14 @@ impl McEngine {
             odp,
             decode_odp,
             metrics,
+            governor: None,
         }
+    }
+
+    /// Attach a memory governor (built over this engine's metrics so
+    /// its gauges land in the same snapshot).
+    pub fn set_governor(&mut self, gov: Arc<MemoryGovernor>) {
+        self.governor = Some(gov);
     }
 
     /// Full-sequence scoring logits (teacher-forced evaluation path).
@@ -74,16 +87,52 @@ impl McEngine {
         mut on_token: impl FnMut(u32),
     ) -> Result<Completion> {
         anyhow::ensure!(!req.prompt.is_empty(), "empty prompt");
+        // memory admission: reserve the worst-case footprint before
+        // any compute — over-budget is a clean error, never an OOM
+        let grant: Option<Arc<SessionGrant>> =
+            match (&req.grant, &self.governor) {
+                (Some(g), _) => Some(g.clone()),
+                (None, Some(gov)) => {
+                    match gov.admit_session(&req.prompt, req.max_new_tokens) {
+                        Ok(g) => Some(Arc::new(g)),
+                        Err(needed) => anyhow::bail!(
+                            "memory budget exceeded: session needs {needed} \
+                             bytes (budget {})",
+                            gov.budget_bytes()
+                        ),
+                    }
+                }
+                (None, None) => None,
+            };
         Metrics::inc(&self.metrics.requests_admitted, 1);
         let mut sampler = Sampler::new(req.sampling.clone());
         let mut sess =
             DecodeSession::new(self.model.clone(), self.decode_odp.clone());
+        if self.governor.is_some() {
+            sess.enable_importance();
+        }
+        if let Some(p) = grant.as_ref().and_then(|g| g.prefix.clone()) {
+            sess.attach_prefix(p);
+        }
         let started = Instant::now();
         // one logits buffer for the whole request: after prefill the
         // decode loop reuses it (and the session's scratch arena), so
-        // steady-state stepping allocates nothing
+        // steady-state stepping allocates nothing. A granted shared
+        // prefix already covers its rows: prefill only the remainder
+        // (at least the final prompt token, so logits stay valid).
         let mut logits = Vec::new();
-        sess.prefill_into(&req.prompt, &mut logits);
+        let covered = sess.pos;
+        sess.prefill_into(&req.prompt[covered..], &mut logits);
+        if let Some(gov) = &self.governor {
+            let head = &req.prompt[..req.prompt.len() - 1];
+            if grant.as_ref().map_or(true, |g| g.prefix.is_none())
+                && gov.wants_prefix(head)
+            {
+                let (k, v, imp) = sess.export_prefix(head.len());
+                gov.publish_prefix(head, k, v, imp);
+            }
+            gov.tick(&self.model);
+        }
         let ttft_ns = started.elapsed().as_nanos() as u64;
         self.metrics.record_ttft(ttft_ns);
         let mut tokens = Vec::with_capacity(req.max_new_tokens);
@@ -117,6 +166,13 @@ impl McEngine {
                      sess.stats.expert_calls as u64);
         Metrics::inc(&self.metrics.experts_pruned,
                      sess.stats.pruned_total() as u64);
+        // release this session's reservation, then let the ladder
+        // disengage any rungs the freed bytes no longer justify
+        drop(sess);
+        drop(grant);
+        if let Some(gov) = &self.governor {
+            gov.tick(&self.model);
+        }
         Ok(Completion {
             id: 0,
             tokens,

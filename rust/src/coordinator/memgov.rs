@@ -1,0 +1,559 @@
+//! The memory governor (DESIGN.md §8): one byte ceiling for every
+//! large allocation class — KV pages, the expert residency budget,
+//! scratch arenas — with reservation-based admission and a reversible
+//! degradation ladder instead of OOM.
+//!
+//! **Reservation protocol.** Admission calls [`MemoryGovernor::
+//! admit_session`] *before* a session is built: the worst-case page
+//! footprint of `prompt + max_new_tokens` (minus any shared prefix) is
+//! reserved atomically against the ceiling, or the request is refused
+//! with the bytes it would have needed (the serve tier maps that to
+//! `503` + backlog-scaled `Retry-After`). The reservation is RAII
+//! ([`MemReservation`]): dropping the grant — session retired, request
+//! failed, client vanished — returns every byte, so
+//! `bytes_reserved` exactly re-balances after each session
+//! (`tests/memgov.rs` property-checks this invariant).
+//!
+//! **Prefix sharing (CoW).** Published prompt prefixes are keyed by
+//! `kvcache::prefix_hash` and verified by token equality; a hit means
+//! the new session attaches the shared read-only rows and only
+//! reserves pages for its private tail. Idle prefixes (refcount 1 —
+//! the registry's own) are evicted at rung 3.
+//!
+//! **Degradation ladder** (pressure = reserved/budget, 0.05
+//! hysteresis on the way down; every rung has a counter and reverses
+//! when pressure lifts):
+//!
+//! | rung | threshold | action |
+//! |------|-----------|--------|
+//! | 1 | 0.50 | pause speculative expert prefetch |
+//! | 2 | 0.70 | halve the effective expert-cache budget |
+//! | 3 | 0.85 | evict idle shared prefixes; down-quantize low-importance KV pages (Eq.-6 maps) |
+//! | 4 | 0.95 | defer admission of `Priority::Low` sessions |
+//!
+//! Fault injection: `MC_FAULTS` `oom=P` makes [`try_reserve`]
+//! deterministically fail, so the whole refusal path is testable
+//! without actually exhausting memory.
+//!
+//! [`try_reserve`]: MemoryGovernor::try_reserve
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering::Relaxed};
+use std::sync::{Arc, Mutex};
+
+use crate::config::ModelConfig;
+use crate::moe::exec::kvcache::{prefix_hash, SharedPrefix, DEFAULT_PAGE_ROWS};
+use crate::moe::model::MoeModel;
+use crate::tensor::Mat;
+use crate::util::faults;
+
+use super::metrics::Metrics;
+
+/// Rung-up pressure thresholds; rung r engages at `RUNG_UP[r-1]`.
+pub const RUNG_UP: [f64; 4] = [0.50, 0.70, 0.85, 0.95];
+/// A rung disengages only once pressure falls this far below its
+/// threshold (no flapping at the boundary).
+pub const RUNG_HYSTERESIS: f64 = 0.05;
+
+#[derive(Debug, Clone)]
+pub struct MemGovConfig {
+    /// The ceiling every reservation counts against.
+    pub budget_bytes: u64,
+    /// Rows per KV page (sessions must use the same granularity).
+    pub page_rows: usize,
+    /// Fraction of eligible (cold, fully-written) pages the rung-3
+    /// action down-quantizes per application.
+    pub downq_frac: f64,
+    /// Prompts shorter than this are not worth publishing as shared
+    /// prefixes.
+    pub min_prefix_rows: usize,
+    /// Rows behind the decode head rung 3 never touches (recent
+    /// context dominates next-token quality).
+    pub protect_recent_rows: usize,
+}
+
+impl Default for MemGovConfig {
+    fn default() -> MemGovConfig {
+        MemGovConfig {
+            budget_bytes: u64::MAX,
+            page_rows: DEFAULT_PAGE_ROWS,
+            downq_frac: 0.5,
+            min_prefix_rows: 8,
+            protect_recent_rows: 16,
+        }
+    }
+}
+
+/// The atomically-shared accounting core. Split from the governor so
+/// [`MemReservation`]s can hold it without creating an Arc cycle
+/// through the prefix registry.
+#[derive(Debug)]
+struct Ledger {
+    budget: u64,
+    reserved: AtomicU64,
+    metrics: Arc<Metrics>,
+}
+
+impl Ledger {
+    fn release(&self, bytes: u64) {
+        let prev = self.reserved.fetch_sub(bytes, Relaxed);
+        debug_assert!(prev >= bytes, "over-release: {prev} - {bytes}");
+        Metrics::set_gauge(&self.metrics.mem_bytes_reserved,
+                           prev.saturating_sub(bytes));
+    }
+}
+
+/// RAII hold on `bytes` of the governed budget; dropping it releases
+/// the full remaining amount. [`MemReservation::shrink`] returns part
+/// early (e.g. bytes actually freed by down-quantizing KV pages).
+#[derive(Debug)]
+pub struct MemReservation {
+    ledger: Arc<Ledger>,
+    bytes: AtomicU64,
+}
+
+impl MemReservation {
+    pub fn bytes(&self) -> u64 {
+        self.bytes.load(Relaxed)
+    }
+
+    /// Give back `by` bytes of this reservation (saturating).
+    pub fn shrink(&self, by: u64) {
+        let mut cur = self.bytes.load(Relaxed);
+        loop {
+            let freed = by.min(cur);
+            if freed == 0 {
+                return;
+            }
+            match self.bytes.compare_exchange(cur, cur - freed, Relaxed,
+                                              Relaxed) {
+                Ok(_) => {
+                    self.ledger.release(freed);
+                    return;
+                }
+                Err(now) => cur = now,
+            }
+        }
+    }
+}
+
+impl Drop for MemReservation {
+    fn drop(&mut self) {
+        let left = self.bytes.swap(0, Relaxed);
+        if left > 0 {
+            self.ledger.release(left);
+        }
+    }
+}
+
+/// What admission hands the decode path: the session's byte
+/// reservation plus the shared prefix it may attach.
+#[derive(Debug)]
+pub struct SessionGrant {
+    pub reservation: MemReservation,
+    pub prefix: Option<Arc<SharedPrefix>>,
+}
+
+#[derive(Debug)]
+pub struct MemoryGovernor {
+    pub cfg: MemGovConfig,
+    ledger: Arc<Ledger>,
+    /// bytes reserved before any session: expert residency budget +
+    /// scratch-arena estimate (never released)
+    baseline: u64,
+    rung: AtomicU64,
+    n_layers: usize,
+    d_model: usize,
+    max_seq: usize,
+    metrics: Arc<Metrics>,
+    prefixes: Mutex<HashMap<u64, (Arc<SharedPrefix>, MemReservation)>>,
+}
+
+impl MemoryGovernor {
+    /// Build a governor for `model_cfg` with an explicit ceiling.
+    /// `static_bytes` is the non-KV baseline (expert budget + scratch
+    /// estimate) reserved up front for the process lifetime.
+    pub fn new(cfg: MemGovConfig, model_cfg: &ModelConfig,
+               static_bytes: u64, metrics: Arc<Metrics>)
+               -> Arc<MemoryGovernor> {
+        let ledger = Arc::new(Ledger {
+            budget: cfg.budget_bytes,
+            reserved: AtomicU64::new(static_bytes),
+            metrics: metrics.clone(),
+        });
+        Metrics::set_gauge(&metrics.mem_budget_bytes, cfg.budget_bytes);
+        Metrics::set_gauge(&metrics.mem_bytes_reserved, static_bytes);
+        Arc::new(MemoryGovernor {
+            cfg,
+            ledger,
+            baseline: static_bytes,
+            rung: AtomicU64::new(0),
+            n_layers: model_cfg.n_layers,
+            d_model: model_cfg.d_model,
+            max_seq: model_cfg.max_seq,
+            metrics,
+            prefixes: Mutex::new(HashMap::new()),
+        })
+    }
+
+    /// The serving default: ceiling from `memmodel`-style worst-case
+    /// arithmetic with enough slack that an unconstrained run never
+    /// climbs past rung 0 — default behavior stays bit-identical to
+    /// the ungoverned stack. `budget_override` (`--mem-budget-mb` or
+    /// `MC_MEM_BUDGET_MB`) replaces the derived ceiling.
+    pub fn for_model(model_cfg: &ModelConfig, expert_budget: Option<u64>,
+                     max_batch: usize, budget_override: Option<u64>,
+                     metrics: Arc<Metrics>) -> Arc<MemoryGovernor> {
+        let mut cfg = MemGovConfig::default();
+        let static_bytes = expert_budget.unwrap_or(0)
+            + scratch_estimate_bytes(model_cfg, max_batch);
+        let worst_kv = worst_case_kv_bytes(
+            model_cfg.max_seq, 0, cfg.page_rows, model_cfg.n_layers,
+            model_cfg.d_model);
+        cfg.budget_bytes = budget_override.unwrap_or_else(|| {
+            // 4x headroom over a full batch of max_seq sessions keeps
+            // derived-default pressure under the first rung
+            4 * (static_bytes + max_batch as u64 * worst_kv) + (1 << 20)
+        });
+        MemoryGovernor::new(cfg, model_cfg, static_bytes, metrics)
+    }
+
+    pub fn budget_bytes(&self) -> u64 {
+        self.ledger.budget
+    }
+
+    pub fn bytes_reserved(&self) -> u64 {
+        self.ledger.reserved.load(Relaxed)
+    }
+
+    /// The static (non-session) floor `bytes_reserved` returns to
+    /// once every session retires.
+    pub fn baseline_bytes(&self) -> u64 {
+        self.baseline
+    }
+
+    pub fn pressure(&self) -> f64 {
+        self.bytes_reserved() as f64 / self.ledger.budget.max(1) as f64
+    }
+
+    pub fn rung(&self) -> u64 {
+        self.rung.load(Relaxed)
+    }
+
+    pub fn metrics(&self) -> &Arc<Metrics> {
+        &self.metrics
+    }
+
+    /// Reserve `bytes` against the ceiling, or refuse (over budget, or
+    /// an injected `oom=P` fault draw).
+    pub fn try_reserve(&self, bytes: u64) -> Option<MemReservation> {
+        if let Some(fp) = faults::plan() {
+            if fp.oom_now() {
+                Metrics::inc(&self.metrics.mem_oom_injected, 1);
+                return None;
+            }
+        }
+        let mut cur = self.ledger.reserved.load(Relaxed);
+        loop {
+            let next = cur.checked_add(bytes)?;
+            if next > self.ledger.budget {
+                return None;
+            }
+            match self.ledger.reserved.compare_exchange(cur, next, Relaxed,
+                                                        Relaxed) {
+                Ok(_) => {
+                    Metrics::set_gauge(&self.metrics.mem_bytes_reserved, next);
+                    return Some(MemReservation {
+                        ledger: self.ledger.clone(),
+                        bytes: AtomicU64::new(bytes),
+                    });
+                }
+                Err(now) => cur = now,
+            }
+        }
+    }
+
+    /// Worst-case private KV bytes for a session decoding
+    /// `prompt_len + max_new` tokens with `prefix_rows` shared.
+    pub fn worst_case_session_bytes(&self, prompt_len: usize, max_new: usize,
+                                    prefix_rows: usize) -> u64 {
+        let total = (prompt_len + max_new).min(self.max_seq);
+        worst_case_kv_bytes(total, prefix_rows, self.cfg.page_rows,
+                            self.n_layers, self.d_model)
+    }
+
+    /// Memory admission for one request: find a shared prefix for
+    /// `prompt[..len-1]`, reserve the worst-case private footprint,
+    /// and hand back the grant — or `Err(needed_bytes)` when the
+    /// ceiling refuses (mapped to 503 + Retry-After by the serve
+    /// tier, or to a deferred queue slot by the batcher).
+    pub fn admit_session(&self, prompt: &[u32], max_new: usize)
+                         -> Result<SessionGrant, u64> {
+        let head = &prompt[..prompt.len().saturating_sub(1)];
+        let prefix = self.lookup_prefix(head);
+        let rows = prefix.as_ref().map(|p| p.rows).unwrap_or(0);
+        let needed = self.worst_case_session_bytes(prompt.len(), max_new,
+                                                   rows);
+        match self.try_reserve(needed) {
+            Some(reservation) => {
+                if prefix.is_some() {
+                    Metrics::inc(&self.metrics.kv_prefix_hits, 1);
+                }
+                Ok(SessionGrant { reservation, prefix })
+            }
+            None => {
+                Metrics::inc(&self.metrics.mem_admission_rejected, 1);
+                Err(needed)
+            }
+        }
+    }
+
+    /// Exact-match prefix lookup (hash key, token-equality verified).
+    pub fn lookup_prefix(&self, head: &[u32]) -> Option<Arc<SharedPrefix>> {
+        if head.len() < self.cfg.min_prefix_rows {
+            return None;
+        }
+        let g = self.prefixes.lock().unwrap();
+        g.get(&prefix_hash(head))
+            .filter(|(p, _)| p.tokens == head)
+            .map(|(p, _)| p.clone())
+    }
+
+    /// Whether publishing `head` would add a new shared prefix (long
+    /// enough, not already registered) — callers check before paying
+    /// the KV-row export copy.
+    pub fn wants_prefix(&self, head: &[u32]) -> bool {
+        head.len() >= self.cfg.min_prefix_rows
+            && self.lookup_prefix(head).is_none()
+    }
+
+    /// Publish a computed prompt prefix for CoW reuse. Reserves the
+    /// prefix's own bytes; skipped (false) when the budget has no
+    /// room, the prefix is too short, or another session won the race.
+    pub fn publish_prefix(&self, tokens: &[u32], k: Vec<Mat>, v: Vec<Mat>,
+                          importance: Vec<f32>) -> bool {
+        if tokens.len() < self.cfg.min_prefix_rows {
+            return false;
+        }
+        let rows = tokens.len();
+        let bytes =
+            2 * (rows * self.d_model * 4 * self.n_layers) as u64;
+        let Some(reservation) = self.try_reserve(bytes) else {
+            return false;
+        };
+        let key = prefix_hash(tokens);
+        let mut g = self.prefixes.lock().unwrap();
+        if g.contains_key(&key) {
+            return false; // racer won; reservation drops here
+        }
+        let prefix = Arc::new(SharedPrefix {
+            tokens: tokens.to_vec(),
+            k,
+            v,
+            rows,
+            importance,
+        });
+        g.insert(key, (prefix, reservation));
+        Metrics::inc(&self.metrics.kv_prefix_published, 1);
+        true
+    }
+
+    pub fn prefix_count(&self) -> usize {
+        self.prefixes.lock().unwrap().len()
+    }
+
+    /// Re-evaluate pressure and walk the ladder: engage every rung
+    /// whose threshold is met, disengage (with hysteresis) those no
+    /// longer needed, firing the reversible side effects through
+    /// `model.resolver`. Returns the active rung. Callers (the fused
+    /// batcher step, the engine between requests) invoke this
+    /// periodically; rung-3 KV down-quantization is applied by the
+    /// batcher to its live sessions when `tick` reports rung >= 3.
+    pub fn tick(&self, model: &MoeModel) -> u64 {
+        let pressure = self.pressure();
+        let cur = self.rung.load(Relaxed);
+        let engage = RUNG_UP
+            .iter()
+            .rposition(|&thr| pressure >= thr)
+            .map(|i| i as u64 + 1)
+            .unwrap_or(0);
+        let mut next = cur;
+        if engage > cur {
+            next = engage;
+        } else {
+            while next > 0
+                && pressure < RUNG_UP[next as usize - 1] - RUNG_HYSTERESIS
+            {
+                next -= 1;
+            }
+        }
+        if next != cur {
+            self.apply_rungs(cur, next, model);
+            self.rung.store(next, Relaxed);
+        }
+        Metrics::set_gauge(&self.metrics.mem_pressure_rung, next);
+        next
+    }
+
+    fn apply_rungs(&self, from: u64, to: u64, model: &MoeModel) {
+        if to > from {
+            for r in from + 1..=to {
+                match r {
+                    1 => {
+                        model.resolver.pause_prefetch(true);
+                        Metrics::inc(&self.metrics.mem_prefetch_pauses, 1);
+                    }
+                    2 => {
+                        model.resolver.shrink_budget(true);
+                        Metrics::inc(&self.metrics.mem_budget_shrinks, 1);
+                    }
+                    3 => self.evict_idle_prefixes(),
+                    _ => {} // rung 4: admission defers Low (batcher)
+                }
+            }
+        } else {
+            for r in (to + 1..=from).rev() {
+                match r {
+                    1 => model.resolver.pause_prefetch(false),
+                    2 => model.resolver.shrink_budget(false),
+                    _ => {} // rung 3/4 actions are admission/data-side
+                }
+            }
+        }
+    }
+
+    /// Drop shared prefixes nobody references (registry refcount only)
+    /// and return their bytes to the ledger.
+    pub fn evict_idle_prefixes(&self) -> usize {
+        let mut g = self.prefixes.lock().unwrap();
+        let before = g.len();
+        let page_rows = self.cfg.page_rows;
+        let n_layers = self.n_layers;
+        let mut pages_evicted = 0u64;
+        g.retain(|_, (p, _)| {
+            if Arc::strong_count(p) > 1 {
+                return true;
+            }
+            pages_evicted += (p.rows.div_ceil(page_rows) * n_layers) as u64;
+            false // the paired reservation drops with the entry
+        });
+        if pages_evicted > 0 {
+            Metrics::inc(&self.metrics.kv_pages_evicted, pages_evicted);
+        }
+        before - g.len()
+    }
+}
+
+/// Worst-case private page bytes for `total_rows` of context with
+/// `prefix_rows` shared: whole pages of `page_rows` rows, K + V f32,
+/// every layer.
+pub fn worst_case_kv_bytes(total_rows: usize, prefix_rows: usize,
+                           page_rows: usize, n_layers: usize, d: usize)
+                           -> u64 {
+    let tail = total_rows.saturating_sub(prefix_rows);
+    let pages = tail.div_ceil(page_rows.max(1));
+    (pages * page_rows * d * 4 * 2 * n_layers) as u64
+}
+
+/// Rough per-process scratch-arena bill: per batch slot, the
+/// attention scratch (transposed K panel + score row) plus the
+/// session's projection/logits buffers. An estimate, not an exact
+/// meter — it exists so the baseline reservation scales with the
+/// shapes the way `memmodel::peak_bytes_with` does.
+pub fn scratch_estimate_bytes(cfg: &ModelConfig, max_batch: usize) -> u64 {
+    let per = cfg.head_dim() * cfg.max_seq   // kht
+        + cfg.max_seq                        // score row
+        + 12 * cfg.d_model                   // projection buffers
+        + cfg.vocab_size;                    // logits
+    (max_batch.max(1) * per * 4) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ModelConfig;
+
+    fn gov(budget: u64) -> Arc<MemoryGovernor> {
+        let cfg = MemGovConfig {
+            budget_bytes: budget,
+            min_prefix_rows: 2,
+            ..MemGovConfig::default()
+        };
+        MemoryGovernor::new(cfg, &ModelConfig::test_tiny(), 0,
+                            Arc::new(Metrics::new()))
+    }
+
+    #[test]
+    fn reserve_release_rebalances_exactly() {
+        let g = gov(1000);
+        assert_eq!(g.bytes_reserved(), 0);
+        let a = g.try_reserve(400).unwrap();
+        let b = g.try_reserve(600).unwrap();
+        assert_eq!(g.bytes_reserved(), 1000);
+        assert!(g.try_reserve(1).is_none(), "ceiling is hard");
+        drop(a);
+        assert_eq!(g.bytes_reserved(), 600);
+        b.shrink(100);
+        assert_eq!(g.bytes_reserved(), 500);
+        b.shrink(10_000); // saturates at what's held
+        assert_eq!(g.bytes_reserved(), 0);
+        drop(b); // double release must not underflow
+        assert_eq!(g.bytes_reserved(), 0);
+    }
+
+    #[test]
+    fn worst_case_rounds_to_whole_pages() {
+        // 65 tail rows at 64-row pages -> 2 pages
+        let b = worst_case_kv_bytes(65, 0, 64, 2, 32);
+        assert_eq!(b, (2 * 64 * 32 * 4 * 2 * 2) as u64);
+        // fully covered by the prefix -> zero private pages
+        assert_eq!(worst_case_kv_bytes(10, 10, 64, 2, 32), 0);
+        assert_eq!(worst_case_kv_bytes(10, 64, 64, 2, 32), 0);
+    }
+
+    #[test]
+    fn admission_accounts_prefix_rows() {
+        let g = gov(1 << 30);
+        let prompt: Vec<u32> = (1..=20).collect();
+        let grant = g.admit_session(&prompt, 12).unwrap();
+        let full = g.worst_case_session_bytes(20, 12, 0);
+        assert_eq!(grant.reservation.bytes(), full);
+        assert!(grant.prefix.is_none());
+        // publish the head, then an identical prompt rides the prefix
+        let head = &prompt[..19];
+        let cfg = ModelConfig::test_tiny();
+        let mats = || (0..cfg.n_layers)
+            .map(|_| Mat::zeros(19, cfg.d_model))
+            .collect::<Vec<_>>();
+        assert!(g.wants_prefix(head));
+        assert!(g.publish_prefix(head, mats(), mats(), vec![0.0; 19]));
+        assert!(!g.wants_prefix(head), "already published");
+        let shared = g.admit_session(&prompt, 12).unwrap();
+        assert!(shared.prefix.is_some());
+        assert_eq!(shared.reservation.bytes(),
+                   g.worst_case_session_bytes(20, 12, 19));
+        assert!(shared.reservation.bytes() < full);
+    }
+
+    #[test]
+    fn prefix_eviction_frees_only_idle_entries() {
+        let g = gov(1 << 30);
+        let cfg = ModelConfig::test_tiny();
+        let mats = |rows: usize| (0..cfg.n_layers)
+            .map(|_| Mat::zeros(rows, cfg.d_model))
+            .collect::<Vec<_>>();
+        let head: Vec<u32> = (1..=10).collect();
+        assert!(g.publish_prefix(&head, mats(10), mats(10), vec![0.0; 10]));
+        let floor = g.baseline_bytes();
+        assert!(g.bytes_reserved() > floor, "prefix bytes are accounted");
+        // held by a session: survives eviction
+        let held = g.lookup_prefix(&head).unwrap();
+        assert_eq!(g.evict_idle_prefixes(), 0);
+        assert_eq!(g.prefix_count(), 1);
+        drop(held);
+        assert_eq!(g.evict_idle_prefixes(), 1);
+        assert_eq!(g.prefix_count(), 0);
+        assert_eq!(g.bytes_reserved(), floor,
+                   "evicted prefix returns its bytes");
+    }
+}

@@ -153,6 +153,31 @@ pub struct Metrics {
     pub streams_inflight: AtomicU64,
     /// gauge: duration of the most recent graceful drain (ns)
     pub last_drain_ns: AtomicU64,
+    // --- memory governor (coordinator::memgov, DESIGN.md §8) ---
+    /// sessions whose prompt head matched a published shared prefix
+    pub kv_prefix_hits: AtomicU64,
+    /// prompt prefixes published for copy-on-write reuse
+    pub kv_prefix_published: AtomicU64,
+    /// idle shared-prefix pages reclaimed at rung 3
+    pub kv_pages_evicted: AtomicU64,
+    /// KV pages down-quantized to f16 under pressure (rung 3)
+    pub kv_pages_downquantized: AtomicU64,
+    /// requests refused because the byte ceiling had no room
+    pub mem_admission_rejected: AtomicU64,
+    /// rung-1 engagements: speculative expert prefetch paused
+    pub mem_prefetch_pauses: AtomicU64,
+    /// rung-2 engagements: expert-cache budget halved
+    pub mem_budget_shrinks: AtomicU64,
+    /// rung-4 deferrals of Priority::Low admissions
+    pub mem_sessions_deferred: AtomicU64,
+    /// reservations failed by an injected `oom=P` fault
+    pub mem_oom_injected: AtomicU64,
+    /// gauge: bytes currently reserved against the memory budget
+    pub mem_bytes_reserved: AtomicU64,
+    /// gauge: the configured memory budget ceiling (bytes)
+    pub mem_budget_bytes: AtomicU64,
+    /// gauge: active degradation-ladder rung (0 = unconstrained)
+    pub mem_pressure_rung: AtomicU64,
 }
 
 impl Metrics {
@@ -255,7 +280,7 @@ impl Metrics {
         let ttft_ms = self.ttft_ns.lock().unwrap().mean() / 1e6;
         let stall_ms = self.miss_stall_ns.lock().unwrap().mean() / 1e6;
         let backend = self.kernel_backend_name();
-        format!(
+        let mut s = format!(
             "mc_requests_admitted {}\nmc_requests_completed {}\n\
              mc_requests_cancelled {}\nmc_requests_rejected {}\n\
              mc_tokens_generated {}\n\
@@ -301,7 +326,28 @@ impl Metrics {
             self.deadline_exceeded.load(Ordering::Relaxed),
             self.panics_recovered.load(Ordering::Relaxed),
             backend,
-        )
+        );
+        let _ = write!(s,
+            "mc_kv_prefix_hits {}\nmc_kv_prefix_published {}\n\
+             mc_kv_pages_evicted {}\nmc_kv_pages_downquantized {}\n\
+             mc_mem_admission_rejected {}\nmc_mem_prefetch_pauses {}\n\
+             mc_mem_budget_shrinks {}\nmc_mem_sessions_deferred {}\n\
+             mc_mem_oom_injected {}\nmc_mem_bytes_reserved {}\n\
+             mc_mem_budget_bytes {}\nmc_mem_pressure_rung {}\n",
+            self.kv_prefix_hits.load(Ordering::Relaxed),
+            self.kv_prefix_published.load(Ordering::Relaxed),
+            self.kv_pages_evicted.load(Ordering::Relaxed),
+            self.kv_pages_downquantized.load(Ordering::Relaxed),
+            self.mem_admission_rejected.load(Ordering::Relaxed),
+            self.mem_prefetch_pauses.load(Ordering::Relaxed),
+            self.mem_budget_shrinks.load(Ordering::Relaxed),
+            self.mem_sessions_deferred.load(Ordering::Relaxed),
+            self.mem_oom_injected.load(Ordering::Relaxed),
+            self.mem_bytes_reserved.load(Ordering::Relaxed),
+            self.mem_budget_bytes.load(Ordering::Relaxed),
+            self.mem_pressure_rung.load(Ordering::Relaxed),
+        );
+        s
     }
 
     /// Prometheus text exposition (content type
@@ -376,6 +422,33 @@ impl Metrics {
         counter("mc_panics_recovered",
                 "worker panics caught and turned into error responses",
                 self.panics_recovered.load(c));
+        counter("mc_kv_prefix_hits",
+                "sessions attached to a published shared prefix",
+                self.kv_prefix_hits.load(c));
+        counter("mc_kv_prefix_published",
+                "prompt prefixes published for copy-on-write reuse",
+                self.kv_prefix_published.load(c));
+        counter("mc_kv_pages_evicted",
+                "idle shared-prefix pages reclaimed under pressure",
+                self.kv_pages_evicted.load(c));
+        counter("mc_kv_pages_downquantized",
+                "KV pages down-quantized to f16 under pressure",
+                self.kv_pages_downquantized.load(c));
+        counter("mc_mem_admission_rejected",
+                "requests refused at the memory byte ceiling",
+                self.mem_admission_rejected.load(c));
+        counter("mc_mem_prefetch_pauses",
+                "rung-1 engagements pausing expert prefetch",
+                self.mem_prefetch_pauses.load(c));
+        counter("mc_mem_budget_shrinks",
+                "rung-2 engagements halving the expert-cache budget",
+                self.mem_budget_shrinks.load(c));
+        counter("mc_mem_sessions_deferred",
+                "rung-4 deferrals of low-priority admissions",
+                self.mem_sessions_deferred.load(c));
+        counter("mc_mem_oom_injected",
+                "reservations failed by an injected oom fault",
+                self.mem_oom_injected.load(c));
 
         let mut gauge = |name: &str, help: &str, v: f64| {
             let _ = write!(out,
@@ -401,6 +474,14 @@ impl Metrics {
               self.cache_hit_rate());
         gauge("mc_expert_prefetch_hit_rate", "prefetch usefulness fraction",
               self.prefetch_hit_rate());
+        gauge("mc_mem_bytes_reserved",
+              "bytes reserved against the memory budget",
+              self.mem_bytes_reserved.load(c) as f64);
+        gauge("mc_mem_budget_bytes", "configured memory budget ceiling",
+              self.mem_budget_bytes.load(c) as f64);
+        gauge("mc_mem_pressure_rung",
+              "active degradation-ladder rung (0 = unconstrained)",
+              self.mem_pressure_rung.load(c) as f64);
 
         let mut summary = |name: &str, help: &str, ring: &LatencyRing| {
             let _ = write!(out,
@@ -548,6 +629,31 @@ mod tests {
         // every HELP has a matching TYPE
         assert_eq!(text.matches("# HELP").count(),
                    text.matches("# TYPE").count());
+    }
+
+    #[test]
+    fn memory_governor_series_render() {
+        let m = Metrics::new();
+        Metrics::inc(&m.kv_prefix_hits, 3);
+        Metrics::inc(&m.kv_pages_downquantized, 7);
+        Metrics::inc(&m.mem_admission_rejected, 2);
+        Metrics::inc(&m.mem_oom_injected, 1);
+        Metrics::set_gauge(&m.mem_bytes_reserved, 4096);
+        Metrics::set_gauge(&m.mem_budget_bytes, 8192);
+        Metrics::set_gauge(&m.mem_pressure_rung, 2);
+        let text = m.render_text();
+        assert!(text.contains("mc_kv_prefix_hits 3"), "{text}");
+        assert!(text.contains("mc_kv_pages_downquantized 7"));
+        assert!(text.contains("mc_mem_bytes_reserved 4096"));
+        assert!(text.contains("mc_mem_pressure_rung 2"));
+        let prom = m.render_prometheus();
+        assert!(prom.contains("# TYPE mc_kv_prefix_hits counter"));
+        assert!(prom.contains("mc_mem_admission_rejected 2"));
+        assert!(prom.contains("mc_mem_oom_injected 1"));
+        assert!(prom.contains("# TYPE mc_mem_pressure_rung gauge"));
+        assert!(prom.contains("mc_mem_budget_bytes 8192"));
+        assert_eq!(prom.matches("# HELP").count(),
+                   prom.matches("# TYPE").count());
     }
 
     #[test]

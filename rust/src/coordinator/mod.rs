@@ -16,6 +16,7 @@
 pub mod batcher;
 pub mod decode;
 pub mod engine;
+pub mod memgov;
 pub mod memmodel;
 pub mod metrics;
 pub mod request;
@@ -27,6 +28,9 @@ pub use decode::{
     step_many, step_many_into, DecodeOdp, DecodeSession, StepScratch,
 };
 pub use engine::McEngine;
+pub use memgov::{
+    MemGovConfig, MemReservation, MemoryGovernor, SessionGrant,
+};
 pub use memmodel::{Platform, PLATFORMS};
 pub use metrics::Metrics;
 pub use request::{

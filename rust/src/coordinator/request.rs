@@ -95,6 +95,14 @@ pub struct GenerateRequest {
     /// wall-clock budget measured from admission; `None` defers to the
     /// server's configured default (which may also be unlimited)
     pub deadline: Option<Duration>,
+    /// Memory-governor grant (reservation + optional shared prefix)
+    /// attached by whoever admitted the request — the HTTP front end
+    /// reserves at the connection layer so over-budget requests 503
+    /// before touching the batcher; paths that skip it leave `None`
+    /// and the batcher reserves at admission instead. `Arc` because
+    /// requests are `Clone`; the underlying reservation releases when
+    /// the last holder (the retired session) drops.
+    pub grant: Option<Arc<crate::coordinator::memgov::SessionGrant>>,
 }
 
 impl GenerateRequest {

@@ -18,6 +18,7 @@ use crate::moe::model::MoeModel;
 
 use super::batcher::Batcher;
 use super::decode::DecodeOdp;
+use super::memgov::MemoryGovernor;
 use super::metrics::Metrics;
 use super::request::{
     request_channel, Completion, FinishReason, GenerateRequest,
@@ -42,6 +43,11 @@ pub struct ServerConfig {
     pub stall_budget: Duration,
     /// watchdog scan interval
     pub watchdog_poll: Duration,
+    /// memory-governor byte ceiling (`--mem-budget-mb`); `None` falls
+    /// back to `MC_MEM_BUDGET_MB`, then to the derived worst-case
+    /// default that keeps unconstrained runs below the first rung
+    /// (DESIGN.md §8)
+    pub mem_budget: Option<u64>,
 }
 
 impl Default for ServerConfig {
@@ -51,6 +57,7 @@ impl Default for ServerConfig {
             default_deadline: None,
             stall_budget: Duration::from_secs(30),
             watchdog_poll: Duration::from_millis(5),
+            mem_budget: None,
         }
     }
 }
@@ -81,6 +88,9 @@ pub struct Server {
     default_deadline: Option<Duration>,
     next_id: AtomicU64,
     pub metrics: Arc<Metrics>,
+    /// memory governor shared with the worker's batcher; front ends
+    /// reserve session footprints here before submitting (503 path)
+    governor: Arc<MemoryGovernor>,
     /// submitted-but-unfinished estimate: bumped on `submit`, snapped
     /// to `batcher.pending()` every worker iteration. Front ends use
     /// it as a queue-pressure signal without waiting a step.
@@ -110,10 +120,28 @@ impl Server {
         let pending_hint = Arc::new(AtomicU64::new(0));
         let hint = pending_hint.clone();
         let default_deadline = cfg.default_deadline;
+        // every byte-sized allocation class — expert residency budget,
+        // fused-step scratch arenas, per-session KV pages — accounts
+        // against this one ceiling (DESIGN.md §8)
+        let budget_override = cfg.mem_budget.or_else(|| {
+            std::env::var("MC_MEM_BUDGET_MB")
+                .ok()
+                .and_then(|s| s.trim().parse::<u64>().ok())
+                .map(|mb| mb << 20)
+        });
+        let governor = MemoryGovernor::for_model(
+            &model.cfg,
+            model.resolver.budget_bytes(),
+            cfg.max_batch,
+            budget_override,
+            metrics.clone(),
+        );
+        let gov2 = governor.clone();
         let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
         let worker = std::thread::spawn(move || {
             let mut batcher = Batcher::new(model, odp, cfg.max_batch);
             batcher.set_default_deadline(default_deadline);
+            batcher.set_governor(gov2);
             let mut shutdown = false;
             loop {
                 // drain the mailbox (block only when idle)
@@ -220,8 +248,16 @@ impl Server {
             default_deadline,
             next_id: AtomicU64::new(1),
             metrics,
+            governor,
             pending_hint,
         }
+    }
+
+    /// The memory governor shared with the batcher: front ends consult
+    /// it for admission (worst-case reservation before `submit`) and
+    /// expose its pressure/rung gauges.
+    pub fn governor(&self) -> &Arc<MemoryGovernor> {
+        &self.governor
     }
 
     /// Submit a request; the handle streams `Token` events as the
@@ -378,6 +414,7 @@ mod tests {
             default_deadline: Some(Duration::from_millis(10)),
             stall_budget: Duration::from_millis(10),
             watchdog_poll: Duration::from_millis(1),
+            mem_budget: None,
         };
         let mut server = Server::spawn_cfg(model, None, cfg);
         // kill the worker under the watchdog's feet

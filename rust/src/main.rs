@@ -10,7 +10,7 @@
 //!             [--max-conns 256] [--max-streams-per-tenant 32]
 //!             [--shed-queue-depth 64] [--timeout-ms 0] [--odp]
 //!             [--load m.mcqz] [--expert-budget-mb 8]
-//!             [--prefetch off|sync|async]
+//!             [--mem-budget-mb 0] [--prefetch off|sync|async]
 //!             (no --port: legacy in-process synthetic load,
 //!              [--requests 16] [--max-new 24])
 //!   generate  [--task 3] [--max-new 16] [--timeout-ms 0] [--odp]
@@ -29,6 +29,13 @@
 //! `.mcqz` v2 file, and `--prefetch` picks how predicted experts are
 //! brought in (default `async`).
 //!
+//! `--mem-budget-mb <MiB>` caps the memory governor's byte ceiling
+//! (DESIGN.md §8): KV pages, the expert residency budget, and scratch
+//! arenas all account against it; over-budget requests get 503 +
+//! Retry-After, and sustained pressure walks a reversible degradation
+//! ladder instead of OOMing. 0/absent derives a worst-case default
+//! (the `MC_MEM_BUDGET_MB` env var also works).
+//!
 //! `--kernel-backend <scalar|avx2|avx512|neon>` (any subcommand) pins
 //! the SIMD kernel dispatch table instead of auto-detecting the widest
 //! ISA the CPU supports; the `MC_KERNEL` env var does the same
@@ -40,7 +47,10 @@ use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 use mc_moe::config::{artifacts_dir, ModelConfig, TASK_NAMES};
-use mc_moe::coordinator::{memmodel, GenerateRequest, SamplingParams, Server};
+use mc_moe::coordinator::{
+    memmodel, GenerateRequest, MemoryGovernor, SamplingParams, Server,
+    ServerConfig,
+};
 use mc_moe::data::{calibration_set, Split};
 use mc_moe::eval::{eval_cot_chain, eval_niah_grid, eval_suite, perplexity};
 use mc_moe::moe::{MoeModel, WeightFile};
@@ -65,6 +75,20 @@ fn expert_budget_bytes(args: &Args) -> Result<Option<usize>> {
         return Ok(None);
     }
     Ok(Some((mb * (1 << 20) as f64) as usize))
+}
+
+/// `--mem-budget-mb` as the memory governor's byte ceiling (None when
+/// absent or zero → the `MC_MEM_BUDGET_MB` env var, then the derived
+/// worst-case default; DESIGN.md §8).
+fn mem_budget_bytes(args: &Args) -> Result<Option<u64>> {
+    let mb = args.f64_or("mem-budget-mb", 0.0)?;
+    if mb < 0.0 {
+        bail!("--mem-budget-mb must be positive, got {mb}");
+    }
+    if mb == 0.0 {
+        return Ok(None);
+    }
+    Ok(Some((mb * (1 << 20) as f64) as u64))
 }
 
 /// `--timeout-ms` as a per-request deadline (None when absent or 0).
@@ -312,14 +336,22 @@ fn cmd_serve_http(model: mc_moe::moe::MoeModel, args: &Args) -> Result<()> {
         default_timeout: timeout_from(args)?,
         ..defaults
     };
-    let engine = Server::spawn(Arc::new(model), odp, cfg.max_batch);
+    let engine = Server::spawn_cfg(
+        Arc::new(model), odp,
+        ServerConfig {
+            max_batch: cfg.max_batch,
+            mem_budget: mem_budget_bytes(args)?,
+            ..Default::default()
+        });
+    let budget_mb = engine.governor().budget_bytes() as f64
+        / (1 << 20) as f64;
     drain::install_sigterm_hook();
     let http = HttpServer::bind(engine, cfg.clone())?;
     println!(
         "mc-moe serving on http://{}  (batch={} max-conns={} \
-         tenant-cap={} shed-depth={})",
+         tenant-cap={} shed-depth={} mem-budget={:.1}MiB)",
         http.addr(), cfg.max_batch, cfg.max_conns,
-        cfg.max_streams_per_tenant, cfg.shed_queue_depth);
+        cfg.max_streams_per_tenant, cfg.shed_queue_depth, budget_mb);
     println!("  POST /v1/generate   GET /healthz   GET /metrics   \
               POST /admin/drain");
     let metrics = http.metrics();
@@ -340,7 +372,13 @@ fn cmd_serve(dir: &Path, args: &Args) -> Result<()> {
     let n_req = args.usize_or("requests", 16)?;
     let batch = args.usize_or("batch", 4)?;
     let max_new = args.usize_or("max-new", 24)?;
-    let server = Server::spawn(Arc::new(model), odp, batch);
+    let server = Server::spawn_cfg(
+        Arc::new(model), odp,
+        ServerConfig {
+            max_batch: batch,
+            mem_budget: mem_budget_bytes(args)?,
+            ..Default::default()
+        });
     let mut rng = mc_moe::util::rng::Rng::new(99);
     let t0 = std::time::Instant::now();
     let handles: Vec<_> = (0..n_req)
@@ -368,7 +406,14 @@ fn cmd_serve(dir: &Path, args: &Args) -> Result<()> {
 fn cmd_generate(dir: &Path, args: &Args) -> Result<()> {
     let model = load_serving_model(dir, args)?;
     let decode_odp = decode_odp_for(&model, args);
-    let engine = mc_moe::coordinator::McEngine::new(model, None, decode_odp);
+    let mut engine =
+        mc_moe::coordinator::McEngine::new(model, None, decode_odp);
+    if let Some(budget) = mem_budget_bytes(args)? {
+        let gov = MemoryGovernor::for_model(
+            &engine.model.cfg, engine.model.resolver.budget_bytes(), 1,
+            Some(budget), engine.metrics.clone());
+        engine.set_governor(gov);
+    }
     let task = args.usize_or("task", 3)?;
     let mut rng = mc_moe::util::rng::Rng::new(args.usize_or("seed", 5)? as u64);
     let seq = mc_moe::data::try_task_sequence(&mut rng, task)

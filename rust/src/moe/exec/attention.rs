@@ -24,6 +24,8 @@ use crate::kernels::{self, KernelOps};
 use crate::tensor::{softmax_rows_ops, Mat};
 use crate::util::pool::{SendPtr, WorkerPool};
 
+use super::kvcache::KvView;
+
 pub const NEG_INF: f32 = -1e30;
 
 /// Head-work volume (t·klen·d) below which the pool is not engaged.
@@ -45,6 +47,8 @@ pub struct AttnOut {
 pub struct AttnScratch {
     kht: Vec<f32>,
     scores: Mat,
+    /// one-row dequant buffer for f16 KV pages (paged path only)
+    dq: Vec<f32>,
 }
 
 impl AttnScratch {
@@ -57,6 +61,7 @@ impl AttnScratch {
     pub fn reserve(&mut self, head_dim: usize, max_klen: usize) {
         self.kht.reserve(head_dim * max_klen);
         self.scores.data.reserve(max_klen);
+        self.dq.resize(head_dim, 0.0);
     }
 }
 
@@ -243,6 +248,139 @@ fn one_head(
     }
 }
 
+/// [`causal_attention_into`] over a paged two-segment KV view
+/// (shared prefix + private pages, `exec::kvcache`) instead of flat
+/// K/V Mats. Numerics are identical — `one_head_paged` is `one_head`
+/// with the two row reads swapped for `KvView` resolution — so f32
+/// pages are bit-exact with the flat kernel; f16 pages dequantize per
+/// row through the scratch buffer. Same pooling/`want_map` contract.
+#[allow(clippy::too_many_arguments)]
+pub fn causal_attention_paged_into(
+    q: &Mat,
+    kv: &KvView<'_>,
+    klen: usize,
+    n_heads: usize,
+    want_map: bool,
+    pool: Option<&WorkerPool>,
+    scratch: &mut AttnScratch,
+    out: &mut Mat,
+) -> Option<Mat> {
+    let ops = kernels::active();
+    let t = q.rows;
+    let d = q.cols;
+    assert!(t >= 1 && klen >= t, "bad attention window: T={t} klen={klen}");
+    assert!(kv.rows() >= klen, "paged KV shorter than klen");
+    assert_eq!(d, kv.d, "KV view width mismatch");
+    assert_eq!(d % n_heads, 0);
+    let hd = d / n_heads;
+    let pos0 = klen - t;
+    assert!(!want_map || pos0 == 0, "Eq.-6 map needs the full sequence");
+    let scale = 1.0 / (hd as f32).sqrt();
+
+    out.resize_to(t, d);
+    out.data.fill(0.0);
+    let outbase = SendPtr(out.data.as_mut_ptr());
+
+    let pooled = match pool {
+        Some(p)
+            if !want_map
+                && n_heads >= 2
+                && p.width() > 1
+                && t * klen * d >= ATTN_PAR_MIN_WORK
+                && !WorkerPool::on_worker() =>
+        {
+            Some(p)
+        }
+        _ => None,
+    };
+    if let Some(p) = pooled {
+        p.for_each(n_heads, move |head| {
+            // per-head buffers: prefill/scoring scale, outside the
+            // zero-alloc decode contract (mirrors the flat kernel)
+            let mut kht = Vec::new();
+            let mut scores = Mat::zeros(0, 0);
+            let mut dq = vec![0.0f32; hd];
+            one_head_paged(q, kv, klen, pos0, head * hd, hd, scale, &mut kht,
+                           &mut scores, &mut dq, outbase, d, ops);
+        });
+        return None;
+    }
+
+    scratch.dq.resize(hd, 0.0);
+    let mut a_mean = if want_map { Some(Mat::zeros(t, t)) } else { None };
+    for head in 0..n_heads {
+        one_head_paged(q, kv, klen, pos0, head * hd, hd, scale,
+                       &mut scratch.kht, &mut scratch.scores, &mut scratch.dq,
+                       outbase, d, ops);
+        if let Some(am) = a_mean.as_mut() {
+            for (a, sc) in am.data.iter_mut().zip(&scratch.scores.data) {
+                *a += sc / n_heads as f32;
+            }
+        }
+    }
+    a_mean
+}
+
+/// [`one_head`] reading K/V rows through a paged [`KvView`]: only the
+/// two row reads differ, keeping every accumulation order identical.
+#[allow(clippy::too_many_arguments)]
+fn one_head_paged(
+    q: &Mat,
+    kv: &KvView<'_>,
+    klen: usize,
+    pos0: usize,
+    c0: usize,
+    hd: usize,
+    scale: f32,
+    kht: &mut Vec<f32>,
+    scores: &mut Mat,
+    dq: &mut [f32],
+    outbase: SendPtr<f32>,
+    d: usize,
+    ops: &'static KernelOps,
+) {
+    let t = q.rows;
+    kht.resize(hd * klen, 0.0);
+    for j in 0..klen {
+        let krow = kv.k_slice(j, c0, hd, dq);
+        for (dd, &kvv) in krow.iter().enumerate() {
+            kht[dd * klen + j] = kvv;
+        }
+    }
+    scores.resize_to(t, klen);
+    scores.data.fill(0.0);
+    for i in 0..t {
+        let limit = pos0 + i; // last key this query may attend to
+        let qrow = &q.row(i)[c0..c0 + hd];
+        let srow = &mut scores.data[i * klen..(i + 1) * klen];
+        for (dd, &qv) in qrow.iter().enumerate() {
+            let kr = &kht[dd * klen..dd * klen + limit + 1];
+            (ops.axpy)(&mut srow[..=limit], kr, qv);
+        }
+        (ops.vscale)(&mut srow[..=limit], scale);
+        for sv in srow[limit + 1..].iter_mut() {
+            *sv = NEG_INF;
+        }
+    }
+    softmax_rows_ops(scores, ops);
+    // out[:, c0..c0+hd] += scores @ v[:, c0..c0+hd]
+    for i in 0..t {
+        let limit = pos0 + i;
+        // Safety: each head owns columns [c0, c0+hd) exclusively.
+        let orow = unsafe {
+            std::slice::from_raw_parts_mut(outbase.0.add(i * d + c0), hd)
+        };
+        for j in 0..=limit {
+            let a = scores.data[i * klen + j];
+            if a == 0.0 {
+                continue;
+            }
+            let vrow = kv.v_slice(j, c0, hd, dq);
+            (ops.axpy)(orow, vrow, a);
+        }
+    }
+}
+
 /// Eq. 6: I_j = ||t_j||_1 * mean_{i >= j} A[i, j] (head-averaged A).
 pub fn eq6_importance(h: &Mat, a_mean: &Mat) -> Vec<f32> {
     let s = h.rows;
@@ -346,6 +484,85 @@ mod tests {
         assert_eq!(scratch.scores.data.as_ptr(), sp);
         assert_eq!(out.data.as_ptr(), op);
         assert_eq!(out.data, first.data);
+    }
+
+    fn pages_from(k: &Mat, v: &Mat, rows: usize, page_rows: usize)
+                  -> Vec<super::super::kvcache::KvPage> {
+        use super::super::kvcache::KvPage;
+        let d = k.cols;
+        let n_pages = rows.div_ceil(page_rows);
+        let mut pages: Vec<KvPage> =
+            (0..n_pages).map(|_| KvPage::new_f32(page_rows, d)).collect();
+        for r in 0..rows {
+            pages[r / page_rows].write_row(r % page_rows, d, k.row(r),
+                                           v.row(r));
+        }
+        pages
+    }
+
+    #[test]
+    fn paged_f32_bit_matches_flat() {
+        // same values through pages (including a ragged last page)
+        // must give bit-identical output and map to the flat kernel
+        let (s, d, nh) = (13, 8, 2);
+        let (q, k, v) = qkv(7, s, d);
+        let mut scratch = AttnScratch::new();
+        let mut flat = Mat::zeros(0, 0);
+        let am_flat = causal_attention_into(&q, &k, &v, s, nh, true, None,
+                                            &mut scratch, &mut flat);
+        let pages = pages_from(&k, &v, s, 4);
+        let view = KvView {
+            prefix: None,
+            prefix_rows: 0,
+            pages: &pages,
+            page_rows: 4,
+            d,
+            layer: 0,
+        };
+        let mut paged = Mat::zeros(0, 0);
+        let am_paged = causal_attention_paged_into(&q, &view, s, nh, true,
+                                                   None, &mut scratch,
+                                                   &mut paged);
+        assert_eq!(flat.data, paged.data, "paged f32 must be bit-exact");
+        assert_eq!(am_flat.unwrap().data, am_paged.unwrap().data);
+        // decode shape: single appended query against the full window
+        let qi = q.slice_rows(s - 1, s);
+        let mut flat1 = Mat::zeros(0, 0);
+        causal_attention_into(&qi, &k, &v, s, nh, false, None, &mut scratch,
+                              &mut flat1);
+        let mut paged1 = Mat::zeros(0, 0);
+        causal_attention_paged_into(&qi, &view, s, nh, false, None,
+                                    &mut scratch, &mut paged1);
+        assert_eq!(flat1.data, paged1.data);
+    }
+
+    #[test]
+    fn paged_f16_stays_close_to_flat() {
+        let (s, d, nh) = (12, 8, 2);
+        let (q, k, v) = qkv(8, s, d);
+        let mut scratch = AttnScratch::new();
+        let mut flat = Mat::zeros(0, 0);
+        causal_attention_into(&q, &k, &v, s, nh, false, None, &mut scratch,
+                              &mut flat);
+        let mut pages = pages_from(&k, &v, s, 4);
+        for p in pages.iter_mut() {
+            assert!(p.quantize() > 0);
+        }
+        let view = KvView {
+            prefix: None,
+            prefix_rows: 0,
+            pages: &pages,
+            page_rows: 4,
+            d,
+            layer: 0,
+        };
+        let mut paged = Mat::zeros(0, 0);
+        causal_attention_paged_into(&q, &view, s, nh, false, None,
+                                    &mut scratch, &mut paged);
+        for (a, b) in paged.data.iter().zip(&flat.data) {
+            assert!((a - b).abs() < 5e-3 * (1.0 + b.abs()),
+                    "f16 pages drifted: {a} vs {b}");
+        }
     }
 
     #[test]

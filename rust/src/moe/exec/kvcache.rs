@@ -1,0 +1,342 @@
+//! Block-granular paged KV storage (DESIGN.md §8): a session's KV
+//! cache is a list of fixed-size pages grown on demand instead of one
+//! flat `[max_seq, D]` buffer reserved up front, plus an optional
+//! shared read-only prefix segment (copy-on-write prompt sharing —
+//! the prefix Mats are owned by an `Arc` the sessions only read, and
+//! a session's own writes always land in its private pages).
+//!
+//! Pages store f32 by default and are bit-exact with the flat layout;
+//! under memory pressure the governor down-quantizes whole pages to
+//! f16 (`KvPage::quantize`) — rows are dequantized on read through
+//! [`KvView::k_slice`]/[`KvView::v_slice`], trading bounded precision
+//! for half the page bytes. The f32↔f16 conversion is hand-rolled
+//! (round-to-nearest-even, subnormals flushed to zero): no half crate
+//! in the offline image.
+
+use std::sync::Arc;
+
+use crate::tensor::Mat;
+
+/// Rows per KV page. 64 keeps the whole `test_tiny` window (max_seq
+/// 64) in one page, so the zero-allocation decode contract of
+/// `tests/zero_alloc.rs` holds without growth inside a measured run.
+pub const DEFAULT_PAGE_ROWS: usize = 64;
+
+/// f32 -> f16 bits, round-to-nearest-even; out-of-range saturates to
+/// ±inf, subnormal results flush to zero.
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 0xff {
+        // inf / nan
+        let m = if mant != 0 { 0x0200 } else { 0 };
+        return sign | 0x7c00 | m;
+    }
+    let e16 = exp - 127 + 15;
+    if e16 >= 0x1f {
+        return sign | 0x7c00; // overflow -> inf
+    }
+    if e16 <= 0 {
+        return sign; // subnormal (or underflow): flush to zero
+    }
+    // round mantissa 23 -> 10 bits, ties to even
+    let mant16 = mant >> 13;
+    let rest = mant & 0x1fff;
+    let halfway = 0x1000;
+    let mut out = (sign as u32) | ((e16 as u32) << 10) | mant16;
+    if rest > halfway || (rest == halfway && (mant16 & 1) == 1) {
+        out += 1; // carries ripple into the exponent correctly
+    }
+    out as u16
+}
+
+/// f16 bits -> f32 (subnormals decode to zero, matching the encoder).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h as u32) & 0x8000) << 16;
+    let exp = ((h >> 10) & 0x1f) as u32;
+    let mant = (h & 0x3ff) as u32;
+    let bits = match exp {
+        0 => sign, // zero / flushed subnormal
+        0x1f => sign | 0x7f80_0000 | (mant << 13),
+        _ => sign | ((exp + 127 - 15) << 23) | (mant << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// One page's payload for K or V: full precision, or down-quantized
+/// to f16 by the memory governor's rung-3 action.
+#[derive(Debug, Clone)]
+pub enum PageData {
+    F32(Vec<f32>),
+    F16(Vec<u16>),
+}
+
+impl PageData {
+    fn bytes(&self) -> usize {
+        match self {
+            PageData::F32(v) => v.len() * 4,
+            PageData::F16(v) => v.len() * 2,
+        }
+    }
+
+    fn quantize(&mut self) -> usize {
+        if let PageData::F32(v) = self {
+            let saved = v.len() * 2;
+            let q: Vec<u16> = v.iter().map(|&x| f32_to_f16_bits(x)).collect();
+            *self = PageData::F16(q);
+            saved
+        } else {
+            0
+        }
+    }
+}
+
+/// One fixed-size KV page: `page_rows` rows of K and V, row-major.
+#[derive(Debug, Clone)]
+pub struct KvPage {
+    pub k: PageData,
+    pub v: PageData,
+}
+
+impl KvPage {
+    pub fn new_f32(page_rows: usize, d: usize) -> KvPage {
+        KvPage {
+            k: PageData::F32(vec![0.0; page_rows * d]),
+            v: PageData::F32(vec![0.0; page_rows * d]),
+        }
+    }
+
+    pub fn is_quantized(&self) -> bool {
+        matches!(self.k, PageData::F16(_))
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.k.bytes() + self.v.bytes()
+    }
+
+    /// Down-quantize both planes to f16 in place; returns bytes freed
+    /// (0 when already quantized).
+    pub fn quantize(&mut self) -> usize {
+        self.k.quantize() + self.v.quantize()
+    }
+
+    /// Write one row (f32). The target page must still be full
+    /// precision — the governor only quantizes fully-written pages,
+    /// and rows are append-only, so this cannot race a quantize.
+    pub fn write_row(&mut self, offset: usize, d: usize, krow: &[f32],
+                     vrow: &[f32]) {
+        let (PageData::F32(k), PageData::F32(v)) = (&mut self.k, &mut self.v)
+        else {
+            panic!("KV write into a down-quantized page");
+        };
+        k[offset * d..offset * d + d].copy_from_slice(krow);
+        v[offset * d..offset * d + d].copy_from_slice(vrow);
+    }
+}
+
+/// A read-only shared prompt prefix: the first `rows` KV rows of every
+/// layer, published once and attached by any session whose prompt
+/// starts with the same tokens. Sessions never write into it (their
+/// rows land in private pages at positions >= `rows`), which is the
+/// copy-on-write discipline — identical system prompts share one copy.
+#[derive(Debug)]
+pub struct SharedPrefix {
+    pub tokens: Vec<u32>,
+    /// per-layer [rows, D] K / V
+    pub k: Vec<Mat>,
+    pub v: Vec<Mat>,
+    pub rows: usize,
+    /// Eq.-6 token importance of the prefix positions (absolute).
+    pub importance: Vec<f32>,
+}
+
+/// Borrowed two-segment view of one layer's KV for the attention
+/// kernel: optional shared prefix Mats, then the session's private
+/// pages. Row `r` resolves to the prefix when `r < prefix_rows`, else
+/// to page `(r - prefix_rows) / page_rows`.
+pub struct KvView<'a> {
+    pub prefix: Option<&'a SharedPrefix>,
+    pub prefix_rows: usize,
+    pub pages: &'a [KvPage],
+    pub page_rows: usize,
+    pub d: usize,
+    pub layer: usize,
+}
+
+impl<'a> KvView<'a> {
+    /// Rows addressable through this view.
+    pub fn rows(&self) -> usize {
+        self.prefix_rows + self.pages.len() * self.page_rows
+    }
+
+    /// `&k[r][c0..c0+hd]`, dequantizing into `buf` when the row lives
+    /// in an f16 page. The returned slice borrows either the backing
+    /// storage (f32: bit-exact, zero-copy) or `buf`.
+    #[inline]
+    pub fn k_slice<'b>(&'b self, r: usize, c0: usize, hd: usize,
+                       buf: &'b mut [f32]) -> &'b [f32] {
+        self.plane_slice(r, c0, hd, buf, true)
+    }
+
+    /// `&v[r][c0..c0+hd]`; see [`KvView::k_slice`].
+    #[inline]
+    pub fn v_slice<'b>(&'b self, r: usize, c0: usize, hd: usize,
+                       buf: &'b mut [f32]) -> &'b [f32] {
+        self.plane_slice(r, c0, hd, buf, false)
+    }
+
+    #[inline]
+    fn plane_slice<'b>(&'b self, r: usize, c0: usize, hd: usize,
+                       buf: &'b mut [f32], want_k: bool) -> &'b [f32] {
+        if r < self.prefix_rows {
+            let p = self.prefix.expect("prefix row without a prefix");
+            let m = if want_k { &p.k[self.layer] } else { &p.v[self.layer] };
+            return &m.row(r)[c0..c0 + hd];
+        }
+        let local = r - self.prefix_rows;
+        let page = &self.pages[local / self.page_rows];
+        let off = (local % self.page_rows) * self.d + c0;
+        let data = if want_k { &page.k } else { &page.v };
+        match data {
+            PageData::F32(v) => &v[off..off + hd],
+            PageData::F16(v) => {
+                for (dst, &h) in buf[..hd].iter_mut().zip(&v[off..off + hd]) {
+                    *dst = f16_bits_to_f32(h);
+                }
+                &buf[..hd]
+            }
+        }
+    }
+}
+
+/// Stable 64-bit hash of a token prefix (splitmix64 over the ids) —
+/// the prefix-registry key. Collisions are handled by token-equality
+/// checks at lookup, never trusted from the hash alone.
+pub fn prefix_hash(tokens: &[u32]) -> u64 {
+    let mut h = 0x9e37_79b9_7f4a_7c15u64 ^ (tokens.len() as u64);
+    for &t in tokens {
+        h ^= t as u64;
+        h = h.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        let mut z = h;
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        h = z ^ (z >> 31);
+    }
+    h
+}
+
+/// Shared-prefix handle as stored by sessions.
+pub type PrefixRef = Arc<SharedPrefix>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_roundtrip_is_close_and_special_cases_hold() {
+        for &x in &[0.0f32, -0.0, 1.0, -1.0, 0.5, 1e-3, 3.14159, -2.7e4] {
+            let y = f16_bits_to_f32(f32_to_f16_bits(x));
+            assert!((x - y).abs() <= 1e-3 * (1.0 + x.abs()),
+                    "{x} -> {y}");
+        }
+        // exact halves survive exactly
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(0.25)), 0.25);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(-6.5)), -6.5);
+        // overflow saturates to inf, subnormals flush to zero
+        assert!(f16_bits_to_f32(f32_to_f16_bits(1e9)).is_infinite());
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(1e-9)), 0.0);
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn f16_rounds_to_nearest_even() {
+        // 1 + 2^-11 sits exactly between two f16 mantissa steps; RNE
+        // keeps the even (lower) one
+        let x = 1.0f32 + (2.0f32).powi(-11);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(x)), 1.0);
+        // 1 + 3*2^-11 ties up to the even above
+        let y = 1.0f32 + 3.0 * (2.0f32).powi(-11);
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(y)),
+                   1.0 + (2.0f32).powi(-9));
+    }
+
+    #[test]
+    fn page_write_read_roundtrip_and_quantize() {
+        let (rows, d) = (4, 8);
+        let mut page = KvPage::new_f32(rows, d);
+        let krow: Vec<f32> = (0..d).map(|i| i as f32 * 0.5).collect();
+        let vrow: Vec<f32> = (0..d).map(|i| -(i as f32)).collect();
+        page.write_row(2, d, &krow, &vrow);
+        assert_eq!(page.bytes(), 2 * rows * d * 4);
+        let view = KvView {
+            prefix: None,
+            prefix_rows: 0,
+            pages: std::slice::from_ref(&page),
+            page_rows: rows,
+            d,
+            layer: 0,
+        };
+        let mut buf = vec![0.0f32; d];
+        assert_eq!(view.k_slice(2, 0, d, &mut buf), &krow[..]);
+        assert_eq!(view.v_slice(2, 2, 4, &mut buf), &vrow[2..6]);
+        // quantize halves the bytes; reads stay close
+        let mut page = page;
+        let saved = page.quantize();
+        assert_eq!(saved, 2 * rows * d * 2);
+        assert!(page.is_quantized());
+        assert_eq!(page.quantize(), 0, "second quantize is a no-op");
+        let view = KvView {
+            prefix: None,
+            prefix_rows: 0,
+            pages: std::slice::from_ref(&page),
+            page_rows: rows,
+            d,
+            layer: 0,
+        };
+        for (a, b) in view.k_slice(2, 0, d, &mut buf).iter().zip(&krow) {
+            assert!((a - b).abs() <= 1e-3 * (1.0 + b.abs()));
+        }
+    }
+
+    #[test]
+    fn view_resolves_prefix_then_pages() {
+        let d = 4;
+        let mut pk = Mat::zeros(2, d);
+        let mut pv = Mat::zeros(2, d);
+        pk.row_mut(1).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        pv.row_mut(1).copy_from_slice(&[5.0, 6.0, 7.0, 8.0]);
+        let prefix = SharedPrefix {
+            tokens: vec![1, 2],
+            k: vec![pk],
+            v: vec![pv],
+            rows: 2,
+            importance: vec![0.0, 0.0],
+        };
+        let mut page = KvPage::new_f32(2, d);
+        page.write_row(0, d, &[9.0; 4], &[10.0; 4]);
+        let pages = [page];
+        let view = KvView {
+            prefix: Some(&prefix),
+            prefix_rows: 2,
+            pages: &pages,
+            page_rows: 2,
+            d,
+            layer: 0,
+        };
+        assert_eq!(view.rows(), 4);
+        let mut buf = vec![0.0f32; d];
+        assert_eq!(view.k_slice(1, 0, d, &mut buf), &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(view.v_slice(1, 0, d, &mut buf), &[5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(view.k_slice(2, 0, d, &mut buf), &[9.0; 4]);
+    }
+
+    #[test]
+    fn prefix_hash_is_stable_and_length_sensitive() {
+        assert_eq!(prefix_hash(&[1, 2, 3]), prefix_hash(&[1, 2, 3]));
+        assert_ne!(prefix_hash(&[1, 2, 3]), prefix_hash(&[1, 2]));
+        assert_ne!(prefix_hash(&[1, 2, 3]), prefix_hash(&[3, 2, 1]));
+        assert_ne!(prefix_hash(&[]), prefix_hash(&[0]));
+    }
+}

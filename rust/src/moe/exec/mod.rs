@@ -23,11 +23,15 @@
 
 pub mod attention;
 pub mod dispatch;
+pub mod kvcache;
 pub mod router;
 
 pub use attention::{
-    causal_attention, causal_attention_into, eq6_importance, AttnOut,
-    AttnScratch,
+    causal_attention, causal_attention_into, causal_attention_paged_into,
+    eq6_importance, AttnOut, AttnScratch,
+};
+pub use kvcache::{
+    prefix_hash, KvPage, KvView, PageData, SharedPrefix, DEFAULT_PAGE_ROWS,
 };
 pub use dispatch::{
     dispatch_experts, dispatch_experts_into, scatter, scatter_into,

@@ -18,6 +18,7 @@
 //! unpins); speculative prefetch loads never overshoot, they are
 //! dropped instead.
 
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -86,6 +87,10 @@ struct Inner {
 pub struct ExpertCache {
     store: Arc<ExpertStore>,
     budget: usize,
+    /// memory-governor rung 2: while set, eviction and prefetch
+    /// feasibility run against half the configured budget (reversible;
+    /// `budget_bytes()` keeps reporting the configured value)
+    shrunk: AtomicBool,
     metrics: Arc<Metrics>,
     /// eviction credit per [layer][expert]: 1 + round(3 * sig score)
     credit: Vec<Vec<u8>>,
@@ -114,6 +119,7 @@ impl ExpertCache {
         ExpertCache {
             store,
             budget: budget_bytes,
+            shrunk: AtomicBool::new(false),
             metrics,
             credit,
             n_experts: ne,
@@ -135,6 +141,28 @@ impl ExpertCache {
 
     pub fn budget_bytes(&self) -> usize {
         self.budget
+    }
+
+    /// Halve (or restore) the budget the eviction clock and prefetch
+    /// feasibility checks run against — the memory governor's rung-2
+    /// pressure action. Shrinking does not evict eagerly; the next
+    /// load's clock sweep works residency down to the reduced ceiling.
+    pub fn set_pressure_shrink(&self, on: bool) {
+        self.shrunk.store(on, Relaxed);
+    }
+
+    pub fn is_pressure_shrunk(&self) -> bool {
+        self.shrunk.load(Relaxed)
+    }
+
+    /// The budget currently in force (halved while under rung-2
+    /// memory pressure).
+    fn effective_budget(&self) -> usize {
+        if self.shrunk.load(Relaxed) {
+            self.budget / 2
+        } else {
+            self.budget
+        }
     }
 
     pub fn bytes_resident(&self) -> usize {
@@ -264,7 +292,7 @@ impl ExpertCache {
             }
             // everything unpinned is evictable in principle, so the
             // load fits iff the pinned bytes leave room
-            if Self::pinned_bytes(&g) + bytes > self.budget {
+            if Self::pinned_bytes(&g) + bytes > self.effective_budget() {
                 return false;
             }
         }
@@ -314,15 +342,16 @@ impl ExpertCache {
     /// visit and are evicted at zero. Returns false when the budget
     /// cannot be met (all remaining residents are pinned).
     fn evict_for(&self, g: &mut Inner, incoming: usize) -> bool {
+        let budget = self.effective_budget();
         let nslots = g.slots.len() * self.n_experts;
         if nslots == 0 {
-            return g.bytes + incoming <= self.budget;
+            return g.bytes + incoming <= budget;
         }
         // every slot absorbs at most credit+1 visits before eviction,
         // so this bound means "only pinned slots remain"
         let max_visits = nslots * (SIG_CREDITS as usize + 3);
         let mut visits = 0usize;
-        while g.bytes + incoming > self.budget {
+        while g.bytes + incoming > budget {
             if visits >= max_visits {
                 Metrics::set_gauge(&self.metrics.bytes_resident,
                                    g.bytes as u64);
@@ -495,6 +524,36 @@ mod tests {
         let ex = cache.try_get_pinned(0, 0).expect("recovered after heal");
         cache.unpin(0, 0);
         assert!(ex.storage_bytes() > 0);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn pressure_shrink_halves_effective_budget_reversibly() {
+        let (_metrics, cache, per_expert, path) = setup("cache_shrink", 4);
+        for e in 0..4 {
+            cache.get_pinned(0, e);
+            cache.unpin(0, e);
+        }
+        assert_eq!(cache.bytes_resident(), 4 * per_expert);
+        cache.set_pressure_shrink(true);
+        assert!(cache.is_pressure_shrunk());
+        assert_eq!(cache.budget_bytes(), 4 * per_expert,
+                   "configured budget still reported unshrunk");
+        // the next load's clock sweep works residency down to half
+        cache.get_pinned(1, 0);
+        cache.unpin(1, 0);
+        assert!(cache.bytes_resident() <= 2 * per_expert,
+                "{} resident under a {}-byte effective budget",
+                cache.bytes_resident(), 2 * per_expert);
+        // lifting the pressure restores the full ceiling
+        cache.set_pressure_shrink(false);
+        for e in 0..4 {
+            cache.get_pinned(0, e);
+            cache.unpin(0, e);
+        }
+        assert!(cache.bytes_resident() > 2 * per_expert,
+                "restored budget admits more than the shrunk ceiling");
+        assert!(cache.bytes_resident() <= 4 * per_expert);
         std::fs::remove_file(&path).ok();
     }
 

@@ -112,6 +112,14 @@ pub trait ExpertResolver: Send + Sync + Debug {
     fn metrics(&self) -> Option<Arc<Metrics>> {
         None
     }
+
+    /// Memory-governor rung-1 hook: stop (or resume) speculative
+    /// prefetch loads. Default no-op (resident models have none).
+    fn pause_prefetch(&self, _on: bool) {}
+
+    /// Memory-governor rung-2 hook: halve (or restore) the effective
+    /// expert-cache byte budget. Default no-op.
+    fn shrink_budget(&self, _on: bool) {}
 }
 
 /// Today's behavior: all experts in RAM, resolver is a no-op.
@@ -198,6 +206,14 @@ impl ExpertResolver for CachedResolver {
 
     fn metrics(&self) -> Option<Arc<Metrics>> {
         Some(self.metrics.clone())
+    }
+
+    fn pause_prefetch(&self, on: bool) {
+        self.prefetcher.set_paused(on);
+    }
+
+    fn shrink_budget(&self, on: bool) {
+        self.cache.set_pressure_shrink(on);
     }
 }
 

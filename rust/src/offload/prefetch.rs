@@ -16,6 +16,7 @@
 //! (deterministic; used by the parity tests), `Off` disables the
 //! predictor entirely.
 
+use std::sync::atomic::{AtomicBool, Ordering::Relaxed};
 use std::sync::mpsc::{sync_channel, SyncSender, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -115,6 +116,10 @@ pub struct Prefetcher {
     predictor: Mutex<Predictor>,
     tx: Option<SyncSender<(usize, Vec<usize>)>>,
     worker: Option<JoinHandle<()>>,
+    /// memory-governor rung 1: speculative loads suppressed while set
+    /// (reversible; the predictor keeps learning nothing — routing
+    /// observations are skipped too, so resuming replays cleanly)
+    paused: AtomicBool,
 }
 
 impl Prefetcher {
@@ -144,13 +149,34 @@ impl Prefetcher {
         } else {
             (None, None)
         };
-        Prefetcher { mode, cache, predictor, tx, worker }
+        Prefetcher {
+            mode,
+            cache,
+            predictor,
+            tx,
+            worker,
+            paused: AtomicBool::new(false),
+        }
     }
 
-    /// Feed one layer's routed expert set; predicts and (unless `Off`)
-    /// loads the next layer's candidates.
+    /// Suppress (or resume) speculative loads — the memory governor's
+    /// rung-1 pressure action.
+    pub fn set_paused(&self, on: bool) {
+        self.paused.store(on, Relaxed);
+    }
+
+    pub fn is_paused(&self) -> bool {
+        self.paused.load(Relaxed)
+    }
+
+    /// Feed one layer's routed expert set; predicts and (unless `Off`
+    /// or paused under memory pressure) loads the next layer's
+    /// candidates.
     pub fn note_routing(&self, layer: usize, selected: &[usize]) {
-        if self.mode == PrefetchMode::Off || selected.is_empty() {
+        if self.mode == PrefetchMode::Off
+            || selected.is_empty()
+            || self.paused.load(Relaxed)
+        {
             return;
         }
         let (next, predicted) =

@@ -152,6 +152,15 @@ impl AdmissionControl {
     fn retry_after(&self, queued: u64) -> u64 {
         (1 + queued / self.max_batch.max(1) as u64).min(60)
     }
+
+    /// The same backlog-scaled Retry-After, computed from the current
+    /// queue estimate — used by refusals decided outside this
+    /// controller (e.g. the memory governor's 503) so every backoff
+    /// hint scales with the same signal.
+    pub fn retry_after_hint(self: &Arc<Self>) -> u64 {
+        let inner = self.state.lock().unwrap();
+        self.retry_after(Self::queued(&inner, self.max_batch))
+    }
 }
 
 #[cfg(test)]

@@ -1,11 +1,16 @@
 //! Per-connection request handling: route, admit, and stream.
 //!
-//! One request per connection (`Connection: close`): the connection
-//! lifecycle *is* the request lifecycle, which makes disconnect
-//! semantics exact — a closed socket means the client abandoned the
-//! request, and the handler's reply is `RequestHandle::cancel()`, so
-//! an abandoned stream can never pin a fused-batcher slot
-//! (DESIGN.md §6).
+//! The default remains one request per connection (`Connection:
+//! close`) — the connection lifecycle *is* the request lifecycle,
+//! which makes disconnect semantics exact: a closed socket means the
+//! client abandoned the request, and the handler's reply is
+//! `RequestHandle::cancel()`, so an abandoned stream can never pin a
+//! fused-batcher slot (DESIGN.md §6). Clients that send `Connection:
+//! keep-alive` opt into serving further requests on the same socket
+//! (bounded by `max_requests_per_conn` and the `keep_alive_idle`
+//! timeout); SSE streams and error replies always close — the stream
+//! is the rest of the connection, and error states don't deserve a
+//! warm socket.
 //!
 //! Routes:
 //!   POST /v1/generate   SSE token stream (or JSON with "stream":false)
@@ -15,6 +20,7 @@
 
 use std::io::ErrorKind;
 use std::net::TcpStream;
+use std::sync::Arc;
 use std::time::Duration;
 
 use crate::coordinator::metrics::Metrics;
@@ -22,7 +28,8 @@ use crate::coordinator::request::{RequestHandle, StreamEvent};
 
 use super::admission::Admission;
 use super::http::{
-    read_request, write_response, write_sse_event, write_sse_head, Request,
+    read_request, write_response, write_response_opts, write_sse_event,
+    write_sse_head, HttpError, Request,
 };
 use super::json::{
     cancelled_body, completion_body, error_body, parse_generate, token_body,
@@ -34,25 +41,64 @@ use super::Shared;
 const STREAM_POLL: Duration = Duration::from_millis(2);
 
 pub(crate) fn handle(stream: &mut TcpStream, shared: &Shared) {
-    let _ = stream.set_read_timeout(Some(shared.cfg.read_timeout));
     let _ = stream.set_write_timeout(Some(shared.cfg.read_timeout));
     let _ = stream.set_nodelay(true);
 
-    let req = match read_request(stream, shared.cfg.max_head_bytes,
-                                 shared.cfg.max_body_bytes) {
-        Ok(req) => req,
-        Err(err) => {
-            Metrics::inc(&shared.metrics.http_bad_requests, 1);
-            if let Some((status, reason)) = err.status() {
-                let _ = write_response(
-                    stream, status, reason, "application/json", &[],
-                    error_body(&err.message()).as_bytes());
-                lingering_close(stream);
+    let mut served = 0usize;
+    loop {
+        // the first request gets the full slow-client budget; between
+        // kept-alive requests the shorter idle timeout applies so a
+        // parked socket frees its pool slot promptly
+        let timeout = if served == 0 {
+            shared.cfg.read_timeout
+        } else {
+            shared.cfg.keep_alive_idle
+        };
+        let _ = stream.set_read_timeout(Some(timeout));
+        let req = match read_request(stream, shared.cfg.max_head_bytes,
+                                     shared.cfg.max_body_bytes) {
+            Ok(req) => req,
+            Err(err) => {
+                // after a served request, a quiet close or idle expiry
+                // is the normal end of a keep-alive session, not a
+                // protocol error
+                if served > 0
+                    && matches!(err,
+                                HttpError::Closed | HttpError::Timeout)
+                {
+                    return;
+                }
+                Metrics::inc(&shared.metrics.http_bad_requests, 1);
+                if let Some((status, reason)) = err.status() {
+                    let _ = write_response(
+                        stream, status, reason, "application/json", &[],
+                        error_body(&err.message()).as_bytes());
+                    lingering_close(stream);
+                }
+                return;
             }
+        };
+        served += 1;
+        // keep-alive is explicit opt-in (`Connection: keep-alive`),
+        // capped at max_requests_per_conn per socket
+        let keep = served < shared.cfg.max_requests_per_conn
+            && wants_keep_alive(&req);
+        let kept_open = route(stream, &req, shared, keep);
+        if !kept_open {
             return;
         }
-    };
-    route(stream, &req, shared);
+    }
+}
+
+/// Did the client explicitly ask to reuse the connection? (HTTP/1.1
+/// defaults to persistent, but this server keeps `close` as its
+/// default and honors keep-alive only when requested — existing
+/// clients observe identical behavior.)
+fn wants_keep_alive(req: &Request) -> bool {
+    req.header("connection").is_some_and(|v| {
+        v.split(',')
+            .any(|t| t.trim().eq_ignore_ascii_case("keep-alive"))
+    })
 }
 
 /// Lingering close for error replies sent before the request was
@@ -74,41 +120,57 @@ fn lingering_close(stream: &TcpStream) {
     }
 }
 
-fn route(stream: &mut TcpStream, req: &Request, shared: &Shared) {
+/// Dispatch one request. Returns whether the connection stays open
+/// for another request (`keep` requested AND the route completed with
+/// a keep-alive response — SSE streams, errors, and unknown routes
+/// always close).
+fn route(stream: &mut TcpStream, req: &Request, shared: &Shared,
+         keep: bool) -> bool {
     match (req.method.as_str(), req.path.as_str()) {
-        ("POST", "/v1/generate") => generate(stream, req, shared),
+        ("POST", "/v1/generate") => generate(stream, req, shared, keep),
         ("GET", "/healthz") => {
             let status =
                 if shared.lifecycle.draining() { "draining" } else { "ok" };
             let body = format!("{{\"status\":\"{status}\"}}");
-            let _ = write_response(stream, 200, "OK", "application/json",
-                                   &[], body.as_bytes());
+            write_response_opts(stream, 200, "OK", "application/json",
+                                &[], body.as_bytes(), keep)
+                .is_ok()
+                && keep
         }
         ("GET", "/metrics") => {
             let body = shared.metrics.render_prometheus();
-            let _ = write_response(
+            write_response_opts(
                 stream, 200, "OK",
                 "text/plain; version=0.0.4; charset=utf-8", &[],
-                body.as_bytes());
+                body.as_bytes(), keep)
+                .is_ok()
+                && keep
         }
         ("POST", "/admin/drain") | ("GET", "/admin/drain") => {
             shared.lifecycle.begin_drain();
             let body = format!(
                 "{{\"draining\":true,\"inflight\":{}}}",
                 shared.admission.inflight());
-            let _ = write_response(stream, 200, "OK", "application/json",
-                                   &[], body.as_bytes());
+            write_response_opts(stream, 200, "OK", "application/json",
+                                &[], body.as_bytes(), keep)
+                .is_ok()
+                && keep
         }
         (_, path) => {
             Metrics::inc(&shared.metrics.http_bad_requests, 1);
             let _ = write_response(
                 stream, 404, "Not Found", "application/json", &[],
                 error_body(&format!("no route for {path}")).as_bytes());
+            false
         }
     }
 }
 
-fn generate(stream: &mut TcpStream, req: &Request, shared: &Shared) {
+/// Handle `POST /v1/generate`. Returns whether the connection stays
+/// open (only a non-streaming success under client keep-alive; SSE
+/// and every error status close).
+fn generate(stream: &mut TcpStream, req: &Request, shared: &Shared,
+            keep: bool) -> bool {
     // chaos hook: an injected panic lands here, before any bytes of
     // the response are written, so the recovery path in `worker_loop`
     // can still send the client a clean 500 (never a mid-stream cut)
@@ -122,7 +184,7 @@ fn generate(stream: &mut TcpStream, req: &Request, shared: &Shared) {
             stream, 503, "Service Unavailable", "application/json",
             &[("Retry-After", "1".to_string())],
             error_body("draining: not accepting new requests").as_bytes());
-        return;
+        return false;
     }
     let (mut gen_req, want_stream) = match parse_generate(&req.body) {
         Ok(parsed) => parsed,
@@ -131,7 +193,7 @@ fn generate(stream: &mut TcpStream, req: &Request, shared: &Shared) {
             let _ = write_response(stream, 400, "Bad Request",
                                    "application/json", &[],
                                    error_body(&msg).as_bytes());
-            return;
+            return false;
         }
     };
 
@@ -150,7 +212,7 @@ fn generate(stream: &mut TcpStream, req: &Request, shared: &Shared) {
                 &[("Retry-After", retry_after_s.to_string())],
                 error_body("shed: queue depth over the admission limit")
                     .as_bytes());
-            return;
+            return false;
         }
         Admission::TenantBusy { retry_after_s } => {
             let _ = write_response(
@@ -159,13 +221,38 @@ fn generate(stream: &mut TcpStream, req: &Request, shared: &Shared) {
                 error_body(&format!(
                     "tenant {tenant:?} at its concurrent-stream cap"))
                     .as_bytes());
-            return;
+            return false;
         }
     };
 
+    // memory admission: reserve the session's worst-case KV footprint
+    // before it reaches the batcher — over-budget is a clean 503 with
+    // a backlog-scaled Retry-After, never an OOM (DESIGN.md §8). The
+    // grant rides on the request; the reservation releases when the
+    // retired session drops it.
+    match shared
+        .engine
+        .governor()
+        .admit_session(&gen_req.prompt, gen_req.max_new_tokens)
+    {
+        Ok(grant) => gen_req.grant = Some(Arc::new(grant)),
+        Err(needed) => {
+            let retry = shared.admission.retry_after_hint();
+            let _ = write_response(
+                stream, 503, "Service Unavailable", "application/json",
+                &[("Retry-After", retry.to_string())],
+                error_body(&format!(
+                    "memory budget exhausted: session needs {needed} bytes"
+                ))
+                .as_bytes());
+            return false;
+        }
+    }
+
     let handle = shared.engine.submit(gen_req);
-    if want_stream {
+    let kept_open = if want_stream {
         stream_sse(stream, handle, shared);
+        false // the SSE stream is the rest of the connection
     } else {
         // non-streaming: drain to the terminal event, reply once. The
         // engine bounds every request (max_new_tokens / KV / deadline),
@@ -181,20 +268,27 @@ fn generate(stream: &mut TcpStream, req: &Request, shared: &Shared) {
                 let _ = write_response(
                     stream, 504, "Gateway Timeout", "application/json",
                     &[], completion_body(&done).as_bytes());
+                false
             }
             Some(done) => {
-                let _ = write_response(stream, 200, "OK", "application/json",
-                                       &[], completion_body(&done).as_bytes());
+                write_response_opts(stream, 200, "OK", "application/json",
+                                    &[],
+                                    completion_body(&done).as_bytes(),
+                                    keep)
+                    .is_ok()
+                    && keep
             }
             None => {
                 let _ = write_response(
                     stream, 500, "Internal Server Error", "application/json",
                     &[], error_body("request terminated without a \
                                      completion").as_bytes());
+                false
             }
         }
-    }
+    };
     drop(permit); // stream over: release tenant + inflight accounting
+    kept_open
 }
 
 /// Has the peer gone away? A non-blocking zero-byte `peek` result

@@ -187,10 +187,10 @@ fn find_head_end(buf: &[u8]) -> Option<usize> {
     buf.windows(4).position(|w| w == b"\r\n\r\n")
 }
 
-/// Write a complete sized response. Every response carries
-/// `Connection: close` — one request per connection keeps the state
-/// machine trivial and matches SSE semantics (the stream *is* the
-/// rest of the connection).
+/// Write a complete sized response with `Connection: close` — the
+/// historical default; error replies and SSE streams always close.
+/// Routes that honor client keep-alive go through
+/// [`write_response_opts`].
 pub fn write_response<W: Write>(
     w: &mut W,
     status: u16,
@@ -199,9 +199,27 @@ pub fn write_response<W: Write>(
     extra_headers: &[(&str, String)],
     body: &[u8],
 ) -> std::io::Result<()> {
+    write_response_opts(w, status, reason, content_type, extra_headers,
+                        body, false)
+}
+
+/// Write a complete sized response, advertising `Connection:
+/// keep-alive` when `keep_alive` (the connection loop then reads the
+/// next request off the same socket) and `Connection: close`
+/// otherwise.
+pub fn write_response_opts<W: Write>(
+    w: &mut W,
+    status: u16,
+    reason: &str,
+    content_type: &str,
+    extra_headers: &[(&str, String)],
+    body: &[u8],
+    keep_alive: bool,
+) -> std::io::Result<()> {
+    let conn = if keep_alive { "keep-alive" } else { "close" };
     let mut head = format!(
         "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\n\
-         Content-Length: {}\r\nConnection: close\r\n",
+         Content-Length: {}\r\nConnection: {conn}\r\n",
         body.len()
     );
     for (k, v) in extra_headers {
@@ -321,6 +339,17 @@ mod tests {
         assert!(text.contains("Retry-After: 2\r\n"));
         assert!(text.contains("Connection: close\r\n"));
         assert!(text.ends_with("{\"error\":\"shed\"}"));
+    }
+
+    #[test]
+    fn keep_alive_response_advertises_it() {
+        let mut out = Vec::new();
+        write_response_opts(&mut out, 200, "OK", "application/json", &[],
+                            b"{}", true)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.contains("Connection: keep-alive\r\n"));
+        assert!(!text.contains("Connection: close\r\n"));
     }
 
     #[test]

@@ -148,6 +148,9 @@ pub fn parse_generate(body: &[u8]) -> Result<(GenerateRequest, bool), String> {
         stop,
         priority,
         deadline,
+        // the connection layer attaches the memory-governor grant
+        // after admission (conn::generate)
+        grant: None,
     };
     Ok((req, stream))
 }

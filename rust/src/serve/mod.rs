@@ -66,6 +66,12 @@ pub struct ServeConfig {
     /// deadline applied to generate requests that don't carry a
     /// `timeout_ms` of their own (None = unlimited)
     pub default_timeout: Option<Duration>,
+    /// how long a kept-alive connection may sit idle between requests
+    /// before the worker closes it (frees its pool slot)
+    pub keep_alive_idle: Duration,
+    /// requests served per connection before the server closes it even
+    /// if the client asked for keep-alive (bounds per-socket state)
+    pub max_requests_per_conn: usize,
 }
 
 impl Default for ServeConfig {
@@ -82,6 +88,8 @@ impl Default for ServeConfig {
             read_timeout: Duration::from_secs(10),
             drain_timeout: Duration::from_secs(30),
             default_timeout: None,
+            keep_alive_idle: Duration::from_secs(5),
+            max_requests_per_conn: 100,
         }
     }
 }

@@ -7,19 +7,21 @@
 //!   * `Site::Demand`   — demand-path `ExpertStore` fetches
 //!   * `Site::Prefetch` — speculative prefetch fetches
 //!   * `Site::Conn`     — HTTP connection workers
+//!   * `Site::Oom`      — memory-governor reservations
 //!
 //! Spec grammar (comma-separated, all fields optional):
 //!
 //! ```text
 //! MC_FAULTS="io_err=0.05,corrupt=0.02,delay_ms=50@0.1,panic=0.01,\
-//!            prefetch_drop=0.1,seed=42"
+//!            prefetch_drop=0.1,oom=0.02,seed=42"
 //! ```
 //!
 //! `io_err` fails a demand fetch before the read, `corrupt` flips one
 //! byte of the segment after the read (caught by the crc32 check),
 //! `delay_ms=N@P` sleeps N ms with probability P, `panic` poisons a
 //! connection worker, `prefetch_drop` makes the prefetcher skip a
-//! speculative load. Every decision is a pure function of
+//! speculative load, `oom` fails a memory-governor reservation as if
+//! the byte ceiling refused it. Every decision is a pure function of
 //! `(seed, site, n-th draw at that site)` via a splitmix64 finalizer,
 //! so a plan replays the same fault sequence per site regardless of
 //! wall clock. When `MC_FAULTS` is unset the fast path is one relaxed
@@ -42,9 +44,11 @@ pub enum Site {
     Prefetch = 1,
     /// HTTP connection worker handling a request.
     Conn = 2,
+    /// Memory-governor byte reservation (`memgov::try_reserve`).
+    Oom = 3,
 }
 
-const N_SITES: usize = 3;
+const N_SITES: usize = 4;
 
 /// A seeded, deterministic fault schedule.
 #[derive(Debug)]
@@ -60,6 +64,8 @@ pub struct FaultPlan {
     pub panic_p: f64,
     /// P(the prefetcher silently skips a speculative load).
     pub prefetch_drop: f64,
+    /// P(a memory-governor reservation is refused).
+    pub oom: f64,
     /// Seed for the per-site decision sequences.
     pub seed: u64,
     draws: [AtomicU64; N_SITES],
@@ -74,6 +80,7 @@ impl Default for FaultPlan {
             delay_p: 0.0,
             panic_p: 0.0,
             prefetch_drop: 0.0,
+            oom: 0.0,
             seed: 0x6D63_6661_756C_7473, // "mcfaults"
             draws: Default::default(),
         }
@@ -115,6 +122,7 @@ impl FaultPlan {
                 "corrupt" => plan.corrupt = prob(val)?,
                 "panic" => plan.panic_p = prob(val)?,
                 "prefetch_drop" => plan.prefetch_drop = prob(val)?,
+                "oom" => plan.oom = prob(val)?,
                 "seed" => {
                     plan.seed = val.parse().map_err(|_| anyhow::anyhow!(
                         "fault seed: {val:?} is not a u64"))?;
@@ -131,7 +139,7 @@ impl FaultPlan {
                 }
                 other => bail!("unknown fault key {other:?} \
                                 (io_err, corrupt, delay_ms, panic, \
-                                 prefetch_drop, seed)"),
+                                 prefetch_drop, oom, seed)"),
             }
         }
         Ok(plan)
@@ -160,6 +168,11 @@ impl FaultPlan {
     pub fn drop_prefetch(&self) -> bool {
         self.prefetch_drop > 0.0
             && self.roll(Site::Prefetch) < self.prefetch_drop
+    }
+
+    /// Should this memory-governor reservation be refused?
+    pub fn oom_now(&self) -> bool {
+        self.oom > 0.0 && self.roll(Site::Oom) < self.oom
     }
 
     /// Injected latency for this draw, if the delay fault fires.
@@ -218,13 +231,14 @@ mod tests {
     fn parses_full_spec() {
         let p = FaultPlan::parse(
             "io_err=0.05,corrupt=0.02,delay_ms=50@0.1,panic=0.01,\
-             prefetch_drop=0.2,seed=42").unwrap();
+             prefetch_drop=0.2,oom=0.03,seed=42").unwrap();
         assert_eq!(p.io_err, 0.05);
         assert_eq!(p.corrupt, 0.02);
         assert_eq!(p.delay, Duration::from_millis(50));
         assert_eq!(p.delay_p, 0.1);
         assert_eq!(p.panic_p, 0.01);
         assert_eq!(p.prefetch_drop, 0.2);
+        assert_eq!(p.oom, 0.03);
         assert_eq!(p.seed, 42);
         // bare delay_ms means always-on
         let q = FaultPlan::parse("delay_ms=5").unwrap();
@@ -273,11 +287,27 @@ mod tests {
             assert!(!p.corrupt(Site::Demand));
             assert!(!p.panic_now(Site::Conn));
             assert!(!p.drop_prefetch());
+            assert!(!p.oom_now());
             assert!(p.delay(Site::Demand).is_none());
         }
         // zero-rate checks must not consume draws, so enabling a rate
         // later replays from the start of the sequence
         assert_eq!(p.draws[Site::Demand as usize].load(Relaxed), 0);
+        assert_eq!(p.draws[Site::Oom as usize].load(Relaxed), 0);
+    }
+
+    #[test]
+    fn oom_site_draws_deterministically() {
+        let mk = || FaultPlan::parse("oom=0.5,seed=11").unwrap();
+        let (a, b) = (mk(), mk());
+        let seq_a: Vec<bool> = (0..64).map(|_| a.oom_now()).collect();
+        let seq_b: Vec<bool> = (0..64).map(|_| b.oom_now()).collect();
+        assert_eq!(seq_a, seq_b);
+        assert!(seq_a.iter().any(|&x| x), "0.5 rate fires within 64 draws");
+        assert!(seq_a.iter().any(|&x| !x));
+        // always-on refuses every reservation
+        let c = FaultPlan::parse("oom=1.0").unwrap();
+        assert!((0..16).all(|_| c.oom_now()));
     }
 
     #[test]

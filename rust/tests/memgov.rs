@@ -1,0 +1,287 @@
+//! Integration tests for the memory governor (ISSUE 9, DESIGN.md §8):
+//! the accounting property (reservations never exceed the ceiling and
+//! rebalance exactly after retirement), CoW prefix-sharing parity
+//! (bit-identical tokens with and without the governor), the pressure
+//! ladder with hysteresis, injected `oom=P` refusals, and the KV
+//! down-quantization retrieval sweep behind the rung-3 action.
+
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::{Arc, Mutex};
+
+use mc_moe::config::ModelConfig;
+use mc_moe::coordinator::{
+    Batcher, DecodeSession, GenerateRequest, MemGovConfig, MemReservation,
+    MemoryGovernor, Metrics, StopCondition,
+};
+use mc_moe::moe::model::MoeModel;
+use mc_moe::util::faults::{self, FaultPlan};
+use mc_moe::util::rng::Rng;
+
+mod common;
+use common::random_model;
+
+/// `faults::install` swaps a process-global plan: every test that
+/// reserves bytes serializes here (and neutralizes any `MC_FAULTS`
+/// environment plan) so an `oom=P` draw can never leak across tests.
+static FAULT_LOCK: Mutex<()> = Mutex::new(());
+
+fn fault_free() -> std::sync::MutexGuard<'static, ()> {
+    let guard = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    faults::install(None);
+    guard
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .expect("non-empty logits")
+}
+
+#[test]
+fn governor_accounting_never_exceeds_ceiling_and_rebalances() {
+    let _fl = fault_free();
+    let budget = 1u64 << 20;
+    let gov = MemoryGovernor::new(
+        MemGovConfig { budget_bytes: budget, ..MemGovConfig::default() },
+        &ModelConfig::test_tiny(),
+        4096,
+        Arc::new(Metrics::new()),
+    );
+    let baseline = gov.baseline_bytes();
+    assert_eq!(gov.bytes_reserved(), baseline);
+
+    // pseudo-random reserve / shrink / release storm: the invariant is
+    // checked after every single transition, not just at the end
+    let mut rng = Rng::new(7);
+    let mut held: Vec<MemReservation> = Vec::new();
+    let mut granted = 0u32;
+    let mut refused = 0u32;
+    for _ in 0..2000 {
+        if rng.below(3) == 0 && !held.is_empty() {
+            let i = rng.below(held.len());
+            if rng.below(4) == 0 {
+                // partial early return (the rung-3 shrink path), then
+                // the remainder releases on drop
+                let half = held[i].bytes() / 2;
+                held[i].shrink(half);
+            }
+            held.swap_remove(i);
+        } else {
+            let bytes = 1 + rng.below(96 << 10) as u64;
+            match gov.try_reserve(bytes) {
+                Some(r) => {
+                    granted += 1;
+                    held.push(r);
+                }
+                None => refused += 1,
+            }
+        }
+        assert!(
+            gov.bytes_reserved() <= budget,
+            "reserved {} exceeds the {budget}-byte ceiling",
+            gov.bytes_reserved()
+        );
+    }
+    assert!(granted > 0, "storm too strict: nothing was ever admitted");
+    assert!(refused > 0, "storm too lax: the ceiling was never hit");
+    held.clear();
+    assert_eq!(
+        gov.bytes_reserved(),
+        baseline,
+        "every session byte must return once all reservations retire"
+    );
+}
+
+fn batcher_run(
+    model: &Arc<MoeModel>,
+    gov: Option<&Arc<MemoryGovernor>>,
+    prompt: &[u32],
+) -> Vec<u32> {
+    let metrics = Metrics::new();
+    let mut b = Batcher::new(model.clone(), None, 1);
+    if let Some(g) = gov {
+        b.set_governor(g.clone());
+    }
+    let h = b.submit(
+        GenerateRequest::greedy(prompt.to_vec(), 8)
+            .with_stop(StopCondition::MaxLen),
+    );
+    b.run_to_completion(&metrics);
+    h.wait().expect("completion").tokens
+}
+
+#[test]
+fn prefix_sharing_emits_bit_identical_tokens() {
+    let _fl = fault_free();
+    let cfg = ModelConfig::test_tiny();
+    let model = Arc::new(random_model(&cfg, 21));
+    // head (prompt minus the last token) is 11 rows >= min_prefix_rows
+    let prompt: Vec<u32> = vec![4, 9, 17, 3, 88, 41, 7, 7, 120, 5, 66, 13];
+
+    let base_a = batcher_run(&model, None, &prompt);
+    let base_b = batcher_run(&model, None, &prompt);
+    assert_eq!(base_a, base_b, "ungoverned decode must be deterministic");
+
+    // derived-default budget: unconstrained, so no degradation rung
+    // ever fires and parity is exact
+    let metrics = Arc::new(Metrics::new());
+    let gov = MemoryGovernor::for_model(&cfg, None, 1, None, metrics.clone());
+    let gov_a = batcher_run(&model, Some(&gov), &prompt); // publishes head
+    let gov_b = batcher_run(&model, Some(&gov), &prompt); // rides the prefix
+
+    assert_eq!(gov_a, base_a, "governed (publisher) run must be bit-identical");
+    assert_eq!(gov_b, base_a, "prefix-sharing run must be bit-identical");
+    assert!(
+        metrics.kv_prefix_published.load(Relaxed) >= 1,
+        "first governed run must publish its prompt head"
+    );
+    assert!(
+        metrics.kv_prefix_hits.load(Relaxed) >= 1,
+        "second governed run must attach the shared prefix"
+    );
+    assert_eq!(gov.rung(), 0, "derived default budget never degrades");
+
+    // both sessions retired: only the published prefix still holds
+    // bytes, and evicting it re-balances to the static baseline
+    assert_eq!(gov.prefix_count(), 1);
+    assert_eq!(gov.evict_idle_prefixes(), 1);
+    assert_eq!(
+        gov.bytes_reserved(),
+        gov.baseline_bytes(),
+        "accounting must return to baseline after sessions + prefix retire"
+    );
+}
+
+#[test]
+fn pressure_ladder_engages_and_releases_with_hysteresis() {
+    let _fl = fault_free();
+    let cfg = ModelConfig::test_tiny();
+    let model = random_model(&cfg, 5);
+    let metrics = Arc::new(Metrics::new());
+    let gov = MemoryGovernor::new(
+        MemGovConfig { budget_bytes: 1000, ..MemGovConfig::default() },
+        &cfg,
+        0,
+        metrics.clone(),
+    );
+
+    assert_eq!(gov.tick(&model), 0);
+    let r1 = gov.try_reserve(500).unwrap(); // 0.50 -> pause prefetch
+    assert_eq!(gov.tick(&model), 1);
+    let r2 = gov.try_reserve(200).unwrap(); // 0.70 -> shrink expert budget
+    assert_eq!(gov.tick(&model), 2);
+    let r3 = gov.try_reserve(150).unwrap(); // 0.85 -> evict/down-quantize
+    assert_eq!(gov.tick(&model), 3);
+    let r4 = gov.try_reserve(100).unwrap(); // 0.95 -> defer Low sessions
+    assert_eq!(gov.tick(&model), 4);
+
+    assert_eq!(metrics.mem_prefetch_pauses.load(Relaxed), 1);
+    assert_eq!(metrics.mem_budget_shrinks.load(Relaxed), 1);
+    assert_eq!(metrics.mem_pressure_rung.load(Relaxed), 4);
+
+    // hysteresis on the way down: at 0.85 rung 4 disengages (below
+    // 0.95 - 0.05) but rung 3 holds (0.85 is not below 0.85 - 0.05)
+    drop(r4);
+    assert_eq!(gov.tick(&model), 3);
+    drop(r3); // 0.70: rung 3 releases, rung 2 holds
+    assert_eq!(gov.tick(&model), 2);
+    drop(r2); // 0.50: rung 2 releases, rung 1 holds
+    assert_eq!(gov.tick(&model), 1);
+    drop(r1); // 0.0: fully recovered
+    assert_eq!(gov.tick(&model), 0);
+    assert_eq!(metrics.mem_pressure_rung.load(Relaxed), 0);
+    // recovery reverses the actions without re-counting engagements
+    assert_eq!(metrics.mem_prefetch_pauses.load(Relaxed), 1);
+    assert_eq!(metrics.mem_budget_shrinks.load(Relaxed), 1);
+}
+
+#[test]
+fn injected_oom_refuses_reservation_and_admission() {
+    let guard = FAULT_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let cfg = ModelConfig::test_tiny();
+    let metrics = Arc::new(Metrics::new());
+    let gov = MemoryGovernor::new(
+        MemGovConfig { budget_bytes: 1 << 30, ..MemGovConfig::default() },
+        &cfg,
+        0,
+        metrics.clone(),
+    );
+
+    faults::install(Some(FaultPlan::parse("oom=1.0").unwrap()));
+    assert!(gov.try_reserve(16).is_none(), "oom=1.0 must refuse every draw");
+    let prompt: Vec<u32> = (1..=12).collect();
+    assert!(
+        gov.admit_session(&prompt, 4).is_err(),
+        "admission inherits the injected refusal"
+    );
+    assert!(metrics.mem_oom_injected.load(Relaxed) >= 2);
+    assert_eq!(metrics.mem_admission_rejected.load(Relaxed), 1);
+    assert_eq!(gov.bytes_reserved(), 0, "refusals must not leak bytes");
+
+    faults::install(None);
+    let r = gov.try_reserve(16).expect("uninstall restores service");
+    assert_eq!(gov.bytes_reserved(), 16);
+    drop(r);
+    assert_eq!(gov.bytes_reserved(), 0);
+    drop(guard);
+}
+
+/// Retrieval check behind the rung-3 action (EXPERIMENTS.md): sweep
+/// the down-quantize fraction over cold KV pages of a long prompt and
+/// measure next-token agreement with the uncompressed session — the
+/// random-weights stand-in for needle-in-a-haystack accuracy. The
+/// default `downq_frac = 0.5` must keep agreement high; `frac = 0.0`
+/// must be bit-exact.
+#[test]
+fn kv_downquantize_sweep_preserves_retrieval_at_default() {
+    let mut cfg = ModelConfig::test_tiny();
+    cfg.max_seq = 256;
+    // 220 rows -> cold-page cutoff (220 - 16) / 64 = 3 eligible pages,
+    // so the sweep is non-degenerate: frac 0.5 quantizes 2, 1.0 all 3
+    let prompt: Vec<u32> = (0..220).map(|i| 1 + (i * 7 % 97) as u32).collect();
+    const TRIALS: u64 = 12;
+
+    let mut agree = [0u32; 3]; // frac 0.0 / 0.5 / 1.0
+    for t in 0..TRIALS {
+        let model = Arc::new(random_model(&cfg, 1000 + t));
+        let mut base = DecodeSession::new(model.clone(), None);
+        base.enable_importance();
+        let first = argmax(&base.prefill(&prompt));
+        let base_next = argmax(&base.step(first as u32));
+
+        for (slot, frac, want_pages) in
+            [(0usize, 0.0f64, 0usize), (1, 0.5, 2), (2, 1.0, 3)]
+        {
+            let mut s = DecodeSession::new(model.clone(), None);
+            s.enable_importance();
+            assert_eq!(argmax(&s.prefill(&prompt)), first,
+                       "prefill must be deterministic");
+            let saved = s.kv_compress(frac, 16);
+            assert_eq!(s.quantized_pages(), want_pages,
+                       "frac {frac} must touch exactly {want_pages} pages");
+            if frac == 0.0 {
+                assert_eq!(saved, 0);
+            } else {
+                assert!(saved > 0, "down-quantizing must free bytes");
+            }
+            if argmax(&s.step(first as u32)) == base_next {
+                agree[slot] += 1;
+            }
+        }
+    }
+    assert_eq!(agree[0] as u64, TRIALS, "frac = 0.0 must be bit-exact");
+    let acc = |n: u32| n as f64 / TRIALS as f64;
+    println!(
+        "KV down-quantize sweep over {TRIALS} models: \
+         acc(0.0)={:.2} acc(0.5)={:.2} acc(1.0)={:.2}",
+        acc(agree[0]), acc(agree[1]), acc(agree[2])
+    );
+    assert!(
+        acc(agree[1]) >= 0.75,
+        "default downq_frac=0.5 must preserve next-token retrieval \
+         (got {:.2})",
+        acc(agree[1])
+    );
+}

@@ -387,6 +387,158 @@ fn malformed_and_oversized_bodies_do_not_wedge() {
 }
 
 #[test]
+fn memory_budget_exhaustion_returns_503_with_retry_after() {
+    use mc_moe::coordinator::ServerConfig;
+
+    // a 1-byte ceiling: the static baseline alone exceeds it, so every
+    // session admission must refuse at the connection layer
+    let cfg = ModelConfig::test_tiny();
+    let engine = Server::spawn_cfg(
+        Arc::new(random_model(&cfg, 13)),
+        None,
+        ServerConfig {
+            max_batch: 1,
+            mem_budget: Some(1),
+            ..ServerConfig::default()
+        },
+    );
+    let http = HttpServer::bind(engine, ServeConfig {
+        port: 0,
+        max_conns: 2,
+        max_streams_per_tenant: 0,
+        shed_queue_depth: 0,
+        max_batch: 1,
+        ..ServeConfig::default()
+    })
+    .expect("bind 127.0.0.1:0");
+
+    let refused = match open_stream(&http, &[1, 5, 80, 3], 4,
+                                    ",\"stream\":false", &[]) {
+        GenerateReply::Response(r) => r,
+        GenerateReply::Stream(_) => panic!("over-budget request must refuse"),
+    };
+    assert_eq!(refused.status, 503, "{}", refused.body_str());
+    let retry: u64 = refused.header("retry-after")
+        .expect("memory 503 carries Retry-After")
+        .parse().expect("numeric seconds");
+    assert!(retry >= 1);
+    assert!(refused.body_str().contains("memory budget"),
+            "{}", refused.body_str());
+    assert!(http.metrics().mem_admission_rejected
+                .load(std::sync::atomic::Ordering::Relaxed) >= 1);
+
+    let report = http.shutdown();
+    assert!(report.drained, "a refused request leaves nothing in flight");
+}
+
+/// Read one full HTTP response (status, `Connection` header value,
+/// body) off a raw keep-alive socket. Byte-wise header reads are fine
+/// here: the client waits for the complete response before sending the
+/// next request, so nothing beyond this response is ever in flight.
+fn read_keep_alive_response(sock: &mut std::net::TcpStream)
+                            -> (u16, String, String) {
+    use std::io::Read as _;
+    let mut head = Vec::new();
+    let mut byte = [0u8; 1];
+    while !head.ends_with(b"\r\n\r\n") {
+        let n = sock.read(&mut byte).expect("header read");
+        assert!(n > 0, "peer closed mid-headers");
+        head.push(byte[0]);
+    }
+    let head = String::from_utf8_lossy(&head).to_string();
+    let status: u16 = head
+        .split_whitespace()
+        .nth(1)
+        .expect("status line")
+        .parse()
+        .expect("numeric status");
+    let mut clen = 0usize;
+    let mut conn = String::new();
+    for line in head.lines().skip(1) {
+        let Some((k, v)) = line.split_once(':') else { continue };
+        match k.trim().to_ascii_lowercase().as_str() {
+            "content-length" => clen = v.trim().parse().expect("length"),
+            "connection" => conn = v.trim().to_ascii_lowercase(),
+            _ => {}
+        }
+    }
+    let mut body = vec![0u8; clen];
+    sock.read_exact(&mut body).expect("body read");
+    (status, conn, String::from_utf8_lossy(&body).to_string())
+}
+
+#[test]
+fn keep_alive_serves_sequential_requests_on_one_socket() {
+    use std::io::{Read as _, Write as _};
+
+    let http = serve(random_model(&ModelConfig::test_tiny(), 12), ServeConfig {
+        port: 0,
+        max_conns: 2,
+        max_streams_per_tenant: 0,
+        shed_queue_depth: 0,
+        max_batch: 1,
+        ..ServeConfig::default()
+    });
+
+    let body = gen_body(&[1, 5, 80, 3], 4, ",\"stream\":false");
+    let head = |conn: &str| {
+        format!(
+            "POST /v1/generate HTTP/1.1\r\nHost: t\r\nConnection: {conn}\r\n\
+             Content-Length: {}\r\n\r\n",
+            body.len()
+        )
+    };
+
+    let mut sock = std::net::TcpStream::connect(http.addr()).unwrap();
+    sock.set_read_timeout(Some(T)).unwrap();
+
+    // the tokens array is the deterministic part of a completion body
+    // (id / ttft_ms / total_ms legitimately vary per request)
+    let tokens_of = |body: &str| -> String {
+        let start = body.find("\"tokens\":[").expect("tokens array");
+        let end = body[start..].find(']').expect("closing bracket") + start;
+        body[start..=end].to_string()
+    };
+
+    // two sequential completions over the SAME socket: both 200, both
+    // advertising keep-alive, and (greedy, same prompt) identical
+    sock.write_all(head("keep-alive").as_bytes()).unwrap();
+    sock.write_all(&body).unwrap();
+    let (s1, c1, b1) = read_keep_alive_response(&mut sock);
+    assert_eq!(s1, 200, "{b1}");
+    assert_eq!(c1, "keep-alive", "opt-in must be honored");
+    assert!(b1.contains("\"tokens\":["), "{b1}");
+
+    sock.write_all(head("keep-alive").as_bytes()).unwrap();
+    sock.write_all(&body).unwrap();
+    let (s2, c2, b2) = read_keep_alive_response(&mut sock);
+    assert_eq!(s2, 200, "{b2}");
+    assert_eq!(c2, "keep-alive");
+    assert_eq!(tokens_of(&b2), tokens_of(&b1),
+               "same socket, same greedy request, same tokens");
+
+    // without the opt-in header the server answers and closes (the
+    // historical default): the next read sees EOF
+    sock.write_all(head("close").as_bytes()).unwrap();
+    sock.write_all(&body).unwrap();
+    let (s3, c3, b3) = read_keep_alive_response(&mut sock);
+    assert_eq!(s3, 200, "{b3}");
+    assert_eq!(c3, "close");
+    assert_eq!(tokens_of(&b3), tokens_of(&b1));
+    let mut probe = [0u8; 1];
+    assert_eq!(sock.read(&mut probe).expect("clean EOF"), 0,
+               "server must close after a Connection: close response");
+
+    // all three requests rode one TCP connection
+    assert_eq!(http.metrics().http_conns_accepted
+                   .load(std::sync::atomic::Ordering::Relaxed), 1);
+
+    drop(sock);
+    let report = http.shutdown();
+    assert!(report.drained);
+}
+
+#[test]
 fn mid_stream_disconnect_cancels_and_frees_slot() {
     let http = serve(random_model(&slow_cfg(), 11), ServeConfig {
         port: 0,
