@@ -1,12 +1,29 @@
 //! Fig. 9 driver: Needle-in-a-Haystack retrieval heatmap across
-//! (context length × needle depth) for FP32 vs MC-compressed models.
+//! (context length × needle depth) for FP32 vs MC-compressed models,
+//! then a long-context burst through the memory-governed serving path
+//! with the flight recorder armed (DESIGN.md §9) — the exported
+//! Chrome trace shows the governor's KV down-quantization firing
+//! under pressure alongside the per-layer routing timeline.
 //!
 //!   cargo run --release --example niah_heatmap [-- --samples 20]
+//!   # trace lands in niah_trace.json (override: --trace-out <path>)
+
+use std::sync::atomic::Ordering::Relaxed;
+use std::sync::Arc;
+use std::time::Duration;
 
 use anyhow::Result;
 use mc_moe::config::{artifacts_dir, ModelConfig};
+use mc_moe::coordinator::memgov::{
+    scratch_estimate_bytes, worst_case_kv_bytes,
+};
+use mc_moe::coordinator::{
+    GenerateRequest, MemReservation, Server, ServerConfig, StopCondition,
+};
 use mc_moe::eval::eval_niah_grid;
+use mc_moe::moe::exec::DEFAULT_PAGE_ROWS;
 use mc_moe::moe::{MoeModel, WeightFile};
+use mc_moe::obs;
 use mc_moe::pmq::allocate::{Allocator, PmqHyper};
 use mc_moe::pmq::{Workbench, WorkbenchConfig};
 use mc_moe::util::cli::Args;
@@ -29,6 +46,99 @@ fn print_grid(name: &str, lengths: &[usize], depths: &[f64], g: &[Vec<f64>]) {
     println!("  mean retrieval: {:.1}%", avg * 100.0);
 }
 
+/// Drive the governed serving path under deliberate memory pressure
+/// with the flight recorder on, and export the timeline: long-context
+/// sessions decode while a probe reservation pushes the governor up
+/// its ladder, so the trace carries `kv_pages_downquantized` events
+/// next to the routing/decode spans.
+fn governed_trace(cfg: &ModelConfig, model: MoeModel, out: &str)
+                  -> Result<()> {
+    obs::set_enabled(true);
+    obs::clear();
+
+    let max_batch = 4usize;
+    let clients = 4usize;
+    let prompt_len = (cfg.max_seq / 2).max(32);
+    let max_new = 16usize.min(cfg.max_seq - prompt_len - 1);
+    let worst = worst_case_kv_bytes(prompt_len + max_new, 0,
+                                    DEFAULT_PAGE_ROWS, cfg.n_layers,
+                                    cfg.d_model);
+    // generous enough to admit every session; the probe below — not
+    // admission refusals — supplies the pressure
+    let budget = scratch_estimate_bytes(cfg, max_batch)
+        + clients as u64 * worst * 2;
+    let server = Server::spawn_cfg(
+        Arc::new(model), None,
+        ServerConfig {
+            max_batch,
+            mem_budget: Some(budget),
+            ..ServerConfig::default()
+        });
+    let gov = server.governor().clone();
+
+    let handles: Vec<_> = (0..clients)
+        .map(|i| {
+            let prompt: Vec<u32> = (0..prompt_len)
+                .map(|t| 1 + ((t * 13 + i * 31) % 101) as u32)
+                .collect();
+            server.submit(GenerateRequest::greedy(prompt, max_new)
+                .with_stop(StopCondition::MaxLen))
+        })
+        .collect();
+
+    // once KV starts landing, squeeze the budget so the ladder climbs
+    // to rung 3 (KV down-quantization) while the sessions decode
+    let base = scratch_estimate_bytes(cfg, max_batch);
+    let t0 = std::time::Instant::now();
+    while gov.bytes_reserved() <= base
+        && t0.elapsed() < Duration::from_secs(10)
+    {
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let target = (gov.budget_bytes() as f64 * 0.97) as u64;
+    let mut probe: Vec<MemReservation> = Vec::new();
+    let probe_deadline = std::time::Instant::now() + Duration::from_secs(5);
+    while gov.bytes_reserved() < target
+        && std::time::Instant::now() < probe_deadline
+    {
+        let mut chunk = target.saturating_sub(gov.bytes_reserved());
+        while chunk > 1024 {
+            if let Some(r) = gov.try_reserve(chunk) {
+                probe.push(r);
+                break;
+            }
+            chunk /= 2;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    std::thread::sleep(Duration::from_millis(300));
+    drop(probe);
+    for h in handles {
+        let _ = h.wait();
+    }
+
+    let downq = server.metrics.kv_pages_downquantized.load(Relaxed);
+    server.shutdown();
+    let events = obs::snapshot(None);
+    let traced_downq = events.iter()
+        .filter(|e| e.name == "kv_pages_downquantized")
+        .count();
+    let json = obs::chrome::render(&events, "niah_governed");
+    std::fs::write(out, &json)?;
+    println!(
+        "\ngoverned trace: {} events -> {out} \
+         (kv_pages_downquantized: {traced_downq} traced, {downq} counted)",
+        events.len()
+    );
+    if traced_downq == 0 {
+        println!("  note: pressure never reached rung 3 on this run; \
+                  re-run or raise --samples for longer contexts");
+    }
+    obs::set_enabled(false);
+    obs::clear();
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::parse_env();
     let samples = args.usize_or("samples", 15)?;
@@ -44,11 +154,19 @@ fn main() -> Result<()> {
     print_grid("FP32", &lengths, &depths, &g);
 
     let wb = Workbench::build(fp, WorkbenchConfig { fast_eps: true, ..Default::default() })?;
+    let mut compressed = None;
     for &b in &[2 * cfg.n_experts, 5 * cfg.n_experts / 2] {
         let (m, alloc) = wb.compress(Allocator::Pmq, b, PmqHyper::default())?;
         let g = eval_niah_grid(&m, &lengths, &depths, samples, 4242, None);
         print_grid(&format!("PMQ {:.2}-bit", alloc.avg_bits()),
                    &lengths, &depths, &g);
+        compressed = Some(m);
+    }
+
+    // long-context serving on the compressed model, traced end to end
+    if let Some(m) = compressed {
+        let out = args.get_or("trace-out", "niah_trace.json");
+        governed_trace(&cfg, m, &out)?;
     }
     Ok(())
 }

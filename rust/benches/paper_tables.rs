@@ -1,5 +1,5 @@
 //! Regenerates every table and figure of the paper's evaluation on the
-//! synthetic-substrate MoE model (DESIGN.md §9 experiment index).
+//! synthetic-substrate MoE model (DESIGN.md §10 experiment index).
 //!
 //!   cargo bench --bench paper_tables            # full run
 //!   MC_FAST=1 cargo bench --bench paper_tables  # reduced samples

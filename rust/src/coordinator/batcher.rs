@@ -18,6 +18,7 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use crate::moe::model::MoeModel;
+use crate::obs::{self, Cat};
 use crate::util::pool::WorkerPool;
 
 use super::decode::{step_many_into, DecodeOdp, DecodeSession, StepScratch};
@@ -157,6 +158,9 @@ impl Batcher {
             }
             if ticket.claim_terminal() {
                 Metrics::inc(&metrics.deadline_exceeded, 1);
+                obs::instant(Cat::Queue, "deadline_expired_queued",
+                             obs::args1("req", ticket.id));
+                obs::dump_now("deadline");
                 ticket.send(StreamEvent::Done(Completion {
                     id: ticket.id,
                     tokens: Vec::new(),
@@ -180,6 +184,10 @@ impl Batcher {
                 Self::retire(a, FinishReason::DeadlineExceeded, metrics);
             if ticket.claim_terminal() {
                 Metrics::inc(&metrics.deadline_exceeded, 1);
+                obs::instant(Cat::Decode, "deadline_expired_active",
+                             obs::args2("req", ticket.id,
+                                        "tokens", done.tokens.len() as u64));
+                obs::dump_now("deadline");
                 ticket.send(StreamEvent::Done(done));
             }
         }
@@ -283,6 +291,14 @@ impl Batcher {
                 req.grant = grant;
             }
             Metrics::inc(&metrics.requests_admitted, 1);
+            if obs::enabled() {
+                // cross-thread stage: submission happened on the serve
+                // thread, so reconstruct the start from the queue age
+                let waited = enqueued.elapsed().as_nanos() as u64;
+                obs::complete(Cat::Queue, "queue_wait",
+                              obs::now_ns().saturating_sub(waited),
+                              obs::args1("req", ticket.id));
+            }
             let deadline = req
                 .deadline
                 .or(self.default_deadline)
@@ -305,6 +321,9 @@ impl Batcher {
                 session.attach_prefix(p);
             }
             if session.pos < head.len() {
+                let _sp = obs::span(Cat::Prefill, "prefill")
+                    .arg("req", ticket.id)
+                    .arg("tokens", (head.len() - session.pos) as u64);
                 session.prefill(&head[session.pos..]);
             }
             if let Some(gov) = &self.governor {
@@ -354,6 +373,11 @@ impl Batcher {
                             (a.session.quantized_pages() - before) as u64;
                         Metrics::inc(&metrics.kv_pages_downquantized,
                                      pages);
+                        obs::instant(Cat::Mem, "kv_pages_downquantized",
+                                     obs::args3("req", a.ticket.id,
+                                                "pages", pages,
+                                                "saved_bytes",
+                                                saved as u64));
                         if let Some(g) = &a.req.grant {
                             g.reservation.shrink(saved as u64);
                         }
@@ -382,6 +406,11 @@ impl Batcher {
             step_many_into(&mut sessions, &self.inputs, &mut self.scratch)
         };
         let step_ns = t0.elapsed().as_nanos() as u64;
+        if obs::enabled() {
+            obs::complete(Cat::Decode, "decode_step",
+                          obs::now_ns().saturating_sub(step_ns),
+                          obs::args1("batch", self.active.len() as u64));
+        }
         // the fused pass produced one token per session
         let per_token_ns = (step_ns / self.active.len() as u64).max(1);
 
@@ -391,10 +420,16 @@ impl Batcher {
             let a = &mut self.active[i];
             metrics.record_tpot(per_token_ns);
             let next = a.sampler.next_token(logits.row(i));
+            obs::instant(Cat::Sample, "token_sampled",
+                         obs::args2("req", a.ticket.id,
+                                    "token", next as u64));
             if a.first_token_ns.is_none() {
                 let ns = a.started.elapsed().as_nanos() as u64;
                 a.first_token_ns = Some(ns);
                 metrics.record_ttft(ns);
+                obs::instant(Cat::Serve, "first_token",
+                             obs::args2("req", a.ticket.id,
+                                        "ttft_us", ns / 1_000));
             }
             a.generated.push(next);
             Metrics::inc(&metrics.tokens_generated, 1);

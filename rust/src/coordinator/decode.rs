@@ -53,6 +53,67 @@ pub use crate::moe::exec::router::DecodeOdp;
 /// (Σ klen · d) below this stays serial in `step_many_into`.
 const SESSION_ATTN_MIN_WORK: usize = 65_536;
 
+/// Per-layer MoE routing introspection for the flight recorder and
+/// the live `/debug/experts` heat table: mean routing entropy of the
+/// gate distribution, distinct experts activated, selections dropped
+/// below `top_k` (ODP pruning and degraded dispatch), and the mean
+/// bit-width of the experts actually dispatched. Callers gate on
+/// [`obs::enabled`] so the disabled decode path never reaches here.
+fn trace_layer_routing(li: usize, probs: &Mat,
+                       topk: &[Vec<(usize, f32)>], top_k: usize,
+                       bits: &dyn Fn(usize) -> Option<f64>) {
+    use crate::obs::{self, Cat};
+    let mut entropy = 0.0f64;
+    for t in 0..topk.len() {
+        for &p in probs.row(t) {
+            if p > 0.0 {
+                entropy -= p as f64 * (p as f64).ln();
+            }
+        }
+    }
+    let mut seen = vec![false; probs.cols];
+    let mut pruned = 0u64;
+    for sel in topk {
+        pruned += top_k.saturating_sub(sel.len()) as u64;
+        for &(e, _) in sel.iter() {
+            if let Some(s) = seen.get_mut(e) {
+                *s = true;
+            }
+        }
+        obs::heat::record(li, sel);
+    }
+    let active = seen.iter().filter(|&&s| s).count() as u64;
+    let (mut bits_sum, mut bits_n) = (0.0f64, 0u32);
+    for (e, &s) in seen.iter().enumerate() {
+        if s {
+            if let Some(b) = bits(e) {
+                bits_sum += b;
+                bits_n += 1;
+            }
+        }
+    }
+    let mean_entropy = entropy / topk.len().max(1) as f64;
+    obs::instant(Cat::Route, "layer_routing",
+                 obs::args3("layer", li as u64,
+                            "entropy_u", obs::micro(mean_entropy),
+                            "active_experts", active));
+    obs::instant(Cat::Route, "odp_dispatch",
+                 obs::args3("layer", li as u64,
+                            "pruned", pruned,
+                            "bits_u", obs::micro(
+                                if bits_n > 0 {
+                                    bits_sum / bits_n as f64
+                                } else {
+                                    0.0
+                                })));
+}
+
+/// Mean stored bits per weight of one expert (PMQ mixed precision
+/// makes this differ across experts).
+fn expert_bits(e: &Expert) -> f64 {
+    e.storage_bytes() as f64 * 8.0 / e.param_count().max(1) as f64
+}
+
 /// One layer's private KV storage: block-granular pages grown lazily
 /// as the sequence extends (DESIGN.md §8). Rows before the session's
 /// shared-prefix boundary live in the read-only [`SharedPrefix`], not
@@ -459,6 +520,18 @@ impl DecodeSession {
                 );
                 model.resolver.unpin_layer(li, &sc.needed);
             }
+            if crate::obs::enabled() {
+                let resident = model.resolver.is_resident();
+                let (experts, pins) = (&layer.experts, &sc.pins);
+                trace_layer_routing(li, &sc.probs, &sc.topk[..t_new],
+                                    cfg.top_k, &|e| if resident {
+                                        experts.get(e).map(expert_bits)
+                                    } else {
+                                        pins.get(e)
+                                            .and_then(|p| p.as_deref())
+                                            .map(expert_bits)
+                                    });
+            }
             dispatch::scatter_into(&sc.dispatch, t_new, d, &mut sc.moe_y);
             add_inplace(&mut sc.x, &sc.moe_y);
         }
@@ -701,6 +774,18 @@ pub fn step_many_into<'a>(
                 &mut sc.dispatch,
             );
             model.resolver.unpin_layer(li, &sc.needed);
+        }
+        if crate::obs::enabled() {
+            let resident = model.resolver.is_resident();
+            let (experts, pins) = (&layer.experts, &sc.pins);
+            trace_layer_routing(li, &sc.probs, &sc.topk[..b],
+                                cfg.top_k, &|e| if resident {
+                                    experts.get(e).map(expert_bits)
+                                } else {
+                                    pins.get(e)
+                                        .and_then(|p| p.as_deref())
+                                        .map(expert_bits)
+                                });
         }
         dispatch::scatter_into(&sc.dispatch, b, d, &mut sc.moe_y);
         add_inplace(&mut sc.x, &sc.moe_y);

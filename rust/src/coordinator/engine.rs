@@ -122,7 +122,12 @@ impl McEngine {
         // (at least the final prompt token, so logits stay valid).
         let mut logits = Vec::new();
         let covered = sess.pos;
-        sess.prefill_into(&req.prompt[covered..], &mut logits);
+        {
+            let _sp = crate::obs::span(crate::obs::Cat::Prefill, "prefill")
+                .arg("tokens", (req.prompt.len() - covered) as u64)
+                .arg("prefix_rows", covered as u64);
+            sess.prefill_into(&req.prompt[covered..], &mut logits);
+        }
         if let Some(gov) = &self.governor {
             let head = &req.prompt[..req.prompt.len() - 1];
             if grant.as_ref().map_or(true, |g| g.prefix.is_none())
@@ -139,6 +144,8 @@ impl McEngine {
         let mut finish = FinishReason::MaxTokens;
         while tokens.len() < req.max_new_tokens {
             let next = sampler.next_token(&logits);
+            crate::obs::instant(crate::obs::Cat::Sample, "token_sampled",
+                                crate::obs::args1("token", next as u64));
             tokens.push(next);
             on_token(next);
             if req.stop.hits(next) {
@@ -154,10 +161,20 @@ impl McEngine {
             if req.deadline.is_some_and(|d| started.elapsed() >= d) {
                 finish = FinishReason::DeadlineExceeded;
                 Metrics::inc(&self.metrics.deadline_exceeded, 1);
+                crate::obs::instant(crate::obs::Cat::Decode,
+                                    "deadline_expired_active",
+                                    crate::obs::args1(
+                                        "tokens", tokens.len() as u64));
+                crate::obs::dump_now("deadline");
                 break;
             }
             let t0 = Instant::now();
-            sess.step_into(next, &mut logits);
+            {
+                let _sp = crate::obs::span(crate::obs::Cat::Decode,
+                                           "decode_step")
+                    .arg("batch", 1);
+                sess.step_into(next, &mut logits);
+            }
             self.metrics.record_tpot(t0.elapsed().as_nanos() as u64);
         }
         Metrics::inc(&self.metrics.tokens_generated, tokens.len() as u64);

@@ -390,6 +390,11 @@ impl MemoryGovernor {
         if next != cur {
             self.apply_rungs(cur, next, model);
             self.rung.store(next, Relaxed);
+            crate::obs::instant(
+                crate::obs::Cat::Mem, "pressure_rung",
+                crate::obs::args3("from", cur, "to", next,
+                                  "pressure_u",
+                                  crate::obs::micro(pressure)));
         }
         Metrics::set_gauge(&self.metrics.mem_pressure_rung, next);
         next

@@ -14,6 +14,77 @@ use std::sync::Mutex;
 /// Retained latency samples per series.
 pub const RING_CAP: usize = 4096;
 
+/// Cumulative-histogram bucket bounds (ms) for TTFT / TPOT. Chosen to
+/// straddle interactive SLOs: sub-ms decode steps land in the first
+/// buckets, multi-second stragglers in the last, `+Inf` is implicit.
+pub const HIST_BOUNDS_MS: [f64; 12] =
+    [1.0, 2.5, 5.0, 10.0, 25.0, 50.0, 100.0, 250.0, 500.0, 1000.0,
+     2500.0, 5000.0];
+
+/// Lock-free cumulative histogram: per-bucket atomic counts (rendered
+/// cumulatively per the exposition format), a running sum, and a
+/// lifetime count. Unlike [`LatencyRing`]'s sliding window, these
+/// never reset — which is what makes `_bucket` series aggregable
+/// across instances and scrape intervals.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BOUNDS_MS.len()],
+    sum_ns: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            sum_ns: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn record_ns(&self, ns: u64) {
+        let ms = ns as f64 / 1e6;
+        if let Some(i) = HIST_BOUNDS_MS.iter().position(|&b| ms <= b) {
+            self.buckets[i].fetch_add(1, Ordering::Relaxed);
+        }
+        // over-the-top samples only appear in the implicit +Inf bucket
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum_ms(&self) -> f64 {
+        self.sum_ns.load(Ordering::Relaxed) as f64 / 1e6
+    }
+
+    /// Cumulative count at each bound (same order as
+    /// [`HIST_BOUNDS_MS`]); the `+Inf` bucket is [`Histogram::count`].
+    pub fn cumulative(&self) -> [u64; HIST_BOUNDS_MS.len()] {
+        let mut acc = 0u64;
+        std::array::from_fn(|i| {
+            acc += self.buckets[i].load(Ordering::Relaxed);
+            acc
+        })
+    }
+}
+
+/// Escape HELP text per the Prometheus text exposition format:
+/// backslash and newline are the only characters with escapes there.
+fn escape_help(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('\n', "\\n")
+}
+
+/// Escape a label value per the text format: backslash, double-quote,
+/// and newline.
+fn escape_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
 /// Fixed-capacity overwrite-oldest sample buffer.
 #[derive(Debug)]
 pub struct LatencyRing {
@@ -102,6 +173,10 @@ pub struct Metrics {
     pub ttft_ns: Mutex<LatencyRing>,
     /// per-token decode latencies (ns), last `RING_CAP` retained
     pub tpot_ns: Mutex<LatencyRing>,
+    /// lifetime TTFT histogram (`mc_ttft_ms_bucket`)
+    pub ttft_hist: Histogram,
+    /// lifetime per-token-latency histogram (`mc_tpot_ms_bucket`)
+    pub tpot_hist: Histogram,
     // --- expert residency (offload::ExpertCache, DESIGN.md §5) ---
     /// demand accesses served from the cache
     pub expert_cache_hits: AtomicU64,
@@ -195,10 +270,12 @@ impl Metrics {
 
     pub fn record_ttft(&self, ns: u64) {
         self.ttft_ns.lock().unwrap().push(ns);
+        self.ttft_hist.record_ns(ns);
     }
 
     pub fn record_tpot(&self, ns: u64) {
         self.tpot_ns.lock().unwrap().push(ns);
+        self.tpot_hist.record_ns(ns);
     }
 
     pub fn record_miss_stall(&self, ns: u64) {
@@ -352,12 +429,17 @@ impl Metrics {
 
     /// Prometheus text exposition (content type
     /// `text/plain; version=0.0.4`): every counter/gauge with `# HELP`
-    /// / `# TYPE` metadata, plus window-quantile summaries for the
-    /// latency rings. `GET /metrics` serves exactly this string, and
-    /// in-process callers (CLI, benches) can render the same snapshot.
+    /// / `# TYPE` metadata, window-quantile summaries
+    /// (`mc_*_ms_window`) for the latency rings, and lifetime
+    /// cumulative histograms (`mc_ttft_ms` / `mc_tpot_ms`) for cross-
+    /// instance aggregation. HELP text and label values are escaped
+    /// per the text-format spec. `GET /metrics` serves exactly this
+    /// string, and in-process callers (CLI, benches) can render the
+    /// same snapshot.
     pub fn render_prometheus(&self) -> String {
         let mut out = String::with_capacity(4096);
         let mut counter = |name: &str, help: &str, v: u64| {
+            let help = escape_help(help);
             let _ = write!(out,
                 "# HELP {name} {help}\n# TYPE {name} counter\n{name} {v}\n");
         };
@@ -451,6 +533,7 @@ impl Metrics {
                 self.mem_oom_injected.load(c));
 
         let mut gauge = |name: &str, help: &str, v: f64| {
+            let help = escape_help(help);
             let _ = write!(out,
                 "# HELP {name} {help}\n# TYPE {name} gauge\n{name} {v}\n");
         };
@@ -484,6 +567,7 @@ impl Metrics {
               self.mem_pressure_rung.load(c) as f64);
 
         let mut summary = |name: &str, help: &str, ring: &LatencyRing| {
+            let help = escape_help(help);
             let _ = write!(out,
                 "# HELP {name} {help}\n# TYPE {name} summary\n\
                  {name}{{quantile=\"0.5\"}} {:.3}\n\
@@ -493,18 +577,48 @@ impl Metrics {
                 ring.percentile(99.0) / 1e6,
                 ring.total());
         };
-        summary("mc_ttft_ms", "time to first token (window quantiles, ms)",
+        summary("mc_ttft_ms_window",
+                "time to first token (window quantiles, ms)",
                 &self.ttft_ns.lock().unwrap());
-        summary("mc_tpot_ms", "per-token decode latency (window, ms)",
+        summary("mc_tpot_ms_window",
+                "per-token decode latency (window, ms)",
                 &self.tpot_ns.lock().unwrap());
         summary("mc_miss_stall_ms", "expert demand-miss stalls (window, ms)",
                 &self.miss_stall_ns.lock().unwrap());
+
+        // Lifetime cumulative histograms: unlike the *_window
+        // summaries above these aggregate across instances and
+        // scrape intervals (histogram_quantile over rate of buckets).
+        let mut histogram = |name: &str, help: &str, h: &Histogram| {
+            let help = escape_help(help);
+            let _ = write!(out,
+                "# HELP {name} {help}\n# TYPE {name} histogram\n");
+            for (le, cum) in HIST_BOUNDS_MS.iter().zip(h.cumulative()) {
+                let _ = write!(out,
+                    "{name}_bucket{{le=\"{le}\"}} {cum}\n");
+            }
+            let _ = write!(out,
+                "{name}_bucket{{le=\"+Inf\"}} {}\n\
+                 {name}_sum {:.3}\n{name}_count {}\n",
+                h.count(), h.sum_ms(), h.count());
+        };
+        histogram("mc_ttft_ms", "time to first token (lifetime, ms)",
+                  &self.ttft_hist);
+        histogram("mc_tpot_ms", "per-token decode latency (lifetime, ms)",
+                  &self.tpot_hist);
 
         let _ = write!(out,
             "# HELP mc_kernel_backend selected SIMD kernel backend\n\
              # TYPE mc_kernel_backend gauge\n\
              mc_kernel_backend{{isa=\"{}\"}} 1\n",
-            self.kernel_backend_name());
+            escape_label(&self.kernel_backend_name()));
+        let _ = write!(out,
+            "# HELP mc_build_info build metadata as labels \
+             (value is always 1)\n\
+             # TYPE mc_build_info gauge\n\
+             mc_build_info{{version=\"{}\",kernel_isa=\"{}\"}} 1\n",
+            escape_label(env!("CARGO_PKG_VERSION")),
+            escape_label(&self.kernel_backend_name()));
         out
     }
 }
@@ -615,9 +729,18 @@ mod tests {
         assert!(text.contains("# TYPE mc_streams_inflight gauge"));
         assert!(text.contains("mc_streams_inflight 4"));
         assert!(text.contains("mc_last_drain_ms 7"));
-        assert!(text.contains("# TYPE mc_ttft_ms summary"));
-        assert!(text.contains("mc_ttft_ms{quantile=\"0.5\"} 3.000"));
+        assert!(text.contains("# TYPE mc_ttft_ms_window summary"));
+        assert!(text.contains("mc_ttft_ms_window{quantile=\"0.5\"} 3.000"));
+        assert!(text.contains("mc_ttft_ms_window_count 2"));
+        // lifetime histogram rides alongside the window summary
+        assert!(text.contains("# TYPE mc_ttft_ms histogram"));
+        assert!(text.contains("mc_ttft_ms_bucket{le=\"2.5\"} 1"), "{text}");
+        assert!(text.contains("mc_ttft_ms_bucket{le=\"+Inf\"} 2"));
+        assert!(text.contains("mc_ttft_ms_sum 6.000"));
         assert!(text.contains("mc_ttft_ms_count 2"));
+        assert!(text.contains("# TYPE mc_tpot_ms histogram"));
+        assert!(text.contains("mc_build_info{version=\""), "{text}");
+        assert!(text.contains("kernel_isa=\"scalar\"} 1"), "{text}");
         assert!(text.contains("# TYPE mc_expert_load_retries counter"));
         assert!(text.contains("mc_expert_load_retries 6"));
         assert!(text.contains("mc_expert_load_failures 2"));
@@ -665,5 +788,134 @@ mod tests {
         let tpot = m.tpot_ns.lock().unwrap();
         assert_eq!(tpot.len(), RING_CAP);
         assert_eq!(tpot.total(), RING_CAP as u64 + 100);
+    }
+
+    #[test]
+    fn histogram_buckets_cumulate_and_bound_overflow() {
+        let h = Histogram::default();
+        h.record_ns(500_000); // 0.5ms   -> le="1"
+        h.record_ns(2_000_000); // 2ms   -> le="2.5"
+        h.record_ns(2_500_000); // 2.5ms -> le="2.5" (boundary inclusive)
+        h.record_ns(9_000_000_000); // 9s -> +Inf only
+        let cum = h.cumulative();
+        assert_eq!(cum[0], 1);
+        assert_eq!(cum[1], 3);
+        assert_eq!(cum[HIST_BOUNDS_MS.len() - 1], 3, "+Inf excluded");
+        assert_eq!(h.count(), 4);
+        assert!((h.sum_ms() - 9005.0).abs() < 1e-6);
+        // cumulative counts never decrease across bounds
+        assert!(cum.windows(2).all(|w| w[0] <= w[1]));
+    }
+
+    #[test]
+    fn help_and_label_escaping() {
+        assert_eq!(escape_help("a\\b\nc"), "a\\\\b\\nc");
+        assert_eq!(escape_label("v\"q\\x\ny"), "v\\\"q\\\\x\\ny");
+        let m = Metrics::new();
+        m.set_kernel_backend("we\"ird\\isa");
+        let text = m.render_prometheus();
+        assert!(text.contains("mc_kernel_backend{isa=\"we\\\"ird\\\\isa\"} 1"),
+                "{text}");
+        assert!(text.contains("kernel_isa=\"we\\\"ird\\\\isa\"} 1"), "{text}");
+    }
+
+    /// Promlint-style exposition validation: the whole rendered block
+    /// must satisfy the text-format grammar — legal metric names,
+    /// HELP/TYPE declared once per family and before its samples,
+    /// every sample attributable to a declared family (modulo the
+    /// summary/histogram `_bucket`/`_sum`/`_count` suffixes), and
+    /// histogram buckets cumulative with a closing `+Inf`.
+    #[test]
+    fn prometheus_exposition_passes_promlint_rules() {
+        let m = Metrics::new();
+        m.record_ttft(3_000_000);
+        m.record_tpot(700_000);
+        m.record_miss_stall(50_000);
+        m.set_kernel_backend("scalar");
+        Metrics::inc(&m.requests_admitted, 1);
+        let text = m.render_prometheus();
+
+        let name_ok = |n: &str| {
+            !n.is_empty()
+                && n.chars().next().is_some_and(|c| {
+                    c.is_ascii_alphabetic() || c == '_' || c == ':'
+                })
+                && n.chars().all(|c| {
+                    c.is_ascii_alphanumeric() || c == '_' || c == ':'
+                })
+        };
+
+        let mut families: Vec<(String, String)> = Vec::new(); // (name, type)
+        let mut helped: Vec<String> = Vec::new();
+        let mut last_bucket: Option<(String, u64)> = None;
+        for line in text.lines() {
+            assert!(!line.trim().is_empty(), "no blank lines in exposition");
+            if let Some(rest) = line.strip_prefix("# HELP ") {
+                let name = rest.split(' ').next().unwrap().to_string();
+                assert!(name_ok(&name), "bad family name {name:?}");
+                assert!(!helped.contains(&name), "duplicate HELP {name}");
+                helped.push(name);
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix("# TYPE ") {
+                let mut it = rest.split(' ');
+                let name = it.next().unwrap().to_string();
+                let ty = it.next().unwrap().to_string();
+                assert!(["counter", "gauge", "summary", "histogram"]
+                            .contains(&ty.as_str()),
+                        "unknown type {ty}");
+                assert_eq!(helped.last(), Some(&name),
+                           "TYPE must follow its own HELP: {name}");
+                assert!(!families.iter().any(|(n, _)| *n == name),
+                        "duplicate TYPE {name}");
+                families.push((name, ty));
+                continue;
+            }
+            assert!(!line.starts_with('#'), "unknown comment: {line}");
+            // sample line: name{labels} value
+            let name_end = line.find(['{', ' ']).expect("sample has value");
+            let sample = &line[..name_end];
+            assert!(name_ok(sample), "bad sample name {sample:?}");
+            let (fam, ty) = families
+                .iter()
+                .rev()
+                .find(|(n, ty)| {
+                    sample == n
+                        || (["summary", "histogram"].contains(&ty.as_str())
+                            && (sample == format!("{n}_sum")
+                                || sample == format!("{n}_count")))
+                        || (ty == "histogram"
+                            && sample == format!("{n}_bucket"))
+                })
+                .unwrap_or_else(|| panic!("orphan sample {sample}"));
+            let value: f64 = line
+                .rsplit(' ')
+                .next()
+                .unwrap()
+                .parse()
+                .unwrap_or_else(|_| panic!("unparseable value: {line}"));
+            if ty == "histogram" && sample == format!("{fam}_bucket") {
+                // cumulative within one family, closed by +Inf
+                let cum = value as u64;
+                if let Some((prev_fam, prev)) = &last_bucket {
+                    if prev_fam == fam {
+                        assert!(*prev <= cum,
+                                "buckets must cumulate in {fam}");
+                    }
+                }
+                last_bucket = Some((fam.clone(), cum));
+                if line.contains("le=\"+Inf\"") {
+                    last_bucket = None;
+                }
+            }
+        }
+        assert_eq!(helped.len(), families.len(), "every HELP has a TYPE");
+        assert!(last_bucket.is_none(), "every histogram ends with +Inf");
+        for (n, ty) in &families {
+            assert!(n.starts_with("mc_"), "family {n} missing mc_ prefix");
+            if ty == "histogram" {
+                assert!(text.contains(&format!("{n}_bucket{{le=\"+Inf\"}}")));
+            }
+        }
     }
 }

@@ -95,6 +95,10 @@ pub struct Server {
     /// to `batcher.pending()` every worker iteration. Front ends use
     /// it as a queue-pressure signal without waiting a step.
     pending_hint: Arc<AtomicU64>,
+    /// the model the worker's batcher decodes with, retained so serve
+    /// introspection (`/debug/experts`) can join live routing heat
+    /// with the resolver's residency/quarantine state
+    model: Arc<MoeModel>,
 }
 
 impl Server {
@@ -138,6 +142,7 @@ impl Server {
         );
         let gov2 = governor.clone();
         let (tx, rx): (Sender<Msg>, Receiver<Msg>) = channel();
+        let retained_model = model.clone();
         let worker = std::thread::spawn(move || {
             let mut batcher = Batcher::new(model, odp, cfg.max_batch);
             batcher.set_default_deadline(default_deadline);
@@ -250,6 +255,7 @@ impl Server {
             metrics,
             governor,
             pending_hint,
+            model: retained_model,
         }
     }
 
@@ -258,6 +264,12 @@ impl Server {
     /// expose its pressure/rung gauges.
     pub fn governor(&self) -> &Arc<MemoryGovernor> {
         &self.governor
+    }
+
+    /// The served model (read-only; the worker thread owns decode).
+    /// Serve-tier introspection reads its resolver and config.
+    pub fn model(&self) -> &Arc<MoeModel> {
+        &self.model
     }
 
     /// Submit a request; the handle streams `Token` events as the

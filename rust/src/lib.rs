@@ -12,6 +12,7 @@ pub mod data;
 pub mod eval;
 pub mod kernels;
 pub mod moe;
+pub mod obs;
 pub mod odp;
 pub mod offload;
 pub mod pmq;

@@ -41,6 +41,13 @@
 //! ISA the CPU supports; the `MC_KERNEL` env var does the same
 //! (DESIGN.md §4). Errors if the requested backend cannot run on this
 //! CPU.
+//!
+//! `--trace` (any subcommand) arms the flight recorder (DESIGN.md §9):
+//! per-request span timelines land in an in-memory ring, exported as
+//! Chrome trace-event JSON via `GET /debug/trace` and auto-dumped on
+//! panics, blown deadlines, and drain. `--trace-out <dir>` picks where
+//! dumps are written (default: the system temp dir). The `MC_TRACE` /
+//! `MC_TRACE_OUT` env vars do the same without flags.
 
 use std::path::Path;
 use std::sync::Arc;
@@ -354,6 +361,8 @@ fn cmd_serve_http(model: mc_moe::moe::MoeModel, args: &Args) -> Result<()> {
         cfg.max_streams_per_tenant, cfg.shed_queue_depth, budget_mb);
     println!("  POST /v1/generate   GET /healthz   GET /metrics   \
               POST /admin/drain");
+    println!("  GET /debug/trace    GET /debug/experts   (flight recorder; \
+              arm with --trace or ?enable=1)");
     let metrics = http.metrics();
     let report = http.serve_until_drained();
     println!("{}", metrics.render_text());
@@ -464,6 +473,12 @@ fn main() -> Result<()> {
     if let Some(backend) = args.get("kernel-backend") {
         mc_moe::kernels::force_named(backend)
             .map_err(|e| anyhow::anyhow!("--kernel-backend: {e}"))?;
+    }
+    if let Some(out) = args.get("trace-out") {
+        mc_moe::obs::set_dump_dir(Some(std::path::PathBuf::from(out)));
+    }
+    if args.flag("trace") {
+        mc_moe::obs::set_enabled(true);
     }
     match args.positional.first().map(|s| s.as_str()) {
         Some("info") => cmd_info(&dir),

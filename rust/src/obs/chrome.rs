@@ -1,0 +1,144 @@
+//! Chrome trace-event JSON rendering (the `chrome://tracing` /
+//! Perfetto "JSON Array Format"): every recorded [`Event`] becomes a
+//! complete (`ph:"X"`) or instant (`ph:"i"`) trace event with
+//! microsecond timestamps, lane ids as `tid`, and the fixed u64 args
+//! as the `args` object. Hand-rolled like `serve/json.rs` — names and
+//! arg keys are `&'static str` identifiers but are escaped anyway so
+//! the output is valid JSON for any future name.
+
+use super::{dropped, Event};
+
+fn escape_into(out: &mut String, s: &str) {
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                out.push_str(&format!("\\u{:04x}", c as u32))
+            }
+            c => out.push(c),
+        }
+    }
+}
+
+fn push_event(out: &mut String, ev: &Event) {
+    out.push_str("{\"name\":\"");
+    escape_into(out, ev.name);
+    out.push_str("\",\"cat\":\"");
+    out.push_str(ev.cat.name());
+    out.push_str("\",\"ph\":\"");
+    // instant events get thread scope so Perfetto draws them as ticks
+    if ev.dur_ns == 0 {
+        out.push_str("i\",\"s\":\"t");
+    } else {
+        out.push('X');
+    }
+    out.push_str("\",\"pid\":1,\"tid\":");
+    out.push_str(&ev.tid.to_string());
+    // trace-event timestamps are microseconds; keep ns precision in
+    // the fraction
+    out.push_str(&format!(",\"ts\":{:.3}", ev.ts_ns as f64 / 1e3));
+    if ev.dur_ns > 0 {
+        out.push_str(&format!(",\"dur\":{:.3}", ev.dur_ns as f64 / 1e3));
+    }
+    let mut first = true;
+    for (k, v) in &ev.args {
+        if k.is_empty() {
+            continue;
+        }
+        out.push_str(if first { ",\"args\":{" } else { "," });
+        first = false;
+        out.push('"');
+        escape_into(out, k);
+        out.push_str("\":");
+        out.push_str(&v.to_string());
+    }
+    if !first {
+        out.push('}');
+    }
+    out.push('}');
+}
+
+/// Render `events` as one self-contained Chrome trace JSON document.
+/// `reason` labels why the trace was captured (`"debug_endpoint"`,
+/// `"panic"`, `"deadline"`, `"drain"`) in `otherData`.
+pub fn render(events: &[Event], reason: &str) -> String {
+    // ~160 bytes per event renders without intermediate reallocs
+    let mut out = String::with_capacity(128 + events.len() * 160);
+    out.push_str("{\"displayTimeUnit\":\"ms\",\"otherData\":{\"reason\":\"");
+    escape_into(&mut out, reason);
+    out.push_str(&format!(
+        "\",\"pid\":{},\"events\":{},\"dropped\":{}}},\"traceEvents\":[",
+        std::process::id(),
+        events.len(),
+        dropped()
+    ));
+    for (i, ev) in events.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        push_event(&mut out, ev);
+    }
+    out.push_str("]}");
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{args2, Cat, NO_ARGS};
+    use crate::util::json::Json;
+
+    fn ev(name: &'static str, ts: u64, dur: u64) -> Event {
+        Event {
+            ts_ns: ts,
+            dur_ns: dur,
+            name,
+            cat: Cat::Decode,
+            tid: 3,
+            args: if dur > 0 { args2("batch", 4, "step", 9) } else { NO_ARGS },
+        }
+    }
+
+    #[test]
+    fn renders_parseable_complete_and_instant_events() {
+        let events = [ev("decode_step", 1_500, 2_000), ev("mem_rung", 4_000, 0)];
+        let body = render(&events, "unit");
+        let json = Json::parse(&body).expect("valid JSON");
+        let arr = json.opt("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        let span = &arr[0];
+        assert_eq!(span.get("ph").unwrap().as_str().unwrap(), "X");
+        assert_eq!(span.get("ts").unwrap().as_f64().unwrap(), 1.5);
+        assert_eq!(span.get("dur").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(span.get("args").unwrap().get("batch").unwrap()
+                       .as_usize().unwrap(), 4);
+        let inst = &arr[1];
+        assert_eq!(inst.get("ph").unwrap().as_str().unwrap(), "i");
+        assert!(inst.opt("dur").is_none());
+        assert!(inst.opt("args").is_none());
+        let other = json.opt("otherData").unwrap();
+        assert_eq!(other.get("reason").unwrap().as_str().unwrap(), "unit");
+        assert_eq!(other.get("events").unwrap().as_usize().unwrap(), 2);
+    }
+
+    #[test]
+    fn empty_trace_is_still_valid() {
+        let body = render(&[], "empty");
+        let json = Json::parse(&body).expect("valid JSON");
+        assert!(json.opt("traceEvents").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn names_are_escaped() {
+        let mut e = ev("a\"b\\c", 0, 10);
+        e.args = NO_ARGS;
+        let body = render(&[e], "esc\nline");
+        let json = Json::parse(&body).expect("valid JSON despite quotes");
+        let arr = json.opt("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(arr[0].get("name").unwrap().as_str().unwrap(), "a\"b\\c");
+    }
+}

@@ -1,0 +1,121 @@
+//! Live per-layer expert heat: the process-global accumulation behind
+//! `GET /debug/experts`. The decode path reports every routed
+//! selection here (gated on [`obs::enabled`], so the disabled cost is
+//! the same relaxed load as every other trace point); the serve tier
+//! renders the table joined with the resolver's residency/quarantine
+//! snapshot.
+//!
+//! This is the same per-expert activation-frequency / routing-weight
+//! signal `RunStats` accumulates per session — kept globally and
+//! continuously so operators watch it on live traffic, and so the
+//! planned `compress-experts` pass (ROADMAP) can be fed from a
+//! serving instance instead of an offline calibration run.
+
+use std::sync::{Mutex, OnceLock};
+
+#[derive(Default)]
+struct HeatMap {
+    /// per [layer][expert] activation counts
+    counts: Vec<Vec<u64>>,
+    /// per [layer][expert] summed routing weights (post-renorm)
+    weights: Vec<Vec<f64>>,
+    /// token-steps observed per layer (denominator for frequencies)
+    tokens: Vec<u64>,
+}
+
+fn heat() -> &'static Mutex<HeatMap> {
+    static H: OnceLock<Mutex<HeatMap>> = OnceLock::new();
+    H.get_or_init(|| Mutex::new(HeatMap::default()))
+}
+
+fn grow(m: &mut HeatMap, layer: usize, expert: usize) {
+    if m.counts.len() <= layer {
+        m.counts.resize_with(layer + 1, Vec::new);
+        m.weights.resize_with(layer + 1, Vec::new);
+        m.tokens.resize(layer + 1, 0);
+    }
+    if m.counts[layer].len() <= expert {
+        m.counts[layer].resize(expert + 1, 0);
+        m.weights[layer].resize(expert + 1, 0.0);
+    }
+}
+
+/// Report one token's routed selections at `layer`. Cheap no-op while
+/// tracing is disabled; enabled cost is one short-held mutex per
+/// token-layer (the table grows to the largest (layer, expert) seen,
+/// so one global works across differently-shaped test servers).
+pub fn record(layer: usize, selections: &[(usize, f32)]) {
+    if !super::enabled() {
+        return;
+    }
+    let mut m = heat().lock().unwrap();
+    grow(&mut m, layer, 0);
+    m.tokens[layer] += 1;
+    for &(e, w) in selections {
+        grow(&mut m, layer, e);
+        m.counts[layer][e] += 1;
+        m.weights[layer][e] += w as f64;
+    }
+}
+
+/// One expert's row in the heat table.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExpertRow {
+    pub activations: u64,
+    pub mean_weight: f64,
+}
+
+/// Copy out the table: `rows[layer][expert]` plus per-layer token
+/// counts.
+pub fn snapshot() -> (Vec<Vec<ExpertRow>>, Vec<u64>) {
+    let m = heat().lock().unwrap();
+    let rows = m
+        .counts
+        .iter()
+        .zip(&m.weights)
+        .map(|(cs, ws)| {
+            cs.iter()
+                .zip(ws)
+                .map(|(&c, &w)| ExpertRow {
+                    activations: c,
+                    mean_weight: if c > 0 { w / c as f64 } else { 0.0 },
+                })
+                .collect()
+        })
+        .collect();
+    (rows, m.tokens.clone())
+}
+
+/// Zero the table (tests; `/debug/experts?clear=1`).
+pub fn clear() {
+    let mut m = heat().lock().unwrap();
+    m.counts.clear();
+    m.weights.clear();
+    m.tokens.clear();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_is_gated_and_accumulates() {
+        let _g = crate::obs::test_guard();
+        crate::obs::set_enabled(false);
+        clear();
+        record(0, &[(1, 0.5)]);
+        assert!(snapshot().0.is_empty(), "disabled records nothing");
+
+        crate::obs::set_enabled(true);
+        record(1, &[(0, 0.75), (2, 0.25)]);
+        record(1, &[(2, 1.0)]);
+        crate::obs::set_enabled(false);
+        let (rows, tokens) = snapshot();
+        assert_eq!(tokens, vec![0, 2]);
+        assert_eq!(rows[1][0].activations, 1);
+        assert_eq!(rows[1][2].activations, 2);
+        assert!((rows[1][2].mean_weight - 0.625).abs() < 1e-9);
+        assert_eq!(rows[1][1].activations, 0);
+        clear();
+    }
+}

@@ -1,0 +1,506 @@
+//! Flight-recorder tracing (DESIGN.md §9): per-request span timelines
+//! with Chrome-trace export and live MoE routing introspection.
+//!
+//! Aggregate counters (`coordinator::metrics`) answer "how is the
+//! fleet doing"; this module answers "where did *this* request's
+//! 400 ms go". Every stage of the request path — admission, queue
+//! wait, batch slot, prefill, per-step decode, expert fetch, sampling,
+//! SSE write — records a span into a sharded ring of the last N
+//! events (the "flight recorder"), and per-layer routing events carry
+//! the paper's live signals: routing entropy, top-k scores, experts
+//! activated, and Eq.-6 ODP prune counts.
+//!
+//! **Cost discipline.** Tracing is off by default and every entry
+//! point is gated on one relaxed atomic load (`enabled()`), the same
+//! pattern as `util::faults` — the disabled path is a load + branch,
+//! proven ≤1% of decode tokens/s by `benches/trace_overhead.rs`.
+//! When enabled, recording is lock-light: events land in one of
+//! [`SHARDS`] fixed-capacity rings keyed by thread id, so decode
+//! workers, the batcher, and connection threads rarely contend on a
+//! shard mutex, and a full ring overwrites the oldest event instead
+//! of allocating (a flight recorder, not a log).
+//!
+//! **Ownership rules.** Event `name`/arg keys are `&'static str` (no
+//! allocation on the hot path); spans are RAII guards recorded at
+//! drop; cross-thread stages (queue wait: enqueued on a connection
+//! thread, admitted on the batcher thread) use [`complete`] with an
+//! explicit start timestamp instead of a guard. The recorder itself
+//! is process-global — there is one timeline per process, matching
+//! the one fault plan and one kernel backend.
+//!
+//! Three windows onto the recorder:
+//! * `GET /debug/trace?last_ms=..` — Chrome trace-event JSON
+//!   ([`chrome::render`]), loads in `chrome://tracing` / Perfetto.
+//! * `GET /debug/experts` — per-layer expert heat table ([`heat`]).
+//! * [`dump_now`] — auto-dump to a file on panic, blown deadline, or
+//!   `/admin/drain`, so post-mortems ship with a timeline.
+
+pub mod chrome;
+pub mod heat;
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering::Relaxed};
+use std::sync::{Mutex, Once, OnceLock};
+use std::time::Instant;
+
+/// Fixed arg capacity per event: named u64s only (floats ride as
+/// fixed-point micro-units), so events stay `Copy` and ring pushes
+/// never allocate.
+pub const MAX_ARGS: usize = 3;
+pub type Args = [(&'static str, u64); MAX_ARGS];
+pub const NO_ARGS: Args = [("", 0); MAX_ARGS];
+
+pub fn args1(k: &'static str, v: u64) -> Args {
+    [(k, v), ("", 0), ("", 0)]
+}
+
+pub fn args2(k1: &'static str, v1: u64, k2: &'static str, v2: u64) -> Args {
+    [(k1, v1), (k2, v2), ("", 0)]
+}
+
+pub fn args3(k1: &'static str, v1: u64, k2: &'static str, v2: u64,
+             k3: &'static str, v3: u64) -> Args {
+    [(k1, v1), (k2, v2), (k3, v3)]
+}
+
+/// Span taxonomy (DESIGN.md §9). One category per subsystem, used as
+/// the Chrome trace `cat` field so timelines filter by layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Cat {
+    /// HTTP front end: parse, admission, SSE writes.
+    Serve,
+    /// Time between submit and a batch slot.
+    Queue,
+    /// Batcher slot residency and the fused step.
+    Batch,
+    /// Prompt prefill.
+    Prefill,
+    /// Per-step decode.
+    Decode,
+    /// Expert residency: demand fetch, prefetch, quarantine.
+    Expert,
+    /// Per-layer MoE routing introspection.
+    Route,
+    /// Token sampling.
+    Sample,
+    /// Memory governor: rung changes, KV down-quantization.
+    Mem,
+    /// Lifecycle: drain, dumps.
+    Drain,
+}
+
+impl Cat {
+    pub fn name(self) -> &'static str {
+        match self {
+            Cat::Serve => "serve",
+            Cat::Queue => "queue",
+            Cat::Batch => "batch",
+            Cat::Prefill => "prefill",
+            Cat::Decode => "decode",
+            Cat::Expert => "expert",
+            Cat::Route => "route",
+            Cat::Sample => "sample",
+            Cat::Mem => "mem",
+            Cat::Drain => "drain",
+        }
+    }
+}
+
+/// One recorded event. `dur_ns == 0` renders as a Chrome instant
+/// event (`ph:"i"`), anything else as a complete span (`ph:"X"`).
+#[derive(Debug, Clone, Copy)]
+pub struct Event {
+    /// Nanoseconds since the process trace epoch.
+    pub ts_ns: u64,
+    pub dur_ns: u64,
+    pub name: &'static str,
+    pub cat: Cat,
+    /// Stable per-thread lane id (not the OS tid).
+    pub tid: u64,
+    pub args: Args,
+}
+
+/// Shard count: threads hash onto shards by lane id, so the decode
+/// pool, batcher, and connection threads rarely share a mutex.
+const SHARDS: usize = 8;
+/// Events retained per shard; the recorder holds the last
+/// `SHARDS * SHARD_CAP` events process-wide.
+pub const SHARD_CAP: usize = 8192;
+
+#[derive(Default)]
+struct Ring {
+    buf: Vec<Event>,
+    next: usize,
+    dropped: u64,
+}
+
+impl Ring {
+    fn push(&mut self, ev: Event) {
+        if self.buf.len() < SHARD_CAP {
+            self.buf.push(ev);
+        } else {
+            self.buf[self.next] = ev;
+            self.dropped += 1;
+        }
+        self.next = (self.next + 1) % SHARD_CAP;
+    }
+}
+
+struct Recorder {
+    shards: Vec<Mutex<Ring>>,
+}
+
+fn recorder() -> &'static Recorder {
+    static R: OnceLock<Recorder> = OnceLock::new();
+    R.get_or_init(|| Recorder {
+        shards: (0..SHARDS).map(|_| Mutex::new(Ring::default())).collect(),
+    })
+}
+
+fn epoch() -> Instant {
+    static E: OnceLock<Instant> = OnceLock::new();
+    *E.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the trace epoch (first touch of the subsystem).
+pub fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: Once = Once::new();
+
+/// The master gate every recording call checks first. Disabled (the
+/// default) this is the whole cost of the subsystem: one relaxed
+/// atomic load and a branch. `MC_TRACE=1` enables at first touch;
+/// `MC_TRACE_OUT=<dir>` sets the auto-dump directory.
+#[inline]
+pub fn enabled() -> bool {
+    ENV_INIT.call_once(|| {
+        let _ = epoch(); // pin the epoch before the first event
+        if let Ok(v) = std::env::var("MC_TRACE") {
+            let v = v.trim();
+            if v == "1" || v.eq_ignore_ascii_case("true")
+                || v.eq_ignore_ascii_case("on")
+            {
+                ENABLED.store(true, Relaxed);
+            }
+        }
+        if let Ok(dir) = std::env::var("MC_TRACE_OUT") {
+            if !dir.is_empty() {
+                *dump_dir().lock().unwrap() = Some(PathBuf::from(dir));
+            }
+        }
+    });
+    ENABLED.load(Relaxed)
+}
+
+/// Override the gate (`--trace`, tests). Runs the env init first so a
+/// later `enabled()` cannot clobber an explicit setting.
+pub fn set_enabled(on: bool) {
+    let _ = enabled();
+    ENABLED.store(on, Relaxed);
+}
+
+// -- per-thread lane ids ------------------------------------------------
+
+static NEXT_TID: AtomicU64 = AtomicU64::new(1);
+
+thread_local! {
+    static TID: std::cell::Cell<u64> = std::cell::Cell::new(0);
+}
+
+fn lane() -> u64 {
+    TID.with(|c| {
+        let v = c.get();
+        if v != 0 {
+            v
+        } else {
+            let v = NEXT_TID.fetch_add(1, Relaxed);
+            c.set(v);
+            v
+        }
+    })
+}
+
+fn record(ev: Event) {
+    let shard = (ev.tid as usize) % SHARDS;
+    recorder().shards[shard].lock().unwrap().push(ev);
+}
+
+/// Record an instant event (zero duration).
+#[inline]
+pub fn instant(cat: Cat, name: &'static str, args: Args) {
+    if !enabled() {
+        return;
+    }
+    record(Event { ts_ns: now_ns(), dur_ns: 0, name, cat, tid: lane(), args });
+}
+
+/// Record a span whose start was captured earlier (possibly on
+/// another thread) as [`now_ns`]. The cross-thread stages — queue
+/// wait, batch-slot residency — use this instead of a guard.
+#[inline]
+pub fn complete(cat: Cat, name: &'static str, start_ns: u64, args: Args) {
+    if !enabled() {
+        return;
+    }
+    let end = now_ns();
+    record(Event {
+        ts_ns: start_ns,
+        dur_ns: end.saturating_sub(start_ns).max(1),
+        name,
+        cat,
+        tid: lane(),
+        args,
+    });
+}
+
+/// RAII span: records a complete event on drop. Disarmed (free) when
+/// tracing is off at construction.
+pub struct Span {
+    start_ns: u64,
+    name: &'static str,
+    cat: Cat,
+    args: Args,
+    armed: bool,
+}
+
+/// Open a span guard covering the rest of the scope.
+#[inline]
+pub fn span(cat: Cat, name: &'static str) -> Span {
+    let armed = enabled();
+    Span {
+        start_ns: if armed { now_ns() } else { 0 },
+        name,
+        cat,
+        args: NO_ARGS,
+        armed,
+    }
+}
+
+impl Span {
+    /// Attach a named arg (first free slot of [`MAX_ARGS`]; extras are
+    /// silently dropped). No-op when disarmed.
+    pub fn arg(mut self, key: &'static str, v: u64) -> Span {
+        self.set_arg(key, v);
+        self
+    }
+
+    /// In-place variant of [`Span::arg`] for values only known
+    /// mid-span.
+    pub fn set_arg(&mut self, key: &'static str, v: u64) {
+        if !self.armed {
+            return;
+        }
+        for slot in &mut self.args {
+            if slot.0.is_empty() {
+                *slot = (key, v);
+                return;
+            }
+        }
+    }
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        if self.armed {
+            complete(self.cat, self.name, self.start_ns, self.args);
+        }
+    }
+}
+
+// -- snapshot / export --------------------------------------------------
+
+/// Copy out the recorder's contents, oldest-first. `last_ns` keeps
+/// only events whose *end* falls inside the trailing window.
+pub fn snapshot(last_ns: Option<u64>) -> Vec<Event> {
+    let cutoff = last_ns.map(|w| now_ns().saturating_sub(w));
+    let mut out = Vec::new();
+    for shard in &recorder().shards {
+        let g = shard.lock().unwrap();
+        for ev in &g.buf {
+            if cutoff.is_none_or(|c| ev.ts_ns + ev.dur_ns >= c) {
+                out.push(*ev);
+            }
+        }
+    }
+    out.sort_by_key(|e| (e.ts_ns, e.tid));
+    out
+}
+
+/// Events overwritten since startup (ring saturation indicator,
+/// reported in the trace header).
+pub fn dropped() -> u64 {
+    recorder().shards.iter().map(|s| s.lock().unwrap().dropped).sum()
+}
+
+/// Empty every shard (tests; `/debug/trace?clear=1`).
+pub fn clear() {
+    for shard in &recorder().shards {
+        let mut g = shard.lock().unwrap();
+        g.buf.clear();
+        g.next = 0;
+    }
+}
+
+// -- auto-dump ----------------------------------------------------------
+
+fn dump_dir() -> &'static Mutex<Option<PathBuf>> {
+    static D: OnceLock<Mutex<Option<PathBuf>>> = OnceLock::new();
+    D.get_or_init(|| Mutex::new(None))
+}
+
+/// Where [`dump_now`] writes (`--trace-out` / `MC_TRACE_OUT`); `None`
+/// falls back to the system temp dir.
+pub fn set_dump_dir(dir: Option<PathBuf>) {
+    let _ = enabled(); // env init first, so an explicit dir wins
+    *dump_dir().lock().unwrap() = dir;
+}
+
+static DUMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Dump the whole flight recorder to
+/// `<dir>/mc-trace-<reason>-<pid>-<seq>.json` as Chrome trace JSON.
+/// The post-mortem hook: called on recovered worker panics, blown
+/// deadlines, and `/admin/drain`. No-op (None) while tracing is
+/// disabled; write failures are swallowed (a failing disk must not
+/// take the serving path down with it).
+pub fn dump_now(reason: &str) -> Option<PathBuf> {
+    if !enabled() {
+        return None;
+    }
+    let dir = dump_dir()
+        .lock()
+        .unwrap()
+        .clone()
+        .unwrap_or_else(std::env::temp_dir);
+    let seq = DUMP_SEQ.fetch_add(1, Relaxed);
+    let path = dir.join(format!("mc-trace-{reason}-{}-{seq}.json",
+                                std::process::id()));
+    let events = snapshot(None);
+    let json = chrome::render(&events, reason);
+    match std::fs::write(&path, json) {
+        Ok(()) => {
+            instant(Cat::Drain, "trace_dumped", NO_ARGS);
+            Some(path)
+        }
+        Err(_) => None,
+    }
+}
+
+/// Fixed-point helper: an `f64` in micro-units (×1e6) for u64 args.
+pub fn micro(v: f64) -> u64 {
+    if v.is_finite() && v > 0.0 {
+        (v * 1e6).round() as u64
+    } else {
+        0
+    }
+}
+
+/// The gate and recorder are process-global, so unit tests that flip
+/// them serialize on one lock (mirrors `tests/fault_tolerance.rs`'s
+/// FAULT_LOCK discipline for the fault plan).
+#[cfg(test)]
+pub(crate) fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static OBS_LOCK: Mutex<()> = Mutex::new(());
+    OBS_LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    use super::test_guard as guard;
+
+    #[test]
+    fn disabled_records_nothing() {
+        let _g = guard();
+        set_enabled(false);
+        clear();
+        instant(Cat::Decode, "x", NO_ARGS);
+        drop(span(Cat::Decode, "y").arg("a", 1));
+        assert!(snapshot(None).is_empty());
+    }
+
+    #[test]
+    fn span_and_instant_round_trip() {
+        let _g = guard();
+        set_enabled(true);
+        clear();
+        {
+            let mut s = span(Cat::Prefill, "prefill").arg("rows", 40);
+            s.set_arg("layer", 2);
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        instant(Cat::Route, "route", args2("layer", 1, "active", 3));
+        let evs = snapshot(None);
+        set_enabled(false);
+        assert_eq!(evs.len(), 2);
+        let sp = evs.iter().find(|e| e.name == "prefill").unwrap();
+        assert!(sp.dur_ns >= 1_000_000, "span measured {}ns", sp.dur_ns);
+        assert_eq!(sp.args[0], ("rows", 40));
+        assert_eq!(sp.args[1], ("layer", 2));
+        let ins = evs.iter().find(|e| e.name == "route").unwrap();
+        assert_eq!(ins.dur_ns, 0);
+        assert_eq!(ins.args[1], ("active", 3));
+        clear();
+    }
+
+    #[test]
+    fn window_filters_old_events() {
+        let _g = guard();
+        set_enabled(true);
+        clear();
+        instant(Cat::Serve, "old", NO_ARGS);
+        std::thread::sleep(std::time::Duration::from_millis(10));
+        instant(Cat::Serve, "new", NO_ARGS);
+        let recent = snapshot(Some(5_000_000)); // trailing 5ms
+        set_enabled(false);
+        assert!(recent.iter().any(|e| e.name == "new"));
+        assert!(!recent.iter().any(|e| e.name == "old"));
+        clear();
+    }
+
+    #[test]
+    fn ring_overwrites_instead_of_growing() {
+        let _g = guard();
+        set_enabled(true);
+        clear();
+        // single thread → single shard: overflow it
+        for _ in 0..SHARD_CAP + 10 {
+            instant(Cat::Decode, "e", NO_ARGS);
+        }
+        let evs = snapshot(None);
+        set_enabled(false);
+        assert_eq!(evs.len(), SHARD_CAP);
+        assert!(dropped() >= 10);
+        clear();
+    }
+
+    #[test]
+    fn dump_writes_chrome_json() {
+        let _g = guard();
+        set_enabled(true);
+        clear();
+        set_dump_dir(Some(std::env::temp_dir()));
+        instant(Cat::Drain, "marker", args1("id", 7));
+        let path = dump_now("test").expect("dump path");
+        let body = std::fs::read_to_string(&path).unwrap();
+        std::fs::remove_file(&path).ok();
+        set_enabled(false);
+        clear();
+        assert!(body.contains("\"traceEvents\""), "{body}");
+        assert!(body.contains("\"marker\""), "{body}");
+        let parsed = crate::util::json::Json::parse(&body).expect("valid JSON");
+        assert!(parsed.opt("traceEvents").is_some());
+    }
+
+    #[test]
+    fn micro_fixed_point() {
+        assert_eq!(micro(1.5), 1_500_000);
+        assert_eq!(micro(0.0), 0);
+        assert_eq!(micro(f64::NAN), 0);
+        assert_eq!(micro(-3.0), 0);
+    }
+}

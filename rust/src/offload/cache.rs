@@ -173,6 +173,29 @@ impl ExpertCache {
         self.inner.lock().unwrap().slots[layer][expert].is_some()
     }
 
+    /// One-shot residency/quarantine table for `/debug/experts`:
+    /// `(resident, quarantined)` flags per `[layer][expert]`, read
+    /// under the inner lock so the two views are mutually consistent.
+    pub fn residency_snapshot(&self) -> (Vec<Vec<bool>>, Vec<Vec<bool>>) {
+        let g = self.inner.lock().unwrap();
+        let now = Instant::now();
+        let resident = g
+            .slots
+            .iter()
+            .map(|row| row.iter().map(|s| s.is_some()).collect())
+            .collect();
+        let quarantined = g
+            .quarantined
+            .iter()
+            .map(|row| {
+                row.iter()
+                    .map(|q| q.is_some_and(|until| now < until))
+                    .collect()
+            })
+            .collect();
+        (resident, quarantined)
+    }
+
     /// Resolve one expert for the current step, pinning it until the
     /// matching [`unpin`]. Infallible variant of [`try_get_pinned`]
     /// for callers that treat an unavailable expert as a bug (tests,
@@ -218,6 +241,12 @@ impl ExpertCache {
         }
         Metrics::inc(&self.metrics.expert_cache_misses, 1);
         let policy = *self.policy.lock().unwrap();
+        // the demand-fetch span IS the decode miss stall: everything
+        // from here to the pinned slot blocks the step that routed here
+        let mut sp = crate::obs::span(crate::obs::Cat::Expert,
+                                      "expert_fetch")
+            .arg("layer", layer as u64)
+            .arg("expert", expert as u64);
         let t0 = Instant::now();
         let mut fetched = None;
         for attempt in 0..=policy.max_retries {
@@ -232,6 +261,7 @@ impl ExpertCache {
             }
         }
         let Some(fetched) = fetched else {
+            sp.set_arg("quarantined", 1);
             Metrics::inc(&self.metrics.expert_load_failures, 1);
             Metrics::inc(&self.metrics.experts_quarantined, 1);
             let mut g = self.inner.lock().unwrap();
@@ -305,6 +335,9 @@ impl ExpertCache {
             return false;
         };
         Metrics::inc(&self.metrics.expert_prefetch_issued, 1);
+        crate::obs::instant(crate::obs::Cat::Expert, "expert_prefetched",
+                            crate::obs::args2("layer", layer as u64,
+                                              "expert", expert as u64));
         debug_assert_eq!(fetched.storage_bytes(), bytes);
         let mut g = self.inner.lock().unwrap();
         if g.slots[layer][expert].is_some() {

@@ -120,6 +120,13 @@ pub trait ExpertResolver: Send + Sync + Debug {
     /// Memory-governor rung-2 hook: halve (or restore) the effective
     /// expert-cache byte budget. Default no-op.
     fn shrink_budget(&self, _on: bool) {}
+
+    /// Live `(resident, quarantined)` flags per `[layer][expert]` for
+    /// serve-tier introspection (`/debug/experts`). `None` when the
+    /// experts are eagerly resident (everything is, trivially).
+    fn residency(&self) -> Option<(Vec<Vec<bool>>, Vec<Vec<bool>>)> {
+        None
+    }
 }
 
 /// Today's behavior: all experts in RAM, resolver is a no-op.
@@ -214,6 +221,10 @@ impl ExpertResolver for CachedResolver {
 
     fn shrink_budget(&self, on: bool) {
         self.cache.set_pressure_shrink(on);
+    }
+
+    fn residency(&self) -> Option<(Vec<Vec<bool>>, Vec<Vec<bool>>)> {
+        Some(self.cache.residency_snapshot())
     }
 }
 

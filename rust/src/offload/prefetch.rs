@@ -181,6 +181,10 @@ impl Prefetcher {
         }
         let (next, predicted) =
             self.predictor.lock().unwrap().observe(layer, selected);
+        crate::obs::instant(crate::obs::Cat::Expert, "prefetch_predicted",
+                            crate::obs::args2(
+                                "layer", next as u64,
+                                "candidates", predicted.len() as u64));
         match (&self.mode, &self.tx) {
             (PrefetchMode::Sync, _) => {
                 for e in predicted {

@@ -16,7 +16,15 @@
 //!   POST /v1/generate   SSE token stream (or JSON with "stream":false)
 //!   GET  /healthz       {"status":"ok"|"draining"}
 //!   GET  /metrics       Prometheus text exposition
-//!   POST /admin/drain   begin graceful drain
+//!   POST /admin/drain   begin graceful drain (dumps the flight
+//!                       recorder when tracing is on)
+//!   GET  /debug/trace   Chrome trace-event JSON from the flight
+//!                       recorder (`?last_ms=N` trailing window,
+//!                       `?enable=1|0` toggles tracing live,
+//!                       `?clear=1` empties the ring after rendering)
+//!   GET  /debug/experts per-layer expert heat table (activations,
+//!                       mean routing weight, residency, quarantine;
+//!                       `?clear=1` zeroes the accumulators)
 
 use std::io::ErrorKind;
 use std::net::TcpStream;
@@ -148,9 +156,44 @@ fn route(stream: &mut TcpStream, req: &Request, shared: &Shared,
         }
         ("POST", "/admin/drain") | ("GET", "/admin/drain") => {
             shared.lifecycle.begin_drain();
+            // post-mortem window: freeze the recorder at the moment
+            // the operator pulled the plug
+            crate::obs::instant(crate::obs::Cat::Drain, "drain_begun",
+                                crate::obs::args1(
+                                    "inflight",
+                                    shared.admission.inflight() as u64));
+            crate::obs::dump_now("drain");
             let body = format!(
                 "{{\"draining\":true,\"inflight\":{}}}",
                 shared.admission.inflight());
+            write_response_opts(stream, 200, "OK", "application/json",
+                                &[], body.as_bytes(), keep)
+                .is_ok()
+                && keep
+        }
+        ("GET", "/debug/trace") => {
+            if let Some(v) = req.query_param("enable") {
+                crate::obs::set_enabled(v != "0");
+            }
+            let last_ns = req
+                .query_param("last_ms")
+                .and_then(|v| v.parse::<u64>().ok())
+                .map(|ms| ms.saturating_mul(1_000_000));
+            let events = crate::obs::snapshot(last_ns);
+            let body = crate::obs::chrome::render(&events, "http");
+            if req.query_param("clear").is_some_and(|v| v == "1") {
+                crate::obs::clear();
+            }
+            write_response_opts(stream, 200, "OK", "application/json",
+                                &[], body.as_bytes(), keep)
+                .is_ok()
+                && keep
+        }
+        ("GET", "/debug/experts") => {
+            let body = experts_body(shared);
+            if req.query_param("clear").is_some_and(|v| v == "1") {
+                crate::obs::heat::clear();
+            }
             write_response_opts(stream, 200, "OK", "application/json",
                                 &[], body.as_bytes(), keep)
                 .is_ok()
@@ -166,6 +209,67 @@ fn route(stream: &mut TcpStream, req: &Request, shared: &Shared,
     }
 }
 
+/// The per-layer expert heat table (`GET /debug/experts`): live
+/// routing counts from `obs::heat` joined with the resolver's
+/// residency/quarantine snapshot and (for resident experts) the PMQ
+/// bit-width. Hand-rolled JSON like the rest of the serve tier.
+fn experts_body(shared: &Shared) -> String {
+    use std::fmt::Write as _;
+    let (heat, tokens) = crate::obs::heat::snapshot();
+    let model = shared.engine.model();
+    let residency = model.resolver.residency();
+    let (nl, ne) = (model.cfg.n_layers, model.cfg.n_experts);
+    let mut out = String::with_capacity(64 * nl * ne);
+    let _ = write!(
+        out,
+        "{{\"tracing\":{},\"n_layers\":{nl},\"n_experts\":{ne},\
+         \"layers\":[",
+        crate::obs::enabled());
+    for l in 0..nl {
+        if l > 0 {
+            out.push(',');
+        }
+        let toks = tokens.get(l).copied().unwrap_or(0);
+        let _ = write!(out,
+                       "{{\"layer\":{l},\"tokens\":{toks},\"experts\":[");
+        for e in 0..ne {
+            if e > 0 {
+                out.push(',');
+            }
+            let row = heat
+                .get(l)
+                .and_then(|r| r.get(e))
+                .copied()
+                .unwrap_or_default();
+            // a fully resident model trivially has every expert in
+            // memory and none quarantined
+            let resident = residency.as_ref().map_or(true, |(res, _)| {
+                res.get(l).and_then(|r| r.get(e)).copied().unwrap_or(false)
+            });
+            let quarantined = residency.as_ref().is_some_and(|(_, q)| {
+                q.get(l).and_then(|r| r.get(e)).copied().unwrap_or(false)
+            });
+            let _ = write!(
+                out,
+                "{{\"expert\":{e},\"activations\":{},\
+                 \"mean_weight\":{:.6},\"resident\":{resident},\
+                 \"quarantined\":{quarantined}",
+                row.activations, row.mean_weight);
+            if let Some(x) =
+                model.layers.get(l).and_then(|layer| layer.experts.get(e))
+            {
+                let bits = x.storage_bytes() as f64 * 8.0
+                    / x.param_count().max(1) as f64;
+                let _ = write!(out, ",\"bits\":{bits:.3}");
+            }
+            out.push('}');
+        }
+        out.push_str("]}");
+    }
+    out.push_str("]}");
+    out
+}
+
 /// Handle `POST /v1/generate`. Returns whether the connection stays
 /// open (only a non-streaming success under client keep-alive; SSE
 /// and every error status close).
@@ -179,6 +283,9 @@ fn generate(stream: &mut TcpStream, req: &Request, shared: &Shared,
             panic!("injected fault: connection worker panic");
         }
     }
+    // one span from the request hitting this route to the engine
+    // accepting it: parse + shed/tenant + memory admission
+    let mut adm = crate::obs::span(crate::obs::Cat::Serve, "admission");
     if shared.lifecycle.draining() {
         let _ = write_response(
             stream, 503, "Service Unavailable", "application/json",
@@ -207,6 +314,7 @@ fn generate(stream: &mut TcpStream, req: &Request, shared: &Shared,
     let permit = match shared.admission.try_admit(tenant, gen_req.priority) {
         Admission::Granted(permit) => permit,
         Admission::Shed { retry_after_s } => {
+            adm.set_arg("shed", 1);
             let _ = write_response(
                 stream, 429, "Too Many Requests", "application/json",
                 &[("Retry-After", retry_after_s.to_string())],
@@ -237,6 +345,7 @@ fn generate(stream: &mut TcpStream, req: &Request, shared: &Shared,
     {
         Ok(grant) => gen_req.grant = Some(Arc::new(grant)),
         Err(needed) => {
+            adm.set_arg("mem_refused", 1);
             let retry = shared.admission.retry_after_hint();
             let _ = write_response(
                 stream, 503, "Service Unavailable", "application/json",
@@ -250,6 +359,8 @@ fn generate(stream: &mut TcpStream, req: &Request, shared: &Shared,
     }
 
     let handle = shared.engine.submit(gen_req);
+    adm.set_arg("req", handle.id);
+    drop(adm);
     let kept_open = if want_stream {
         stream_sse(stream, handle, shared);
         false // the SSE stream is the rest of the connection
@@ -325,8 +436,15 @@ fn stream_sse(stream: &mut TcpStream, mut handle: RequestHandle,
         match handle.try_next_event() {
             Some(StreamEvent::Token(t)) => {
                 let frame = token_body(t, index);
+                let wrote = {
+                    let _sp = crate::obs::span(crate::obs::Cat::Serve,
+                                               "sse_write")
+                        .arg("req", handle.id)
+                        .arg("index", index as u64);
+                    write_sse_event(stream, "token", &frame)
+                };
                 index += 1;
-                if write_sse_event(stream, "token", &frame).is_err() {
+                if wrote.is_err() {
                     abandon(&mut handle, shared);
                     return;
                 }

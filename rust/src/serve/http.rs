@@ -18,6 +18,10 @@ pub struct Request {
     pub method: String,
     /// path with any `?query` suffix stripped
     pub path: String,
+    /// raw query string (after `?`, empty when absent) — the debug
+    /// endpoints (`/debug/trace?last_ms=..`) read it via
+    /// [`Request::query_param`]
+    pub query: String,
     pub headers: Vec<(String, String)>,
     pub body: Vec<u8>,
 }
@@ -29,6 +33,16 @@ impl Request {
             .iter()
             .find(|(k, _)| *k == name)
             .map(|(_, v)| v.as_str())
+    }
+
+    /// Value of `name` in the query string (`k=v` pairs joined by
+    /// `&`; no percent-decoding — debug parameters are plain numbers
+    /// and flags). A bare `?flag` yields `Some("")`.
+    pub fn query_param(&self, name: &str) -> Option<&str> {
+        self.query.split('&').find_map(|pair| {
+            let (k, v) = pair.split_once('=').unwrap_or((pair, ""));
+            (k == name).then_some(v)
+        })
     }
 }
 
@@ -134,7 +148,10 @@ pub fn read_request<R: Read>(
     if !version.starts_with("HTTP/1.") {
         return Err(HttpError::Malformed("unsupported http version"));
     }
-    let path = target.split('?').next().unwrap_or(target).to_string();
+    let (path, query) = match target.split_once('?') {
+        Some((p, q)) => (p.to_string(), q.to_string()),
+        None => (target.to_string(), String::new()),
+    };
     if !path.starts_with('/') {
         return Err(HttpError::Malformed("request target must be a path"));
     }
@@ -180,7 +197,7 @@ pub fn read_request<R: Read>(
         body.extend_from_slice(&chunk[..n]);
     }
 
-    Ok(Request { method, path, headers, body })
+    Ok(Request { method, path, query, headers, body })
 }
 
 fn find_head_end(buf: &[u8]) -> Option<usize> {
@@ -270,6 +287,9 @@ mod tests {
         let req = parse(raw).unwrap();
         assert_eq!(req.method, "POST");
         assert_eq!(req.path, "/v1/generate");
+        assert_eq!(req.query, "x=1");
+        assert_eq!(req.query_param("x"), Some("1"));
+        assert_eq!(req.query_param("y"), None);
         assert_eq!(req.header("x-tenant"), Some("acme"));
         assert_eq!(req.header("X-TENANT"), Some("acme"));
         assert_eq!(req.body, b"abcd");
@@ -280,7 +300,20 @@ mod tests {
         let req = parse(b"GET /healthz HTTP/1.1\r\n\r\n").unwrap();
         assert_eq!(req.method, "GET");
         assert_eq!(req.path, "/healthz");
+        assert!(req.query.is_empty());
         assert!(req.body.is_empty());
+    }
+
+    #[test]
+    fn query_params_parse() {
+        let req =
+            parse(b"GET /debug/trace?last_ms=250&clear=1&flag HTTP/1.1\r\n\r\n")
+                .unwrap();
+        assert_eq!(req.path, "/debug/trace");
+        assert_eq!(req.query_param("last_ms"), Some("250"));
+        assert_eq!(req.query_param("clear"), Some("1"));
+        assert_eq!(req.query_param("flag"), Some(""));
+        assert_eq!(req.query_param("absent"), None);
     }
 
     #[test]

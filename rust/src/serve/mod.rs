@@ -266,6 +266,10 @@ fn worker_loop(rx: Arc<Mutex<Receiver<TcpStream>>>, shared: Arc<Shared>) {
         );
         if outcome.is_err() {
             Metrics::inc(&shared.metrics.panics_recovered, 1);
+            // flight recorder: freeze the last events around the panic
+            crate::obs::instant(crate::obs::Cat::Serve, "panic_recovered",
+                                crate::obs::NO_ARGS);
+            crate::obs::dump_now("panic");
             let _ = http::write_response(
                 &mut stream, 500, "Internal Server Error",
                 "application/json", &[],

@@ -2,7 +2,7 @@
 //!
 //! Each `cargo bench` target sets `harness = false` and drives this:
 //! warmup, timed iterations with outlier-robust reporting, and a table
-//! printer whose rows mirror the paper's tables (DESIGN.md §9).
+//! printer whose rows mirror the paper's tables (DESIGN.md §10).
 
 use std::time::Instant;
 

@@ -167,6 +167,74 @@ fn total_fetch_failure_degrades_then_recovers_bit_exact() {
     std::fs::remove_file(&path).ok();
 }
 
+/// The flight recorder (DESIGN.md §9) must leave a post-mortem on the
+/// two fault paths this suite injects: a recovered worker panic and a
+/// blown deadline each auto-dump a Chrome trace into the configured
+/// dump directory.
+#[test]
+fn flight_recorder_dumps_on_panic_and_blown_deadline() {
+    let _g = fault_guard();
+    let dir = std::env::temp_dir()
+        .join(format!("mc_trace_dumps_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    mc_moe::obs::set_dump_dir(Some(dir.clone()));
+    mc_moe::obs::set_enabled(true);
+
+    let dumps_named = |prefix: &str| -> Vec<std::path::PathBuf> {
+        std::fs::read_dir(&dir)
+            .unwrap()
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .is_some_and(|n| n.starts_with(prefix))
+            })
+            .collect()
+    };
+
+    // slow model so the 1ms deadline below reliably blows mid-decode
+    let http = serve(random_model(&slow_cfg(), 12), small_serve_cfg());
+    let prompt = [1u32, 5, 80, 3];
+
+    // -- injected worker panic -> mc-trace-panic-*.json --------------
+    faults::install(Some(FaultPlan::parse("panic=1.0,seed=2").unwrap()));
+    let resp = client::request(http.addr(), "POST", "/v1/generate", &[],
+                               &gen_body(&prompt, 4, ",\"stream\":false"), T)
+        .expect("panicking worker still answers");
+    assert_eq!(resp.status, 500, "{}", resp.body_str());
+    let panics = dumps_named("mc-trace-panic-");
+    assert_eq!(panics.len(), 1, "one panic, one dump: {panics:?}");
+    let body = std::fs::read_to_string(&panics[0]).unwrap();
+    assert!(body.contains("\"traceEvents\""), "not Chrome JSON: {body}");
+    assert!(body.contains("panic_recovered"),
+            "dump must include the panic marker event");
+
+    // -- blown deadline -> mc-trace-deadline-*.json ------------------
+    faults::install(Some(FaultPlan::default()));
+    let resp = client::request(
+        http.addr(), "POST", "/v1/generate", &[],
+        &gen_body(&prompt, 240, ",\"timeout_ms\":1,\"stream\":false"), T)
+        .expect("deadline request answered");
+    assert_eq!(resp.status, 504, "{}", resp.body_str());
+    let deadlines = dumps_named("mc-trace-deadline-");
+    assert!(!deadlines.is_empty(), "blown deadline must dump a trace");
+    let body = std::fs::read_to_string(&deadlines[0]).unwrap();
+    assert!(body.contains("\"traceEvents\""), "not Chrome JSON: {body}");
+
+    // disabled tracing dumps nothing — the production default
+    mc_moe::obs::set_enabled(false);
+    assert!(mc_moe::obs::dump_now("manual").is_none(),
+            "dump_now must be a no-op while tracing is off");
+    assert!(dumps_named("mc-trace-manual-").is_empty());
+
+    faults::install(None);
+    mc_moe::obs::set_dump_dir(None);
+    mc_moe::obs::clear();
+    let report = http.shutdown();
+    assert!(report.drained);
+    std::fs::remove_dir_all(&dir).ok();
+}
+
 #[test]
 fn timeout_ms_maps_to_504_and_sse_error() {
     // deadlines need no fault plan, but the guard still serializes us

@@ -160,8 +160,11 @@ fn sse_and_json_modes_match_in_process_submit() {
         .starts_with("text/plain; version=0.0.4"));
     let text = metrics.body_str();
     assert!(text.contains("# TYPE mc_requests_completed counter"), "{text}");
-    assert!(text.contains("# TYPE mc_ttft_ms summary"), "{text}");
-    assert!(text.contains("mc_ttft_ms{quantile=\"0.99\"}"), "{text}");
+    assert!(text.contains("# TYPE mc_ttft_ms_window summary"), "{text}");
+    assert!(text.contains("mc_ttft_ms_window{quantile=\"0.99\"}"), "{text}");
+    assert!(text.contains("# TYPE mc_ttft_ms histogram"), "{text}");
+    assert!(text.contains("mc_ttft_ms_bucket{le=\"+Inf\"}"), "{text}");
+    assert!(text.contains("mc_build_info{version=\""), "{text}");
     let missing = client::request(http.addr(), "GET", "/nope", &[], b"", T)
         .unwrap();
     assert_eq!(missing.status, 404);
@@ -534,6 +537,185 @@ fn keep_alive_serves_sequential_requests_on_one_socket() {
                    .load(std::sync::atomic::Ordering::Relaxed), 1);
 
     drop(sock);
+    let report = http.shutdown();
+    assert!(report.drained);
+}
+
+/// The flight recorder's HTTP windows (DESIGN.md §9) against a live
+/// server: arm tracing over the wire, stream one request on an
+/// offloaded model, and the Chrome trace must cover every stage —
+/// admission, queue wait, prefill, per-step decode, sampling, SSE
+/// writes, and at least one demand expert fetch — while
+/// `/debug/experts` reports per-layer routing heat and residency.
+#[test]
+fn debug_trace_and_experts_expose_live_request() {
+    use mc_moe::moe::qz;
+    use mc_moe::offload::{self, PrefetchMode};
+
+    // offloaded at half budget with prefetch off: every first touch
+    // of an expert is a demand fetch the trace must show
+    let cfg = ModelConfig::test_tiny();
+    let m = random_model(&cfg, 51);
+    let path = std::env::temp_dir()
+        .join(format!("serve_trace_{}.mcqz", std::process::id()));
+    qz::save(&path, &m).unwrap();
+    let expert_bytes: usize = m.layers.iter().flat_map(|l| &l.experts)
+        .map(|e| e.storage_bytes()).sum();
+    drop(m);
+    let cached = offload::load_cached(&path, expert_bytes / 2,
+                                      PrefetchMode::Off).unwrap();
+    let http = serve(cached, ServeConfig {
+        port: 0,
+        max_conns: 4,
+        max_streams_per_tenant: 0,
+        shed_queue_depth: 0,
+        max_batch: 2,
+        ..ServeConfig::default()
+    });
+
+    // arm + reset the recorder over the wire
+    let armed = client::request(http.addr(), "GET",
+                                "/debug/trace?enable=1&clear=1", &[], b"", T)
+        .unwrap();
+    assert_eq!(armed.status, 200, "{}", armed.body_str());
+
+    // one full streamed request while armed
+    let mut s = expect_stream(open_stream(&http, &[1, 5, 80, 3], 8, "", &[]));
+    let (tokens, terminal) = drain_stream(&mut s);
+    assert_eq!(terminal, "done");
+    assert_eq!(tokens.len(), 8);
+
+    // the trace window: valid Chrome JSON covering the whole path
+    let trace = client::request(http.addr(), "GET", "/debug/trace", &[],
+                                b"", T).unwrap();
+    assert_eq!(trace.status, 200);
+    assert!(trace.header("content-type").unwrap()
+        .starts_with("application/json"));
+    let json = Json::parse(&trace.body_str()).expect("Chrome trace JSON");
+    let events = json.opt("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    let names: std::collections::HashSet<&str> = events.iter()
+        .map(|e| e.get("name").unwrap().as_str().unwrap())
+        .collect();
+    for required in ["admission", "queue_wait", "prefill", "decode_step",
+                     "token_sampled", "sse_write", "expert_fetch",
+                     "layer_routing", "odp_dispatch", "first_token"] {
+        assert!(names.contains(required),
+                "trace must cover {required}; saw {names:?}");
+    }
+    // spans carry durations, instants don't
+    let prefill = events.iter()
+        .find(|e| e.get("name").unwrap().as_str().unwrap() == "prefill")
+        .unwrap();
+    assert!(prefill.get("dur").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(prefill.get("ph").unwrap().as_str().unwrap(), "X");
+
+    // the expert window: per-layer heat joined with live residency
+    let experts = client::request(http.addr(), "GET", "/debug/experts", &[],
+                                  b"", T).unwrap();
+    assert_eq!(experts.status, 200);
+    let j = Json::parse(&experts.body_str()).expect("experts JSON");
+    assert!(j.get("tracing").unwrap().as_bool().unwrap());
+    assert_eq!(j.get("n_layers").unwrap().as_usize().unwrap(), cfg.n_layers);
+    let layers = j.get("layers").unwrap().as_arr().unwrap();
+    assert_eq!(layers.len(), cfg.n_layers);
+    let mut evicted_somewhere = false;
+    for layer in layers {
+        assert!(layer.get("tokens").unwrap().as_usize().unwrap() > 0,
+                "every layer routed the request's tokens");
+        let rows = layer.get("experts").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), cfg.n_experts);
+        let activations: usize = rows.iter()
+            .map(|r| r.get("activations").unwrap().as_usize().unwrap())
+            .sum();
+        assert!(activations > 0);
+        evicted_somewhere |= rows.iter()
+            .any(|r| !r.get("resident").unwrap().as_bool().unwrap());
+    }
+    // residency comes from the cache, and half the budget means the
+    // model cannot be fully resident
+    assert!(evicted_somewhere, "half-budget cache cannot hold every expert");
+
+    // last_ms=0 excludes everything that already ended
+    let empty = client::request(http.addr(), "GET", "/debug/trace?last_ms=0",
+                                &[], b"", T).unwrap();
+    let j = Json::parse(&empty.body_str()).unwrap();
+    assert!(j.opt("traceEvents").unwrap().as_arr().unwrap().len()
+                < events.len());
+
+    // disarm + clear: both windows drain back to empty
+    let off = client::request(http.addr(), "GET",
+                              "/debug/trace?enable=0&clear=1", &[], b"", T)
+        .unwrap();
+    assert_eq!(off.status, 200);
+    let cleared = client::request(http.addr(), "GET",
+                                  "/debug/experts?clear=1", &[], b"", T)
+        .unwrap();
+    assert!(!Json::parse(&cleared.body_str()).unwrap()
+        .get("tracing").unwrap().as_bool().unwrap());
+    let after = client::request(http.addr(), "GET", "/debug/trace", &[],
+                                b"", T).unwrap();
+    assert!(Json::parse(&after.body_str()).unwrap()
+        .opt("traceEvents").unwrap().as_arr().unwrap().is_empty());
+
+    let report = http.shutdown();
+    assert!(report.drained);
+    std::fs::remove_file(&path).ok();
+}
+
+/// Prometheus scrapes must stay valid and non-blocking while streams
+/// are actively decoding (ISSUE 10 satellite): three scrapers hammer
+/// `/metrics` concurrently with two live SSE streams.
+#[test]
+fn metrics_scrape_stays_valid_under_streaming_load() {
+    let http = serve(random_model(&slow_cfg(), 14), ServeConfig {
+        port: 0,
+        max_conns: 8,
+        max_streams_per_tenant: 0,
+        shed_queue_depth: 0,
+        max_batch: 2,
+        ..ServeConfig::default()
+    });
+    let prompt = [1u32, 5, 80, 3];
+
+    // two long streams take the batch; confirm both are decoding
+    let mut a = expect_stream(open_stream(&http, &prompt, 120, "", &[]));
+    assert_eq!(a.next_event().unwrap().unwrap().name, "token");
+    let mut b = expect_stream(open_stream(&http, &prompt, 120, "", &[]));
+
+    let addr = http.addr();
+    let scrapers: Vec<_> = (0..3)
+        .map(|_| {
+            std::thread::spawn(move || {
+                for _ in 0..20 {
+                    let m = client::request(addr, "GET", "/metrics", &[],
+                                            b"", T).expect("scrape");
+                    assert_eq!(m.status, 200);
+                    let text = m.body_str();
+                    // a mid-flight scrape is still a complete, valid
+                    // exposition: families, summaries, histograms
+                    assert!(text.contains(
+                        "# TYPE mc_requests_completed counter"), "{text}");
+                    assert!(text.contains("mc_ttft_ms_bucket{le=\"+Inf\"}"),
+                            "{text}");
+                    assert!(text.contains("mc_build_info{version=\""),
+                            "{text}");
+                    assert!(text.ends_with('\n'), "exposition must end in \\n");
+                }
+            })
+        })
+        .collect();
+    for s in scrapers {
+        s.join().expect("scraper thread");
+    }
+
+    // the streams were untouched by the scrape storm
+    let (ta, term_a) = drain_stream(&mut a);
+    let (tb, term_b) = drain_stream(&mut b);
+    assert_eq!((term_a.as_str(), term_b.as_str()), ("done", "done"));
+    assert_eq!(ta.len() + 1, 120, "stream A lost tokens under scraping");
+    assert_eq!(tb.len(), 120, "stream B lost tokens under scraping");
+
     let report = http.shutdown();
     assert!(report.drained);
 }
